@@ -1,0 +1,24 @@
+//! Calibration harness: prints filtered/unfiltered geomeans for the 12
+//! main variants so the SimLLM tier parameters (rust/src/agent/tiers.rs)
+//! can be fitted against the paper's Figure 3 (DESIGN.md §5b).
+use ucutlass_repro::agent::ModelTier;
+use ucutlass_repro::experiments::{run_variant, Bench};
+use ucutlass_repro::integrity::IntegrityPipeline;
+use ucutlass_repro::metrics;
+
+fn main() {
+    let bench = Bench::new();
+    let pipeline = IntegrityPipeline::default();
+    for tier in ModelTier::ALL {
+        for spec in ucutlass_repro::experiments::runner::main_variants(tier) {
+            let log = run_variant(&bench, &spec, 12345, None);
+            let sp: Vec<f64> = log.runs.iter().map(|r| pipeline.filtered_speedup(r, 99).unwrap_or(1.0)).collect();
+            let unf: Vec<f64> = log.speedups();
+            let beat = sp.iter().filter(|&&s| s > 1.0).count();
+            let ge2 = sp.iter().filter(|&&s| s >= 2.0).count();
+            println!("{:45} geo={:5.2} med={:5.2} unfilt_geo={:5.2} beat={:2}/59 ge2={:2}",
+                spec.label(), metrics::geomean_speedup(&sp), metrics::median_speedup(&sp),
+                metrics::geomean_speedup(&unf), beat, ge2);
+        }
+    }
+}

@@ -1,0 +1,145 @@
+//! End-to-end driver (DESIGN.md deliverable (b), EXPERIMENTS.md §E2E):
+//! exercises the full three-layer stack on a real workload:
+//!
+//! 1. runs the four main agent variants for one tier over all 59 problems
+//!    (Generate–Compile–Test–Profile loops with real µCUTLASS compilation
+//!    on every DSL attempt),
+//! 2. applies the integrity pipeline and reports Fast-p / geomean,
+//! 3. replays the best scheduler policy,
+//! 4. numerically validates the winning kernel of every artifact-backed
+//!    problem by executing candidate + reference HLO through PJRT.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example full_eval [tier] [seed]
+//! ```
+
+use ucutlass_repro::agent::controller::VariantSpec;
+use ucutlass_repro::agent::{ModelTier, SolutionKind};
+use ucutlass_repro::experiments::runner::{main_variants, run_variant, Bench};
+use ucutlass_repro::integrity::IntegrityPipeline;
+use ucutlass_repro::metrics;
+use ucutlass_repro::perfmodel::CandidateConfig;
+use ucutlass_repro::report::table;
+use ucutlass_repro::runtime::Runtime;
+use ucutlass_repro::scheduler;
+
+fn main() -> anyhow::Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let tier = match args.first().map(String::as_str) {
+        Some("mid") => ModelTier::Mid,
+        Some("max") => ModelTier::Max,
+        _ => ModelTier::Mini,
+    };
+    let seed: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(12345);
+
+    let bench = Bench::new();
+    let pipeline = IntegrityPipeline::default();
+    println!("=== full evaluation, tier {} (seed {seed}) ===\n", tier.name());
+
+    let mut rows = Vec::new();
+    let mut best_log: Option<(f64, ucutlass_repro::agent::RunLog, VariantSpec)> = None;
+    for spec in main_variants(tier) {
+        let log = run_variant(&bench, &spec, seed, None);
+        let speedups: Vec<f64> = log
+            .runs
+            .iter()
+            .map(|r| pipeline.filtered_speedup(r, seed).unwrap_or(1.0))
+            .collect();
+        let geo = metrics::geomean_speedup(&speedups);
+        rows.push(vec![
+            spec.label(),
+            format!("{geo:.2}x"),
+            format!("{:.2}x", metrics::median_speedup(&speedups)),
+            format!("{}", speedups.iter().filter(|&&s| s > 1.0).count()),
+            format!("{}", speedups.iter().filter(|&&s| s >= 2.0).count()),
+            format!("${:.2}", log.dollar_cost()),
+        ]);
+        if best_log.as_ref().map(|(g, _, _)| geo > *g).unwrap_or(true) {
+            best_log = Some((geo, log, spec));
+        }
+    }
+    println!(
+        "{}",
+        table(&["variant", "geomean", "median", ">1x", ">=2x", "cost"], &rows)
+    );
+
+    // scheduler replay on the best variant
+    let (_, log, spec) = best_log.unwrap();
+    let sweep = scheduler::sweep(&log, &pipeline, seed);
+    if let Some(best) = scheduler::best_policy(&sweep, 0.95) {
+        println!(
+            "best scheduler policy for {}: {} -> {:.0}% token savings, {:.0}% retention, {:.2}x efficiency gain\n",
+            spec.label(),
+            best.policy.label(),
+            best.token_savings() * 100.0,
+            best.geomean_retention() * 100.0,
+            best.efficiency_gain()
+        );
+    }
+
+    // PJRT numeric validation of winning kernels on artifact-backed problems
+    match Runtime::open("artifacts") {
+        Err(e) => println!("(skipping PJRT validation: {e})"),
+        Ok(mut rt) => {
+            let mut vrows = Vec::new();
+            let mut fails = 0;
+            for (pidx, run) in log.runs.iter().enumerate() {
+                let Some(artifact) = bench.problems[pidx].artifact else { continue };
+                // config of the best accepted genuine attempt
+                let best_cfg: Option<&CandidateConfig> = run
+                    .attempts
+                    .iter()
+                    .filter(|a| {
+                        matches!(a.kind, SolutionKind::DslKernel | SolutionKind::RawCuda)
+                            && a.outcome.time_ms().is_some()
+                    })
+                    .min_by(|a, b| {
+                        a.outcome.time_ms().partial_cmp(&b.outcome.time_ms()).unwrap()
+                    })
+                    .and_then(|a| a.config.as_ref());
+                let Some(cfg) = best_cfg else { continue };
+                let Some(prob) = rt.manifest.problems.get(artifact).cloned() else { continue };
+                // map the winning config onto the nearest AOT variant
+                let key = ucutlass_repro::dsl::VariantKey {
+                    family: "gemm".into(),
+                    tile: ucutlass_repro::dsl::ir::Tile {
+                        m: cfg.tile.0,
+                        n: cfg.tile.1,
+                        k: cfg.tile.2,
+                    },
+                    dtype: cfg.compute_dtype,
+                    acc_dtype: ucutlass_repro::dsl::DType::Fp32,
+                    epilogue: vec![],
+                    pipeline_stages: 1,
+                };
+                let variant = Runtime::select_variant(&prob, &key).unwrap();
+                let rep = rt.validate_variant(artifact, &variant, seed)?;
+                if !rep.pass {
+                    fails += 1;
+                }
+                vrows.push(vec![
+                    bench.problems[pidx].id.to_string(),
+                    artifact.to_string(),
+                    variant,
+                    format!("{:.2e}", rep.max_abs_err),
+                    if rep.pass { "PASS".into() } else { "FAIL".into() },
+                ]);
+            }
+            println!("=== PJRT numeric validation of winning kernels ===");
+            println!(
+                "{}",
+                table(&["problem", "artifact", "selected variant", "max |err|", "status"], &vrows)
+            );
+            println!(
+                "{} validations, {} failures, {} executables compiled once and cached",
+                vrows.len(),
+                fails,
+                rt.cached()
+            );
+            if fails > 0 {
+                anyhow::bail!("{fails} winning kernels failed numeric validation");
+            }
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Integrity audit (paper §6.3): run a gaming-prone variant, label every
+//! attempt with the three-detector pipeline, and show the outcome bands,
+//! the LGD category breakdown, and the speedup inflation that skipping
+//! the pipeline would cause.
+//!
+//! ```bash
+//! cargo run --release --example integrity_audit [seed]
+//! ```
+
+use ucutlass_repro::agent::controller::{ControllerKind, VariantSpec};
+use ucutlass_repro::agent::{ModelTier, SolutionKind};
+use ucutlass_repro::experiments::runner::{run_variant, Bench};
+use ucutlass_repro::integrity::{outcome_counts, IntegrityPipeline, ReviewLabel};
+use ucutlass_repro::metrics;
+use ucutlass_repro::report::table;
+
+fn main() {
+    let seed: u64 = std::env::args().nth(1).and_then(|s| s.parse().ok()).unwrap_or(12345);
+    let bench = Bench::new();
+    let pipeline = IntegrityPipeline::default();
+
+    // µCUTLASS + MI on the strongest tier: the paper's most gaming-prone cell
+    let spec = VariantSpec::new(ControllerKind::Mi, true, ModelTier::Max);
+    println!("auditing {} (seed {seed})...\n", spec.label());
+    let log = run_variant(&bench, &spec, seed, None);
+
+    let counts = outcome_counts(&pipeline, &log.runs, seed);
+    let rows: Vec<Vec<String>> = counts.iter().map(|(k, v)| vec![k.to_string(), v.to_string()]).collect();
+    println!("{}", table(&["review band", "attempts"], &rows));
+
+    // which problems were gamed, and what the exploit was
+    let mut grows = Vec::new();
+    for run in &log.runs {
+        let labels = pipeline.review_run(run, seed);
+        for (a, l) in run.attempts.iter().zip(&labels) {
+            if matches!(l, ReviewLabel::OriginalGaming) {
+                if let SolutionKind::Gaming(g) = &a.kind {
+                    grows.push(vec![
+                        bench.problems[run.problem_idx].id.to_string(),
+                        g.name().to_string(),
+                        format!("{:.3} ms", a.outcome.time_ms().unwrap_or(0.0)),
+                        format!("{:.3} ms", run.t_sol_fp16_ms),
+                    ]);
+                }
+            }
+        }
+    }
+    println!("original gaming discoveries:");
+    println!("{}", table(&["problem", "exploit", "claimed time", "FP16 SOL"], &grows));
+
+    // inflation
+    let geo = |allow: &[ReviewLabel]| {
+        let sp: Vec<f64> = log
+            .runs
+            .iter()
+            .map(|r| pipeline.speedup_allowing(r, seed, allow).unwrap_or(1.0))
+            .collect();
+        metrics::geomean_speedup(&sp)
+    };
+    let filtered = geo(&[]);
+    let unfiltered = geo(&ReviewLabel::ALL);
+    println!(
+        "filtered geomean {filtered:.2}x | unfiltered {unfiltered:.2}x | inflation {:.2}x",
+        unfiltered / filtered
+    );
+}

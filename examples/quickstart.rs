@@ -1,0 +1,77 @@
+//! Quickstart: compile a µCUTLASS program, read its SOL report, run one
+//! SOL-guided agent on one problem, and (when `make artifacts` has run)
+//! numerically validate the selected kernel through the PJRT runtime.
+//!
+//! ```bash
+//! cargo run --release --example quickstart
+//! ```
+
+use ucutlass_repro::agent::controller::{run_problem, ControllerKind, VariantSpec};
+use ucutlass_repro::agent::ModelTier;
+use ucutlass_repro::experiments::Bench;
+use ucutlass_repro::integrity::IntegrityPipeline;
+use ucutlass_repro::runtime::Runtime;
+use ucutlass_repro::{dsl, kernelbench, sol};
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. compile a µCUTLASS kernel specification ------------------------
+    let src = "\
+gemm().with_dtype(input=fp16, acc=fp32, output=fp16)
+.with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor).with_arch(sm_90a)
+.with_threadblockshape(m=128, n=128, k=64).with_alignment(A=8, B=8, C=8)
+.with_stages(2).with_scheduler(kernel=tma_cooperative, epilogue=auto)
+>> bias() >> relu()";
+    let compiled = dsl::compile(src)?;
+    println!("=== µCUTLASS compile ===");
+    println!("header: {} ({} bytes)", compiled.header_name, compiled.header.len());
+    println!("variant key: {:?}\n", compiled.variant_key);
+
+    // ... and see a static rejection with its explanatory hint:
+    let bad = src.replace("sm_90a", "sm_90");
+    println!("=== static rejection demo ===\n{}\n", dsl::compile(&bad).unwrap_err());
+
+    // --- 2. SOL analysis for KernelBench problem L1-1 -----------------------
+    let problems = kernelbench::suite();
+    let idx = kernelbench::find(&problems, "L1-1").unwrap();
+    let analysis = sol::analyze(&problems[idx], &sol::H100_SXM);
+    println!("=== SOL (L1-1, 4096^3 FP32 GEMM) ===");
+    println!(
+        "t_SOL = {:.3} ms (TF32), {:.3} ms (FP16 augmented), bottleneck {:?}\n",
+        analysis.t_sol_ms, analysis.t_sol_fp16_ms, analysis.bottleneck
+    );
+
+    // --- 3. one SOL-guided µCUTLASS agent run --------------------------------
+    let bench = Bench::new();
+    let env = bench.env();
+    let spec = VariantSpec::new(ControllerKind::OrchestratedSol, true, ModelTier::Mini);
+    let run = run_problem(&env, &spec, idx, 42);
+    let pipeline = IntegrityPipeline::default();
+    let best = pipeline.filtered_best_ms(&run, 42);
+    println!("=== agent run ({}) on L1-1 ===", spec.label());
+    println!(
+        "t_ref {:.3} ms -> best {:?} ms  speedup {:.2}x  SOL gap {:.2}",
+        run.t_ref_ms,
+        best,
+        pipeline.filtered_speedup(&run, 42).unwrap_or(1.0),
+        analysis.gap(best.unwrap_or(run.t_ref_ms)),
+    );
+
+    // --- 4. numeric validation via PJRT (needs `make artifacts`) -------------
+    match Runtime::open("artifacts") {
+        Ok(mut rt) => {
+            let prob = rt.manifest.problems.get("gemm_square").cloned().unwrap();
+            let variant = Runtime::select_variant(&prob, &compiled.variant_key).unwrap();
+            let report = rt.validate_variant("gemm_square", &variant, 7)?;
+            println!("\n=== PJRT numeric validation ===");
+            println!(
+                "gemm_square/{}: max|err| {:.2e} over {} elems -> {}",
+                report.variant,
+                report.max_abs_err,
+                report.elems,
+                if report.pass { "PASS" } else { "FAIL" }
+            );
+        }
+        Err(_) => println!("\n(artifacts/ not built — run `make artifacts` for the PJRT demo)"),
+    }
+    Ok(())
+}

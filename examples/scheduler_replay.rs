@@ -1,0 +1,71 @@
+//! Scheduler study (paper §6.2): run one variant, sweep all (ε, w)
+//! policies, print the Pareto frontier and the best policy under the 95%
+//! retention constraint.
+//!
+//! ```bash
+//! cargo run --release --example scheduler_replay [mini|mid|max] [seed]
+//! ```
+
+use ucutlass_repro::agent::controller::{ControllerKind, VariantSpec};
+use ucutlass_repro::agent::ModelTier;
+use ucutlass_repro::experiments::runner::{run_variant, Bench};
+use ucutlass_repro::integrity::IntegrityPipeline;
+use ucutlass_repro::report::table;
+use ucutlass_repro::scheduler::{self, Policy};
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    let tier = match args.first().map(String::as_str) {
+        Some("mini") => ModelTier::Mini,
+        Some("mid") => ModelTier::Mid,
+        _ => ModelTier::Max,
+    };
+    let seed: u64 = args.get(1).and_then(|s| s.parse().ok()).unwrap_or(12345);
+
+    let bench = Bench::new();
+    let spec = VariantSpec::new(ControllerKind::OrchestratedSol, true, tier);
+    println!("running {} over 59 problems...", spec.label());
+    let log = run_variant(&bench, &spec, seed, None);
+    let pipeline = IntegrityPipeline::default();
+
+    // independent ε sweep
+    let mut rows = Vec::new();
+    for &e in &scheduler::epsilon_grid() {
+        let r = scheduler::replay(&log, &Policy { epsilon: e, window: 0 }, &pipeline, seed);
+        rows.push(vec![
+            format!("ε={}%", (e * 100.0) as u64),
+            format!("{:.0}%", r.token_savings() * 100.0),
+            format!("{:.0}%", r.geomean_retention() * 100.0),
+            format!("{:.2}x", r.efficiency_gain()),
+        ]);
+    }
+    println!("{}", table(&["policy", "token savings", "geo retention", "gain"], &rows));
+
+    // joint sweep + Pareto frontier
+    let sweep = scheduler::sweep(&log, &pipeline, seed);
+    let pts: Vec<(f64, f64)> = sweep
+        .iter()
+        .map(|r| (r.tokens_used as f64 / r.tokens_fixed as f64, r.geomean))
+        .collect();
+    let front = scheduler::pareto_front(&pts);
+    println!("Pareto frontier ({} of {} policies):", front.len(), sweep.len());
+    for &i in &front {
+        println!(
+            "  {:16}  cost {:.2}  geomean {:.2}x",
+            sweep[i].policy.label(),
+            pts[i].0,
+            pts[i].1
+        );
+    }
+
+    match scheduler::best_policy(&sweep, 0.95) {
+        Some(best) => println!(
+            "\nbest policy (≥95% retention): {} -> {:.0}% savings, {:.0}% retention, {:.2}x efficiency gain",
+            best.policy.label(),
+            best.token_savings() * 100.0,
+            best.geomean_retention() * 100.0,
+            best.efficiency_gain()
+        ),
+        None => println!("\nno policy met the 95% retention constraint"),
+    }
+}

@@ -1,0 +1,99 @@
+"""AOT lowering: JAX problem graphs → HLO *text* artifacts + manifest.
+
+Interchange format is HLO text, NOT serialized HloModuleProto: jax ≥ 0.5
+emits protos with 64-bit instruction ids which the published xla crate's
+xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text parser
+reassigns ids and round-trips cleanly (see /opt/xla-example/gen_hlo.py).
+
+Run via ``make artifacts``. Python never runs on the request path: the Rust
+coordinator loads these files once and executes them via PJRT.
+"""
+from __future__ import annotations
+
+import argparse
+import hashlib
+import json
+import os
+import sys
+from typing import Callable, List
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from .model import PROBLEMS, Problem
+
+MANIFEST_VERSION = 2
+
+
+def to_hlo_text(fn: Callable, specs: List[jax.ShapeDtypeStruct]) -> str:
+    lowered = jax.jit(fn).lower(*specs)
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True)
+    return comp.as_hlo_text()
+
+
+def _dtype_tag(dtype: str) -> str:
+    return {"float32": "f32", "bfloat16": "bf16", "float16": "f16"}.get(dtype, dtype)
+
+
+def emit(out_dir: str, verbose: bool = True) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest = {"version": MANIFEST_VERSION, "problems": {}}
+    n_files = 0
+    for pname, prob in sorted(PROBLEMS.items()):
+        specs = [s.sds() for s in prob.inputs]
+        entry = {
+            "kb_id": prob.kb_id,
+            "inputs": [{"shape": list(s.shape), "dtype": _dtype_tag(s.dtype)}
+                       for s in prob.inputs],
+            "rtol": prob.rtol,
+            "atol": prob.atol,
+            "variants": {},
+        }
+        ref_path = f"{pname}__ref.hlo.txt"
+        text = to_hlo_text(prob.reference, specs)
+        with open(os.path.join(out_dir, ref_path), "w") as f:
+            f.write(text)
+        entry["reference"] = ref_path
+        n_files += 1
+        for vname, vfn in sorted(prob.variants.items()):
+            vpath = f"{pname}__{vname}.hlo.txt"
+            text = to_hlo_text(vfn, specs)
+            with open(os.path.join(out_dir, vpath), "w") as f:
+                f.write(text)
+            digest = hashlib.sha256(text.encode()).hexdigest()[:16]
+            entry["variants"][vname] = {"path": vpath, "sha256_16": digest}
+            n_files += 1
+            if verbose:
+                print(f"  {vpath}  ({len(text)} chars)")
+        manifest["problems"][pname] = entry
+    mpath = os.path.join(out_dir, "manifest.json")
+    with open(mpath, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    if verbose:
+        print(f"wrote {n_files} HLO artifacts + manifest to {out_dir}")
+    return manifest
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts",
+                    help="output dir (or a single .hlo.txt sentinel path)")
+    ap.add_argument("-q", "--quiet", action="store_true")
+    args = ap.parse_args()
+    out = args.out
+    # Makefile passes artifacts/model.hlo.txt as the stamp target; treat its
+    # directory as the artifact dir and write a stamp file at the end.
+    stamp = None
+    if out.endswith(".hlo.txt") or out.endswith(".stamp"):
+        stamp = out
+        out = os.path.dirname(out) or "."
+    emit(out, verbose=not args.quiet)
+    if stamp is not None:
+        with open(stamp, "w") as f:
+            f.write("aot artifacts stamp\n")
+
+
+if __name__ == "__main__":
+    main()

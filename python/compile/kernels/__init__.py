@@ -1,0 +1,15 @@
+"""L1: Pallas kernels (build-time only) + pure-jnp reference oracles."""
+from .attention import attention
+from .epilogues import (EPILOGUE_AUX, apply_epilogue_chain, apply_epilogue_op,
+                        chain_aux_names)
+from .gemm import GemmConfig, batched_gemm, gemm
+from .norm import layernorm, rmsnorm
+from .scan import cumprod, cumsum, exclusive_cumsum, reverse_cumsum
+from .softmax import cross_entropy, softmax
+
+__all__ = [
+    "attention", "apply_epilogue_chain", "apply_epilogue_op", "EPILOGUE_AUX",
+    "chain_aux_names", "GemmConfig", "gemm", "batched_gemm", "layernorm",
+    "rmsnorm", "cumsum", "cumprod", "exclusive_cumsum", "reverse_cumsum",
+    "softmax", "cross_entropy",
+]

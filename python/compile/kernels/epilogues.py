@@ -1,0 +1,97 @@
+"""Shared epilogue math for µCUTLASS-style fused epilogues.
+
+The same formulas are used by the Pallas kernels (applied in-kernel on the
+accumulator tile, L1) and by the pure-jnp reference oracle (applied on the
+full matmul result, ref.py). Keeping one definition guarantees the candidate
+and the oracle disagree only through tiling/accumulation order, never
+through activation formulas.
+
+Epilogue chains mirror the µCUTLASS ``>>`` operator: a list of (name, params)
+pairs applied left-to-right to the accumulator.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+EpilogueOp = Tuple[str, Dict[str, Any]]
+
+
+def _erf_gelu(x):
+    # tanh-approximation GELU (the CUTLASS GELU_taylor EVT node). We avoid
+    # the erf form deliberately: jax >= 0.8 lowers jax.lax.erf to a native
+    # `erf` HLO opcode that the xla_extension 0.5.1 text parser (the Rust
+    # runtime's XLA) does not know. The tanh form lowers to basic ops.
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def apply_epilogue_op(x: jnp.ndarray, name: str, params: Dict[str, Any],
+                      aux: Dict[str, jnp.ndarray] | None = None) -> jnp.ndarray:
+    """Apply one epilogue op. ``aux`` holds broadcast operands (bias, scales)."""
+    aux = aux or {}
+    if name == "relu":
+        return jnp.maximum(x, 0.0)
+    if name == "gelu":
+        return _erf_gelu(x)
+    if name == "silu":
+        return x * jax.nn.sigmoid(x)
+    if name == "sigmoid":
+        return jax.nn.sigmoid(x)
+    if name == "tanh":
+        return jnp.tanh(x)
+    if name == "mish":
+        return x * jnp.tanh(jax.nn.softplus(x))
+    if name == "hardswish":
+        return x * jnp.clip(x + 3.0, 0.0, 6.0) / 6.0
+    if name == "leaky_relu":
+        alpha = params.get("alpha", 0.01)
+        return jnp.where(x >= 0, x, alpha * x)
+    if name == "elu":
+        alpha = params.get("alpha", 1.0)
+        return jnp.where(x >= 0, x, alpha * (jnp.exp(x) - 1.0))
+    if name in ("clip", "clamp"):
+        return jnp.clip(x, params.get("lo", 0.0), params.get("hi", 1.0))
+    if name == "scale":
+        return x * params.get("value", 1.0)
+    if name == "divide":
+        return x / params.get("value", 1.0)
+    if name == "bias":
+        # bias over the last (column) dimension, shape (N,)
+        return x + aux["bias"]
+    if name == "per_row_scale":
+        return x * aux["row_scale"][:, None]
+    if name == "per_col_scale":
+        return x * aux["col_scale"]
+    if name == "add":
+        # residual add, same shape as x
+        return x + aux["residual"]
+    raise ValueError(f"unknown epilogue op: {name}")
+
+
+def apply_epilogue_chain(x: jnp.ndarray, chain: Sequence[EpilogueOp],
+                         aux: Dict[str, jnp.ndarray] | None = None) -> jnp.ndarray:
+    for name, params in chain:
+        x = apply_epilogue_op(x, name, params, aux)
+    return x
+
+
+#: Which aux tensor (if any) each epilogue op consumes, keyed by op name.
+EPILOGUE_AUX = {
+    "bias": "bias",
+    "per_row_scale": "row_scale",
+    "per_col_scale": "col_scale",
+    "add": "residual",
+}
+
+
+def chain_aux_names(chain: Sequence[EpilogueOp]) -> List[str]:
+    """Aux operand names a chain requires, in chain order, deduplicated."""
+    seen: List[str] = []
+    for name, _ in chain:
+        aux = EPILOGUE_AUX.get(name)
+        if aux is not None and aux not in seen:
+            seen.append(aux)
+    return seen

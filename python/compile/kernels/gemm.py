@@ -1,0 +1,126 @@
+"""L1 Pallas kernel: tiled GEMM with fused µCUTLASS-style epilogue.
+
+TPU-adapted expression of the paper's CUTLASS design space (DESIGN.md
+§Hardware-Adaptation): BlockSpec tiles play the role of threadblock tiles,
+the VMEM-resident accumulator scratch plays the role of the SMEM-staged
+accumulator, and the (m, n, k) grid iteration order plays the role of the
+tile scheduler. Epilogue chains are fused onto the accumulator tile before
+the single store to HBM — the analogue of CUTLASS's Epilogue Visitor Tree.
+
+interpret=True throughout: real-TPU lowering emits Mosaic custom-calls the
+CPU PJRT plugin cannot run (see /opt/xla-example/README.md).
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Dict, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .epilogues import EpilogueOp, apply_epilogue_chain, chain_aux_names
+
+
+@dataclass(frozen=True)
+class GemmConfig:
+    """Mirror of the µCUTLASS kernel-configuration IR that reaches L1.
+
+    block_{m,n,k}   — threadblock-tile analogue (must divide M/N/K here).
+    acc_dtype       — accumulator dtype (fp32 accumulation is the default,
+                      as in CUTLASS's ``.with_dtype(acc=...)``).
+    epilogue        — fused ``>>`` chain applied to the accumulator tile.
+    """
+    block_m: int = 64
+    block_n: int = 64
+    block_k: int = 64
+    in_dtype: str = "float32"
+    acc_dtype: str = "float32"
+    out_dtype: str = "float32"
+    epilogue: Tuple[EpilogueOp, ...] = field(default_factory=tuple)
+
+
+def _check_divisible(dim: int, block: int, name: str) -> None:
+    if dim % block != 0:
+        raise ValueError(f"{name}={dim} not divisible by block {block}")
+
+
+def gemm(x: jnp.ndarray, y: jnp.ndarray, cfg: GemmConfig,
+         aux: Dict[str, jnp.ndarray] | None = None) -> jnp.ndarray:
+    """C = epilogue(x @ y) with an (m, n, k)-gridded Pallas kernel."""
+    aux = aux or {}
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    bm, bn, bk = cfg.block_m, cfg.block_n, cfg.block_k
+    _check_divisible(m, bm, "M")
+    _check_divisible(n, bn, "N")
+    _check_divisible(k, bk, "K")
+    grid = (m // bm, n // bn, k // bk)
+    nk = grid[2]
+    acc_dtype = jnp.dtype(cfg.acc_dtype)
+    out_dtype = jnp.dtype(cfg.out_dtype)
+    aux_names = chain_aux_names(cfg.epilogue)
+
+    # BlockSpecs for aux operands: bias/col_scale vary along n; row_scale
+    # along m; residual along (m, n).
+    aux_specs = []
+    aux_vals = []
+    for name in aux_names:
+        val = aux[name]
+        aux_vals.append(val)
+        if name in ("bias", "col_scale"):
+            aux_specs.append(pl.BlockSpec((bn,), lambda i, j, kk: (j,)))
+        elif name == "row_scale":
+            aux_specs.append(pl.BlockSpec((bm,), lambda i, j, kk: (i,)))
+        elif name == "residual":
+            aux_specs.append(pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)))
+        else:  # pragma: no cover - guarded by chain_aux_names
+            raise ValueError(name)
+
+    def kernel(x_ref, y_ref, *rest):
+        *aux_refs, o_ref, acc_ref = rest
+        kk = pl.program_id(2)
+
+        @pl.when(kk == 0)
+        def _zero():
+            acc_ref[...] = jnp.zeros_like(acc_ref)
+
+        xt = x_ref[...].astype(acc_dtype)
+        yt = y_ref[...].astype(acc_dtype)
+        acc_ref[...] += jnp.dot(xt, yt, preferred_element_type=acc_dtype)
+
+        @pl.when(kk == nk - 1)
+        def _store():
+            tile = acc_ref[...]
+            tile_aux = {}
+            for aname, aref in zip(aux_names, aux_refs):
+                aval = aref[...].astype(acc_dtype)
+                tile_aux[aname] = aval
+            tile = apply_epilogue_chain(tile, cfg.epilogue, tile_aux)
+            o_ref[...] = tile.astype(out_dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+            *aux_specs,
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        # fp32 accumulator tile resident in VMEM across the k loop — the
+        # SMEM-staged accumulator analogue of the CUTLASS mainloop.
+        scratch_shapes=[pltpu.VMEM((bm, bn), acc_dtype)],
+        interpret=True,
+    )(x, y, *aux_vals)
+
+
+def batched_gemm(x: jnp.ndarray, y: jnp.ndarray, cfg: GemmConfig,
+                 aux: Dict[str, jnp.ndarray] | None = None) -> jnp.ndarray:
+    """Batched GEMM: vmap of the tiled kernel over the leading batch dim."""
+    fn = functools.partial(gemm, cfg=cfg, aux=aux)
+    return jax.vmap(fn)(x, y)

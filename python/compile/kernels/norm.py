@@ -1,0 +1,61 @@
+"""L1 Pallas kernels: RMSNorm and LayerNorm (KernelBench L1-36 / L1-40).
+
+Row-blocked: each grid step normalizes a block of rows whose feature dim is
+fully VMEM-resident, with the per-feature affine parameters broadcast in.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def rmsnorm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6,
+            block_rows: int = 16) -> jnp.ndarray:
+    m, n = x.shape
+    if m % block_rows != 0:
+        raise ValueError(f"rows={m} not divisible by block_rows={block_rows}")
+
+    def kernel(x_ref, w_ref, o_ref):
+        t = x_ref[...].astype(jnp.float32)
+        ms = jnp.mean(t * t, axis=-1, keepdims=True)
+        o_ref[...] = (t * jax.lax.rsqrt(ms + eps) * w_ref[...]).astype(x_ref.dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, weight)
+
+
+def layernorm(x: jnp.ndarray, weight: jnp.ndarray, bias: jnp.ndarray,
+              eps: float = 1e-5, block_rows: int = 16) -> jnp.ndarray:
+    m, n = x.shape
+    if m % block_rows != 0:
+        raise ValueError(f"rows={m} not divisible by block_rows={block_rows}")
+
+    def kernel(x_ref, w_ref, b_ref, o_ref):
+        t = x_ref[...].astype(jnp.float32)
+        mu = jnp.mean(t, axis=-1, keepdims=True)
+        var = jnp.mean((t - mu) * (t - mu), axis=-1, keepdims=True)
+        norm = (t - mu) * jax.lax.rsqrt(var + eps)
+        o_ref[...] = (norm * w_ref[...] + b_ref[...]).astype(x_ref.dtype)
+
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+            pl.BlockSpec((n,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x, weight, bias)

@@ -1,0 +1,80 @@
+"""Pure-jnp correctness oracles for every L1 Pallas kernel.
+
+These are the ground truth the pytest suite (and the Rust runtime, via the
+`*_ref` HLO artifacts) compares candidates against. No Pallas here — plain
+jnp only, so any agreement is between two independent code paths.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from .epilogues import apply_epilogue_chain
+from .gemm import GemmConfig
+
+
+def gemm_ref(x: jnp.ndarray, y: jnp.ndarray, cfg: GemmConfig,
+             aux: Dict[str, jnp.ndarray] | None = None) -> jnp.ndarray:
+    acc = jnp.dot(x.astype(cfg.acc_dtype), y.astype(cfg.acc_dtype),
+                  preferred_element_type=jnp.dtype(cfg.acc_dtype))
+    aux32 = {k: v.astype(cfg.acc_dtype) for k, v in (aux or {}).items()}
+    return apply_epilogue_chain(acc, cfg.epilogue, aux32).astype(cfg.out_dtype)
+
+
+def batched_gemm_ref(x, y, cfg: GemmConfig, aux=None):
+    return jax.vmap(lambda a, b: gemm_ref(a, b, cfg, aux))(x, y)
+
+
+def softmax_ref(x: jnp.ndarray) -> jnp.ndarray:
+    return jax.nn.softmax(x, axis=-1)
+
+
+def cross_entropy_ref(logits: jnp.ndarray, targets_onehot: jnp.ndarray) -> jnp.ndarray:
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    return -jnp.mean(jnp.sum(logp * targets_onehot, axis=-1))
+
+
+def rmsnorm_ref(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6) -> jnp.ndarray:
+    t = x.astype(jnp.float32)
+    ms = jnp.mean(t * t, axis=-1, keepdims=True)
+    return (t * jax.lax.rsqrt(ms + eps) * weight).astype(x.dtype)
+
+
+def layernorm_ref(x: jnp.ndarray, weight: jnp.ndarray, bias: jnp.ndarray,
+                  eps: float = 1e-5) -> jnp.ndarray:
+    t = x.astype(jnp.float32)
+    mu = jnp.mean(t, axis=-1, keepdims=True)
+    var = jnp.mean((t - mu) ** 2, axis=-1, keepdims=True)
+    return ((t - mu) * jax.lax.rsqrt(var + eps) * weight + bias).astype(x.dtype)
+
+
+def cumsum_ref(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.cumsum(x, axis=-1)
+
+
+def cumprod_ref(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.cumprod(x, axis=-1)
+
+
+def exclusive_cumsum_ref(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.cumsum(x, axis=-1) - x
+
+
+def reverse_cumsum_ref(x: jnp.ndarray) -> jnp.ndarray:
+    return jnp.flip(jnp.cumsum(jnp.flip(x, axis=-1), axis=-1), axis=-1)
+
+
+def attention_ref(q: jnp.ndarray, k: jnp.ndarray, v: jnp.ndarray,
+                  causal: bool = False) -> jnp.ndarray:
+    d = q.shape[-1]
+    logits = jnp.einsum("...qd,...kd->...qk", q, k).astype(jnp.float32)
+    logits = logits / math.sqrt(d)
+    if causal:
+        s = q.shape[-2]
+        mask = jnp.tril(jnp.ones((s, logits.shape[-1]), bool))
+        logits = jnp.where(mask, logits, -jnp.inf)
+    p = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("...qk,...kd->...qd", p, v.astype(jnp.float32)).astype(q.dtype)

@@ -1,0 +1,50 @@
+"""L1 Pallas kernels: prefix scans (KernelBench L1-89/90/91/92 analogues).
+
+Row-blocked cumulative sum/product along the last dim, with exclusive and
+reverse variants — the scan primitives SSM/linear-attention recurrences use.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rowblock_call(kernel, x: jnp.ndarray, block_rows: int):
+    m, n = x.shape
+    if m % block_rows != 0:
+        raise ValueError(f"rows={m} not divisible by block_rows={block_rows}")
+    return pl.pallas_call(
+        kernel,
+        grid=(m // block_rows,),
+        in_specs=[pl.BlockSpec((block_rows, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_rows, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        interpret=True,
+    )(x)
+
+
+def cumsum(x: jnp.ndarray, block_rows: int = 16) -> jnp.ndarray:
+    def kernel(x_ref, o_ref):
+        o_ref[...] = jnp.cumsum(x_ref[...], axis=-1)
+    return _rowblock_call(kernel, x, block_rows)
+
+
+def cumprod(x: jnp.ndarray, block_rows: int = 16) -> jnp.ndarray:
+    def kernel(x_ref, o_ref):
+        o_ref[...] = jnp.cumprod(x_ref[...], axis=-1)
+    return _rowblock_call(kernel, x, block_rows)
+
+
+def exclusive_cumsum(x: jnp.ndarray, block_rows: int = 16) -> jnp.ndarray:
+    def kernel(x_ref, o_ref):
+        c = jnp.cumsum(x_ref[...], axis=-1)
+        o_ref[...] = c - x_ref[...]
+    return _rowblock_call(kernel, x, block_rows)
+
+
+def reverse_cumsum(x: jnp.ndarray, block_rows: int = 16) -> jnp.ndarray:
+    def kernel(x_ref, o_ref):
+        t = jnp.flip(x_ref[...], axis=-1)
+        o_ref[...] = jnp.flip(jnp.cumsum(t, axis=-1), axis=-1)
+    return _rowblock_call(kernel, x, block_rows)

@@ -1,0 +1,276 @@
+"""L2: JAX problem graphs for the AOT variant library.
+
+Each :class:`Problem` describes one compute graph from our KernelBench
+subset (Appendix A.3 of the paper), with
+
+  * ``inputs``      — example input specs (shape, dtype),
+  * ``reference``   — a pure-jnp oracle function (from kernels.ref),
+  * ``variants``    — named candidate implementations backed by the L1
+                      Pallas kernels, keyed by a µCUTLASS-style variant id
+                      (tile shape × dtype × epilogue).
+
+`aot.py` lowers reference + every variant to HLO text; the Rust runtime
+(`rust/src/runtime/`) executes candidate and reference on identical inputs
+and asserts allclose — this is the on-request-path correctness check for
+kernels the agent selects.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import (GemmConfig, attention, batched_gemm, cumsum, gemm,
+                      layernorm, rmsnorm, softmax)
+from .kernels import ref as R
+
+
+@dataclass(frozen=True)
+class InputSpec:
+    shape: Tuple[int, ...]
+    dtype: str = "float32"
+
+    def sds(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, jnp.dtype(self.dtype))
+
+
+@dataclass
+class Problem:
+    name: str
+    kb_id: str                      # KernelBench problem this maps to, e.g. "L2-76"
+    inputs: List[InputSpec]
+    reference: Callable
+    variants: Dict[str, Callable] = field(default_factory=dict)
+    rtol: float = 1e-4
+    atol: float = 1e-4
+
+
+def _gemm_variants(epilogue: Tuple = (), tiles: Sequence[Tuple[int, int, int]] = (
+        (32, 32, 32), (64, 64, 32), (64, 64, 64)), bf16: bool = True,
+        aux_names: Sequence[str] = ()) -> Dict[str, Callable]:
+    """Candidate set for one GEMM-family problem: tile sweep + one bf16-input
+    variant on the largest tile (the reduced-precision lever SOL's FP16
+    augmentation reasons about)."""
+    out: Dict[str, Callable] = {}
+
+    def make(cfg: GemmConfig):
+        def fn(x, y, *aux_vals):
+            aux = dict(zip(aux_names, aux_vals))
+            return (gemm(x, y, cfg, aux=aux),)
+        return fn
+
+    for (bm, bn, bk) in tiles:
+        cfg = GemmConfig(block_m=bm, block_n=bn, block_k=bk, epilogue=tuple(epilogue))
+        out[f"t{bm}x{bn}x{bk}_fp32"] = make(cfg)
+    if bf16:
+        bm, bn, bk = tiles[-1]
+        cfg = GemmConfig(block_m=bm, block_n=bn, block_k=bk,
+                         in_dtype="bfloat16", epilogue=tuple(epilogue))
+        out[f"t{bm}x{bn}x{bk}_bf16"] = make(cfg)
+    return out
+
+
+def _gemm_ref(epilogue: Tuple = (), aux_names: Sequence[str] = ()) -> Callable:
+    cfg = GemmConfig(epilogue=tuple(epilogue))
+
+    def fn(x, y, *aux_vals):
+        aux = dict(zip(aux_names, aux_vals))
+        return (R.gemm_ref(x, y, cfg, aux=aux),)
+    return fn
+
+
+def build_problems() -> Dict[str, Problem]:
+    """The AOT problem registry. Shapes are laptop-scale stand-ins for the
+    KernelBench originals (e.g. 4096³ GEMM → 256³); the SOL/perf analysis in
+    Rust uses the *paper's* shapes — artifacts exist to prove numerics."""
+    P: Dict[str, Problem] = {}
+    f32 = "float32"
+
+    # --- L1-1: square GEMM ------------------------------------------------
+    P["gemm_square"] = Problem(
+        name="gemm_square", kb_id="L1-1",
+        inputs=[InputSpec((256, 256)), InputSpec((256, 256))],
+        reference=_gemm_ref(),
+        variants=_gemm_variants(tiles=((32, 32, 32), (64, 64, 32), (64, 64, 64),
+                                       (128, 128, 32))),
+    )
+
+    # --- L1-9: tall-skinny GEMM ------------------------------------------
+    P["gemm_tall_skinny"] = Problem(
+        name="gemm_tall_skinny", kb_id="L1-9",
+        inputs=[InputSpec((512, 64)), InputSpec((64, 128))],
+        reference=_gemm_ref(),
+        variants=_gemm_variants(tiles=((64, 32, 32), (128, 64, 32), (64, 64, 64))),
+    )
+
+    # --- L2-76: GEMM + bias + ReLU ----------------------------------------
+    epi = (("bias", {}), ("relu", {}))
+    P["gemm_bias_relu"] = Problem(
+        name="gemm_bias_relu", kb_id="L2-76",
+        inputs=[InputSpec((256, 128)), InputSpec((128, 256)), InputSpec((256,))],
+        reference=_gemm_ref(epi, aux_names=("bias",)),
+        variants=_gemm_variants(epi, aux_names=("bias",)),
+    )
+
+    # --- L2-86: GEMM + divide + GELU --------------------------------------
+    epi = (("divide", {"value": 2.0}), ("gelu", {}))
+    P["gemm_divide_gelu"] = Problem(
+        name="gemm_divide_gelu", kb_id="L2-86",
+        inputs=[InputSpec((256, 128)), InputSpec((128, 256))],
+        reference=_gemm_ref(epi),
+        variants=_gemm_variants(epi),
+    )
+
+    # --- L2-59: GEMM + SiLU + scale ---------------------------------------
+    epi = (("silu", {}), ("scale", {"value": 1.5}))
+    P["gemm_silu_scale"] = Problem(
+        name="gemm_silu_scale", kb_id="L2-59",
+        inputs=[InputSpec((256, 128)), InputSpec((128, 256))],
+        reference=_gemm_ref(epi),
+        variants=_gemm_variants(epi),
+    )
+
+    # --- L2-70: GEMM + sigmoid gate + residual add -------------------------
+    def _gate_residual_candidate(cfg: GemmConfig):
+        def fn(x, y, residual):
+            g = gemm(x, y, cfg)
+            return (jax.nn.sigmoid(g) * g + residual,)
+        return fn
+
+    def _gate_residual_ref(x, y, residual):
+        g = R.gemm_ref(x, y, GemmConfig())
+        return (jax.nn.sigmoid(g) * g + residual,)
+
+    P["gemm_sigmoid_residual"] = Problem(
+        name="gemm_sigmoid_residual", kb_id="L2-70",
+        inputs=[InputSpec((256, 128)), InputSpec((128, 256)), InputSpec((256, 256))],
+        reference=_gate_residual_ref,
+        variants={
+            f"t{bm}x{bn}x{bk}_fp32": _gate_residual_candidate(
+                GemmConfig(block_m=bm, block_n=bn, block_k=bk))
+            for (bm, bn, bk) in ((32, 32, 32), (64, 64, 32), (64, 64, 64))
+        },
+    )
+
+    # --- L1-23: softmax -----------------------------------------------------
+    P["softmax"] = Problem(
+        name="softmax", kb_id="L1-23",
+        inputs=[InputSpec((256, 512))],
+        reference=lambda x: (R.softmax_ref(x),),
+        variants={
+            f"rows{br}": (lambda br: (lambda x: (softmax(x, block_rows=br),)))(br)
+            for br in (8, 16, 32)
+        },
+    )
+
+    # --- L1-36: RMSNorm -----------------------------------------------------
+    P["rmsnorm"] = Problem(
+        name="rmsnorm", kb_id="L1-36",
+        inputs=[InputSpec((256, 512)), InputSpec((512,))],
+        reference=lambda x, w: (R.rmsnorm_ref(x, w),),
+        variants={
+            f"rows{br}": (lambda br: (lambda x, w: (rmsnorm(x, w, block_rows=br),)))(br)
+            for br in (8, 16, 32)
+        },
+    )
+
+    # --- L1-40: LayerNorm ---------------------------------------------------
+    P["layernorm"] = Problem(
+        name="layernorm", kb_id="L1-40",
+        inputs=[InputSpec((256, 512)), InputSpec((512,)), InputSpec((512,))],
+        reference=lambda x, w, b: (R.layernorm_ref(x, w, b),),
+        variants={
+            f"rows{br}": (lambda br: (lambda x, w, b: (layernorm(x, w, b, block_rows=br),)))(br)
+            for br in (8, 16, 32)
+        },
+    )
+
+    # --- L1-89: cumsum -------------------------------------------------------
+    P["cumsum"] = Problem(
+        name="cumsum", kb_id="L1-89",
+        inputs=[InputSpec((128, 512))],
+        reference=lambda x: (R.cumsum_ref(x),),
+        variants={
+            f"rows{br}": (lambda br: (lambda x: (cumsum(x, block_rows=br),)))(br)
+            for br in (8, 16)
+        },
+    )
+
+    # --- L1-97: scaled dot-product attention --------------------------------
+    attn_in = [InputSpec((2, 2, 128, 64)) for _ in range(3)]
+    P["attention"] = Problem(
+        name="attention", kb_id="L1-97",
+        inputs=list(attn_in),
+        reference=lambda q, k, v: (R.attention_ref(q, k, v),),
+        variants={
+            f"bq{bq}": (lambda bq: (lambda q, k, v: (attention(q, k, v, block_q=bq),)))(bq)
+            for bq in (16, 32, 64)
+        },
+        rtol=1e-3, atol=1e-3,
+    )
+
+    # --- L3-43: causal attention ---------------------------------------------
+    P["causal_attention"] = Problem(
+        name="causal_attention", kb_id="L3-43",
+        inputs=list(attn_in),
+        reference=lambda q, k, v: (R.attention_ref(q, k, v, causal=True),),
+        variants={
+            f"bq{bq}": (lambda bq: (lambda q, k, v: (attention(q, k, v, causal=True, block_q=bq),)))(bq)
+            for bq in (16, 32, 64)
+        },
+        rtol=1e-3, atol=1e-3,
+    )
+
+    # --- L3-1: MLP block (gemm >> relu, gemm) — the pipeline(...) analogue ---
+    def _mlp_candidate(cfg1: GemmConfig, cfg2: GemmConfig):
+        def fn(x, w1, b1, w2):
+            h = gemm(x, w1, cfg1, aux={"bias": b1})
+            return (gemm(h, w2, cfg2),)
+        return fn
+
+    def _mlp_ref(x, w1, b1, w2):
+        h = R.gemm_ref(x, w1, GemmConfig(epilogue=(("bias", {}), ("relu", {}))),
+                       aux={"bias": b1})
+        return (R.gemm_ref(h, w2, GemmConfig()),)
+
+    mlp_epi = (("bias", {}), ("relu", {}))
+    P["mlp_block"] = Problem(
+        name="mlp_block", kb_id="L3-1",
+        inputs=[InputSpec((128, 256)), InputSpec((256, 512)), InputSpec((512,)),
+                InputSpec((512, 128))],
+        reference=_mlp_ref,
+        variants={
+            f"t{bm}x{bn}x{bk}": _mlp_candidate(
+                GemmConfig(block_m=bm, block_n=bn, block_k=bk, epilogue=mlp_epi),
+                GemmConfig(block_m=bm, block_n=bn, block_k=bk))
+            for (bm, bn, bk) in ((32, 32, 32), (64, 64, 64), (64, 128, 32))
+        },
+        # two chained GEMMs amplify accumulation-order differences; outputs
+        # are O(300) so 1e-3 abs is still ~1e-6 relative
+        rtol=1e-3, atol=2e-3,
+    )
+
+    # --- L1-3: batched matmul -------------------------------------------------
+    def _bmm_candidate(cfg: GemmConfig):
+        def fn(x, y):
+            return (batched_gemm(x, y, cfg),)
+        return fn
+
+    P["batched_gemm"] = Problem(
+        name="batched_gemm", kb_id="L1-3",
+        inputs=[InputSpec((4, 128, 64)), InputSpec((4, 64, 128))],
+        reference=lambda x, y: (R.batched_gemm_ref(x, y, GemmConfig()),),
+        variants={
+            f"t{bm}x{bn}x{bk}_fp32": _bmm_candidate(
+                GemmConfig(block_m=bm, block_n=bn, block_k=bk))
+            for (bm, bn, bk) in ((32, 32, 32), (64, 64, 32), (64, 64, 64))
+        },
+    )
+
+    return P
+
+
+PROBLEMS = build_problems()

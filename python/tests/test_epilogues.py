@@ -1,0 +1,133 @@
+# Unit + hypothesis tests for the shared epilogue math: every op, chain
+# composition order, and agreement with PyTorch-style reference formulas.
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.epilogues import (EPILOGUE_AUX, apply_epilogue_chain,
+                                       apply_epilogue_op, chain_aux_names)
+
+jax.config.update("jax_platform_name", "cpu")
+
+X = jnp.linspace(-5.0, 5.0, 101, dtype=jnp.float32).reshape(1, -1)
+
+
+def test_relu():
+    out = apply_epilogue_op(X, "relu", {})
+    np.testing.assert_allclose(out, np.maximum(np.asarray(X), 0.0))
+
+
+def test_sigmoid_range():
+    out = np.asarray(apply_epilogue_op(X, "sigmoid", {}))
+    assert out.min() > 0.0 and out.max() < 1.0
+    np.testing.assert_allclose(out, 1.0 / (1.0 + np.exp(-np.asarray(X))), rtol=1e-6)
+
+
+def test_gelu_matches_torch_tanh_approx():
+    # torch.nn.functional.gelu(x, approximate="tanh")
+    x = np.asarray(X, np.float64)
+    ref = 0.5 * x * (1.0 + np.tanh(np.sqrt(2.0 / np.pi) * (x + 0.044715 * x ** 3)))
+    np.testing.assert_allclose(apply_epilogue_op(X, "gelu", {}), ref, rtol=1e-5, atol=1e-6)
+
+
+def test_silu():
+    x = np.asarray(X)
+    np.testing.assert_allclose(apply_epilogue_op(X, "silu", {}),
+                               x / (1.0 + np.exp(-x)), rtol=1e-5, atol=1e-6)
+
+
+def test_leaky_relu_alpha():
+    out = np.asarray(apply_epilogue_op(X, "leaky_relu", {"alpha": 0.2}))
+    x = np.asarray(X)
+    np.testing.assert_allclose(out, np.where(x >= 0, x, 0.2 * x), rtol=1e-6)
+
+
+def test_elu():
+    out = np.asarray(apply_epilogue_op(X, "elu", {"alpha": 1.5}))
+    x = np.asarray(X)
+    np.testing.assert_allclose(out, np.where(x >= 0, x, 1.5 * (np.exp(x) - 1)),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_clip_bounds():
+    out = np.asarray(apply_epilogue_op(X, "clip", {"lo": -1.0, "hi": 2.0}))
+    assert out.min() >= -1.0 and out.max() <= 2.0
+
+
+def test_hardswish_matches_definition():
+    x = np.asarray(X)
+    ref = x * np.clip(x + 3.0, 0.0, 6.0) / 6.0
+    np.testing.assert_allclose(apply_epilogue_op(X, "hardswish", {}), ref, rtol=1e-6)
+
+
+def test_mish():
+    x = np.asarray(X, np.float64)
+    ref = x * np.tanh(np.log1p(np.exp(x)))
+    np.testing.assert_allclose(apply_epilogue_op(X, "mish", {}), ref, rtol=1e-4, atol=1e-5)
+
+
+def test_scale_divide_inverse():
+    a = apply_epilogue_op(X, "scale", {"value": 4.0})
+    b = apply_epilogue_op(a, "divide", {"value": 4.0})
+    np.testing.assert_allclose(b, X, rtol=1e-6)
+
+
+def test_bias_broadcast():
+    bias = jnp.arange(X.shape[1], dtype=jnp.float32)
+    out = apply_epilogue_op(X, "bias", {}, aux={"bias": bias})
+    np.testing.assert_allclose(out, np.asarray(X) + np.asarray(bias), rtol=1e-6)
+
+
+def test_per_row_and_col_scale():
+    x = jnp.ones((4, 6), jnp.float32)
+    rs = jnp.asarray([1.0, 2.0, 3.0, 4.0])
+    cs = jnp.arange(1.0, 7.0, dtype=jnp.float32)
+    out_r = np.asarray(apply_epilogue_op(x, "per_row_scale", {}, aux={"row_scale": rs}))
+    out_c = np.asarray(apply_epilogue_op(x, "per_col_scale", {}, aux={"col_scale": cs}))
+    np.testing.assert_allclose(out_r[:, 0], [1, 2, 3, 4])
+    np.testing.assert_allclose(out_c[0], np.arange(1.0, 7.0))
+
+
+def test_residual_add():
+    r = jnp.full_like(X, 2.0)
+    out = apply_epilogue_op(X, "add", {}, aux={"residual": r})
+    np.testing.assert_allclose(out, np.asarray(X) + 2.0, rtol=1e-6)
+
+
+def test_unknown_op_raises():
+    with pytest.raises(ValueError, match="unknown epilogue op"):
+        apply_epilogue_op(X, "not_an_op", {})
+
+
+def test_chain_order_matters():
+    chain_a = (("relu", {}), ("scale", {"value": -1.0}))
+    chain_b = (("scale", {"value": -1.0}), ("relu", {}))
+    a = np.asarray(apply_epilogue_chain(X, chain_a))
+    b = np.asarray(apply_epilogue_chain(X, chain_b))
+    assert not np.allclose(a, b), "left-to-right >> composition is order-sensitive"
+
+
+def test_chain_aux_names_dedup_and_order():
+    chain = (("bias", {}), ("relu", {}), ("add", {}), ("bias", {}))
+    assert chain_aux_names(chain) == ["bias", "residual"]
+    assert EPILOGUE_AUX["per_row_scale"] == "row_scale"
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    ops=st.lists(
+        st.sampled_from(["relu", "gelu", "silu", "sigmoid", "tanh", "hardswish"]),
+        min_size=1, max_size=4),
+    scale=st.floats(0.1, 10.0),
+)
+def test_chain_is_finite_and_composes(ops, scale):
+    chain = tuple((o, {}) for o in ops) + (("scale", {"value": scale}),)
+    out = np.asarray(apply_epilogue_chain(X, chain))
+    assert np.all(np.isfinite(out))
+    # composing manually must agree
+    y = X
+    for name, params in chain:
+        y = apply_epilogue_op(y, name, params)
+    np.testing.assert_allclose(out, y, rtol=1e-6)

@@ -1,0 +1,254 @@
+# pytest: Pallas kernels vs pure-jnp oracle — the CORE correctness signal.
+# Hypothesis sweeps shapes/dtypes/epilogues; fixed-seed cases pin the exact
+# configurations that ship as AOT artifacts.
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile import kernels as K
+from compile.kernels import ref as R
+from compile.kernels.gemm import GemmConfig
+
+jax.config.update("jax_platform_name", "cpu")
+
+RNG = np.random.default_rng(1234)
+
+
+def randn(*shape, dtype=np.float32):
+    return jnp.asarray(RNG.standard_normal(shape).astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# GEMM: tile sweep × epilogue chains
+# ---------------------------------------------------------------------------
+
+TILES = [(32, 32, 32), (64, 64, 32), (64, 32, 64), (128, 64, 32)]
+EPILOGUES = [
+    (),
+    (("relu", {}),),
+    (("gelu", {}),),
+    (("silu", {}),),
+    (("sigmoid", {}),),
+    (("tanh", {}),),
+    (("mish", {}),),
+    (("hardswish", {}),),
+    (("leaky_relu", {"alpha": 0.1}),),
+    (("elu", {"alpha": 1.0}),),
+    (("clamp", {"lo": -1.0, "hi": 1.0}),),
+    (("scale", {"value": 0.5}),),
+    (("divide", {"value": 2.0}),),
+    (("scale", {"value": 2.0}), ("gelu", {})),
+    (("silu", {}), ("scale", {"value": 1.5})),
+]
+
+
+@pytest.mark.parametrize("tile", TILES)
+def test_gemm_tiles(tile):
+    bm, bn, bk = tile
+    m, n, k = bm * 2, bn * 2, bk * 3
+    x, y = randn(m, k), randn(k, n)
+    cfg = GemmConfig(block_m=bm, block_n=bn, block_k=bk)
+    out = K.gemm(x, y, cfg)
+    np.testing.assert_allclose(out, R.gemm_ref(x, y, cfg), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("epilogue", EPILOGUES, ids=lambda e: "+".join(n for n, _ in e) or "none")
+def test_gemm_epilogues(epilogue):
+    x, y = randn(64, 96), randn(96, 64)
+    cfg = GemmConfig(block_m=32, block_n=32, block_k=32, epilogue=tuple(epilogue))
+    out = K.gemm(x, y, cfg)
+    np.testing.assert_allclose(out, R.gemm_ref(x, y, cfg), rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("aux_op,aux_name,aux_shape", [
+    ("bias", "bias", ("n",)),
+    ("per_row_scale", "row_scale", ("m",)),
+    ("per_col_scale", "col_scale", ("n",)),
+    ("add", "residual", ("m", "n")),
+])
+def test_gemm_aux_epilogues(aux_op, aux_name, aux_shape):
+    m, n, k = 64, 96, 64
+    dims = {"m": m, "n": n}
+    x, y = randn(m, k), randn(k, n)
+    aux = {aux_name: randn(*[dims[d] for d in aux_shape])}
+    cfg = GemmConfig(block_m=32, block_n=32, block_k=32,
+                     epilogue=((aux_op, {}),))
+    out = K.gemm(x, y, cfg, aux=aux)
+    np.testing.assert_allclose(out, R.gemm_ref(x, y, cfg, aux=aux),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_gemm_bias_relu_chain():
+    x, y, b = randn(128, 64), randn(64, 128), randn(128)
+    cfg = GemmConfig(block_m=64, block_n=64, block_k=32,
+                     epilogue=(("bias", {}), ("relu", {})))
+    out = K.gemm(x, y, cfg, aux={"bias": b})
+    np.testing.assert_allclose(out, R.gemm_ref(x, y, cfg, aux={"bias": b}),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_gemm_bf16_accumulate_fp32():
+    x, y = randn(64, 64), randn(64, 64)
+    cfg = GemmConfig(block_m=32, block_n=32, block_k=32, in_dtype="bfloat16")
+    out = K.gemm(x, y, cfg)
+    ref = R.gemm_ref(x, y, cfg)
+    np.testing.assert_allclose(out, ref, rtol=1e-2, atol=1e-2)
+
+
+def test_gemm_rejects_nondivisible():
+    x, y = randn(60, 64), randn(64, 64)
+    with pytest.raises(ValueError, match="not divisible"):
+        K.gemm(x, y, GemmConfig(block_m=32, block_n=32, block_k=32))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mi=st.integers(1, 4), ni=st.integers(1, 4), ki=st.integers(1, 4),
+    tile=st.sampled_from([(16, 16, 16), (32, 32, 32), (32, 16, 32)]),
+    epi=st.sampled_from([tuple(e) for e in EPILOGUES[:8]]),
+)
+def test_gemm_property(mi, ni, ki, tile, epi):
+    bm, bn, bk = tile
+    m, n, k = bm * mi, bn * ni, bk * ki
+    rng = np.random.default_rng(m * 131 + n * 17 + k)
+    x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+    y = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+    cfg = GemmConfig(block_m=bm, block_n=bn, block_k=bk, epilogue=epi)
+    np.testing.assert_allclose(K.gemm(x, y, cfg), R.gemm_ref(x, y, cfg),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_batched_gemm():
+    x, y = randn(4, 64, 32), randn(4, 32, 64)
+    cfg = GemmConfig(block_m=32, block_n=32, block_k=32)
+    np.testing.assert_allclose(K.batched_gemm(x, y, cfg),
+                               R.batched_gemm_ref(x, y, cfg),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Softmax / cross-entropy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("shape,br", [((64, 128), 8), ((64, 128), 16),
+                                      ((128, 17), 32), ((32, 512), 8)])
+def test_softmax(shape, br):
+    x = randn(*shape)
+    np.testing.assert_allclose(K.softmax(x, block_rows=br), R.softmax_ref(x),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_softmax_extreme_values():
+    x = jnp.asarray([[1e4, -1e4, 0.0, 1e4]] * 8, jnp.float32)
+    out = K.softmax(x, block_rows=8)
+    np.testing.assert_allclose(out, R.softmax_ref(x), rtol=1e-5, atol=1e-6)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_cross_entropy():
+    logits = randn(64, 32)
+    t = jax.nn.one_hot(jnp.asarray(RNG.integers(0, 32, 64)), 32)
+    np.testing.assert_allclose(K.cross_entropy(logits, t),
+                               R.cross_entropy_ref(logits, t),
+                               rtol=1e-5, atol=1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.sampled_from([8, 16, 32]), cols=st.integers(2, 200))
+def test_softmax_property(rows, cols):
+    rng = np.random.default_rng(rows * 1000 + cols)
+    x = jnp.asarray(rng.standard_normal((rows * 2, cols)).astype(np.float32) * 10)
+    out = K.softmax(x, block_rows=rows)
+    np.testing.assert_allclose(out, R.softmax_ref(x), rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(out).sum(-1), 1.0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("br", [8, 16, 32])
+def test_rmsnorm(br):
+    x, w = randn(64, 256), randn(256)
+    np.testing.assert_allclose(K.rmsnorm(x, w, block_rows=br),
+                               R.rmsnorm_ref(x, w), rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("br", [8, 16, 32])
+def test_layernorm(br):
+    x, w, b = randn(64, 256), randn(256), randn(256)
+    np.testing.assert_allclose(K.layernorm(x, w, b, block_rows=br),
+                               R.layernorm_ref(x, w, b), rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(cols=st.integers(4, 300), scale=st.floats(0.01, 100.0))
+def test_rmsnorm_property(cols, scale):
+    rng = np.random.default_rng(cols)
+    x = jnp.asarray(rng.standard_normal((16, cols)).astype(np.float32) * scale)
+    w = jnp.asarray(rng.standard_normal(cols).astype(np.float32))
+    np.testing.assert_allclose(K.rmsnorm(x, w, block_rows=8),
+                               R.rmsnorm_ref(x, w), rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Scans
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fn,ref", [
+    (K.cumsum, R.cumsum_ref), (K.cumprod, R.cumprod_ref),
+    (K.exclusive_cumsum, R.exclusive_cumsum_ref),
+    (K.reverse_cumsum, R.reverse_cumsum_ref),
+])
+def test_scans(fn, ref):
+    x = randn(32, 64) * 0.1
+    np.testing.assert_allclose(fn(x, block_rows=16), ref(x), rtol=1e-4, atol=1e-5)
+
+
+@settings(max_examples=15, deadline=None)
+@given(cols=st.integers(2, 257))
+def test_cumsum_property(cols):
+    rng = np.random.default_rng(cols)
+    x = jnp.asarray(rng.standard_normal((16, cols)).astype(np.float32))
+    np.testing.assert_allclose(K.cumsum(x, block_rows=8), R.cumsum_ref(x),
+                               rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("causal", [False, True])
+@pytest.mark.parametrize("bq", [16, 32])
+def test_attention(causal, bq):
+    q, k, v = randn(2, 2, 64, 32), randn(2, 2, 64, 32), randn(2, 2, 64, 32)
+    out = K.attention(q, k, v, causal=causal, block_q=bq)
+    np.testing.assert_allclose(out, R.attention_ref(q, k, v, causal=causal),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_attention_causality():
+    """Changing future keys must not change past outputs under causal mask."""
+    q, k, v = randn(1, 1, 64, 16), randn(1, 1, 64, 16), randn(1, 1, 64, 16)
+    out1 = K.attention(q, k, v, causal=True, block_q=16)
+    k2 = k.at[..., 32:, :].set(999.0)
+    v2 = v.at[..., 32:, :].set(-999.0)
+    out2 = K.attention(q, k2, v2, causal=True, block_q=16)
+    np.testing.assert_allclose(out1[..., :32, :], out2[..., :32, :],
+                               rtol=1e-5, atol=1e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(s=st.sampled_from([32, 64, 96]), d=st.sampled_from([8, 16, 32]),
+       causal=st.booleans())
+def test_attention_property(s, d, causal):
+    rng = np.random.default_rng(s * d)
+    q, k, v = (jnp.asarray(rng.standard_normal((1, 2, s, d)).astype(np.float32))
+               for _ in range(3))
+    out = K.attention(q, k, v, causal=causal, block_q=16)
+    np.testing.assert_allclose(out, R.attention_ref(q, k, v, causal=causal),
+                               rtol=1e-4, atol=1e-4)

@@ -1,0 +1,61 @@
+# pytest: L2 problem graphs — every AOT variant must agree with its
+# reference on random inputs, and the lowered HLO must be text-parseable
+# (sanity for the interchange format the Rust runtime consumes).
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.model import PROBLEMS, InputSpec
+from compile.aot import to_hlo_text
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def _make_inputs(prob, seed=7):
+    rng = np.random.default_rng(seed)
+    return [jnp.asarray(rng.standard_normal(s.shape).astype(s.dtype))
+            for s in prob.inputs]
+
+
+@pytest.mark.parametrize("pname", sorted(PROBLEMS))
+def test_problem_variants_match_reference(pname):
+    prob = PROBLEMS[pname]
+    args = _make_inputs(prob)
+    ref = prob.reference(*args)
+    assert isinstance(ref, tuple) and len(ref) == 1
+    for vname, vfn in prob.variants.items():
+        out = vfn(*args)
+        np.testing.assert_allclose(
+            np.asarray(out[0], np.float32), np.asarray(ref[0], np.float32),
+            rtol=prob.rtol, atol=prob.atol,
+            err_msg=f"{pname}/{vname} diverged from reference")
+
+
+@pytest.mark.parametrize("pname", sorted(PROBLEMS))
+def test_problem_lowers_to_hlo_text(pname):
+    prob = PROBLEMS[pname]
+    specs = [s.sds() for s in prob.inputs]
+    text = to_hlo_text(prob.reference, specs)
+    assert text.startswith("HloModule"), text[:80]
+    # one candidate variant, too
+    vname = sorted(prob.variants)[0]
+    text = to_hlo_text(prob.variants[vname], specs)
+    assert text.startswith("HloModule")
+
+
+def test_registry_covers_kernel_families():
+    kb_ids = {p.kb_id for p in PROBLEMS.values()}
+    # at least one problem per level of the paper's subset
+    assert any(k.startswith("L1") for k in kb_ids)
+    assert any(k.startswith("L2") for k in kb_ids)
+    assert any(k.startswith("L3") for k in kb_ids)
+    # every problem has >= 2 candidate variants (something to search over)
+    for p in PROBLEMS.values():
+        assert len(p.variants) >= 2, p.name
+
+
+def test_input_spec_sds():
+    s = InputSpec((4, 8), "float32")
+    sds = s.sds()
+    assert sds.shape == (4, 8) and sds.dtype == jnp.float32

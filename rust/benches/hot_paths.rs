@@ -1,0 +1,119 @@
+//! Hot-path micro-benchmarks (L3 perf deliverable, DESIGN.md §6).
+//!
+//! criterion is not in the offline vendor set, so this is a small
+//! hand-rolled harness: warmup + N timed iterations, median-of-batches
+//! ns/op, printed as a table. Run with `cargo bench` (harness = false).
+
+use std::hint::black_box;
+use std::time::Instant;
+
+use ucutlass_repro::agent::controller::{run_problem, ControllerKind, Env, VariantSpec};
+use ucutlass_repro::agent::policy::select_move;
+use ucutlass_repro::agent::ModelTier;
+use ucutlass_repro::dsl;
+use ucutlass_repro::integrity::IntegrityPipeline;
+use ucutlass_repro::kernelbench::suite;
+use ucutlass_repro::perfmodel::{CandidateConfig, PerfModel};
+use ucutlass_repro::scheduler::{self, Policy};
+use ucutlass_repro::sol::{analyze, H100_SXM};
+use ucutlass_repro::util::rng::Pcg32;
+
+/// Time `f` over batches; report median batch ns/op.
+fn bench(name: &str, iters_per_batch: usize, batches: usize, mut f: impl FnMut()) {
+    // warmup
+    for _ in 0..iters_per_batch.min(100) {
+        f();
+    }
+    let mut per_op: Vec<f64> = Vec::with_capacity(batches);
+    for _ in 0..batches {
+        let t0 = Instant::now();
+        for _ in 0..iters_per_batch {
+            f();
+        }
+        per_op.push(t0.elapsed().as_nanos() as f64 / iters_per_batch as f64);
+    }
+    per_op.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let med = per_op[per_op.len() / 2];
+    let ops_per_s = 1e9 / med;
+    println!("{name:40} {med:>12.0} ns/op  {ops_per_s:>12.0} ops/s");
+}
+
+const GEMM_SRC: &str = "gemm().with_dtype(input=fp16, acc=fp32, output=fp16)\
+    .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor).with_arch(sm_90a)\
+    .with_threadblockshape(m=128, n=128, k=64).with_alignment(A=8, B=8, C=8)\
+    .with_stages(2).with_scheduler(kernel=tma_cooperative, epilogue=auto)\
+    >> bias() >> relu()";
+
+fn main() {
+    println!("== hot-path benchmarks (median ns/op) ==");
+    let problems = suite();
+    let model = PerfModel::new(H100_SXM.clone());
+    let sols: Vec<_> = problems.iter().map(|p| analyze(p, &H100_SXM)).collect();
+
+    bench("dsl::compile (full sm90 gemm)", 2_000, 9, || {
+        black_box(dsl::compile(black_box(GEMM_SRC)).unwrap());
+    });
+
+    bench("dsl::compile (invalid, static reject)", 2_000, 9, || {
+        let src = GEMM_SRC.replace("sm_90a", "sm_90");
+        black_box(dsl::compile(black_box(&src)).unwrap_err());
+    });
+
+    bench("sol::analyze (per problem)", 20_000, 9, || {
+        black_box(analyze(black_box(&problems[0]), &H100_SXM));
+    });
+
+    let cfg = CandidateConfig::library((128, 128, 64), dsl::DType::Fp16);
+    bench("perfmodel::candidate_ms", 50_000, 9, || {
+        black_box(model.candidate_ms(black_box(&problems[0]), black_box(&cfg)));
+    });
+
+    bench("perfmodel::baseline_ms (8-op graph)", 20_000, 9, || {
+        black_box(model.baseline_ms(black_box(&problems[44])));
+    });
+
+    let mut rng = Pcg32::new(1, 1);
+    bench("policy::select_move (steered)", 10_000, 9, || {
+        black_box(select_move(
+            &model,
+            &problems[0],
+            &cfg,
+            ModelTier::Mid.params(),
+            Some(&sols[0]),
+            0.1,
+            &mut rng,
+        ));
+    });
+
+    let env = Env { model: &model, problems: &problems, sols: &sols };
+    let spec = VariantSpec::new(ControllerKind::InPromptSol, true, ModelTier::Mid);
+    bench("agent::run_problem (40 attempts)", 50, 7, || {
+        black_box(run_problem(&env, &spec, 0, 7));
+    });
+
+    // scheduler replay over a realistic log
+    let runs: Vec<_> = (0..problems.len()).map(|i| run_problem(&env, &spec, i, 7)).collect();
+    let log = ucutlass_repro::agent::RunLog {
+        variant: "bench".into(),
+        tier_name: "gpt-5".into(),
+        price_per_mtok: 1.25,
+        runs,
+    };
+    let pipeline = IntegrityPipeline::default();
+    bench("scheduler::replay (59 problems)", 200, 7, || {
+        black_box(scheduler::replay(
+            &log,
+            &Policy { epsilon: 1.0, window: 8 },
+            &pipeline,
+            7,
+        ));
+    });
+
+    bench("scheduler::sweep (72 policies)", 5, 5, || {
+        black_box(scheduler::sweep(&log, &pipeline, 7));
+    });
+
+    bench("integrity::review_run (40 attempts)", 5_000, 9, || {
+        black_box(pipeline.review_run(black_box(&log.runs[0]), 7));
+    });
+}

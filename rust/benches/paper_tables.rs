@@ -1,0 +1,41 @@
+//! End-to-end benchmark: regenerate every paper table/figure and report
+//! wall time + the headline number each produces. This is the "one bench
+//! per paper table" target — each row is one §6 artifact regenerated from
+//! scratch (fresh seeded runs through the full agent/DSL/SOL/scheduler/
+//! integrity stack).
+
+use std::time::Instant;
+
+use ucutlass_repro::experiments::figures::{self, ExpCtx};
+
+fn main() {
+    println!("== paper-artifact regeneration benchmark ==");
+    let outdir = std::env::temp_dir().join("ucutlass_bench_results");
+    let mut ctx = ExpCtx::new(&outdir, 12345);
+
+    let figs: Vec<(&str, fn(&mut ExpCtx) -> String)> = vec![
+        ("fig3  (geomean, 12 variants)", figures::fig3),
+        ("fig4  (Fast-p / Attempt-Fast-p)", figures::fig4),
+        ("fig5  (orchestrated vs in-prompt)", figures::fig5),
+        ("fig6  (MANTIS ablations)", figures::fig6),
+        ("fig7  (scheduler sweeps)", figures::fig7),
+        ("fig8  (Pareto frontiers)", figures::fig8),
+        ("fig9  (best policies)", figures::fig9),
+        ("fig10 (review outcomes)", figures::fig10),
+        ("fig11 (LGD breakdown)", figures::fig11),
+        ("fig12 (speedup inflation)", figures::fig12),
+        ("fig13 (run-to-run variation)", figures::fig13),
+        ("fig14 (archive comparison)", figures::fig14),
+        ("tab4  (prompt guardrails)", figures::tab4),
+    ];
+    let t_all = Instant::now();
+    for (name, f) in figs {
+        let t0 = Instant::now();
+        let out = f(&mut ctx);
+        let dt = t0.elapsed();
+        let first = out.lines().next().unwrap_or("");
+        println!("{name:38} {:>8.2?}   {first}", dt);
+    }
+    println!("\ntotal (with run-log cache): {:.2?}", t_all.elapsed());
+    println!("results written to {}", outdir.display());
+}

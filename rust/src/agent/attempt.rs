@@ -1,0 +1,211 @@
+//! Attempt records: one Generate–Compile–Test–Profile cycle (paper §5.5).
+//!
+//! These are the unit the run log stores, the scheduler replays, and the
+//! integrity pipeline labels.
+
+use crate::perfmodel::CandidateConfig;
+use crate::util::json::Json;
+
+/// How the candidate was produced (the integrity pipeline's ground truth;
+/// detectors must *infer* these from runtime, profile, and code features).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SolutionKind {
+    /// µCUTLASS-generated kernel (DSL path).
+    DslKernel,
+    /// Hand-written CUDA/CUTLASS (raw path).
+    RawCuda,
+    /// Composition of PyTorch library calls, no custom kernel (§5.8).
+    PyTorchOnly,
+    /// Gaming: exploits a spec/correctness loophole (§4.4, §6.3).
+    Gaming(GamingType),
+}
+
+/// Original-gaming subcategories (paper Figure 11, red shades).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GamingType {
+    /// Linear/constant fit calibrated to the benchmark input shape.
+    BenchmarkInputExploitation,
+    /// Ignores input; returns a pre-computed/cached tensor.
+    ConstantOutput,
+    /// Omits a required pipeline stage (dropout, bias, clamp…).
+    SkippedComputation,
+    /// view/as_strided instead of a real data transpose.
+    FakeTranspose,
+    /// Computes a prefix/sub-sample, zero-fills the rest.
+    IncompleteComputation,
+}
+
+impl GamingType {
+    pub const ALL: [GamingType; 5] = [
+        GamingType::BenchmarkInputExploitation,
+        GamingType::ConstantOutput,
+        GamingType::SkippedComputation,
+        GamingType::FakeTranspose,
+        GamingType::IncompleteComputation,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            GamingType::BenchmarkInputExploitation => "benchmark_input_exploitation",
+            GamingType::ConstantOutput => "constant_output",
+            GamingType::SkippedComputation => "skipped_computation",
+            GamingType::FakeTranspose => "fake_transpose",
+            GamingType::IncompleteComputation => "incomplete_computation",
+        }
+    }
+}
+
+/// Minor-issue subcategories (paper Figure 11, green shades) — accepted by
+/// the integrity pipeline since performance is unaffected.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum MinorIssueType {
+    /// Subtle math/precision difference still within tolerance.
+    MathApproximation,
+    /// Caches weights keyed on shape/pointer rather than content.
+    CachedParameter,
+    /// Assumes contiguous layout (fails on strided views).
+    ContiguityAssumption,
+    /// Uses the default CUDA stream (latent race).
+    DefaultStream,
+}
+
+impl MinorIssueType {
+    pub const ALL: [MinorIssueType; 4] = [
+        MinorIssueType::MathApproximation,
+        MinorIssueType::CachedParameter,
+        MinorIssueType::ContiguityAssumption,
+        MinorIssueType::DefaultStream,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            MinorIssueType::MathApproximation => "minor_math_approximation",
+            MinorIssueType::CachedParameter => "cached_parameter",
+            MinorIssueType::ContiguityAssumption => "contiguity_assumption",
+            MinorIssueType::DefaultStream => "uses_default_stream",
+        }
+    }
+}
+
+/// Outcome of one generate–compile–test–profile cycle.
+#[derive(Debug, Clone, PartialEq)]
+pub enum AttemptOutcome {
+    /// µCUTLASS static validation rejected every repair try — no tool
+    /// action was spent (the DSL's cost-saving path).
+    DslRejected,
+    /// nvcc/toolchain failure (raw path).
+    CompileError,
+    /// Crashed or timed out at runtime.
+    RuntimeError,
+    /// Ran but failed the correctness harness.
+    Incorrect,
+    /// Passed correctness; measured at `time_ms` by NCU.
+    Correct { time_ms: f64 },
+}
+
+impl AttemptOutcome {
+    pub fn time_ms(&self) -> Option<f64> {
+        match self {
+            AttemptOutcome::Correct { time_ms } => Some(*time_ms),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            AttemptOutcome::DslRejected => "dsl_rejected",
+            AttemptOutcome::CompileError => "compile_error",
+            AttemptOutcome::RuntimeError => "runtime_error",
+            AttemptOutcome::Incorrect => "incorrect",
+            AttemptOutcome::Correct { .. } => "correct",
+        }
+    }
+}
+
+/// One attempt, as recorded in the run log.
+#[derive(Debug, Clone)]
+pub struct AttemptRecord {
+    /// Index of the problem in the suite.
+    pub problem_idx: usize,
+    /// Attempt ordinal within the problem (0-based).
+    pub attempt: u32,
+    pub outcome: AttemptOutcome,
+    pub kind: SolutionKind,
+    /// Minor issue present (only meaningful for Correct attempts).
+    pub minor_issue: Option<MinorIssueType>,
+    /// True when a gaming exploit was carried over from an earlier attempt
+    /// (paper: Inherited Gaming).
+    pub inherited: bool,
+    /// LLM tokens consumed by this attempt (generate + reasoning).
+    pub tokens: u64,
+    /// Compile/run/profile wall time (s) — the tool-action cost.
+    pub tool_time_s: f64,
+    /// The kernel-design descriptor, for correct genuine solutions.
+    pub config: Option<CandidateConfig>,
+    /// Kernel launch signatures from the NCU profile (PyTorch-only
+    /// detector input).
+    pub kernel_names: Vec<String>,
+    /// µCUTLASS source, when the DSL path produced one (traceability).
+    pub dsl_source: Option<String>,
+}
+
+impl AttemptRecord {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("problem_idx", self.problem_idx)
+            .set("attempt", self.attempt as u64)
+            .set("outcome", self.outcome.name())
+            .set(
+                "time_ms",
+                self.outcome.time_ms().map(Json::Num).unwrap_or(Json::Null),
+            )
+            .set(
+                "kind",
+                match &self.kind {
+                    SolutionKind::DslKernel => "dsl".to_string(),
+                    SolutionKind::RawCuda => "raw".to_string(),
+                    SolutionKind::PyTorchOnly => "pytorch_only".to_string(),
+                    SolutionKind::Gaming(g) => format!("gaming:{}", g.name()),
+                },
+            )
+            .set(
+                "minor_issue",
+                self.minor_issue.map(|m| Json::Str(m.name().into())).unwrap_or(Json::Null),
+            )
+            .set("inherited", self.inherited)
+            .set("tokens", self.tokens)
+            .set("tool_time_s", self.tool_time_s);
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn outcome_time() {
+        assert_eq!(AttemptOutcome::Correct { time_ms: 2.0 }.time_ms(), Some(2.0));
+        assert_eq!(AttemptOutcome::Incorrect.time_ms(), None);
+    }
+
+    #[test]
+    fn record_serializes() {
+        let r = AttemptRecord {
+            problem_idx: 3,
+            attempt: 7,
+            outcome: AttemptOutcome::Correct { time_ms: 1.5 },
+            kind: SolutionKind::Gaming(GamingType::ConstantOutput),
+            minor_issue: None,
+            inherited: true,
+            tokens: 9000,
+            tool_time_s: 40.0,
+            config: None,
+            kernel_names: vec![],
+            dsl_source: None,
+        };
+        let j = r.to_json();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("gaming:constant_output"));
+        assert_eq!(j.get("inherited").unwrap().as_bool(), Some(true));
+    }
+}

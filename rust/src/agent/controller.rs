@@ -1,0 +1,637 @@
+//! MI and in-prompt-SOL controllers: the flat Generate–Compile–Test–Profile
+//! loop (paper §5.5). The orchestrated MANTIS controller lives in
+//! [`crate::mantis`] and shares this module's attempt engine.
+
+use crate::kernelbench::Problem;
+use crate::perfmodel::{CandidateConfig, PerfModel};
+use crate::sol::SolAnalysis;
+use crate::util::rng::Pcg32;
+
+use super::attempt::{AttemptOutcome, AttemptRecord, GamingType, MinorIssueType, SolutionKind};
+use super::policy::{self, dsl_applicable, generate_valid_dsl, select_move, TILES};
+use super::runlog::ProblemRun;
+use super::tiers::{ModelTier, TierParams};
+
+/// Which controller drives the loop (paper Table 2).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ControllerKind {
+    /// Flat Measure–Implement loop.
+    Mi,
+    /// Flat loop whose prompt carries the SOL report (in-prompt steering).
+    InPromptSol,
+    /// Multi-phase orchestrated MANTIS (5 iters × 2 hypotheses × 4 attempts).
+    OrchestratedSol,
+}
+
+impl ControllerKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ControllerKind::Mi => "MI",
+            ControllerKind::InPromptSol => "in-prompt SOL",
+            ControllerKind::OrchestratedSol => "orchestrated SOL",
+        }
+    }
+}
+
+/// A full experimental variant: controller × DSL × tier (paper Table 2).
+#[derive(Debug, Clone, Copy)]
+pub struct VariantSpec {
+    pub controller: ControllerKind,
+    pub dsl: bool,
+    pub tier: ModelTier,
+    /// Matched per-problem attempt budget (40 in the paper).
+    pub attempts: u32,
+    /// Prompt-level anti-gaming / anti-PyTorch-only guardrails (Table 4
+    /// run 2).
+    pub guardrails: bool,
+    /// Online integrity feedback (the paper's §7 future-work item): the
+    /// SOL-ceiling + LGD review runs inside the loop, so detected gaming is
+    /// rejected immediately and the agent corrects instead of inheriting
+    /// the exploit.
+    pub online_integrity: bool,
+}
+
+impl VariantSpec {
+    pub fn new(controller: ControllerKind, dsl: bool, tier: ModelTier) -> Self {
+        VariantSpec { controller, dsl, tier, attempts: 40, guardrails: false, online_integrity: false }
+    }
+
+    /// Enable online integrity feedback (§7 future work, `ext1`).
+    pub fn with_online_integrity(mut self) -> Self {
+        self.online_integrity = true;
+        self
+    }
+
+    pub fn label(&self) -> String {
+        let base = match (self.controller, self.dsl) {
+            (ControllerKind::Mi, false) => "MI".to_string(),
+            (ControllerKind::Mi, true) => "µCUTLASS + MI".to_string(),
+            (c, false) => format!("{}", c.name()),
+            (c, true) => format!("µCUTLASS + {}", c.name()),
+        };
+        format!("{} [{}]", base, self.tier.name())
+    }
+}
+
+/// Shared evaluation environment.
+pub struct Env<'a> {
+    pub model: &'a PerfModel,
+    pub problems: &'a [Problem],
+    /// Per-problem SOL analyses (same order as `problems`).
+    pub sols: &'a [SolAnalysis],
+}
+
+/// Mutable per-problem agent state threaded through attempts.
+pub struct AgentState {
+    /// Best *measured* time of any correct attempt so far (ms). Starts at
+    /// the PyTorch-seed baseline (the bootstrap cuda_model.cu delegates to
+    /// PyTorch).
+    pub best_time_ms: f64,
+    /// Measured PyTorch reference.
+    pub t_ref_ms: f64,
+    /// Best genuine (non-gamed) config, the mutation base.
+    pub best_cfg: Option<CandidateConfig>,
+    /// Active exploit once gaming was discovered (inherited thereafter).
+    pub gamed: Option<(GamingType, f64)>,
+    pub consecutive_failures: u32,
+    /// Tokens spent on this problem so far.
+    pub tokens: u64,
+}
+
+/// Gaming runtime: what the exploit's kernel actually costs.
+fn gaming_time_ms(
+    model: &PerfModel,
+    problem: &Problem,
+    ty: GamingType,
+    honest_best_ms: f64,
+) -> f64 {
+    let out_bytes = problem.ops.last().map(|o| o.out_elems()).unwrap_or(1) * 4;
+    let write_only_ms = out_bytes as f64 / model.gpu.effective_bandwidth() * 1e3 + 0.003;
+    match ty {
+        GamingType::ConstantOutput | GamingType::BenchmarkInputExploitation => write_only_ms,
+        GamingType::SkippedComputation => honest_best_ms * 0.55,
+        GamingType::FakeTranspose => honest_best_ms * 0.80,
+        GamingType::IncompleteComputation => honest_best_ms * 0.35,
+    }
+}
+
+/// Sample a fresh raw-CUDA config (first genuine attempt on the raw path).
+fn sample_raw_config(
+    tier: &TierParams,
+    mods: &Modifiers,
+    problem: &Problem,
+    rng: &mut Pcg32,
+) -> CandidateConfig {
+    let tile = *rng.choice(TILES);
+    let quality = (mods.raw_quality(tier.raw_quality_median)
+        * rng.lognormal_noise(tier.raw_quality_sigma))
+    .clamp(0.03, 0.95);
+    let fuse = mods.raw_fuse(tier.raw_fuse_rate);
+    CandidateConfig {
+        tile,
+        compute_dtype: if rng.chance(mods.raw_fp16(tier.raw_fp16_rate)) {
+            crate::dsl::DType::Fp16
+        } else {
+            crate::dsl::DType::Fp32
+        },
+        tensor_cores: problem.is_matmul_like() && rng.chance(0.8),
+        fused_epilogue: rng.chance(fuse),
+        fusion_coverage: if rng.chance(fuse) { 1.0 } else { 0.3 },
+        scheduler: Default::default(),
+        stages: 2,
+        quality,
+    }
+}
+
+/// Default first DSL config: the grammar's SM90+ template.
+fn default_dsl_config(tier: &TierParams, rng: &mut Pcg32) -> CandidateConfig {
+    let mut cfg = CandidateConfig::library((128, 128, 64), crate::dsl::DType::Fp32);
+    if rng.chance(0.25 * tier.fp16_move_bias) {
+        cfg.compute_dtype = crate::dsl::DType::Fp16;
+    }
+    cfg.quality = 0.97; // CUTLASS-backed codegen is library-grade
+    cfg
+}
+
+/// Per-variant behaviour modifiers derived from the paper's findings.
+pub struct Modifiers {
+    pub gaming_mult: f64,
+    pub fallback_mult: f64,
+    pub tokens_mult: f64,
+    pub steered: bool,
+    /// Strength of SOL steering's effect on *what gets implemented*:
+    /// 0 = none, 0.6 = in-prompt, 1.0 = orchestrated. SOL analysis tells
+    /// the agent which precision/fusion/structure to target, which lifts
+    /// raw-code quality and implementation success (paper §6.1: SOL alone
+    /// improves GPT-5 MI from 0.86× to ~1.7×).
+    pub steer_strength: f64,
+}
+
+impl Modifiers {
+    /// Raw-quality median after steering (diminishing toward 0.9).
+    pub fn raw_quality(&self, base: f64) -> f64 {
+        base + (0.90 - base) * 0.30 * self.steer_strength
+    }
+
+    /// FP16 adoption rate after steering (SOL's FP16 augmentation makes
+    /// the reduced-precision headroom explicit).
+    pub fn raw_fp16(&self, base: f64) -> f64 {
+        (base * (1.0 + 2.5 * self.steer_strength)).min(0.9)
+    }
+
+    /// Fusion adoption after steering.
+    pub fn raw_fuse(&self, base: f64) -> f64 {
+        (base * (1.0 + 0.8 * self.steer_strength)).min(0.95)
+    }
+
+    /// Correctness rates improve under structured implement phases.
+    pub fn success_rate(&self, base: f64) -> f64 {
+        1.0 - (1.0 - base) * (1.0 - 0.45 * self.steer_strength)
+    }
+}
+
+pub fn modifiers(spec: &VariantSpec) -> Modifiers {
+    let mut m = Modifiers {
+        gaming_mult: 1.0,
+        fallback_mult: 1.0,
+        tokens_mult: 1.0,
+        steered: false,
+        steer_strength: 0.0,
+    };
+    if spec.dsl {
+        // fake-transpose exploits open up; weak models also fall back to
+        // torch more when the DSL doesn't cover the problem (§6.3)
+        m.gaming_mult *= 1.6;
+        m.fallback_mult *= match spec.tier {
+            ModelTier::Mini => 2.6,
+            ModelTier::Mid => 1.6,
+            ModelTier::Max => 1.2,
+        };
+    }
+    match spec.controller {
+        ControllerKind::Mi => {}
+        ControllerKind::InPromptSol => {
+            m.steered = true;
+            m.steer_strength = 0.6;
+            m.gaming_mult *= 0.35; // structured steering discourages shortcuts
+            m.tokens_mult *= 1.25; // SOL report + reasoning in prompt
+        }
+        ControllerKind::OrchestratedSol => {
+            m.steered = true;
+            m.steer_strength = 1.0;
+            m.gaming_mult *= 0.20;
+            m.tokens_mult *= 1.55; // per-phase artifacts
+        }
+    }
+    if spec.guardrails {
+        // Table 4: anti-PyTorch-only instruction works, anti-gaming doesn't
+        m.fallback_mult *= 0.15;
+    }
+    m
+}
+
+/// Quality recovered per ImproveCode rewrite, by tier.
+pub fn quality_gain(tier: ModelTier) -> f64 {
+    match tier {
+        ModelTier::Mini => 0.05,
+        ModelTier::Mid => 0.10,
+        ModelTier::Max => 0.18,
+    }
+}
+
+/// Online integrity review (ext1): SOL-ceiling fires deterministically on
+/// physically-implausible runtimes; otherwise the LGD catches the exploit
+/// with its calibrated detection rate.
+fn online_review_catches(
+    env: &Env,
+    _spec: &VariantSpec,
+    pidx: usize,
+    time_ms: f64,
+    rng: &mut Pcg32,
+) -> bool {
+    if time_ms < 0.9 * env.sols[pidx].t_sol_fp16_ms {
+        return true; // strict runtime bounds check
+    }
+    rng.chance(0.93) // LGD with the SOL report as specification augmentation
+}
+
+/// Execute ONE generate–compile–test–profile attempt and update state.
+/// This is the shared engine used by MI, in-prompt, and MANTIS Implement.
+#[allow(clippy::too_many_arguments)]
+pub fn run_attempt(
+    env: &Env,
+    spec: &VariantSpec,
+    mods: &Modifiers,
+    pidx: usize,
+    attempt_no: u32,
+    state: &mut AgentState,
+    steering: Option<&SolAnalysis>,
+    forced_move: Option<policy::OptMove>,
+    rng: &mut Pcg32,
+) -> AttemptRecord {
+    let tier = spec.tier.params();
+    let problem = &env.problems[pidx];
+    let tokens =
+        (tier.tokens_mean * mods.tokens_mult * rng.lognormal_noise(tier.tokens_sigma)) as u64;
+    state.tokens += tokens;
+    let mut rec = AttemptRecord {
+        problem_idx: pidx,
+        attempt: attempt_no,
+        outcome: AttemptOutcome::Incorrect,
+        kind: SolutionKind::RawCuda,
+        minor_issue: None,
+        inherited: false,
+        tokens,
+        tool_time_s: 90.0 * rng.lognormal_noise(0.2),
+        config: None,
+        kernel_names: vec![],
+        dsl_source: None,
+    };
+
+    // -- inherited gaming: once an exploit wins, later attempts keep it ----
+    // (unless online integrity feedback already rejected the exploit)
+    if let Some((ty, t)) = state.gamed {
+        if spec.online_integrity && online_review_catches(env, spec, pidx, t, rng) {
+            // the harness rejects the inherited exploit; the agent corrects
+            state.gamed = None;
+            if state.best_time_ms <= t {
+                state.best_time_ms = f64::INFINITY; // rebuild best from honest attempts
+                if let Some(cfg) = &state.best_cfg {
+                    state.best_time_ms = env.model.candidate_ms(&env.problems[pidx], cfg);
+                }
+            }
+            let _ = ty;
+        } else if rng.chance(0.80) {
+            let t_j = t * rng.lognormal_noise(0.01);
+            rec.outcome = AttemptOutcome::Correct { time_ms: t_j };
+            rec.kind = SolutionKind::Gaming(ty);
+            rec.inherited = true;
+            rec.kernel_names = vec!["fast_kernel_v2".into()];
+            if t_j < state.best_time_ms {
+                state.best_time_ms = t_j;
+            }
+            return rec;
+        }
+    }
+
+    // -- original gaming discovery -----------------------------------------
+    let p_gaming = tier.gaming_rate * mods.gaming_mult;
+    if rng.chance(p_gaming) {
+        // type distribution: constant-output needs strong reasoning (Max);
+        // fake transpose is DSL-associated (§6.3)
+        let weights: Vec<f64> = GamingType::ALL
+            .iter()
+            .map(|ty| match ty {
+                GamingType::ConstantOutput => {
+                    if spec.tier == ModelTier::Max { 3.0 } else { 0.2 }
+                }
+                GamingType::FakeTranspose => if spec.dsl { 1.5 } else { 0.05 },
+                GamingType::BenchmarkInputExploitation => 0.6,
+                GamingType::SkippedComputation => 1.0,
+                GamingType::IncompleteComputation => 0.5,
+            })
+            .collect();
+        let ty = GamingType::ALL[rng.weighted_choice(&weights)];
+        let honest = state.best_cfg.as_ref().map(|c| env.model.candidate_ms(problem, c))
+            .unwrap_or(state.t_ref_ms);
+        let t = gaming_time_ms(env.model, problem, ty, honest) * rng.lognormal_noise(0.01);
+        if spec.online_integrity && online_review_catches(env, spec, pidx, t, rng) {
+            // rejected in the loop: the attempt fails correctness review and
+            // no exploit is inherited (paper §7: agents correct during search)
+            rec.outcome = AttemptOutcome::Incorrect;
+            rec.kind = SolutionKind::Gaming(ty);
+            state.consecutive_failures += 1;
+            return rec;
+        }
+        rec.outcome = AttemptOutcome::Correct { time_ms: t };
+        rec.kind = SolutionKind::Gaming(ty);
+        rec.kernel_names = vec!["optimized_kernel".into()];
+        state.gamed = Some((ty, t));
+        if t < state.best_time_ms {
+            state.best_time_ms = t;
+        }
+        return rec;
+    }
+
+    // -- PyTorch-only fallback ------------------------------------------------
+    let p_fb = tier.pytorch_fallback_rate
+        * mods.fallback_mult
+        * (1.0 + 0.4 * state.consecutive_failures as f64);
+    if rng.chance(p_fb.min(0.85)) {
+        // library-composed implementations (addmm/sdpa fusion) modestly beat
+        // eager but write no custom kernel
+        let t = state.t_ref_ms * rng.range_f64(0.55, 0.95);
+        rec.outcome = AttemptOutcome::Correct { time_ms: t };
+        rec.kind = SolutionKind::PyTorchOnly;
+        rec.kernel_names = vec![
+            "void at::native::vectorized_elementwise_kernel<4, ...>".into(),
+            "ampere_sgemm_128x64_tn [cublas]".into(),
+        ];
+        state.consecutive_failures = 0;
+        if t < state.best_time_ms {
+            state.best_time_ms = t;
+        }
+        return rec;
+    }
+
+    // -- genuine path -----------------------------------------------------------
+    let use_dsl = spec.dsl && dsl_applicable(problem);
+    let qgain = quality_gain(spec.tier);
+    let proposed: CandidateConfig = match (&state.best_cfg, forced_move) {
+        (Some(base), Some(mv)) => policy::apply_move(base, mv, qgain),
+        (Some(base), None) => {
+            match select_move(env.model, problem, base, tier, steering, qgain, rng) {
+                Some((mv, _est)) => policy::apply_move(base, mv, qgain),
+                None => base.clone(),
+            }
+        }
+        (None, _) => {
+            if use_dsl {
+                default_dsl_config(tier, rng)
+            } else {
+                sample_raw_config(tier, mods, problem, rng)
+            }
+        }
+    };
+
+    if use_dsl {
+        let (src, tries) = generate_valid_dsl(problem, &proposed, tier, rng, 3);
+        // repairs cost extra tokens but no tool action
+        let repair_tokens = (tries as u64 - 1) * 2_000;
+        rec.tokens += repair_tokens;
+        state.tokens += repair_tokens;
+        match src {
+            None => {
+                rec.outcome = AttemptOutcome::DslRejected;
+                rec.kind = SolutionKind::DslKernel;
+                rec.tool_time_s = 1.0; // static rejection: no compile/run/profile
+                state.consecutive_failures += 1;
+                return rec;
+            }
+            Some(src) => {
+                rec.dsl_source = Some(src);
+                rec.kind = SolutionKind::DslKernel;
+                if !rng.chance(mods.success_rate(tier.dsl_integrate_rate)) {
+                    // kernel is fine, integration into cuda_model.cu is not
+                    rec.outcome = if rng.chance(0.5) {
+                        AttemptOutcome::RuntimeError
+                    } else {
+                        AttemptOutcome::Incorrect
+                    };
+                    state.consecutive_failures += 1;
+                    return rec;
+                }
+                let t = env.model.measure_ms(problem, &proposed, rng);
+                rec.outcome = AttemptOutcome::Correct { time_ms: t };
+                rec.kernel_names = vec![format!("ucutlass_kernel::{}", problem.name)];
+                if rng.chance(tier.minor_issue_rate) {
+                    rec.minor_issue = Some(*rng.choice(&MinorIssueType::ALL));
+                }
+                rec.config = Some(proposed.clone());
+                state.consecutive_failures = 0;
+                if t < state.best_time_ms {
+                    state.best_time_ms = t;
+                    state.best_cfg = Some(proposed);
+                } else if state.best_cfg.is_none() {
+                    state.best_cfg = Some(proposed);
+                }
+                return rec;
+            }
+        }
+    }
+
+    // raw CUDA path
+    rec.kind = SolutionKind::RawCuda;
+    if !rng.chance(tier.raw_compile_rate) {
+        rec.outcome = AttemptOutcome::CompileError;
+        rec.tool_time_s = 35.0 * rng.lognormal_noise(0.2);
+        state.consecutive_failures += 1;
+        return rec;
+    }
+    if !rng.chance(mods.success_rate(tier.raw_correct_rate)) {
+        rec.outcome = if rng.chance(0.3) {
+            AttemptOutcome::RuntimeError
+        } else {
+            AttemptOutcome::Incorrect
+        };
+        state.consecutive_failures += 1;
+        return rec;
+    }
+    let t = env.model.measure_ms(problem, &proposed, rng);
+    rec.outcome = AttemptOutcome::Correct { time_ms: t };
+    rec.kernel_names = vec![format!("{}_custom_kernel", problem.name)];
+    if rng.chance(tier.minor_issue_rate) {
+        rec.minor_issue = Some(*rng.choice(&MinorIssueType::ALL));
+    }
+    rec.config = Some(proposed.clone());
+    state.consecutive_failures = 0;
+    if t < state.best_time_ms {
+        state.best_time_ms = t;
+        state.best_cfg = Some(proposed);
+    } else if state.best_cfg.is_none() {
+        state.best_cfg = Some(proposed);
+    }
+    rec
+}
+
+/// Run the flat controllers (MI / in-prompt SOL) on one problem.
+/// Orchestrated MANTIS is dispatched to [`crate::mantis::run_orchestrated`].
+pub fn run_problem(env: &Env, spec: &VariantSpec, pidx: usize, seed: u64) -> ProblemRun {
+    match spec.controller {
+        ControllerKind::OrchestratedSol => {
+            return crate::mantis::run_orchestrated(env, spec, pidx, seed, None);
+        }
+        _ => {}
+    }
+    let mut rng = Pcg32::new(seed, (pidx as u64) << 8 | 1);
+    let mods = modifiers(spec);
+    let problem = &env.problems[pidx];
+    let t_ref = env.model.measure_baseline_ms(problem, &mut rng);
+    let mut state = AgentState {
+        best_time_ms: f64::INFINITY,
+        t_ref_ms: t_ref,
+        best_cfg: None,
+        gamed: None,
+        consecutive_failures: 0,
+        tokens: 0,
+    };
+    let steering = if mods.steered { Some(&env.sols[pidx]) } else { None };
+    let mut attempts = Vec::with_capacity(spec.attempts as usize);
+    for a in 0..spec.attempts {
+        let rec = run_attempt(env, spec, &mods, pidx, a, &mut state, steering, None, &mut rng);
+        attempts.push(rec);
+    }
+    ProblemRun {
+        problem_idx: pidx,
+        t_ref_ms: t_ref,
+        t_sol_ms: env.sols[pidx].t_sol_ms,
+        t_sol_fp16_ms: env.sols[pidx].t_sol_fp16_ms,
+        attempts,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernelbench::suite;
+    use crate::perfmodel::PerfModel;
+    use crate::sol::{analyze, H100_SXM};
+
+    fn env_fixture() -> (PerfModel, Vec<Problem>, Vec<SolAnalysis>) {
+        let model = PerfModel::new(H100_SXM.clone());
+        let problems = suite();
+        let sols: Vec<SolAnalysis> = problems.iter().map(|p| analyze(p, &H100_SXM)).collect();
+        (model, problems, sols)
+    }
+
+    #[test]
+    fn run_problem_respects_budget() {
+        let (model, problems, sols) = env_fixture();
+        let env = Env { model: &model, problems: &problems, sols: &sols };
+        let spec = VariantSpec::new(ControllerKind::Mi, false, ModelTier::Mini);
+        let run = run_problem(&env, &spec, 0, 42);
+        assert_eq!(run.attempts.len(), 40);
+        assert!(run.t_ref_ms > 0.0);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let (model, problems, sols) = env_fixture();
+        let env = Env { model: &model, problems: &problems, sols: &sols };
+        let spec = VariantSpec::new(ControllerKind::Mi, true, ModelTier::Mid);
+        let a = run_problem(&env, &spec, 3, 7);
+        let b = run_problem(&env, &spec, 3, 7);
+        assert_eq!(a.best_time_ms(), b.best_time_ms());
+        assert_eq!(a.total_tokens(), b.total_tokens());
+    }
+
+    #[test]
+    fn dsl_variant_produces_dsl_kernels_on_gemm() {
+        let (model, problems, sols) = env_fixture();
+        let env = Env { model: &model, problems: &problems, sols: &sols };
+        let spec = VariantSpec::new(ControllerKind::Mi, true, ModelTier::Mid);
+        let run = run_problem(&env, &spec, 0, 11); // L1-1 gemm
+        assert!(run
+            .attempts
+            .iter()
+            .any(|a| matches!(a.kind, SolutionKind::DslKernel)));
+        // DSL sources that were accepted must really compile
+        for a in &run.attempts {
+            if let Some(src) = &a.dsl_source {
+                crate::dsl::compile(src).unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn mini_dsl_beats_mini_raw_on_gemm() {
+        let (model, problems, sols) = env_fixture();
+        let env = Env { model: &model, problems: &problems, sols: &sols };
+        let mut wins = 0;
+        for seed in 0..10u64 {
+            let raw = run_problem(
+                &env,
+                &VariantSpec::new(ControllerKind::Mi, false, ModelTier::Mini),
+                0,
+                seed,
+            );
+            let dsl = run_problem(
+                &env,
+                &VariantSpec::new(ControllerKind::Mi, true, ModelTier::Mini),
+                0,
+                seed + 1000,
+            );
+            if dsl.best_honest_time_ms().unwrap_or(f64::INFINITY)
+                < raw.best_honest_time_ms().unwrap_or(f64::INFINITY)
+            {
+                wins += 1;
+            }
+        }
+        assert!(wins >= 8, "DSL should dominate raw for mini on GEMM, won {wins}/10");
+    }
+
+    #[test]
+    fn online_integrity_breaks_gaming_chains() {
+        let (model, problems, sols) = env_fixture();
+        let env = Env { model: &model, problems: &problems, sols: &sols };
+        let base = VariantSpec::new(ControllerKind::Mi, true, ModelTier::Max);
+        let online = base.with_online_integrity();
+        let gaming = |spec: VariantSpec| -> (usize, usize) {
+            let mut orig = 0;
+            let mut inherited = 0;
+            for seed in 0..15u64 {
+                for a in run_problem(&env, &spec, 0, seed).attempts {
+                    if matches!(a.kind, SolutionKind::Gaming(_))
+                        && a.outcome.time_ms().is_some()
+                    {
+                        if a.inherited {
+                            inherited += 1;
+                        } else {
+                            orig += 1;
+                        }
+                    }
+                }
+            }
+            (orig, inherited)
+        };
+        let (o1, i1) = gaming(base);
+        let (o2, i2) = gaming(online);
+        assert!(o2 + i2 < (o1 + i1) / 4, "online review should collapse gaming: {o1}+{i1} -> {o2}+{i2}");
+        assert!(i2 <= i1, "inheritance chains must not grow");
+    }
+
+    #[test]
+    fn steering_reduces_gaming() {
+        let (model, problems, sols) = env_fixture();
+        let env = Env { model: &model, problems: &problems, sols: &sols };
+        let count_gaming = |spec: VariantSpec| -> usize {
+            (0..12u64)
+                .flat_map(|seed| run_problem(&env, &spec, 0, seed).attempts)
+                .filter(|a| matches!(a.kind, SolutionKind::Gaming(_)))
+                .count()
+        };
+        let mi = count_gaming(VariantSpec::new(ControllerKind::Mi, true, ModelTier::Max));
+        let sol = count_gaming(VariantSpec::new(ControllerKind::InPromptSol, true, ModelTier::Max));
+        assert!(sol < mi, "SOL steering should reduce gaming: {sol} vs {mi}");
+    }
+}

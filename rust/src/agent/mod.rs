@@ -1,0 +1,27 @@
+//! SimLLM agent policies and controllers (paper §5.4–§5.5).
+//!
+//! The paper's agents are GPT-5-mini / GPT-5 / GPT-5.2 driving an
+//! OpenHands runtime on an H100. Neither is available here, so the agent
+//! is a seeded stochastic *policy model* ([`tiers::TierParams`]) whose
+//! behaviour distributions are calibrated from the paper's own reported
+//! per-tier statistics (solve rates, gaming counts, quality of raw CUDA).
+//! Everything downstream — the DSL compiler, SOL analysis, MANTIS
+//! phases, budget scheduling, integrity checking — is the *real* system
+//! under test acting on those behaviours (DESIGN.md §2).
+//!
+//! Key fidelity point: when a DSL-enabled agent emits a candidate it emits
+//! an actual µCUTLASS source string which goes through the real
+//! [`crate::dsl`] compiler; statically-invalid programs are caught by the
+//! real validator at near-zero cost, exactly the mechanism the paper
+//! credits for the DSL's iteration-efficiency gains.
+
+pub mod attempt;
+pub mod controller;
+pub mod policy;
+pub mod runlog;
+pub mod tiers;
+
+pub use attempt::{AttemptOutcome, AttemptRecord, GamingType, MinorIssueType, SolutionKind};
+pub use controller::{run_problem, ControllerKind, VariantSpec};
+pub use runlog::{ProblemRun, RunLog};
+pub use tiers::{ModelTier, TierParams};

@@ -1,0 +1,440 @@
+//! Optimization-move machinery and the µCUTLASS source generator.
+//!
+//! Agents search the same configuration landscape the performance model
+//! costs: tiles, compute precision, fusion, schedulers, pipeline depth,
+//! residual code quality. A *move* mutates the current best config; move
+//! *selection* is where model capability and SOL steering act — steering
+//! shrinks the noise on the agent's own impact estimates and filters moves
+//! to the ones targeting the analyzed bottleneck (paper §4.2).
+
+use crate::dsl;
+use crate::kernelbench::{Op, Problem};
+use crate::perfmodel::{CandidateConfig, PerfModel, SchedulerKind};
+use crate::sol::{Bottleneck, SolAnalysis};
+use crate::util::rng::Pcg32;
+
+use super::tiers::TierParams;
+
+/// The tile menu agents choose from (MXU/WGMMA-shaped).
+pub const TILES: &[(u64, u64, u64)] = &[
+    (64, 64, 32),
+    (64, 64, 64),
+    (128, 64, 32),
+    (128, 64, 64),
+    (128, 128, 32),
+    (128, 128, 64),
+    (256, 128, 32),
+    (256, 128, 64),
+    (64, 128, 64),
+    (128, 256, 32),
+];
+
+/// One optimization move (also the MANTIS hypothesis vocabulary, §4.2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OptMove {
+    /// Switch to tile `TILES[i]`.
+    Tile(usize),
+    /// Cast to FP16 tensor-core math on-chip (I/O stays FP32).
+    UseFp16,
+    /// Cast to BF16.
+    UseBf16,
+    /// Fuse the full op graph (epilogues + neighbours) into one kernel.
+    FuseAll,
+    /// Persistent tile scheduler.
+    SchedulerPersistent,
+    /// Stream-K scheduler.
+    SchedulerStreamK,
+    /// Deepen the async pipeline.
+    MoreStages,
+    /// Rewrite for code quality (raw path: vectorization, smem use, …).
+    ImproveCode,
+}
+
+pub const ALL_MOVE_KINDS: usize = 8;
+
+/// Enumerate the plausible moves from a config.
+pub fn moves_from(cfg: &CandidateConfig) -> Vec<OptMove> {
+    let mut v = Vec::with_capacity(16);
+    for i in 0..TILES.len() {
+        if TILES[i] != cfg.tile {
+            v.push(OptMove::Tile(i));
+        }
+    }
+    if cfg.compute_dtype != dsl::DType::Fp16 {
+        v.push(OptMove::UseFp16);
+    }
+    if cfg.compute_dtype != dsl::DType::Bf16 {
+        v.push(OptMove::UseBf16);
+    }
+    if cfg.fusion_coverage < 1.0 || !cfg.fused_epilogue {
+        v.push(OptMove::FuseAll);
+    }
+    if cfg.scheduler != SchedulerKind::Persistent {
+        v.push(OptMove::SchedulerPersistent);
+    }
+    if cfg.scheduler != SchedulerKind::StreamK {
+        v.push(OptMove::SchedulerStreamK);
+    }
+    if cfg.stages < 4 {
+        v.push(OptMove::MoreStages);
+    }
+    if cfg.quality < 0.95 {
+        v.push(OptMove::ImproveCode);
+    }
+    v
+}
+
+/// Apply a move to a config. `quality_gain` is how much an ImproveCode
+/// rewrite recovers (tier-dependent).
+pub fn apply_move(cfg: &CandidateConfig, mv: OptMove, quality_gain: f64) -> CandidateConfig {
+    let mut c = cfg.clone();
+    match mv {
+        OptMove::Tile(i) => c.tile = TILES[i],
+        OptMove::UseFp16 => c.compute_dtype = dsl::DType::Fp16,
+        OptMove::UseBf16 => c.compute_dtype = dsl::DType::Bf16,
+        OptMove::FuseAll => {
+            c.fusion_coverage = 1.0;
+            c.fused_epilogue = true;
+        }
+        OptMove::SchedulerPersistent => c.scheduler = SchedulerKind::Persistent,
+        OptMove::SchedulerStreamK => c.scheduler = SchedulerKind::StreamK,
+        OptMove::MoreStages => c.stages = (c.stages + 1).min(4),
+        OptMove::ImproveCode => c.quality = (c.quality + quality_gain).min(0.95),
+    }
+    c
+}
+
+/// Is a move relevant to the analyzed bottleneck? SOL steering filters the
+/// nomination pool with this (paper: "nominate hypotheses that target the
+/// dominant performance gaps").
+pub fn targets_bottleneck(mv: OptMove, b: Bottleneck) -> bool {
+    match b {
+        Bottleneck::Compute => matches!(
+            mv,
+            OptMove::UseFp16
+                | OptMove::UseBf16
+                | OptMove::Tile(_)
+                | OptMove::MoreStages
+                | OptMove::ImproveCode
+                | OptMove::FuseAll
+                | OptMove::SchedulerPersistent
+                | OptMove::SchedulerStreamK
+        ),
+        Bottleneck::Memory => matches!(
+            mv,
+            OptMove::FuseAll | OptMove::Tile(_) | OptMove::ImproveCode | OptMove::MoreStages
+        ),
+    }
+}
+
+/// Select a move. `steering` carries the SOL analysis when the controller
+/// is SOL-guided; it (a) filters moves to the bottleneck and (b) shrinks
+/// estimate noise, modelling the structured Analyze→Nominate phases.
+pub fn select_move(
+    model: &PerfModel,
+    problem: &Problem,
+    cfg: &CandidateConfig,
+    tier: &TierParams,
+    steering: Option<&SolAnalysis>,
+    quality_gain: f64,
+    rng: &mut Pcg32,
+) -> Option<(OptMove, f64)> {
+    let mut pool = moves_from(cfg);
+    if pool.is_empty() {
+        return None;
+    }
+    if let Some(sol) = steering {
+        let filtered: Vec<OptMove> = pool
+            .iter()
+            .copied()
+            .filter(|m| targets_bottleneck(*m, sol.bottleneck))
+            .collect();
+        if !filtered.is_empty() {
+            pool = filtered;
+        }
+    }
+    let t_now = model.candidate_ms(problem, cfg);
+    let sigma = tier.estimate_sigma * if steering.is_some() { 0.4 } else { 1.5 };
+    // The model sometimes doesn't reason at all and picks randomly.
+    let reasoned = rng.chance(tier.move_quality + if steering.is_some() { 0.25 } else { 0.0 });
+    if !reasoned {
+        let mv = *rng.choice(&pool);
+        let est = 1.0;
+        return Some((mv, est));
+    }
+    let mut best: Option<(OptMove, f64, f64)> = None; // (move, noisy estimate, bias)
+    for &mv in &pool {
+        let cand = apply_move(cfg, mv, quality_gain);
+        let t_new = model.candidate_ms(problem, &cand);
+        let true_speedup = t_now / t_new;
+        let bias = match mv {
+            OptMove::UseFp16 | OptMove::UseBf16 => tier.fp16_move_bias,
+            _ => 1.0,
+        };
+        let noisy = true_speedup * rng.lognormal_noise(sigma) * bias;
+        if best.as_ref().map(|(_, b, _)| noisy > *b).unwrap_or(true) {
+            best = Some((mv, noisy, bias));
+        }
+    }
+    best.map(|(mv, est, _)| (mv, est))
+}
+
+// ---------------------------------------------------------------------------
+// µCUTLASS source generation (with tier-dependent validity mistakes)
+// ---------------------------------------------------------------------------
+
+/// Validity mistakes weaker models make; each is caught by the *real*
+/// validator, exercising the paper's static-rejection path.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DslMistake {
+    /// `sm_90` instead of `sm_90a` (SM90 constraint 1).
+    Sm90NotA,
+    /// `.with_tile()` on SM90+ (constraint 2).
+    WithTileOnSm90,
+    /// fp16 with alignment 4 — TMA violation (constraint 3).
+    BadAlignment,
+    /// tma_cooperative without explicit stages (constraint 6).
+    CoopNoStages,
+    /// Tile not MMA-atom aligned.
+    MisalignedTile,
+}
+
+pub const DSL_MISTAKES: [DslMistake; 5] = [
+    DslMistake::Sm90NotA,
+    DslMistake::WithTileOnSm90,
+    DslMistake::BadAlignment,
+    DslMistake::CoopNoStages,
+    DslMistake::MisalignedTile,
+];
+
+/// Epilogue chain the DSL program should carry for this problem, derived
+/// from the trailing elementwise structure of the op graph.
+fn epilogue_for(problem: &Problem) -> &'static str {
+    let n = problem.name;
+    if n.contains("bias_relu") {
+        " >> bias() >> relu()"
+    } else if n.contains("gelu") {
+        " >> scale(0.5) >> gelu()"
+    } else if n.contains("silu") || n.contains("swish") || n.contains("swiglu") {
+        " >> silu() >> scale(1.5)"
+    } else if n.contains("sigmoid") {
+        " >> sigmoid()"
+    } else if n.contains("mish") {
+        " >> mish()"
+    } else if n.contains("clamp") {
+        " >> silu() >> clamp(lo=0.0, hi=6.0)"
+    } else if matches!(problem.ops.last(), Some(Op::Elementwise { .. })) {
+        " >> relu()"
+    } else {
+        ""
+    }
+}
+
+/// Generate µCUTLASS source realizing `cfg` for `problem`, optionally with
+/// an injected validity mistake.
+pub fn dsl_source(
+    problem: &Problem,
+    cfg: &CandidateConfig,
+    mistake: Option<DslMistake>,
+) -> String {
+    let (tm, tn, tk) = cfg.tile;
+    let (tm, tn) = match mistake {
+        Some(DslMistake::MisalignedTile) => (tm + 4, tn),
+        _ => (tm, tn),
+    };
+    let dt = match cfg.compute_dtype {
+        dsl::DType::Fp16 => "fp16",
+        dsl::DType::Bf16 => "bf16",
+        _ => "fp32",
+    };
+    let out_dt = "fp32"; // I/O stays FP32 per KernelBench
+    let arch = match mistake {
+        Some(DslMistake::Sm90NotA) => "sm_90",
+        _ => "sm_90a",
+    };
+    let align = match (cfg.compute_dtype, mistake) {
+        (_, Some(DslMistake::BadAlignment)) => 4,
+        (dsl::DType::Fp16 | dsl::DType::Bf16, _) => 8,
+        _ => 4,
+    };
+    // fp16 in / fp32 out: C alignment must still satisfy TMA for fp32 (>=4)
+    let c_align = 4;
+    let tile_call = match mistake {
+        Some(DslMistake::WithTileOnSm90) => "with_tile",
+        _ => "with_threadblockshape",
+    };
+    let sched = match cfg.scheduler {
+        SchedulerKind::Persistent => "tile=persistent, kernel=tma, epilogue=auto",
+        SchedulerKind::StreamK => "tile=stream_k, kernel=tma, epilogue=auto",
+        SchedulerKind::Default => "kernel=tma_cooperative, epilogue=auto",
+    };
+    let stages = match mistake {
+        Some(DslMistake::CoopNoStages) if cfg.scheduler == SchedulerKind::Default => String::new(),
+        _ => format!(".with_stages({})", cfg.stages.clamp(2, 4)),
+    };
+    let epi = if cfg.fused_epilogue { epilogue_for(problem) } else { "" };
+
+    let op_call = match problem.dominant_op() {
+        Op::BatchedGemm { .. } | Op::Attention { .. } => "batched_gemm()",
+        Op::Conv1d { kw, groups, .. } => {
+            return format!(
+                "conv1d_fprop(kernel_w={kw}).with_dtype(input={dt}, acc=fp32, output={out_dt})\n\
+                 .with_arch(sm_89).with_tile(m={tm}, n={tn}, k={tk})\n\
+                 .with_alignment(A={align}, B={align}, C={c_align}).with_stages({}){}",
+                cfg.stages.clamp(2, 4),
+                if *groups > 1 { "\n# depthwise variant routed via group lowering" } else { "" },
+            );
+        }
+        _ => "gemm()",
+    };
+    format!(
+        "{op_call}.with_dtype(input={dt}, acc=fp32, output={out_dt})\n\
+         .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor).with_arch({arch})\n\
+         .{tile_call}(m={tm}, n={tn}, k={tk})\n\
+         .with_alignment(A={align}, B={align}, C={c_align}){stages}\n\
+         .with_scheduler({sched}){epi}"
+    )
+}
+
+/// Run the generate→validate→repair loop for one DSL attempt. Returns the
+/// accepted source (and tokens burnt on repairs), or None if the model
+/// failed to produce a valid program within `max_tries` (→ DslRejected;
+/// still no tool action spent).
+pub fn generate_valid_dsl(
+    problem: &Problem,
+    cfg: &CandidateConfig,
+    tier: &TierParams,
+    rng: &mut Pcg32,
+    max_tries: u32,
+) -> (Option<String>, u32) {
+    let mut tries = 0;
+    loop {
+        tries += 1;
+        let mistake = if rng.chance(tier.dsl_invalid_rate / tries as f64) {
+            Some(*rng.choice(&DSL_MISTAKES))
+        } else {
+            None
+        };
+        let src = dsl_source(problem, cfg, mistake);
+        // codegen-free validation: the repair loop only needs the verdict
+        match dsl::validate_source(&src) {
+            Ok(_) => return (Some(src), tries),
+            Err(_) if tries < max_tries => continue, // repair from the hint
+            Err(_) => return (None, tries),
+        }
+    }
+}
+
+/// Is µCUTLASS applicable to this problem? The DSL covers GEMM/conv
+/// families (paper Table 1a); pure elementwise/softmax/scan problems fall
+/// back to raw CUDA in every variant.
+pub fn dsl_applicable(problem: &Problem) -> bool {
+    problem.is_matmul_like()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernelbench::{find, suite};
+    use crate::sol::{analyze, H100_SXM};
+
+    #[test]
+    fn clean_dsl_source_compiles() {
+        let s = suite();
+        for key in ["L1-1", "L2-76", "L2-86", "L1-3", "L1-67", "L3-43"] {
+            let p = &s[find(&s, key).unwrap()];
+            let cfg = CandidateConfig::library((128, 128, 64), dsl::DType::Fp16);
+            let src = dsl_source(p, &cfg, None);
+            dsl::compile(&src).unwrap_or_else(|e| panic!("{key}: {e}\n{src}"));
+        }
+    }
+
+    #[test]
+    fn every_mistake_is_caught_statically() {
+        let s = suite();
+        let p = &s[find(&s, "L1-1").unwrap()];
+        let cfg = CandidateConfig::library((128, 128, 64), dsl::DType::Fp16);
+        for m in DSL_MISTAKES {
+            let src = dsl_source(p, &cfg, Some(m));
+            let err = dsl::compile(&src).expect_err(&format!("{m:?} should be rejected"));
+            assert!(err.is_static(), "{m:?} must be a static rejection");
+        }
+    }
+
+    #[test]
+    fn generate_valid_dsl_repairs() {
+        let s = suite();
+        let p = &s[find(&s, "L1-1").unwrap()];
+        let cfg = CandidateConfig::library((128, 128, 64), dsl::DType::Fp16);
+        let mut rng = Pcg32::new(5, 1);
+        let mut accepted = 0;
+        for _ in 0..100 {
+            let (src, _tries) = generate_valid_dsl(p, &cfg, &crate::agent::tiers::MINI, &mut rng, 3);
+            if let Some(src) = src {
+                assert!(dsl::compile(&src).is_ok());
+                accepted += 1;
+            }
+        }
+        assert!(accepted >= 95, "repair loop should almost always converge, got {accepted}");
+    }
+
+    #[test]
+    fn moves_enumerate_and_apply() {
+        let cfg = CandidateConfig::library((64, 64, 32), dsl::DType::Fp32);
+        let pool = moves_from(&cfg);
+        assert!(pool.contains(&OptMove::UseFp16));
+        let c2 = apply_move(&cfg, OptMove::UseFp16, 0.1);
+        assert_eq!(c2.compute_dtype, dsl::DType::Fp16);
+        let c3 = apply_move(&cfg, OptMove::Tile(5), 0.1);
+        assert_eq!(c3.tile, TILES[5]);
+    }
+
+    #[test]
+    fn steered_selection_finds_fp16_on_compute_bound() {
+        let s = suite();
+        let p = &s[find(&s, "L1-1").unwrap()]; // compute-bound GEMM
+        let sol = analyze(p, &H100_SXM);
+        let model = PerfModel::new(H100_SXM.clone());
+        let cfg = CandidateConfig::library((128, 128, 64), dsl::DType::Fp32);
+        let mut hits = 0;
+        let mut rng = Pcg32::new(11, 1);
+        for _ in 0..50 {
+            if let Some((mv, _)) = select_move(
+                &model, p, &cfg, &crate::agent::tiers::MID, Some(&sol), 0.1, &mut rng,
+            ) {
+                if matches!(mv, OptMove::UseFp16 | OptMove::UseBf16) {
+                    hits += 1;
+                }
+            }
+        }
+        assert!(hits > 30, "steered mid-tier should usually pick reduced precision, got {hits}/50");
+    }
+
+    #[test]
+    fn unsteered_mini_is_noisier() {
+        let s = suite();
+        let p = &s[find(&s, "L1-1").unwrap()];
+        let model = PerfModel::new(H100_SXM.clone());
+        let cfg = CandidateConfig::library((128, 128, 64), dsl::DType::Fp32);
+        let mut hits = 0;
+        let mut rng = Pcg32::new(13, 1);
+        for _ in 0..60 {
+            if let Some((mv, _)) =
+                select_move(&model, p, &cfg, &crate::agent::tiers::MINI, None, 0.1, &mut rng)
+            {
+                if matches!(mv, OptMove::UseFp16 | OptMove::UseBf16) {
+                    hits += 1;
+                }
+            }
+        }
+        assert!(hits < 45, "unsteered mini should miss the best move often, got {hits}/60");
+    }
+
+    #[test]
+    fn dsl_applicability() {
+        let s = suite();
+        assert!(dsl_applicable(&s[find(&s, "L1-1").unwrap()]));
+        assert!(!dsl_applicable(&s[find(&s, "L1-23").unwrap()])); // softmax
+        assert!(!dsl_applicable(&s[find(&s, "L1-89").unwrap()])); // cumsum
+    }
+}

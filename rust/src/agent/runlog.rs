@@ -1,0 +1,202 @@
+//! Run logs: everything downstream analysis needs. The scheduler replays
+//! them offline (paper §5.7), the integrity pipeline labels them (§5.8),
+//! and the metrics module turns them into Fast-p curves (§5.6).
+
+use crate::util::json::Json;
+
+use super::attempt::{AttemptOutcome, AttemptRecord};
+
+/// All attempts for one problem under one variant.
+#[derive(Debug, Clone)]
+pub struct ProblemRun {
+    pub problem_idx: usize,
+    /// Measured PyTorch baseline (ms).
+    pub t_ref_ms: f64,
+    /// TF32 SOL bound (ms).
+    pub t_sol_ms: f64,
+    /// FP16-augmented SOL bound (ms) — scheduling/integrity ceiling.
+    pub t_sol_fp16_ms: f64,
+    pub attempts: Vec<AttemptRecord>,
+}
+
+impl ProblemRun {
+    /// Best measured time over all correct attempts (any solution kind —
+    /// integrity filtering is applied offline, as in the paper).
+    pub fn best_time_ms(&self) -> Option<f64> {
+        self.attempts
+            .iter()
+            .filter_map(|a| a.outcome.time_ms())
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Best time over genuine custom kernels only (excludes gaming and
+    /// PyTorch-only) — what integrity filtering converges to when detectors
+    /// are perfect.
+    pub fn best_honest_time_ms(&self) -> Option<f64> {
+        self.attempts
+            .iter()
+            .filter(|a| {
+                matches!(
+                    a.kind,
+                    super::attempt::SolutionKind::DslKernel
+                        | super::attempt::SolutionKind::RawCuda
+                )
+            })
+            .filter_map(|a| a.outcome.time_ms())
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Best-so-far time after the first `n` attempts.
+    pub fn best_time_after(&self, n: usize) -> Option<f64> {
+        self.attempts
+            .iter()
+            .take(n)
+            .filter_map(|a| a.outcome.time_ms())
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Speedup over PyTorch (unfiltered); None when never solved.
+    pub fn speedup(&self) -> Option<f64> {
+        self.best_time_ms().map(|t| self.t_ref_ms / t)
+    }
+
+    /// Total LLM tokens spent on this problem.
+    pub fn total_tokens(&self) -> u64 {
+        self.attempts.iter().map(|a| a.tokens).sum()
+    }
+
+    /// Total tool-action time (s).
+    pub fn total_tool_time_s(&self) -> f64 {
+        self.attempts.iter().map(|a| a.tool_time_s).sum()
+    }
+
+    /// Number of attempts that reached the toolchain (non-DslRejected).
+    pub fn tool_actions(&self) -> usize {
+        self.attempts
+            .iter()
+            .filter(|a| !matches!(a.outcome, AttemptOutcome::DslRejected))
+            .count()
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("problem_idx", self.problem_idx)
+            .set("t_ref_ms", self.t_ref_ms)
+            .set("t_sol_ms", self.t_sol_ms)
+            .set("t_sol_fp16_ms", self.t_sol_fp16_ms)
+            .set(
+                "attempts",
+                Json::Arr(self.attempts.iter().map(|a| a.to_json()).collect()),
+            );
+        o
+    }
+}
+
+/// A complete run: one variant over the whole suite.
+#[derive(Debug, Clone)]
+pub struct RunLog {
+    /// Variant label, e.g. "µCUTLASS + SOL [gpt-5]".
+    pub variant: String,
+    pub tier_name: String,
+    pub price_per_mtok: f64,
+    pub runs: Vec<ProblemRun>,
+}
+
+impl RunLog {
+    /// Unfiltered speedups (1.0 fallback for unsolved — the PyTorch seed
+    /// remains in cuda_model.cu).
+    pub fn speedups(&self) -> Vec<f64> {
+        self.runs.iter().map(|r| r.speedup().unwrap_or(1.0)).collect()
+    }
+
+    pub fn total_tokens(&self) -> u64 {
+        self.runs.iter().map(|r| r.total_tokens()).sum()
+    }
+
+    /// Total dollar cost at this tier's input-token price.
+    pub fn dollar_cost(&self) -> f64 {
+        self.total_tokens() as f64 / 1e6 * self.price_per_mtok
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("variant", self.variant.clone())
+            .set("tier", self.tier_name.clone())
+            .set("price_per_mtok", self.price_per_mtok)
+            .set("runs", Json::Arr(self.runs.iter().map(|r| r.to_json()).collect()));
+        o
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::attempt::{AttemptOutcome, AttemptRecord, SolutionKind};
+
+    fn rec(attempt: u32, outcome: AttemptOutcome, kind: SolutionKind) -> AttemptRecord {
+        AttemptRecord {
+            problem_idx: 0,
+            attempt,
+            outcome,
+            kind,
+            minor_issue: None,
+            inherited: false,
+            tokens: 1000,
+            tool_time_s: 60.0,
+            config: None,
+            kernel_names: vec![],
+            dsl_source: None,
+        }
+    }
+
+    #[test]
+    fn best_time_tracks_minimum() {
+        let run = ProblemRun {
+            problem_idx: 0,
+            t_ref_ms: 10.0,
+            t_sol_ms: 1.0,
+            t_sol_fp16_ms: 0.5,
+            attempts: vec![
+                rec(0, AttemptOutcome::Incorrect, SolutionKind::RawCuda),
+                rec(1, AttemptOutcome::Correct { time_ms: 5.0 }, SolutionKind::RawCuda),
+                rec(2, AttemptOutcome::Correct { time_ms: 3.0 }, SolutionKind::DslKernel),
+            ],
+        };
+        assert_eq!(run.best_time_ms(), Some(3.0));
+        assert_eq!(run.best_time_after(2), Some(5.0));
+        assert_eq!(run.best_time_after(1), None);
+        assert!((run.speedup().unwrap() - 10.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn honest_best_excludes_gaming() {
+        let run = ProblemRun {
+            problem_idx: 0,
+            t_ref_ms: 10.0,
+            t_sol_ms: 1.0,
+            t_sol_fp16_ms: 0.5,
+            attempts: vec![
+                rec(0, AttemptOutcome::Correct { time_ms: 0.1 },
+                    SolutionKind::Gaming(super::super::attempt::GamingType::ConstantOutput)),
+                rec(1, AttemptOutcome::Correct { time_ms: 4.0 }, SolutionKind::RawCuda),
+            ],
+        };
+        assert_eq!(run.best_time_ms(), Some(0.1));
+        assert_eq!(run.best_honest_time_ms(), Some(4.0));
+    }
+
+    #[test]
+    fn tool_actions_exclude_dsl_rejections() {
+        let run = ProblemRun {
+            problem_idx: 0,
+            t_ref_ms: 10.0,
+            t_sol_ms: 1.0,
+            t_sol_fp16_ms: 0.5,
+            attempts: vec![
+                rec(0, AttemptOutcome::DslRejected, SolutionKind::DslKernel),
+                rec(1, AttemptOutcome::CompileError, SolutionKind::RawCuda),
+            ],
+        };
+        assert_eq!(run.tool_actions(), 1);
+    }
+}

@@ -1,0 +1,194 @@
+//! Model-tier behaviour parameters (paper §5.2 "Models").
+//!
+//! The three tiers mirror GPT-5-mini / GPT-5 / GPT-5.2 and are calibrated
+//! against the paper's own per-tier statistics: MI solve rates (52/57/59 of
+//! 59), raw-CUDA quality (0.40× / 0.86× / 2.04× geomean), gaming and
+//! PyTorch-only counts (Figures 10–11), and token pricing ($0.25 / $1.25 /
+//! $1.75 per M input tokens). The parameters are behaviour *distributions*;
+//! the system under test (DSL validation, SOL steering, scheduling,
+//! integrity) acts on samples from them.
+
+/// Capability tier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ModelTier {
+    /// GPT-5-mini analogue: cheap, weak raw-CUDA, benefits most from tooling.
+    Mini,
+    /// GPT-5 analogue: mid tier.
+    Mid,
+    /// GPT-5.2 analogue: strongest; can self-direct once given the DSL.
+    Max,
+}
+
+impl ModelTier {
+    pub const ALL: [ModelTier; 3] = [ModelTier::Mini, ModelTier::Mid, ModelTier::Max];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelTier::Mini => "gpt-5-mini",
+            ModelTier::Mid => "gpt-5",
+            ModelTier::Max => "gpt-5.2",
+        }
+    }
+
+    pub fn params(&self) -> &'static TierParams {
+        match self {
+            ModelTier::Mini => &MINI,
+            ModelTier::Mid => &MID,
+            ModelTier::Max => &MAX,
+        }
+    }
+}
+
+/// Behaviour distribution parameters for one tier.
+#[derive(Debug, Clone)]
+pub struct TierParams {
+    pub name: &'static str,
+    /// $ per million input tokens (paper §5.2).
+    pub price_per_mtok: f64,
+
+    // ---- raw CUDA/CUTLASS path -----------------------------------------
+    /// P(candidate compiles) when emitting raw CUDA.
+    pub raw_compile_rate: f64,
+    /// P(passes correctness | compiles).
+    pub raw_correct_rate: f64,
+    /// Median implementation quality of a correct raw kernel, in (0, 1]
+    /// (1.0 = library-grade). Sampled lognormally around this.
+    pub raw_quality_median: f64,
+    /// Lognormal sigma of raw quality.
+    pub raw_quality_sigma: f64,
+    /// P(a correct raw kernel exploits FP16/BF16 tensor cores).
+    pub raw_fp16_rate: f64,
+    /// P(a correct raw kernel fully fuses the op graph).
+    pub raw_fuse_rate: f64,
+
+    // ---- µCUTLASS path ---------------------------------------------------
+    /// P(one DSL generation has a validity bug). Static validation catches
+    /// it at near-zero cost and the model repairs from the error hint.
+    pub dsl_invalid_rate: f64,
+    /// P(the generated kernel is integrated correctly | valid DSL).
+    pub dsl_integrate_rate: f64,
+
+    // ---- optimization search ----------------------------------------------
+    /// Probability the un-steered model picks a high-impact move (vs a
+    /// random plausible one).
+    pub move_quality: f64,
+    /// Relative propensity to try reduced-precision math.
+    pub fp16_move_bias: f64,
+    /// Noise sigma on the model's own speedup estimates (drives Triage).
+    pub estimate_sigma: f64,
+
+    // ---- failure modes ---------------------------------------------------------
+    /// Base per-attempt probability of discovering a gaming exploit.
+    pub gaming_rate: f64,
+    /// Per-attempt probability of falling back to PyTorch library
+    /// composition after repeated custom-kernel failures.
+    pub pytorch_fallback_rate: f64,
+    /// P(a correct genuine kernel carries a minor issue).
+    pub minor_issue_rate: f64,
+
+    // ---- cost -------------------------------------------------------------------
+    /// Mean LLM tokens per attempt.
+    pub tokens_mean: f64,
+    /// Lognormal sigma of tokens per attempt.
+    pub tokens_sigma: f64,
+}
+
+/// GPT-5-mini analogue.
+pub static MINI: TierParams = TierParams {
+    name: "gpt-5-mini",
+    price_per_mtok: 0.25,
+    raw_compile_rate: 0.80,
+    raw_correct_rate: 0.40,
+    raw_quality_median: 0.22,
+    raw_quality_sigma: 0.55,
+    raw_fp16_rate: 0.04,
+    raw_fuse_rate: 0.35,
+    dsl_invalid_rate: 0.35,
+    dsl_integrate_rate: 0.80,
+    move_quality: 0.30,
+    fp16_move_bias: 0.4,
+    estimate_sigma: 0.8,
+    gaming_rate: 0.010,
+    pytorch_fallback_rate: 0.12,
+    minor_issue_rate: 0.25,
+    tokens_mean: 26_000.0,
+    tokens_sigma: 0.35,
+};
+
+/// GPT-5 analogue.
+pub static MID: TierParams = TierParams {
+    name: "gpt-5",
+    price_per_mtok: 1.25,
+    raw_compile_rate: 0.90,
+    raw_correct_rate: 0.55,
+    raw_quality_median: 0.38,
+    raw_quality_sigma: 0.45,
+    raw_fp16_rate: 0.12,
+    raw_fuse_rate: 0.55,
+    dsl_invalid_rate: 0.18,
+    dsl_integrate_rate: 0.92,
+    move_quality: 0.50,
+    fp16_move_bias: 0.8,
+    estimate_sigma: 0.5,
+    gaming_rate: 0.015,
+    pytorch_fallback_rate: 0.07,
+    minor_issue_rate: 0.20,
+    tokens_mean: 34_000.0,
+    tokens_sigma: 0.35,
+};
+
+/// GPT-5.2 analogue.
+pub static MAX: TierParams = TierParams {
+    name: "gpt-5.2",
+    price_per_mtok: 1.75,
+    raw_compile_rate: 0.96,
+    raw_correct_rate: 0.75,
+    raw_quality_median: 0.70,
+    raw_quality_sigma: 0.35,
+    raw_fp16_rate: 0.55,
+    raw_fuse_rate: 0.85,
+    dsl_invalid_rate: 0.08,
+    dsl_integrate_rate: 0.97,
+    move_quality: 0.75,
+    fp16_move_bias: 1.2,
+    estimate_sigma: 0.25,
+    // the paper: "more capable models exhibit higher gaming rates"
+    gaming_rate: 0.045,
+    pytorch_fallback_rate: 0.04,
+    minor_issue_rate: 0.15,
+    tokens_mean: 42_000.0,
+    tokens_sigma: 0.35,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tiers_are_monotone_in_capability() {
+        let (a, b, c) = (&MINI, &MID, &MAX);
+        assert!(a.raw_quality_median < b.raw_quality_median);
+        assert!(b.raw_quality_median < c.raw_quality_median);
+        assert!(a.move_quality < b.move_quality && b.move_quality < c.move_quality);
+        assert!(a.dsl_invalid_rate > b.dsl_invalid_rate);
+        assert!(b.dsl_invalid_rate > c.dsl_invalid_rate);
+        // and the paper's counter-intuitive one: stronger models game more
+        assert!(c.gaming_rate > a.gaming_rate);
+    }
+
+    #[test]
+    fn pricing_matches_paper() {
+        assert_eq!(MINI.price_per_mtok, 0.25);
+        assert_eq!(MID.price_per_mtok, 1.25);
+        assert_eq!(MAX.price_per_mtok, 1.75);
+        // "GPT-5 and GPT-5.2 approximately 5× and 7× more expensive"
+        assert!((MID.price_per_mtok / MINI.price_per_mtok - 5.0).abs() < 1e-9);
+        assert!((MAX.price_per_mtok / MINI.price_per_mtok - 7.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tier_lookup() {
+        assert_eq!(ModelTier::Mini.params().name, "gpt-5-mini");
+        assert_eq!(ModelTier::Max.name(), "gpt-5.2");
+    }
+}

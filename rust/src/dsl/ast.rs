@@ -1,0 +1,106 @@
+//! AST for µCUTLASS programs — the direct image of the Appendix A.1
+//! grammar, before lowering to the typed configuration IR.
+
+/// Top level: a single kernel or a multi-stage `pipeline(...)`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Program {
+    Kernel(KernelSpec),
+    Pipeline(Vec<Stage>),
+}
+
+/// One pipeline stage: a kernel stage or a transform (transpose) stage.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Stage {
+    Kernel(KernelSpec),
+    Transpose(TransposeSpec),
+}
+
+/// `operation , { configuration } , { epilogue }`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelSpec {
+    pub op_name: String,
+    pub op_args: Vec<Arg>,
+    pub configs: Vec<ConfigCall>,
+    pub epilogue: Vec<EpilogueCall>,
+    pub offset: usize,
+}
+
+/// A `.with_*(...)` configuration call.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConfigCall {
+    pub name: String,
+    pub args: Vec<Arg>,
+    pub offset: usize,
+}
+
+/// A `>> op(...)` epilogue call.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EpilogueCall {
+    pub name: String,
+    pub args: Vec<Arg>,
+    pub offset: usize,
+}
+
+/// `transpose(target, FROM, TO[, from_dtype, to_dtype])` — layout transform
+/// with optional fused dtype conversion (essentially free, per the paper).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransposeSpec {
+    pub target: String,
+    pub from_layout: String,
+    pub to_layout: String,
+    pub from_dtype: Option<String>,
+    pub to_dtype: Option<String>,
+    pub offset: usize,
+}
+
+/// Argument value: unquoted identifier, number, quoted string, or a
+/// `{ 'k': 'v', ... }` dict (only used by `custom(..., inputs={...})`).
+#[derive(Debug, Clone, PartialEq)]
+pub enum ArgValue {
+    Ident(String),
+    Int(u64),
+    Float(f64),
+    Str(String),
+    Dict(Vec<(String, String)>),
+}
+
+impl ArgValue {
+    pub fn describe(&self) -> String {
+        match self {
+            ArgValue::Ident(s) => format!("`{s}`"),
+            ArgValue::Int(v) => format!("{v}"),
+            ArgValue::Float(v) => format!("{v}"),
+            ArgValue::Str(s) => format!("'{s}'"),
+            ArgValue::Dict(_) => "{...}".into(),
+        }
+    }
+}
+
+/// A (possibly named) call argument.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Arg {
+    pub name: Option<String>,
+    pub value: ArgValue,
+    pub offset: usize,
+}
+
+impl KernelSpec {
+    /// Find a configuration call by name (e.g. "with_dtype").
+    pub fn config(&self, name: &str) -> Option<&ConfigCall> {
+        self.configs.iter().find(|c| c.name == name)
+    }
+}
+
+/// Helpers for pulling named/positional arguments out of a call.
+pub fn find_arg<'a>(args: &'a [Arg], name: &str, position: usize) -> Option<&'a Arg> {
+    args.iter()
+        .find(|a| a.name.as_deref() == Some(name))
+        .or_else(|| {
+            let a = args.get(position)?;
+            if a.name.is_none() {
+                Some(a)
+            } else {
+                None
+            }
+        })
+}

@@ -1,0 +1,101 @@
+//! Explanatory compile errors. The paper (§3, "Compilation") stresses that
+//! when validation fails the compiler should explain *what went wrong and
+//! why*, so the model can fix the specification before triggering an
+//! expensive compile/run/profile attempt. Every error carries a hint.
+
+use std::fmt;
+
+/// Which compiler stage rejected the program.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DslErrorKind {
+    /// Lexical error (bad character, unterminated string).
+    Lex,
+    /// Syntactic error (grammar violation).
+    Parse,
+    /// Lowering error (unknown op/feature/enum value).
+    Lower,
+    /// Static constraint violation (arch gating, alignment, SMEM budget…).
+    Constraint,
+    /// Dimension-dependent violation found when binding to a problem.
+    Bind,
+}
+
+impl DslErrorKind {
+    pub fn stage(&self) -> &'static str {
+        match self {
+            DslErrorKind::Lex => "lex",
+            DslErrorKind::Parse => "parse",
+            DslErrorKind::Lower => "lower",
+            DslErrorKind::Constraint => "validate",
+            DslErrorKind::Bind => "bind",
+        }
+    }
+}
+
+/// A µCUTLASS compilation error: stage, location, message, and a hint that
+/// explains the rule (mirroring the paper's "we try to explain what went
+/// wrong and why").
+#[derive(Debug, Clone, PartialEq)]
+pub struct DslError {
+    pub kind: DslErrorKind,
+    pub offset: Option<usize>,
+    pub message: String,
+    pub hint: String,
+}
+
+impl DslError {
+    pub fn new(kind: DslErrorKind, message: &str, hint: &str) -> Self {
+        DslError { kind, offset: None, message: message.to_string(), hint: hint.to_string() }
+    }
+
+    pub fn at(kind: DslErrorKind, offset: usize, message: &str, hint: &str) -> Self {
+        DslError {
+            kind,
+            offset: Some(offset),
+            message: message.to_string(),
+            hint: hint.to_string(),
+        }
+    }
+
+    /// True if the program was rejected *before* any backend work — the
+    /// property that saves compile/run/profile cycles (paper §3).
+    pub fn is_static(&self) -> bool {
+        !matches!(self.kind, DslErrorKind::Bind)
+    }
+}
+
+impl fmt::Display for DslError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "µcutlass {} error", self.kind.stage())?;
+        if let Some(off) = self.offset {
+            write!(f, " at offset {off}")?;
+        }
+        write!(f, ": {}", self.message)?;
+        if !self.hint.is_empty() {
+            write!(f, "\n  hint: {}", self.hint)?;
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for DslError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_includes_hint() {
+        let e = DslError::at(DslErrorKind::Constraint, 10, "bad tile", "use with_threadblockshape");
+        let s = e.to_string();
+        assert!(s.contains("validate"));
+        assert!(s.contains("offset 10"));
+        assert!(s.contains("hint: use with_threadblockshape"));
+    }
+
+    #[test]
+    fn static_vs_bind() {
+        assert!(DslError::new(DslErrorKind::Constraint, "", "").is_static());
+        assert!(!DslError::new(DslErrorKind::Bind, "", "").is_static());
+    }
+}

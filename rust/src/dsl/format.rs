@@ -1,0 +1,304 @@
+//! Pretty-printer: render a lowered `ProgramIr` back to canonical µCUTLASS
+//! source. Used for traceability (run logs store canonicalized programs)
+//! and tested by the parse→lower→print→parse→lower roundtrip property.
+
+use std::fmt::Write as _;
+
+use super::ir::*;
+
+/// Render a program back to canonical DSL source.
+pub fn format_program(ir: &ProgramIr) -> String {
+    match ir {
+        ProgramIr::Kernel(k) => format_kernel(k),
+        ProgramIr::Pipeline(p) => {
+            let stages: Vec<String> = p
+                .stages
+                .iter()
+                .map(|s| match s {
+                    StageIr::Kernel(k) => format_kernel(k),
+                    StageIr::Transpose { target, from_layout, to_layout, from_dtype, to_dtype } => {
+                        match (from_dtype, to_dtype) {
+                            (Some(f), Some(t)) => {
+                                format!("transpose({target}, {from_layout}, {to_layout}, {f}, {t})")
+                            }
+                            _ => format!("transpose({target}, {from_layout}, {to_layout})"),
+                        }
+                    }
+                })
+                .collect();
+            format!("pipeline({})", stages.join(", "))
+        }
+    }
+}
+
+fn gemm_layout(l: GemmLayout) -> &'static str {
+    match l {
+        GemmLayout::RowMajor => "RowMajor",
+        GemmLayout::ColumnMajor => "ColumnMajor",
+    }
+}
+
+fn format_kernel(k: &ConfigIr) -> String {
+    let mut s = String::new();
+    match &k.op {
+        Operation::Gemm => s.push_str("gemm()"),
+        Operation::BatchedGemm => s.push_str("batched_gemm()"),
+        Operation::GroupedGemm { expert_count } => {
+            let _ = write!(s, "grouped_gemm(expert_count={expert_count})");
+        }
+        Operation::Conv2dFprop { kh, kw } => {
+            let _ = write!(s, "conv2d_fprop(kernel_h={kh}, kernel_w={kw})");
+        }
+        Operation::Conv2dDgrad { kh, kw } => {
+            let _ = write!(s, "conv2d_dgrad(kernel_h={kh}, kernel_w={kw})");
+        }
+        Operation::Conv2dWgrad { kh, kw } => {
+            let _ = write!(s, "conv2d_wgrad(kernel_h={kh}, kernel_w={kw})");
+        }
+        Operation::Conv1dFprop { kw } => {
+            let _ = write!(s, "conv1d_fprop(kernel_w={kw})");
+        }
+        Operation::DepthwiseConv1d { kw } => {
+            let _ = write!(s, "depthwise_conv1d(kernel_w={kw})");
+        }
+        Operation::GroupConv1d { kw, groups } => {
+            let _ = write!(s, "group_conv1d(kernel_w={kw}, groups={groups})");
+        }
+        Operation::Conv3dFprop { kd, kh, kw } => {
+            let _ = write!(s, "conv3d_fprop(kernel_d={kd}, kernel_h={kh}, kernel_w={kw})");
+        }
+        Operation::Conv3dDgrad { kd, kh, kw } => {
+            let _ = write!(s, "conv3d_dgrad(kernel_d={kd}, kernel_h={kh}, kernel_w={kw})");
+        }
+        Operation::Conv3dWgrad { kd, kh, kw } => {
+            let _ = write!(s, "conv3d_wgrad(kernel_d={kd}, kernel_h={kh}, kernel_w={kw})");
+        }
+        Operation::DepthwiseConv2d { kh, kw } => {
+            let _ = write!(s, "depthwise_conv2d(kernel_h={kh}, kernel_w={kw})");
+        }
+        Operation::GroupConv2d { kh, kw, groups } => {
+            let _ = write!(s, "group_conv2d(kernel_h={kh}, kernel_w={kw}, groups={groups})");
+        }
+        Operation::GroupConv3d { kd, kh, kw, groups } => {
+            let _ = write!(
+                s,
+                "group_conv3d(kernel_d={kd}, kernel_h={kh}, kernel_w={kw}, groups={groups})"
+            );
+        }
+    }
+
+    if let (Some(din), Some(dacc), Some(dout)) = (k.dtype_input, k.dtype_acc, k.dtype_output) {
+        let _ = write!(s, ".with_dtype(input={din}, acc={dacc}, output={dout})");
+    }
+    if let (Some(a), Some(b), Some(c)) = (k.layout_a, k.layout_b, k.layout_c) {
+        let _ = write!(
+            s,
+            ".with_layout(A={}, B={}, C={})",
+            gemm_layout(a),
+            gemm_layout(b),
+            gemm_layout(c)
+        );
+    }
+    if let Some((i, f, o)) = &k.conv_layouts {
+        let _ = write!(s, ".with_layout(input={i}, filter={f}, output={o})");
+    }
+    if let Some(arch) = k.arch {
+        let _ = write!(s, ".with_arch({arch})");
+    }
+    if let Some(t) = k.tile {
+        let call = match k.tile_spelling {
+            Some(TileSpelling::WithThreadblockShape) => "with_threadblockshape",
+            _ => "with_tile",
+        };
+        let _ = write!(s, ".{call}(m={}, n={}, k={})", t.m, t.n, t.k);
+    }
+    if let Some(al) = k.alignment {
+        let _ = write!(s, ".with_alignment(A={}, B={}, C={})", al.a, al.b, al.c);
+    }
+    if let Some(st) = k.stages {
+        let _ = write!(s, ".with_stages({st})");
+    }
+    if let Some(c) = k.cluster {
+        let _ = write!(s, ".with_cluster(m={}, n={}, k={})", c.m, c.n, c.k);
+    }
+    if let Some(sw) = k.swizzle {
+        let name = match sw {
+            Swizzle::Identity1 => "Identity1",
+            Swizzle::Identity2 => "Identity2",
+            Swizzle::Identity4 => "Identity4",
+            Swizzle::Identity8 => "Identity8",
+            Swizzle::StreamK => "StreamK",
+        };
+        let _ = write!(s, ".with_swizzle(pattern={name})");
+    }
+    if let Some(sch) = k.scheduler {
+        let tile = match sch.tile {
+            TileScheduler::Default => "default",
+            TileScheduler::Persistent => "persistent",
+            TileScheduler::StreamK => "stream_k",
+        };
+        let kernel = match sch.kernel {
+            KernelSchedule::Auto => "auto",
+            KernelSchedule::CpAsync => "cp_async",
+            KernelSchedule::CpAsyncCooperative => "cp_async_cooperative",
+            KernelSchedule::Tma => "tma",
+            KernelSchedule::TmaCooperative => "tma_cooperative",
+            KernelSchedule::TmaPingpong => "tma_pingpong",
+        };
+        let epi = match sch.epilogue {
+            EpilogueSchedule::Auto => "auto",
+            EpilogueSchedule::Tma => "tma",
+            EpilogueSchedule::TmaCooperative => "tma_cooperative",
+            EpilogueSchedule::NoSmem => "no_smem",
+        };
+        let _ = write!(s, ".with_scheduler(tile={tile}, kernel={kernel}, epilogue={epi})");
+    }
+    if let Some((alpha, beta)) = k.scaling {
+        let _ = write!(s, ".with_scaling(alpha={alpha}, beta={beta})");
+    }
+    if let Some(it) = k.iterator {
+        let name = match it {
+            Iterator_::Analytic => "analytic",
+            Iterator_::Optimized => "optimized",
+            Iterator_::FixedChannels => "fixed_channels",
+            Iterator_::FewChannels => "few_channels",
+            Iterator_::FixedStrideDilation => "fixed_stride_dilation",
+        };
+        let _ = write!(s, ".with_iterator({name})");
+    }
+    if let Some((mode, slices)) = k.split_k {
+        let m = match mode {
+            SplitK::None => "none",
+            SplitK::Serial => "serial",
+            SplitK::Parallel => "parallel",
+        };
+        let _ = write!(s, ".with_split_k(mode={m}, slices={slices})");
+    }
+    if k.operand_swap {
+        s.push_str(".with_operand_swap(true)");
+    }
+    for e in &k.epilogue {
+        s.push_str(" >> ");
+        match e {
+            EpilogueOp::Relu => s.push_str("relu()"),
+            EpilogueOp::Gelu => s.push_str("gelu()"),
+            EpilogueOp::Silu => s.push_str("silu()"),
+            EpilogueOp::Sigmoid => s.push_str("sigmoid()"),
+            EpilogueOp::Tanh => s.push_str("tanh()"),
+            EpilogueOp::Mish => s.push_str("mish()"),
+            EpilogueOp::Hardswish => s.push_str("hardswish()"),
+            EpilogueOp::LeakyRelu { alpha } => {
+                let _ = write!(s, "leaky_relu(alpha={alpha})");
+            }
+            EpilogueOp::Elu { alpha } => {
+                let _ = write!(s, "elu(alpha={alpha})");
+            }
+            EpilogueOp::Clip { lo, hi } => {
+                let _ = write!(s, "clip(lo={lo}, hi={hi})");
+            }
+            EpilogueOp::Bias => s.push_str("bias()"),
+            EpilogueOp::PerChannelScale => s.push_str("per_channel_scale()"),
+            EpilogueOp::PerRowScale => s.push_str("per_row_scale()"),
+            EpilogueOp::PerColScale => s.push_str("per_col_scale()"),
+            EpilogueOp::Scale { value } => {
+                let _ = write!(s, "scale({value})");
+            }
+            EpilogueOp::AuxStore { name } => {
+                let _ = write!(s, "aux_store({name})");
+            }
+            EpilogueOp::AuxLoad { name } => {
+                let _ = write!(s, "aux_load({name})");
+            }
+            EpilogueOp::Custom { expr, inputs } => {
+                if inputs.is_empty() {
+                    let _ = write!(s, "custom('{expr}')");
+                } else {
+                    let dict: Vec<String> =
+                        inputs.iter().map(|(k, v)| format!("'{k}': '{v}'")).collect();
+                    let _ = write!(s, "custom('{expr}', inputs={{{}}})", dict.join(", "));
+                }
+            }
+        }
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::{compile, ir::lower, parser::parse};
+    use crate::util::prop;
+
+    fn roundtrip(src: &str) {
+        let ir1 = lower(&parse(src).unwrap()).unwrap();
+        let printed = format_program(&ir1);
+        let ir2 = lower(&parse(&printed).unwrap_or_else(|e| panic!("{e}\n{printed}")))
+            .unwrap_or_else(|e| panic!("{e}\n{printed}"));
+        assert_eq!(ir1, ir2, "roundtrip changed the IR:\n{printed}");
+    }
+
+    #[test]
+    fn roundtrips_sm90_gemm() {
+        roundtrip(
+            "gemm().with_dtype(input=fp16, acc=fp32, output=fp16)\
+             .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor).with_arch(sm_90a)\
+             .with_threadblockshape(m=128, n=128, k=64).with_alignment(A=8, B=8, C=8)\
+             .with_stages(2).with_cluster(m=2, n=1, k=1)\
+             .with_scheduler(tile=persistent, kernel=tma, epilogue=auto)\
+             >> bias() >> leaky_relu(alpha=0.2) >> scale(0.5)",
+        );
+    }
+
+    #[test]
+    fn roundtrips_sm80_conv() {
+        roundtrip(
+            "conv2d_fprop(kernel_h=3, kernel_w=3)\
+             .with_dtype(input=fp16, acc=fp32, output=fp16).with_arch(sm_80)\
+             .with_layout(input=TensorNHWC, filter=TensorNHWC, output=TensorNHWC)\
+             .with_tile(m=128, n=64, k=32).with_iterator(optimized)\
+             .with_split_k(mode=serial, slices=4) >> relu()",
+        );
+    }
+
+    #[test]
+    fn roundtrips_pipeline() {
+        roundtrip(
+            "pipeline(transpose(input, NCL, NLC, fp32, fp16), \
+             gemm().with_dtype(input=fp16, acc=fp32, output=fp16)\
+             .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor).with_arch(sm_90a), \
+             transpose(output, NLC, NCL, fp16, fp32))",
+        );
+    }
+
+    #[test]
+    fn roundtrips_custom_epilogue() {
+        roundtrip(
+            "gemm().with_dtype(input=fp16, acc=fp32, output=fp16)\
+             .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor).with_arch(sm_90a)\
+             >> custom('x * 2 + y', inputs={'y': 'tensor'})",
+        );
+    }
+
+    #[test]
+    fn prop_agent_generated_sources_roundtrip() {
+        // fuzz over agent-shaped configs: print → parse → lower is stable
+        prop::check("dsl-print-roundtrip", 150, |rng| {
+            let tiles = crate::agent::policy::TILES;
+            let (m, n, k) = *rng.choice(tiles);
+            let dt = *rng.choice(&["fp16", "bf16", "fp32"]);
+            let align = if dt == "fp32" { 4 } else { 8 };
+            let epi = *rng.choice(&["", " >> relu()", " >> bias() >> gelu()", " >> silu() >> scale(1.5)"]);
+            let src = format!(
+                "gemm().with_dtype(input={dt}, acc=fp32, output=fp32)\
+                 .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor).with_arch(sm_90a)\
+                 .with_threadblockshape(m={m}, n={n}, k={k})\
+                 .with_alignment(A={align}, B={align}, C=4).with_stages(2){epi}"
+            );
+            if let Ok(c) = compile(&src) {
+                let printed = format_program(&c.ir);
+                let again = compile(&printed).unwrap_or_else(|e| panic!("{e}\n{printed}"));
+                assert_eq!(c.hash, again.hash, "canonical print must preserve the config hash");
+            }
+        });
+    }
+}

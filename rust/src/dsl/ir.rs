@@ -1,0 +1,1116 @@
+//! Typed configuration IR — the lowering target of the AST, and the input
+//! to validation, code generation, the performance model, and the runtime
+//! variant mapper. Every enum mirrors a terminal class of the grammar.
+
+use std::fmt;
+
+use super::ast::{self, Arg, ArgValue, EpilogueCall, KernelSpec, Program, Stage};
+use super::error::{DslError, DslErrorKind};
+
+// ---------------------------------------------------------------------------
+// Terminals
+// ---------------------------------------------------------------------------
+
+/// Data types (grammar terminal `DTYPE`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum DType {
+    Fp64,
+    Fp32,
+    Tf32,
+    Fp16,
+    Bf16,
+    Fp8E4m3,
+    Fp8E5m2,
+    Int8,
+    Int16,
+    Int32,
+    Uint8,
+    Uint16,
+    Uint32,
+}
+
+impl DType {
+    pub fn parse(s: &str) -> Option<DType> {
+        Some(match s {
+            "fp64" | "float64" => DType::Fp64,
+            "fp32" | "float32" => DType::Fp32,
+            "tf32" => DType::Tf32,
+            "fp16" | "float16" => DType::Fp16,
+            "bf16" | "bfloat16" => DType::Bf16,
+            "fp8_e4m3" | "e4m3" => DType::Fp8E4m3,
+            "fp8_e5m2" | "e5m2" => DType::Fp8E5m2,
+            "int8" | "s8" => DType::Int8,
+            "int16" | "s16" => DType::Int16,
+            "int32" | "s32" => DType::Int32,
+            "uint8" | "u8" => DType::Uint8,
+            "uint16" | "u16" => DType::Uint16,
+            "uint32" | "u32" => DType::Uint32,
+            _ => return None,
+        })
+    }
+
+    /// Element size in bytes.
+    pub fn size(&self) -> u64 {
+        match self {
+            DType::Fp64 => 8,
+            DType::Fp32 | DType::Tf32 | DType::Int32 | DType::Uint32 => 4,
+            DType::Fp16 | DType::Bf16 | DType::Int16 | DType::Uint16 => 2,
+            DType::Fp8E4m3 | DType::Fp8E5m2 | DType::Int8 | DType::Uint8 => 1,
+        }
+    }
+
+    pub fn is_fp8(&self) -> bool {
+        matches!(self, DType::Fp8E4m3 | DType::Fp8E5m2)
+    }
+
+    pub fn cutlass_name(&self) -> &'static str {
+        match self {
+            DType::Fp64 => "double",
+            DType::Fp32 => "float",
+            DType::Tf32 => "cutlass::tfloat32_t",
+            DType::Fp16 => "cutlass::half_t",
+            DType::Bf16 => "cutlass::bfloat16_t",
+            DType::Fp8E4m3 => "cutlass::float_e4m3_t",
+            DType::Fp8E5m2 => "cutlass::float_e5m2_t",
+            DType::Int8 => "int8_t",
+            DType::Int16 => "int16_t",
+            DType::Int32 => "int32_t",
+            DType::Uint8 => "uint8_t",
+            DType::Uint16 => "uint16_t",
+            DType::Uint32 => "uint32_t",
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            DType::Fp64 => "fp64",
+            DType::Fp32 => "fp32",
+            DType::Tf32 => "tf32",
+            DType::Fp16 => "fp16",
+            DType::Bf16 => "bf16",
+            DType::Fp8E4m3 => "fp8_e4m3",
+            DType::Fp8E5m2 => "fp8_e5m2",
+            DType::Int8 => "int8",
+            DType::Int16 => "int16",
+            DType::Int32 => "int32",
+            DType::Uint8 => "uint8",
+            DType::Uint16 => "uint16",
+            DType::Uint32 => "uint32",
+        };
+        f.write_str(s)
+    }
+}
+
+/// Target architectures (grammar terminal `ARCH`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum Arch {
+    Sm70,
+    Sm80,
+    Sm86,
+    Sm89,
+    Sm90,
+    Sm90a,
+    Sm100,
+}
+
+impl Arch {
+    pub fn parse(s: &str) -> Option<Arch> {
+        Some(match s {
+            "sm_70" | "sm70" => Arch::Sm70,
+            "sm_80" | "sm80" => Arch::Sm80,
+            "sm_86" | "sm86" => Arch::Sm86,
+            "sm_89" | "sm89" => Arch::Sm89,
+            "sm_90" | "sm90" => Arch::Sm90,
+            "sm_90a" | "sm90a" => Arch::Sm90a,
+            "sm_100" | "sm100" => Arch::Sm100,
+            _ => return None,
+        })
+    }
+
+    /// Numeric capability (90 for both sm_90 and sm_90a).
+    pub fn level(&self) -> u32 {
+        match self {
+            Arch::Sm70 => 70,
+            Arch::Sm80 => 80,
+            Arch::Sm86 => 86,
+            Arch::Sm89 => 89,
+            Arch::Sm90 | Arch::Sm90a => 90,
+            Arch::Sm100 => 100,
+        }
+    }
+
+    pub fn is_sm90_plus(&self) -> bool {
+        self.level() >= 90
+    }
+}
+
+impl fmt::Display for Arch {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let s = match self {
+            Arch::Sm70 => "sm_70",
+            Arch::Sm80 => "sm_80",
+            Arch::Sm86 => "sm_86",
+            Arch::Sm89 => "sm_89",
+            Arch::Sm90 => "sm_90",
+            Arch::Sm90a => "sm_90a",
+            Arch::Sm100 => "sm_100",
+        };
+        f.write_str(s)
+    }
+}
+
+/// GEMM operand layouts.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum GemmLayout {
+    RowMajor,
+    ColumnMajor,
+}
+
+impl GemmLayout {
+    pub fn parse(s: &str) -> Option<GemmLayout> {
+        match s {
+            "RowMajor" => Some(GemmLayout::RowMajor),
+            "ColumnMajor" => Some(GemmLayout::ColumnMajor),
+            _ => None,
+        }
+    }
+}
+
+/// Swizzle patterns (SM70–89).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Swizzle {
+    Identity1,
+    Identity2,
+    Identity4,
+    Identity8,
+    StreamK,
+}
+
+impl Swizzle {
+    pub fn parse(s: &str) -> Option<Swizzle> {
+        Some(match s {
+            "Identity1" => Swizzle::Identity1,
+            "Identity2" => Swizzle::Identity2,
+            "Identity4" => Swizzle::Identity4,
+            "Identity8" => Swizzle::Identity8,
+            "StreamK" => Swizzle::StreamK,
+            _ => return None,
+        })
+    }
+}
+
+/// Tile schedulers (SM90+).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum TileScheduler {
+    #[default]
+    Default,
+    Persistent,
+    StreamK,
+}
+
+/// Kernel schedules (SM90+).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum KernelSchedule {
+    #[default]
+    Auto,
+    CpAsync,
+    CpAsyncCooperative,
+    Tma,
+    TmaCooperative,
+    TmaPingpong,
+}
+
+/// Epilogue schedules (SM90+).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum EpilogueSchedule {
+    #[default]
+    Auto,
+    Tma,
+    TmaCooperative,
+    NoSmem,
+}
+
+/// Conv iterator algorithms (SM70–89).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Iterator_ {
+    Analytic,
+    Optimized,
+    FixedChannels,
+    FewChannels,
+    FixedStrideDilation,
+}
+
+/// Split-K modes (conv, SM70–89).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SplitK {
+    None,
+    Serial,
+    Parallel,
+}
+
+// ---------------------------------------------------------------------------
+// Operations
+// ---------------------------------------------------------------------------
+
+/// Operation families (grammar `operation`; coverage per paper Table 1a).
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub enum Operation {
+    Gemm,
+    BatchedGemm,
+    GroupedGemm { expert_count: u64 },
+    Conv2dFprop { kh: u64, kw: u64 },
+    Conv2dDgrad { kh: u64, kw: u64 },
+    Conv2dWgrad { kh: u64, kw: u64 },
+    Conv1dFprop { kw: u64 },
+    DepthwiseConv1d { kw: u64 },
+    GroupConv1d { kw: u64, groups: u64 },
+    Conv3dFprop { kd: u64, kh: u64, kw: u64 },
+    Conv3dDgrad { kd: u64, kh: u64, kw: u64 },
+    Conv3dWgrad { kd: u64, kh: u64, kw: u64 },
+    DepthwiseConv2d { kh: u64, kw: u64 },
+    GroupConv2d { kh: u64, kw: u64, groups: u64 },
+    GroupConv3d { kd: u64, kh: u64, kw: u64, groups: u64 },
+}
+
+impl Operation {
+    pub fn family(&self) -> &'static str {
+        match self {
+            Operation::Gemm => "gemm",
+            Operation::BatchedGemm => "batched_gemm",
+            Operation::GroupedGemm { .. } => "grouped_gemm",
+            Operation::Conv2dFprop { .. } => "conv2d_fprop",
+            Operation::Conv2dDgrad { .. } => "conv2d_dgrad",
+            Operation::Conv2dWgrad { .. } => "conv2d_wgrad",
+            Operation::Conv1dFprop { .. } => "conv1d_fprop",
+            Operation::DepthwiseConv1d { .. } => "depthwise_conv1d",
+            Operation::GroupConv1d { .. } => "group_conv1d",
+            Operation::Conv3dFprop { .. } => "conv3d_fprop",
+            Operation::Conv3dDgrad { .. } => "conv3d_dgrad",
+            Operation::Conv3dWgrad { .. } => "conv3d_wgrad",
+            Operation::DepthwiseConv2d { .. } => "depthwise_conv2d",
+            Operation::GroupConv2d { .. } => "group_conv2d",
+            Operation::GroupConv3d { .. } => "group_conv3d",
+        }
+    }
+
+    pub fn is_gemm_family(&self) -> bool {
+        matches!(
+            self,
+            Operation::Gemm | Operation::BatchedGemm | Operation::GroupedGemm { .. }
+        )
+    }
+
+    pub fn is_conv_family(&self) -> bool {
+        !self.is_gemm_family()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Epilogues
+// ---------------------------------------------------------------------------
+
+/// Fused epilogue ops (paper Table 1c); composed left-to-right by `>>`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EpilogueOp {
+    Relu,
+    Gelu,
+    Silu,
+    Sigmoid,
+    Tanh,
+    Mish,
+    Hardswish,
+    LeakyRelu { alpha: f64 },
+    Elu { alpha: f64 },
+    Clip { lo: f64, hi: f64 },
+    Bias,
+    PerChannelScale,
+    PerRowScale,
+    PerColScale,
+    Scale { value: f64 },
+    AuxStore { name: String },
+    AuxLoad { name: String },
+    Custom { expr: String, inputs: Vec<(String, String)> },
+}
+
+impl EpilogueOp {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EpilogueOp::Relu => "relu",
+            EpilogueOp::Gelu => "gelu",
+            EpilogueOp::Silu => "silu",
+            EpilogueOp::Sigmoid => "sigmoid",
+            EpilogueOp::Tanh => "tanh",
+            EpilogueOp::Mish => "mish",
+            EpilogueOp::Hardswish => "hardswish",
+            EpilogueOp::LeakyRelu { .. } => "leaky_relu",
+            EpilogueOp::Elu { .. } => "elu",
+            EpilogueOp::Clip { .. } => "clip",
+            EpilogueOp::Bias => "bias",
+            EpilogueOp::PerChannelScale => "per_channel_scale",
+            EpilogueOp::PerRowScale => "per_row_scale",
+            EpilogueOp::PerColScale => "per_col_scale",
+            EpilogueOp::Scale { .. } => "scale",
+            EpilogueOp::AuxStore { .. } => "aux_store",
+            EpilogueOp::AuxLoad { .. } => "aux_load",
+            EpilogueOp::Custom { .. } => "custom",
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// ConfigIR
+// ---------------------------------------------------------------------------
+
+/// Tile shape: `.with_tile` (SM70–89) or `.with_threadblockshape` (SM90+).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Tile {
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+}
+
+/// Cluster dims (SM90+).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Cluster {
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+}
+
+/// Scheduler configuration (SM90+): tile/kernel/epilogue schedules.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub struct Scheduler {
+    pub tile: TileScheduler,
+    pub kernel: KernelSchedule,
+    pub epilogue: EpilogueSchedule,
+}
+
+/// Per-operand alignment (elements).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Alignment {
+    pub a: u64,
+    pub b: u64,
+    pub c: u64,
+}
+
+/// Which call site set a tile: the two spellings are arch-gated.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TileSpelling {
+    WithTile,
+    WithThreadblockShape,
+}
+
+/// The validated, typed configuration of a single kernel.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ConfigIr {
+    pub op: Operation,
+    pub arch: Option<Arch>,
+    pub dtype_input: Option<DType>,
+    pub dtype_acc: Option<DType>,
+    pub dtype_output: Option<DType>,
+    pub layout_a: Option<GemmLayout>,
+    pub layout_b: Option<GemmLayout>,
+    pub layout_c: Option<GemmLayout>,
+    pub conv_layouts: Option<(String, String, String)>,
+    pub tile: Option<Tile>,
+    pub tile_spelling: Option<TileSpelling>,
+    pub stages: Option<u64>,
+    pub alignment: Option<Alignment>,
+    pub cluster: Option<Cluster>,
+    pub swizzle: Option<Swizzle>,
+    pub scheduler: Option<Scheduler>,
+    pub scaling: Option<(f64, f64)>,
+    pub iterator: Option<Iterator_>,
+    pub split_k: Option<(SplitK, u64)>,
+    pub operand_swap: bool,
+    pub epilogue: Vec<EpilogueOp>,
+    /// Source offset of the kernel, for error messages.
+    pub offset: usize,
+}
+
+impl ConfigIr {
+    pub fn new(op: Operation, offset: usize) -> Self {
+        ConfigIr {
+            op,
+            arch: None,
+            dtype_input: None,
+            dtype_acc: None,
+            dtype_output: None,
+            layout_a: None,
+            layout_b: None,
+            layout_c: None,
+            conv_layouts: None,
+            tile: None,
+            tile_spelling: None,
+            stages: None,
+            alignment: None,
+            cluster: None,
+            swizzle: None,
+            scheduler: None,
+            scaling: None,
+            iterator: None,
+            split_k: None,
+            operand_swap: false,
+            epilogue: Vec::new(),
+            offset,
+        }
+    }
+
+    /// Effective tile (defaults applied when the program omits it).
+    pub fn effective_tile(&self) -> Tile {
+        self.tile.unwrap_or(Tile { m: 128, n: 128, k: 32 })
+    }
+
+    /// Effective stage count.
+    pub fn effective_stages(&self) -> u64 {
+        self.stages.unwrap_or(3)
+    }
+}
+
+/// A pipeline: transforms + kernel stages with explicit boundaries.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PipelineIr {
+    pub stages: Vec<StageIr>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum StageIr {
+    Kernel(ConfigIr),
+    Transpose {
+        target: String,
+        from_layout: String,
+        to_layout: String,
+        from_dtype: Option<DType>,
+        to_dtype: Option<DType>,
+    },
+}
+
+/// Lowered program: single kernel or pipeline.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ProgramIr {
+    Kernel(ConfigIr),
+    Pipeline(PipelineIr),
+}
+
+impl ProgramIr {
+    /// All kernel configs in the program (one for a kernel, 1+ for pipelines).
+    pub fn kernels(&self) -> Vec<&ConfigIr> {
+        match self {
+            ProgramIr::Kernel(k) => vec![k],
+            ProgramIr::Pipeline(p) => p
+                .stages
+                .iter()
+                .filter_map(|s| match s {
+                    StageIr::Kernel(k) => Some(k),
+                    _ => None,
+                })
+                .collect(),
+        }
+    }
+
+    /// The primary (first) kernel.
+    pub fn primary(&self) -> Option<&ConfigIr> {
+        self.kernels().into_iter().next()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Lowering
+// ---------------------------------------------------------------------------
+
+pub fn lower(program: &Program) -> Result<ProgramIr, DslError> {
+    match program {
+        Program::Kernel(k) => Ok(ProgramIr::Kernel(lower_kernel(k)?)),
+        Program::Pipeline(stages) => {
+            let mut out = Vec::new();
+            for s in stages {
+                match s {
+                    Stage::Kernel(k) => out.push(StageIr::Kernel(lower_kernel(k)?)),
+                    Stage::Transpose(t) => {
+                        for layout in [&t.from_layout, &t.to_layout] {
+                            if !matches!(layout.as_str(), "NCL" | "NLC" | "NCHW" | "NHWC") {
+                                return Err(DslError::at(
+                                    DslErrorKind::Lower,
+                                    t.offset,
+                                    &format!("unknown transpose layout `{layout}`"),
+                                    "supported layouts: NCL, NLC, NCHW, NHWC",
+                                ));
+                            }
+                        }
+                        if !matches!(t.target.as_str(), "input" | "output") {
+                            return Err(DslError::at(
+                                DslErrorKind::Lower,
+                                t.offset,
+                                &format!("transpose target must be input or output, got `{}`", t.target),
+                                "",
+                            ));
+                        }
+                        let parse_dt = |s: &Option<String>| -> Result<Option<DType>, DslError> {
+                            match s {
+                                None => Ok(None),
+                                Some(x) => DType::parse(x).map(Some).ok_or_else(|| {
+                                    DslError::at(
+                                        DslErrorKind::Lower,
+                                        t.offset,
+                                        &format!("unknown dtype `{x}` in transpose"),
+                                        "dtype conversion is fused with transpose: transpose(input, NCL, NLC, fp32, fp16)",
+                                    )
+                                }),
+                            }
+                        };
+                        out.push(StageIr::Transpose {
+                            target: t.target.clone(),
+                            from_layout: t.from_layout.clone(),
+                            to_layout: t.to_layout.clone(),
+                            from_dtype: parse_dt(&t.from_dtype)?,
+                            to_dtype: parse_dt(&t.to_dtype)?,
+                        });
+                    }
+                }
+            }
+            Ok(ProgramIr::Pipeline(PipelineIr { stages: out }))
+        }
+    }
+}
+
+fn get_int(args: &[Arg], name: &str, pos: usize, ctx: &str, off: usize) -> Result<u64, DslError> {
+    match ast::find_arg(args, name, pos).map(|a| &a.value) {
+        Some(ArgValue::Int(v)) => Ok(*v),
+        Some(other) => Err(DslError::at(
+            DslErrorKind::Lower,
+            off,
+            &format!("{ctx}: `{name}` must be an integer, got {}", other.describe()),
+            "",
+        )),
+        None => Err(DslError::at(
+            DslErrorKind::Lower,
+            off,
+            &format!("{ctx}: missing required argument `{name}`"),
+            "",
+        )),
+    }
+}
+
+fn get_float(args: &[Arg], name: &str, pos: usize) -> Option<f64> {
+    match ast::find_arg(args, name, pos).map(|a| &a.value) {
+        Some(ArgValue::Float(v)) => Some(*v),
+        Some(ArgValue::Int(v)) => Some(*v as f64),
+        _ => None,
+    }
+}
+
+fn get_ident<'a>(args: &'a [Arg], name: &str, pos: usize) -> Option<&'a str> {
+    match ast::find_arg(args, name, pos).map(|a| &a.value) {
+        Some(ArgValue::Ident(s)) => Some(s),
+        Some(ArgValue::Str(s)) => Some(s),
+        _ => None,
+    }
+}
+
+fn lower_operation(spec: &KernelSpec) -> Result<Operation, DslError> {
+    let a = &spec.op_args;
+    let off = spec.offset;
+    let nm = spec.op_name.as_str();
+    let op = match nm {
+        "gemm" => Operation::Gemm,
+        "batched_gemm" => Operation::BatchedGemm,
+        "grouped_gemm" => Operation::GroupedGemm {
+            expert_count: get_int(a, "expert_count", 0, nm, off)?,
+        },
+        "conv2d_fprop" | "conv2d_dgrad" | "conv2d_wgrad" | "depthwise_conv2d" => {
+            let kh = get_int(a, "kernel_h", 0, nm, off)?;
+            let kw = get_int(a, "kernel_w", 1, nm, off)?;
+            match nm {
+                "conv2d_fprop" => Operation::Conv2dFprop { kh, kw },
+                "conv2d_dgrad" => Operation::Conv2dDgrad { kh, kw },
+                "conv2d_wgrad" => Operation::Conv2dWgrad { kh, kw },
+                _ => Operation::DepthwiseConv2d { kh, kw },
+            }
+        }
+        "group_conv2d" => Operation::GroupConv2d {
+            kh: get_int(a, "kernel_h", 0, nm, off)?,
+            kw: get_int(a, "kernel_w", 1, nm, off)?,
+            groups: get_int(a, "groups", 2, nm, off)?,
+        },
+        "conv1d_fprop" => Operation::Conv1dFprop { kw: get_int(a, "kernel_w", 0, nm, off)? },
+        "depthwise_conv1d" => {
+            Operation::DepthwiseConv1d { kw: get_int(a, "kernel_w", 0, nm, off)? }
+        }
+        "group_conv1d" => Operation::GroupConv1d {
+            kw: get_int(a, "kernel_w", 0, nm, off)?,
+            groups: get_int(a, "groups", 1, nm, off)?,
+        },
+        "conv3d_fprop" | "conv3d_dgrad" | "conv3d_wgrad" => {
+            let kd = get_int(a, "kernel_d", 0, nm, off)?;
+            let kh = get_int(a, "kernel_h", 1, nm, off)?;
+            let kw = get_int(a, "kernel_w", 2, nm, off)?;
+            match nm {
+                "conv3d_fprop" => Operation::Conv3dFprop { kd, kh, kw },
+                "conv3d_dgrad" => Operation::Conv3dDgrad { kd, kh, kw },
+                _ => Operation::Conv3dWgrad { kd, kh, kw },
+            }
+        }
+        "group_conv3d" => Operation::GroupConv3d {
+            kd: get_int(a, "kernel_d", 0, nm, off)?,
+            kh: get_int(a, "kernel_h", 1, nm, off)?,
+            kw: get_int(a, "kernel_w", 2, nm, off)?,
+            groups: get_int(a, "groups", 3, nm, off)?,
+        },
+        other => {
+            return Err(DslError::at(
+                DslErrorKind::Lower,
+                off,
+                &format!("unknown operation `{other}`"),
+                "supported: gemm, batched_gemm, grouped_gemm, conv{1,2,3}d_{fprop,dgrad,wgrad}, depthwise_conv{1,2}d, group_conv{1,2,3}d",
+            ))
+        }
+    };
+    Ok(op)
+}
+
+fn lower_epilogue(call: &EpilogueCall) -> Result<EpilogueOp, DslError> {
+    let a = &call.args;
+    let off = call.offset;
+    let op = match call.name.as_str() {
+        "relu" => EpilogueOp::Relu,
+        "gelu" => EpilogueOp::Gelu,
+        "silu" => EpilogueOp::Silu,
+        "sigmoid" => EpilogueOp::Sigmoid,
+        "tanh" => EpilogueOp::Tanh,
+        "mish" => EpilogueOp::Mish,
+        "hardswish" => EpilogueOp::Hardswish,
+        "leaky_relu" => EpilogueOp::LeakyRelu { alpha: get_float(a, "alpha", 0).unwrap_or(0.01) },
+        "elu" => EpilogueOp::Elu { alpha: get_float(a, "alpha", 0).unwrap_or(1.0) },
+        "clip" | "clamp" => EpilogueOp::Clip {
+            lo: get_float(a, "lo", 0).or_else(|| get_float(a, "min", 0)).unwrap_or(0.0),
+            hi: get_float(a, "hi", 1).or_else(|| get_float(a, "max", 1)).unwrap_or(1.0),
+        },
+        "bias" => EpilogueOp::Bias,
+        "per_channel_scale" => EpilogueOp::PerChannelScale,
+        "per_row_scale" => EpilogueOp::PerRowScale,
+        "per_col_scale" => EpilogueOp::PerColScale,
+        "scale" => {
+            let v = get_float(a, "value", 0).ok_or_else(|| {
+                DslError::at(DslErrorKind::Lower, off, "scale() needs a value", "e.g. scale(0.5)")
+            })?;
+            EpilogueOp::Scale { value: v }
+        }
+        "aux_store" | "aux_load" => {
+            let name = get_ident(a, "name", 0).unwrap_or("aux").to_string();
+            if call.name == "aux_store" {
+                EpilogueOp::AuxStore { name }
+            } else {
+                EpilogueOp::AuxLoad { name }
+            }
+        }
+        "custom" => {
+            let expr = match a.first().map(|x| &x.value) {
+                Some(ArgValue::Str(s)) => s.clone(),
+                _ => {
+                    return Err(DslError::at(
+                        DslErrorKind::Lower,
+                        off,
+                        "custom() requires a quoted expression as its first argument",
+                        "e.g. custom('x * 2 + y', inputs={'y': 'tensor'})",
+                    ))
+                }
+            };
+            let inputs = match ast::find_arg(a, "inputs", 1).map(|x| &x.value) {
+                Some(ArgValue::Dict(d)) => d.clone(),
+                None => Vec::new(),
+                Some(other) => {
+                    return Err(DslError::at(
+                        DslErrorKind::Lower,
+                        off,
+                        &format!("custom() inputs must be a dict, got {}", other.describe()),
+                        "",
+                    ))
+                }
+            };
+            EpilogueOp::Custom { expr, inputs }
+        }
+        other => {
+            return Err(DslError::at(
+                DslErrorKind::Lower,
+                off,
+                &format!("unknown epilogue op `{other}`"),
+                "built-ins: relu, gelu, silu, sigmoid, tanh, mish, hardswish, leaky_relu, elu, clip, clamp, bias, per_channel_scale, per_row_scale, per_col_scale, scale, aux_store, aux_load, custom",
+            ))
+        }
+    };
+    Ok(op)
+}
+
+fn lower_kernel(spec: &KernelSpec) -> Result<ConfigIr, DslError> {
+    let op = lower_operation(spec)?;
+    let mut ir = ConfigIr::new(op, spec.offset);
+
+    for cfg in &spec.configs {
+        let a = &cfg.args;
+        let off = cfg.offset;
+        let dup = |field: &str| {
+            DslError::at(
+                DslErrorKind::Lower,
+                off,
+                &format!("duplicate configuration `.{field}()`"),
+                "each configuration may appear at most once",
+            )
+        };
+        match cfg.name.as_str() {
+            "with_dtype" => {
+                if ir.dtype_input.is_some() {
+                    return Err(dup("with_dtype"));
+                }
+                let parse = |nm: &str, pos: usize| -> Result<DType, DslError> {
+                    let s = get_ident(a, nm, pos).ok_or_else(|| {
+                        DslError::at(
+                            DslErrorKind::Lower,
+                            off,
+                            &format!("with_dtype: missing `{nm}`"),
+                            "with_dtype(input=fp16, acc=fp32, output=fp16)",
+                        )
+                    })?;
+                    DType::parse(s).ok_or_else(|| {
+                        DslError::at(
+                            DslErrorKind::Lower,
+                            off,
+                            &format!("unknown dtype `{s}`"),
+                            "dtypes: fp64 fp32 tf32 fp16 bf16 fp8_e4m3 fp8_e5m2 int8 …",
+                        )
+                    })
+                };
+                ir.dtype_input = Some(parse("input", 0)?);
+                ir.dtype_acc = Some(parse("acc", 1)?);
+                ir.dtype_output = Some(parse("output", 2)?);
+            }
+            "with_layout" => {
+                if ir.op.is_gemm_family() {
+                    let parse = |nm: &str, pos: usize| -> Result<GemmLayout, DslError> {
+                        let s = get_ident(a, nm, pos).ok_or_else(|| {
+                            DslError::at(
+                                DslErrorKind::Lower,
+                                off,
+                                &format!("with_layout: missing `{nm}`"),
+                                "with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor)",
+                            )
+                        })?;
+                        GemmLayout::parse(s).ok_or_else(|| {
+                            DslError::at(
+                                DslErrorKind::Lower,
+                                off,
+                                &format!("unknown GEMM layout `{s}`"),
+                                "GEMM layouts: RowMajor, ColumnMajor",
+                            )
+                        })
+                    };
+                    ir.layout_a = Some(parse("A", 0)?);
+                    ir.layout_b = Some(parse("B", 1)?);
+                    ir.layout_c = Some(parse("C", 2)?);
+                } else {
+                    let g = |nm: &str, pos: usize| -> Result<String, DslError> {
+                        let s = get_ident(a, nm, pos).ok_or_else(|| {
+                            DslError::at(
+                                DslErrorKind::Lower,
+                                off,
+                                &format!("with_layout: missing `{nm}`"),
+                                "with_layout(input=TensorNHWC, filter=TensorNHWC, output=TensorNHWC)",
+                            )
+                        })?;
+                        if !matches!(s, "TensorNHWC" | "TensorNDHWC") {
+                            return Err(DslError::at(
+                                DslErrorKind::Lower,
+                                off,
+                                &format!("unknown conv layout `{s}`"),
+                                "conv layouts: TensorNHWC, TensorNDHWC",
+                            ));
+                        }
+                        Ok(s.to_string())
+                    };
+                    ir.conv_layouts = Some((g("input", 0)?, g("filter", 1)?, g("output", 2)?));
+                }
+            }
+            "with_arch" => {
+                if ir.arch.is_some() {
+                    return Err(dup("with_arch"));
+                }
+                let s = get_ident(a, "arch", 0).ok_or_else(|| {
+                    DslError::at(DslErrorKind::Lower, off, "with_arch: missing architecture", "")
+                })?;
+                ir.arch = Some(Arch::parse(s).ok_or_else(|| {
+                    DslError::at(
+                        DslErrorKind::Lower,
+                        off,
+                        &format!("unknown architecture `{s}`"),
+                        "architectures: sm_70 sm_80 sm_86 sm_89 sm_90 sm_90a sm_100",
+                    )
+                })?);
+            }
+            "with_tile" | "with_threadblockshape" => {
+                if ir.tile.is_some() {
+                    return Err(dup(&cfg.name));
+                }
+                ir.tile = Some(Tile {
+                    m: get_int(a, "m", 0, &cfg.name, off)?,
+                    n: get_int(a, "n", 1, &cfg.name, off)?,
+                    k: get_int(a, "k", 2, &cfg.name, off)?,
+                });
+                ir.tile_spelling = Some(if cfg.name == "with_tile" {
+                    TileSpelling::WithTile
+                } else {
+                    TileSpelling::WithThreadblockShape
+                });
+            }
+            "with_stages" => {
+                if ir.stages.is_some() {
+                    return Err(dup("with_stages"));
+                }
+                ir.stages = Some(get_int(a, "stages", 0, "with_stages", off)?);
+            }
+            "with_alignment" => {
+                if ir.alignment.is_some() {
+                    return Err(dup("with_alignment"));
+                }
+                ir.alignment = Some(Alignment {
+                    a: get_int(a, "A", 0, "with_alignment", off)?,
+                    b: get_int(a, "B", 1, "with_alignment", off)?,
+                    c: get_int(a, "C", 2, "with_alignment", off)?,
+                });
+            }
+            "with_cluster" => {
+                if ir.cluster.is_some() {
+                    return Err(dup("with_cluster"));
+                }
+                ir.cluster = Some(Cluster {
+                    m: get_int(a, "m", 0, "with_cluster", off)?,
+                    n: get_int(a, "n", 1, "with_cluster", off)?,
+                    k: get_int(a, "k", 2, "with_cluster", off)?,
+                });
+            }
+            "with_swizzle" => {
+                let s = get_ident(a, "pattern", 0).ok_or_else(|| {
+                    DslError::at(DslErrorKind::Lower, off, "with_swizzle: missing pattern", "")
+                })?;
+                ir.swizzle = Some(Swizzle::parse(s).ok_or_else(|| {
+                    DslError::at(
+                        DslErrorKind::Lower,
+                        off,
+                        &format!("unknown swizzle `{s}`"),
+                        "swizzles: Identity1 Identity2 Identity4 Identity8 StreamK",
+                    )
+                })?);
+            }
+            "with_scheduler" => {
+                if ir.scheduler.is_some() {
+                    return Err(dup("with_scheduler"));
+                }
+                let mut sch = Scheduler::default();
+                if let Some(s) = get_ident(a, "tile", usize::MAX) {
+                    sch.tile = match s {
+                        "default" => TileScheduler::Default,
+                        "persistent" => TileScheduler::Persistent,
+                        "stream_k" | "streamk" => TileScheduler::StreamK,
+                        _ => {
+                            return Err(DslError::at(
+                                DslErrorKind::Lower,
+                                off,
+                                &format!("unknown tile scheduler `{s}`"),
+                                "tile schedulers: default persistent stream_k",
+                            ))
+                        }
+                    };
+                }
+                if let Some(s) = get_ident(a, "kernel", usize::MAX) {
+                    sch.kernel = match s {
+                        "auto" => KernelSchedule::Auto,
+                        "cp_async" => KernelSchedule::CpAsync,
+                        "cp_async_cooperative" => KernelSchedule::CpAsyncCooperative,
+                        "tma" => KernelSchedule::Tma,
+                        "tma_cooperative" => KernelSchedule::TmaCooperative,
+                        "tma_pingpong" => KernelSchedule::TmaPingpong,
+                        _ => {
+                            return Err(DslError::at(
+                                DslErrorKind::Lower,
+                                off,
+                                &format!("unknown kernel schedule `{s}`"),
+                                "kernel schedules: auto cp_async cp_async_cooperative tma tma_cooperative tma_pingpong",
+                            ))
+                        }
+                    };
+                }
+                if let Some(s) = get_ident(a, "epilogue", usize::MAX) {
+                    sch.epilogue = match s {
+                        "auto" => EpilogueSchedule::Auto,
+                        "tma" => EpilogueSchedule::Tma,
+                        "tma_cooperative" => EpilogueSchedule::TmaCooperative,
+                        "no_smem" => EpilogueSchedule::NoSmem,
+                        _ => {
+                            return Err(DslError::at(
+                                DslErrorKind::Lower,
+                                off,
+                                &format!("unknown epilogue schedule `{s}`"),
+                                "epilogue schedules: auto tma tma_cooperative no_smem",
+                            ))
+                        }
+                    };
+                }
+                ir.scheduler = Some(sch);
+            }
+            "with_scaling" => {
+                ir.scaling = Some((
+                    get_float(a, "alpha", 0).unwrap_or(1.0),
+                    get_float(a, "beta", 1).unwrap_or(0.0),
+                ));
+            }
+            "with_iterator" => {
+                let s = get_ident(a, "iterator", 0).ok_or_else(|| {
+                    DslError::at(DslErrorKind::Lower, off, "with_iterator: missing value", "")
+                })?;
+                ir.iterator = Some(match s {
+                    "analytic" => Iterator_::Analytic,
+                    "optimized" => Iterator_::Optimized,
+                    "fixed_channels" => Iterator_::FixedChannels,
+                    "few_channels" => Iterator_::FewChannels,
+                    "fixed_stride_dilation" => Iterator_::FixedStrideDilation,
+                    _ => {
+                        return Err(DslError::at(
+                            DslErrorKind::Lower,
+                            off,
+                            &format!("unknown iterator `{s}`"),
+                            "iterators: analytic optimized fixed_channels few_channels fixed_stride_dilation",
+                        ))
+                    }
+                });
+            }
+            "with_split_k" => {
+                let mode = get_ident(a, "mode", 0).unwrap_or("serial");
+                let m = match mode {
+                    "none" => SplitK::None,
+                    "serial" => SplitK::Serial,
+                    "parallel" => SplitK::Parallel,
+                    _ => {
+                        return Err(DslError::at(
+                            DslErrorKind::Lower,
+                            off,
+                            &format!("unknown split-k mode `{mode}`"),
+                            "modes: none serial parallel",
+                        ))
+                    }
+                };
+                let slices = get_int(a, "slices", 1, "with_split_k", off).unwrap_or(1);
+                ir.split_k = Some((m, slices));
+            }
+            "with_operand_swap" => {
+                let v = get_ident(a, "value", 0).unwrap_or("true");
+                ir.operand_swap = match v {
+                    "true" => true,
+                    "false" => false,
+                    _ => {
+                        return Err(DslError::at(
+                            DslErrorKind::Lower,
+                            off,
+                            &format!("with_operand_swap takes true or false, got `{v}`"),
+                            "",
+                        ))
+                    }
+                };
+            }
+            other => {
+                return Err(DslError::at(
+                    DslErrorKind::Lower,
+                    off,
+                    &format!("unknown configuration `.{other}()`"),
+                    "configurations: with_dtype with_layout with_arch with_tile with_threadblockshape with_stages with_alignment with_cluster with_swizzle with_scheduler with_scaling with_iterator with_split_k with_operand_swap",
+                ))
+            }
+        }
+    }
+
+    for e in &spec.epilogue {
+        ir.epilogue.push(lower_epilogue(e)?);
+    }
+    Ok(ir)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::parser::parse;
+
+    fn lower_src(src: &str) -> Result<ProgramIr, DslError> {
+        lower(&parse(src).unwrap())
+    }
+
+    #[test]
+    fn lowers_gemm_config() {
+        let ir = lower_src(
+            "gemm().with_dtype(input=fp16, acc=fp32, output=fp16)\
+             .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor)\
+             .with_arch(sm_90a).with_threadblockshape(m=128, n=128, k=64)",
+        )
+        .unwrap();
+        let k = ir.primary().unwrap();
+        assert_eq!(k.dtype_input, Some(DType::Fp16));
+        assert_eq!(k.arch, Some(Arch::Sm90a));
+        assert_eq!(k.tile, Some(Tile { m: 128, n: 128, k: 64 }));
+        assert_eq!(k.tile_spelling, Some(TileSpelling::WithThreadblockShape));
+    }
+
+    #[test]
+    fn lowers_epilogue_chain() {
+        let ir = lower_src("gemm() >> bias() >> leaky_relu(alpha=0.2) >> scale(0.5)").unwrap();
+        let k = ir.primary().unwrap();
+        assert_eq!(k.epilogue.len(), 3);
+        assert!(matches!(k.epilogue[1], EpilogueOp::LeakyRelu { alpha } if alpha == 0.2));
+        assert!(matches!(k.epilogue[2], EpilogueOp::Scale { value } if value == 0.5));
+    }
+
+    #[test]
+    fn rejects_unknown_dtype() {
+        let e = lower_src("gemm().with_dtype(input=fp12, acc=fp32, output=fp32)").unwrap_err();
+        assert!(e.to_string().contains("unknown dtype"));
+    }
+
+    #[test]
+    fn rejects_unknown_operation() {
+        let e = lower_src("gemv()").unwrap_err();
+        assert!(e.to_string().contains("unknown operation"));
+    }
+
+    #[test]
+    fn rejects_duplicate_config() {
+        let e = lower_src("gemm().with_arch(sm_80).with_arch(sm_90a)").unwrap_err();
+        assert!(e.to_string().contains("duplicate"));
+    }
+
+    #[test]
+    fn lowers_pipeline() {
+        let ir = lower_src(
+            "pipeline(transpose(input, NCL, NLC, fp32, fp16), gemm().with_arch(sm_90a))",
+        )
+        .unwrap();
+        match ir {
+            ProgramIr::Pipeline(p) => {
+                assert_eq!(p.stages.len(), 2);
+                assert!(matches!(&p.stages[0],
+                    StageIr::Transpose { from_dtype: Some(DType::Fp32), to_dtype: Some(DType::Fp16), .. }));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn lowers_grouped_gemm() {
+        let ir = lower_src("grouped_gemm(expert_count=8).with_arch(sm_90a)").unwrap();
+        assert!(matches!(ir.primary().unwrap().op, Operation::GroupedGemm { expert_count: 8 }));
+    }
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::Fp32.size(), 4);
+        assert_eq!(DType::Bf16.size(), 2);
+        assert_eq!(DType::Fp8E4m3.size(), 1);
+        assert_eq!(DType::Tf32.size(), 4);
+    }
+}

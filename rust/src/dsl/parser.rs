@@ -1,0 +1,400 @@
+//! Recursive-descent parser for µCUTLASS, following the Appendix A.1 EBNF:
+//!
+//! ```text
+//! start   = kernel | pipeline ;
+//! kernel  = operation , { configuration } , { epilogue } ;
+//! pipeline = "pipeline(" , stage , { "," , stage } , ")" ;
+//! stage   = transform_stage | kernel_stage ;
+//! ```
+
+use super::ast::*;
+use super::error::{DslError, DslErrorKind};
+use super::token::{lex, TokKind, Token};
+
+pub fn parse(src: &str) -> Result<Program, DslError> {
+    let toks = lex(src)?;
+    let mut p = P { toks, i: 0 };
+    let prog = p.program()?;
+    p.expect_eof()?;
+    Ok(prog)
+}
+
+struct P {
+    toks: Vec<Token>,
+    i: usize,
+}
+
+impl P {
+    fn peek(&self) -> &Token {
+        &self.toks[self.i.min(self.toks.len() - 1)]
+    }
+
+    fn next(&mut self) -> Token {
+        let t = self.toks[self.i.min(self.toks.len() - 1)].clone();
+        if self.i < self.toks.len() - 1 {
+            self.i += 1;
+        }
+        t
+    }
+
+    fn err(&self, msg: &str, hint: &str) -> DslError {
+        DslError::at(DslErrorKind::Parse, self.peek().start, msg, hint)
+    }
+
+    fn expect(&mut self, kind: &TokKind, what: &str) -> Result<Token, DslError> {
+        if &self.peek().kind == kind {
+            Ok(self.next())
+        } else {
+            Err(self.err(
+                &format!("expected {what}, found {}", self.peek().kind.describe()),
+                "",
+            ))
+        }
+    }
+
+    fn expect_eof(&mut self) -> Result<(), DslError> {
+        if self.peek().kind == TokKind::Eof {
+            Ok(())
+        } else {
+            Err(self.err(
+                &format!("trailing {} after program", self.peek().kind.describe()),
+                "a µCUTLASS program is a single kernel expression or one pipeline(...)",
+            ))
+        }
+    }
+
+    fn ident(&mut self, what: &str) -> Result<(String, usize), DslError> {
+        match self.peek().kind.clone() {
+            TokKind::Ident(s) => {
+                let off = self.peek().start;
+                self.next();
+                Ok((s, off))
+            }
+            other => Err(self.err(
+                &format!("expected {what}, found {}", other.describe()),
+                "",
+            )),
+        }
+    }
+
+    fn program(&mut self) -> Result<Program, DslError> {
+        if let TokKind::Ident(name) = &self.peek().kind {
+            if name == "pipeline" {
+                return self.pipeline();
+            }
+        }
+        Ok(Program::Kernel(self.kernel()?))
+    }
+
+    fn pipeline(&mut self) -> Result<Program, DslError> {
+        self.next(); // pipeline
+        self.expect(&TokKind::LParen, "`(` after pipeline")?;
+        let mut stages = Vec::new();
+        loop {
+            stages.push(self.stage()?);
+            match self.peek().kind {
+                TokKind::Comma => {
+                    self.next();
+                }
+                TokKind::RParen => {
+                    self.next();
+                    break;
+                }
+                _ => {
+                    return Err(self.err(
+                        &format!(
+                            "expected `,` or `)` in pipeline, found {}",
+                            self.peek().kind.describe()
+                        ),
+                        "pipeline stages are comma-separated: pipeline(transpose(...), gemm()...)",
+                    ))
+                }
+            }
+        }
+        if stages.is_empty() {
+            return Err(self.err("empty pipeline", "a pipeline needs at least one stage"));
+        }
+        Ok(Program::Pipeline(stages))
+    }
+
+    fn stage(&mut self) -> Result<Stage, DslError> {
+        if let TokKind::Ident(name) = &self.peek().kind {
+            if name == "transpose" {
+                return Ok(Stage::Transpose(self.transpose()?));
+            }
+        }
+        Ok(Stage::Kernel(self.kernel()?))
+    }
+
+    fn transpose(&mut self) -> Result<TransposeSpec, DslError> {
+        let (_, offset) = self.ident("transpose")?;
+        self.expect(&TokKind::LParen, "`(`")?;
+        let (target, _) = self.ident("transpose target (input/output)")?;
+        self.expect(&TokKind::Comma, "`,`")?;
+        let (from_layout, _) = self.ident("source layout (e.g. NCL)")?;
+        self.expect(&TokKind::Comma, "`,`")?;
+        let (to_layout, _) = self.ident("destination layout (e.g. NLC)")?;
+        let mut from_dtype = None;
+        let mut to_dtype = None;
+        if self.peek().kind == TokKind::Comma {
+            self.next();
+            from_dtype = Some(self.ident("source dtype")?.0);
+            self.expect(&TokKind::Comma, "`,` before destination dtype")?;
+            to_dtype = Some(self.ident("destination dtype")?.0);
+        }
+        self.expect(&TokKind::RParen, "`)`")?;
+        Ok(TransposeSpec { target, from_layout, to_layout, from_dtype, to_dtype, offset })
+    }
+
+    fn kernel(&mut self) -> Result<KernelSpec, DslError> {
+        let (op_name, offset) = self.ident("an operation (e.g. gemm, conv2d_fprop)")?;
+        self.expect(&TokKind::LParen, "`(` after operation name")?;
+        let op_args = self.args()?;
+        let mut spec = KernelSpec { op_name, op_args, configs: vec![], epilogue: vec![], offset };
+        loop {
+            match self.peek().kind.clone() {
+                TokKind::Dot => {
+                    self.next();
+                    let (name, coff) = self.ident("a .with_* configuration")?;
+                    self.expect(&TokKind::LParen, "`(`")?;
+                    let args = self.args()?;
+                    spec.configs.push(ConfigCall { name, args, offset: coff });
+                }
+                TokKind::Chain => {
+                    self.next();
+                    let (name, eoff) = self.ident("an epilogue op (e.g. relu, bias)")?;
+                    self.expect(&TokKind::LParen, "`(`")?;
+                    let args = self.args()?;
+                    spec.epilogue.push(EpilogueCall { name, args, offset: eoff });
+                }
+                _ => break,
+            }
+        }
+        Ok(spec)
+    }
+
+    /// Parse a call argument list up to and including the closing `)`.
+    fn args(&mut self) -> Result<Vec<Arg>, DslError> {
+        let mut out = Vec::new();
+        if self.peek().kind == TokKind::RParen {
+            self.next();
+            return Ok(out);
+        }
+        loop {
+            out.push(self.arg()?);
+            match self.peek().kind {
+                TokKind::Comma => {
+                    self.next();
+                }
+                TokKind::RParen => {
+                    self.next();
+                    return Ok(out);
+                }
+                _ => {
+                    return Err(self.err(
+                        &format!(
+                            "expected `,` or `)` in argument list, found {}",
+                            self.peek().kind.describe()
+                        ),
+                        "arguments are comma-separated: .with_tile(m=128, n=128, k=32)",
+                    ))
+                }
+            }
+        }
+    }
+
+    fn arg(&mut self) -> Result<Arg, DslError> {
+        let offset = self.peek().start;
+        // named argument: ident '=' value
+        if let TokKind::Ident(name) = self.peek().kind.clone() {
+            if self.toks.get(self.i + 1).map(|t| &t.kind) == Some(&TokKind::Equals) {
+                self.next(); // ident
+                self.next(); // '='
+                let value = self.value()?;
+                return Ok(Arg { name: Some(name), value, offset });
+            }
+        }
+        let value = self.value()?;
+        Ok(Arg { name: None, value, offset })
+    }
+
+    fn value(&mut self) -> Result<ArgValue, DslError> {
+        match self.peek().kind.clone() {
+            TokKind::Ident(s) => {
+                self.next();
+                Ok(ArgValue::Ident(s))
+            }
+            TokKind::Int(v) => {
+                self.next();
+                Ok(ArgValue::Int(v))
+            }
+            TokKind::Float(v) => {
+                self.next();
+                Ok(ArgValue::Float(v))
+            }
+            TokKind::Str(s) => {
+                self.next();
+                Ok(ArgValue::Str(s))
+            }
+            TokKind::LBrace => {
+                self.next();
+                let mut pairs = Vec::new();
+                if self.peek().kind == TokKind::RBrace {
+                    self.next();
+                    return Ok(ArgValue::Dict(pairs));
+                }
+                loop {
+                    let key = match self.peek().kind.clone() {
+                        TokKind::Str(s) => {
+                            self.next();
+                            s
+                        }
+                        TokKind::Ident(s) => {
+                            self.next();
+                            s
+                        }
+                        other => {
+                            return Err(self.err(
+                                &format!("expected dict key, found {}", other.describe()),
+                                "custom() inputs use quoted keys: inputs={'y': 'tensor'}",
+                            ))
+                        }
+                    };
+                    self.expect(&TokKind::Colon, "`:` in dict")?;
+                    let val = match self.peek().kind.clone() {
+                        TokKind::Str(s) => {
+                            self.next();
+                            s
+                        }
+                        TokKind::Ident(s) => {
+                            self.next();
+                            s
+                        }
+                        other => {
+                            return Err(self.err(
+                                &format!("expected dict value, found {}", other.describe()),
+                                "",
+                            ))
+                        }
+                    };
+                    pairs.push((key, val));
+                    match self.peek().kind {
+                        TokKind::Comma => {
+                            self.next();
+                        }
+                        TokKind::RBrace => {
+                            self.next();
+                            return Ok(ArgValue::Dict(pairs));
+                        }
+                        _ => {
+                            return Err(self.err(
+                                &format!(
+                                    "expected `,` or `}}` in dict, found {}",
+                                    self.peek().kind.describe()
+                                ),
+                                "",
+                            ))
+                        }
+                    }
+                }
+            }
+            other => Err(self.err(
+                &format!("expected an argument value, found {}", other.describe()),
+                "",
+            )),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_bare_gemm() {
+        let p = parse("gemm()").unwrap();
+        match p {
+            Program::Kernel(k) => {
+                assert_eq!(k.op_name, "gemm");
+                assert!(k.configs.is_empty());
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parses_full_kernel() {
+        let src = "gemm().with_dtype(input=fp16, acc=fp32, output=fp16)\
+                   .with_arch(sm_90a).with_threadblockshape(m=128, n=128, k=64)\
+                   >> bias() >> relu()";
+        match parse(src).unwrap() {
+            Program::Kernel(k) => {
+                assert_eq!(k.configs.len(), 3);
+                assert_eq!(k.epilogue.len(), 2);
+                assert_eq!(k.epilogue[0].name, "bias");
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parses_conv_with_args() {
+        match parse("conv2d_fprop(kernel_h=3, kernel_w=3).with_arch(sm_80)").unwrap() {
+            Program::Kernel(k) => {
+                assert_eq!(k.op_args.len(), 2);
+                assert_eq!(k.op_args[0].name.as_deref(), Some("kernel_h"));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parses_pipeline_with_transpose() {
+        let src = "pipeline(transpose(input, NCL, NLC, fp32, fp16), \
+                   gemm().with_arch(sm_90a), transpose(output, NLC, NCL, fp16, fp32))";
+        match parse(src).unwrap() {
+            Program::Pipeline(stages) => {
+                assert_eq!(stages.len(), 3);
+                assert!(matches!(&stages[0], Stage::Transpose(t) if t.target == "input"));
+                assert!(matches!(&stages[1], Stage::Kernel(_)));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parses_custom_epilogue() {
+        let src = "gemm() >> custom('x * 2 + y', inputs={'y': 'tensor'})";
+        match parse(src).unwrap() {
+            Program::Kernel(k) => {
+                assert_eq!(k.epilogue[0].name, "custom");
+                assert!(matches!(&k.epilogue[0].args[0].value, ArgValue::Str(s) if s.contains("x * 2")));
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn error_on_trailing_tokens() {
+        let e = parse("gemm() gemm()").unwrap_err();
+        assert_eq!(e.kind, DslErrorKind::Parse);
+        assert!(e.to_string().contains("trailing"));
+    }
+
+    #[test]
+    fn error_on_missing_paren() {
+        assert!(parse("gemm(").is_err());
+        assert!(parse("gemm").is_err());
+        assert!(parse("gemm().with_tile m=1").is_err());
+    }
+
+    #[test]
+    fn parses_scale_positional_float() {
+        match parse("gemm() >> scale(0.5)").unwrap() {
+            Program::Kernel(k) => {
+                assert!(matches!(k.epilogue[0].args[0].value, ArgValue::Float(v) if v == 0.5));
+            }
+            _ => panic!(),
+        }
+    }
+}

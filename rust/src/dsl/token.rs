@@ -1,0 +1,247 @@
+//! Lexer for µCUTLASS. Clean, unquoted syntax — string quotes appear only
+//! in `custom('expr', ...)` expressions (paper Appendix A.1).
+
+use super::error::{DslError, DslErrorKind};
+
+/// A token with its source span (byte offsets) for error reporting.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Token {
+    pub kind: TokKind,
+    pub start: usize,
+    pub end: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TokKind {
+    /// Identifier or keyword: `gemm`, `fp16`, `RowMajor`, `with_tile`, …
+    Ident(String),
+    /// Integer literal.
+    Int(u64),
+    /// Float literal (only in epilogue params / scaling).
+    Float(f64),
+    /// Single-quoted string, for `custom('expr')`.
+    Str(String),
+    LParen,
+    RParen,
+    LBrace,
+    RBrace,
+    Comma,
+    Colon,
+    Equals,
+    Dot,
+    /// The epilogue-composition operator `>>`.
+    Chain,
+    Eof,
+}
+
+impl TokKind {
+    pub fn describe(&self) -> String {
+        match self {
+            TokKind::Ident(s) => format!("identifier `{s}`"),
+            TokKind::Int(v) => format!("integer `{v}`"),
+            TokKind::Float(v) => format!("float `{v}`"),
+            TokKind::Str(s) => format!("string '{s}'"),
+            TokKind::LParen => "`(`".into(),
+            TokKind::RParen => "`)`".into(),
+            TokKind::LBrace => "`{`".into(),
+            TokKind::RBrace => "`}`".into(),
+            TokKind::Comma => "`,`".into(),
+            TokKind::Colon => "`:`".into(),
+            TokKind::Equals => "`=`".into(),
+            TokKind::Dot => "`.`".into(),
+            TokKind::Chain => "`>>`".into(),
+            TokKind::Eof => "end of input".into(),
+        }
+    }
+}
+
+/// Tokenize a µCUTLASS source string. `#`-comments run to end of line.
+pub fn lex(src: &str) -> Result<Vec<Token>, DslError> {
+    let b = src.as_bytes();
+    let mut toks = Vec::new();
+    let mut i = 0;
+    while i < b.len() {
+        let c = b[i];
+        match c {
+            b' ' | b'\t' | b'\n' | b'\r' => i += 1,
+            b'#' => {
+                while i < b.len() && b[i] != b'\n' {
+                    i += 1;
+                }
+            }
+            b'(' => {
+                toks.push(Token { kind: TokKind::LParen, start: i, end: i + 1 });
+                i += 1;
+            }
+            b')' => {
+                toks.push(Token { kind: TokKind::RParen, start: i, end: i + 1 });
+                i += 1;
+            }
+            b'{' => {
+                toks.push(Token { kind: TokKind::LBrace, start: i, end: i + 1 });
+                i += 1;
+            }
+            b'}' => {
+                toks.push(Token { kind: TokKind::RBrace, start: i, end: i + 1 });
+                i += 1;
+            }
+            b',' => {
+                toks.push(Token { kind: TokKind::Comma, start: i, end: i + 1 });
+                i += 1;
+            }
+            b':' => {
+                toks.push(Token { kind: TokKind::Colon, start: i, end: i + 1 });
+                i += 1;
+            }
+            b'=' => {
+                toks.push(Token { kind: TokKind::Equals, start: i, end: i + 1 });
+                i += 1;
+            }
+            b'.' => {
+                toks.push(Token { kind: TokKind::Dot, start: i, end: i + 1 });
+                i += 1;
+            }
+            b'>' => {
+                if i + 1 < b.len() && b[i + 1] == b'>' {
+                    toks.push(Token { kind: TokKind::Chain, start: i, end: i + 2 });
+                    i += 2;
+                } else {
+                    return Err(DslError::at(
+                        DslErrorKind::Lex,
+                        i,
+                        "stray `>`",
+                        "the epilogue-composition operator is `>>` (two angle brackets)",
+                    ));
+                }
+            }
+            b'\'' => {
+                let start = i;
+                i += 1;
+                let mut s = String::new();
+                while i < b.len() && b[i] != b'\'' {
+                    s.push(b[i] as char);
+                    i += 1;
+                }
+                if i >= b.len() {
+                    return Err(DslError::at(
+                        DslErrorKind::Lex,
+                        start,
+                        "unterminated string literal",
+                        "custom() expressions use single quotes: custom('relu(x) * 2')",
+                    ));
+                }
+                i += 1; // closing quote
+                toks.push(Token { kind: TokKind::Str(s), start, end: i });
+            }
+            b'-' | b'0'..=b'9' => {
+                let start = i;
+                if c == b'-' {
+                    i += 1;
+                }
+                while i < b.len() && b[i].is_ascii_digit() {
+                    i += 1;
+                }
+                let mut is_float = false;
+                if i + 1 < b.len() && b[i] == b'.' && b[i + 1].is_ascii_digit() {
+                    is_float = true;
+                    i += 1;
+                    while i < b.len() && b[i].is_ascii_digit() {
+                        i += 1;
+                    }
+                }
+                // exponent
+                if i < b.len() && (b[i] == b'e' || b[i] == b'E') {
+                    let save = i;
+                    i += 1;
+                    if i < b.len() && (b[i] == b'+' || b[i] == b'-') {
+                        i += 1;
+                    }
+                    if i < b.len() && b[i].is_ascii_digit() {
+                        is_float = true;
+                        while i < b.len() && b[i].is_ascii_digit() {
+                            i += 1;
+                        }
+                    } else {
+                        i = save;
+                    }
+                }
+                let text = &src[start..i];
+                let kind = if is_float || text.starts_with('-') && text.contains('.') {
+                    TokKind::Float(text.parse().map_err(|_| {
+                        DslError::at(DslErrorKind::Lex, start, "malformed number", "")
+                    })?)
+                } else if let Ok(v) = text.parse::<u64>() {
+                    TokKind::Int(v)
+                } else {
+                    TokKind::Float(text.parse().map_err(|_| {
+                        DslError::at(DslErrorKind::Lex, start, "malformed number", "")
+                    })?)
+                };
+                toks.push(Token { kind, start, end: i });
+            }
+            b'a'..=b'z' | b'A'..=b'Z' | b'_' => {
+                let start = i;
+                while i < b.len()
+                    && (b[i].is_ascii_alphanumeric() || b[i] == b'_')
+                {
+                    i += 1;
+                }
+                toks.push(Token {
+                    kind: TokKind::Ident(src[start..i].to_string()),
+                    start,
+                    end: i,
+                });
+            }
+            _ => {
+                return Err(DslError::at(
+                    DslErrorKind::Lex,
+                    i,
+                    &format!("unexpected character `{}`", c as char),
+                    "µCUTLASS uses unquoted identifiers, `.` chaining, and `>>` epilogues",
+                ));
+            }
+        }
+    }
+    toks.push(Token { kind: TokKind::Eof, start: b.len(), end: b.len() });
+    Ok(toks)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lexes_kernel_line() {
+        let toks = lex("gemm().with_arch(sm_90a) >> relu()").unwrap();
+        let kinds: Vec<_> = toks.iter().map(|t| &t.kind).collect();
+        assert!(matches!(kinds[0], TokKind::Ident(s) if s == "gemm"));
+        assert!(kinds.iter().any(|k| matches!(k, TokKind::Chain)));
+    }
+
+    #[test]
+    fn lexes_numbers() {
+        let toks = lex("with_tile(m=128, n=64) scale(0.5) elu(-1.5)").unwrap();
+        assert!(toks.iter().any(|t| t.kind == TokKind::Int(128)));
+        assert!(toks.iter().any(|t| t.kind == TokKind::Float(0.5)));
+        assert!(toks.iter().any(|t| t.kind == TokKind::Float(-1.5)));
+    }
+
+    #[test]
+    fn lexes_custom_string() {
+        let toks = lex("custom('x * 2 + y', inputs={'y': 'tensor'})").unwrap();
+        assert!(toks.iter().any(|t| matches!(&t.kind, TokKind::Str(s) if s == "x * 2 + y")));
+    }
+
+    #[test]
+    fn rejects_stray_angle() {
+        assert!(lex("gemm() > relu()").is_err());
+    }
+
+    #[test]
+    fn comments_skipped() {
+        let toks = lex("gemm() # a comment\n.with_arch(sm_90a)").unwrap();
+        assert!(!toks
+            .iter()
+            .any(|t| matches!(&t.kind, TokKind::Ident(s) if s == "comment")));
+    }
+}

@@ -1,0 +1,619 @@
+//! Constraint validation — the compiler-enforced CONSTRAINTS block of the
+//! paper's Appendix A.1 grammar, plus the operator/feature gating of
+//! Table 1. This is where µCUTLASS earns its keep: invalid configurations
+//! are rejected *statically*, before any compile/run/profile attempt.
+
+use super::error::{DslError, DslErrorKind};
+use super::ir::*;
+
+/// SMEM capacity per SM on SM90 (228 KB usable) and the reserved slack the
+/// grammar's stage formula subtracts (8 KB).
+pub const SM90_SMEM_BYTES: u64 = 228 * 1024;
+pub const SM90_SMEM_RESERVED: u64 = 8 * 1024;
+
+/// Validate a lowered program against all static constraints.
+pub fn validate(prog: &ProgramIr) -> Result<(), DslError> {
+    match prog {
+        ProgramIr::Kernel(k) => validate_kernel(k),
+        ProgramIr::Pipeline(p) => validate_pipeline(p),
+    }
+}
+
+fn validate_pipeline(p: &PipelineIr) -> Result<(), DslError> {
+    let n_kernels = p.stages.iter().filter(|s| matches!(s, StageIr::Kernel(_))).count();
+    if n_kernels == 0 {
+        return Err(DslError::new(
+            DslErrorKind::Constraint,
+            "pipeline has no kernel stage",
+            "a pipeline orchestrates transforms around at least one kernel: pipeline(transpose(...), gemm()..., transpose(...))",
+        ));
+    }
+    let first_kernel = p.stages.iter().position(|s| matches!(s, StageIr::Kernel(_))).unwrap();
+    let last_kernel = p.stages.iter().rposition(|s| matches!(s, StageIr::Kernel(_))).unwrap();
+    for (i, s) in p.stages.iter().enumerate() {
+        match s {
+            StageIr::Kernel(k) => validate_kernel(k)?,
+            StageIr::Transpose { target, from_dtype, to_dtype, .. } => {
+                if target == "output" && i < first_kernel {
+                    return Err(DslError::new(
+                        DslErrorKind::Constraint,
+                        "transpose(output, ...) appears before any kernel stage",
+                        "output transforms restore layout/dtype after the kernel; put them after the kernel stage",
+                    ));
+                }
+                if target == "input" && i > last_kernel {
+                    return Err(DslError::new(
+                        DslErrorKind::Constraint,
+                        "transpose(input, ...) appears after the last kernel stage",
+                        "input transforms prepare operands; put them before the kernel stage",
+                    ));
+                }
+                if from_dtype.is_some() != to_dtype.is_some() {
+                    return Err(DslError::new(
+                        DslErrorKind::Constraint,
+                        "transpose dtype conversion needs both source and destination dtypes",
+                        "e.g. transpose(input, NCL, NLC, fp32, fp16)",
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn err(off: usize, msg: &str, hint: &str) -> DslError {
+    DslError::at(DslErrorKind::Constraint, off, msg, hint)
+}
+
+fn validate_kernel(k: &ConfigIr) -> Result<(), DslError> {
+    let off = k.offset;
+
+    // --- REQUIRED configurations ------------------------------------------
+    let arch = k.arch.ok_or_else(|| {
+        err(off, "missing required .with_arch()",
+            "every kernel must name its target architecture, e.g. .with_arch(sm_90a)")
+    })?;
+    if k.dtype_input.is_none() {
+        return Err(err(off, "missing required .with_dtype()",
+            "e.g. .with_dtype(input=fp16, acc=fp32, output=fp16)"));
+    }
+    if k.op.is_gemm_family() && k.layout_a.is_none() {
+        return Err(err(off, "missing required .with_layout() for GEMM",
+            "e.g. .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor)"));
+    }
+
+    let din = k.dtype_input.unwrap();
+    let dout = k.dtype_output.unwrap_or(din);
+    let sm90 = arch.is_sm90_plus();
+
+    // --- operator × architecture coverage (Table 1a) -----------------------
+    match &k.op {
+        Operation::GroupedGemm { .. } if arch.level() < 80 => {
+            return Err(err(off, "grouped_gemm requires SM80+",
+                "Table 1a: Grouped GEMM is supported on SM80 and newer"));
+        }
+        Operation::Conv3dWgrad { .. } if sm90 => {
+            return Err(err(off, "conv3d_wgrad is not supported on SM90+",
+                "Table 1a: Conv3d wgrad covers SM70–89 only; target sm_80/sm_89 or use a different formulation"));
+        }
+        Operation::GroupConv1d { .. } | Operation::GroupConv2d { .. }
+        | Operation::GroupConv3d { .. } => {
+            if arch.level() < 80 || sm90 {
+                return Err(err(off, "grouped convolutions are supported on SM80–89 only",
+                    "Table 1a: Grouped Conv requires SM80–89"));
+            }
+        }
+        _ => {}
+    }
+
+    // --- dtype × architecture gating ---------------------------------------
+    for d in [Some(din), k.dtype_acc, Some(dout)].into_iter().flatten() {
+        if d == DType::Bf16 && arch.level() < 80 {
+            return Err(err(off, "bf16 requires SM80+",
+                "bfloat16 tensor cores were introduced with Ampere (SM80)"));
+        }
+        if d.is_fp8() && !sm90 {
+            return Err(err(off, "fp8 requires SM90+",
+                "FP8 (e4m3/e5m2) tensor cores were introduced with Hopper (SM90)"));
+        }
+    }
+
+    // --- SM90 rule 1: always sm_90a ----------------------------------------
+    if arch == Arch::Sm90 {
+        return Err(err(off, "use sm_90a, not sm_90",
+            "the 'a' suffix enables wgmma/warp-specialized features; this applies to ALL schedules (tma, tma_cooperative, cp_async, …)"));
+    }
+
+    // --- tile spelling gating (SM90 rule 2) --------------------------------
+    if let Some(spelling) = k.tile_spelling {
+        match (spelling, sm90) {
+            (TileSpelling::WithTile, true) => {
+                return Err(err(off, ".with_tile() is rejected on SM90+",
+                    "use .with_threadblockshape(m=…, n=…, k=…) on SM90+ (SM90 constraint 2)"));
+            }
+            (TileSpelling::WithThreadblockShape, false) => {
+                return Err(err(off, ".with_threadblockshape() requires SM90+",
+                    "use .with_tile(m=…, n=…, k=…) on SM70–89"));
+            }
+            _ => {}
+        }
+    }
+
+    // --- feature gating (Table 1b) ------------------------------------------
+    if k.cluster.is_some() && !sm90 {
+        return Err(err(off, ".with_cluster() requires SM90+",
+            "thread-block clusters were introduced with Hopper"));
+    }
+    if k.scheduler.is_some() && !sm90 {
+        return Err(err(off, ".with_scheduler() requires SM90+",
+            "kernel/epilogue schedules (TMA, pingpong, cooperative) are SM90+ features; SM70–89 uses .with_swizzle()"));
+    }
+    if k.swizzle.is_some() && sm90 {
+        return Err(err(off, ".with_swizzle() is SM70–89 only",
+            "on SM90+ use .with_scheduler(tile=…) instead"));
+    }
+    if k.iterator.is_some() && sm90 {
+        return Err(err(off, ".with_iterator() is SM70–89 only", ""));
+    }
+    if k.iterator.is_some() && !k.op.is_conv_family() {
+        return Err(err(off, ".with_iterator() applies to convolutions only", ""));
+    }
+    if k.split_k.is_some() && sm90 {
+        return Err(err(off, ".with_split_k() is SM70–89 only",
+            "on SM90+ use .with_scheduler(tile=stream_k) for K-dimension parallelism"));
+    }
+    if k.operand_swap && !sm90 {
+        return Err(err(off, ".with_operand_swap() requires SM90+", ""));
+    }
+
+    // --- tile sanity ----------------------------------------------------------
+    if let Some(t) = k.tile {
+        if t.m == 0 || t.n == 0 || t.k == 0 {
+            return Err(err(off, "tile dimensions must be positive", ""));
+        }
+        if t.m % 16 != 0 || t.n % 8 != 0 || t.k % 8 != 0 {
+            return Err(err(off,
+                &format!("tile {}x{}x{} is not MMA-atom aligned", t.m, t.n, t.k),
+                "tile m must be a multiple of 16, n and k multiples of 8 (tensor-core atom shapes)"));
+        }
+        if t.m > 512 || t.n > 512 || t.k > 256 {
+            return Err(err(off,
+                &format!("tile {}x{}x{} is implausibly large", t.m, t.n, t.k),
+                "the largest practical threadblock tiles are 256x256 with k ≤ 128"));
+        }
+    }
+
+    // --- cluster sanity ---------------------------------------------------------
+    if let Some(c) = k.cluster {
+        let legal = [1u64, 2, 4, 8, 16];
+        if !legal.contains(&c.m) || !legal.contains(&c.n) || c.k != 1 {
+            return Err(err(off,
+                &format!("cluster {}x{}x{} is invalid", c.m, c.n, c.k),
+                "cluster m/n must be 1, 2, 4, 8 or 16 and cluster k must be 1"));
+        }
+        if c.m * c.n > 16 {
+            return Err(err(off, "cluster size exceeds 16 CTAs",
+                "Hopper clusters span at most 16 thread blocks"));
+        }
+    }
+
+    // --- stages sanity -----------------------------------------------------------
+    if let Some(s) = k.stages {
+        if s == 0 || s > 12 {
+            return Err(err(off, &format!("with_stages({s}) is out of range"),
+                "pipeline stages are between 1 and 12"));
+        }
+    }
+
+    // --- alignment rules -----------------------------------------------------------
+    if let Some(al) = k.alignment {
+        for (name, v) in [("A", al.a), ("B", al.b), ("C", al.c)] {
+            if v == 0 || !v.is_power_of_two() || v > 16 {
+                return Err(err(off,
+                    &format!("alignment {name}={v} is invalid"),
+                    "alignments are powers of two between 1 and 16 (elements)"));
+            }
+        }
+        // SM90 rule 3: TMA alignment — (alignment * element_size) % 16 == 0.
+        if sm90 {
+            let checks = [("A", al.a, din), ("B", al.b, din), ("C", al.c, dout)];
+            for (name, v, d) in checks {
+                if (v * d.size()) % 16 != 0 {
+                    return Err(err(off,
+                        &format!("TMA alignment violated for operand {name}: {v} elements × {} bytes = {} bytes, not a multiple of 16",
+                            d.size(), v * d.size()),
+                        "SM90 TMA requires 16-byte aligned vectors: fp16/bf16 need alignment ≥ 8, fp32 needs ≥ 4 (SM90 constraint 3)"));
+                }
+            }
+        }
+    }
+
+    // --- scheduler coupling (SM90 rules 4–6) --------------------------------------
+    if let Some(sch) = k.scheduler {
+        if sch.kernel == KernelSchedule::TmaCooperative
+            && !matches!(sch.epilogue, EpilogueSchedule::TmaCooperative | EpilogueSchedule::Auto)
+        {
+            return Err(err(off,
+                "kernel=tma_cooperative requires epilogue=tma_cooperative (or auto)",
+                "mismatched schedules cause the 'MMA_TILE_M must divide EPI_TILE_M' instantiation error (SM90 constraint 4)"));
+        }
+        let cooperative = matches!(
+            sch.kernel,
+            KernelSchedule::TmaCooperative | KernelSchedule::CpAsyncCooperative
+        );
+        if cooperative {
+            let t = k.effective_tile();
+            let cm = k.cluster.map(|c| c.m).unwrap_or(1);
+            if t.m / cm.max(1) < 128 {
+                return Err(err(off,
+                    &format!("cooperative kernel needs tile_m/cluster_m ≥ 128, got {}/{} = {}",
+                        t.m, cm, t.m / cm.max(1)),
+                    "cooperative schedules split the M tile across two warp groups; per-CTA M below 128 cannot host both (SM90 constraint 5)"));
+            }
+            if sch.kernel == KernelSchedule::TmaCooperative && k.stages.is_none() {
+                return Err(err(off,
+                    "kernel=tma_cooperative requires explicit .with_stages(…)",
+                    "stage count must be stated so the SMEM budget is checkable: stages = (228KB - epilogue_smem - 8KB) / per_stage_smem (SM90 constraint 6)"));
+            }
+        }
+    }
+
+    // --- SMEM stage budget (SM90 rule 6) -------------------------------------------
+    if sm90 {
+        if let (Some(stages), Some(t)) = (k.stages, k.tile) {
+            let per_stage = (t.m * t.k + t.k * t.n) * din.size();
+            let epi_smem = epilogue_smem_bytes(k, t, dout);
+            let budget = SM90_SMEM_BYTES - SM90_SMEM_RESERVED;
+            let need = stages * per_stage + epi_smem;
+            if need > budget {
+                let max_stages = if per_stage == 0 { 0 } else { (budget.saturating_sub(epi_smem)) / per_stage };
+                return Err(err(off,
+                    &format!(
+                        "SMEM budget exceeded: {stages} stages × {per_stage} B/stage + {epi_smem} B epilogue = {need} B > {budget} B"),
+                    &format!("large tiles exhaust shared memory; this tile supports at most {max_stages} stage(s) — use a smaller tile, fp16/bf16 inputs, .with_stages({}), or epilogue=no_smem (SM90 constraint 6)",
+                        max_stages.max(1))));
+            }
+        }
+    }
+
+    // --- operand swap static half (SM90 rule 7; M==N checked at bind) ---------------
+    if k.operand_swap {
+        if !matches!(k.op, Operation::Gemm) {
+            return Err(err(off, ".with_operand_swap(true) applies to GEMM only", ""));
+        }
+        if !matches!(din, DType::Fp32 | DType::Tf32) {
+            return Err(err(off,
+                ".with_operand_swap(true) is an FP32 GEMM optimization",
+                "FP16/BF16 already use the RS GMMA variant with RowMajor B; operand swap only benefits FP32 (SM90 constraint 7)"));
+        }
+    }
+
+    // --- epilogue rules ----------------------------------------------------------------
+    if k.epilogue.len() > 8 {
+        return Err(err(off,
+            &format!("epilogue chain of {} ops is too long", k.epilogue.len()),
+            "EVT fusion supports at most 8 chained epilogue ops"));
+    }
+    let n_bias = k.epilogue.iter().filter(|e| matches!(e, EpilogueOp::Bias)).count();
+    if n_bias > 1 {
+        return Err(err(off, "bias() may appear at most once in an epilogue chain", ""));
+    }
+    for e in &k.epilogue {
+        if let EpilogueOp::Custom { expr, .. } = e {
+            if arch != Arch::Sm90a {
+                return Err(err(off,
+                    "custom() epilogue expressions require sm_90a",
+                    "custom EVT nodes are emitted through the CUTLASS 3.x CollectiveBuilder, which is SM90a-only (Table 1c)"));
+            }
+            if expr.trim().is_empty() {
+                return Err(err(off, "custom() expression is empty", ""));
+            }
+        }
+        if let EpilogueOp::Clip { lo, hi } = e {
+            if lo > hi {
+                return Err(err(off,
+                    &format!("clip range [{lo}, {hi}] is inverted"), "lo must be ≤ hi"));
+            }
+        }
+    }
+    // depthwise conv on SM90+ routes to the CuTe backend with restricted epilogues
+    if matches!(k.op, Operation::DepthwiseConv2d { .. } | Operation::DepthwiseConv1d { .. })
+        && sm90
+    {
+        let ok = k.epilogue.iter().all(|e| {
+            matches!(e, EpilogueOp::Relu | EpilogueOp::Bias | EpilogueOp::Scale { .. })
+        });
+        if !ok {
+            return Err(err(off,
+                "depthwise conv on SM90+ (CuTe backend) supports only relu/bias/scale epilogues",
+                "Table 1a: the SM90+ depthwise route has limited epilogue support; lower the arch to sm_89 or simplify the chain"));
+        }
+    }
+
+    Ok(())
+}
+
+/// Epilogue SMEM estimate used in the stage-budget formula: TMA epilogues
+/// stage the output tile through shared memory.
+fn epilogue_smem_bytes(k: &ConfigIr, t: Tile, dout: DType) -> u64 {
+    let sch = k.scheduler.unwrap_or_default();
+    match sch.epilogue {
+        EpilogueSchedule::NoSmem => 0,
+        // auto/tma/tma_cooperative: one output sub-tile (m × n/2) staged
+        _ => t.m * (t.n / 2).max(8) * dout.size() / 2,
+    }
+}
+
+/// Dimension-dependent checks run when a compiled program is bound to a
+/// concrete problem: operand-swap squareness and alignment divisibility.
+pub fn validate_bound(prog: &ProgramIr, dims: (u64, u64, u64)) -> Result<(), DslError> {
+    let (m, n, kdim) = dims;
+    for k in prog.kernels() {
+        if k.operand_swap && m != n {
+            return Err(DslError::new(
+                DslErrorKind::Bind,
+                &format!(".with_operand_swap(true) requires a square output, got M={m}, N={n}"),
+                "the (A·B)^T = B^T·A^T reinterpretation is only layout-free when M == N (SM90 constraint 7)",
+            ));
+        }
+        if let Some(al) = k.alignment {
+            for (nm, align, dim) in [("A", al.a, kdim), ("B", al.b, n), ("C", al.c, n)] {
+                if align > 0 && dim % align != 0 {
+                    return Err(DslError::new(
+                        DslErrorKind::Bind,
+                        &format!(
+                            "operand {nm} alignment {align} does not divide its contiguous dimension {dim}"),
+                        "choose an alignment that divides the problem's leading dimension, or pad the tensor",
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::{compile, compile_bound};
+
+    fn compile_err(src: &str) -> String {
+        compile(src).unwrap_err().to_string()
+    }
+
+    const SM90_BASE: &str = "gemm().with_dtype(input=fp16, acc=fp32, output=fp16)\
+        .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor).with_arch(sm_90a)";
+
+    #[test]
+    fn accepts_valid_sm90_gemm() {
+        let src = format!("{SM90_BASE}.with_threadblockshape(m=128, n=128, k=64)\
+            .with_alignment(A=8, B=8, C=8).with_stages(3)");
+        assert!(compile(&src).is_ok());
+    }
+
+    #[test]
+    fn requires_arch() {
+        let e = compile_err("gemm().with_dtype(input=fp32, acc=fp32, output=fp32)\
+            .with_layout(A=RowMajor, B=RowMajor, C=RowMajor)");
+        assert!(e.contains("with_arch"), "{e}");
+    }
+
+    #[test]
+    fn requires_dtype() {
+        let e = compile_err("gemm().with_arch(sm_80)\
+            .with_layout(A=RowMajor, B=RowMajor, C=RowMajor)");
+        assert!(e.contains("with_dtype"), "{e}");
+    }
+
+    #[test]
+    fn requires_gemm_layout() {
+        let e = compile_err("gemm().with_arch(sm_80).with_dtype(input=fp32, acc=fp32, output=fp32)");
+        assert!(e.contains("with_layout"), "{e}");
+    }
+
+    #[test]
+    fn rejects_sm90_without_a() {
+        let e = compile_err("gemm().with_dtype(input=fp16, acc=fp32, output=fp16)\
+            .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor).with_arch(sm_90)");
+        assert!(e.contains("sm_90a"), "{e}");
+    }
+
+    #[test]
+    fn rejects_with_tile_on_sm90() {
+        let e = compile_err(&format!("{SM90_BASE}.with_tile(m=128, n=128, k=32)"));
+        assert!(e.contains("with_threadblockshape"), "{e}");
+    }
+
+    #[test]
+    fn rejects_threadblockshape_on_sm80() {
+        let e = compile_err("gemm().with_dtype(input=fp16, acc=fp32, output=fp16)\
+            .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor).with_arch(sm_80)\
+            .with_threadblockshape(m=128, n=128, k=32)");
+        assert!(e.contains("SM90+"), "{e}");
+    }
+
+    #[test]
+    fn rejects_bf16_on_sm70() {
+        let e = compile_err("gemm().with_dtype(input=bf16, acc=fp32, output=bf16)\
+            .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor).with_arch(sm_70)");
+        assert!(e.contains("bf16 requires SM80+"), "{e}");
+    }
+
+    #[test]
+    fn rejects_fp8_below_sm90() {
+        let e = compile_err("gemm().with_dtype(input=fp8_e4m3, acc=fp32, output=fp16)\
+            .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor).with_arch(sm_89)");
+        assert!(e.contains("fp8 requires SM90+"), "{e}");
+    }
+
+    #[test]
+    fn rejects_tma_alignment_violation() {
+        // fp16: alignment 4 × 2 bytes = 8 bytes, not a multiple of 16
+        let e = compile_err(&format!("{SM90_BASE}.with_alignment(A=4, B=8, C=8)"));
+        assert!(e.contains("TMA alignment"), "{e}");
+    }
+
+    #[test]
+    fn fp32_alignment4_is_tma_ok() {
+        let src = "gemm().with_dtype(input=fp32, acc=fp32, output=fp32)\
+            .with_layout(A=RowMajor, B=RowMajor, C=RowMajor).with_arch(sm_90a)\
+            .with_alignment(A=4, B=4, C=4)";
+        assert!(compile(src).is_ok());
+    }
+
+    #[test]
+    fn rejects_cooperative_epilogue_mismatch() {
+        let e = compile_err(&format!(
+            "{SM90_BASE}.with_threadblockshape(m=128, n=128, k=64).with_stages(2)\
+             .with_scheduler(kernel=tma_cooperative, epilogue=tma)"));
+        assert!(e.contains("MMA_TILE_M"), "{e}");
+    }
+
+    #[test]
+    fn rejects_cooperative_small_per_cta_m() {
+        let e = compile_err(&format!(
+            "{SM90_BASE}.with_threadblockshape(m=128, n=128, k=64).with_stages(2)\
+             .with_cluster(m=2, n=1, k=1)\
+             .with_scheduler(kernel=tma_cooperative, epilogue=auto)"));
+        assert!(e.contains("128"), "{e}");
+    }
+
+    #[test]
+    fn cooperative_requires_explicit_stages() {
+        let e = compile_err(&format!(
+            "{SM90_BASE}.with_threadblockshape(m=128, n=128, k=64)\
+             .with_scheduler(kernel=tma_cooperative, epilogue=auto)"));
+        assert!(e.contains("with_stages"), "{e}");
+    }
+
+    #[test]
+    fn rejects_smem_exhaustion() {
+        // 256x128x64 fp32 tiles: per stage (256*64 + 64*128)*4 = 98 KB;
+        // 3 stages ≈ 295 KB >> 220 KB budget.
+        let e = compile_err("gemm().with_dtype(input=fp32, acc=fp32, output=fp32)\
+            .with_layout(A=RowMajor, B=RowMajor, C=RowMajor).with_arch(sm_90a)\
+            .with_threadblockshape(m=256, n=128, k=64).with_stages(3)");
+        assert!(e.contains("SMEM budget"), "{e}");
+        assert!(e.contains("at most"), "{e}");
+    }
+
+    #[test]
+    fn operand_swap_fp32_only() {
+        let e = compile_err(&format!("{SM90_BASE}.with_operand_swap(true)"));
+        assert!(e.contains("FP32"), "{e}");
+    }
+
+    #[test]
+    fn operand_swap_bind_requires_square() {
+        let src = "gemm().with_dtype(input=fp32, acc=fp32, output=fp32)\
+            .with_layout(A=RowMajor, B=RowMajor, C=RowMajor).with_arch(sm_90a)\
+            .with_operand_swap(true)";
+        assert!(compile_bound(src, (1024, 1024, 512)).is_ok());
+        let e = compile_bound(src, (1024, 512, 512)).unwrap_err();
+        assert_eq!(e.kind, DslErrorKind::Bind);
+        assert!(e.to_string().contains("square"), "{e}");
+    }
+
+    #[test]
+    fn bind_alignment_divisibility() {
+        let src = "gemm().with_dtype(input=fp16, acc=fp32, output=fp16)\
+            .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor).with_arch(sm_90a)\
+            .with_alignment(A=8, B=8, C=8)";
+        assert!(compile_bound(src, (128, 128, 128)).is_ok());
+        let e = compile_bound(src, (128, 128, 100)).unwrap_err();
+        assert!(e.to_string().contains("alignment"), "{e}");
+    }
+
+    #[test]
+    fn rejects_custom_epilogue_below_sm90a() {
+        let e = compile_err("gemm().with_dtype(input=fp16, acc=fp32, output=fp16)\
+            .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor).with_arch(sm_80)\
+            .with_tile(m=128, n=128, k=32) >> custom('x * 2')");
+        assert!(e.contains("sm_90a"), "{e}");
+    }
+
+    #[test]
+    fn rejects_conv3d_wgrad_on_sm90() {
+        let e = compile_err("conv3d_wgrad(kernel_d=3, kernel_h=3, kernel_w=3)\
+            .with_dtype(input=fp16, acc=fp32, output=fp16).with_arch(sm_90a)");
+        assert!(e.contains("SM90"), "{e}");
+    }
+
+    #[test]
+    fn rejects_grouped_conv_outside_sm80_89() {
+        let e = compile_err("group_conv2d(kernel_h=3, kernel_w=3, groups=4)\
+            .with_dtype(input=fp16, acc=fp32, output=fp16).with_arch(sm_90a)");
+        assert!(e.contains("SM80–89"), "{e}");
+        let e = compile_err("group_conv2d(kernel_h=3, kernel_w=3, groups=4)\
+            .with_dtype(input=fp16, acc=fp32, output=fp16).with_arch(sm_70)");
+        assert!(e.contains("SM80–89"), "{e}");
+    }
+
+    #[test]
+    fn rejects_swizzle_on_sm90() {
+        let e = compile_err(&format!("{SM90_BASE}.with_swizzle(pattern=Identity4)"));
+        assert!(e.contains("SM70–89"), "{e}");
+    }
+
+    #[test]
+    fn rejects_scheduler_on_sm80() {
+        let e = compile_err("gemm().with_dtype(input=fp16, acc=fp32, output=fp16)\
+            .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor).with_arch(sm_80)\
+            .with_scheduler(kernel=tma)");
+        assert!(e.contains("SM90+"), "{e}");
+    }
+
+    #[test]
+    fn rejects_bad_cluster() {
+        let e = compile_err(&format!("{SM90_BASE}.with_cluster(m=3, n=1, k=1)"));
+        assert!(e.contains("cluster"), "{e}");
+    }
+
+    #[test]
+    fn rejects_misaligned_tile() {
+        let e = compile_err(&format!("{SM90_BASE}.with_threadblockshape(m=100, n=128, k=32)"));
+        assert!(e.contains("MMA-atom"), "{e}");
+    }
+
+    #[test]
+    fn rejects_inverted_clip() {
+        let e = compile_err(&format!("{SM90_BASE} >> clip(lo=2.0, hi=1.0)"));
+        assert!(e.contains("inverted"), "{e}");
+    }
+
+    #[test]
+    fn rejects_double_bias() {
+        let e = compile_err(&format!("{SM90_BASE} >> bias() >> relu() >> bias()"));
+        assert!(e.contains("bias"), "{e}");
+    }
+
+    #[test]
+    fn pipeline_checks_transform_placement() {
+        let e = compile(
+            "pipeline(transpose(output, NLC, NCL), gemm()\
+             .with_dtype(input=fp16, acc=fp32, output=fp16)\
+             .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor).with_arch(sm_90a))",
+        )
+        .unwrap_err();
+        assert!(e.to_string().contains("before any kernel"), "{e}");
+    }
+
+    #[test]
+    fn valid_pipeline_accepted() {
+        let src = "pipeline(transpose(input, NCL, NLC, fp32, fp16), \
+            gemm().with_dtype(input=fp16, acc=fp32, output=fp16)\
+            .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor).with_arch(sm_90a), \
+            transpose(output, NLC, NCL, fp16, fp32))";
+        assert!(compile(src).is_ok());
+    }
+
+    #[test]
+    fn depthwise_sm90_epilogue_restrictions() {
+        let ok = "depthwise_conv2d(kernel_h=3, kernel_w=3)\
+            .with_dtype(input=fp16, acc=fp32, output=fp16).with_arch(sm_90a) >> relu()";
+        assert!(compile(ok).is_ok());
+        let bad = "depthwise_conv2d(kernel_h=3, kernel_w=3)\
+            .with_dtype(input=fp16, acc=fp32, output=fp16).with_arch(sm_90a) >> gelu()";
+        assert!(compile(bad).unwrap_err().to_string().contains("CuTe"), );
+    }
+}

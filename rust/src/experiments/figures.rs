@@ -1,0 +1,905 @@
+//! One driver per paper figure/table (§6). Each regenerates the figure's
+//! rows/series from fresh seeded runs, renders a text report, and writes
+//! CSVs into the output directory.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use crate::agent::controller::{ControllerKind, VariantSpec};
+use crate::agent::{GamingType, ModelTier, RunLog, SolutionKind};
+use crate::integrity::{outcome_counts, IntegrityPipeline, ReviewLabel};
+use crate::mantis::MantisConfig;
+use crate::metrics;
+use crate::report::{ascii_plot, table, write_csv};
+use crate::scheduler::{self, Policy};
+use crate::util::stats;
+
+use super::archive::{generate_archive, review_archive, EvoParams};
+use super::runner::{main_variants, run_variant, Bench};
+
+/// Shared experiment context with a run-log cache (several figures reuse
+/// the same variant runs).
+pub struct ExpCtx {
+    pub bench: Bench,
+    pub outdir: PathBuf,
+    pub seed: u64,
+    pub review_seed: u64,
+    pub pipeline: IntegrityPipeline,
+    cache: BTreeMap<String, RunLog>,
+}
+
+impl ExpCtx {
+    pub fn new(outdir: impl Into<PathBuf>, seed: u64) -> Self {
+        ExpCtx {
+            bench: Bench::new(),
+            outdir: outdir.into(),
+            seed,
+            review_seed: seed ^ 0xBEEF,
+            pipeline: IntegrityPipeline::default(),
+            cache: BTreeMap::new(),
+        }
+    }
+
+    fn key(spec: &VariantSpec, seed: u64, cfg: Option<&MantisConfig>) -> String {
+        format!("{}|{}|{:?}|{}|{}", spec.label(), seed, cfg.map(|c| format!("{c:?}")), spec.guardrails, spec.online_integrity)
+    }
+
+    /// Run (or fetch cached) one variant over the suite.
+    pub fn log(&mut self, spec: &VariantSpec, cfg: Option<&MantisConfig>) -> &RunLog {
+        self.log_seeded(spec, self.seed, cfg)
+    }
+
+    pub fn log_seeded(&mut self, spec: &VariantSpec, seed: u64, cfg: Option<&MantisConfig>) -> &RunLog {
+        let key = Self::key(spec, seed, cfg);
+        if !self.cache.contains_key(&key) {
+            let log = run_variant(&self.bench, spec, seed, cfg);
+            self.cache.insert(key.clone(), log);
+        }
+        self.cache.get(&key).unwrap()
+    }
+
+    /// Integrity-filtered per-problem speedups (1.0 fallback).
+    pub fn filtered_speedups(&self, log: &RunLog) -> Vec<f64> {
+        log.runs
+            .iter()
+            .map(|r| self.pipeline.filtered_speedup(r, self.review_seed).unwrap_or(1.0))
+            .collect()
+    }
+
+    fn save(&self, name: &str, text: &str) {
+        let p = self.outdir.join(name);
+        if let Some(parent) = p.parent() {
+            let _ = std::fs::create_dir_all(parent);
+        }
+        let _ = std::fs::write(&p, text);
+    }
+}
+
+fn sol_label(tier: ModelTier, dsl: bool) -> ControllerKind {
+    match (tier, dsl) {
+        (ModelTier::Max, true) => ControllerKind::InPromptSol,
+        _ => ControllerKind::OrchestratedSol,
+    }
+}
+
+// ===========================================================================
+// Figure 3: geomean speedups, 4 main variants × 3 tiers
+// ===========================================================================
+pub fn fig3(ctx: &mut ExpCtx) -> String {
+    let mut rows = Vec::new();
+    let mut csv = Vec::new();
+    for tier in ModelTier::ALL {
+        for spec in main_variants(tier) {
+            let log = ctx.log(&spec, None).clone();
+            let sp = ctx.filtered_speedups(&log);
+            let geo = metrics::geomean_speedup(&sp);
+            let med = metrics::median_speedup(&sp);
+            rows.push(vec![
+                spec.label(),
+                format!("{geo:.2}x"),
+                format!("{med:.2}x"),
+                format!("{}", sp.iter().filter(|&&s| s > 1.0).count()),
+                format!("{}", sp.iter().filter(|&&s| s >= 2.0).count()),
+            ]);
+            csv.push(vec![spec.label(), format!("{geo}"), format!("{med}")]);
+        }
+    }
+    let t = table(&["variant", "geomean", "median", ">1x (of 59)", ">=2x"], &rows);
+    let _ = write_csv(&ctx.outdir.join("fig3.csv"), &["variant", "geomean", "median"], &csv);
+    let out = format!("== Figure 3: geomean speedup over PyTorch (integrity-filtered) ==\n{t}");
+    ctx.save("fig3.txt", &out);
+    out
+}
+
+// ===========================================================================
+// Figure 4: Fast-p + Attempt-Fast-p(2) per tier
+// ===========================================================================
+pub fn fig4(ctx: &mut ExpCtx) -> String {
+    let grid = metrics::default_grid();
+    let mut out = String::from("== Figure 4: Fast-p and Attempt-Fast-p(2) per tier ==\n");
+    for tier in ModelTier::ALL {
+        let mut series_data: Vec<(String, Vec<f64>, Vec<f64>)> = Vec::new();
+        for spec in main_variants(tier) {
+            let log = ctx.log(&spec, None).clone();
+            let sp = ctx.filtered_speedups(&log);
+            let fp = metrics::fast_p(&sp, &grid);
+            // best-so-far progression for attempt-fast-p (unfiltered online view)
+            let prog: Vec<Vec<f64>> = log
+                .runs
+                .iter()
+                .map(|r| {
+                    (1..=r.attempts.len())
+                        .map(|n| r.best_time_after(n).map(|t| r.t_ref_ms / t).unwrap_or(0.0))
+                        .collect()
+                })
+                .collect();
+            let afp = metrics::attempt_fast_p(&prog, 2.0);
+            series_data.push((spec.label(), fp.pct, afp));
+        }
+        let refs: Vec<(&str, &[f64])> =
+            series_data.iter().map(|(n, fp, _)| (n.as_str(), fp.as_slice())).collect();
+        out.push_str(&ascii_plot(
+            &format!("--- Fast-p, {} ---", tier.name()),
+            &grid,
+            &refs,
+            72,
+            16,
+            true,
+        ));
+        let attempts_x: Vec<f64> = (1..=40).map(|a| a as f64).collect();
+        let refs2: Vec<(&str, &[f64])> =
+            series_data.iter().map(|(n, _, a)| (n.as_str(), a.as_slice())).collect();
+        out.push_str(&ascii_plot(
+            &format!("--- Attempt-Fast-p(2), {} ---", tier.name()),
+            &attempts_x,
+            &refs2,
+            72,
+            12,
+            false,
+        ));
+        // CSV per tier
+        let mut rows = Vec::new();
+        for (i, &r) in grid.iter().enumerate() {
+            let mut row = vec![format!("{r}")];
+            for (_, fp, _) in &series_data {
+                row.push(format!("{}", fp[i]));
+            }
+            rows.push(row);
+        }
+        let headers: Vec<String> =
+            std::iter::once("r".to_string()).chain(series_data.iter().map(|(n, _, _)| n.clone())).collect();
+        let hrefs: Vec<&str> = headers.iter().map(|s| s.as_str()).collect();
+        let _ = write_csv(&ctx.outdir.join(format!("fig4_fastp_{}.csv", tier.name())), &hrefs, &rows);
+    }
+    ctx.save("fig4.txt", &out);
+    out
+}
+
+// ===========================================================================
+// Figure 5: orchestrated vs in-prompt signed areas
+// ===========================================================================
+pub fn fig5(ctx: &mut ExpCtx) -> String {
+    let grid = metrics::default_grid();
+    let mut rows = Vec::new();
+    for tier in ModelTier::ALL {
+        for dsl in [false, true] {
+            let orch = ctx
+                .log(&VariantSpec::new(ControllerKind::OrchestratedSol, dsl, tier), None)
+                .clone();
+            let inp = ctx
+                .log(&VariantSpec::new(ControllerKind::InPromptSol, dsl, tier), None)
+                .clone();
+            let fo = metrics::fast_p(&ctx.filtered_speedups(&orch), &grid);
+            let fi = metrics::fast_p(&ctx.filtered_speedups(&inp), &grid);
+            let area = metrics::signed_area(&fo, &fi);
+            rows.push(vec![
+                tier.name().to_string(),
+                if dsl { "+µCUTLASS".into() } else { "w/o µCUTLASS".into() },
+                format!("{area:+.2}"),
+                if area > 0.0 { "orchestrated".into() } else { "in-prompt".into() },
+            ]);
+        }
+    }
+    let t = table(&["tier", "dsl", "signed area (orch - in-prompt)", "winner"], &rows);
+    let out = format!(
+        "== Figure 5: orchestrated vs in-prompt SOL steering ==\n\
+         (positive signed area: orchestrated Fast-p curve lies higher)\n{t}"
+    );
+    let _ = write_csv(
+        &ctx.outdir.join("fig5.csv"),
+        &["tier", "dsl", "signed_area"],
+        &rows.iter().map(|r| r[..3].to_vec()).collect::<Vec<_>>(),
+    );
+    ctx.save("fig5.txt", &out);
+    out
+}
+
+// ===========================================================================
+// Figure 6: MANTIS component ablations
+// ===========================================================================
+pub fn fig6(ctx: &mut ExpCtx) -> String {
+    let ablations = ["MANTIS", "MNTIS", "MANIS", "MANTI", "MANTIS-noXmem"];
+    // the configurations where orchestration matters (paper §6.1.2)
+    let settings = [
+        (ModelTier::Max, false, "gpt-5.2 w/o µCUTLASS"),
+        (ModelTier::Mini, false, "gpt-5-mini w/o µCUTLASS"),
+        (ModelTier::Mini, true, "gpt-5-mini + µCUTLASS"),
+    ];
+    let mut out = String::from("== Figure 6: MANTIS component ablations ==\n");
+    let mut csv = Vec::new();
+    for (tier, dsl, label) in settings {
+        let mut rows = Vec::new();
+        for name in ablations {
+            let cfg = MantisConfig::ablation(name);
+            let spec = VariantSpec::new(ControllerKind::OrchestratedSol, dsl, tier);
+            let log = ctx.log(&spec, Some(&cfg)).clone();
+            let sp = ctx.filtered_speedups(&log);
+            let geo = metrics::geomean_speedup(&sp);
+            rows.push(vec![name.to_string(), format!("{geo:.2}x")]);
+            csv.push(vec![label.to_string(), name.to_string(), format!("{geo}")]);
+        }
+        out.push_str(&format!("--- {label} ---\n{}", table(&["config", "geomean"], &rows)));
+    }
+    let _ = write_csv(&ctx.outdir.join("fig6.csv"), &["setting", "ablation", "geomean"], &csv);
+    ctx.save("fig6.txt", &out);
+    out
+}
+
+// ===========================================================================
+// Figure 7: independent scheduler parameter sweeps (ε / w)
+// ===========================================================================
+pub fn fig7(ctx: &mut ExpCtx) -> String {
+    // GPT-5.2 µCUTLASS + SOL-guided, as in the paper
+    let spec = VariantSpec::new(sol_label(ModelTier::Max, true), true, ModelTier::Max);
+    let log = ctx.log(&spec, None).clone();
+    let mut out = String::from("== Figure 7: scheduler parameter sweeps (GPT-5.2 µCUTLASS+SOL) ==\n");
+    let mut rows = Vec::new();
+    out.push_str("--- (a) SOL-headroom threshold ε (w=0) ---\n");
+    for &e in &scheduler::epsilon_grid() {
+        let r = scheduler::replay(&log, &Policy { epsilon: e, window: 0 }, &ctx.pipeline, ctx.review_seed);
+        rows.push(vec![
+            format!("ε={}%", (e * 100.0) as u64),
+            format!("{:.0}%", r.token_savings() * 100.0),
+            format!("{:.0}%", r.attempt_savings(40) * 100.0),
+            format!("{:.0}%", r.geomean_retention() * 100.0),
+            format!("{:.0}%", r.median_retention() * 100.0),
+        ]);
+    }
+    out.push_str(&table(&["policy", "token savings", "attempt savings", "geo retention", "median retention"], &rows));
+    let mut rows2 = Vec::new();
+    out.push_str("--- (b) no-progress window w (ε=100%) ---\n");
+    for &w in &scheduler::window_grid()[1..] {
+        let r = scheduler::replay(&log, &Policy { epsilon: 1.0, window: w }, &ctx.pipeline, ctx.review_seed);
+        rows2.push(vec![
+            format!("w={w}"),
+            format!("{:.0}%", r.token_savings() * 100.0),
+            format!("{:.0}%", r.attempt_savings(40) * 100.0),
+            format!("{:.0}%", r.geomean_retention() * 100.0),
+            format!("{:.0}%", r.median_retention() * 100.0),
+        ]);
+    }
+    out.push_str(&table(&["policy", "token savings", "attempt savings", "geo retention", "median retention"], &rows2));
+    let _ = write_csv(
+        &ctx.outdir.join("fig7.csv"),
+        &["policy", "token_savings", "attempt_savings", "geo_retention", "median_retention"],
+        &rows.iter().chain(rows2.iter()).cloned().collect::<Vec<_>>(),
+    );
+    ctx.save("fig7.txt", &out);
+    out
+}
+
+/// The nine variants of the Pareto study (three per tier: µC+SOL, µC+MI,
+/// SOL-only).
+fn pareto_variants() -> Vec<VariantSpec> {
+    let mut v = Vec::new();
+    for tier in ModelTier::ALL {
+        v.push(VariantSpec::new(sol_label(tier, true), true, tier));
+        v.push(VariantSpec::new(ControllerKind::Mi, true, tier));
+        v.push(VariantSpec::new(sol_label(tier, false), false, tier));
+    }
+    v
+}
+
+// ===========================================================================
+// Figure 8: Pareto frontiers, normalized dollar cost vs geomean
+// ===========================================================================
+pub fn fig8(ctx: &mut ExpCtx) -> String {
+    let mut out = String::from("== Figure 8: scheduler-policy Pareto frontiers ==\n");
+    let mut all_points: Vec<(String, f64, f64)> = Vec::new();
+    // normalization: most expensive fixed run
+    let mut max_cost = 0.0f64;
+    let mut logs = Vec::new();
+    for spec in pareto_variants() {
+        let log = ctx.log(&spec, None).clone();
+        let cost = log.dollar_cost();
+        max_cost = max_cost.max(cost);
+        logs.push((spec, log));
+    }
+    let mut csv = Vec::new();
+    for (spec, log) in &logs {
+        let sweep = scheduler::sweep(log, &ctx.pipeline, ctx.review_seed);
+        let price = log.price_per_mtok;
+        let fixed = scheduler::replay(log, &Policy::fixed(), &ctx.pipeline, ctx.review_seed);
+        let fixed_cost = log.dollar_cost() / max_cost;
+        all_points.push((format!("{} [fixed]", spec.label()), fixed_cost, fixed.geomean_fixed));
+        let pts: Vec<(f64, f64)> = sweep
+            .iter()
+            .map(|r| (r.tokens_used as f64 / 1e6 * price / max_cost, r.geomean))
+            .collect();
+        let front = scheduler::pareto_front(&pts);
+        out.push_str(&format!(
+            "--- {} --- fixed: (cost {:.2}, geo {:.2}x); frontier ({} of {} policies):\n",
+            spec.label(),
+            fixed_cost,
+            fixed.geomean_fixed,
+            front.len(),
+            pts.len()
+        ));
+        for &i in &front {
+            out.push_str(&format!(
+                "    {}  -> (cost {:.2}, geo {:.2}x)\n",
+                sweep[i].policy.label(),
+                pts[i].0,
+                pts[i].1
+            ));
+            csv.push(vec![
+                spec.label(),
+                sweep[i].policy.label(),
+                format!("{}", pts[i].0),
+                format!("{}", pts[i].1),
+            ]);
+        }
+    }
+    let _ = write_csv(&ctx.outdir.join("fig8.csv"), &["variant", "policy", "norm_cost", "geomean"], &csv);
+    ctx.save("fig8.txt", &out);
+    out
+}
+
+// ===========================================================================
+// Figure 9: best scheduler policy per variant (efficiency gain)
+// ===========================================================================
+pub fn fig9(ctx: &mut ExpCtx) -> String {
+    let mut rows = Vec::new();
+    for spec in pareto_variants() {
+        let log = ctx.log(&spec, None).clone();
+        let sweep = scheduler::sweep(&log, &ctx.pipeline, ctx.review_seed);
+        match scheduler::best_policy(&sweep, 0.95) {
+            Some(best) => rows.push(vec![
+                spec.label(),
+                best.policy.label(),
+                format!("{:.2}x", best.efficiency_gain()),
+                format!("{:.0}%", best.token_savings() * 100.0),
+                format!("{:.0}%", best.geomean_retention() * 100.0),
+            ]),
+            None => rows.push(vec![spec.label(), "-".into(), "-".into(), "-".into(), "-".into()]),
+        }
+    }
+    let t = table(&["variant", "best policy", "efficiency gain", "token savings", "geo retention"], &rows);
+    let out = format!("== Figure 9: best scheduler policy per variant (≥95% geomean retention) ==\n{t}");
+    let _ = write_csv(
+        &ctx.outdir.join("fig9.csv"),
+        &["variant", "policy", "gain", "savings", "retention"],
+        &rows,
+    );
+    ctx.save("fig9.txt", &out);
+    out
+}
+
+// ===========================================================================
+// Figure 10: review outcome composition
+// ===========================================================================
+pub fn fig10(ctx: &mut ExpCtx) -> String {
+    let mut rows = Vec::new();
+    for tier in ModelTier::ALL {
+        for spec in main_variants(tier) {
+            let log = ctx.log(&spec, None).clone();
+            let counts = outcome_counts(&ctx.pipeline, &log.runs, ctx.review_seed);
+            rows.push(vec![
+                spec.label(),
+                counts["no_issues"].to_string(),
+                counts["minor_issues"].to_string(),
+                counts["sol_ceiling"].to_string(),
+                counts["pytorch_only"].to_string(),
+                counts["original_gaming"].to_string(),
+                counts["inherited_gaming"].to_string(),
+            ]);
+        }
+    }
+    let t = table(
+        &["variant", "no issues", "minor", "SOL ceiling", "pytorch-only", "orig gaming", "inherited"],
+        &rows,
+    );
+    let out = format!("== Figure 10: review outcome composition (counts over correct attempts) ==\n{t}");
+    let _ = write_csv(
+        &ctx.outdir.join("fig10.csv"),
+        &["variant", "no_issues", "minor", "sol_ceiling", "pytorch_only", "orig_gaming", "inherited"],
+        &rows,
+    );
+    ctx.save("fig10.txt", &out);
+    out
+}
+
+// ===========================================================================
+// Figure 11: LGD category breakdown (gaming + minor subcategories)
+// ===========================================================================
+pub fn fig11(ctx: &mut ExpCtx) -> String {
+    let mut rows = Vec::new();
+    for tier in ModelTier::ALL {
+        for spec in main_variants(tier) {
+            let log = ctx.log(&spec, None).clone();
+            let mut gaming: BTreeMap<&'static str, usize> = BTreeMap::new();
+            let mut minor: BTreeMap<&'static str, usize> = BTreeMap::new();
+            for run in &log.runs {
+                let labels = ctx.pipeline.review_run(run, ctx.review_seed);
+                for (a, l) in run.attempts.iter().zip(&labels) {
+                    match l {
+                        ReviewLabel::OriginalGaming | ReviewLabel::InheritedGaming => {
+                            if let SolutionKind::Gaming(g) = &a.kind {
+                                *gaming.entry(g.name()).or_default() += 1;
+                            }
+                        }
+                        ReviewLabel::MinorIssues => {
+                            if let Some(m) = a.minor_issue {
+                                *minor.entry(m.name()).or_default() += 1;
+                            }
+                        }
+                        _ => {}
+                    }
+                }
+            }
+            let g = |k: GamingType| gaming.get(k.name()).copied().unwrap_or(0).to_string();
+            rows.push(vec![
+                spec.label(),
+                g(GamingType::BenchmarkInputExploitation),
+                g(GamingType::ConstantOutput),
+                g(GamingType::SkippedComputation),
+                g(GamingType::FakeTranspose),
+                g(GamingType::IncompleteComputation),
+                minor.values().sum::<usize>().to_string(),
+            ]);
+        }
+    }
+    let t = table(
+        &["variant", "bench-input", "const-out", "skipped", "fake-transpose", "incomplete", "minor (all)"],
+        &rows,
+    );
+    let out = format!("== Figure 11: LGD category breakdown ==\n{t}");
+    let _ = write_csv(
+        &ctx.outdir.join("fig11.csv"),
+        &["variant", "bench_input", "const_out", "skipped", "fake_transpose", "incomplete", "minor"],
+        &rows,
+    );
+    ctx.save("fig11.txt", &out);
+    out
+}
+
+// ===========================================================================
+// Figure 12: speedup inflation without integrity filtering
+// ===========================================================================
+pub fn fig12(ctx: &mut ExpCtx) -> String {
+    let mut rows = Vec::new();
+    for tier in ModelTier::ALL {
+        for spec in main_variants(tier) {
+            let log = ctx.log(&spec, None).clone();
+            let geo = |allow: &[ReviewLabel]| {
+                let sp: Vec<f64> = log
+                    .runs
+                    .iter()
+                    .map(|r| ctx.pipeline.speedup_allowing(r, ctx.review_seed, allow).unwrap_or(1.0))
+                    .collect();
+                metrics::geomean_speedup(&sp)
+            };
+            let filtered = geo(&[]);
+            let plus_pt = geo(&[ReviewLabel::PyTorchOnly]);
+            let plus_gaming = geo(&[
+                ReviewLabel::PyTorchOnly,
+                ReviewLabel::OriginalGaming,
+                ReviewLabel::InheritedGaming,
+            ]);
+            let unfiltered = geo(&ReviewLabel::ALL);
+            rows.push(vec![
+                spec.label(),
+                format!("{filtered:.2}x"),
+                format!("{plus_pt:.2}x"),
+                format!("{plus_gaming:.2}x"),
+                format!("{unfiltered:.2}x"),
+                format!("{:.2}x", unfiltered / filtered.max(1e-9)),
+            ]);
+        }
+    }
+    let t = table(
+        &["variant", "filtered", "+pytorch-only", "+gaming", "unfiltered", "inflation"],
+        &rows,
+    );
+    let out = format!("== Figure 12: speedup inflation without the integrity pipeline ==\n{t}");
+    let _ = write_csv(
+        &ctx.outdir.join("fig12.csv"),
+        &["variant", "filtered", "plus_pytorch", "plus_gaming", "unfiltered", "inflation"],
+        &rows,
+    );
+    ctx.save("fig12.txt", &out);
+    out
+}
+
+// ===========================================================================
+// Figure 13: run-to-run variation (CV across nearby configurations)
+// ===========================================================================
+pub fn fig13(ctx: &mut ExpCtx) -> String {
+    let ablations = ["MANTIS", "MNTIS", "MANIS", "MANTI", "MANTIS-noXmem"];
+    let mut rows = Vec::new();
+    let mut groups: Vec<(String, Vec<f64>)> = Vec::new();
+    for (tier, dsl) in [
+        (ModelTier::Max, false),
+        (ModelTier::Max, true),
+        (ModelTier::Mini, false),
+        (ModelTier::Mini, true),
+    ] {
+        let mut geos = Vec::new();
+        let n_abl = if tier == ModelTier::Max && dsl { 4 } else { 5 };
+        for name in ablations.iter().take(n_abl) {
+            let cfg = MantisConfig::ablation(name);
+            let spec = VariantSpec::new(ControllerKind::OrchestratedSol, dsl, tier);
+            let log = ctx.log(&spec, Some(&cfg)).clone();
+            geos.push(metrics::geomean_speedup(&ctx.filtered_speedups(&log)));
+        }
+        if tier == ModelTier::Mini {
+            // independent repeat with the guardrail prompt (§6.4)
+            let mut spec = VariantSpec::new(ControllerKind::OrchestratedSol, dsl, tier);
+            spec.guardrails = true;
+            let log = ctx.log_seeded(&spec, ctx.seed + 777, None).clone();
+            geos.push(metrics::geomean_speedup(&ctx.filtered_speedups(&log)));
+        }
+        let label = format!(
+            "{} {}",
+            tier.name(),
+            if dsl { "+µCUTLASS" } else { "w/o µCUTLASS" }
+        );
+        rows.push(vec![
+            label.clone(),
+            format!("{}", geos.len()),
+            format!("{:.2}", stats::mean(&geos)),
+            format!("{:.2}-{:.2}", geos.iter().cloned().fold(f64::MAX, f64::min),
+                    geos.iter().cloned().fold(f64::MIN, f64::max)),
+            format!("{:.0}%", stats::cv(&geos) * 100.0),
+        ]);
+        groups.push((label, geos));
+    }
+    let t = table(&["group", "N", "mean geomean", "range", "CV"], &rows);
+    let out = format!("== Figure 13: run-to-run variation across nearby configurations ==\n{t}");
+    let _ = write_csv(&ctx.outdir.join("fig13.csv"), &["group", "n", "mean", "range", "cv"], &rows);
+    ctx.save("fig13.txt", &out);
+    out
+}
+
+// ===========================================================================
+// Figure 14: comparison vs Sakana archive + FP16 SOL curve
+// ===========================================================================
+pub fn fig14(ctx: &mut ExpCtx) -> String {
+    let grid = metrics::default_grid();
+    let mut out = String::from("== Figure 14: µCUTLASS+SOL vs evolutionary archive ==\n");
+
+    // our three tiers (µC + SOL)
+    let mut series: Vec<(String, Vec<f64>, f64)> = Vec::new();
+    let mut per_tier_speedups: Vec<Vec<f64>> = Vec::new();
+    for tier in ModelTier::ALL {
+        let spec = VariantSpec::new(sol_label(tier, true), true, tier);
+        let log = ctx.log(&spec, None).clone();
+        let sp = ctx.filtered_speedups(&log);
+        let fp = metrics::fast_p(&sp, &grid);
+        let geo = metrics::geomean_speedup(&sp);
+        series.push((format!("µC+SOL [{}]", tier.name()), fp.pct, geo));
+        per_tier_speedups.push(sp);
+    }
+
+    // archive with fallback review
+    let env = ctx.bench.env();
+    let params = EvoParams::default();
+    let mut archive_sp = Vec::new();
+    let mut accepted = 0;
+    let mut missing = 0;
+    let mut rejected_all = 0;
+    for pidx in 0..ctx.bench.problems.len() {
+        let archive = generate_archive(&env, pidx, &params, ctx.seed);
+        if archive.is_empty() {
+            missing += 1;
+            archive_sp.push(0.0);
+            continue;
+        }
+        let (speedup, _) = review_archive(&env, pidx, &archive, &ctx.pipeline, ctx.seed);
+        if speedup > 0.0 {
+            accepted += 1;
+        } else {
+            rejected_all += 1;
+        }
+        archive_sp.push(speedup);
+    }
+    let fp_archive = metrics::fast_p(&archive_sp, &grid);
+    let geo_archive = metrics::geomean_speedup(
+        &archive_sp.iter().map(|&s| if s > 0.0 { s } else { 1e-2 }).collect::<Vec<_>>(),
+    );
+    let geo_archive_accepted =
+        metrics::geomean_speedup(&archive_sp.iter().copied().filter(|&s| s > 0.0).collect::<Vec<_>>());
+
+    // FP16 SOL curve (theoretical limit)
+    let sol_sp: Vec<f64> = ctx
+        .bench
+        .problems
+        .iter()
+        .enumerate()
+        .map(|(i, p)| ctx.bench.model.baseline_ms(p) / ctx.bench.sols[i].t_sol_fp16_ms)
+        .collect();
+    let fp_sol = metrics::fast_p(&sol_sp, &grid);
+    let geo_sol = metrics::geomean_speedup(&sol_sp);
+
+    // best-of-all-variants ensemble
+    let mut best_sp = vec![0.0f64; ctx.bench.problems.len()];
+    for tier_sp in &per_tier_speedups {
+        for (i, &s) in tier_sp.iter().enumerate() {
+            best_sp[i] = best_sp[i].max(s);
+        }
+    }
+    for tier in ModelTier::ALL {
+        let spec = VariantSpec::new(ControllerKind::Mi, true, tier);
+        let log = ctx.log(&spec, None).clone();
+        for (i, s) in ctx.filtered_speedups(&log).iter().enumerate() {
+            best_sp[i] = best_sp[i].max(*s);
+        }
+    }
+    let geo_best = metrics::geomean_speedup(&best_sp);
+
+    out.push_str(&format!(
+        "archive: {} accepted, {} missing, {} all-rejected; geomean (accepted) {:.2}x\n",
+        accepted, missing, rejected_all, geo_archive_accepted
+    ));
+    out.push_str(&format!("best-of-all-variants geomean: {geo_best:.2}x\n"));
+    out.push_str(&format!("FP16 SOL theoretical-limit geomean: {geo_sol:.2}x\n"));
+    let mut plot_series: Vec<(&str, &[f64])> =
+        series.iter().map(|(n, fp, _)| (n.as_str(), fp.as_slice())).collect();
+    plot_series.push(("archive (evo)", &fp_archive.pct));
+    plot_series.push(("FP16 SOL limit", &fp_sol.pct));
+    out.push_str(&ascii_plot("--- Fast-p ---", &grid, &plot_series, 72, 16, true));
+    for (n, _, geo) in &series {
+        out.push_str(&format!("   {n}: geomean {geo:.2}x\n"));
+    }
+    let _ = write_csv(
+        &ctx.outdir.join("fig14.csv"),
+        &["series", "geomean"],
+        &series
+            .iter()
+            .map(|(n, _, g)| vec![n.clone(), format!("{g}")])
+            .chain(std::iter::once(vec!["archive".to_string(), format!("{geo_archive}")]))
+            .chain(std::iter::once(vec!["fp16_sol".to_string(), format!("{geo_sol}")]))
+            .chain(std::iter::once(vec!["best_of_all".to_string(), format!("{geo_best}")]))
+            .collect::<Vec<_>>(),
+    );
+    ctx.save("fig14.txt", &out);
+    out
+}
+
+// ===========================================================================
+// Table 4: prompt-level integrity guardrails (GPT-5-mini, run 1 vs run 2)
+// ===========================================================================
+pub fn tab4(ctx: &mut ExpCtx) -> String {
+    let mut rows = Vec::new();
+    for spec0 in main_variants(ModelTier::Mini) {
+        let mut counts = Vec::new();
+        for guard in [false, true] {
+            let mut spec = spec0;
+            spec.guardrails = guard;
+            let log = ctx.log(&spec, None).clone();
+            let c = outcome_counts(&ctx.pipeline, &log.runs, ctx.review_seed);
+            counts.push((
+                c["pytorch_only"],
+                c["original_gaming"] + c["inherited_gaming"],
+            ));
+        }
+        rows.push(vec![
+            spec0.label(),
+            counts[0].0.to_string(),
+            counts[1].0.to_string(),
+            counts[0].1.to_string(),
+            counts[1].1.to_string(),
+        ]);
+    }
+    let t = table(
+        &["variant", "pytorch-only r1", "pytorch-only r2", "gaming r1", "gaming r2"],
+        &rows,
+    );
+    let out = format!(
+        "== Table 4: prompt-level guardrails (run 1 = plain, run 2 = anti-PyTorch/anti-gaming prompt) ==\n{t}"
+    );
+    let _ = write_csv(
+        &ctx.outdir.join("tab4.csv"),
+        &["variant", "pt_r1", "pt_r2", "gaming_r1", "gaming_r2"],
+        &rows,
+    );
+    ctx.save("tab4.txt", &out);
+    out
+}
+
+// ===========================================================================
+// Table 2: experimental variants and default budgets
+// ===========================================================================
+pub fn tab2(ctx: &mut ExpCtx) -> String {
+    let rows = vec![
+        vec!["MI w/o µCUTLASS".into(), "×".into(), "—".into(), "40".into()],
+        vec!["MI + µCUTLASS".into(), "✓".into(), "—".into(), "40".into()],
+        vec!["In-prompt steering w/o µCUTLASS".into(), "×".into(), "In-Prompt".into(), "40".into()],
+        vec!["In-prompt steering + µCUTLASS".into(), "✓".into(), "In-Prompt".into(), "40".into()],
+        vec!["Orchestrated steering w/o µCUTLASS".into(), "×".into(), "Orchestrated".into(),
+             "40 (5 x 2 x 4)".into()],
+        vec!["Orchestrated steering + µCUTLASS".into(), "✓".into(), "Orchestrated".into(),
+             "40 (5 x 2 x 4)".into()],
+    ];
+    let t = table(&["variant", "µCUTLASS", "SOL-guidance", "total attempts"], &rows);
+    let out = format!(
+        "== Table 2: experimental variants and matched per-problem budgets ==\n{t}\
+         Orchestrated budgets: {} iterations x {} hypotheses x {} attempts (mantis::*).\n",
+        crate::mantis::ITERATIONS,
+        crate::mantis::HYPOTHESES_PER_ITER,
+        crate::mantis::ATTEMPTS_PER_HYPOTHESIS,
+    );
+    ctx.save("tab2.txt", &out);
+    out
+}
+
+// ===========================================================================
+// Extension (paper §7 future work): online integrity feedback
+// ===========================================================================
+pub fn ext1_online_integrity(ctx: &mut ExpCtx) -> String {
+    let mut rows = Vec::new();
+    for tier in [ModelTier::Max, ModelTier::Mid] {
+        for online in [false, true] {
+            let mut spec = VariantSpec::new(ControllerKind::Mi, true, tier);
+            if online {
+                spec = spec.with_online_integrity();
+            }
+            let log = ctx.log(&spec, None).clone();
+            let counts = outcome_counts(&ctx.pipeline, &log.runs, ctx.review_seed);
+            let sp = ctx.filtered_speedups(&log);
+            rows.push(vec![
+                format!("{}{}", spec.label(), if online { " +online-integrity" } else { "" }),
+                format!("{:.2}x", metrics::geomean_speedup(&sp)),
+                (counts["original_gaming"] + counts["inherited_gaming"]).to_string(),
+                counts["inherited_gaming"].to_string(),
+                counts["sol_ceiling"].to_string(),
+            ]);
+        }
+    }
+    let t = table(
+        &["variant", "filtered geomean", "gaming attempts", "inherited", "sol-ceiling"],
+        &rows,
+    );
+    let out = format!(
+        "== Extension 1: online integrity feedback (paper §7 future work) ==\n\
+         In-loop SOL-ceiling + LGD review rejects exploits immediately, so agents\n\
+         correct instead of inheriting them. Expect: gaming (esp. inherited) counts\n\
+         collapse while filtered geomean is preserved or improves (attempts are no\n\
+         longer wasted on exploits).\n{t}"
+    );
+    let _ = write_csv(
+        &ctx.outdir.join("ext1.csv"),
+        &["variant", "geomean", "gaming", "inherited", "sol_ceiling"],
+        &rows,
+    );
+    ctx.save("ext1.txt", &out);
+    out
+}
+
+// ===========================================================================
+// Extension 2 (paper §6.1.2 future work): adaptive hybrid steering
+// ===========================================================================
+/// "A hybrid approach between in-prompt and orchestrated steering that
+/// adaptively selects MANTIS components based on model capability and
+/// available tooling": probe both steering forms on a small problem prefix,
+/// commit to the winner for the remainder, and compare against both fixed
+/// choices under the same total budget.
+pub fn ext2_adaptive_hybrid(ctx: &mut ExpCtx) -> String {
+    use crate::agent::controller::run_problem;
+    const PROBE: usize = 6;
+    let mut rows = Vec::new();
+    for tier in ModelTier::ALL {
+        for dsl in [true, false] {
+            let orch = VariantSpec::new(ControllerKind::OrchestratedSol, dsl, tier);
+            let inp = VariantSpec::new(ControllerKind::InPromptSol, dsl, tier);
+            let log_o = ctx.log(&orch, None).clone();
+            let log_i = ctx.log(&inp, None).clone();
+            let sp_o = ctx.filtered_speedups(&log_o);
+            let sp_i = ctx.filtered_speedups(&log_i);
+            let g_o = metrics::geomean_speedup(&sp_o);
+            let g_i = metrics::geomean_speedup(&sp_i);
+
+            // adaptive: probe both forms on the first PROBE problems (half
+            // budget each to keep the total matched), pick the winner, then
+            // run the remaining problems with the winning form
+            let env = ctx.bench.env();
+            let mut probe_o = orch;
+            probe_o.attempts = 20;
+            let mut probe_i = inp;
+            probe_i.attempts = 20;
+            let mut adaptive_sp = Vec::with_capacity(59);
+            let mut probe_go = Vec::new();
+            let mut probe_gi = Vec::new();
+            for pidx in 0..PROBE {
+                let ro = run_problem(&env, &probe_o, pidx, ctx.seed);
+                let ri = run_problem(&env, &probe_i, pidx, ctx.seed ^ 0x77);
+                let so = ctx.pipeline.filtered_speedup(&ro, ctx.review_seed).unwrap_or(1.0);
+                let si = ctx.pipeline.filtered_speedup(&ri, ctx.review_seed).unwrap_or(1.0);
+                probe_go.push(so);
+                probe_gi.push(si);
+                adaptive_sp.push(so.max(si)); // best probe result counts
+            }
+            let orch_wins = metrics::geomean_speedup(&probe_go)
+                >= metrics::geomean_speedup(&probe_gi);
+            let winner = if orch_wins { &log_o } else { &log_i };
+            for run in winner.runs.iter().skip(PROBE) {
+                adaptive_sp
+                    .push(ctx.pipeline.filtered_speedup(run, ctx.review_seed).unwrap_or(1.0));
+            }
+            let g_a = metrics::geomean_speedup(&adaptive_sp);
+            rows.push(vec![
+                format!("{} {}", tier.name(), if dsl { "+µCUTLASS" } else { "w/o µCUTLASS" }),
+                format!("{g_o:.2}x"),
+                format!("{g_i:.2}x"),
+                format!("{g_a:.2}x"),
+                if orch_wins { "orchestrated".into() } else { "in-prompt".into() },
+                if g_a >= g_o.min(g_i) - 1e-9 { "yes".into() } else { "no".into() },
+            ]);
+        }
+    }
+    let t = table(
+        &["setting", "orchestrated", "in-prompt", "adaptive", "probe pick", "≥ worse fixed"],
+        &rows,
+    );
+    let out = format!(
+        "== Extension 2: adaptive hybrid steering (paper §6.1.2 future work) ==\n\
+         Probe both steering forms on {PROBE} problems (half budget each), commit\n\
+         to the winner. The adaptive controller should track the better fixed\n\
+         choice without knowing the tier/tooling a priori.\n{t}"
+    );
+    let _ = write_csv(
+        &ctx.outdir.join("ext2.csv"),
+        &["setting", "orch", "inprompt", "adaptive", "pick", "robust"],
+        &rows,
+    );
+    ctx.save("ext2.txt", &out);
+    out
+}
+
+/// Run every experiment and return the combined report.
+pub fn run_all(ctx: &mut ExpCtx) -> String {
+    let mut out = String::new();
+    out.push_str(&fig3(ctx));
+    out.push_str(&fig4(ctx));
+    out.push_str(&fig5(ctx));
+    out.push_str(&fig6(ctx));
+    out.push_str(&fig7(ctx));
+    out.push_str(&fig8(ctx));
+    out.push_str(&fig9(ctx));
+    out.push_str(&fig10(ctx));
+    out.push_str(&fig11(ctx));
+    out.push_str(&fig12(ctx));
+    out.push_str(&fig13(ctx));
+    out.push_str(&fig14(ctx));
+    out.push_str(&tab4(ctx));
+    out.push_str(&ext1_online_integrity(ctx));
+    out.push_str(&ext2_adaptive_hybrid(ctx));
+    ctx.save("all.txt", &out);
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_runs_and_reports_12_variants() {
+        let dir = std::env::temp_dir().join("ucutlass_fig3_test");
+        let mut ctx = ExpCtx::new(&dir, 42);
+        let out = fig3(&mut ctx);
+        assert!(out.contains("gpt-5-mini"));
+        assert!(out.contains("gpt-5.2"));
+        assert_eq!(out.matches("µCUTLASS + ").count() >= 6, true);
+        assert!(dir.join("fig3.csv").exists());
+    }
+}

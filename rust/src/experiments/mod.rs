@@ -1,0 +1,8 @@
+//! Experiment drivers: one function per paper figure/table (§6), each
+//! regenerating the same rows/series from fresh seeded runs.
+
+pub mod archive;
+pub mod figures;
+pub mod runner;
+
+pub use runner::{Bench, run_variant};

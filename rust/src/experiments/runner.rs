@@ -1,0 +1,139 @@
+//! Shared experiment plumbing: environment construction and variant
+//! execution over the full 59-problem suite.
+
+use crate::agent::controller::{run_problem, ControllerKind, Env, VariantSpec};
+use crate::agent::{ModelTier, RunLog};
+use crate::kernelbench::{suite, Problem};
+use crate::mantis::{run_orchestrated, CrossMemory, MantisConfig};
+use crate::perfmodel::PerfModel;
+use crate::sol::{analyze, SolAnalysis, GpuSpec, H100_SXM};
+
+/// Owns the evaluation substrate: perf model, problems, SOL analyses.
+pub struct Bench {
+    pub model: PerfModel,
+    pub problems: Vec<Problem>,
+    pub sols: Vec<SolAnalysis>,
+}
+
+impl Bench {
+    pub fn new() -> Self {
+        Self::on(H100_SXM.clone())
+    }
+
+    pub fn on(gpu: GpuSpec) -> Self {
+        let problems = suite();
+        let sols = problems.iter().map(|p| analyze(p, &gpu)).collect();
+        Bench { model: PerfModel::new(gpu), problems, sols }
+    }
+
+    pub fn env(&self) -> Env<'_> {
+        Env { model: &self.model, problems: &self.problems, sols: &self.sols }
+    }
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// Run one variant over the whole suite. Orchestrated variants thread
+/// cross-problem memory in problem order (paper: summaries are "persisted
+/// as cross-problem memory so that later problems can retrieve" them).
+pub fn run_variant(
+    bench: &Bench,
+    spec: &VariantSpec,
+    seed: u64,
+    mantis_cfg: Option<&MantisConfig>,
+) -> RunLog {
+    let env = bench.env();
+    let tier = spec.tier.params();
+    let runs = match spec.controller {
+        ControllerKind::OrchestratedSol => {
+            let default_cfg = MantisConfig::default();
+            let cfg = mantis_cfg.unwrap_or(&default_cfg);
+            let mut memory = CrossMemory::default();
+            (0..bench.problems.len())
+                .map(|pidx| {
+                    if cfg.cross_memory {
+                        run_orchestrated(&env, spec, pidx, seed, Some((cfg, &mut memory)))
+                    } else {
+                        let mut fresh = CrossMemory::default();
+                        run_orchestrated(&env, spec, pidx, seed, Some((cfg, &mut fresh)))
+                    }
+                })
+                .collect()
+        }
+        _ => (0..bench.problems.len())
+            .map(|pidx| run_problem(&env, spec, pidx, seed))
+            .collect(),
+    };
+    RunLog {
+        variant: spec.label(),
+        tier_name: spec.tier.name().to_string(),
+        price_per_mtok: tier.price_per_mtok,
+        runs,
+    }
+}
+
+/// The four main variants per tier (Figure 3): MI, µC+MI, SOL-guided, and
+/// µC+SOL-guided. Per §6.1, the SOL-guided result uses whichever steering
+/// form (in-prompt vs orchestrated) yields the higher geomean; we run the
+/// orchestrated form for Mini/Mid and in-prompt for Max-with-DSL,
+/// matching the paper's §6.1.1 finding.
+pub fn main_variants(tier: ModelTier) -> Vec<VariantSpec> {
+    let sol_controller = |dsl: bool| match (tier, dsl) {
+        (ModelTier::Max, true) => ControllerKind::InPromptSol,
+        _ => ControllerKind::OrchestratedSol,
+    };
+    vec![
+        VariantSpec::new(ControllerKind::Mi, false, tier),
+        VariantSpec::new(ControllerKind::Mi, true, tier),
+        VariantSpec::new(sol_controller(false), false, tier),
+        VariantSpec::new(sol_controller(true), true, tier),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::integrity::IntegrityPipeline;
+    use crate::metrics;
+
+    #[test]
+    fn run_variant_covers_suite() {
+        let bench = Bench::new();
+        let spec = VariantSpec::new(ControllerKind::Mi, false, ModelTier::Mini);
+        let log = run_variant(&bench, &spec, 1, None);
+        assert_eq!(log.runs.len(), 59);
+        assert!(log.total_tokens() > 0);
+    }
+
+    /// Headline shape check (Figure 3, mini row): MI regresses vs PyTorch;
+    /// µCUTLASS turns it into a speedup; adding SOL steering improves it
+    /// further.
+    #[test]
+    fn mini_headline_ordering() {
+        let bench = Bench::new();
+        let pipeline = IntegrityPipeline::default();
+        let geo = |spec: &VariantSpec| {
+            let log = run_variant(&bench, spec, 12345, None);
+            let speedups: Vec<f64> = log
+                .runs
+                .iter()
+                .map(|r| pipeline.filtered_speedup(r, 99).unwrap_or(1.0))
+                .collect();
+            metrics::geomean_speedup(&speedups)
+        };
+        let mi = geo(&VariantSpec::new(ControllerKind::Mi, false, ModelTier::Mini));
+        let dsl = geo(&VariantSpec::new(ControllerKind::Mi, true, ModelTier::Mini));
+        let dsl_sol = geo(&VariantSpec::new(
+            ControllerKind::OrchestratedSol,
+            true,
+            ModelTier::Mini,
+        ));
+        assert!(mi < 1.0, "mini MI should regress vs PyTorch, got {mi:.2}");
+        assert!(dsl > 1.0, "mini µCUTLASS should beat PyTorch, got {dsl:.2}");
+        assert!(dsl_sol > dsl * 0.95, "SOL steering should not hurt much: {dsl_sol:.2} vs {dsl:.2}");
+    }
+}

@@ -1,0 +1,310 @@
+//! SOL-guided integrity checking (paper §4.4, §5.8, §6.3).
+//!
+//! Three detectors, applied offline to every attempt:
+//!
+//! 1. **SOL-ceiling**: measured time > 10% *below* the FP16 SOL bound is
+//!    physically implausible ⇒ suspicious.
+//! 2. **LLM-based game detector (LGD)**: reviews candidate code together
+//!    with the SOL report; labels *No Issues / Minor Issues / Gaming*
+//!    (gaming split into *Original* vs *Inherited*). Simulated here as a
+//!    stochastic classifier with a calibrated detection rate — the SOL
+//!    report's structured work description is what makes the high rate
+//!    plausible (§4.4).
+//! 3. **PyTorch-only (static)**: every profiled kernel-launch signature
+//!    matches a library pattern ⇒ no custom kernel was written.
+//!
+//! Attempts labeled *No/Minor Issues* are accepted; everything else is
+//! excluded from reported speedups. When both LGD-gaming and PyTorch-only
+//! fire, PyTorch-only wins so the categories stay mutually exclusive.
+
+use crate::agent::{AttemptRecord, ProblemRun, SolutionKind};
+use crate::perfmodel::ncu::is_library_kernel;
+use crate::util::rng::Pcg32;
+
+/// Review outcome (the six bands of Figure 10).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum ReviewLabel {
+    NoIssues,
+    MinorIssues,
+    SolCeiling,
+    PyTorchOnly,
+    OriginalGaming,
+    InheritedGaming,
+}
+
+impl ReviewLabel {
+    pub const ALL: [ReviewLabel; 6] = [
+        ReviewLabel::NoIssues,
+        ReviewLabel::MinorIssues,
+        ReviewLabel::SolCeiling,
+        ReviewLabel::PyTorchOnly,
+        ReviewLabel::OriginalGaming,
+        ReviewLabel::InheritedGaming,
+    ];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ReviewLabel::NoIssues => "no_issues",
+            ReviewLabel::MinorIssues => "minor_issues",
+            ReviewLabel::SolCeiling => "sol_ceiling",
+            ReviewLabel::PyTorchOnly => "pytorch_only",
+            ReviewLabel::OriginalGaming => "original_gaming",
+            ReviewLabel::InheritedGaming => "inherited_gaming",
+        }
+    }
+
+    /// Accepted attempts contribute to reported speedups (§5.8: Minor
+    /// Issues are accepted because the offline review gave the agent no
+    /// chance to fix them and they don't affect measured performance).
+    pub fn accepted(&self) -> bool {
+        matches!(self, ReviewLabel::NoIssues | ReviewLabel::MinorIssues)
+    }
+}
+
+/// The three-stage pipeline with its calibration.
+#[derive(Debug, Clone)]
+pub struct IntegrityPipeline {
+    /// Runtimes more than this fraction below FP16 SOL are flagged
+    /// (paper: 10% buffer for measurement noise ⇒ 0.9).
+    pub ceiling_slack: f64,
+    /// P(LGD catches a gaming attempt) — high because the SOL report
+    /// augments the spec, but not perfect.
+    pub lgd_detect_rate: f64,
+    /// P(LGD labels a genuine kernel Minor) beyond真 minor issues (reviewer
+    /// conservatism).
+    pub lgd_minor_fp_rate: f64,
+}
+
+impl Default for IntegrityPipeline {
+    fn default() -> Self {
+        IntegrityPipeline { ceiling_slack: 0.9, lgd_detect_rate: 0.93, lgd_minor_fp_rate: 0.02 }
+    }
+}
+
+impl IntegrityPipeline {
+    /// Label one attempt. Only correct attempts are reviewed (others never
+    /// enter the speedup computation anyway).
+    pub fn label(&self, a: &AttemptRecord, t_sol_fp16_ms: f64, rng: &mut Pcg32) -> ReviewLabel {
+        let time = match a.outcome.time_ms() {
+            Some(t) => t,
+            None => return ReviewLabel::NoIssues, // not applicable
+        };
+
+        // static PyTorch-only detector: all launches match library patterns
+        let pytorch_only = !a.kernel_names.is_empty()
+            && a.kernel_names.iter().all(|k| is_library_kernel(k));
+
+        // SOL-ceiling detector (strict runtime bounds check)
+        if time < self.ceiling_slack * t_sol_fp16_ms {
+            // physically implausible — flag regardless of LGD
+            if pytorch_only {
+                return ReviewLabel::PyTorchOnly; // categories stay exclusive
+            }
+            return ReviewLabel::SolCeiling;
+        }
+
+        // LGD review with the SOL report as specification augmentation
+        let lgd_gaming = match &a.kind {
+            SolutionKind::Gaming(_) => rng.chance(self.lgd_detect_rate),
+            _ => false,
+        };
+        if lgd_gaming && pytorch_only {
+            return ReviewLabel::PyTorchOnly;
+        }
+        if lgd_gaming {
+            return if a.inherited {
+                ReviewLabel::InheritedGaming
+            } else {
+                ReviewLabel::OriginalGaming
+            };
+        }
+        if pytorch_only {
+            return ReviewLabel::PyTorchOnly;
+        }
+        if a.minor_issue.is_some() || rng.chance(self.lgd_minor_fp_rate) {
+            return ReviewLabel::MinorIssues;
+        }
+        ReviewLabel::NoIssues
+    }
+
+    /// Label every attempt of a run (deterministic given the seed).
+    pub fn review_run(&self, run: &ProblemRun, seed: u64) -> Vec<ReviewLabel> {
+        let mut rng = Pcg32::new(seed ^ 0x1234_5678, run.problem_idx as u64 | 1);
+        run.attempts
+            .iter()
+            .map(|a| self.label(a, run.t_sol_fp16_ms, &mut rng))
+            .collect()
+    }
+
+    /// Best accepted (integrity-filtered) time for a run.
+    pub fn filtered_best_ms(&self, run: &ProblemRun, seed: u64) -> Option<f64> {
+        let labels = self.review_run(run, seed);
+        run.attempts
+            .iter()
+            .zip(&labels)
+            .filter(|(_, l)| l.accepted())
+            .filter_map(|(a, _)| a.outcome.time_ms())
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+    }
+
+    /// Filtered speedup (None = no accepted solution).
+    pub fn filtered_speedup(&self, run: &ProblemRun, seed: u64) -> Option<f64> {
+        self.filtered_best_ms(run, seed).map(|t| run.t_ref_ms / t)
+    }
+
+    /// Filtered speedup over only the first `prefix` attempts, without
+    /// cloning the run (the scheduler-replay hot path: one call per policy
+    /// per problem). Labels are deterministic per attempt given the seed,
+    /// so reviewing a prefix equals truncating then reviewing.
+    pub fn filtered_speedup_prefix(
+        &self,
+        run: &ProblemRun,
+        seed: u64,
+        prefix: usize,
+    ) -> Option<f64> {
+        let mut rng = Pcg32::new(seed ^ 0x1234_5678, run.problem_idx as u64 | 1);
+        run.attempts
+            .iter()
+            .take(prefix)
+            .map(|a| (a, self.label(a, run.t_sol_fp16_ms, &mut rng)))
+            .filter(|(_, l)| l.accepted())
+            .filter_map(|(a, _)| a.outcome.time_ms())
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+            .map(|t| run.t_ref_ms / t)
+    }
+
+    /// Partially-filtered speedup for the inflation analysis (Figure 12):
+    /// `allow` lists labels to accept *in addition to* No/Minor.
+    pub fn speedup_allowing(
+        &self,
+        run: &ProblemRun,
+        seed: u64,
+        allow: &[ReviewLabel],
+    ) -> Option<f64> {
+        let labels = self.review_run(run, seed);
+        run.attempts
+            .iter()
+            .zip(&labels)
+            .filter(|(_, l)| l.accepted() || allow.contains(l))
+            .filter_map(|(a, _)| a.outcome.time_ms())
+            .min_by(|a, b| a.partial_cmp(b).unwrap())
+            .map(|t| run.t_ref_ms / t)
+    }
+}
+
+/// Aggregate label counts over a set of runs (Figure 10 bands).
+pub fn outcome_counts(
+    pipeline: &IntegrityPipeline,
+    runs: &[ProblemRun],
+    seed: u64,
+) -> std::collections::BTreeMap<&'static str, usize> {
+    let mut counts = std::collections::BTreeMap::new();
+    for l in ReviewLabel::ALL {
+        counts.insert(l.name(), 0usize);
+    }
+    for run in runs {
+        for l in pipeline.review_run(run, seed) {
+            // only correct attempts count toward review bands
+            *counts.get_mut(l.name()).unwrap() += 1;
+        }
+    }
+    counts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::{AttemptOutcome, GamingType};
+
+    fn rec(kind: SolutionKind, time: f64, names: Vec<&str>, inherited: bool) -> AttemptRecord {
+        AttemptRecord {
+            problem_idx: 0,
+            attempt: 0,
+            outcome: AttemptOutcome::Correct { time_ms: time },
+            kind,
+            minor_issue: None,
+            inherited,
+            tokens: 0,
+            tool_time_s: 0.0,
+            config: None,
+            kernel_names: names.into_iter().map(String::from).collect(),
+            dsl_source: None,
+        }
+    }
+
+    fn pipeline() -> IntegrityPipeline {
+        IntegrityPipeline { lgd_detect_rate: 1.0, ..Default::default() }
+    }
+
+    #[test]
+    fn sol_ceiling_flags_implausible_runtime() {
+        let p = pipeline();
+        let mut rng = Pcg32::new(1, 1);
+        let a = rec(SolutionKind::Gaming(GamingType::ConstantOutput), 0.01, vec!["k"], false);
+        assert_eq!(p.label(&a, 1.0, &mut rng), ReviewLabel::SolCeiling);
+        // within 10% of SOL is fine
+        let b = rec(SolutionKind::DslKernel, 0.95, vec!["ucutlass_x"], false);
+        assert_eq!(p.label(&b, 1.0, &mut rng), ReviewLabel::NoIssues);
+    }
+
+    #[test]
+    fn pytorch_only_detected_statically() {
+        let p = pipeline();
+        let mut rng = Pcg32::new(2, 1);
+        let a = rec(
+            SolutionKind::PyTorchOnly,
+            5.0,
+            vec!["void at::native::vectorized_elementwise_kernel", "ampere_sgemm [cublas]"],
+            false,
+        );
+        assert_eq!(p.label(&a, 1.0, &mut rng), ReviewLabel::PyTorchOnly);
+        // one custom kernel in the profile → not pytorch-only
+        let b = rec(SolutionKind::RawCuda, 5.0, vec!["my_kernel", "cublas_helper"], false);
+        assert_eq!(p.label(&b, 1.0, &mut rng), ReviewLabel::NoIssues);
+    }
+
+    #[test]
+    fn gaming_split_original_vs_inherited() {
+        let p = pipeline();
+        let mut rng = Pcg32::new(3, 1);
+        let orig = rec(SolutionKind::Gaming(GamingType::SkippedComputation), 2.0, vec!["k"], false);
+        let inh = rec(SolutionKind::Gaming(GamingType::SkippedComputation), 2.0, vec!["k"], true);
+        assert_eq!(p.label(&orig, 1.0, &mut rng), ReviewLabel::OriginalGaming);
+        assert_eq!(p.label(&inh, 1.0, &mut rng), ReviewLabel::InheritedGaming);
+    }
+
+    #[test]
+    fn filtered_best_excludes_gaming() {
+        let p = pipeline();
+        let run = ProblemRun {
+            problem_idx: 0,
+            t_ref_ms: 10.0,
+            t_sol_ms: 1.0,
+            t_sol_fp16_ms: 1.0,
+            attempts: vec![
+                rec(SolutionKind::Gaming(GamingType::ConstantOutput), 1.2, vec!["k"], false),
+                rec(SolutionKind::DslKernel, 2.0, vec!["ucutlass_k"], false),
+            ],
+        };
+        // unfiltered best is the gamed 1.2ms; filtered is the honest 2.0ms
+        assert_eq!(run.best_time_ms(), Some(1.2));
+        assert_eq!(p.filtered_best_ms(&run, 7), Some(2.0));
+        assert!((p.filtered_speedup(&run, 7).unwrap() - 5.0).abs() < 1e-9);
+        // allowing gaming restores the inflated number (Figure 12 logic)
+        let inflated = p
+            .speedup_allowing(&run, 7, &[ReviewLabel::OriginalGaming, ReviewLabel::InheritedGaming])
+            .unwrap();
+        assert!(inflated > 8.0);
+    }
+
+    #[test]
+    fn minor_issues_accepted() {
+        let p = pipeline();
+        let mut rng = Pcg32::new(5, 1);
+        let mut a = rec(SolutionKind::DslKernel, 2.0, vec!["ucutlass_k"], false);
+        a.minor_issue = Some(crate::agent::MinorIssueType::ContiguityAssumption);
+        let l = p.label(&a, 1.0, &mut rng);
+        assert_eq!(l, ReviewLabel::MinorIssues);
+        assert!(l.accepted());
+    }
+}

@@ -1,0 +1,9 @@
+//! The KernelBench evaluation suite: operator graphs with first-principles
+//! FLOP/byte accounting ([`ops`]) and the paper's 59-problem LLM-relevant
+//! subset ([`problems`], Appendix A.3).
+
+pub mod ops;
+pub mod problems;
+
+pub use ops::Op;
+pub use problems::{find, suite, Problem, ProblemId};

@@ -1,0 +1,211 @@
+//! Operator graph nodes with first-principles FLOP and byte accounting —
+//! the *problem characterization* input to SOL analysis (paper §4.1).
+//!
+//! Byte counts follow the paper's best-case rule: each unique input element
+//! is read from DRAM once, each output is written once, and intermediates
+//! are fused where feasible. `Op::flops()`/`Op::out_elems()` encode the
+//! per-operator work; graph-level fusion accounting lives in
+//! [`super::problems::Problem`].
+
+use crate::dsl::DType;
+
+/// One operator in a problem's reference computation graph.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Op {
+    /// C[m,n] = A[m,k] · B[k,n]
+    Gemm { m: u64, n: u64, k: u64 },
+    /// Batched GEMM over `b` independent problems.
+    BatchedGemm { b: u64, m: u64, n: u64, k: u64 },
+    /// Grouped GEMM (MoE-style), `groups` experts of m×n×k each.
+    GroupedGemm { groups: u64, m: u64, n: u64, k: u64 },
+    /// 2D convolution fprop, NHWC: out[n, p, q, co] from in[n, h, w, ci].
+    Conv2d { n: u64, h: u64, w: u64, ci: u64, co: u64, kh: u64, kw: u64, stride: u64 },
+    /// 1D convolution (SSM/long-conv style).
+    Conv1d { n: u64, l: u64, ci: u64, co: u64, kw: u64, stride: u64, groups: u64 },
+    /// Row softmax over [rows, cols].
+    Softmax { rows: u64, cols: u64 },
+    /// RMSNorm over [rows, cols] with per-feature weight.
+    RmsNorm { rows: u64, cols: u64 },
+    /// LayerNorm over [rows, cols] with weight+bias.
+    LayerNorm { rows: u64, cols: u64 },
+    /// Elementwise map (activation, scale, add, …): `ops_per_elem` FLOPs each.
+    Elementwise { elems: u64, ops_per_elem: u64, inputs: u64 },
+    /// Row reduction (sum/mean/max) from [rows, cols] to [rows].
+    Reduce { rows: u64, cols: u64 },
+    /// Prefix scan along rows of [rows, cols] (cumsum/cumprod).
+    Scan { rows: u64, cols: u64 },
+    /// Scaled dot-product attention: [b, h, s, d] q/k/v.
+    Attention { b: u64, h: u64, s: u64, d: u64, causal: bool },
+    /// Cross-entropy from [rows, classes] logits.
+    CrossEntropy { rows: u64, classes: u64 },
+    /// Matrix-vector product (decode GEMV).
+    Gemv { m: u64, k: u64 },
+}
+
+impl Op {
+    /// Total floating-point operations (2 FLOPs per MAC).
+    pub fn flops(&self) -> u64 {
+        match *self {
+            Op::Gemm { m, n, k } => 2 * m * n * k,
+            Op::BatchedGemm { b, m, n, k } => 2 * b * m * n * k,
+            Op::GroupedGemm { groups, m, n, k } => 2 * groups * m * n * k,
+            Op::Conv2d { n, h, w, ci, co, kh, kw, stride } => {
+                let (p, q) = (h / stride, w / stride);
+                2 * n * p * q * co * ci * kh * kw
+            }
+            Op::Conv1d { n, l, ci, co, kw, stride, groups } => {
+                2 * n * (l / stride) * co * (ci / groups.max(1)) * kw
+            }
+            // max + sub + exp + sum + div  ≈ 5 passes of 1 flop
+            Op::Softmax { rows, cols } => 5 * rows * cols,
+            // square+sum (2), rsqrt-normalize (2), weight mul (1)
+            Op::RmsNorm { rows, cols } => 5 * rows * cols,
+            // mean (1), var (3), normalize (2), affine (2)
+            Op::LayerNorm { rows, cols } => 8 * rows * cols,
+            Op::Elementwise { elems, ops_per_elem, .. } => elems * ops_per_elem,
+            Op::Reduce { rows, cols } => rows * cols,
+            Op::Scan { rows, cols } => rows * cols,
+            Op::Attention { b, h, s, d, causal } => {
+                // QK^T + PV GEMMs (2·s²·d each) + softmax (5·s²); causal halves.
+                let full = b * h * (4 * s * s * d + 5 * s * s);
+                if causal {
+                    full / 2
+                } else {
+                    full
+                }
+            }
+            Op::CrossEntropy { rows, classes } => 6 * rows * classes,
+            Op::Gemv { m, k } => 2 * m * k,
+        }
+    }
+
+    /// Unique input elements read from DRAM (weights + activations).
+    pub fn in_elems(&self) -> u64 {
+        match *self {
+            Op::Gemm { m, n, k } => m * k + k * n,
+            Op::BatchedGemm { b, m, n, k } => b * (m * k + k * n),
+            Op::GroupedGemm { groups, m, n, k } => groups * (m * k + k * n),
+            Op::Conv2d { n, h, w, ci, co, kh, kw, .. } => n * h * w * ci + co * ci * kh * kw,
+            Op::Conv1d { n, l, ci, co, kw, groups, .. } => {
+                n * l * ci + co * (ci / groups.max(1)) * kw
+            }
+            Op::Softmax { rows, cols } => rows * cols,
+            Op::RmsNorm { rows, cols } => rows * cols + cols,
+            Op::LayerNorm { rows, cols } => rows * cols + 2 * cols,
+            Op::Elementwise { elems, inputs, .. } => elems * inputs.max(1),
+            Op::Reduce { rows, cols } => rows * cols,
+            Op::Scan { rows, cols } => rows * cols,
+            Op::Attention { b, h, s, d, .. } => 3 * b * h * s * d,
+            Op::CrossEntropy { rows, classes } => rows * classes + rows,
+            Op::Gemv { m, k } => m * k + k,
+        }
+    }
+
+    /// Output elements written to DRAM.
+    pub fn out_elems(&self) -> u64 {
+        match *self {
+            Op::Gemm { m, n, .. } => m * n,
+            Op::BatchedGemm { b, m, n, .. } => b * m * n,
+            Op::GroupedGemm { groups, m, n, .. } => groups * m * n,
+            Op::Conv2d { n, h, w, co, stride, .. } => n * (h / stride) * (w / stride) * co,
+            Op::Conv1d { n, l, co, stride, .. } => n * (l / stride) * co,
+            Op::Softmax { rows, cols } => rows * cols,
+            Op::RmsNorm { rows, cols } => rows * cols,
+            Op::LayerNorm { rows, cols } => rows * cols,
+            Op::Elementwise { elems, .. } => elems,
+            Op::Reduce { rows, .. } => rows,
+            Op::Scan { rows, cols } => rows * cols,
+            Op::Attention { b, h, s, d, .. } => b * h * s * d,
+            Op::CrossEntropy { .. } => 1,
+            Op::Gemv { m, .. } => m,
+        }
+    }
+
+    /// Best-case DRAM bytes when this op runs standalone (unfused):
+    /// inputs read once + outputs written once.
+    pub fn bytes(&self, dtype: DType) -> u64 {
+        (self.in_elems() + self.out_elems()) * dtype.size()
+    }
+
+    /// Is this op's standalone roofline dominated by the MXU/tensor cores?
+    pub fn is_matmul_like(&self) -> bool {
+        matches!(
+            self,
+            Op::Gemm { .. }
+                | Op::BatchedGemm { .. }
+                | Op::GroupedGemm { .. }
+                | Op::Conv2d { .. }
+                | Op::Conv1d { .. }
+                | Op::Attention { .. }
+                | Op::Gemv { .. }
+        )
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Op::Gemm { .. } => "gemm",
+            Op::BatchedGemm { .. } => "batched_gemm",
+            Op::GroupedGemm { .. } => "grouped_gemm",
+            Op::Conv2d { .. } => "conv2d",
+            Op::Conv1d { .. } => "conv1d",
+            Op::Softmax { .. } => "softmax",
+            Op::RmsNorm { .. } => "rmsnorm",
+            Op::LayerNorm { .. } => "layernorm",
+            Op::Elementwise { .. } => "elementwise",
+            Op::Reduce { .. } => "reduce",
+            Op::Scan { .. } => "scan",
+            Op::Attention { .. } => "attention",
+            Op::CrossEntropy { .. } => "cross_entropy",
+            Op::Gemv { .. } => "gemv",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gemm_flops_match_paper_example() {
+        // Appendix A.2: N=4096 square GEMM → 2N³ = 1.374e11 FLOPs,
+        // 3·N²·4 = 2.013e8 bytes.
+        let op = Op::Gemm { m: 4096, n: 4096, k: 4096 };
+        assert_eq!(op.flops(), 137_438_953_472);
+        assert_eq!(op.bytes(DType::Fp32), 201_326_592);
+    }
+
+    #[test]
+    fn gemm_arithmetic_intensity() {
+        let op = Op::Gemm { m: 4096, n: 4096, k: 4096 };
+        let ai = op.flops() as f64 / op.bytes(DType::Fp32) as f64;
+        assert!((ai - 682.6).abs() < 1.0, "ai={ai}");
+    }
+
+    #[test]
+    fn causal_attention_halves_flops() {
+        let full = Op::Attention { b: 1, h: 8, s: 1024, d: 64, causal: false };
+        let causal = Op::Attention { b: 1, h: 8, s: 1024, d: 64, causal: true };
+        assert_eq!(causal.flops() * 2, full.flops());
+    }
+
+    #[test]
+    fn conv_flops() {
+        let op = Op::Conv2d { n: 1, h: 8, w: 8, ci: 16, co: 32, kh: 3, kw: 3, stride: 1 };
+        assert_eq!(op.flops(), 2 * 64 * 32 * 16 * 9);
+    }
+
+    #[test]
+    fn elementwise_bytes_scale_with_inputs() {
+        let one = Op::Elementwise { elems: 100, ops_per_elem: 1, inputs: 1 };
+        let two = Op::Elementwise { elems: 100, ops_per_elem: 1, inputs: 2 };
+        assert!(two.bytes(DType::Fp32) > one.bytes(DType::Fp32));
+    }
+
+    #[test]
+    fn softmax_is_memory_bound_shape() {
+        let op = Op::Softmax { rows: 4096, cols: 4096 };
+        let ai = op.flops() as f64 / op.bytes(DType::Fp32) as f64;
+        assert!(ai < 10.0, "softmax AI should be tiny, got {ai}");
+        assert!(!op.is_matmul_like());
+    }
+}

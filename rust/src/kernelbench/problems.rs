@@ -1,0 +1,444 @@
+//! The 59-problem KernelBench subset (paper Appendix A.3): LLM-relevant
+//! problems from Levels 1–3, each with its reference op graph, shapes, and
+//! fusion structure. Problems 2-80 and 2-24 are excluded exactly as in the
+//! paper (their specifications admit shortcut implementations).
+//!
+//! Shapes follow KernelBench conventions where the paper pins them (L1-1 is
+//! the 4096×4096 FP32 GEMM of Appendix A.2) and the A.3 rationale column
+//! otherwise (e.g. L1-2 "M=2048, K=8192, N=4096").
+
+use super::ops::Op;
+use crate::dsl::DType;
+
+/// Problem identity: KernelBench level (1–3) and problem number.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct ProblemId {
+    pub level: u8,
+    pub num: u32,
+}
+
+impl std::fmt::Display for ProblemId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "L{}-{}", self.level, self.num)
+    }
+}
+
+/// One evaluation problem: reference op graph + fusion accounting.
+#[derive(Debug, Clone)]
+pub struct Problem {
+    pub id: ProblemId,
+    pub name: &'static str,
+    /// Appendix A.3 rationale for inclusion.
+    pub rationale: &'static str,
+    /// Reference computation as a chain of ops (op i+1 consumes op i's output).
+    pub ops: Vec<Op>,
+    /// Problem dtype as specified by KernelBench (always FP32).
+    pub dtype: DType,
+    /// Indices of ops whose output cannot be fused into the next op even in
+    /// the best custom kernel (forces a DRAM round trip of that intermediate).
+    pub unfusable_after: Vec<usize>,
+    /// AOT artifact problem (python/compile/model.py) that numerically
+    /// validates this problem's kernel family, when one exists.
+    pub artifact: Option<&'static str>,
+}
+
+impl Problem {
+    /// Total FLOPs of the reference computation.
+    pub fn flops(&self) -> u64 {
+        self.ops.iter().map(|o| o.flops()).sum()
+    }
+
+    /// Best-case DRAM bytes for a fully-fused implementation: external
+    /// inputs once, final output once, plus unfusable intermediates
+    /// (written + re-read). Assumes the op chain carries op i's output
+    /// into op i+1.
+    pub fn fused_bytes(&self) -> u64 {
+        let mut elems: u64 = 0;
+        for (i, op) in self.ops.iter().enumerate() {
+            if i == 0 {
+                elems += op.in_elems();
+            } else {
+                // aux inputs beyond the carried intermediate (weights, residuals)
+                let carried = self.ops[i - 1].out_elems();
+                elems += op.in_elems().saturating_sub(carried);
+            }
+        }
+        elems += self.ops.last().map(|o| o.out_elems()).unwrap_or(0);
+        for &i in &self.unfusable_after {
+            // written once + read once
+            elems += 2 * self.ops[i].out_elems();
+        }
+        elems * self.dtype.size()
+    }
+
+    /// Arithmetic intensity of the fused computation (FLOPs/byte).
+    pub fn arithmetic_intensity(&self) -> f64 {
+        self.flops() as f64 / self.fused_bytes() as f64
+    }
+
+    /// Does any op in the graph use the tensor cores?
+    pub fn is_matmul_like(&self) -> bool {
+        self.ops.iter().any(|o| o.is_matmul_like())
+    }
+
+    /// The dominant (highest-FLOP) op.
+    pub fn dominant_op(&self) -> &Op {
+        self.ops.iter().max_by_key(|o| o.flops()).expect("non-empty graph")
+    }
+}
+
+fn p(
+    level: u8,
+    num: u32,
+    name: &'static str,
+    rationale: &'static str,
+    ops: Vec<Op>,
+) -> Problem {
+    Problem {
+        id: ProblemId { level, num },
+        name,
+        rationale,
+        ops,
+        dtype: DType::Fp32,
+        unfusable_after: vec![],
+        artifact: None,
+    }
+}
+
+fn with_artifact(mut prob: Problem, artifact: &'static str) -> Problem {
+    prob.artifact = Some(artifact);
+    prob
+}
+
+fn with_unfusable(mut prob: Problem, after: Vec<usize>) -> Problem {
+    prob.unfusable_after = after;
+    prob
+}
+
+const EW: u64 = 1 << 24; // 16M elements for L1 elementwise problems
+
+/// Build the full 59-problem suite.
+pub fn suite() -> Vec<Problem> {
+    let mut v: Vec<Problem> = Vec::with_capacity(59);
+
+    // =======================================================================
+    // Level 1 — 31 problems
+    // =======================================================================
+    v.push(with_artifact(
+        p(1, 1, "square_gemm", "Basic GEMM baseline.",
+          vec![Op::Gemm { m: 4096, n: 4096, k: 4096 }]),
+        "gemm_square"));
+    v.push(p(1, 2, "llm_gemm", "LLM-like GEMM shapes (M=2048, K=8192, N=4096).",
+          vec![Op::Gemm { m: 2048, n: 4096, k: 8192 }]));
+    v.push(with_artifact(
+        p(1, 3, "bmm", "Batched matmul (BMM) used in attention score/value products.",
+          vec![Op::BatchedGemm { b: 128, m: 512, n: 512, k: 64 }]),
+        "batched_gemm"));
+    v.push(p(1, 4, "matvec", "Matrix-vector multiply representative of single-token decode.",
+          vec![Op::Gemv { m: 4096, k: 4096 }]));
+    v.push(p(1, 6, "large_k_gemm", "Matmul with large K (common in MLP projections).",
+          vec![Op::Gemm { m: 1024, n: 1024, k: 16384 }]));
+    v.push(p(1, 7, "small_k_gemm", "Matmul with small K (e.g., attention head dimension).",
+          vec![Op::Gemm { m: 4096, n: 4096, k: 64 }]));
+    v.push(p(1, 8, "irregular_gemm", "Irregular shapes (non power-of-2) that occur in practice.",
+          vec![Op::Gemm { m: 1000, n: 1500, k: 700 }]));
+    v.push(with_artifact(
+        p(1, 9, "tall_skinny_gemm", "Tall-skinny matmul (prefill with long sequences).",
+          vec![Op::Gemm { m: 16384, n: 512, k: 1024 }]),
+        "gemm_tall_skinny"));
+    v.push(p(1, 16, "gemm_at", "Transposed-A layout variant common in GEMM calls.",
+          vec![Op::Gemm { m: 4096, n: 4096, k: 4096 }]));
+    v.push(p(1, 17, "gemm_bt", "Transposed-B layout variant common for weight matrices.",
+          vec![Op::Gemm { m: 4096, n: 4096, k: 4096 }]));
+    v.push(p(1, 18, "gemm_atbt", "Both operands transposed (layout coverage).",
+          vec![Op::Gemm { m: 4096, n: 4096, k: 4096 }]));
+    v.push(p(1, 21, "sigmoid", "Sigmoid for gating patterns (e.g., GLU-style gates).",
+          vec![Op::Elementwise { elems: EW, ops_per_elem: 4, inputs: 1 }]));
+    v.push(p(1, 22, "tanh", "Tanh used in some gating/activation variants.",
+          vec![Op::Elementwise { elems: EW, ops_per_elem: 4, inputs: 1 }]));
+    v.push(with_artifact(
+        p(1, 23, "softmax", "Softmax (core attention primitive).",
+          vec![Op::Softmax { rows: 4096, cols: 4096 }]),
+        "softmax"));
+    v.push(p(1, 25, "silu", "SiLU/Swish (dominant MLP activation in many modern LLMs).",
+          vec![Op::Elementwise { elems: EW, ops_per_elem: 5, inputs: 1 }]));
+    v.push(p(1, 26, "gelu", "GELU (used in GPT-2/BERT and some contemporary models).",
+          vec![Op::Elementwise { elems: EW, ops_per_elem: 8, inputs: 1 }]));
+    v.push(with_artifact(
+        p(1, 36, "rmsnorm", "RMSNorm (dominant normalization in modern decoder LLMs).",
+          vec![Op::RmsNorm { rows: 4096, cols: 4096 }]),
+        "rmsnorm"));
+    v.push(with_artifact(
+        p(1, 40, "layernorm", "LayerNorm (still used in many transformer variants).",
+          vec![Op::LayerNorm { rows: 4096, cols: 4096 }]),
+        "layernorm"));
+    v.push(p(1, 47, "sum_reduce", "Sum reduction used inside normalization and statistics.",
+          vec![Op::Reduce { rows: 4096, cols: 4096 }]));
+    v.push(p(1, 48, "mean_reduce", "Mean reduction used inside LayerNorm and statistics.",
+          vec![Op::Reduce { rows: 4096, cols: 4096 }]));
+    v.push(p(1, 67, "conv1d", "1D convolution used in SSM/long-conv text models.",
+          vec![Op::Conv1d { n: 16, l: 4096, ci: 512, co: 512, kw: 4, stride: 1, groups: 1 }]));
+    v.push(p(1, 76, "conv1d_dilated", "Dilated/strided 1D conv variant for hierarchical SSM designs.",
+          vec![Op::Conv1d { n: 16, l: 4096, ci: 512, co: 512, kw: 4, stride: 2, groups: 1 }]));
+    v.push(p(1, 86, "depthwise_sep_conv", "Depthwise-separable conv (efficient channel-wise processing).",
+          vec![
+              Op::Conv1d { n: 16, l: 4096, ci: 512, co: 512, kw: 4, stride: 1, groups: 512 },
+              Op::Conv1d { n: 16, l: 4096, ci: 512, co: 512, kw: 1, stride: 1, groups: 1 },
+          ]));
+    v.push(p(1, 87, "pointwise_conv", "Pointwise conv (channel mixing / fusion proxy).",
+          vec![Op::Conv1d { n: 16, l: 4096, ci: 512, co: 512, kw: 1, stride: 1, groups: 1 }]));
+    v.push(p(1, 88, "fast_gelu", "Fast GELU approximation (common fused activation variant).",
+          vec![Op::Elementwise { elems: EW, ops_per_elem: 6, inputs: 1 }]));
+    v.push(with_artifact(
+        p(1, 89, "cumsum", "Cumsum (prefix-scan) used in SSM/linear-attention recurrences.",
+          vec![Op::Scan { rows: 4096, cols: 4096 }]),
+        "cumsum"));
+    v.push(p(1, 90, "cumprod", "Cumprod used in some state-space dynamics.",
+          vec![Op::Scan { rows: 4096, cols: 4096 }]));
+    v.push(p(1, 91, "excl_cumsum", "Exclusive cumsum variant (scan coverage).",
+          vec![Op::Scan { rows: 4096, cols: 4096 }]));
+    v.push(p(1, 92, "rev_cumsum", "Reverse cumsum variant (reverse-time scan coverage).",
+          vec![Op::Scan { rows: 4096, cols: 4096 }]));
+    v.push(p(1, 95, "cross_entropy", "Cross-entropy loss (standard LLM training objective).",
+          vec![Op::CrossEntropy { rows: 8192, classes: 50257 }]));
+    v.push(with_artifact(
+        p(1, 97, "sdpa", "Scaled dot-product attention (maps to FlashAttention in practice).",
+          vec![Op::Attention { b: 8, h: 16, s: 1024, d: 64, causal: false }]),
+        "attention"));
+
+    // =======================================================================
+    // Level 2 — 20 problems (fused multi-operator kernels)
+    // =======================================================================
+    let g1k = Op::Gemm { m: 1024, n: 1024, k: 1024 };
+    v.push(p(2, 9, "gemm_sub_mul_relu", "Fused matmul + elementwise (proxy for epilogue and MLP fusions).",
+          vec![g1k.clone(),
+               Op::Elementwise { elems: 1024 * 1024, ops_per_elem: 3, inputs: 1 }]));
+    v.push(p(2, 28, "bmm_instnorm_sum", "BMM fusion representative of multi-head attention dataflow.",
+          vec![Op::BatchedGemm { b: 64, m: 256, n: 256, k: 64 },
+               Op::LayerNorm { rows: 64 * 256, cols: 256 },
+               Op::Reduce { rows: 64 * 256, cols: 256 }]));
+    v.push(p(2, 29, "gemm_mish", "Fused linear + activation (MLP fusion pattern).",
+          vec![g1k.clone(),
+               Op::Elementwise { elems: 1024 * 1024, ops_per_elem: 8, inputs: 1 }]));
+    v.push(p(2, 37, "gemm_swish_groupnorm", "Fused linear + normalization (proxy for norm-adjacent fusions).",
+          vec![g1k.clone(),
+               Op::Elementwise { elems: 1024 * 1024, ops_per_elem: 5, inputs: 1 },
+               Op::LayerNorm { rows: 1024, cols: 1024 }]));
+    v.push(p(2, 40, "gemm_scale_residual", "Fused linear + residual add (transformer block core pattern).",
+          vec![g1k.clone(),
+               Op::Elementwise { elems: 1024 * 1024, ops_per_elem: 2, inputs: 2 }]));
+    v.push(p(2, 41, "gemm_bn_gelu_relu", "GEMM + multi-activation fusion (MLP epilogue diversity).",
+          vec![g1k.clone(),
+               Op::Elementwise { elems: 1024 * 1024, ops_per_elem: 12, inputs: 1 }]));
+    v.push(p(2, 53, "gemm_scale_hardtanh_gelu", "GEMM + activation fusion (covers activation/scaling variants).",
+          vec![g1k.clone(),
+               Op::Elementwise { elems: 1024 * 1024, ops_per_elem: 10, inputs: 1 }]));
+    v.push(p(2, 56, "gemm_sigmoid_sum", "Matmul + gating + reduction (proxy for gated aggregation patterns).",
+          vec![g1k.clone(),
+               Op::Elementwise { elems: 1024 * 1024, ops_per_elem: 4, inputs: 1 },
+               Op::Reduce { rows: 1024, cols: 1024 }]));
+    v.push(with_artifact(
+        p(2, 59, "gemm_silu_scale", "Matmul + SiLU/Swish + scaling (common MLP fusion).",
+          vec![g1k.clone(),
+               Op::Elementwise { elems: 1024 * 1024, ops_per_elem: 6, inputs: 1 }]),
+        "gemm_silu_scale"));
+    v.push(p(2, 62, "gemm_groupnorm_leakyrelu", "Matmul + normalization + activation (fused post-linear processing).",
+          vec![g1k.clone(),
+               Op::LayerNorm { rows: 1024, cols: 1024 },
+               Op::Elementwise { elems: 1024 * 1024, ops_per_elem: 3, inputs: 1 }]));
+    v.push(p(2, 63, "gemm_relu_div", "GEMM + ReLU + divide (activation + scaling fusion).",
+          vec![g1k.clone(),
+               Op::Elementwise { elems: 1024 * 1024, ops_per_elem: 2, inputs: 1 }]));
+    v.push(p(2, 66, "attn_dropout", "Attention-like fusion with dropout (training attention pattern).",
+          vec![Op::Attention { b: 8, h: 8, s: 512, d: 64, causal: false },
+               Op::Elementwise { elems: 8 * 8 * 512 * 64, ops_per_elem: 2, inputs: 1 }]));
+    v.push(with_artifact(
+        p(2, 70, "gemm_sigmoid_residual", "GEMM + sigmoid gate + residual add (SwiGLU-like gating proxy).",
+          vec![g1k.clone(),
+               Op::Elementwise { elems: 1024 * 1024, ops_per_elem: 6, inputs: 2 }]),
+        "gemm_sigmoid_residual"));
+    v.push(with_artifact(
+        p(2, 76, "gemm_bias_relu", "GEMM + bias add + ReLU (classic epilogue fusion).",
+          vec![g1k.clone(),
+               Op::Elementwise { elems: 1024 * 1024, ops_per_elem: 2, inputs: 1 }]),
+        "gemm_bias_relu"));
+    v.push(p(2, 81, "gemm_swish_clamp", "Complex epilogue fusion with Swish (stress fused elementwise).",
+          vec![g1k.clone(),
+               Op::Elementwise { elems: 1024 * 1024, ops_per_elem: 9, inputs: 1 }]));
+    v.push(with_artifact(
+        p(2, 86, "gemm_div_gelu", "Matmul + divide + GELU (MLP fusion with scaling).",
+          vec![g1k.clone(),
+               Op::Elementwise { elems: 1024 * 1024, ops_per_elem: 9, inputs: 1 }]),
+        "gemm_divide_gelu"));
+    v.push(p(2, 88, "swiglu_gate", "SwiGLU-like gated fusion (common LLM MLP pattern proxy).",
+          vec![g1k.clone(),
+               Op::Elementwise { elems: 1024 * 1024, ops_per_elem: 7, inputs: 2 }]));
+    v.push(p(2, 94, "expert_mlp", "Expert MLP proxy: GEMM + bias/activation + normalization.",
+          vec![g1k.clone(),
+               Op::Elementwise { elems: 1024 * 1024, ops_per_elem: 10, inputs: 1 },
+               Op::LayerNorm { rows: 1024, cols: 1024 }]));
+    v.push(p(2, 97, "gemm_bn_swish", "Matmul + bias + norm + Swish (fused post-linear processing).",
+          vec![g1k.clone(),
+               Op::LayerNorm { rows: 1024, cols: 1024 },
+               Op::Elementwise { elems: 1024 * 1024, ops_per_elem: 5, inputs: 1 }]));
+    v.push(p(2, 99, "gemm_gelu_softmax", "Attention-like fusion (matmul + GELU + softmax).",
+          vec![g1k.clone(),
+               Op::Elementwise { elems: 1024 * 1024, ops_per_elem: 8, inputs: 1 },
+               Op::Softmax { rows: 1024, cols: 1024 }]));
+
+    // =======================================================================
+    // Level 3 — 8 problems (module-level workloads)
+    // =======================================================================
+    v.push(with_unfusable(with_artifact(
+        p(3, 1, "mlp", "MLP (basic feedforward block).",
+          vec![
+              Op::Gemm { m: 1024, n: 4096, k: 1024 },
+              Op::Elementwise { elems: 1024 * 4096, ops_per_elem: 1, inputs: 1 },
+              Op::Gemm { m: 1024, n: 1024, k: 4096 },
+          ]),
+        "mlp_block"), vec![1]));
+    v.push(with_unfusable(
+        p(3, 2, "wide_mlp", "Shallow wide MLP (LLM FFN-like width).",
+          vec![
+              Op::Gemm { m: 512, n: 8192, k: 2048 },
+              Op::Elementwise { elems: 512 * 8192, ops_per_elem: 1, inputs: 1 },
+              Op::Gemm { m: 512, n: 2048, k: 8192 },
+          ]), vec![1]));
+    v.push(with_unfusable(
+        p(3, 3, "deep_mlp", "Deep narrow MLP (depth/width trade-off).",
+          vec![
+              Op::Gemm { m: 1024, n: 1024, k: 1024 },
+              Op::Elementwise { elems: 1024 * 1024, ops_per_elem: 1, inputs: 1 },
+              Op::Gemm { m: 1024, n: 1024, k: 1024 },
+              Op::Elementwise { elems: 1024 * 1024, ops_per_elem: 1, inputs: 1 },
+              Op::Gemm { m: 1024, n: 1024, k: 1024 },
+              Op::Elementwise { elems: 1024 * 1024, ops_per_elem: 1, inputs: 1 },
+              Op::Gemm { m: 1024, n: 1024, k: 1024 },
+          ]), vec![1, 3, 5]));
+    v.push(with_artifact(
+        p(3, 43, "causal_attention", "Causal attention block (core decoder attention).",
+          vec![Op::Attention { b: 16, h: 12, s: 1024, d: 64, causal: true }]),
+        "causal_attention"));
+    v.push(with_unfusable(
+        p(3, 44, "gpt_block", "Full GPT block (attention + FFN).",
+          vec![
+              Op::LayerNorm { rows: 16 * 1024, cols: 768 },
+              Op::Gemm { m: 16 * 1024, n: 3 * 768, k: 768 },          // qkv proj
+              Op::Attention { b: 16, h: 12, s: 1024, d: 64, causal: true },
+              Op::Gemm { m: 16 * 1024, n: 768, k: 768 },              // out proj
+              Op::LayerNorm { rows: 16 * 1024, cols: 768 },
+              Op::Gemm { m: 16 * 1024, n: 4 * 768, k: 768 },          // fc1
+              Op::Elementwise { elems: 16 * 1024 * 4 * 768, ops_per_elem: 8, inputs: 1 },
+              Op::Gemm { m: 16 * 1024, n: 768, k: 4 * 768 },          // fc2
+          ]), vec![1, 2, 3, 5, 6]));
+    v.push(with_unfusable(
+        p(3, 48, "mamba_block", "Mamba SSM block (emerging text SSM architecture).",
+          vec![
+              Op::Gemm { m: 16 * 1024, n: 2 * 1024, k: 512 },          // in proj
+              Op::Conv1d { n: 16, l: 1024, ci: 1024, co: 1024, kw: 4, stride: 1, groups: 1024 },
+              Op::Elementwise { elems: 16 * 1024 * 1024, ops_per_elem: 5, inputs: 1 },
+              Op::Scan { rows: 16 * 1024, cols: 1024 },                // selective scan
+              Op::Gemm { m: 16 * 1024, n: 512, k: 1024 },              // out proj
+          ]), vec![0, 3]));
+    v.push(with_unfusable(
+        p(3, 49, "mamba_state", "Mamba SSM with state output (streaming/stateful variant).",
+          vec![
+              Op::Gemm { m: 16 * 1024, n: 2 * 1024, k: 512 },
+              Op::Conv1d { n: 16, l: 1024, ci: 1024, co: 1024, kw: 4, stride: 1, groups: 1024 },
+              Op::Elementwise { elems: 16 * 1024 * 1024, ops_per_elem: 5, inputs: 1 },
+              Op::Scan { rows: 16 * 1024, cols: 1024 },
+              Op::Elementwise { elems: 16 * 1024 * 1024, ops_per_elem: 2, inputs: 2 },
+              Op::Gemm { m: 16 * 1024, n: 512, k: 1024 },
+          ]), vec![0, 3]));
+    v.push(with_unfusable(
+        p(3, 50, "relu_attention", "ReLU self-attention variant (alternative attention formulation).",
+          vec![
+              Op::BatchedGemm { b: 16 * 12, m: 1024, n: 1024, k: 64 }, // QK^T
+              Op::Elementwise { elems: 192 * 1024 * 1024, ops_per_elem: 2, inputs: 1 }, // relu+scale
+              Op::BatchedGemm { b: 16 * 12, m: 1024, n: 64, k: 1024 }, // PV
+          ]), vec![1]));
+
+    debug_assert_eq!(v.len(), 59);
+    v
+}
+
+/// Look up one problem by id string like "L1-1" / "1-1".
+pub fn find(suite: &[Problem], key: &str) -> Option<usize> {
+    let k = key.trim_start_matches('L').trim_start_matches('l');
+    let (lvl, num) = k.split_once('-')?;
+    let id = ProblemId { level: lvl.parse().ok()?, num: num.parse().ok()? };
+    suite.iter().position(|p| p.id == id)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suite_has_59_problems_matching_appendix_a3() {
+        let s = suite();
+        assert_eq!(s.len(), 59);
+        let l1: Vec<u32> = s.iter().filter(|p| p.id.level == 1).map(|p| p.id.num).collect();
+        let l2: Vec<u32> = s.iter().filter(|p| p.id.level == 2).map(|p| p.id.num).collect();
+        let l3: Vec<u32> = s.iter().filter(|p| p.id.level == 3).map(|p| p.id.num).collect();
+        assert_eq!(l1, vec![1, 2, 3, 4, 6, 7, 8, 9, 16, 17, 18, 21, 22, 23, 25, 26, 36, 40,
+                            47, 48, 67, 76, 86, 87, 88, 89, 90, 91, 92, 95, 97]);
+        assert_eq!(l2, vec![9, 28, 29, 37, 40, 41, 53, 56, 59, 62, 63, 66, 70, 76, 81, 86,
+                            88, 94, 97, 99]);
+        assert_eq!(l3, vec![1, 2, 3, 43, 44, 48, 49, 50]);
+    }
+
+    #[test]
+    fn excluded_problems_absent() {
+        let s = suite();
+        // L2-80 (Gemm_Max_Subtract_GELU) and L2-24 are excluded per §5.2.
+        assert!(!s.iter().any(|p| p.id.level == 2 && (p.id.num == 80 || p.id.num == 24)));
+    }
+
+    #[test]
+    fn fused_bytes_below_unfused_sum() {
+        for prob in suite() {
+            let unfused: u64 = prob.ops.iter().map(|o| o.bytes(prob.dtype)).sum();
+            assert!(prob.fused_bytes() <= unfused,
+                "{}: fused {} > unfused {}", prob.id, prob.fused_bytes(), unfused);
+        }
+    }
+
+    #[test]
+    fn gemm_problems_are_compute_bound_shapes() {
+        let s = suite();
+        let p11 = &s[find(&s, "L1-1").unwrap()];
+        assert!(p11.arithmetic_intensity() > 500.0);
+        let softmax = &s[find(&s, "L1-23").unwrap()];
+        assert!(softmax.arithmetic_intensity() < 10.0);
+    }
+
+    #[test]
+    fn find_parses_ids() {
+        let s = suite();
+        assert!(find(&s, "L1-1").is_some());
+        assert!(find(&s, "2-76").is_some());
+        assert!(find(&s, "L9-1").is_none());
+    }
+
+    #[test]
+    fn artifacts_reference_real_python_problems() {
+        let known = ["gemm_square", "gemm_tall_skinny", "batched_gemm", "softmax",
+                     "rmsnorm", "layernorm", "cumsum", "attention", "causal_attention",
+                     "gemm_bias_relu", "gemm_divide_gelu", "gemm_silu_scale",
+                     "gemm_sigmoid_residual", "mlp_block"];
+        for prob in suite() {
+            if let Some(a) = prob.artifact {
+                assert!(known.contains(&a), "{}: unknown artifact {a}", prob.id);
+            }
+        }
+    }
+
+    #[test]
+    fn every_problem_has_positive_work() {
+        for prob in suite() {
+            assert!(prob.flops() > 0, "{}", prob.id);
+            assert!(prob.fused_bytes() > 0, "{}", prob.id);
+        }
+    }
+}

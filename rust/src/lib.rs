@@ -1,0 +1,45 @@
+//! # ucutlass-repro
+//!
+//! Reproduction of *"Improving Efficiency of GPU Kernel Optimization Agents
+//! using a Domain-Specific Language and Speed-of-Light Guidance"* (NVIDIA,
+//! CS.LG 2026) as a three-layer Rust + JAX + Pallas system.
+//!
+//! Layer 3 (this crate) is the paper's system contribution:
+//!
+//! * [`dsl`] — the µCUTLASS DSL: lexer, parser, typed configuration IR,
+//!   constraint validation (the full SM70–SM100 rule set from the paper's
+//!   Appendix A.1 grammar), and code generation.
+//! * [`sol`] — Speed-of-Light analysis: roofline bounds, clock-aware peaks,
+//!   FP16 augmentation, and report generation (paper §4.1, Appendix A.2).
+//! * [`perfmodel`] — the calibrated H100 analytical performance model that
+//!   substitutes for the paper's GPU testbed (DESIGN.md §2).
+//! * [`kernelbench`] — the 59-problem KernelBench subset (Appendix A.3).
+//! * [`agent`] — SimLLM policy models (three capability tiers) and the
+//!   MI / in-prompt controllers (paper §5.5).
+//! * [`mantis`] — the orchestrated Measure–Analyze–Nominate–Triage–
+//!   Implement–Summarize controller with gap-aware ROI triage (paper §4.2).
+//! * [`scheduler`] — SOL-guided budget scheduling: ε/w eligibility rules,
+//!   offline replay, Pareto frontiers, efficiency gain (paper §4.3, §6.2).
+//! * [`integrity`] — SOL-ceiling, LLM-game-detector and PyTorch-only
+//!   detectors with the full label taxonomy (paper §4.4, §6.3).
+//! * [`metrics`] — Fast-p / Attempt-Fast-p curves, signed area, retention.
+//! * [`runtime`] — PJRT executor: loads the AOT HLO artifacts produced by
+//!   `python/compile/aot.py` and numerically validates candidate kernels.
+//! * [`experiments`] — one driver per paper figure/table (fig3…fig14, tab4).
+//!
+//! Python never runs on the request path: `make artifacts` lowers the L2/L1
+//! JAX+Pallas graphs to HLO text once; everything here is self-contained.
+
+pub mod util;
+pub mod dsl;
+pub mod sol;
+pub mod kernelbench;
+pub mod perfmodel;
+pub mod agent;
+pub mod mantis;
+pub mod scheduler;
+pub mod integrity;
+pub mod metrics;
+pub mod runtime;
+pub mod experiments;
+pub mod report;

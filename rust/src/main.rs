@@ -1,0 +1,350 @@
+//! `repro` — the L3 coordinator CLI.
+//!
+//! ```text
+//! repro exp <fig3..fig14|tab4|all> [--out DIR] [--seed N]   regenerate paper artifacts
+//! repro sol <problem-id>                                     SOL report (Appendix A.2)
+//! repro dsl compile <file|->  [--dims MxNxK]                 compile µCUTLASS source
+//! repro dsl coverage                                         Table 1 coverage matrix
+//! repro run --tier T [--dsl] [--sol orch|prompt] [--problems IDs] [--seed N]
+//! repro validate [--artifacts DIR] [--problem NAME] [--seed N]
+//! repro schedule --tier T [--eps PCT] [--window W] [--seed N]
+//! repro list                                                 list the 59 problems
+//! ```
+//!
+//! (clap is not in the offline vendor set; argument parsing is hand-rolled.)
+
+use std::collections::HashMap;
+use std::io::Read;
+use std::process::ExitCode;
+
+use ucutlass_repro::agent::controller::{ControllerKind, VariantSpec};
+use ucutlass_repro::agent::ModelTier;
+use ucutlass_repro::experiments::figures::{self, ExpCtx};
+use ucutlass_repro::experiments::{run_variant, Bench};
+use ucutlass_repro::integrity::IntegrityPipeline;
+use ucutlass_repro::kernelbench;
+use ucutlass_repro::metrics;
+use ucutlass_repro::report::table;
+use ucutlass_repro::scheduler::{self, Policy};
+use ucutlass_repro::sol;
+use ucutlass_repro::{dsl, runtime};
+
+fn main() -> ExitCode {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    match run(&args) {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+/// Split args into positionals and `--flag value` options.
+fn parse_opts(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
+    let mut pos = Vec::new();
+    let mut opts = HashMap::new();
+    let mut i = 0;
+    while i < args.len() {
+        if let Some(name) = args[i].strip_prefix("--") {
+            let val = if i + 1 < args.len() && !args[i + 1].starts_with("--") {
+                i += 1;
+                args[i].clone()
+            } else {
+                "true".to_string()
+            };
+            opts.insert(name.to_string(), val);
+        } else {
+            pos.push(args[i].clone());
+        }
+        i += 1;
+    }
+    (pos, opts)
+}
+
+fn tier_of(s: &str) -> Result<ModelTier, String> {
+    match s {
+        "mini" | "gpt-5-mini" => Ok(ModelTier::Mini),
+        "mid" | "gpt-5" => Ok(ModelTier::Mid),
+        "max" | "gpt-5.2" => Ok(ModelTier::Max),
+        other => Err(format!("unknown tier `{other}` (mini|mid|max)")),
+    }
+}
+
+fn run(args: &[String]) -> Result<(), String> {
+    let (pos, opts) = parse_opts(args);
+    let seed: u64 = opts.get("seed").and_then(|s| s.parse().ok()).unwrap_or(12345);
+    match pos.first().map(String::as_str) {
+        Some("exp") => cmd_exp(&pos, &opts, seed),
+        Some("sol") => cmd_sol(&pos),
+        Some("dsl") => cmd_dsl(&pos, &opts),
+        Some("run") => cmd_run(&pos, &opts, seed),
+        Some("validate") => cmd_validate(&opts, seed),
+        Some("schedule") => cmd_schedule(&opts, seed),
+        Some("list") => cmd_list(),
+        _ => {
+            println!("{}", HELP);
+            Ok(())
+        }
+    }
+}
+
+const HELP: &str = "\
+repro — µCUTLASS + SOL-guidance reproduction (see README.md)
+
+  repro exp <fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|fig14|tab4|ext1|ext2|all>
+            [--out results] [--seed N]
+  repro sol <problem-id>               e.g. repro sol L1-1
+  repro dsl compile <file|->           [--dims MxNxK]
+  repro dsl coverage
+  repro run --tier <mini|mid|max> [--dsl] [--sol <orch|prompt>]
+            [--problems L1-1,L2-76] [--seed N]
+  repro validate [--artifacts artifacts] [--problem NAME] [--seed N]
+  repro schedule --tier <mini|mid|max> [--eps 100] [--window 8] [--seed N]
+  repro list";
+
+fn cmd_exp(pos: &[String], opts: &HashMap<String, String>, seed: u64) -> Result<(), String> {
+    let which = pos.get(1).map(String::as_str).unwrap_or("all");
+    let out = opts.get("out").cloned().unwrap_or_else(|| "results".into());
+    let mut ctx = ExpCtx::new(&out, seed);
+    let text = match which {
+        "fig3" => figures::fig3(&mut ctx),
+        "fig4" => figures::fig4(&mut ctx),
+        "fig5" => figures::fig5(&mut ctx),
+        "fig6" => figures::fig6(&mut ctx),
+        "fig7" => figures::fig7(&mut ctx),
+        "fig8" => figures::fig8(&mut ctx),
+        "fig9" => figures::fig9(&mut ctx),
+        "fig10" => figures::fig10(&mut ctx),
+        "fig11" => figures::fig11(&mut ctx),
+        "fig12" => figures::fig12(&mut ctx),
+        "fig13" => figures::fig13(&mut ctx),
+        "fig14" => figures::fig14(&mut ctx),
+        "tab2" | "variants" => figures::tab2(&mut ctx),
+        "tab4" => figures::tab4(&mut ctx),
+        "ext1" => figures::ext1_online_integrity(&mut ctx),
+        "ext2" => figures::ext2_adaptive_hybrid(&mut ctx),
+        "all" => figures::run_all(&mut ctx),
+        other => return Err(format!("unknown experiment `{other}`")),
+    };
+    println!("{text}");
+    println!("(artifacts written to {out}/)");
+    Ok(())
+}
+
+fn cmd_sol(pos: &[String]) -> Result<(), String> {
+    let id = pos.get(1).ok_or("usage: repro sol <problem-id>")?;
+    let problems = kernelbench::suite();
+    let idx = kernelbench::find(&problems, id).ok_or(format!("unknown problem {id}"))?;
+    let analysis = sol::analyze(&problems[idx], &sol::H100_SXM);
+    println!("{}", sol::render_report(&problems[idx], &analysis));
+    Ok(())
+}
+
+fn cmd_dsl(pos: &[String], opts: &HashMap<String, String>) -> Result<(), String> {
+    match pos.get(1).map(String::as_str) {
+        Some("compile") => {
+            let src = match pos.get(2).map(String::as_str) {
+                Some("-") | None => {
+                    let mut s = String::new();
+                    std::io::stdin().read_to_string(&mut s).map_err(|e| e.to_string())?;
+                    s
+                }
+                Some(path) => std::fs::read_to_string(path).map_err(|e| e.to_string())?,
+            };
+            let compiled = if let Some(dims) = opts.get("dims") {
+                let d: Vec<u64> = dims.split('x').filter_map(|x| x.parse().ok()).collect();
+                if d.len() != 3 {
+                    return Err("--dims expects MxNxK".into());
+                }
+                dsl::compile_bound(&src, (d[0], d[1], d[2]))
+            } else {
+                dsl::compile(&src)
+            };
+            match compiled {
+                Ok(c) => {
+                    println!("// {}\n{}", c.header_name, c.header);
+                    println!("// variant key: {:?}", c.variant_key);
+                    Ok(())
+                }
+                Err(e) => Err(e.to_string()),
+            }
+        }
+        Some("coverage") => {
+            // Table 1 coverage matrix
+            let rows = vec![
+                vec!["GEMM".into(), "SM70+".into(), "—".into()],
+                vec!["Grouped GEMM".into(), "SM80+".into(), "—".into()],
+                vec!["Conv2d".into(), "SM70+".into(), "NHWC".into()],
+                vec!["Conv3d".into(), "SM70+".into(), "NDHWC".into()],
+                vec!["Conv3d wgrad".into(), "SM70–89".into(), "SM90+ rejected".into()],
+                vec!["Conv1d".into(), "SM70+".into(), "lowered to Conv2d, H=1".into()],
+                vec!["Depthwise Conv".into(), "SM70–89; SM90+*".into(), "CuTe backend on SM90+".into()],
+                vec!["Grouped Conv".into(), "SM80–89".into(), "—".into()],
+            ];
+            println!("{}", table(&["operation family", "arch support", "notes"], &rows));
+            let feats = vec![
+                vec![".with_dtype/.with_arch/.with_alignment/.with_stages".into(), "SM70+".into()],
+                vec![".with_tile / .with_swizzle / .with_iterator / .with_split_k".into(), "SM70–89".into()],
+                vec![".with_threadblockshape / .with_cluster / .with_scheduler".into(), "SM90+".into()],
+                vec![".with_operand_swap(true)".into(), "SM90+ FP32 GEMM, M==N".into()],
+                vec!["pipeline/transpose + fused dtype conversion".into(), "SM70+".into()],
+                vec!["custom() epilogues".into(), "SM90a".into()],
+            ];
+            println!("{}", table(&["feature / binding", "arch support"], &feats));
+            Ok(())
+        }
+        _ => Err("usage: repro dsl <compile|coverage>".into()),
+    }
+}
+
+fn cmd_run(_pos: &[String], opts: &HashMap<String, String>, seed: u64) -> Result<(), String> {
+    let tier = tier_of(opts.get("tier").map(String::as_str).unwrap_or("mini"))?;
+    let dsl_on = opts.contains_key("dsl");
+    let controller = match opts.get("sol").map(String::as_str) {
+        Some("orch") => ControllerKind::OrchestratedSol,
+        Some("prompt") => ControllerKind::InPromptSol,
+        None => ControllerKind::Mi,
+        Some(other) => return Err(format!("unknown --sol `{other}` (orch|prompt)")),
+    };
+    let spec = VariantSpec::new(controller, dsl_on, tier);
+    let bench = Bench::new();
+    let selected: Vec<usize> = match opts.get("problems") {
+        Some(list) => list
+            .split(',')
+            .map(|id| {
+                kernelbench::find(&bench.problems, id).ok_or(format!("unknown problem {id}"))
+            })
+            .collect::<Result<_, _>>()?,
+        None => (0..bench.problems.len()).collect(),
+    };
+    let log = run_variant(&bench, &spec, seed, None);
+    let pipeline = IntegrityPipeline::default();
+    let mut rows = Vec::new();
+    let mut speedups = Vec::new();
+    for &i in &selected {
+        let run = &log.runs[i];
+        let sp = pipeline.filtered_speedup(run, seed).unwrap_or(1.0);
+        speedups.push(sp);
+        rows.push(vec![
+            bench.problems[i].id.to_string(),
+            bench.problems[i].name.into(),
+            format!("{:.3}", run.t_ref_ms),
+            run.best_time_ms().map(|t| format!("{t:.3}")).unwrap_or("-".into()),
+            format!("{sp:.2}x"),
+            format!("{:.3}", run.t_sol_fp16_ms),
+            format!("{}", run.total_tokens()),
+        ]);
+    }
+    println!("variant: {}", spec.label());
+    println!(
+        "{}",
+        table(
+            &["id", "problem", "t_ref ms", "t_best ms", "speedup*", "fp16 SOL ms", "tokens"],
+            &rows
+        )
+    );
+    println!("* integrity-filtered");
+    println!(
+        "geomean {:.2}x  median {:.2}x  total ${:.2}",
+        metrics::geomean_speedup(&speedups),
+        metrics::median_speedup(&speedups),
+        log.dollar_cost()
+    );
+    Ok(())
+}
+
+fn cmd_validate(opts: &HashMap<String, String>, seed: u64) -> Result<(), String> {
+    let dir = opts.get("artifacts").cloned().unwrap_or_else(|| "artifacts".into());
+    let mut rt = runtime::Runtime::open(&dir).map_err(|e| e.to_string())?;
+    let problems: Vec<String> = match opts.get("problem") {
+        Some(p) => vec![p.clone()],
+        None => rt.manifest.problems.keys().cloned().collect(),
+    };
+    let mut rows = Vec::new();
+    let mut failures = 0;
+    for pname in &problems {
+        let variants: Vec<String> = rt
+            .manifest
+            .problems
+            .get(pname)
+            .ok_or(format!("unknown problem {pname}"))?
+            .variants
+            .keys()
+            .cloned()
+            .collect();
+        for v in variants {
+            let rep = rt.validate_variant(pname, &v, seed).map_err(|e| e.to_string())?;
+            if !rep.pass {
+                failures += 1;
+            }
+            rows.push(vec![
+                pname.clone(),
+                v,
+                format!("{:.2e}", rep.max_abs_err),
+                format!("{}", rep.elems),
+                if rep.pass { "PASS".into() } else { "FAIL".into() },
+            ]);
+        }
+    }
+    println!("{}", table(&["problem", "variant", "max |err|", "elems", "status"], &rows));
+    if failures > 0 {
+        return Err(format!("{failures} variant(s) failed numeric validation"));
+    }
+    println!("all {} validations passed (PJRT CPU, seeded inputs)", rows.len());
+    Ok(())
+}
+
+fn cmd_schedule(opts: &HashMap<String, String>, seed: u64) -> Result<(), String> {
+    let tier = tier_of(opts.get("tier").map(String::as_str).unwrap_or("max"))?;
+    let spec = VariantSpec::new(ControllerKind::OrchestratedSol, true, tier);
+    let bench = Bench::new();
+    let log = run_variant(&bench, &spec, seed, None);
+    let pipeline = IntegrityPipeline::default();
+    let policy = Policy {
+        epsilon: opts
+            .get("eps")
+            .and_then(|s| s.parse::<f64>().ok())
+            .map(|p| p / 100.0)
+            .unwrap_or(1.0),
+        window: opts.get("window").and_then(|s| s.parse().ok()).unwrap_or(0),
+    };
+    let r = scheduler::replay(&log, &policy, &pipeline, seed);
+    println!("variant: {}   policy: {}", spec.label(), policy.label());
+    println!(
+        "token savings {:.0}%  attempt savings {:.0}%  geomean retention {:.0}%  efficiency gain {:.2}x",
+        r.token_savings() * 100.0,
+        r.attempt_savings(40) * 100.0,
+        r.geomean_retention() * 100.0,
+        r.efficiency_gain()
+    );
+    Ok(())
+}
+
+fn cmd_list() -> Result<(), String> {
+    let problems = kernelbench::suite();
+    let gpu = sol::H100_SXM;
+    let rows: Vec<Vec<String>> = problems
+        .iter()
+        .map(|p| {
+            let a = sol::analyze(p, &gpu);
+            vec![
+                p.id.to_string(),
+                p.name.into(),
+                format!("{:.3e}", p.flops() as f64),
+                format!("{:.1}", p.arithmetic_intensity()),
+                format!("{:?}", a.bottleneck),
+                format!("{:.3}", a.t_sol_ms),
+                p.artifact.unwrap_or("-").into(),
+            ]
+        })
+        .collect();
+    println!(
+        "{}",
+        table(
+            &["id", "name", "FLOPs", "AI", "bottleneck", "t_SOL ms", "AOT artifact"],
+            &rows
+        )
+    );
+    Ok(())
+}

@@ -1,0 +1,341 @@
+//! MANTIS: the orchestrated SOL-first workflow (paper §4.2) —
+//! Measure–Analyze–Nominate–Triage–Implement–Summarize.
+//!
+//! * **Measure** — profile the current best kernel (simulated NCU).
+//! * **Analyze** — SOL gap `g = t_best / t_SOL` + bottleneck attribution.
+//! * **Nominate** — candidate hypotheses with causal links to bottlenecks.
+//! * **Triage** — rank by the gap-aware ROI formula
+//!   `ROI(h) = Ŝ(h)^(1+max(0, log10(g/5))) / (R_impl · R_perf)`:
+//!   ambition amplifies when far from SOL, incrementalism near it.
+//! * **Implement** — a fixed attempt budget per selected hypothesis,
+//!   running the shared Generate–Compile–Test–Profile engine.
+//! * **Summarize** — distill outcomes into cross-problem memory that later
+//!   nominations retrieve.
+//!
+//! Budgets follow Table 2: 5 iterations × 2 hypotheses × 4 attempts = 40.
+//! The component ablations of Table 3 are expressed by [`MantisConfig`].
+
+use std::collections::HashMap;
+
+use crate::agent::controller::{modifiers, quality_gain, run_attempt, AgentState, Env, VariantSpec};
+use crate::agent::policy::{self, OptMove};
+use crate::agent::runlog::ProblemRun;
+use crate::perfmodel::CandidateConfig;
+use crate::util::rng::Pcg32;
+
+/// Which MANTIS phases are active (Table 3 ablations).
+#[derive(Debug, Clone, Copy)]
+pub struct MantisConfig {
+    /// SOL analysis feeds nomination + the gap exponent (off = "MNTIS").
+    pub analyze: bool,
+    /// ROI-based ranking (off = "MANIS": random pick among nominations).
+    pub triage: bool,
+    /// Post-iteration summaries (off = "MANTI": also disables memory).
+    pub summarize: bool,
+    /// Summaries persist across problems (off = "MANTIS-noXmem").
+    pub cross_memory: bool,
+}
+
+impl Default for MantisConfig {
+    fn default() -> Self {
+        MantisConfig { analyze: true, triage: true, summarize: true, cross_memory: true }
+    }
+}
+
+impl MantisConfig {
+    pub fn ablation(name: &str) -> MantisConfig {
+        let mut c = MantisConfig::default();
+        match name {
+            "MNTIS" => c.analyze = false,
+            "MANIS" => c.triage = false,
+            "MANTI" => {
+                c.summarize = false;
+                c.cross_memory = false;
+            }
+            "MANTIS-noXmem" => c.cross_memory = false,
+            _ => {}
+        }
+        c
+    }
+}
+
+/// Iterations × hypotheses × attempts (Table 2).
+pub const ITERATIONS: u32 = 5;
+pub const HYPOTHESES_PER_ITER: usize = 2;
+pub const ATTEMPTS_PER_HYPOTHESIS: u32 = 4;
+
+/// The gap-aware ROI formula (paper §4.2 step 4).
+pub fn roi(est_speedup: f64, gap: f64, r_impl: f64, r_perf: f64) -> f64 {
+    let exponent = 1.0 + (gap / 5.0).log10().max(0.0);
+    est_speedup.max(1e-6).powf(exponent) / (r_impl * r_perf)
+}
+
+/// A nominated optimization hypothesis.
+#[derive(Debug, Clone)]
+pub struct Hypothesis {
+    pub mv: OptMove,
+    /// The model's own speedup estimate Ŝ(h) (noisy).
+    pub est_speedup: f64,
+    /// Implementation risk R_impl ∈ [0.5, 2.5].
+    pub r_impl: f64,
+    /// Performance risk R_perf ∈ [0.5, 2.5].
+    pub r_perf: f64,
+    pub roi: f64,
+}
+
+/// Per-move-kind outcome statistics distilled by Summarize; retrieved by
+/// later Nominate phases (the paper's cross-problem memory).
+#[derive(Debug, Clone, Default)]
+pub struct CrossMemory {
+    /// move-kind key → (times it improved, times it did not).
+    stats: HashMap<&'static str, (u32, u32)>,
+}
+
+fn move_key(mv: OptMove) -> &'static str {
+    match mv {
+        OptMove::Tile(_) => "tile",
+        OptMove::UseFp16 => "fp16",
+        OptMove::UseBf16 => "bf16",
+        OptMove::FuseAll => "fuse",
+        OptMove::SchedulerPersistent => "persistent",
+        OptMove::SchedulerStreamK => "streamk",
+        OptMove::MoreStages => "stages",
+        OptMove::ImproveCode => "code",
+    }
+}
+
+impl CrossMemory {
+    pub fn record(&mut self, mv: OptMove, improved: bool) {
+        let e = self.stats.entry(move_key(mv)).or_insert((0, 0));
+        if improved {
+            e.0 += 1;
+        } else {
+            e.1 += 1;
+        }
+    }
+
+    /// Multiplicative prior on a hypothesis's estimate from past outcomes.
+    pub fn prior(&self, mv: OptMove) -> f64 {
+        match self.stats.get(move_key(mv)) {
+            None => 1.0,
+            Some((s, f)) => {
+                let n = (s + f) as f64;
+                let rate = *s as f64 / n;
+                // Laplace-ish smoothing, bounded influence
+                1.0 + 0.5 * (rate - 0.5) * (n / (n + 2.0))
+            }
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.stats.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.stats.is_empty()
+    }
+}
+
+/// Implementation/performance risk scores per move kind.
+fn risks(mv: OptMove) -> (f64, f64) {
+    match mv {
+        OptMove::Tile(_) => (0.7, 0.9),
+        OptMove::UseFp16 | OptMove::UseBf16 => (1.2, 1.0), // precision risk
+        OptMove::FuseAll => (1.6, 0.8),                    // hard to implement, reliable payoff
+        OptMove::SchedulerPersistent | OptMove::SchedulerStreamK => (0.9, 1.1),
+        OptMove::MoreStages => (0.6, 1.2),
+        OptMove::ImproveCode => (1.4, 1.3),
+    }
+}
+
+/// Orchestrated MANTIS on one problem. `ctx` carries the ablation config
+/// and (when cross-memory is on) the memory shared across problems.
+pub fn run_orchestrated(
+    env: &Env,
+    spec: &VariantSpec,
+    pidx: usize,
+    seed: u64,
+    ctx: Option<(&MantisConfig, &mut CrossMemory)>,
+) -> ProblemRun {
+    let default_cfg = MantisConfig::default();
+    let mut local_mem = CrossMemory::default();
+    let (cfg, memory): (&MantisConfig, &mut CrossMemory) = match ctx {
+        Some((c, m)) => (c, m),
+        None => (&default_cfg, &mut local_mem),
+    };
+
+    let mut rng = Pcg32::new(seed, (pidx as u64) << 8 | 3);
+    let mods = modifiers(spec);
+    let tier = spec.tier.params();
+    let problem = &env.problems[pidx];
+    let sol = &env.sols[pidx];
+    let t_ref = env.model.measure_baseline_ms(problem, &mut rng);
+
+    let mut state = AgentState {
+        best_time_ms: f64::INFINITY,
+        t_ref_ms: t_ref,
+        best_cfg: None,
+        gamed: None,
+        consecutive_failures: 0,
+        tokens: 0,
+    };
+    let mut attempts = Vec::with_capacity((ITERATIONS * 8) as usize);
+    let mut attempt_no = 0u32;
+
+    for _iter in 0..ITERATIONS {
+        // ---- Measure + Analyze -------------------------------------------
+        let t_best = if state.best_time_ms.is_finite() { state.best_time_ms } else { t_ref };
+        let gap = if cfg.analyze { sol.gap(t_best) } else { 1.0 };
+        let steering = if cfg.analyze { Some(sol) } else { None };
+
+        // ---- Nominate -----------------------------------------------------
+        let base = state
+            .best_cfg
+            .clone()
+            .unwrap_or_else(|| CandidateConfig::library((128, 128, 64), crate::dsl::DType::Fp32));
+        let mut pool = policy::moves_from(&base);
+        if let Some(s) = steering {
+            let filtered: Vec<OptMove> = pool
+                .iter()
+                .copied()
+                .filter(|m| policy::targets_bottleneck(*m, s.bottleneck))
+                .collect();
+            if !filtered.is_empty() {
+                pool = filtered;
+            }
+        }
+        let qgain = quality_gain(spec.tier);
+        // orchestration's structured artifacts tighten the model's own
+        // estimates beyond in-prompt steering
+        let sigma = tier.estimate_sigma * if cfg.analyze { 0.3 } else { 1.0 };
+        let mut hyps: Vec<Hypothesis> = pool
+            .iter()
+            .map(|&mv| {
+                let cand = policy::apply_move(&base, mv, qgain);
+                let t_new = env.model.candidate_ms(problem, &cand);
+                let t_now = env.model.candidate_ms(problem, &base);
+                let mem_prior = if cfg.summarize { memory.prior(mv) } else { 1.0 };
+                let est = (t_now / t_new) * rng.lognormal_noise(sigma) * mem_prior;
+                let (ri, rp) = risks(mv);
+                Hypothesis { mv, est_speedup: est, r_impl: ri, r_perf: rp, roi: roi(est, gap, ri, rp) }
+            })
+            .collect();
+
+        // ---- Triage ---------------------------------------------------------
+        if cfg.triage {
+            hyps.sort_by(|a, b| b.roi.partial_cmp(&a.roi).unwrap());
+        } else {
+            rng.shuffle(&mut hyps);
+        }
+        let selected: Vec<Hypothesis> = hyps.into_iter().take(HYPOTHESES_PER_ITER).collect();
+        // phase overhead tokens (structured artifacts between phases)
+        state.tokens += (8_000.0 * mods.tokens_mult) as u64;
+
+        // ---- Implement -------------------------------------------------------
+        for h in &selected {
+            let before = state.best_time_ms;
+            for k in 0..ATTEMPTS_PER_HYPOTHESIS {
+                // first attempt executes the hypothesis; retries refine freely
+                let forced = if k == 0 { Some(h.mv) } else { None };
+                let rec = run_attempt(
+                    env, spec, &mods, pidx, attempt_no, &mut state, steering, forced, &mut rng,
+                );
+                attempt_no += 1;
+                attempts.push(rec);
+            }
+            // ---- Summarize ----------------------------------------------------
+            if cfg.summarize {
+                memory.record(h.mv, state.best_time_ms < before);
+            }
+        }
+    }
+
+    ProblemRun {
+        problem_idx: pidx,
+        t_ref_ms: t_ref,
+        t_sol_ms: sol.t_sol_ms,
+        t_sol_fp16_ms: sol.t_sol_fp16_ms,
+        attempts,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::{ControllerKind, ModelTier};
+    use crate::kernelbench::suite;
+    use crate::perfmodel::PerfModel;
+    use crate::sol::{analyze, SolAnalysis, H100_SXM};
+
+    #[test]
+    fn roi_formula_matches_paper() {
+        // Near SOL (g <= 5): exponent 1 → plain Ŝ/(Ri·Rp)
+        assert!((roi(2.0, 3.0, 1.0, 1.0) - 2.0).abs() < 1e-12);
+        // Far from SOL (g = 50): exponent 1 + log10(10) = 2
+        assert!((roi(2.0, 50.0, 1.0, 1.0) - 4.0).abs() < 1e-12);
+        // Risk divides
+        assert!((roi(2.0, 3.0, 2.0, 1.0) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn roi_amplifies_ambition_when_far() {
+        // ambitious (3×) vs incremental (1.3×), both risky vs safe
+        let near_ambitious = roi(3.0, 2.0, 2.0, 1.5);
+        let near_safe = roi(1.3, 2.0, 0.7, 0.9);
+        let far_ambitious = roi(3.0, 100.0, 2.0, 1.5);
+        let far_safe = roi(1.3, 100.0, 0.7, 0.9);
+        // far from SOL the ambitious hypothesis gains relative attractiveness
+        assert!(far_ambitious / far_safe > near_ambitious / near_safe);
+    }
+
+    #[test]
+    fn memory_prior_learns() {
+        let mut m = CrossMemory::default();
+        for _ in 0..8 {
+            m.record(OptMove::UseFp16, true);
+        }
+        for _ in 0..8 {
+            m.record(OptMove::MoreStages, false);
+        }
+        assert!(m.prior(OptMove::UseFp16) > 1.1);
+        assert!(m.prior(OptMove::MoreStages) < 0.9);
+        assert!((m.prior(OptMove::FuseAll) - 1.0).abs() < 1e-12);
+    }
+
+    fn fixture() -> (PerfModel, Vec<crate::kernelbench::Problem>, Vec<SolAnalysis>) {
+        let model = PerfModel::new(H100_SXM.clone());
+        let problems = suite();
+        let sols = problems.iter().map(|p| analyze(p, &H100_SXM)).collect();
+        (model, problems, sols)
+    }
+
+    #[test]
+    fn orchestrated_respects_total_budget() {
+        let (model, problems, sols) = fixture();
+        let env = Env { model: &model, problems: &problems, sols: &sols };
+        let spec = VariantSpec::new(ControllerKind::OrchestratedSol, true, ModelTier::Mid);
+        let run = run_orchestrated(&env, &spec, 0, 9, None);
+        assert_eq!(run.attempts.len(), 40, "5 iters × 2 hyps × 4 attempts");
+    }
+
+    #[test]
+    fn ablation_configs() {
+        assert!(!MantisConfig::ablation("MNTIS").analyze);
+        assert!(!MantisConfig::ablation("MANIS").triage);
+        let manti = MantisConfig::ablation("MANTI");
+        assert!(!manti.summarize && !manti.cross_memory);
+        let noxmem = MantisConfig::ablation("MANTIS-noXmem");
+        assert!(noxmem.summarize && !noxmem.cross_memory);
+    }
+
+    #[test]
+    fn cross_memory_threads_across_problems() {
+        let (model, problems, sols) = fixture();
+        let env = Env { model: &model, problems: &problems, sols: &sols };
+        let spec = VariantSpec::new(ControllerKind::OrchestratedSol, true, ModelTier::Mid);
+        let cfg = MantisConfig::default();
+        let mut mem = CrossMemory::default();
+        run_orchestrated(&env, &spec, 0, 1, Some((&cfg, &mut mem)));
+        assert!(!mem.is_empty(), "summarize should have distilled outcomes");
+    }
+}

@@ -1,0 +1,179 @@
+//! Evaluation metrics (paper §5.6): Fast-p curves, Attempt-Fast-p,
+//! signed area between curves, geomean/median summaries, speedup
+//! retention, and efficiency gain.
+
+use crate::util::stats;
+
+/// A Fast-p curve: percentage of problems whose speedup is ≥ r, sampled on
+/// a grid of thresholds.
+#[derive(Debug, Clone)]
+pub struct FastP {
+    pub thresholds: Vec<f64>,
+    /// Values in [0, 100].
+    pub pct: Vec<f64>,
+}
+
+/// Default threshold grid: log-spaced 0.05×…16× plus the exact round
+/// thresholds the paper reads off (0.5×, 1×, 2×, 4×, …).
+pub fn default_grid() -> Vec<f64> {
+    let mut g = Vec::new();
+    let mut r = 0.05f64;
+    while r <= 16.0 + 1e-9 {
+        g.push(r);
+        r *= 1.07;
+    }
+    for key in [0.25, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 8.0, 16.0] {
+        if !g.iter().any(|&x: &f64| (x - key).abs() < 1e-12) {
+            g.push(key);
+        }
+    }
+    g.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    g
+}
+
+/// Build a Fast-p curve from per-problem speedups (unsolved problems should
+/// be passed as 0.0 — they count below every threshold, as in the paper's
+/// Sakana comparison).
+pub fn fast_p(speedups: &[f64], grid: &[f64]) -> FastP {
+    let n = speedups.len().max(1) as f64;
+    let pct = grid
+        .iter()
+        .map(|&r| speedups.iter().filter(|&&s| s >= r).count() as f64 / n * 100.0)
+        .collect();
+    FastP { thresholds: grid.to_vec(), pct }
+}
+
+impl FastP {
+    /// Fraction (0–100) of problems at or above threshold r.
+    pub fn at(&self, r: f64) -> f64 {
+        // first grid point >= r
+        match self.thresholds.iter().position(|&t| t >= r) {
+            Some(i) => self.pct[i],
+            None => 0.0,
+        }
+    }
+}
+
+/// Signed area between two Fast-p curves, ∫[P_A(r) − P_B(r)] dr over the
+/// grid. Positive ⇒ A lies higher/righter. Since Fast-p is a complementary
+/// CDF this equals the difference in arithmetic-mean speedups (×100).
+pub fn signed_area(a: &FastP, b: &FastP) -> f64 {
+    assert_eq!(a.thresholds, b.thresholds);
+    let diff: Vec<f64> = a.pct.iter().zip(&b.pct).map(|(x, y)| (x - y) / 100.0).collect();
+    stats::trapz(&a.thresholds, &diff)
+}
+
+/// Attempt-Fast-p(r): percentage of problems whose best-so-far speedup
+/// reaches ≥ r within the first `a` attempts, for a = 1..=budget.
+/// `per_problem_progress[i][a]` is problem i's best speedup after a+1 attempts.
+pub fn attempt_fast_p(per_problem_progress: &[Vec<f64>], r: f64) -> Vec<f64> {
+    if per_problem_progress.is_empty() {
+        return vec![];
+    }
+    let budget = per_problem_progress.iter().map(|v| v.len()).max().unwrap();
+    let n = per_problem_progress.len() as f64;
+    (0..budget)
+        .map(|a| {
+            per_problem_progress
+                .iter()
+                .filter(|prog| prog.get(a).copied().unwrap_or(0.0) >= r)
+                .count() as f64
+                / n
+                * 100.0
+        })
+        .collect()
+}
+
+/// Scalar summaries used throughout §6: geomean with the PyTorch-seed 1.0
+/// fallback for unsolved problems, and median.
+pub fn geomean_speedup(speedups: &[f64]) -> f64 {
+    stats::geomean_with_fallback(speedups, 1.0)
+}
+
+pub fn median_speedup(speedups: &[f64]) -> f64 {
+    stats::median(speedups)
+}
+
+/// Speedup retention of a scheduling policy vs the fixed-budget run.
+pub fn retention(policy_geomean: f64, fixed_geomean: f64) -> f64 {
+    if fixed_geomean == 0.0 {
+        return 0.0;
+    }
+    policy_geomean / fixed_geomean
+}
+
+/// Efficiency gain (paper §5.6): (g_policy/g_fixed) × (τ_fixed/τ_policy).
+pub fn efficiency_gain(
+    policy_geomean: f64,
+    fixed_geomean: f64,
+    policy_tokens: f64,
+    fixed_tokens: f64,
+) -> f64 {
+    if fixed_geomean <= 0.0 || policy_tokens <= 0.0 {
+        return 0.0;
+    }
+    (policy_geomean / fixed_geomean) * (fixed_tokens / policy_tokens)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fast_p_monotone_decreasing() {
+        let grid = default_grid();
+        let c = fast_p(&[0.5, 1.0, 2.0, 4.0], &grid);
+        for w in c.pct.windows(2) {
+            assert!(w[0] >= w[1]);
+        }
+        assert!((c.at(1.0) - 75.0).abs() < 1e-9);
+        assert!((c.at(2.0) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unsolved_counts_as_zero() {
+        let grid = default_grid();
+        let c = fast_p(&[0.0, 2.0], &grid);
+        assert!((c.at(0.05) - 50.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn signed_area_positive_for_dominant_curve() {
+        let grid = default_grid();
+        let a = fast_p(&[2.0, 3.0, 4.0], &grid);
+        let b = fast_p(&[1.0, 1.5, 2.0], &grid);
+        assert!(signed_area(&a, &b) > 0.0);
+        assert!(signed_area(&b, &a) < 0.0);
+        assert!((signed_area(&a, &a)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn signed_area_approximates_mean_difference() {
+        let grid = default_grid();
+        let a = fast_p(&[2.0, 4.0], &grid);
+        let b = fast_p(&[1.0, 2.0], &grid);
+        // mean diff = (3.0 - 1.5) = 1.5; grid truncation below 0.05 loses a little
+        let area = signed_area(&a, &b);
+        assert!((area - 1.5).abs() < 0.15, "area={area}");
+    }
+
+    #[test]
+    fn attempt_fast_p_rises() {
+        let prog = vec![
+            vec![0.0, 1.0, 2.5, 2.5],
+            vec![0.0, 0.0, 1.0, 3.0],
+        ];
+        let curve = attempt_fast_p(&prog, 2.0);
+        assert_eq!(curve, vec![0.0, 0.0, 50.0, 100.0]);
+        for w in curve.windows(2) {
+            assert!(w[1] >= w[0], "best-so-far curves are monotone");
+        }
+    }
+
+    #[test]
+    fn efficiency_gain_above_one_when_savings_beat_loss() {
+        // 96% retention with 43% token savings → 0.96/0.57 ≈ 1.68 (paper's best)
+        let g = efficiency_gain(0.96 * 2.0, 2.0, 0.57, 1.0);
+        assert!((g - 1.684).abs() < 0.01, "g={g}");
+    }
+}

@@ -1,0 +1,160 @@
+//! Simulated Nsight Compute profile — the *Measure* input to MANTIS
+//! (paper §4.2 step 1). Derived from the analytical model so the profile
+//! is consistent with the simulated runtime: a kernel near its compute
+//! roofline shows high SM throughput, a memory-bound one shows high DRAM
+//! throughput, and a badly-tiled one shows low occupancy.
+
+use super::{CandidateConfig, PerfModel};
+use crate::kernelbench::Problem;
+use crate::util::json::Json;
+
+/// The metric summary MANTIS consumes (a stand-in for `ncu --summary`).
+#[derive(Debug, Clone)]
+pub struct NcuProfile {
+    /// Kernel duration (ms) as NCU would report it.
+    pub duration_ms: f64,
+    /// SM compute throughput, % of peak.
+    pub sm_throughput_pct: f64,
+    /// DRAM throughput, % of peak.
+    pub dram_throughput_pct: f64,
+    /// Achieved occupancy, %.
+    pub occupancy_pct: f64,
+    /// DRAM bytes moved.
+    pub dram_bytes: u64,
+    /// Kernel launch count observed in the profile.
+    pub kernel_launches: u64,
+    /// Launch signatures (library-pattern matching input for the
+    /// PyTorch-only detector, paper §5.8).
+    pub kernel_names: Vec<String>,
+}
+
+impl NcuProfile {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("duration_ms", self.duration_ms)
+            .set("sm_throughput_pct", self.sm_throughput_pct)
+            .set("dram_throughput_pct", self.dram_throughput_pct)
+            .set("occupancy_pct", self.occupancy_pct)
+            .set("dram_bytes", self.dram_bytes)
+            .set("kernel_launches", self.kernel_launches)
+            .set(
+                "kernel_names",
+                Json::Arr(self.kernel_names.iter().map(|s| Json::Str(s.clone())).collect()),
+            );
+        o
+    }
+}
+
+impl PerfModel {
+    /// Profile a candidate: consistent with `candidate_ms`.
+    pub fn profile_candidate(
+        &self,
+        problem: &Problem,
+        cfg: &CandidateConfig,
+        duration_ms: f64,
+        kernel_names: Vec<String>,
+    ) -> NcuProfile {
+        let flops = problem.flops() as f64;
+        let bytes = problem.fused_bytes() as f64;
+        let peak = if problem.is_matmul_like() && cfg.tensor_cores {
+            match cfg.compute_dtype {
+                crate::dsl::DType::Fp16 | crate::dsl::DType::Bf16 => {
+                    self.gpu.effective_fp16_flops()
+                }
+                _ => self.gpu.effective_tf32_flops(),
+            }
+        } else {
+            self.gpu.effective_fp32_flops()
+        };
+        let dur_s = (duration_ms / 1e3).max(1e-9);
+        let sm = (flops / dur_s / peak * 100.0).min(100.0);
+        let dram = (bytes / dur_s / self.gpu.effective_bandwidth() * 100.0).min(100.0);
+        // Occupancy proxy: deep pipelines with moderate tiles occupy well.
+        let tile_cost = (cfg.tile.0 * cfg.tile.1) as f64 / (256.0 * 256.0);
+        let occ = (100.0 * (1.0 - 0.45 * tile_cost) * (0.7 + 0.1 * cfg.stages.min(3) as f64))
+            .clamp(8.0, 100.0);
+        let launches = 1 + ((problem.ops.len() as f64 - 1.0)
+            * (1.0 - cfg.fusion_coverage.clamp(0.0, 1.0))) as u64;
+        NcuProfile {
+            duration_ms: duration_ms,
+            sm_throughput_pct: sm,
+            dram_throughput_pct: dram,
+            occupancy_pct: occ,
+            dram_bytes: bytes as u64,
+            kernel_launches: launches,
+            kernel_names,
+        }
+    }
+}
+
+/// Known library kernel-name prefixes (paper §5.8: `at::native::`, cublas,
+/// cudnn, …) — the static PyTorch-only detector matches against these.
+pub const LIBRARY_KERNEL_PATTERNS: &[&str] = &[
+    "at::native::",
+    "cublas",
+    "cutlass::Kernel", // cuBLAS-dispatched cutlass instantiations
+    "cudnn",
+    "void at_cuda_detail",
+    "triton__", // torch.compile generated
+    "vectorized_elementwise_kernel",
+    "reduce_kernel",
+];
+
+/// Does a kernel-launch signature match a known library pattern?
+pub fn is_library_kernel(name: &str) -> bool {
+    LIBRARY_KERNEL_PATTERNS.iter().any(|p| name.contains(p))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::DType;
+    use crate::kernelbench::{find, suite};
+    use crate::perfmodel::CandidateConfig;
+    use crate::sol::H100_SXM;
+
+    #[test]
+    fn compute_bound_profile_shows_high_sm() {
+        let m = PerfModel::new(H100_SXM.clone());
+        let s = suite();
+        let p = &s[find(&s, "L1-1").unwrap()];
+        let cfg = CandidateConfig::library((128, 128, 64), DType::Fp32);
+        let t = m.candidate_ms(p, &cfg);
+        let prof = m.profile_candidate(p, &cfg, t, vec!["ucutlass_gemm".into()]);
+        assert!(prof.sm_throughput_pct > 60.0, "{}", prof.sm_throughput_pct);
+        assert!(prof.dram_throughput_pct < 30.0, "{}", prof.dram_throughput_pct);
+    }
+
+    #[test]
+    fn memory_bound_profile_shows_high_dram() {
+        let m = PerfModel::new(H100_SXM.clone());
+        let s = suite();
+        let p = &s[find(&s, "L1-23").unwrap()];
+        let cfg = CandidateConfig::library((128, 128, 32), DType::Fp32);
+        let t = m.candidate_ms(p, &cfg);
+        let prof = m.profile_candidate(p, &cfg, t, vec!["softmax_custom".into()]);
+        assert!(prof.dram_throughput_pct > 50.0, "{}", prof.dram_throughput_pct);
+    }
+
+    #[test]
+    fn library_patterns_match() {
+        assert!(is_library_kernel("void at::native::vectorized_elementwise_kernel<4, ...>"));
+        assert!(is_library_kernel("ampere_sgemm_128x64_tn [cublas]"));
+        assert!(!is_library_kernel("ucutlass_3fa9c2d1::kernel_impl_stage0"));
+    }
+
+    #[test]
+    fn profile_json_roundtrips() {
+        let prof = NcuProfile {
+            duration_ms: 1.0,
+            sm_throughput_pct: 50.0,
+            dram_throughput_pct: 20.0,
+            occupancy_pct: 75.0,
+            dram_bytes: 1000,
+            kernel_launches: 2,
+            kernel_names: vec!["k1".into()],
+        };
+        let j = prof.to_json();
+        assert_eq!(j.get("kernel_launches").unwrap().as_u64(), Some(2));
+    }
+}

@@ -1,0 +1,154 @@
+//! Output rendering: aligned text tables, CSV files, and ASCII line plots
+//! for the experiment drivers.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+/// Render an aligned text table.
+pub fn table(headers: &[&str], rows: &[Vec<String>]) -> String {
+    let ncols = headers.len();
+    let mut widths: Vec<usize> = headers.iter().map(|h| h.len()).collect();
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncols) {
+            widths[i] = widths[i].max(cell.len());
+        }
+    }
+    let mut out = String::new();
+    let sep = |out: &mut String| {
+        for w in widths.iter() {
+            let _ = write!(out, "+{}", "-".repeat(w + 2));
+        }
+        out.push_str("+\n");
+    };
+    sep(&mut out);
+    for (i, h) in headers.iter().enumerate() {
+        let _ = write!(out, "| {:w$} ", h, w = widths[i]);
+    }
+    out.push_str("|\n");
+    sep(&mut out);
+    for row in rows {
+        for (i, cell) in row.iter().enumerate().take(ncols) {
+            let _ = write!(out, "| {:w$} ", cell, w = widths[i]);
+        }
+        out.push_str("|\n");
+    }
+    sep(&mut out);
+    out
+}
+
+/// Write rows as CSV (quotes cells containing commas).
+pub fn write_csv(path: &Path, headers: &[&str], rows: &[Vec<String>]) -> std::io::Result<()> {
+    let mut s = String::new();
+    let esc = |c: &str| {
+        if c.contains(',') || c.contains('"') {
+            format!("\"{}\"", c.replace('"', "\"\""))
+        } else {
+            c.to_string()
+        }
+    };
+    s.push_str(&headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(","));
+    s.push('\n');
+    for row in rows {
+        s.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+        s.push('\n');
+    }
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    std::fs::write(path, s)
+}
+
+/// ASCII line plot of one or more named series over a shared x grid.
+pub fn ascii_plot(
+    title: &str,
+    x: &[f64],
+    series: &[(&str, &[f64])],
+    width: usize,
+    height: usize,
+    log_x: bool,
+) -> String {
+    let mut out = format!("{title}\n");
+    if x.is_empty() || series.is_empty() {
+        return out;
+    }
+    let tx = |v: f64| if log_x { v.max(1e-12).ln() } else { v };
+    let (x0, x1) = (tx(x[0]), tx(x[x.len() - 1]));
+    let ymax = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().copied())
+        .fold(f64::MIN, f64::max)
+        .max(1e-9);
+    let ymin = series
+        .iter()
+        .flat_map(|(_, ys)| ys.iter().copied())
+        .fold(f64::MAX, f64::min)
+        .min(ymax);
+    let marks = ['*', 'o', '+', 'x', '#', '@', '%', '&'];
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, (_, ys)) in series.iter().enumerate() {
+        for (xi, &xv) in x.iter().enumerate() {
+            if xi >= ys.len() {
+                break;
+            }
+            let px = if (x1 - x0).abs() < 1e-12 {
+                0
+            } else {
+                (((tx(xv) - x0) / (x1 - x0)) * (width - 1) as f64).round() as usize
+            };
+            let py = if (ymax - ymin).abs() < 1e-12 {
+                height - 1
+            } else {
+                (height - 1)
+                    - (((ys[xi] - ymin) / (ymax - ymin)) * (height - 1) as f64).round() as usize
+            };
+            if px < width && py < height {
+                grid[py][px] = marks[si % marks.len()];
+            }
+        }
+    }
+    let _ = writeln!(out, "  y: [{ymin:.2} .. {ymax:.2}]");
+    for row in grid {
+        let _ = writeln!(out, "  |{}", row.into_iter().collect::<String>());
+    }
+    let _ = writeln!(out, "  +{}", "-".repeat(width));
+    let _ = writeln!(
+        out,
+        "   x: [{:.2} .. {:.2}]{}",
+        x[0],
+        x[x.len() - 1],
+        if log_x { " (log)" } else { "" }
+    );
+    for (si, (name, _)) in series.iter().enumerate() {
+        let _ = writeln!(out, "   {} {}", marks[si % marks.len()], name);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_renders_aligned() {
+        let t = table(&["a", "bbbb"], &[vec!["1".into(), "2".into()]]);
+        assert!(t.contains("| a | bbbb |"));
+        assert!(t.contains("| 1 | 2    |"));
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let dir = std::env::temp_dir().join("ucutlass_csv_test");
+        let p = dir.join("t.csv");
+        write_csv(&p, &["x"], &[vec!["a,b".into()]]).unwrap();
+        let s = std::fs::read_to_string(&p).unwrap();
+        assert!(s.contains("\"a,b\""));
+    }
+
+    #[test]
+    fn plot_contains_series() {
+        let x = [1.0, 2.0, 4.0];
+        let s = ascii_plot("T", &x, &[("a", &[1.0, 2.0, 3.0])], 20, 5, true);
+        assert!(s.contains('*'));
+        assert!(s.contains("T"));
+    }
+}

@@ -1,0 +1,158 @@
+//! Artifact manifest: the JSON index `python/compile/aot.py` writes next
+//! to the HLO-text artifacts.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Input spec for one artifact operand.
+#[derive(Debug, Clone)]
+pub struct InputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+/// One problem's artifact family: a reference plus candidate variants.
+#[derive(Debug, Clone)]
+pub struct ManifestProblem {
+    pub kb_id: String,
+    pub inputs: Vec<InputSpec>,
+    pub reference: String,
+    pub rtol: f64,
+    pub atol: f64,
+    /// variant name → artifact path (relative to the artifact dir).
+    pub variants: BTreeMap<String, String>,
+}
+
+impl ManifestProblem {
+    #[doc(hidden)]
+    pub fn empty_for_test() -> Self {
+        ManifestProblem {
+            kb_id: String::new(),
+            inputs: vec![],
+            reference: String::new(),
+            rtol: 1e-4,
+            atol: 1e-4,
+            variants: BTreeMap::new(),
+        }
+    }
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub version: u64,
+    pub problems: BTreeMap<String, ManifestProblem>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let doc = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let version = doc.get("version").and_then(|v| v.as_u64()).unwrap_or(1);
+        let mut problems = BTreeMap::new();
+        let probs = doc
+            .get("problems")
+            .and_then(|p| p.as_obj())
+            .ok_or_else(|| anyhow!("manifest: missing problems object"))?;
+        for (name, entry) in probs {
+            let inputs = entry
+                .get("inputs")
+                .and_then(|i| i.as_arr())
+                .ok_or_else(|| anyhow!("{name}: missing inputs"))?
+                .iter()
+                .map(|spec| {
+                    let shape = spec
+                        .get("shape")
+                        .and_then(|s| s.as_arr())
+                        .ok_or_else(|| anyhow!("{name}: input without shape"))?
+                        .iter()
+                        .map(|d| d.as_u64().unwrap_or(0) as usize)
+                        .collect();
+                    let dtype = spec
+                        .get("dtype")
+                        .and_then(|d| d.as_str())
+                        .unwrap_or("f32")
+                        .to_string();
+                    Ok(InputSpec { shape, dtype })
+                })
+                .collect::<Result<Vec<_>>>()?;
+            let mut variants = BTreeMap::new();
+            if let Some(vs) = entry.get("variants").and_then(|v| v.as_obj()) {
+                for (vname, v) in vs {
+                    let path = v
+                        .get("path")
+                        .and_then(|p| p.as_str())
+                        .ok_or_else(|| anyhow!("{name}/{vname}: missing path"))?;
+                    variants.insert(vname.clone(), path.to_string());
+                }
+            }
+            problems.insert(
+                name.clone(),
+                ManifestProblem {
+                    kb_id: entry
+                        .get("kb_id")
+                        .and_then(|k| k.as_str())
+                        .unwrap_or("")
+                        .to_string(),
+                    inputs,
+                    reference: entry
+                        .get("reference")
+                        .and_then(|r| r.as_str())
+                        .ok_or_else(|| anyhow!("{name}: missing reference"))?
+                        .to_string(),
+                    rtol: entry.get("rtol").and_then(|v| v.as_f64()).unwrap_or(1e-4),
+                    atol: entry.get("atol").and_then(|v| v.as_f64()).unwrap_or(1e-4),
+                    variants,
+                },
+            );
+        }
+        Ok(Manifest { version, problems })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "version": 2,
+      "problems": {
+        "gemm_square": {
+          "kb_id": "L1-1",
+          "inputs": [{"shape": [256, 256], "dtype": "f32"},
+                     {"shape": [256, 256], "dtype": "f32"}],
+          "reference": "gemm_square__ref.hlo.txt",
+          "rtol": 1e-4, "atol": 1e-4,
+          "variants": {
+            "t64x64x64_fp32": {"path": "gemm_square__t64x64x64_fp32.hlo.txt"}
+          }
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.version, 2);
+        let p = &m.problems["gemm_square"];
+        assert_eq!(p.kb_id, "L1-1");
+        assert_eq!(p.inputs.len(), 2);
+        assert_eq!(p.inputs[0].shape, vec![256, 256]);
+        assert_eq!(p.variants.len(), 1);
+    }
+
+    #[test]
+    fn rejects_missing_reference() {
+        let bad = r#"{"problems": {"x": {"inputs": []}}}"#;
+        assert!(Manifest::parse(bad).is_err());
+    }
+}

@@ -1,0 +1,236 @@
+//! PJRT runtime: loads the AOT HLO-text artifacts produced by
+//! `python/compile/aot.py` and numerically validates candidate kernels
+//! against their pure-jnp reference — the request-path correctness check.
+//!
+//! Wiring follows /opt/xla-example/load_hlo: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `compile` → `execute`, with HLO
+//! *text* as the interchange format (serialized protos from jax ≥ 0.5 are
+//! rejected by xla_extension 0.5.1 — see gen_hlo.py).
+
+pub mod manifest;
+
+pub use manifest::{Manifest, ManifestProblem};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::dsl::VariantKey;
+use crate::util::rng::Pcg32;
+
+/// Result of validating one candidate variant against its reference.
+#[derive(Debug, Clone)]
+pub struct ValidationReport {
+    pub problem: String,
+    pub variant: String,
+    pub max_abs_err: f64,
+    pub max_rel_err: f64,
+    pub elems: usize,
+    pub pass: bool,
+}
+
+/// The PJRT executor with a compiled-executable cache (one compile per
+/// artifact per process — Python never runs here).
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Manifest,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// Open the artifact directory (expects `manifest.json` inside).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&dir.join("manifest.json"))
+            .with_context(|| format!("loading manifest from {}", dir.display()))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Ok(Runtime { client, dir, manifest, cache: HashMap::new() })
+    }
+
+    /// Compile (or fetch from cache) the executable for an artifact path.
+    fn executable(&mut self, rel_path: &str) -> Result<&xla::PjRtLoadedExecutable> {
+        if !self.cache.contains_key(rel_path) {
+            let full = self.dir.join(rel_path);
+            let proto = xla::HloModuleProto::from_text_file(
+                full.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )
+            .map_err(|e| anyhow!("parsing {rel_path}: {e:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compiling {rel_path}: {e:?}"))?;
+            self.cache.insert(rel_path.to_string(), exe);
+        }
+        Ok(self.cache.get(rel_path).unwrap())
+    }
+
+    /// Number of compiled executables held in the cache.
+    pub fn cached(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Deterministic standard-normal inputs for a problem (seeded).
+    pub fn gen_inputs(prob: &ManifestProblem, seed: u64) -> Vec<(Vec<f32>, Vec<i64>)> {
+        let mut rng = Pcg32::new(seed, 0x17);
+        prob.inputs
+            .iter()
+            .map(|spec| {
+                let n: usize = spec.shape.iter().product::<usize>();
+                let data: Vec<f32> = (0..n).map(|_| rng.normal() as f32).collect();
+                let shape: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+                (data, shape)
+            })
+            .collect()
+    }
+
+    /// Execute one artifact on the given inputs; returns the flattened f32
+    /// output (all artifacts return a 1-tuple — lowered with
+    /// return_tuple=True, unwrapped with to_tuple1).
+    pub fn execute(&mut self, rel_path: &str, inputs: &[(Vec<f32>, Vec<i64>)]) -> Result<Vec<f32>> {
+        let literals: Vec<xla::Literal> = inputs
+            .iter()
+            .map(|(data, shape)| {
+                let lit = xla::Literal::vec1(data);
+                lit.reshape(shape).map_err(|e| anyhow!("reshape {shape:?}: {e:?}"))
+            })
+            .collect::<Result<_>>()?;
+        let exe = self.executable(rel_path)?;
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("executing {rel_path}: {e:?}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+    }
+
+    /// Validate a candidate variant against its problem's reference on
+    /// identical seeded inputs.
+    pub fn validate_variant(
+        &mut self,
+        problem: &str,
+        variant: &str,
+        seed: u64,
+    ) -> Result<ValidationReport> {
+        let prob = self
+            .manifest
+            .problems
+            .get(problem)
+            .ok_or_else(|| anyhow!("unknown problem {problem}"))?
+            .clone();
+        let vpath = prob
+            .variants
+            .get(variant)
+            .ok_or_else(|| anyhow!("unknown variant {problem}/{variant}"))?
+            .clone();
+        let inputs = Self::gen_inputs(&prob, seed);
+        let expected = self.execute(&prob.reference, &inputs)?;
+        let got = self.execute(&vpath, &inputs)?;
+        if expected.len() != got.len() {
+            return Err(anyhow!(
+                "output shape mismatch: ref {} vs candidate {}",
+                expected.len(),
+                got.len()
+            ));
+        }
+        let mut max_abs = 0f64;
+        let mut max_rel = 0f64;
+        let mut pass = true;
+        for (e, g) in expected.iter().zip(&got) {
+            let abs = (*e as f64 - *g as f64).abs();
+            let rel = abs / (e.abs() as f64).max(1e-30);
+            max_abs = max_abs.max(abs);
+            max_rel = max_rel.max(rel);
+            if abs > prob.atol + prob.rtol * (e.abs() as f64) {
+                pass = false;
+            }
+        }
+        Ok(ValidationReport {
+            problem: problem.to_string(),
+            variant: variant.to_string(),
+            max_abs_err: max_abs,
+            max_rel_err: max_rel,
+            elems: expected.len(),
+            pass,
+        })
+    }
+
+    /// Map a compiled DSL configuration onto the nearest AOT variant of an
+    /// artifact problem (the runtime side of Figure 1's backend routing).
+    pub fn select_variant(prob: &ManifestProblem, key: &VariantKey) -> Option<String> {
+        let want_bf16 = matches!(key.dtype, crate::dsl::DType::Bf16 | crate::dsl::DType::Fp16);
+        let mut best: Option<(f64, String)> = None;
+        for name in prob.variants.keys() {
+            let score = variant_distance(name, key, want_bf16);
+            if best.as_ref().map(|(s, _)| score < *s).unwrap_or(true) {
+                best = Some((score, name.clone()));
+            }
+        }
+        best.map(|(_, n)| n)
+    }
+}
+
+/// Distance between a variant name (t64x64x32_fp32 / rows16 / bq32 / …) and
+/// a requested config.
+fn variant_distance(name: &str, key: &VariantKey, want_bf16: bool) -> f64 {
+    let mut score = 0.0;
+    if let Some(rest) = name.strip_prefix('t') {
+        // tile variant: t{m}x{n}x{k}[_dtype]
+        let core = rest.split('_').next().unwrap_or("");
+        let dims: Vec<u64> = core.split('x').filter_map(|d| d.parse().ok()).collect();
+        if dims.len() == 3 {
+            let lg = |a: u64, b: u64| ((a.max(1) as f64).ln() - (b.max(1) as f64).ln()).abs();
+            score += lg(dims[0], key.tile.m) + lg(dims[1], key.tile.n) + lg(dims[2], key.tile.k);
+        }
+        let is_bf16 = name.ends_with("bf16");
+        if is_bf16 != want_bf16 {
+            score += 10.0;
+        }
+    } else if let Some(r) = name.strip_prefix("rows").and_then(|s| s.parse::<u64>().ok()) {
+        score += ((r as f64).ln() - (key.tile.m.min(64) as f64).ln()).abs();
+    } else if let Some(q) = name.strip_prefix("bq").and_then(|s| s.parse::<u64>().ok()) {
+        score += ((q as f64).ln() - (key.tile.m.min(64) as f64).ln()).abs();
+    }
+    score
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::{DType, VariantKey};
+
+    fn key(tile: (u64, u64, u64), dtype: DType) -> VariantKey {
+        VariantKey {
+            family: "gemm".into(),
+            tile: crate::dsl::ir::Tile { m: tile.0, n: tile.1, k: tile.2 },
+            dtype,
+            acc_dtype: DType::Fp32,
+            epilogue: vec![],
+            pipeline_stages: 1,
+        }
+    }
+
+    #[test]
+    fn variant_distance_prefers_matching_tile_and_dtype() {
+        let k = key((64, 64, 64), DType::Fp32);
+        assert!(variant_distance("t64x64x64_fp32", &k, false)
+            < variant_distance("t32x32x32_fp32", &k, false));
+        assert!(variant_distance("t64x64x64_fp32", &k, false)
+            < variant_distance("t64x64x64_bf16", &k, false));
+    }
+
+    #[test]
+    fn select_variant_picks_nearest() {
+        let mut prob = ManifestProblem::empty_for_test();
+        for v in ["t32x32x32_fp32", "t64x64x32_fp32", "t64x64x64_fp32", "t64x64x64_bf16"] {
+            prob.variants.insert(v.into(), format!("{v}.hlo.txt"));
+        }
+        let got = Runtime::select_variant(&prob, &key((64, 64, 64), DType::Fp16)).unwrap();
+        assert_eq!(got, "t64x64x64_bf16");
+        let got = Runtime::select_variant(&prob, &key((128, 128, 32), DType::Fp32)).unwrap();
+        assert_eq!(got, "t64x64x32_fp32");
+    }
+}

@@ -1,0 +1,359 @@
+//! SOL-guided budget scheduling (paper §4.3, §5.7, §6.2).
+//!
+//! Offline replay over completed run logs: simulate what would have
+//! happened had problems been stopped earlier under a policy, then compare
+//! token cost and achieved (integrity-filtered) speedup against the fixed
+//! 40-attempt allocation.
+//!
+//! Eligibility (breadth-first round-robin): a problem keeps receiving
+//! attempts while it is still behind PyTorch, or while neither criterion
+//! has fired:
+//! * **SOL-headroom stop** — `t_best ≤ (1+ε)·t_SOL_fp16` and ahead of
+//!   PyTorch;
+//! * **no-progress window** — best speedup unimproved for `w` consecutive
+//!   attempts while ahead of PyTorch.
+
+use crate::agent::RunLog;
+use crate::integrity::IntegrityPipeline;
+use crate::metrics;
+
+/// A scheduling policy: ε (fraction, e.g. 0.25 = 25%) and window w.
+/// `epsilon = f64::INFINITY` disables the SOL rule; `window = 0` disables
+/// the no-progress rule.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Policy {
+    pub epsilon: f64,
+    pub window: u32,
+}
+
+impl Policy {
+    pub fn fixed() -> Policy {
+        Policy { epsilon: f64::INFINITY, window: 0 }
+    }
+
+    pub fn label(&self) -> String {
+        let e = if self.epsilon.is_finite() {
+            format!("ε={}%", (self.epsilon * 100.0).round())
+        } else {
+            "ε=off".into()
+        };
+        let w = if self.window > 0 { format!("w={}", self.window) } else { "w=off".into() };
+        format!("{e}, {w}")
+    }
+}
+
+/// Attempts a problem receives before the policy stops it (index into the
+/// recorded attempt sequence; == len when never stopped).
+pub fn stop_index(
+    t_ref_ms: f64,
+    t_sol_fp16_ms: f64,
+    attempt_times: &[Option<f64>],
+    policy: &Policy,
+) -> usize {
+    let mut best = f64::INFINITY;
+    let mut stale = 0u32;
+    for (i, t) in attempt_times.iter().enumerate() {
+        // The SOL-ceiling detector runs online as a strict runtime bounds
+        // check (§4.4): measurements >10% below the FP16 SOL bound are
+        // physically implausible and must not drive stopping decisions.
+        let t = t.filter(|&t| t >= 0.9 * t_sol_fp16_ms);
+        match t {
+            Some(t) if t < best => {
+                best = t;
+                stale = 0;
+            }
+            _ => stale += 1,
+        }
+        let ahead = best < t_ref_ms;
+        if !ahead {
+            continue; // still behind PyTorch: always eligible
+        }
+        if policy.epsilon.is_finite() && best <= (1.0 + policy.epsilon) * t_sol_fp16_ms {
+            return i + 1;
+        }
+        if policy.window > 0 && stale >= policy.window {
+            return i + 1;
+        }
+    }
+    attempt_times.len()
+}
+
+/// Result of replaying one policy over a run log.
+#[derive(Debug, Clone)]
+pub struct ReplayResult {
+    pub policy: Policy,
+    /// Attempts consumed per problem.
+    pub attempts_used: Vec<usize>,
+    pub tokens_used: u64,
+    pub tokens_fixed: u64,
+    /// Integrity-filtered geomean speedup under the policy (1.0 fallback).
+    pub geomean: f64,
+    pub median: f64,
+    /// Fixed-allocation (full budget) filtered geomean / median.
+    pub geomean_fixed: f64,
+    pub median_fixed: f64,
+}
+
+impl ReplayResult {
+    pub fn token_savings(&self) -> f64 {
+        1.0 - self.tokens_used as f64 / self.tokens_fixed.max(1) as f64
+    }
+
+    pub fn attempt_savings(&self, budget: usize) -> f64 {
+        let used: usize = self.attempts_used.iter().sum();
+        1.0 - used as f64 / (budget * self.attempts_used.len()).max(1) as f64
+    }
+
+    pub fn geomean_retention(&self) -> f64 {
+        metrics::retention(self.geomean, self.geomean_fixed)
+    }
+
+    pub fn median_retention(&self) -> f64 {
+        if self.median_fixed == 0.0 {
+            0.0
+        } else {
+            self.median / self.median_fixed
+        }
+    }
+
+    pub fn efficiency_gain(&self) -> f64 {
+        metrics::efficiency_gain(
+            self.geomean,
+            self.geomean_fixed,
+            self.tokens_used as f64,
+            self.tokens_fixed as f64,
+        )
+    }
+}
+
+/// Per-log precomputation shared by every policy in a sweep: attempt
+/// times, token prefix sums, and the integrity-filtered best-so-far
+/// speedup after each attempt count — all policy-independent, so a 72-
+/// policy sweep reviews each attempt exactly once instead of 72 times.
+pub struct ReplayCache {
+    per_problem: Vec<ProblemCache>,
+    tokens_fixed: u64,
+    speedups_fixed: Vec<f64>,
+}
+
+struct ProblemCache {
+    t_ref_ms: f64,
+    t_sol_fp16_ms: f64,
+    times: Vec<Option<f64>>,
+    /// token_prefix[i] = tokens of the first i attempts.
+    token_prefix: Vec<u64>,
+    /// filtered_best_after[i] = integrity-filtered speedup using the first
+    /// i attempts (1.0 fallback).
+    filtered_best_after: Vec<f64>,
+}
+
+impl ReplayCache {
+    pub fn build(log: &RunLog, pipeline: &IntegrityPipeline, review_seed: u64) -> Self {
+        let mut per_problem = Vec::with_capacity(log.runs.len());
+        let mut tokens_fixed = 0u64;
+        let mut speedups_fixed = Vec::with_capacity(log.runs.len());
+        for run in &log.runs {
+            let labels = pipeline.review_run(run, review_seed);
+            let n = run.attempts.len();
+            let mut token_prefix = Vec::with_capacity(n + 1);
+            let mut filtered_best_after = Vec::with_capacity(n + 1);
+            let mut tokens = 0u64;
+            let mut best: Option<f64> = None;
+            token_prefix.push(0);
+            filtered_best_after.push(1.0);
+            for (a, l) in run.attempts.iter().zip(&labels) {
+                tokens += a.tokens;
+                token_prefix.push(tokens);
+                if l.accepted() {
+                    if let Some(t) = a.outcome.time_ms() {
+                        best = Some(best.map_or(t, |b: f64| b.min(t)));
+                    }
+                }
+                filtered_best_after.push(best.map(|t| run.t_ref_ms / t).unwrap_or(1.0));
+            }
+            tokens_fixed += tokens;
+            speedups_fixed.push(*filtered_best_after.last().unwrap());
+            per_problem.push(ProblemCache {
+                t_ref_ms: run.t_ref_ms,
+                t_sol_fp16_ms: run.t_sol_fp16_ms,
+                times: run.attempts.iter().map(|a| a.outcome.time_ms()).collect(),
+                token_prefix,
+                filtered_best_after,
+            });
+        }
+        ReplayCache { per_problem, tokens_fixed, speedups_fixed }
+    }
+
+    /// Replay one policy against the cache.
+    pub fn replay(&self, policy: &Policy) -> ReplayResult {
+        let mut attempts_used = Vec::with_capacity(self.per_problem.len());
+        let mut tokens_used = 0u64;
+        let mut speedups = Vec::with_capacity(self.per_problem.len());
+        for p in &self.per_problem {
+            let stop = stop_index(p.t_ref_ms, p.t_sol_fp16_ms, &p.times, policy);
+            attempts_used.push(stop);
+            tokens_used += p.token_prefix[stop];
+            speedups.push(p.filtered_best_after[stop]);
+        }
+        ReplayResult {
+            policy: *policy,
+            attempts_used,
+            tokens_used,
+            tokens_fixed: self.tokens_fixed,
+            geomean: metrics::geomean_speedup(&speedups),
+            median: metrics::median_speedup(&speedups),
+            geomean_fixed: metrics::geomean_speedup(&self.speedups_fixed),
+            median_fixed: metrics::median_speedup(&self.speedups_fixed),
+        }
+    }
+}
+
+/// Replay a policy over a run log. Stopping decisions see the *online*
+/// (unfiltered) measurements, as the real scheduler would; reported
+/// speedups are integrity-filtered on the truncated prefix, as in §6.2.
+pub fn replay(
+    log: &RunLog,
+    policy: &Policy,
+    pipeline: &IntegrityPipeline,
+    review_seed: u64,
+) -> ReplayResult {
+    ReplayCache::build(log, pipeline, review_seed).replay(policy)
+}
+
+/// The paper's sweep grids (§6.2.2): ε ∈ {25%…300%}, w ∈ {0,4,…,20}.
+pub fn epsilon_grid() -> Vec<f64> {
+    (1..=12).map(|i| 0.25 * i as f64).collect()
+}
+
+pub fn window_grid() -> Vec<u32> {
+    vec![0, 4, 8, 12, 16, 20]
+}
+
+/// Joint sweep of all (ε, w) combinations (one shared [`ReplayCache`]).
+pub fn sweep(
+    log: &RunLog,
+    pipeline: &IntegrityPipeline,
+    review_seed: u64,
+) -> Vec<ReplayResult> {
+    let cache = ReplayCache::build(log, pipeline, review_seed);
+    let mut out = Vec::new();
+    for &e in &epsilon_grid() {
+        for &w in &window_grid() {
+            out.push(cache.replay(&Policy { epsilon: e, window: w }));
+        }
+    }
+    out
+}
+
+/// Indices of the Pareto-optimal points (maximize geomean, minimize cost).
+pub fn pareto_front(points: &[(f64, f64)]) -> Vec<usize> {
+    let mut idx: Vec<usize> = (0..points.len()).collect();
+    idx.retain(|&i| {
+        !points.iter().enumerate().any(|(j, &(cj, gj))| {
+            j != i && cj <= points[i].0 && gj >= points[i].1 && (cj, gj) != points[i]
+        })
+    });
+    idx.sort_by(|&a, &b| points[a].0.partial_cmp(&points[b].0).unwrap());
+    idx
+}
+
+/// Best policy by efficiency gain subject to a geomean-retention floor
+/// (paper §6.2.3 uses ≥ 95%).
+pub fn best_policy(results: &[ReplayResult], min_retention: f64) -> Option<&ReplayResult> {
+    results
+        .iter()
+        .filter(|r| r.geomean_retention() >= min_retention)
+        .max_by(|a, b| a.efficiency_gain().partial_cmp(&b.efficiency_gain()).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stop_index_sol_rule() {
+        // t_ref 10, fp16 SOL 1.0, ε=100% → stop once best ≤ 2.0 and ahead
+        let p = Policy { epsilon: 1.0, window: 0 };
+        let times = vec![Some(12.0), Some(5.0), Some(1.8), Some(1.5)];
+        assert_eq!(stop_index(10.0, 1.0, &times, &p), 3);
+        // never reaches the bound → full budget
+        let times2 = vec![Some(5.0), Some(4.0), Some(3.0)];
+        assert_eq!(stop_index(10.0, 1.0, &times2, &p), 3);
+    }
+
+    #[test]
+    fn stop_index_window_rule() {
+        let p = Policy { epsilon: f64::INFINITY, window: 2 };
+        // ahead after attempt 0; no improvement on 1,2 → stop after 3 attempts
+        let times = vec![Some(5.0), Some(6.0), None, Some(5.5)];
+        assert_eq!(stop_index(10.0, 1.0, &times, &p), 3);
+    }
+
+    #[test]
+    fn behind_pytorch_never_stopped() {
+        let p = Policy { epsilon: 0.25, window: 2 };
+        let times = vec![Some(20.0), None, None, None, None];
+        assert_eq!(stop_index(10.0, 1.0, &times, &p), 5);
+    }
+
+    #[test]
+    fn fixed_policy_never_stops() {
+        let p = Policy::fixed();
+        let times = vec![Some(1.0); 40];
+        assert_eq!(stop_index(10.0, 1.0, &times, &p), 40);
+    }
+
+    #[test]
+    fn pareto_front_filters_dominated() {
+        // (cost, geomean)
+        let pts = vec![(1.0, 2.0), (0.5, 1.9), (0.9, 1.5), (0.4, 1.0)];
+        let front = pareto_front(&pts);
+        assert!(front.contains(&0));
+        assert!(front.contains(&1));
+        assert!(front.contains(&3));
+        assert!(!front.contains(&2), "(0.9,1.5) is dominated by (0.5,1.9)");
+    }
+
+    #[test]
+    fn cached_replay_equals_direct_replay() {
+        // the ReplayCache fast path must be observationally identical to a
+        // from-scratch replay for every policy on a real run log
+        use crate::agent::controller::{run_problem, ControllerKind, Env, VariantSpec};
+        use crate::agent::{ModelTier, RunLog};
+        use crate::integrity::IntegrityPipeline;
+        use crate::kernelbench::suite;
+        use crate::perfmodel::PerfModel;
+        use crate::sol::{analyze, H100_SXM};
+
+        let problems = suite();
+        let sols: Vec<_> = problems.iter().map(|p| analyze(p, &H100_SXM)).collect();
+        let model = PerfModel::new(H100_SXM.clone());
+        let env = Env { model: &model, problems: &problems, sols: &sols };
+        let spec = VariantSpec::new(ControllerKind::Mi, true, ModelTier::Max);
+        let runs: Vec<_> = (0..12).map(|i| run_problem(&env, &spec, i, 5)).collect();
+        let log = RunLog {
+            variant: "t".into(),
+            tier_name: "gpt-5.2".into(),
+            price_per_mtok: 1.75,
+            runs,
+        };
+        let pipeline = IntegrityPipeline::default();
+        let cache = ReplayCache::build(&log, &pipeline, 9);
+        for &e in &[0.25, 1.0, 3.0, f64::INFINITY] {
+            for &w in &[0u32, 4, 16] {
+                let p = Policy { epsilon: e, window: w };
+                let a = cache.replay(&p);
+                let b = replay(&log, &p, &pipeline, 9);
+                assert_eq!(a.attempts_used, b.attempts_used, "{}", p.label());
+                assert_eq!(a.tokens_used, b.tokens_used);
+                assert!((a.geomean - b.geomean).abs() < 1e-12);
+            }
+        }
+    }
+
+    #[test]
+    fn policy_labels() {
+        assert_eq!(Policy { epsilon: 0.25, window: 16 }.label(), "ε=25%, w=16");
+        assert_eq!(Policy::fixed().label(), "ε=off, w=off");
+    }
+}

@@ -1,0 +1,130 @@
+//! Hardware limits, clock-aware (paper §4.1 step 2, Appendix A.2 §2).
+//!
+//! Peaks come from published specifications at max clocks; effective peaks
+//! scale linearly with the locked application clock, exactly as the
+//! Appendix A.2 report does: `494.7 TFLOP/s × 1500/1980 = 374.77 TFLOP/s`.
+
+/// GPU specification with published peaks (dense, no sparsity) at max clock.
+#[derive(Debug, Clone)]
+pub struct GpuSpec {
+    pub name: &'static str,
+    /// Number of SMs (wave-quantization granularity for the perf model).
+    pub sm_count: u64,
+    /// Max SM clock in MHz.
+    pub max_sm_clock_mhz: f64,
+    /// Locked application clock in MHz (the paper locks clocks; default 1500).
+    pub locked_sm_clock_mhz: f64,
+    /// Peak TF32 tensor-core throughput at max clock (TFLOP/s, dense).
+    pub peak_tf32_tflops: f64,
+    /// Peak FP16/BF16 tensor-core throughput at max clock (TFLOP/s, dense).
+    pub peak_fp16_tflops: f64,
+    /// Peak FP8 tensor-core throughput at max clock (TFLOP/s, dense).
+    pub peak_fp8_tflops: f64,
+    /// Peak scalar FP32 (CUDA-core) throughput at max clock (TFLOP/s).
+    pub peak_fp32_tflops: f64,
+    /// Peak FP64 throughput at max clock (TFLOP/s).
+    pub peak_fp64_tflops: f64,
+    /// Peak DRAM bandwidth (GB/s) at max memory clock.
+    pub peak_bw_gbps: f64,
+    /// Memory clock ratio (locked/max); HBM is usually not down-clocked.
+    pub mem_clock_ratio: f64,
+    /// Shared memory per SM (bytes) — feeds occupancy estimates.
+    pub smem_per_sm: u64,
+    /// L2 cache size (bytes).
+    pub l2_bytes: u64,
+}
+
+impl GpuSpec {
+    /// SM clock scaling factor.
+    pub fn clock_ratio(&self) -> f64 {
+        self.locked_sm_clock_mhz / self.max_sm_clock_mhz
+    }
+
+    pub fn effective_tf32_flops(&self) -> f64 {
+        self.peak_tf32_tflops * 1e12 * self.clock_ratio()
+    }
+
+    pub fn effective_fp16_flops(&self) -> f64 {
+        self.peak_fp16_tflops * 1e12 * self.clock_ratio()
+    }
+
+    pub fn effective_fp8_flops(&self) -> f64 {
+        self.peak_fp8_tflops * 1e12 * self.clock_ratio()
+    }
+
+    pub fn effective_fp32_flops(&self) -> f64 {
+        self.peak_fp32_tflops * 1e12 * self.clock_ratio()
+    }
+
+    pub fn effective_fp64_flops(&self) -> f64 {
+        self.peak_fp64_tflops * 1e12 * self.clock_ratio()
+    }
+
+    /// Effective DRAM bandwidth in B/s.
+    pub fn effective_bandwidth(&self) -> f64 {
+        self.peak_bw_gbps * 1e9 * self.mem_clock_ratio
+    }
+}
+
+/// NVIDIA H100 80GB SXM (Hopper, SM90a) — the paper's testbed, locked to
+/// 1500 MHz as in §5.2 / Appendix A.2.
+pub const H100_SXM: GpuSpec = GpuSpec {
+    name: "NVIDIA H100 80GB HBM3 (SXM)",
+    sm_count: 132,
+    max_sm_clock_mhz: 1980.0,
+    locked_sm_clock_mhz: 1500.0,
+    peak_tf32_tflops: 494.7,
+    peak_fp16_tflops: 989.4,
+    peak_fp8_tflops: 1978.9,
+    peak_fp32_tflops: 66.9,
+    peak_fp64_tflops: 33.5,
+    peak_bw_gbps: 3350.0,
+    mem_clock_ratio: 1.0,
+    smem_per_sm: 228 * 1024,
+    l2_bytes: 50 * 1024 * 1024,
+};
+
+/// NVIDIA A100 80GB SXM (Ampere, SM80) — used by ablations / arch-gating
+/// tests; peaks from the published datasheet.
+pub const A100_SXM: GpuSpec = GpuSpec {
+    name: "NVIDIA A100 80GB HBM2e (SXM)",
+    sm_count: 108,
+    max_sm_clock_mhz: 1410.0,
+    locked_sm_clock_mhz: 1410.0,
+    peak_tf32_tflops: 156.0,
+    peak_fp16_tflops: 312.0,
+    peak_fp8_tflops: 0.0,
+    peak_fp32_tflops: 19.5,
+    peak_fp64_tflops: 9.7,
+    peak_bw_gbps: 2039.0,
+    mem_clock_ratio: 1.0,
+    smem_per_sm: 164 * 1024,
+    l2_bytes: 40 * 1024 * 1024,
+};
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn h100_clock_scaling_matches_appendix() {
+        // Appendix A.2: 494.7 × (1500/1980) = 374.77 TFLOP/s TF32;
+        // 989.4 × ratio = 749.55 TFLOP/s FP16.
+        let tf32 = H100_SXM.effective_tf32_flops() / 1e12;
+        let fp16 = H100_SXM.effective_fp16_flops() / 1e12;
+        assert!((tf32 - 374.77).abs() < 0.05, "tf32={tf32}");
+        assert!((fp16 - 749.55).abs() < 0.1, "fp16={fp16}");
+        assert!((H100_SXM.effective_bandwidth() / 1e12 - 3.35).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fp16_is_twice_tf32() {
+        let r = H100_SXM.effective_fp16_flops() / H100_SXM.effective_tf32_flops();
+        assert!((r - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn a100_unlocked() {
+        assert!((A100_SXM.clock_ratio() - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,181 @@
+//! Speed-of-Light (SOL) analysis (paper §4.1): a roofline-style
+//! first-principles bound over the full reference computation of a problem.
+//!
+//! The four steps of the paper's analysis:
+//! 1. *Problem characterization* — FLOPs + best-case DRAM bytes
+//!    ([`crate::kernelbench::Problem`] supplies both).
+//! 2. *Hardware limits* — peak compute/bandwidth scaled by locked clocks
+//!    ([`hw::GpuSpec`]).
+//! 3. *Roofline bound* — `t_SOL = max(T_compute, T_mem)`.
+//! 4. *Bottleneck classification* — arithmetic intensity vs. the ridge
+//!    point.
+//!
+//! The FP32/TF32 estimate steers optimization; the FP16 *augmentation*
+//! (tighter, since optimized kernels may drop to FP16 math while I/O stays
+//! FP32) drives budget scheduling and integrity checking (paper §4.1, §5.8).
+
+pub mod hw;
+pub mod report;
+
+pub use hw::{GpuSpec, H100_SXM};
+pub use report::render_report;
+
+use crate::kernelbench::Problem;
+
+/// Which peak the compute bound uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrecisionAssumption {
+    /// FP32 problem formulation with TF32 tensor-core throughput (the
+    /// paper's steering default: PyTorch allows TF32 on H100).
+    Tf32,
+    /// FP16 tensor-core throughput with FP32 DRAM traffic (the paper's
+    /// scheduling/integrity bound).
+    Fp16Augmented,
+    /// Scalar FP32 (no tensor cores) — for non-matmul workloads.
+    Fp32Cuda,
+}
+
+/// Bottleneck classification from roofline analysis.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Bottleneck {
+    Compute,
+    Memory,
+}
+
+/// A complete SOL analysis for one problem (the "compact structured report"
+/// of §4.1; `report::render_report` renders the Appendix A.2 markdown).
+#[derive(Debug, Clone)]
+pub struct SolAnalysis {
+    pub problem_id: String,
+    pub total_flops: u64,
+    pub total_bytes: u64,
+    pub arithmetic_intensity: f64,
+    /// Effective (clock-scaled) peak in FLOP/s for the steering precision.
+    pub peak_flops: f64,
+    /// Effective peak DRAM bandwidth in B/s.
+    pub peak_bw: f64,
+    pub t_compute_ms: f64,
+    pub t_mem_ms: f64,
+    /// Lower-bound runtime, TF32 formulation (ms).
+    pub t_sol_ms: f64,
+    /// FP16-augmented lower bound (ms) — tighter compute peak, same bytes.
+    pub t_sol_fp16_ms: f64,
+    pub ridge_point: f64,
+    pub bottleneck: Bottleneck,
+    pub precision: PrecisionAssumption,
+}
+
+impl SolAnalysis {
+    /// SOL gap g = t_best / t_SOL (paper §4.2). Values ≈ 1 mean near-SOL.
+    pub fn gap(&self, t_best_ms: f64) -> f64 {
+        t_best_ms / self.t_sol_ms
+    }
+
+    /// FP16-based gap, used by scheduling and integrity checking.
+    pub fn gap_fp16(&self, t_best_ms: f64) -> f64 {
+        t_best_ms / self.t_sol_fp16_ms
+    }
+}
+
+/// Run the SOL analysis for a problem on the given GPU.
+pub fn analyze(problem: &Problem, gpu: &GpuSpec) -> SolAnalysis {
+    let flops = problem.flops();
+    let bytes = problem.fused_bytes();
+    let ai = flops as f64 / bytes as f64;
+
+    // Matmul-like work rides the tensor cores (TF32 for FP32 inputs);
+    // everything else is bounded by the CUDA-core FP32 pipe.
+    let precision = if problem.is_matmul_like() {
+        PrecisionAssumption::Tf32
+    } else {
+        PrecisionAssumption::Fp32Cuda
+    };
+    let peak_flops = match precision {
+        PrecisionAssumption::Tf32 => gpu.effective_tf32_flops(),
+        PrecisionAssumption::Fp16Augmented => gpu.effective_fp16_flops(),
+        PrecisionAssumption::Fp32Cuda => gpu.effective_fp32_flops(),
+    };
+    let peak_bw = gpu.effective_bandwidth();
+
+    let t_compute = flops as f64 / peak_flops;
+    let t_mem = bytes as f64 / peak_bw;
+    let t_sol = t_compute.max(t_mem);
+
+    // FP16 augmentation: 2× TC throughput for matmul-like work; memory
+    // traffic unchanged (I/O stays FP32 at the DRAM boundary). Non-matmul
+    // work gains nothing from FP16 tensor cores.
+    let fp16_peak = if problem.is_matmul_like() {
+        gpu.effective_fp16_flops()
+    } else {
+        peak_flops
+    };
+    let t_sol_fp16 = (flops as f64 / fp16_peak).max(t_mem);
+
+    let ridge = peak_flops / peak_bw;
+    SolAnalysis {
+        problem_id: problem.id.to_string(),
+        total_flops: flops,
+        total_bytes: bytes,
+        arithmetic_intensity: ai,
+        peak_flops,
+        peak_bw,
+        t_compute_ms: t_compute * 1e3,
+        t_mem_ms: t_mem * 1e3,
+        t_sol_ms: t_sol * 1e3,
+        t_sol_fp16_ms: t_sol_fp16 * 1e3,
+        ridge_point: ridge,
+        bottleneck: if ai >= ridge { Bottleneck::Compute } else { Bottleneck::Memory },
+        precision,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernelbench::{find, suite};
+
+    /// Appendix A.2 reference numbers for Problem 001 (4096³ FP32 GEMM on
+    /// H100 at 1500 MHz locked clocks): SOL ≈ 0.367 ms (TF32), 0.1834 ms
+    /// (FP16), T_mem ≈ 0.060 ms, AI ≈ 682.6, ridge ≈ 111.9.
+    #[test]
+    fn matches_appendix_a2_report() {
+        let s = suite();
+        let p = &s[find(&s, "L1-1").unwrap()];
+        let a = analyze(p, &H100_SXM);
+        assert!((a.t_compute_ms - 0.367).abs() < 0.002, "t_compute={}", a.t_compute_ms);
+        assert!((a.t_mem_ms - 0.0601).abs() < 0.001, "t_mem={}", a.t_mem_ms);
+        assert!((a.t_sol_ms - 0.367).abs() < 0.002);
+        assert!((a.t_sol_fp16_ms - 0.1834).abs() < 0.001, "fp16={}", a.t_sol_fp16_ms);
+        assert!((a.arithmetic_intensity - 682.6).abs() < 1.0);
+        assert!((a.ridge_point - 111.9).abs() < 1.0, "ridge={}", a.ridge_point);
+        assert_eq!(a.bottleneck, Bottleneck::Compute);
+    }
+
+    #[test]
+    fn softmax_is_memory_bound() {
+        let s = suite();
+        let p = &s[find(&s, "L1-23").unwrap()];
+        let a = analyze(p, &H100_SXM);
+        assert_eq!(a.bottleneck, Bottleneck::Memory);
+        assert!((a.t_sol_ms - a.t_mem_ms).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fp16_bound_never_looser() {
+        let s = suite();
+        for p in &s {
+            let a = analyze(p, &H100_SXM);
+            assert!(a.t_sol_fp16_ms <= a.t_sol_ms + 1e-12, "{}", p.id);
+            assert!(a.t_sol_fp16_ms >= a.t_mem_ms - 1e-12, "{}", p.id);
+        }
+    }
+
+    #[test]
+    fn gap_identity() {
+        let s = suite();
+        let p = &s[0];
+        let a = analyze(p, &H100_SXM);
+        assert!((a.gap(a.t_sol_ms) - 1.0).abs() < 1e-12);
+        assert!(a.gap(2.0 * a.t_sol_ms) > 1.9);
+    }
+}

@@ -1,0 +1,144 @@
+//! SOL report rendering: the Appendix A.2 markdown layout plus the
+//! structured JSON block the agent runtime consumes.
+
+use super::{Bottleneck, SolAnalysis};
+use crate::kernelbench::Problem;
+use crate::util::json::Json;
+
+/// Render the full markdown SOL report (Appendix A.2 layout) with the FP16
+/// augmentation section and structured JSON output.
+pub fn render_report(problem: &Problem, a: &SolAnalysis) -> String {
+    let mut s = String::with_capacity(4096);
+    let tf32_peak = a.peak_flops / 1e12;
+    let fp16_peak = tf32_peak * (a.t_sol_ms.max(1e-12) / a.t_sol_fp16_ms.max(1e-12)).max(1.0);
+    let bw_tbps = a.peak_bw / 1e12;
+
+    s.push_str("# Speed-of-Light (SOL) Analysis\n\n");
+    s.push_str("## 1. Problem Characterization\n\n");
+    s.push_str(&format!(
+        "Problem {} ({}): {}\n\nReference op graph:\n",
+        problem.id, problem.name, problem.rationale
+    ));
+    for op in &problem.ops {
+        s.push_str(&format!(
+            "- {}: {:.4e} FLOPs, {:.4e} best-case bytes\n",
+            op.name(),
+            op.flops() as f64,
+            op.bytes(problem.dtype) as f64
+        ));
+    }
+    s.push_str(&format!(
+        "\nTotal FLOPs = {:.4e}\nTotal bytes (fused, best case) = {:.4e}\nArithmetic intensity = {:.1} FLOPs/byte\n\n",
+        a.total_flops as f64, a.total_bytes as f64, a.arithmetic_intensity
+    ));
+
+    s.push_str("## 2. Hardware Limits (Clock-aware)\n\n");
+    s.push_str(&format!(
+        "Effective peak compute: {:.2} TFLOP/s ({:?})\nEffective peak bandwidth: {:.2} TB/s\n\n",
+        tf32_peak, a.precision, bw_tbps
+    ));
+
+    s.push_str("## 3. Theoretical Minimum Time\n\n");
+    s.push_str(&format!(
+        "T_compute = {:.4} ms\nT_mem     = {:.4} ms\nSOL = max(T_compute, T_mem) = {:.4} ms\n\n",
+        a.t_compute_ms, a.t_mem_ms, a.t_sol_ms
+    ));
+
+    s.push_str("## 4. Roofline Analysis\n\n");
+    s.push_str(&format!(
+        "Ridge point = {:.1} FLOPs/byte; kernel AI = {:.1} => {}\n\n",
+        a.ridge_point,
+        a.arithmetic_intensity,
+        match a.bottleneck {
+            Bottleneck::Compute => "Compute-bound region on the roofline plot.",
+            Bottleneck::Memory => "Memory-bound region on the roofline plot.",
+        }
+    ));
+
+    s.push_str("## 5. Summary\n\n");
+    s.push_str(&format!(
+        "=> Theoretical minimum execution time (SOL): {:.4} ms\n=> Primary bottleneck: {}\n\n",
+        a.t_sol_ms,
+        match a.bottleneck {
+            Bottleneck::Compute => "Compute throughput",
+            Bottleneck::Memory => "Memory bandwidth",
+        }
+    ));
+
+    s.push_str("# FP16 Augmentation\n\n");
+    s.push_str(&format!(
+        "Kernel may cast to FP16 on-chip (2x TC throughput); inputs/outputs remain FP32 in DRAM.\n\
+         FP16 SOL = {:.4} ms (peak {:.2} TFLOP/s; memory unchanged)\nFP16/{:?} ratio: {:.3}x\n\n",
+        a.t_sol_fp16_ms,
+        fp16_peak,
+        a.precision,
+        a.t_sol_fp16_ms / a.t_sol_ms
+    ));
+
+    s.push_str("# Structured JSON Output\n\n```json\n");
+    s.push_str(&to_json(a).to_pretty());
+    s.push_str("\n```\n");
+    s
+}
+
+/// The structured JSON block (Appendix A.2 tail).
+pub fn to_json(a: &SolAnalysis) -> Json {
+    let mut o = Json::obj();
+    o.set("problem_id", a.problem_id.clone())
+        .set("total_flops", a.total_flops)
+        .set("total_bytes", a.total_bytes)
+        .set("arithmetic_intensity", a.arithmetic_intensity)
+        .set("theoretical_runtime_ms", a.t_sol_ms)
+        .set("theoretical_runtime_ms_fp16", a.t_sol_fp16_ms)
+        .set("peak_tflops_effective", a.peak_flops / 1e12)
+        .set("peak_bw_tbps", a.peak_bw / 1e12)
+        .set("t_compute_ms", a.t_compute_ms)
+        .set("t_mem_ms", a.t_mem_ms)
+        .set("ridge_point", a.ridge_point)
+        .set(
+            "bottleneck",
+            match a.bottleneck {
+                Bottleneck::Compute => "compute",
+                Bottleneck::Memory => "memory",
+            },
+        );
+    o
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::kernelbench::{find, suite};
+    use crate::sol::{analyze, H100_SXM};
+
+    #[test]
+    fn report_has_all_sections() {
+        let s = suite();
+        let p = &s[find(&s, "L1-1").unwrap()];
+        let a = analyze(p, &H100_SXM);
+        let r = render_report(p, &a);
+        for section in [
+            "# Speed-of-Light (SOL) Analysis",
+            "## 1. Problem Characterization",
+            "## 2. Hardware Limits",
+            "## 3. Theoretical Minimum Time",
+            "## 4. Roofline Analysis",
+            "## 5. Summary",
+            "# FP16 Augmentation",
+            "# Structured JSON Output",
+        ] {
+            assert!(r.contains(section), "missing {section}");
+        }
+        assert!(r.contains("Compute-bound"));
+    }
+
+    #[test]
+    fn json_parses_back() {
+        let s = suite();
+        let a = analyze(&s[0], &H100_SXM);
+        let j = to_json(&a);
+        let parsed = Json::parse(&j.to_pretty()).unwrap();
+        assert_eq!(parsed.get("problem_id").unwrap().as_str(), Some("L1-1"));
+        assert!(parsed.get("theoretical_runtime_ms").unwrap().as_f64().unwrap() > 0.0);
+    }
+}

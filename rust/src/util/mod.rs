@@ -1,0 +1,31 @@
+//! In-house substrates for the offline environment: JSON, seeded RNG,
+//! statistics helpers, and a tiny property-testing driver.
+//!
+//! serde / rand / proptest are not in the vendored crate set, so these are
+//! implemented from scratch (DESIGN.md §2 substitution table).
+
+pub mod json;
+pub mod rng;
+pub mod stats;
+pub mod prop;
+
+/// Format a float with engineering-friendly precision (for tables).
+pub fn fmt_f(v: f64) -> String {
+    if v == 0.0 {
+        "0".to_string()
+    } else if v.abs() >= 100.0 {
+        format!("{v:.0}")
+    } else if v.abs() >= 1.0 {
+        format!("{v:.2}")
+    } else if v.abs() >= 0.01 {
+        format!("{v:.3}")
+    } else {
+        format!("{v:.2e}")
+    }
+}
+
+/// `ceil(a / b)` for positive integers.
+pub fn ceil_div(a: u64, b: u64) -> u64 {
+    debug_assert!(b > 0);
+    a.div_ceil(b)
+}

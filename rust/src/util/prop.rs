@@ -1,0 +1,53 @@
+//! Tiny property-testing driver (proptest is not in the vendored crate set).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure against `cases` random
+//! inputs drawn from a seeded RNG and panics with the failing seed so the
+//! case can be replayed deterministically:
+//!
+//! ```no_run
+//! use ucutlass_repro::util::prop;
+//! prop::check("add-commutes", 100, |r| {
+//!     let (a, b) = (r.f64(), r.f64());
+//!     assert!((a + b - (b + a)).abs() < 1e-15);
+//! });
+//! ```
+
+use super::rng::Pcg32;
+
+/// Run `f` against `cases` seeded RNGs; panic identifies the failing seed.
+pub fn check<F: Fn(&mut Pcg32)>(name: &str, cases: u64, f: F) {
+    for case in 0..cases {
+        let seed = 0x5EED_0000 + case;
+        let mut rng = Pcg32::new(seed, case | 1);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            f(&mut rng);
+        }));
+        if let Err(e) = result {
+            let msg = e
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| e.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at case {case} (seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivially() {
+        check("trivial", 10, |r| {
+            let x = r.f64();
+            assert!((0.0..1.0).contains(&x));
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'fails'")]
+    fn reports_failure() {
+        check("fails", 5, |_r| panic!("boom"));
+    }
+}

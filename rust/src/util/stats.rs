@@ -1,0 +1,127 @@
+//! Statistics helpers used across metrics and experiments: geometric mean,
+//! median/quantiles, coefficient of variation, trapezoid integration.
+
+/// Geometric mean of strictly positive values; `fallback` substitutes for
+/// non-positive entries (the paper keeps the PyTorch-seed 1.0× for problems
+/// the agent never solved — see metrics::fastp for the Fast-p convention).
+pub fn geomean_with_fallback(values: &[f64], fallback: f64) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let s: f64 = values
+        .iter()
+        .map(|&v| if v > 0.0 { v.ln() } else { fallback.max(1e-12).ln() })
+        .sum();
+    (s / values.len() as f64).exp()
+}
+
+/// Geometric mean of positive values, ignoring non-positive ones.
+pub fn geomean(values: &[f64]) -> f64 {
+    let pos: Vec<f64> = values.iter().copied().filter(|v| *v > 0.0).collect();
+    if pos.is_empty() {
+        return 0.0;
+    }
+    (pos.iter().map(|v| v.ln()).sum::<f64>() / pos.len() as f64).exp()
+}
+
+/// Arithmetic mean.
+pub fn mean(values: &[f64]) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    values.iter().sum::<f64>() / values.len() as f64
+}
+
+/// Population standard deviation.
+pub fn stddev(values: &[f64]) -> f64 {
+    if values.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(values);
+    (values.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / values.len() as f64).sqrt()
+}
+
+/// Coefficient of variation σ/µ (paper §6.4, Figure 13).
+pub fn cv(values: &[f64]) -> f64 {
+    let m = mean(values);
+    if m == 0.0 {
+        return 0.0;
+    }
+    stddev(values) / m
+}
+
+/// Quantile with linear interpolation, q in [0, 1].
+pub fn quantile(values: &[f64], q: f64) -> f64 {
+    if values.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = values.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+    let lo = pos.floor() as usize;
+    let hi = pos.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (pos - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Median.
+pub fn median(values: &[f64]) -> f64 {
+    quantile(values, 0.5)
+}
+
+/// Trapezoid integral of y(x) over sample points (x must be ascending).
+pub fn trapz(x: &[f64], y: &[f64]) -> f64 {
+    assert_eq!(x.len(), y.len());
+    let mut acc = 0.0;
+    for i in 1..x.len() {
+        acc += 0.5 * (y[i] + y[i - 1]) * (x[i] - x[i - 1]);
+    }
+    acc
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basic() {
+        assert!((geomean(&[1.0, 4.0]) - 2.0).abs() < 1e-12);
+        assert!((geomean(&[2.0, 2.0, 2.0]) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn geomean_fallback_substitutes() {
+        let g = geomean_with_fallback(&[4.0, 0.0], 1.0);
+        assert!((g - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn median_even_odd() {
+        assert_eq!(median(&[3.0, 1.0, 2.0]), 2.0);
+        assert_eq!(median(&[4.0, 1.0, 2.0, 3.0]), 2.5);
+    }
+
+    #[test]
+    fn quantile_endpoints() {
+        let v = [1.0, 2.0, 3.0];
+        assert_eq!(quantile(&v, 0.0), 1.0);
+        assert_eq!(quantile(&v, 1.0), 3.0);
+    }
+
+    #[test]
+    fn cv_scale_invariant() {
+        let a = [1.0, 2.0, 3.0];
+        let b = [10.0, 20.0, 30.0];
+        assert!((cv(&a) - cv(&b)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn trapz_linear() {
+        let x = [0.0, 1.0, 2.0];
+        let y = [0.0, 1.0, 2.0];
+        assert!((trapz(&x, &y) - 2.0).abs() < 1e-12);
+    }
+}

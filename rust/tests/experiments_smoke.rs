@@ -1,0 +1,99 @@
+//! Smoke tests over the experiment drivers: each figure function must run
+//! end-to-end on a fresh context and produce non-trivial output. Run in
+//! debug these take a couple of minutes total; they exercise every module
+//! of the system (the real "does the whole thing hang together" check).
+
+use ucutlass_repro::agent::controller::{ControllerKind, VariantSpec};
+use ucutlass_repro::agent::ModelTier;
+use ucutlass_repro::experiments::figures::ExpCtx;
+use ucutlass_repro::experiments::runner::{run_variant, Bench};
+use ucutlass_repro::experiments::{archive, figures};
+use ucutlass_repro::integrity::IntegrityPipeline;
+use ucutlass_repro::metrics;
+use ucutlass_repro::scheduler;
+
+fn ctx(name: &str) -> ExpCtx {
+    ExpCtx::new(std::env::temp_dir().join(format!("ucutlass_smoke_{name}")), 4242)
+}
+
+#[test]
+fn fig3_shape_matches_paper() {
+    let mut c = ctx("fig3");
+    let out = figures::fig3(&mut c);
+    // 12 variant rows
+    assert_eq!(out.matches("[gpt-").count(), 12, "{out}");
+}
+
+#[test]
+fn fig7_scheduler_sweep_saves_tokens() {
+    let mut c = ctx("fig7");
+    let out = figures::fig7(&mut c);
+    assert!(out.contains("ε=25%"));
+    assert!(out.contains("w=4"));
+}
+
+#[test]
+fn fig9_best_policies_gain() {
+    let mut c = ctx("fig9");
+    let out = figures::fig9(&mut c);
+    // at least some variants should show a >1x efficiency gain
+    assert!(out.contains("x"), "{out}");
+}
+
+#[test]
+fn fig12_shows_inflation() {
+    let mut c = ctx("fig12");
+    let out = figures::fig12(&mut c);
+    assert!(out.contains("inflation"));
+}
+
+#[test]
+fn fig14_archive_comparison() {
+    let mut c = ctx("fig14");
+    let out = figures::fig14(&mut c);
+    assert!(out.contains("archive"));
+    assert!(out.contains("FP16 SOL"));
+}
+
+#[test]
+fn scheduler_budget_tradeoff_holds() {
+    // paper RQ4 shape: some policy saves ≥15% tokens at ≥90% retention
+    let bench = Bench::new();
+    let spec = VariantSpec::new(ControllerKind::OrchestratedSol, true, ModelTier::Max);
+    let log = run_variant(&bench, &spec, 777, None);
+    let pipeline = IntegrityPipeline::default();
+    let sweep = scheduler::sweep(&log, &pipeline, 777);
+    let ok = sweep
+        .iter()
+        .any(|r| r.token_savings() >= 0.15 && r.geomean_retention() >= 0.90);
+    assert!(ok, "no policy achieved 15% savings at 90% retention");
+}
+
+#[test]
+fn archive_geomean_below_ours() {
+    // paper §6.5: all three µC+SOL tiers beat the evolutionary archive
+    let bench = Bench::new();
+    let env = bench.env();
+    let pipeline = IntegrityPipeline::default();
+    let params = archive::EvoParams::default();
+    let mut archive_sp = Vec::new();
+    for pidx in 0..bench.problems.len() {
+        let a = archive::generate_archive(&env, pidx, &params, 55);
+        let (s, _) = archive::review_archive(&env, pidx, &a, &pipeline, 55);
+        archive_sp.push(if s > 0.0 { s } else { 1.0 });
+    }
+    let geo_archive = metrics::geomean_speedup(&archive_sp);
+
+    let spec = VariantSpec::new(ControllerKind::OrchestratedSol, true, ModelTier::Mini);
+    let log = run_variant(&bench, &spec, 55, None);
+    let ours: Vec<f64> = log
+        .runs
+        .iter()
+        .map(|r| pipeline.filtered_speedup(r, 55).unwrap_or(1.0))
+        .collect();
+    let geo_ours = metrics::geomean_speedup(&ours);
+    assert!(
+        geo_ours > geo_archive,
+        "mini µC+SOL ({geo_ours:.2}) should beat the archive ({geo_archive:.2})"
+    );
+}

@@ -1,0 +1,246 @@
+//! Cross-module integration tests: DSL → perfmodel → agent → scheduler →
+//! integrity, plus property tests on coordinator invariants (routing,
+//! batching of attempts, scheduler state) via the in-house prop driver.
+
+use ucutlass_repro::agent::controller::{run_problem, ControllerKind, Env, VariantSpec};
+use ucutlass_repro::agent::{AttemptOutcome, ModelTier, SolutionKind};
+use ucutlass_repro::dsl;
+use ucutlass_repro::integrity::IntegrityPipeline;
+use ucutlass_repro::kernelbench::{find, suite};
+use ucutlass_repro::metrics;
+use ucutlass_repro::perfmodel::{CandidateConfig, PerfModel};
+use ucutlass_repro::scheduler::{self, Policy};
+use ucutlass_repro::sol::{analyze, SolAnalysis, H100_SXM};
+use ucutlass_repro::util::prop;
+
+struct Fixture {
+    model: PerfModel,
+    problems: Vec<ucutlass_repro::kernelbench::Problem>,
+    sols: Vec<SolAnalysis>,
+}
+
+impl Fixture {
+    fn new() -> Self {
+        let problems = suite();
+        let sols = problems.iter().map(|p| analyze(p, &H100_SXM)).collect();
+        Fixture { model: PerfModel::new(H100_SXM.clone()), problems, sols }
+    }
+
+    fn env(&self) -> Env<'_> {
+        Env { model: &self.model, problems: &self.problems, sols: &self.sols }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// DSL end-to-end
+// ---------------------------------------------------------------------------
+
+#[test]
+fn dsl_to_perfmodel_roundtrip() {
+    let fx = Fixture::new();
+    let src = "gemm().with_dtype(input=fp16, acc=fp32, output=fp32)\
+        .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor).with_arch(sm_90a)\
+        .with_threadblockshape(m=128, n=128, k=64).with_alignment(A=8, B=8, C=4)\
+        .with_stages(3) >> bias() >> relu()";
+    let compiled = dsl::compile(src).unwrap();
+    let cfg = CandidateConfig::from_variant(&compiled.variant_key, true);
+    let p = &fx.problems[find(&fx.problems, "L2-76").unwrap()];
+    let t = fx.model.candidate_ms(p, &cfg);
+    let sol = analyze(p, &H100_SXM);
+    assert!(t > sol.t_sol_fp16_ms, "model must respect the FP16 SOL floor");
+    assert!(t < fx.model.baseline_ms(p), "library-grade fused kernel beats eager PyTorch");
+}
+
+#[test]
+fn dsl_bind_rejects_bad_dims_end_to_end() {
+    let src = "gemm().with_dtype(input=fp32, acc=fp32, output=fp32)\
+        .with_layout(A=RowMajor, B=RowMajor, C=RowMajor).with_arch(sm_90a)\
+        .with_operand_swap(true)";
+    assert!(dsl::compile_bound(src, (4096, 4096, 4096)).is_ok());
+    assert!(dsl::compile_bound(src, (2048, 4096, 4096)).is_err());
+}
+
+// ---------------------------------------------------------------------------
+// Agent loop ↔ integrity ↔ scheduler
+// ---------------------------------------------------------------------------
+
+#[test]
+fn full_problem_pipeline() {
+    let fx = Fixture::new();
+    let env = fx.env();
+    let spec = VariantSpec::new(ControllerKind::OrchestratedSol, true, ModelTier::Mid);
+    let pidx = find(&fx.problems, "L1-1").unwrap();
+    let run = run_problem(&env, &spec, pidx, 7);
+    assert_eq!(run.attempts.len(), 40);
+
+    // integrity labels align 1:1 with attempts
+    let pipeline = IntegrityPipeline::default();
+    let labels = pipeline.review_run(&run, 7);
+    assert_eq!(labels.len(), run.attempts.len());
+
+    // the filtered best never beats the SOL-ceiling slack
+    if let Some(best) = pipeline.filtered_best_ms(&run, 7) {
+        assert!(best >= 0.9 * run.t_sol_fp16_ms);
+    }
+
+    // scheduler: fixed policy consumes everything; aggressive policy less
+    let times: Vec<Option<f64>> = run.attempts.iter().map(|a| a.outcome.time_ms()).collect();
+    let full = scheduler::stop_index(run.t_ref_ms, run.t_sol_fp16_ms, &times, &Policy::fixed());
+    let eager = scheduler::stop_index(
+        run.t_ref_ms,
+        run.t_sol_fp16_ms,
+        &times,
+        &Policy { epsilon: 3.0, window: 4 },
+    );
+    assert_eq!(full, 40);
+    assert!(eager <= full);
+}
+
+#[test]
+fn dsl_attempts_are_real_compiles() {
+    // every accepted DSL source in a run must re-compile through the real
+    // µCUTLASS compiler
+    let fx = Fixture::new();
+    let env = fx.env();
+    let spec = VariantSpec::new(ControllerKind::Mi, true, ModelTier::Mini);
+    let mut sources = 0;
+    for pidx in [0usize, 1, 2] {
+        let run = run_problem(&env, &spec, pidx, 99);
+        for a in &run.attempts {
+            if let Some(src) = &a.dsl_source {
+                dsl::compile(src).unwrap();
+                sources += 1;
+            }
+        }
+    }
+    assert!(sources > 10, "expected plenty of DSL attempts, got {sources}");
+}
+
+#[test]
+fn tool_time_saved_by_static_rejection() {
+    // DslRejected attempts must cost (almost) no tool time
+    let fx = Fixture::new();
+    let env = fx.env();
+    let spec = VariantSpec::new(ControllerKind::Mi, true, ModelTier::Mini);
+    let mut rejected_time = 0.0;
+    let mut rejected = 0;
+    for pidx in 0..6 {
+        let run = run_problem(&env, &spec, pidx, 3);
+        for a in &run.attempts {
+            if matches!(a.outcome, AttemptOutcome::DslRejected) {
+                rejected += 1;
+                rejected_time += a.tool_time_s;
+            }
+        }
+    }
+    if rejected > 0 {
+        assert!(rejected_time / rejected as f64 <= 2.0);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Property tests (coordinator invariants)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn prop_scheduler_stop_monotone_in_epsilon() {
+    // a larger ε can only stop earlier (or at the same attempt)
+    prop::check("stop-monotone-eps", 200, |rng| {
+        let t_ref = rng.range_f64(1.0, 100.0);
+        let t_sol = t_ref * rng.range_f64(0.01, 0.5);
+        let times: Vec<Option<f64>> = (0..20)
+            .map(|_| {
+                if rng.chance(0.7) {
+                    Some(t_sol * rng.range_f64(0.8, 20.0))
+                } else {
+                    None
+                }
+            })
+            .collect();
+        let e1 = rng.range_f64(0.1, 1.5);
+        let e2 = e1 + rng.range_f64(0.1, 2.0);
+        let s1 = scheduler::stop_index(t_ref, t_sol, &times, &Policy { epsilon: e1, window: 0 });
+        let s2 = scheduler::stop_index(t_ref, t_sol, &times, &Policy { epsilon: e2, window: 0 });
+        assert!(s2 <= s1, "eps {e2} stopped later ({s2}) than eps {e1} ({s1})");
+    });
+}
+
+#[test]
+fn prop_scheduler_stop_monotone_in_window() {
+    prop::check("stop-monotone-window", 200, |rng| {
+        let t_ref = rng.range_f64(1.0, 100.0);
+        let t_sol = t_ref * 0.1;
+        let times: Vec<Option<f64>> = (0..30)
+            .map(|_| if rng.chance(0.6) { Some(rng.range_f64(0.5, 120.0)) } else { None })
+            .collect();
+        let w1 = 2 + rng.below(6) as u32;
+        let w2 = w1 + 1 + rng.below(8) as u32;
+        let s1 = scheduler::stop_index(t_ref, t_sol, &times, &Policy { epsilon: f64::INFINITY, window: w1 });
+        let s2 = scheduler::stop_index(t_ref, t_sol, &times, &Policy { epsilon: f64::INFINITY, window: w2 });
+        assert!(s1 <= s2, "larger window must not stop earlier");
+    });
+}
+
+#[test]
+fn prop_fastp_is_complementary_cdf() {
+    prop::check("fastp-ccdf", 100, |rng| {
+        let n = 5 + rng.below(40);
+        let speedups: Vec<f64> = (0..n).map(|_| rng.range_f64(0.0, 8.0)).collect();
+        let grid = metrics::default_grid();
+        let fp = metrics::fast_p(&speedups, &grid);
+        for w in fp.pct.windows(2) {
+            assert!(w[0] + 1e-9 >= w[1], "Fast-p must be non-increasing");
+        }
+        assert!(fp.pct.iter().all(|&p| (0.0..=100.0).contains(&p)));
+    });
+}
+
+#[test]
+fn prop_perfmodel_noise_mean_preserving() {
+    prop::check("noise-mean", 20, |rng| {
+        let fx = Fixture::new();
+        let p = &fx.problems[rng.below(fx.problems.len())];
+        let cfg = CandidateConfig::library((128, 128, 32), ucutlass_repro::dsl::DType::Fp32);
+        let t0 = fx.model.candidate_ms(p, &cfg);
+        let mean: f64 =
+            (0..200).map(|_| fx.model.measure_ms(p, &cfg, rng)).sum::<f64>() / 200.0;
+        assert!((mean / t0 - 1.0).abs() < 0.02, "noise must be mean-preserving");
+    });
+}
+
+#[test]
+fn prop_runs_deterministic_across_replays() {
+    let fx = Fixture::new();
+    let env = fx.env();
+    prop::check("replay-deterministic", 12, |rng| {
+        let pidx = rng.below(fx.problems.len());
+        let seed = rng.next_u64();
+        let spec = VariantSpec::new(ControllerKind::InPromptSol, true, ModelTier::Mid);
+        let a = run_problem(&env, &spec, pidx, seed);
+        let b = run_problem(&env, &spec, pidx, seed);
+        assert_eq!(a.attempts.len(), b.attempts.len());
+        for (x, y) in a.attempts.iter().zip(&b.attempts) {
+            assert_eq!(x.outcome.time_ms(), y.outcome.time_ms());
+            assert_eq!(x.tokens, y.tokens);
+        }
+    });
+}
+
+#[test]
+fn prop_gaming_never_survives_perfect_lgd() {
+    let fx = Fixture::new();
+    let env = fx.env();
+    let pipeline =
+        IntegrityPipeline { lgd_detect_rate: 1.0, ..IntegrityPipeline::default() };
+    prop::check("lgd-perfect", 10, |rng| {
+        let pidx = rng.below(fx.problems.len());
+        let spec = VariantSpec::new(ControllerKind::Mi, true, ModelTier::Max);
+        let run = run_problem(&env, &spec, pidx, rng.next_u64());
+        let labels = pipeline.review_run(&run, 5);
+        for (a, l) in run.attempts.iter().zip(&labels) {
+            if matches!(a.kind, SolutionKind::Gaming(_)) && a.outcome.time_ms().is_some() {
+                assert!(!l.accepted(), "gamed attempt accepted: {a:?} -> {l:?}");
+            }
+        }
+    });
+}

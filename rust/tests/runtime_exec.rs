@@ -1,0 +1,112 @@
+//! PJRT runtime integration tests: require `make artifacts` to have run.
+//! Each test is skipped (not failed) when artifacts/ is absent so that
+//! `cargo test` works in a fresh checkout; CI runs `make test` which builds
+//! artifacts first.
+
+use ucutlass_repro::dsl;
+use ucutlass_repro::runtime::Runtime;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::open("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(_) => {
+            eprintln!("skipping: artifacts/ not built (run `make artifacts`)");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_covers_all_python_problems() {
+    let Some(rt) = runtime() else { return };
+    for name in [
+        "gemm_square", "gemm_tall_skinny", "batched_gemm", "gemm_bias_relu",
+        "gemm_divide_gelu", "gemm_silu_scale", "gemm_sigmoid_residual",
+        "softmax", "rmsnorm", "layernorm", "cumsum", "attention",
+        "causal_attention", "mlp_block",
+    ] {
+        let p = rt.manifest.problems.get(name).unwrap_or_else(|| panic!("missing {name}"));
+        assert!(!p.variants.is_empty(), "{name} has no variants");
+        assert!(!p.reference.is_empty());
+    }
+}
+
+#[test]
+fn gemm_variants_match_reference_numerically() {
+    let Some(mut rt) = runtime() else { return };
+    let prob = rt.manifest.problems.get("gemm_square").cloned().unwrap();
+    for variant in prob.variants.keys() {
+        let rep = rt.validate_variant("gemm_square", variant, 11).unwrap();
+        assert!(rep.pass, "gemm_square/{variant}: max|err|={}", rep.max_abs_err);
+        assert!(rep.elems == 256 * 256);
+    }
+}
+
+#[test]
+fn fused_epilogue_problems_validate() {
+    let Some(mut rt) = runtime() else { return };
+    for pname in ["gemm_bias_relu", "gemm_divide_gelu", "gemm_silu_scale"] {
+        let prob = rt.manifest.problems.get(pname).cloned().unwrap();
+        let variant = prob.variants.keys().next().unwrap().clone();
+        let rep = rt.validate_variant(pname, &variant, 23).unwrap();
+        assert!(rep.pass, "{pname}/{variant}: {}", rep.max_abs_err);
+    }
+}
+
+#[test]
+fn attention_and_norms_validate() {
+    let Some(mut rt) = runtime() else { return };
+    for pname in ["attention", "causal_attention", "rmsnorm", "layernorm", "softmax", "cumsum"] {
+        let prob = rt.manifest.problems.get(pname).cloned().unwrap();
+        for variant in prob.variants.keys() {
+            let rep = rt.validate_variant(pname, variant, 31).unwrap();
+            assert!(rep.pass, "{pname}/{variant}: {}", rep.max_abs_err);
+        }
+    }
+}
+
+#[test]
+fn mlp_pipeline_validates() {
+    let Some(mut rt) = runtime() else { return };
+    let prob = rt.manifest.problems.get("mlp_block").cloned().unwrap();
+    for variant in prob.variants.keys() {
+        let rep = rt.validate_variant("mlp_block", variant, 41).unwrap();
+        assert!(rep.pass, "mlp_block/{variant}: {}", rep.max_abs_err);
+    }
+}
+
+#[test]
+fn dsl_variant_key_selects_executable_artifact() {
+    let Some(mut rt) = runtime() else { return };
+    let src = "gemm().with_dtype(input=fp32, acc=fp32, output=fp32)\
+        .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor).with_arch(sm_90a)\
+        .with_threadblockshape(m=64, n=64, k=64).with_alignment(A=4, B=4, C=4)";
+    let compiled = dsl::compile(src).unwrap();
+    let prob = rt.manifest.problems.get("gemm_square").cloned().unwrap();
+    let variant = Runtime::select_variant(&prob, &compiled.variant_key).unwrap();
+    assert_eq!(variant, "t64x64x64_fp32");
+    let rep = rt.validate_variant("gemm_square", &variant, 51).unwrap();
+    assert!(rep.pass);
+}
+
+#[test]
+fn executable_cache_reuses_compilations() {
+    let Some(mut rt) = runtime() else { return };
+    let before = rt.cached();
+    rt.validate_variant("softmax", "rows16", 61).unwrap();
+    let mid = rt.cached();
+    rt.validate_variant("softmax", "rows16", 62).unwrap();
+    assert_eq!(rt.cached(), mid, "second validation must reuse compiled executables");
+    assert!(mid >= before + 2, "reference + candidate should be cached");
+}
+
+#[test]
+fn corrupted_inputs_fail_validation() {
+    // wrong-shape execution must error out, not silently succeed
+    let Some(mut rt) = runtime() else { return };
+    let prob = rt.manifest.problems.get("gemm_square").cloned().unwrap();
+    let mut inputs = Runtime::gen_inputs(&prob, 7);
+    inputs.pop();
+    let r = rt.execute(&prob.reference, &inputs);
+    assert!(r.is_err(), "executing with a missing operand must fail");
+}
