@@ -23,7 +23,7 @@ use ucutlass_repro::report::table;
 use ucutlass_repro::runtime::Runtime;
 use ucutlass_repro::scheduler;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     let args: Vec<String> = std::env::args().skip(1).collect();
     let tier = match args.first().map(String::as_str) {
         Some("mid") => ModelTier::Mid,
@@ -100,19 +100,8 @@ fn main() -> anyhow::Result<()> {
                 let Some(cfg) = best_cfg else { continue };
                 let Some(prob) = rt.manifest.problems.get(artifact).cloned() else { continue };
                 // map the winning config onto the nearest AOT variant
-                let key = ucutlass_repro::dsl::VariantKey {
-                    family: "gemm".into(),
-                    tile: ucutlass_repro::dsl::ir::Tile {
-                        m: cfg.tile.0,
-                        n: cfg.tile.1,
-                        k: cfg.tile.2,
-                    },
-                    dtype: cfg.compute_dtype,
-                    acc_dtype: ucutlass_repro::dsl::DType::Fp32,
-                    epilogue: vec![],
-                    pipeline_stages: 1,
-                };
-                let variant = Runtime::select_variant(&prob, &key).unwrap();
+                let variant =
+                    Runtime::select_variant_for(&prob, cfg.tile, cfg.compute_dtype).unwrap();
                 let rep = rt.validate_variant(artifact, &variant, seed)?;
                 if !rep.pass {
                     fails += 1;
@@ -137,7 +126,7 @@ fn main() -> anyhow::Result<()> {
                 rt.cached()
             );
             if fails > 0 {
-                anyhow::bail!("{fails} winning kernels failed numeric validation");
+                return Err(format!("{fails} winning kernels failed numeric validation").into());
             }
         }
     }

@@ -13,7 +13,7 @@ use ucutlass_repro::integrity::IntegrityPipeline;
 use ucutlass_repro::runtime::Runtime;
 use ucutlass_repro::{dsl, kernelbench, sol};
 
-fn main() -> anyhow::Result<()> {
+fn main() -> Result<(), Box<dyn std::error::Error>> {
     // --- 1. compile a µCUTLASS kernel specification ------------------------
     let src = "\
 gemm().with_dtype(input=fp16, acc=fp32, output=fp16)
@@ -24,7 +24,12 @@ gemm().with_dtype(input=fp16, acc=fp32, output=fp16)
     let compiled = dsl::compile(src)?;
     println!("=== µCUTLASS compile ===");
     println!("header: {} ({} bytes)", compiled.header_name, compiled.header.len());
-    println!("variant key: {:?}\n", compiled.variant_key);
+    let k = compiled.plan.primary();
+    println!(
+        "plan: {} on {} tile {}x{}x{} {} stages={} smem={}B hash={}\n",
+        k.family, k.arch, k.tile.m, k.tile.n, k.tile.k, k.dtype_input, k.stages,
+        k.smem_bytes, compiled.plan.config_hash
+    );
 
     // ... and see a static rejection with its explanatory hint:
     let bad = src.replace("sm_90a", "sm_90");
@@ -60,7 +65,7 @@ gemm().with_dtype(input=fp16, acc=fp32, output=fp16)
     match Runtime::open("artifacts") {
         Ok(mut rt) => {
             let prob = rt.manifest.problems.get("gemm_square").cloned().unwrap();
-            let variant = Runtime::select_variant(&prob, &compiled.variant_key).unwrap();
+            let variant = Runtime::select_variant(&prob, &compiled.plan).unwrap();
             let report = rt.validate_variant("gemm_square", &variant, 7)?;
             println!("\n=== PJRT numeric validation ===");
             println!(

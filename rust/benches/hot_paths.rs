@@ -50,14 +50,45 @@ fn main() {
     let model = PerfModel::new(H100_SXM.clone());
     let sols: Vec<_> = problems.iter().map(|p| analyze(p, &H100_SXM)).collect();
 
-    bench("dsl::compile (full sm90 gemm)", 2_000, 9, || {
+    bench("dsl::compile (cold: parse→lower→validate→plan→codegen)", 2_000, 9, || {
         black_box(dsl::compile(black_box(GEMM_SRC)).unwrap());
+    });
+
+    bench("dsl::validate_source (agent verdict path)", 2_000, 9, || {
+        black_box(dsl::validate_source(black_box(GEMM_SRC)).unwrap());
     });
 
     bench("dsl::compile (invalid, static reject)", 2_000, 9, || {
         let src = GEMM_SRC.replace("sm_90a", "sm_90");
         black_box(dsl::compile(black_box(&src)).unwrap_err());
     });
+
+    // plan cache: warm lookups vs cold compiles (ADR-001 acceptance —
+    // a repeated identical candidate must be at least 5x cheaper)
+    let mut cache = dsl::PlanCache::new();
+    dsl::compile_cached(GEMM_SRC, &mut cache).unwrap();
+    bench("dsl::compile_cached (warm, identical config)", 20_000, 9, || {
+        black_box(dsl::compile_cached(black_box(GEMM_SRC), &mut cache).unwrap());
+    });
+    {
+        let iters = 4_000;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            black_box(dsl::compile(black_box(GEMM_SRC)).unwrap());
+        }
+        let cold_ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+        let mut c = dsl::PlanCache::new();
+        dsl::compile_cached(GEMM_SRC, &mut c).unwrap();
+        let t1 = Instant::now();
+        for _ in 0..iters {
+            black_box(dsl::compile_cached(black_box(GEMM_SRC), &mut c).unwrap());
+        }
+        let warm_ns = t1.elapsed().as_nanos() as f64 / iters as f64;
+        println!(
+            "{:40} {:>12.0} ns cold  {:>9.0} ns warm  -> {:.1}x cheaper (target >= 5x)",
+            "plan cache speedup", cold_ns, warm_ns, cold_ns / warm_ns
+        );
+    }
 
     bench("sol::analyze (per problem)", 20_000, 9, || {
         black_box(analyze(black_box(&problems[0]), &H100_SXM));

@@ -3,6 +3,9 @@
 //! These are the unit the run log stores, the scheduler replays, and the
 //! integrity pipeline labels.
 
+use std::sync::Arc;
+
+use crate::dsl::KernelPlan;
 use crate::perfmodel::CandidateConfig;
 use crate::util::json::Json;
 
@@ -147,6 +150,11 @@ pub struct AttemptRecord {
     pub kernel_names: Vec<String>,
     /// µCUTLASS source, when the DSL path produced one (traceability).
     pub dsl_source: Option<String>,
+    /// The compiled lowering artifact for DSL attempts (shared, from the
+    /// controller's plan cache): downstream consumers — cost attribution,
+    /// integrity's dtype-aware SOL ceiling, runtime variant mapping — read
+    /// the same resolved numbers codegen emitted.
+    pub dsl_plan: Option<Arc<KernelPlan>>,
 }
 
 impl AttemptRecord {
@@ -174,7 +182,14 @@ impl AttemptRecord {
             )
             .set("inherited", self.inherited)
             .set("tokens", self.tokens)
-            .set("tool_time_s", self.tool_time_s);
+            .set("tool_time_s", self.tool_time_s)
+            .set(
+                "config_hash",
+                self.dsl_plan
+                    .as_ref()
+                    .map(|p| Json::Str(p.config_hash.clone()))
+                    .unwrap_or(Json::Null),
+            );
         o
     }
 }
@@ -203,6 +218,7 @@ mod tests {
             config: None,
             kernel_names: vec![],
             dsl_source: None,
+            dsl_plan: None,
         };
         let j = r.to_json();
         assert_eq!(j.get("kind").unwrap().as_str(), Some("gaming:constant_output"));

@@ -1,7 +1,15 @@
 //! MI and in-prompt-SOL controllers: the flat Generate–Compile–Test–Profile
 //! loop (paper §5.5). The orchestrated MANTIS controller lives in
 //! [`crate::mantis`] and shares this module's attempt engine.
+//!
+//! DSL attempts compile through a per-problem [`dsl::PlanCache`]: repeated
+//! candidate configurations (common when the search revisits a tile/dtype
+//! point) skip re-lowering and re-generation, and the accepted attempt's
+//! [`dsl::KernelPlan`] is threaded into the attempt record so the cost
+//! model, SOL gap attribution and the integrity review all read the same
+//! resolved numbers codegen emitted.
 
+use crate::dsl;
 use crate::kernelbench::Problem;
 use crate::perfmodel::{CandidateConfig, PerfModel};
 use crate::sol::SolAnalysis;
@@ -257,6 +265,8 @@ fn online_review_catches(
 
 /// Execute ONE generate–compile–test–profile attempt and update state.
 /// This is the shared engine used by MI, in-prompt, and MANTIS Implement.
+/// `plans` is the per-problem plan cache: repeated candidate
+/// configurations skip re-lowering/re-generation.
 #[allow(clippy::too_many_arguments)]
 pub fn run_attempt(
     env: &Env,
@@ -267,6 +277,7 @@ pub fn run_attempt(
     state: &mut AgentState,
     steering: Option<&SolAnalysis>,
     forced_move: Option<policy::OptMove>,
+    plans: &mut dsl::PlanCache,
     rng: &mut Pcg32,
 ) -> AttemptRecord {
     let tier = spec.tier.params();
@@ -286,6 +297,7 @@ pub fn run_attempt(
         config: None,
         kernel_names: vec![],
         dsl_source: None,
+        dsl_plan: None,
     };
 
     // -- inherited gaming: once an exploit wins, later attempts keep it ----
@@ -408,8 +420,8 @@ pub fn run_attempt(
                 state.consecutive_failures += 1;
                 return rec;
             }
-            Some(src) => {
-                rec.dsl_source = Some(src);
+            Some((src, ir)) => {
+                rec.dsl_source = Some(src.clone());
                 rec.kind = SolutionKind::DslKernel;
                 if !rng.chance(mods.success_rate(tier.dsl_integrate_rate)) {
                     // kernel is fine, integration into cuda_model.cu is not
@@ -421,19 +433,34 @@ pub fn run_attempt(
                     state.consecutive_failures += 1;
                     return rec;
                 }
-                let t = env.model.measure_ms(problem, &proposed, rng);
+                // Plan + codegen through the per-problem cache, reusing the
+                // IR the repair loop already lowered and validated: a
+                // revisited configuration costs one map lookup.
+                let compiled = dsl::compile_lowered(&src, &ir, plans);
+                // The measured config reads the plan's resolved tile/dtype/
+                // scheduler/stages — the same numbers codegen emitted.
+                // Integration-level facts the DSL cannot express (fusion
+                // coverage into cuda_model.cu, residual code quality) stay
+                // with the proposal.
+                let mut measured = CandidateConfig::from_plan(&compiled.plan, true);
+                measured.tensor_cores = proposed.tensor_cores;
+                measured.fused_epilogue = proposed.fused_epilogue;
+                measured.fusion_coverage = proposed.fusion_coverage;
+                measured.quality = proposed.quality;
+                let t = env.model.measure_ms(problem, &measured, rng);
+                rec.dsl_plan = Some(compiled.plan.clone());
                 rec.outcome = AttemptOutcome::Correct { time_ms: t };
                 rec.kernel_names = vec![format!("ucutlass_kernel::{}", problem.name)];
                 if rng.chance(tier.minor_issue_rate) {
                     rec.minor_issue = Some(*rng.choice(&MinorIssueType::ALL));
                 }
-                rec.config = Some(proposed.clone());
+                rec.config = Some(measured.clone());
                 state.consecutive_failures = 0;
                 if t < state.best_time_ms {
                     state.best_time_ms = t;
-                    state.best_cfg = Some(proposed);
+                    state.best_cfg = Some(measured);
                 } else if state.best_cfg.is_none() {
-                    state.best_cfg = Some(proposed);
+                    state.best_cfg = Some(measured);
                 }
                 return rec;
             }
@@ -496,9 +523,14 @@ pub fn run_problem(env: &Env, spec: &VariantSpec, pidx: usize, seed: u64) -> Pro
         tokens: 0,
     };
     let steering = if mods.steered { Some(&env.sols[pidx]) } else { None };
+    // Per-problem plan cache: revisited candidate configurations skip
+    // re-lowering/re-generation (ADR-001).
+    let mut plans = dsl::PlanCache::new();
     let mut attempts = Vec::with_capacity(spec.attempts as usize);
     for a in 0..spec.attempts {
-        let rec = run_attempt(env, spec, &mods, pidx, a, &mut state, steering, None, &mut rng);
+        let rec = run_attempt(
+            env, spec, &mods, pidx, a, &mut state, steering, None, &mut plans, &mut rng,
+        );
         attempts.push(rec);
     }
     ProblemRun {
@@ -561,6 +593,29 @@ mod tests {
                 crate::dsl::compile(src).unwrap();
             }
         }
+    }
+
+    #[test]
+    fn dsl_attempts_carry_plans_consistent_with_configs() {
+        let (model, problems, sols) = env_fixture();
+        let env = Env { model: &model, problems: &problems, sols: &sols };
+        let spec = VariantSpec::new(ControllerKind::Mi, true, ModelTier::Mid);
+        let run = run_problem(&env, &spec, 0, 11); // L1-1 gemm
+        let mut with_plan = 0;
+        for a in &run.attempts {
+            if let Some(plan) = &a.dsl_plan {
+                with_plan += 1;
+                // the measured config mirrors the plan's resolved facts —
+                // cost model and codegen read the same numbers
+                let cfg = a.config.as_ref().expect("correct DSL attempts carry a config");
+                let k = plan.primary();
+                assert_eq!(cfg.tile, (k.tile.m, k.tile.n, k.tile.k));
+                assert_eq!(cfg.compute_dtype, k.dtype_input);
+                assert_eq!(cfg.stages, k.stages);
+                assert_eq!(plan.config_hash.len(), 16);
+            }
+        }
+        assert!(with_plan > 0, "expected plan-carrying DSL attempts");
     }
 
     #[test]

@@ -297,16 +297,17 @@ pub fn dsl_source(
 }
 
 /// Run the generate→validate→repair loop for one DSL attempt. Returns the
-/// accepted source (and tokens burnt on repairs), or None if the model
-/// failed to produce a valid program within `max_tries` (→ DslRejected;
-/// still no tool action spent).
+/// accepted source together with its already-lowered, validated IR (so
+/// the caller never re-runs the front-end) and the try count, or None if
+/// the model failed to produce a valid program within `max_tries`
+/// (→ DslRejected; still no tool action spent).
 pub fn generate_valid_dsl(
     problem: &Problem,
     cfg: &CandidateConfig,
     tier: &TierParams,
     rng: &mut Pcg32,
     max_tries: u32,
-) -> (Option<String>, u32) {
+) -> (Option<(String, dsl::ProgramIr)>, u32) {
     let mut tries = 0;
     loop {
         tries += 1;
@@ -318,7 +319,7 @@ pub fn generate_valid_dsl(
         let src = dsl_source(problem, cfg, mistake);
         // codegen-free validation: the repair loop only needs the verdict
         match dsl::validate_source(&src) {
-            Ok(_) => return (Some(src), tries),
+            Ok(ir) => return (Some((src, ir)), tries),
             Err(_) if tries < max_tries => continue, // repair from the hint
             Err(_) => return (None, tries),
         }
@@ -370,8 +371,9 @@ mod tests {
         let mut accepted = 0;
         for _ in 0..100 {
             let (src, _tries) = generate_valid_dsl(p, &cfg, &crate::agent::tiers::MINI, &mut rng, 3);
-            if let Some(src) = src {
-                assert!(dsl::compile(&src).is_ok());
+            if let Some((src, ir)) = src {
+                let compiled = dsl::compile(&src).unwrap();
+                assert_eq!(compiled.ir, ir, "returned IR matches a fresh front-end run");
                 accepted += 1;
             }
         }

@@ -146,6 +146,7 @@ mod tests {
             config: None,
             kernel_names: vec![],
             dsl_source: None,
+            dsl_plan: None,
         }
     }
 

@@ -297,7 +297,7 @@ mod tests {
             if let Ok(c) = compile(&src) {
                 let printed = format_program(&c.ir);
                 let again = compile(&printed).unwrap_or_else(|e| panic!("{e}\n{printed}"));
-                assert_eq!(c.hash, again.hash, "canonical print must preserve the config hash");
+                assert_eq!(c.hash(), again.hash(), "canonical print must preserve the config hash");
             }
         });
     }

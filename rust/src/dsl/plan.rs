@@ -1,0 +1,626 @@
+//! `KernelPlan` — the pre-resolved lowering artifact (LIR) every consumer
+//! layer reads (ADR-001, `rust/docs/adr/001-kernel-plan-lir.md`).
+//!
+//! `dsl::compile` lowers a validated [`ProgramIr`] into a `KernelPlan`
+//! exactly once per candidate. The plan carries *effective* values — tile,
+//! cluster, dtypes, stage count, scheduler, alignment — with every default
+//! already applied, plus derived facts (per-stage SMEM, epilogue SMEM,
+//! per-tile FLOPs and DRAM traffic) and the canonical configuration hash.
+//!
+//! Downstream layers consume the plan instead of re-deriving from the IR:
+//!
+//! * [`crate::dsl::codegen`] — syntax-directed emission from plan fields;
+//! * [`crate::perfmodel`] — `CandidateConfig::from_plan`;
+//! * [`crate::runtime`] — AOT variant selection on plan tile/dtype;
+//! * [`crate::agent`] / [`crate::mantis`] — plan cache keyed by the config
+//!   hash, plan threaded through attempt records;
+//! * [`crate::integrity`] — dtype-aware SOL-ceiling bound.
+//!
+//! The configuration hash is a canonical field-by-field serialization
+//! (replacing the earlier `format!("{ir:?}")` FNV hash, which was hostage
+//! to `Debug` formatting: a field omitted from — or added to — a `Debug`
+//! impl would silently change or collide hashes). Source offsets are
+//! deliberately excluded: the hash identifies the *configuration*, not the
+//! source text.
+
+use std::fmt::Write as _;
+
+use super::ir::*;
+
+// ---------------------------------------------------------------------------
+// Derived-fact helpers (shared with validate.rs so the budget the validator
+// enforces is byte-identical to the one the plan reports)
+// ---------------------------------------------------------------------------
+
+/// SMEM bytes one pipeline stage stages for the A and B tiles.
+pub fn stage_smem_bytes(tile: Tile, input: DType) -> u64 {
+    (tile.m * tile.k + tile.k * tile.n) * input.size()
+}
+
+/// Epilogue SMEM estimate used in the stage-budget formula: TMA epilogues
+/// stage the output tile through shared memory.
+pub fn epilogue_smem_bytes(epilogue: EpilogueSchedule, tile: Tile, output: DType) -> u64 {
+    match epilogue {
+        EpilogueSchedule::NoSmem => 0,
+        // auto/tma/tma_cooperative: one output sub-tile (m × n/2) staged
+        _ => tile.m * (tile.n / 2).max(8) * output.size() / 2,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Plan types
+// ---------------------------------------------------------------------------
+
+/// One kernel stage, fully resolved: every `Option` of [`ConfigIr`] that
+/// has a defined default is collapsed to its effective value.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelStagePlan {
+    pub op: Operation,
+    /// Operation family name ("gemm", "conv2d_fprop", …).
+    pub family: String,
+    pub arch: Arch,
+    /// Effective threadblock tile.
+    pub tile: Tile,
+    /// Effective cluster shape (1×1×1 when unset / pre-SM90).
+    pub cluster: Cluster,
+    pub dtype_input: DType,
+    pub dtype_acc: DType,
+    pub dtype_output: DType,
+    /// GEMM operand layouts (A, B, C); `None` for conv-family ops.
+    pub gemm_layouts: Option<(GemmLayout, GemmLayout, GemmLayout)>,
+    /// Conv tensor layouts (input, filter, output) when specified.
+    pub conv_layouts: Option<(String, String, String)>,
+    /// Effective per-operand alignment in elements.
+    pub alignment: Alignment,
+    /// Effective pipeline stage count.
+    pub stages: u64,
+    /// True when the program stated `.with_stages(…)` explicitly (SM90
+    /// codegen emits `StageCount<N>` vs `StageCountAuto`).
+    pub explicit_stages: bool,
+    /// Effective scheduler triple (defaults applied).
+    pub scheduler: Scheduler,
+    pub swizzle: Option<Swizzle>,
+    pub iterator: Option<Iterator_>,
+    pub split_k: Option<(SplitK, u64)>,
+    pub operand_swap: bool,
+    /// Effective (alpha, beta) scaling.
+    pub scaling: (f64, f64),
+    /// Epilogue chain in application order.
+    pub epilogue: Vec<EpilogueOp>,
+    // --- derived facts (what the cost model / validator / SOL read) -------
+    /// SMEM bytes per pipeline stage (A + B tiles).
+    pub smem_per_stage_bytes: u64,
+    /// SMEM bytes the epilogue stages through shared memory.
+    pub epilogue_smem_bytes: u64,
+    /// Total SMEM demand: `stages × per_stage + epilogue`.
+    pub smem_bytes: u64,
+    /// MAC FLOPs one output tile performs (2·m·n·k).
+    pub flops_per_tile: u64,
+    /// Best-case DRAM traffic per tile: A + B tiles in, C tile out.
+    pub dram_bytes_per_tile: u64,
+}
+
+impl KernelStagePlan {
+    /// Epilogue op names in chain order (the runtime/report view).
+    pub fn epilogue_names(&self) -> Vec<String> {
+        self.epilogue.iter().map(|e| e.name().to_string()).collect()
+    }
+
+    /// True when the compute dtype rides reduced-precision tensor cores
+    /// (FP16/BF16/FP8) — the integrity SOL-ceiling picks its bound on this.
+    pub fn reduced_precision(&self) -> bool {
+        matches!(self.dtype_input, DType::Fp16 | DType::Bf16)
+            || self.dtype_input.is_fp8()
+    }
+}
+
+/// One stage of the plan: a resolved kernel or a data transform.
+#[derive(Debug, Clone, PartialEq)]
+pub enum PlanStage {
+    Kernel(KernelStagePlan),
+    Transform {
+        target: String,
+        from_layout: String,
+        to_layout: String,
+        from_dtype: Option<DType>,
+        to_dtype: Option<DType>,
+    },
+}
+
+/// The pre-resolved, canonically ordered lowering artifact for a program.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KernelPlan {
+    /// Stages in program order (a single kernel for non-pipelines).
+    pub stages: Vec<PlanStage>,
+    /// Total stage count (1 for a single kernel; kernels + transforms for
+    /// pipelines) — the runtime's pipeline-depth view.
+    pub pipeline_stages: usize,
+    /// True when the program was written as `pipeline(...)` — a
+    /// single-stage pipeline still gets the multi-stage driver entry point.
+    pub is_pipeline: bool,
+    /// Canonical configuration hash (hex, 16 chars).
+    pub config_hash: String,
+}
+
+impl KernelPlan {
+    /// Lower a **validated** program into its plan. Panics on programs that
+    /// did not pass [`crate::dsl::validate::validate`] (missing arch/dtype).
+    pub fn from_ir(ir: &ProgramIr) -> KernelPlan {
+        Self::from_ir_hashed(ir, config_hash(ir))
+    }
+
+    /// [`KernelPlan::from_ir`] with an already-computed canonical hash
+    /// (the cached compile path hashes before validation; don't hash twice).
+    pub fn from_ir_hashed(ir: &ProgramIr, config_hash: String) -> KernelPlan {
+        let stages = match ir {
+            ProgramIr::Kernel(k) => vec![PlanStage::Kernel(resolve_kernel(k))],
+            ProgramIr::Pipeline(p) => p
+                .stages
+                .iter()
+                .map(|s| match s {
+                    StageIr::Kernel(k) => PlanStage::Kernel(resolve_kernel(k)),
+                    StageIr::Transpose { target, from_layout, to_layout, from_dtype, to_dtype } => {
+                        PlanStage::Transform {
+                            target: target.clone(),
+                            from_layout: from_layout.clone(),
+                            to_layout: to_layout.clone(),
+                            from_dtype: *from_dtype,
+                            to_dtype: *to_dtype,
+                        }
+                    }
+                })
+                .collect(),
+        };
+        let pipeline_stages = stages.len();
+        KernelPlan {
+            stages,
+            pipeline_stages,
+            is_pipeline: matches!(ir, ProgramIr::Pipeline(_)),
+            config_hash,
+        }
+    }
+
+    /// All resolved kernel stages in program order.
+    pub fn kernels(&self) -> Vec<&KernelStagePlan> {
+        self.stages
+            .iter()
+            .filter_map(|s| match s {
+                PlanStage::Kernel(k) => Some(k),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// The primary (first) kernel stage. Validated programs always have
+    /// one. Allocation-free: this sits on the per-attempt hot path.
+    pub fn primary(&self) -> &KernelStagePlan {
+        self.stages
+            .iter()
+            .find_map(|s| match s {
+                PlanStage::Kernel(k) => Some(k),
+                _ => None,
+            })
+            .expect("validated programs have at least one kernel stage")
+    }
+}
+
+/// Collapse a validated kernel config to its effective values.
+fn resolve_kernel(k: &ConfigIr) -> KernelStagePlan {
+    let arch = k.arch.expect("plan lowering requires a validated program (arch)");
+    let din = k.dtype_input.expect("plan lowering requires a validated program (dtype)");
+    let dacc = k.dtype_acc.unwrap_or(DType::Fp32);
+    let dout = k.dtype_output.unwrap_or(din);
+    let tile = k.effective_tile();
+    let cluster = k.cluster.unwrap_or(Cluster { m: 1, n: 1, k: 1 });
+    let alignment = k.alignment.unwrap_or(Alignment { a: 8, b: 8, c: 8 });
+    let stages = k.effective_stages();
+    let scheduler = k.scheduler.unwrap_or_default();
+    let smem_per_stage = stage_smem_bytes(tile, din);
+    let epi_smem = epilogue_smem_bytes(scheduler.epilogue, tile, dout);
+    KernelStagePlan {
+        family: k.op.family().to_string(),
+        op: k.op.clone(),
+        arch,
+        tile,
+        cluster,
+        dtype_input: din,
+        dtype_acc: dacc,
+        dtype_output: dout,
+        gemm_layouts: match (k.layout_a, k.layout_b, k.layout_c) {
+            (Some(a), Some(b), Some(c)) => Some((a, b, c)),
+            _ => None,
+        },
+        conv_layouts: k.conv_layouts.clone(),
+        alignment,
+        stages,
+        explicit_stages: k.stages.is_some(),
+        scheduler,
+        swizzle: k.swizzle,
+        iterator: k.iterator,
+        split_k: k.split_k,
+        operand_swap: k.operand_swap,
+        scaling: k.scaling.unwrap_or((1.0, 0.0)),
+        epilogue: k.epilogue.clone(),
+        smem_per_stage_bytes: smem_per_stage,
+        epilogue_smem_bytes: epi_smem,
+        smem_bytes: stages * smem_per_stage + epi_smem,
+        flops_per_tile: 2 * tile.m * tile.n * tile.k,
+        dram_bytes_per_tile: (tile.m * tile.k + tile.k * tile.n) * din.size()
+            + tile.m * tile.n * dout.size(),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Canonical configuration hash
+// ---------------------------------------------------------------------------
+
+/// Canonical configuration hash of a (possibly not yet validated) program:
+/// FNV-1a over an explicit field-by-field serialization of every
+/// configuration axis. Two programs hash equal iff their configurations
+/// are identical; source text, formatting, and offsets never contribute.
+pub fn config_hash(ir: &ProgramIr) -> String {
+    let mut canon = String::with_capacity(512);
+    canon_program(&mut canon, ir);
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in canon.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    format!("{h:016x}")
+}
+
+fn canon_program(out: &mut String, ir: &ProgramIr) {
+    match ir {
+        ProgramIr::Kernel(k) => {
+            out.push_str("K|");
+            canon_kernel(out, k);
+        }
+        ProgramIr::Pipeline(p) => {
+            out.push_str("P|");
+            for s in &p.stages {
+                match s {
+                    StageIr::Kernel(k) => {
+                        out.push_str("k{");
+                        canon_kernel(out, k);
+                        out.push('}');
+                    }
+                    StageIr::Transpose { target, from_layout, to_layout, from_dtype, to_dtype } => {
+                        out.push_str("t{");
+                        canon_str(out, target);
+                        canon_str(out, from_layout);
+                        canon_str(out, to_layout);
+                        canon_opt(out, from_dtype.map(|d| d.to_string()));
+                        canon_opt(out, to_dtype.map(|d| d.to_string()));
+                        out.push('}');
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Length-prefixed string so arbitrary text (custom exprs, layout names)
+/// cannot forge field boundaries.
+fn canon_str(out: &mut String, s: &str) {
+    let _ = write!(out, "{}:{s};", s.len());
+}
+
+fn canon_opt(out: &mut String, v: Option<impl std::fmt::Display>) {
+    match v {
+        Some(v) => {
+            let _ = write!(out, "{v};");
+        }
+        None => out.push_str("~;"),
+    }
+}
+
+fn canon_kernel(out: &mut String, k: &ConfigIr) {
+    // NOTE: every field of ConfigIr except `offset` must be serialized
+    // here; the hash-perturbation unit test below enforces it.
+    out.push_str("op=");
+    canon_op(out, &k.op);
+    out.push_str("arch=");
+    canon_opt(out, k.arch);
+    out.push_str("din=");
+    canon_opt(out, k.dtype_input);
+    out.push_str("dacc=");
+    canon_opt(out, k.dtype_acc);
+    out.push_str("dout=");
+    canon_opt(out, k.dtype_output);
+    out.push_str("la=");
+    canon_opt(out, k.layout_a.map(layout_tag));
+    out.push_str("lb=");
+    canon_opt(out, k.layout_b.map(layout_tag));
+    out.push_str("lc=");
+    canon_opt(out, k.layout_c.map(layout_tag));
+    out.push_str("cl=");
+    match &k.conv_layouts {
+        Some((i, f, o)) => {
+            canon_str(out, i);
+            canon_str(out, f);
+            canon_str(out, o);
+        }
+        None => out.push_str("~;"),
+    }
+    out.push_str("tile=");
+    canon_opt(out, k.tile.map(|t| format!("{}x{}x{}", t.m, t.n, t.k)));
+    out.push_str("spell=");
+    canon_opt(out, k.tile_spelling.map(|s| match s {
+        TileSpelling::WithTile => "tile",
+        TileSpelling::WithThreadblockShape => "tbs",
+    }));
+    out.push_str("stages=");
+    canon_opt(out, k.stages);
+    out.push_str("align=");
+    canon_opt(out, k.alignment.map(|a| format!("{}x{}x{}", a.a, a.b, a.c)));
+    out.push_str("cluster=");
+    canon_opt(out, k.cluster.map(|c| format!("{}x{}x{}", c.m, c.n, c.k)));
+    out.push_str("swz=");
+    canon_opt(out, k.swizzle.map(|s| format!("{s:?}")));
+    out.push_str("sched=");
+    canon_opt(
+        out,
+        k.scheduler.map(|s| format!("{:?}/{:?}/{:?}", s.tile, s.kernel, s.epilogue)),
+    );
+    out.push_str("scale=");
+    canon_opt(out, k.scaling.map(|(a, b)| format!("{a:?},{b:?}")));
+    out.push_str("iter=");
+    canon_opt(out, k.iterator.map(|i| format!("{i:?}")));
+    out.push_str("splitk=");
+    canon_opt(out, k.split_k.map(|(m, s)| format!("{m:?}/{s}")));
+    let _ = write!(out, "swap={};", k.operand_swap);
+    out.push_str("epi=[");
+    for e in &k.epilogue {
+        canon_epilogue(out, e);
+    }
+    out.push(']');
+}
+
+fn layout_tag(l: GemmLayout) -> &'static str {
+    match l {
+        GemmLayout::RowMajor => "row",
+        GemmLayout::ColumnMajor => "col",
+    }
+}
+
+fn canon_op(out: &mut String, op: &Operation) {
+    let _ = write!(out, "{};", op.family());
+    match op {
+        Operation::Gemm | Operation::BatchedGemm => {}
+        Operation::GroupedGemm { expert_count } => {
+            let _ = write!(out, "e={expert_count};");
+        }
+        Operation::Conv2dFprop { kh, kw }
+        | Operation::Conv2dDgrad { kh, kw }
+        | Operation::Conv2dWgrad { kh, kw }
+        | Operation::DepthwiseConv2d { kh, kw } => {
+            let _ = write!(out, "kh={kh};kw={kw};");
+        }
+        Operation::Conv1dFprop { kw } | Operation::DepthwiseConv1d { kw } => {
+            let _ = write!(out, "kw={kw};");
+        }
+        Operation::GroupConv1d { kw, groups } => {
+            let _ = write!(out, "kw={kw};g={groups};");
+        }
+        Operation::Conv3dFprop { kd, kh, kw }
+        | Operation::Conv3dDgrad { kd, kh, kw }
+        | Operation::Conv3dWgrad { kd, kh, kw } => {
+            let _ = write!(out, "kd={kd};kh={kh};kw={kw};");
+        }
+        Operation::GroupConv2d { kh, kw, groups } => {
+            let _ = write!(out, "kh={kh};kw={kw};g={groups};");
+        }
+        Operation::GroupConv3d { kd, kh, kw, groups } => {
+            let _ = write!(out, "kd={kd};kh={kh};kw={kw};g={groups};");
+        }
+    }
+}
+
+fn canon_epilogue(out: &mut String, e: &EpilogueOp) {
+    let _ = write!(out, "{};", e.name());
+    match e {
+        EpilogueOp::LeakyRelu { alpha } | EpilogueOp::Elu { alpha } => {
+            let _ = write!(out, "a={alpha:?};");
+        }
+        EpilogueOp::Clip { lo, hi } => {
+            let _ = write!(out, "lo={lo:?};hi={hi:?};");
+        }
+        EpilogueOp::Scale { value } => {
+            let _ = write!(out, "v={value:?};");
+        }
+        EpilogueOp::AuxStore { name } | EpilogueOp::AuxLoad { name } => {
+            canon_str(out, name);
+        }
+        EpilogueOp::Custom { expr, inputs } => {
+            canon_str(out, expr);
+            for (kk, vv) in inputs {
+                canon_str(out, kk);
+                canon_str(out, vv);
+            }
+        }
+        _ => {}
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl;
+
+    const SM90: &str = "gemm().with_dtype(input=fp16, acc=fp32, output=fp16)\
+        .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor).with_arch(sm_90a)\
+        .with_threadblockshape(m=128, n=128, k=64).with_alignment(A=8, B=8, C=8)\
+        .with_stages(2).with_scheduler(kernel=tma_cooperative, epilogue=auto)\
+        >> bias() >> relu()";
+
+    #[test]
+    fn plan_resolves_effective_values() {
+        let c = dsl::compile(SM90).unwrap();
+        let k = c.plan.primary();
+        assert_eq!(k.family, "gemm");
+        assert_eq!((k.tile.m, k.tile.n, k.tile.k), (128, 128, 64));
+        assert_eq!((k.cluster.m, k.cluster.n, k.cluster.k), (1, 1, 1), "cluster default applied");
+        assert_eq!(k.dtype_input, DType::Fp16);
+        assert_eq!(k.dtype_acc, DType::Fp32);
+        assert_eq!(k.dtype_output, DType::Fp16);
+        assert_eq!(k.stages, 2);
+        assert!(k.explicit_stages);
+        assert_eq!(k.scheduler.kernel, KernelSchedule::TmaCooperative);
+        assert_eq!(k.epilogue_names(), vec!["bias", "relu"]);
+        assert_eq!(k.smem_per_stage_bytes, (128 * 64 + 64 * 128) * 2);
+        assert_eq!(k.smem_bytes, 2 * k.smem_per_stage_bytes + k.epilogue_smem_bytes);
+        assert_eq!(k.flops_per_tile, 2 * 128 * 128 * 64);
+        assert!(k.reduced_precision());
+        assert_eq!(c.plan.pipeline_stages, 1);
+        assert!(!c.plan.is_pipeline);
+        assert_eq!(c.plan.config_hash, c.hash());
+    }
+
+    #[test]
+    fn plan_defaults_when_omitted() {
+        let c = dsl::compile(
+            "gemm().with_dtype(input=fp32, acc=fp32, output=fp32)\
+             .with_layout(A=RowMajor, B=RowMajor, C=RowMajor).with_arch(sm_80)",
+        )
+        .unwrap();
+        let k = c.plan.primary();
+        assert_eq!((k.tile.m, k.tile.n, k.tile.k), (128, 128, 32), "tile default");
+        assert_eq!(k.stages, 3, "stage default");
+        assert!(!k.explicit_stages);
+        assert_eq!(k.alignment.a, 8, "alignment default");
+        assert_eq!(k.scaling, (1.0, 0.0));
+        assert!(!k.reduced_precision());
+    }
+
+    #[test]
+    fn plan_covers_pipelines() {
+        let c = dsl::compile(
+            "pipeline(transpose(input, NCL, NLC, fp32, fp16), \
+             gemm().with_dtype(input=fp16, acc=fp32, output=fp16)\
+             .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor).with_arch(sm_90a), \
+             transpose(output, NLC, NCL, fp16, fp32))",
+        )
+        .unwrap();
+        assert_eq!(c.plan.pipeline_stages, 3);
+        assert_eq!(c.plan.kernels().len(), 1);
+        assert!(matches!(
+            &c.plan.stages[0],
+            PlanStage::Transform { from_dtype: Some(DType::Fp32), .. }
+        ));
+    }
+
+    // -- canonical hash ----------------------------------------------------
+
+    fn base_ir() -> ConfigIr {
+        let mut k = ConfigIr::new(Operation::Gemm, 0);
+        k.arch = Some(Arch::Sm90a);
+        k.dtype_input = Some(DType::Fp16);
+        k.dtype_acc = Some(DType::Fp32);
+        k.dtype_output = Some(DType::Fp16);
+        k.layout_a = Some(GemmLayout::RowMajor);
+        k.layout_b = Some(GemmLayout::ColumnMajor);
+        k.layout_c = Some(GemmLayout::RowMajor);
+        k.conv_layouts = None;
+        k.tile = Some(Tile { m: 128, n: 128, k: 64 });
+        k.tile_spelling = Some(TileSpelling::WithThreadblockShape);
+        k.stages = Some(2);
+        k.alignment = Some(Alignment { a: 8, b: 8, c: 8 });
+        k.cluster = Some(Cluster { m: 2, n: 1, k: 1 });
+        k.swizzle = None;
+        k.scheduler = Some(Scheduler::default());
+        k.scaling = Some((1.0, 0.0));
+        k.iterator = None;
+        k.split_k = None;
+        k.operand_swap = false;
+        k.epilogue = vec![EpilogueOp::Bias, EpilogueOp::Relu];
+        k
+    }
+
+    fn hash_of(k: ConfigIr) -> String {
+        config_hash(&ProgramIr::Kernel(k))
+    }
+
+    /// The satellite regression test: perturbing EVERY configuration field
+    /// of ConfigIr must change the canonical hash (the old Debug-format
+    /// hash was hostage to derive/format details).
+    #[test]
+    fn hash_changes_on_every_field_perturbation() {
+        let base = hash_of(base_ir());
+        let perturbations: Vec<(&str, Box<dyn Fn(&mut ConfigIr)>)> = vec![
+            ("op", Box::new(|k| k.op = Operation::BatchedGemm)),
+            ("op-param", Box::new(|k| k.op = Operation::GroupedGemm { expert_count: 4 })),
+            ("arch", Box::new(|k| k.arch = Some(Arch::Sm80))),
+            ("dtype_input", Box::new(|k| k.dtype_input = Some(DType::Bf16))),
+            ("dtype_acc", Box::new(|k| k.dtype_acc = Some(DType::Fp16))),
+            ("dtype_output", Box::new(|k| k.dtype_output = Some(DType::Fp32))),
+            ("layout_a", Box::new(|k| k.layout_a = Some(GemmLayout::ColumnMajor))),
+            ("layout_b", Box::new(|k| k.layout_b = Some(GemmLayout::RowMajor))),
+            ("layout_c", Box::new(|k| k.layout_c = Some(GemmLayout::ColumnMajor))),
+            ("conv_layouts", Box::new(|k| {
+                k.conv_layouts =
+                    Some(("TensorNHWC".into(), "TensorNHWC".into(), "TensorNHWC".into()))
+            })),
+            ("tile", Box::new(|k| k.tile = Some(Tile { m: 128, n: 128, k: 32 }))),
+            ("tile_spelling", Box::new(|k| k.tile_spelling = Some(TileSpelling::WithTile))),
+            ("stages", Box::new(|k| k.stages = Some(3))),
+            ("stages-none", Box::new(|k| k.stages = None)),
+            ("alignment", Box::new(|k| k.alignment = Some(Alignment { a: 4, b: 8, c: 8 }))),
+            ("cluster", Box::new(|k| k.cluster = Some(Cluster { m: 1, n: 1, k: 1 }))),
+            ("swizzle", Box::new(|k| k.swizzle = Some(Swizzle::StreamK))),
+            ("scheduler", Box::new(|k| {
+                k.scheduler = Some(Scheduler {
+                    tile: TileScheduler::StreamK,
+                    kernel: KernelSchedule::Tma,
+                    epilogue: EpilogueSchedule::Auto,
+                })
+            })),
+            ("scaling", Box::new(|k| k.scaling = Some((0.5, 0.0)))),
+            ("iterator", Box::new(|k| k.iterator = Some(Iterator_::Optimized))),
+            ("split_k", Box::new(|k| k.split_k = Some((SplitK::Serial, 2)))),
+            ("operand_swap", Box::new(|k| k.operand_swap = true)),
+            ("epilogue-order", Box::new(|k| {
+                k.epilogue = vec![EpilogueOp::Relu, EpilogueOp::Bias]
+            })),
+            ("epilogue-param", Box::new(|k| {
+                k.epilogue = vec![EpilogueOp::Bias, EpilogueOp::LeakyRelu { alpha: 0.2 }]
+            })),
+            ("epilogue-custom", Box::new(|k| {
+                k.epilogue = vec![EpilogueOp::Custom { expr: "x * 2".into(), inputs: vec![] }]
+            })),
+        ];
+        for (name, f) in perturbations {
+            let mut k = base_ir();
+            f(&mut k);
+            assert_ne!(hash_of(k), base, "perturbing `{name}` must change the hash");
+        }
+    }
+
+    #[test]
+    fn hash_ignores_source_offsets() {
+        let mut k = base_ir();
+        k.offset = 57;
+        assert_eq!(hash_of(k), hash_of(base_ir()), "offsets are not configuration");
+    }
+
+    #[test]
+    fn hash_distinguishes_kernel_from_pipeline() {
+        let k = base_ir();
+        let single = config_hash(&ProgramIr::Kernel(k.clone()));
+        let pipe = config_hash(&ProgramIr::Pipeline(PipelineIr {
+            stages: vec![StageIr::Kernel(k)],
+        }));
+        assert_ne!(single, pipe);
+    }
+
+    #[test]
+    fn custom_expr_cannot_forge_field_boundaries() {
+        let mut a = base_ir();
+        a.epilogue = vec![EpilogueOp::Custom { expr: "x;bias".into(), inputs: vec![] }];
+        let mut b = base_ir();
+        b.epilogue = vec![
+            EpilogueOp::Custom { expr: "x".into(), inputs: vec![] },
+            EpilogueOp::Bias,
+        ];
+        assert_ne!(hash_of(a), hash_of(b));
+    }
+}

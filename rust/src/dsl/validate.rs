@@ -2,14 +2,168 @@
 //! paper's Appendix A.1 grammar, plus the operator/feature gating of
 //! Table 1. This is where µCUTLASS earns its keep: invalid configurations
 //! are rejected *statically*, before any compile/run/profile attempt.
+//!
+//! Since ADR-001 the rules are **data-driven**: every per-architecture
+//! fact (SMEM capacity, stage ceiling, tile bounds, dtype/feature gating)
+//! lives in a [`ConstraintTable`] keyed by [`Arch`], and `validate()` is a
+//! generic interpreter over the selected table — adding an architecture is
+//! a table row, not a code edit (the zpl-toolchain ADR-0002 approach).
 
 use super::error::{DslError, DslErrorKind};
 use super::ir::*;
+use super::plan;
 
 /// SMEM capacity per SM on SM90 (228 KB usable) and the reserved slack the
-/// grammar's stage formula subtracts (8 KB).
+/// grammar's stage formula subtracts (8 KB). Kept as named constants
+/// because the Hopper table rows and several hint strings cite them.
 pub const SM90_SMEM_BYTES: u64 = 228 * 1024;
 pub const SM90_SMEM_RESERVED: u64 = 8 * 1024;
+
+// ---------------------------------------------------------------------------
+// Per-architecture constraint tables (paper Table 1 + Appendix A.1)
+// ---------------------------------------------------------------------------
+
+/// Everything `validate()` needs to know about one target architecture.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ConstraintTable {
+    pub arch: Arch,
+    /// Usable shared memory per SM (bytes).
+    pub smem_bytes: u64,
+    /// Reserved slack subtracted from the stage budget (bytes).
+    pub smem_reserved: u64,
+    /// Whether the `stages × per_stage + epilogue ≤ budget` formula is
+    /// statically enforced (the grammar states it for SM90+ only; on
+    /// SM70–89 the 2.x builders fall back to smaller stage counts).
+    pub enforce_smem_budget: bool,
+    /// Maximum pipeline stage count accepted by `.with_stages()`.
+    pub max_stages: u64,
+    /// Largest plausible threadblock tile (m, n, k).
+    pub max_tile: (u64, u64, u64),
+    /// MMA-atom alignment each tile dimension must honour (m, n, k).
+    pub tile_align: (u64, u64, u64),
+    /// Largest per-operand alignment in elements (power of two).
+    pub max_alignment_elems: u64,
+    /// TMA vector width in bytes; 0 = no TMA alignment requirement.
+    pub tma_vector_bytes: u64,
+    /// BF16 tensor cores available (Ampere+).
+    pub supports_bf16: bool,
+    /// FP8 (e4m3/e5m2) tensor cores available (paper rule: Hopper+).
+    pub supports_fp8: bool,
+    /// Warp-specialized 3.x feature block: clusters, kernel/epilogue
+    /// schedules, `.with_threadblockshape()` spelling, operand swap.
+    /// `false` selects the 2.x block: `.with_tile()`, swizzle, iterator,
+    /// split-k.
+    pub warp_specialized: bool,
+    /// Maximum CTAs per thread-block cluster (0 = clusters unsupported).
+    pub max_cluster_ctas: u64,
+    /// Grouped GEMM coverage (Table 1a: SM80+).
+    pub supports_grouped_gemm: bool,
+    /// Grouped convolution coverage (Table 1a: SM80–89 only).
+    pub supports_grouped_conv: bool,
+    /// Conv3d wgrad coverage (Table 1a: SM70–89 only).
+    pub supports_conv3d_wgrad: bool,
+    /// `custom()` EVT epilogues (CollectiveBuilder route, SM90a only).
+    pub supports_custom_epilogue: bool,
+    /// The bare arch name is rejected in favour of its `a` suffix
+    /// (sm_90 → sm_90a).
+    pub requires_a_suffix: bool,
+    /// Maximum fused epilogue chain length (EVT limit).
+    pub max_epilogue_ops: usize,
+}
+
+/// Shared SM70–89 (CUTLASS 2.x route) defaults; rows below override.
+const BASE_2X: ConstraintTable = ConstraintTable {
+    arch: Arch::Sm70,
+    smem_bytes: 96 * 1024,
+    smem_reserved: 8 * 1024,
+    enforce_smem_budget: false,
+    max_stages: 12,
+    max_tile: (512, 512, 256),
+    tile_align: (16, 8, 8),
+    max_alignment_elems: 16,
+    tma_vector_bytes: 0,
+    supports_bf16: false,
+    supports_fp8: false,
+    warp_specialized: false,
+    max_cluster_ctas: 0,
+    supports_grouped_gemm: false,
+    supports_grouped_conv: false,
+    supports_conv3d_wgrad: true,
+    supports_custom_epilogue: false,
+    requires_a_suffix: false,
+    max_epilogue_ops: 8,
+};
+
+/// Shared SM90+ (CollectiveBuilder route) defaults; rows below override.
+const BASE_3X: ConstraintTable = ConstraintTable {
+    arch: Arch::Sm90a,
+    smem_bytes: SM90_SMEM_BYTES,
+    smem_reserved: SM90_SMEM_RESERVED,
+    enforce_smem_budget: true,
+    max_stages: 12,
+    max_tile: (512, 512, 256),
+    tile_align: (16, 8, 8),
+    max_alignment_elems: 16,
+    tma_vector_bytes: 16,
+    supports_bf16: true,
+    supports_fp8: true,
+    warp_specialized: true,
+    max_cluster_ctas: 16,
+    supports_grouped_gemm: true,
+    supports_grouped_conv: false,
+    supports_conv3d_wgrad: false,
+    supports_custom_epilogue: false,
+    requires_a_suffix: false,
+    max_epilogue_ops: 8,
+};
+
+const SM70: ConstraintTable = ConstraintTable { arch: Arch::Sm70, ..BASE_2X };
+const SM80: ConstraintTable = ConstraintTable {
+    arch: Arch::Sm80,
+    smem_bytes: 164 * 1024,
+    supports_bf16: true,
+    supports_grouped_gemm: true,
+    supports_grouped_conv: true,
+    ..BASE_2X
+};
+const SM86: ConstraintTable = ConstraintTable {
+    arch: Arch::Sm86,
+    smem_bytes: 100 * 1024,
+    supports_bf16: true,
+    supports_grouped_gemm: true,
+    supports_grouped_conv: true,
+    ..BASE_2X
+};
+const SM89: ConstraintTable = ConstraintTable {
+    arch: Arch::Sm89,
+    smem_bytes: 100 * 1024,
+    supports_bf16: true,
+    supports_grouped_gemm: true,
+    supports_grouped_conv: true,
+    ..BASE_2X
+};
+const SM90: ConstraintTable =
+    ConstraintTable { arch: Arch::Sm90, requires_a_suffix: true, ..BASE_3X };
+const SM90A: ConstraintTable =
+    ConstraintTable { arch: Arch::Sm90a, supports_custom_epilogue: true, ..BASE_3X };
+const SM100: ConstraintTable = ConstraintTable { arch: Arch::Sm100, ..BASE_3X };
+
+/// Look up the constraint table for an architecture.
+pub fn constraint_table(arch: Arch) -> &'static ConstraintTable {
+    match arch {
+        Arch::Sm70 => &SM70,
+        Arch::Sm80 => &SM80,
+        Arch::Sm86 => &SM86,
+        Arch::Sm89 => &SM89,
+        Arch::Sm90 => &SM90,
+        Arch::Sm90a => &SM90A,
+        Arch::Sm100 => &SM100,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// The generic validator
+// ---------------------------------------------------------------------------
 
 /// Validate a lowered program against all static constraints.
 pub fn validate(prog: &ProgramIr) -> Result<(), DslError> {
@@ -82,23 +236,23 @@ fn validate_kernel(k: &ConfigIr) -> Result<(), DslError> {
             "e.g. .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor)"));
     }
 
+    let t = constraint_table(arch);
     let din = k.dtype_input.unwrap();
     let dout = k.dtype_output.unwrap_or(din);
-    let sm90 = arch.is_sm90_plus();
 
     // --- operator × architecture coverage (Table 1a) -----------------------
     match &k.op {
-        Operation::GroupedGemm { .. } if arch.level() < 80 => {
+        Operation::GroupedGemm { .. } if !t.supports_grouped_gemm => {
             return Err(err(off, "grouped_gemm requires SM80+",
                 "Table 1a: Grouped GEMM is supported on SM80 and newer"));
         }
-        Operation::Conv3dWgrad { .. } if sm90 => {
+        Operation::Conv3dWgrad { .. } if !t.supports_conv3d_wgrad => {
             return Err(err(off, "conv3d_wgrad is not supported on SM90+",
                 "Table 1a: Conv3d wgrad covers SM70–89 only; target sm_80/sm_89 or use a different formulation"));
         }
         Operation::GroupConv1d { .. } | Operation::GroupConv2d { .. }
         | Operation::GroupConv3d { .. } => {
-            if arch.level() < 80 || sm90 {
+            if !t.supports_grouped_conv {
                 return Err(err(off, "grouped convolutions are supported on SM80–89 only",
                     "Table 1a: Grouped Conv requires SM80–89"));
             }
@@ -108,25 +262,25 @@ fn validate_kernel(k: &ConfigIr) -> Result<(), DslError> {
 
     // --- dtype × architecture gating ---------------------------------------
     for d in [Some(din), k.dtype_acc, Some(dout)].into_iter().flatten() {
-        if d == DType::Bf16 && arch.level() < 80 {
+        if d == DType::Bf16 && !t.supports_bf16 {
             return Err(err(off, "bf16 requires SM80+",
                 "bfloat16 tensor cores were introduced with Ampere (SM80)"));
         }
-        if d.is_fp8() && !sm90 {
+        if d.is_fp8() && !t.supports_fp8 {
             return Err(err(off, "fp8 requires SM90+",
                 "FP8 (e4m3/e5m2) tensor cores were introduced with Hopper (SM90)"));
         }
     }
 
     // --- SM90 rule 1: always sm_90a ----------------------------------------
-    if arch == Arch::Sm90 {
-        return Err(err(off, "use sm_90a, not sm_90",
+    if t.requires_a_suffix {
+        return Err(err(off, &format!("use {arch}a, not {arch}"),
             "the 'a' suffix enables wgmma/warp-specialized features; this applies to ALL schedules (tma, tma_cooperative, cp_async, …)"));
     }
 
     // --- tile spelling gating (SM90 rule 2) --------------------------------
     if let Some(spelling) = k.tile_spelling {
-        match (spelling, sm90) {
+        match (spelling, t.warp_specialized) {
             (TileSpelling::WithTile, true) => {
                 return Err(err(off, ".with_tile() is rejected on SM90+",
                     "use .with_threadblockshape(m=…, n=…, k=…) on SM90+ (SM90 constraint 2)"));
@@ -140,45 +294,47 @@ fn validate_kernel(k: &ConfigIr) -> Result<(), DslError> {
     }
 
     // --- feature gating (Table 1b) ------------------------------------------
-    if k.cluster.is_some() && !sm90 {
+    if k.cluster.is_some() && !t.warp_specialized {
         return Err(err(off, ".with_cluster() requires SM90+",
             "thread-block clusters were introduced with Hopper"));
     }
-    if k.scheduler.is_some() && !sm90 {
+    if k.scheduler.is_some() && !t.warp_specialized {
         return Err(err(off, ".with_scheduler() requires SM90+",
             "kernel/epilogue schedules (TMA, pingpong, cooperative) are SM90+ features; SM70–89 uses .with_swizzle()"));
     }
-    if k.swizzle.is_some() && sm90 {
+    if k.swizzle.is_some() && t.warp_specialized {
         return Err(err(off, ".with_swizzle() is SM70–89 only",
             "on SM90+ use .with_scheduler(tile=…) instead"));
     }
-    if k.iterator.is_some() && sm90 {
+    if k.iterator.is_some() && t.warp_specialized {
         return Err(err(off, ".with_iterator() is SM70–89 only", ""));
     }
     if k.iterator.is_some() && !k.op.is_conv_family() {
         return Err(err(off, ".with_iterator() applies to convolutions only", ""));
     }
-    if k.split_k.is_some() && sm90 {
+    if k.split_k.is_some() && t.warp_specialized {
         return Err(err(off, ".with_split_k() is SM70–89 only",
             "on SM90+ use .with_scheduler(tile=stream_k) for K-dimension parallelism"));
     }
-    if k.operand_swap && !sm90 {
+    if k.operand_swap && !t.warp_specialized {
         return Err(err(off, ".with_operand_swap() requires SM90+", ""));
     }
 
     // --- tile sanity ----------------------------------------------------------
-    if let Some(t) = k.tile {
-        if t.m == 0 || t.n == 0 || t.k == 0 {
+    if let Some(tl) = k.tile {
+        if tl.m == 0 || tl.n == 0 || tl.k == 0 {
             return Err(err(off, "tile dimensions must be positive", ""));
         }
-        if t.m % 16 != 0 || t.n % 8 != 0 || t.k % 8 != 0 {
+        let (am, an, ak) = t.tile_align;
+        if tl.m % am != 0 || tl.n % an != 0 || tl.k % ak != 0 {
             return Err(err(off,
-                &format!("tile {}x{}x{} is not MMA-atom aligned", t.m, t.n, t.k),
-                "tile m must be a multiple of 16, n and k multiples of 8 (tensor-core atom shapes)"));
+                &format!("tile {}x{}x{} is not MMA-atom aligned", tl.m, tl.n, tl.k),
+                &format!("tile m must be a multiple of {am}, n a multiple of {an}, k a multiple of {ak} (tensor-core atom shapes)")));
         }
-        if t.m > 512 || t.n > 512 || t.k > 256 {
+        let (mm, mn, mk) = t.max_tile;
+        if tl.m > mm || tl.n > mn || tl.k > mk {
             return Err(err(off,
-                &format!("tile {}x{}x{} is implausibly large", t.m, t.n, t.k),
+                &format!("tile {}x{}x{} is implausibly large", tl.m, tl.n, tl.k),
                 "the largest practical threadblock tiles are 256x256 with k ≤ 128"));
         }
     }
@@ -191,37 +347,39 @@ fn validate_kernel(k: &ConfigIr) -> Result<(), DslError> {
                 &format!("cluster {}x{}x{} is invalid", c.m, c.n, c.k),
                 "cluster m/n must be 1, 2, 4, 8 or 16 and cluster k must be 1"));
         }
-        if c.m * c.n > 16 {
-            return Err(err(off, "cluster size exceeds 16 CTAs",
+        if c.m * c.n > t.max_cluster_ctas {
+            return Err(err(off,
+                &format!("cluster size exceeds {} CTAs", t.max_cluster_ctas),
                 "Hopper clusters span at most 16 thread blocks"));
         }
     }
 
     // --- stages sanity -----------------------------------------------------------
     if let Some(s) = k.stages {
-        if s == 0 || s > 12 {
+        if s == 0 || s > t.max_stages {
             return Err(err(off, &format!("with_stages({s}) is out of range"),
-                "pipeline stages are between 1 and 12"));
+                &format!("pipeline stages are between 1 and {}", t.max_stages)));
         }
     }
 
     // --- alignment rules -----------------------------------------------------------
     if let Some(al) = k.alignment {
         for (name, v) in [("A", al.a), ("B", al.b), ("C", al.c)] {
-            if v == 0 || !v.is_power_of_two() || v > 16 {
+            if v == 0 || !v.is_power_of_two() || v > t.max_alignment_elems {
                 return Err(err(off,
                     &format!("alignment {name}={v} is invalid"),
-                    "alignments are powers of two between 1 and 16 (elements)"));
+                    &format!("alignments are powers of two between 1 and {} (elements)",
+                        t.max_alignment_elems)));
             }
         }
         // SM90 rule 3: TMA alignment — (alignment * element_size) % 16 == 0.
-        if sm90 {
+        if t.tma_vector_bytes > 0 {
             let checks = [("A", al.a, din), ("B", al.b, din), ("C", al.c, dout)];
             for (name, v, d) in checks {
-                if (v * d.size()) % 16 != 0 {
+                if (v * d.size()) % t.tma_vector_bytes != 0 {
                     return Err(err(off,
-                        &format!("TMA alignment violated for operand {name}: {v} elements × {} bytes = {} bytes, not a multiple of 16",
-                            d.size(), v * d.size()),
+                        &format!("TMA alignment violated for operand {name}: {v} elements × {} bytes = {} bytes, not a multiple of {}",
+                            d.size(), v * d.size(), t.tma_vector_bytes),
                         "SM90 TMA requires 16-byte aligned vectors: fp16/bf16 need alignment ≥ 8, fp32 needs ≥ 4 (SM90 constraint 3)"));
                 }
             }
@@ -242,12 +400,12 @@ fn validate_kernel(k: &ConfigIr) -> Result<(), DslError> {
             KernelSchedule::TmaCooperative | KernelSchedule::CpAsyncCooperative
         );
         if cooperative {
-            let t = k.effective_tile();
+            let tl = k.effective_tile();
             let cm = k.cluster.map(|c| c.m).unwrap_or(1);
-            if t.m / cm.max(1) < 128 {
+            if tl.m / cm.max(1) < 128 {
                 return Err(err(off,
                     &format!("cooperative kernel needs tile_m/cluster_m ≥ 128, got {}/{} = {}",
-                        t.m, cm, t.m / cm.max(1)),
+                        tl.m, cm, tl.m / cm.max(1)),
                     "cooperative schedules split the M tile across two warp groups; per-CTA M below 128 cannot host both (SM90 constraint 5)"));
             }
             if sch.kernel == KernelSchedule::TmaCooperative && k.stages.is_none() {
@@ -259,11 +417,12 @@ fn validate_kernel(k: &ConfigIr) -> Result<(), DslError> {
     }
 
     // --- SMEM stage budget (SM90 rule 6) -------------------------------------------
-    if sm90 {
-        if let (Some(stages), Some(t)) = (k.stages, k.tile) {
-            let per_stage = (t.m * t.k + t.k * t.n) * din.size();
-            let epi_smem = epilogue_smem_bytes(k, t, dout);
-            let budget = SM90_SMEM_BYTES - SM90_SMEM_RESERVED;
+    if t.enforce_smem_budget {
+        if let (Some(stages), Some(tl)) = (k.stages, k.tile) {
+            let per_stage = plan::stage_smem_bytes(tl, din);
+            let epi_smem =
+                plan::epilogue_smem_bytes(k.scheduler.unwrap_or_default().epilogue, tl, dout);
+            let budget = t.smem_bytes - t.smem_reserved;
             let need = stages * per_stage + epi_smem;
             if need > budget {
                 let max_stages = if per_stage == 0 { 0 } else { (budget.saturating_sub(epi_smem)) / per_stage };
@@ -289,10 +448,10 @@ fn validate_kernel(k: &ConfigIr) -> Result<(), DslError> {
     }
 
     // --- epilogue rules ----------------------------------------------------------------
-    if k.epilogue.len() > 8 {
+    if k.epilogue.len() > t.max_epilogue_ops {
         return Err(err(off,
             &format!("epilogue chain of {} ops is too long", k.epilogue.len()),
-            "EVT fusion supports at most 8 chained epilogue ops"));
+            &format!("EVT fusion supports at most {} chained epilogue ops", t.max_epilogue_ops)));
     }
     let n_bias = k.epilogue.iter().filter(|e| matches!(e, EpilogueOp::Bias)).count();
     if n_bias > 1 {
@@ -300,7 +459,7 @@ fn validate_kernel(k: &ConfigIr) -> Result<(), DslError> {
     }
     for e in &k.epilogue {
         if let EpilogueOp::Custom { expr, .. } = e {
-            if arch != Arch::Sm90a {
+            if !t.supports_custom_epilogue {
                 return Err(err(off,
                     "custom() epilogue expressions require sm_90a",
                     "custom EVT nodes are emitted through the CUTLASS 3.x CollectiveBuilder, which is SM90a-only (Table 1c)"));
@@ -318,7 +477,7 @@ fn validate_kernel(k: &ConfigIr) -> Result<(), DslError> {
     }
     // depthwise conv on SM90+ routes to the CuTe backend with restricted epilogues
     if matches!(k.op, Operation::DepthwiseConv2d { .. } | Operation::DepthwiseConv1d { .. })
-        && sm90
+        && t.warp_specialized
     {
         let ok = k.epilogue.iter().all(|e| {
             matches!(e, EpilogueOp::Relu | EpilogueOp::Bias | EpilogueOp::Scale { .. })
@@ -331,17 +490,6 @@ fn validate_kernel(k: &ConfigIr) -> Result<(), DslError> {
     }
 
     Ok(())
-}
-
-/// Epilogue SMEM estimate used in the stage-budget formula: TMA epilogues
-/// stage the output tile through shared memory.
-fn epilogue_smem_bytes(k: &ConfigIr, t: Tile, dout: DType) -> u64 {
-    let sch = k.scheduler.unwrap_or_default();
-    match sch.epilogue {
-        EpilogueSchedule::NoSmem => 0,
-        // auto/tma/tma_cooperative: one output sub-tile (m × n/2) staged
-        _ => t.m * (t.n / 2).max(8) * dout.size() / 2,
-    }
 }
 
 /// Dimension-dependent checks run when a compiled program is bound to a
@@ -615,5 +763,407 @@ mod tests {
         let bad = "depthwise_conv2d(kernel_h=3, kernel_w=3)\
             .with_dtype(input=fp16, acc=fp32, output=fp16).with_arch(sm_90a) >> gelu()";
         assert!(compile(bad).unwrap_err().to_string().contains("CuTe"), );
+    }
+
+    // -- constraint-table coverage -------------------------------------------
+
+    #[test]
+    fn tables_cover_every_arch() {
+        for arch in [Arch::Sm70, Arch::Sm80, Arch::Sm86, Arch::Sm89, Arch::Sm90,
+                     Arch::Sm90a, Arch::Sm100] {
+            let t = constraint_table(arch);
+            assert_eq!(t.arch, arch);
+            assert!(t.smem_bytes > t.smem_reserved);
+            assert_eq!(t.warp_specialized, arch.is_sm90_plus());
+        }
+    }
+
+    #[test]
+    fn table_rows_encode_table1_facts() {
+        assert!(!constraint_table(Arch::Sm70).supports_bf16);
+        assert!(constraint_table(Arch::Sm80).supports_bf16);
+        assert!(!constraint_table(Arch::Sm89).supports_fp8);
+        assert!(constraint_table(Arch::Sm90a).supports_fp8);
+        assert!(constraint_table(Arch::Sm80).supports_grouped_conv);
+        assert!(!constraint_table(Arch::Sm90a).supports_grouped_conv);
+        assert!(constraint_table(Arch::Sm89).supports_conv3d_wgrad);
+        assert!(!constraint_table(Arch::Sm100).supports_conv3d_wgrad);
+        assert!(constraint_table(Arch::Sm90).requires_a_suffix);
+        assert!(!constraint_table(Arch::Sm90a).requires_a_suffix);
+        assert!(constraint_table(Arch::Sm90a).supports_custom_epilogue);
+        assert!(!constraint_table(Arch::Sm100).supports_custom_epilogue);
+        assert_eq!(constraint_table(Arch::Sm90a).smem_bytes, SM90_SMEM_BYTES);
+    }
+
+    #[test]
+    fn sm70_accepts_2x_features() {
+        let src = "gemm().with_dtype(input=fp16, acc=fp32, output=fp16)\
+            .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor).with_arch(sm_70)\
+            .with_tile(m=128, n=128, k=32).with_swizzle(pattern=Identity4)\
+            .with_split_k(mode=serial, slices=2).with_stages(2)";
+        assert!(compile(src).is_ok());
+    }
+
+    #[test]
+    fn sm80_accepts_grouped_conv() {
+        let src = "group_conv2d(kernel_h=3, kernel_w=3, groups=4)\
+            .with_dtype(input=fp16, acc=fp32, output=fp16).with_arch(sm_80)\
+            .with_layout(input=TensorNHWC, filter=TensorNHWC, output=TensorNHWC)\
+            .with_tile(m=64, n=64, k=32)";
+        assert!(compile(src).is_ok());
+    }
+
+    #[test]
+    fn sm80_accepts_grouped_gemm_sm70_rejects() {
+        let sm80 = "grouped_gemm(expert_count=8)\
+            .with_dtype(input=bf16, acc=fp32, output=bf16)\
+            .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor).with_arch(sm_80)";
+        assert!(compile(sm80).is_ok());
+        let sm70 = "grouped_gemm(expert_count=8)\
+            .with_dtype(input=fp16, acc=fp32, output=fp16)\
+            .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor).with_arch(sm_70)";
+        assert!(compile_err(sm70).contains("SM80+"));
+    }
+
+    #[test]
+    fn smem_budget_not_enforced_on_2x_route() {
+        // This tile+stages combination would blow the SM89 100KB capacity,
+        // but the grammar states the stage formula for SM90+ only; the 2.x
+        // builders degrade gracefully instead of rejecting statically.
+        let src = "gemm().with_dtype(input=fp32, acc=fp32, output=fp32)\
+            .with_layout(A=RowMajor, B=RowMajor, C=RowMajor).with_arch(sm_89)\
+            .with_tile(m=256, n=128, k=64).with_stages(3)";
+        assert!(compile(src).is_ok());
+        assert!(!constraint_table(Arch::Sm89).enforce_smem_budget);
+    }
+
+    // -- differential property test: table-driven vs legacy SM90 rules ------
+
+    /// The pre-ADR-001 hardcoded SM90 rule set, kept verbatim as the
+    /// differential oracle: accept/reject must agree on random SM90
+    /// configurations.
+    mod legacy {
+        use super::super::super::ir::*;
+        use super::super::{SM90_SMEM_BYTES, SM90_SMEM_RESERVED};
+
+        fn epilogue_smem_bytes(k: &ConfigIr, t: Tile, dout: DType) -> u64 {
+            let sch = k.scheduler.unwrap_or_default();
+            match sch.epilogue {
+                EpilogueSchedule::NoSmem => 0,
+                _ => t.m * (t.n / 2).max(8) * dout.size() / 2,
+            }
+        }
+
+        pub fn validate_kernel(k: &ConfigIr) -> Result<(), String> {
+            let e = |m: &str| Err(m.to_string());
+            let arch = match k.arch {
+                Some(a) => a,
+                None => return e("missing arch"),
+            };
+            if k.dtype_input.is_none() {
+                return e("missing dtype");
+            }
+            if k.op.is_gemm_family() && k.layout_a.is_none() {
+                return e("missing layout");
+            }
+            let din = k.dtype_input.unwrap();
+            let dout = k.dtype_output.unwrap_or(din);
+            let sm90 = arch.is_sm90_plus();
+            match &k.op {
+                Operation::GroupedGemm { .. } if arch.level() < 80 => return e("grouped gemm"),
+                Operation::Conv3dWgrad { .. } if sm90 => return e("conv3d wgrad"),
+                Operation::GroupConv1d { .. } | Operation::GroupConv2d { .. }
+                | Operation::GroupConv3d { .. } => {
+                    if arch.level() < 80 || sm90 {
+                        return e("grouped conv");
+                    }
+                }
+                _ => {}
+            }
+            for d in [Some(din), k.dtype_acc, Some(dout)].into_iter().flatten() {
+                if d == DType::Bf16 && arch.level() < 80 {
+                    return e("bf16");
+                }
+                if d.is_fp8() && !sm90 {
+                    return e("fp8");
+                }
+            }
+            if arch == Arch::Sm90 {
+                return e("sm_90a");
+            }
+            if let Some(spelling) = k.tile_spelling {
+                match (spelling, sm90) {
+                    (TileSpelling::WithTile, true) => return e("with_tile"),
+                    (TileSpelling::WithThreadblockShape, false) => return e("tbs"),
+                    _ => {}
+                }
+            }
+            if k.cluster.is_some() && !sm90 {
+                return e("cluster");
+            }
+            if k.scheduler.is_some() && !sm90 {
+                return e("scheduler");
+            }
+            if k.swizzle.is_some() && sm90 {
+                return e("swizzle");
+            }
+            if k.iterator.is_some() && sm90 {
+                return e("iterator");
+            }
+            if k.iterator.is_some() && !k.op.is_conv_family() {
+                return e("iterator-op");
+            }
+            if k.split_k.is_some() && sm90 {
+                return e("split_k");
+            }
+            if k.operand_swap && !sm90 {
+                return e("operand_swap arch");
+            }
+            if let Some(t) = k.tile {
+                if t.m == 0 || t.n == 0 || t.k == 0 {
+                    return e("tile zero");
+                }
+                if t.m % 16 != 0 || t.n % 8 != 0 || t.k % 8 != 0 {
+                    return e("tile align");
+                }
+                if t.m > 512 || t.n > 512 || t.k > 256 {
+                    return e("tile large");
+                }
+            }
+            if let Some(c) = k.cluster {
+                let legal = [1u64, 2, 4, 8, 16];
+                if !legal.contains(&c.m) || !legal.contains(&c.n) || c.k != 1 {
+                    return e("cluster bad");
+                }
+                if c.m * c.n > 16 {
+                    return e("cluster big");
+                }
+            }
+            if let Some(s) = k.stages {
+                if s == 0 || s > 12 {
+                    return e("stages");
+                }
+            }
+            if let Some(al) = k.alignment {
+                for v in [al.a, al.b, al.c] {
+                    if v == 0 || !v.is_power_of_two() || v > 16 {
+                        return e("alignment");
+                    }
+                }
+                if sm90 {
+                    for (v, d) in [(al.a, din), (al.b, din), (al.c, dout)] {
+                        if (v * d.size()) % 16 != 0 {
+                            return e("tma");
+                        }
+                    }
+                }
+            }
+            if let Some(sch) = k.scheduler {
+                if sch.kernel == KernelSchedule::TmaCooperative
+                    && !matches!(
+                        sch.epilogue,
+                        EpilogueSchedule::TmaCooperative | EpilogueSchedule::Auto
+                    )
+                {
+                    return e("coop epilogue");
+                }
+                let cooperative = matches!(
+                    sch.kernel,
+                    KernelSchedule::TmaCooperative | KernelSchedule::CpAsyncCooperative
+                );
+                if cooperative {
+                    let t = k.effective_tile();
+                    let cm = k.cluster.map(|c| c.m).unwrap_or(1);
+                    if t.m / cm.max(1) < 128 {
+                        return e("coop m");
+                    }
+                    if sch.kernel == KernelSchedule::TmaCooperative && k.stages.is_none() {
+                        return e("coop stages");
+                    }
+                }
+            }
+            if sm90 {
+                if let (Some(stages), Some(t)) = (k.stages, k.tile) {
+                    let per_stage = (t.m * t.k + t.k * t.n) * din.size();
+                    let epi_smem = epilogue_smem_bytes(k, t, dout);
+                    let budget = SM90_SMEM_BYTES - SM90_SMEM_RESERVED;
+                    if stages * per_stage + epi_smem > budget {
+                        return e("smem");
+                    }
+                }
+            }
+            if k.operand_swap {
+                if !matches!(k.op, Operation::Gemm) {
+                    return e("swap op");
+                }
+                if !matches!(din, DType::Fp32 | DType::Tf32) {
+                    return e("swap dtype");
+                }
+            }
+            if k.epilogue.len() > 8 {
+                return e("epi long");
+            }
+            if k.epilogue.iter().filter(|x| matches!(x, EpilogueOp::Bias)).count() > 1 {
+                return e("double bias");
+            }
+            for x in &k.epilogue {
+                if let EpilogueOp::Custom { expr, .. } = x {
+                    if arch != Arch::Sm90a {
+                        return e("custom arch");
+                    }
+                    if expr.trim().is_empty() {
+                        return e("custom empty");
+                    }
+                }
+                if let EpilogueOp::Clip { lo, hi } = x {
+                    if lo > hi {
+                        return e("clip");
+                    }
+                }
+            }
+            if matches!(
+                k.op,
+                Operation::DepthwiseConv2d { .. } | Operation::DepthwiseConv1d { .. }
+            ) && sm90
+            {
+                let ok = k.epilogue.iter().all(|x| {
+                    matches!(x, EpilogueOp::Relu | EpilogueOp::Bias | EpilogueOp::Scale { .. })
+                });
+                if !ok {
+                    return e("depthwise epi");
+                }
+            }
+            Ok(())
+        }
+    }
+
+    use crate::util::prop;
+    use crate::util::rng::Pcg32;
+
+    /// Random (frequently-invalid) configuration generator over every
+    /// architecture row, biased toward SM90a (the densest rule set).
+    fn random_config(rng: &mut Pcg32) -> ConfigIr {
+        let op = match rng.below(5) {
+            0 => Operation::Gemm,
+            1 => Operation::BatchedGemm,
+            2 => Operation::GroupedGemm { expert_count: 4 },
+            3 => Operation::DepthwiseConv2d { kh: 3, kw: 3 },
+            _ => Operation::Conv2dFprop { kh: 3, kw: 3 },
+        };
+        let mut k = ConfigIr::new(op, 0);
+        let arch = if rng.chance(0.5) {
+            Arch::Sm90a
+        } else {
+            *rng.choice(&[Arch::Sm70, Arch::Sm80, Arch::Sm86, Arch::Sm89, Arch::Sm90,
+                          Arch::Sm100])
+        };
+        k.arch = Some(arch);
+        let dts = [DType::Fp16, DType::Bf16, DType::Fp32, DType::Tf32, DType::Fp8E4m3];
+        k.dtype_input = Some(*rng.choice(&dts));
+        k.dtype_acc = Some(DType::Fp32);
+        k.dtype_output =
+            Some(if rng.chance(0.5) { k.dtype_input.unwrap() } else { DType::Fp32 });
+        if k.op.is_gemm_family() {
+            k.layout_a = Some(GemmLayout::RowMajor);
+            k.layout_b = Some(*rng.choice(&[GemmLayout::RowMajor, GemmLayout::ColumnMajor]));
+            k.layout_c = Some(GemmLayout::RowMajor);
+        }
+        if rng.chance(0.85) {
+            let ms = [64u64, 100, 128, 256, 512, 768];
+            let ns = [8u64, 60, 64, 128, 256, 640];
+            let ks = [8u64, 32, 64, 128, 256, 320];
+            k.tile = Some(Tile { m: *rng.choice(&ms), n: *rng.choice(&ns), k: *rng.choice(&ks) });
+            // usually the spelling matching the arch, sometimes the wrong one
+            let arch_spelling = if arch.is_sm90_plus() {
+                TileSpelling::WithThreadblockShape
+            } else {
+                TileSpelling::WithTile
+            };
+            let wrong_spelling = if arch.is_sm90_plus() {
+                TileSpelling::WithTile
+            } else {
+                TileSpelling::WithThreadblockShape
+            };
+            k.tile_spelling = Some(if rng.chance(0.85) { arch_spelling } else { wrong_spelling });
+        }
+        if rng.chance(0.7) {
+            k.stages = Some(rng.below(14) as u64);
+        }
+        if rng.chance(0.6) {
+            let opts = [1u64, 2, 3, 4, 8, 16, 32];
+            k.alignment = Some(Alignment {
+                a: *rng.choice(&opts),
+                b: *rng.choice(&opts),
+                c: *rng.choice(&opts),
+            });
+        }
+        if rng.chance(0.4) {
+            let cs = [1u64, 2, 3, 4, 8, 16];
+            k.cluster = Some(Cluster {
+                m: *rng.choice(&cs),
+                n: *rng.choice(&cs),
+                k: if rng.chance(0.8) { 1 } else { 2 },
+            });
+        }
+        if rng.chance(0.15) {
+            k.swizzle = Some(Swizzle::Identity4);
+        }
+        if rng.chance(0.5) {
+            k.scheduler = Some(Scheduler {
+                tile: *rng.choice(&[
+                    TileScheduler::Default,
+                    TileScheduler::Persistent,
+                    TileScheduler::StreamK,
+                ]),
+                kernel: *rng.choice(&[
+                    KernelSchedule::Auto,
+                    KernelSchedule::Tma,
+                    KernelSchedule::TmaCooperative,
+                    KernelSchedule::CpAsyncCooperative,
+                    KernelSchedule::TmaPingpong,
+                ]),
+                epilogue: *rng.choice(&[
+                    EpilogueSchedule::Auto,
+                    EpilogueSchedule::Tma,
+                    EpilogueSchedule::TmaCooperative,
+                    EpilogueSchedule::NoSmem,
+                ]),
+            });
+        }
+        if rng.chance(0.1) {
+            k.iterator = Some(Iterator_::Optimized);
+        }
+        if rng.chance(0.1) {
+            k.split_k = Some((SplitK::Serial, 2));
+        }
+        k.operand_swap = rng.chance(0.15);
+        let n_epi = rng.below(11);
+        for _ in 0..n_epi {
+            k.epilogue.push(match rng.below(6) {
+                0 => EpilogueOp::Relu,
+                1 => EpilogueOp::Bias,
+                2 => EpilogueOp::Gelu,
+                3 => EpilogueOp::Scale { value: 0.5 },
+                4 => EpilogueOp::Clip {
+                    lo: rng.range_f64(-1.0, 1.0),
+                    hi: rng.range_f64(-1.0, 1.0),
+                },
+                _ => EpilogueOp::Custom { expr: "x * 2".into(), inputs: vec![] },
+            });
+        }
+        k
+    }
+
+    #[test]
+    fn prop_table_driven_matches_legacy() {
+        prop::check("table-vs-legacy", 600, |rng| {
+            let k = random_config(rng);
+            let new = super::validate(&ProgramIr::Kernel(k.clone())).is_ok();
+            let old = legacy::validate_kernel(&k).is_ok();
+            assert_eq!(
+                new, old,
+                "table-driven verdict {new} != legacy verdict {old} for {k:#?}"
+            );
+        });
     }
 }

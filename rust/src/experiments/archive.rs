@@ -155,6 +155,7 @@ pub fn review_archive(
 ) -> (f64, usize) {
     let problem = &env.problems[pidx];
     let t_ref = env.model.baseline_ms(problem);
+    let t_sol = env.sols[pidx].t_sol_ms;
     let t_sol_fp16 = env.sols[pidx].t_sol_fp16_ms;
     let mut sorted: Vec<&ArchivedKernel> = kernels.iter().collect();
     sorted.sort_by(|a, b| a.time_ms.partial_cmp(&b.time_ms).unwrap());
@@ -174,8 +175,9 @@ pub fn review_archive(
             config: None,
             kernel_names: k.kernel_names.clone(),
             dsl_source: None,
+            dsl_plan: None,
         };
-        let label = pipeline.label(&rec, t_sol_fp16, &mut rng);
+        let label = pipeline.label(&rec, t_sol, t_sol_fp16, &mut rng);
         if label.accepted() {
             return (t_ref / k.time_ms, reviewed);
         }

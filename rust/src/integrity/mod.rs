@@ -84,7 +84,20 @@ impl Default for IntegrityPipeline {
 impl IntegrityPipeline {
     /// Label one attempt. Only correct attempts are reviewed (others never
     /// enter the speedup computation anyway).
-    pub fn label(&self, a: &AttemptRecord, t_sol_fp16_ms: f64, rng: &mut Pcg32) -> ReviewLabel {
+    ///
+    /// `t_sol_ms` is the TF32 SOL bound, `t_sol_fp16_ms` the FP16-augmented
+    /// bound. Attempts that carry a compiled [`crate::dsl::KernelPlan`]
+    /// declare their compute dtype, so the ceiling uses the *matching*
+    /// bound: a full-precision plan claiming a sub-TF32-SOL runtime is
+    /// implausible even when it sits above the FP16 bound. Attempts without
+    /// a plan (raw CUDA, gaming) keep the conservative FP16 bound.
+    pub fn label(
+        &self,
+        a: &AttemptRecord,
+        t_sol_ms: f64,
+        t_sol_fp16_ms: f64,
+        rng: &mut Pcg32,
+    ) -> ReviewLabel {
         let time = match a.outcome.time_ms() {
             Some(t) => t,
             None => return ReviewLabel::NoIssues, // not applicable
@@ -94,8 +107,13 @@ impl IntegrityPipeline {
         let pytorch_only = !a.kernel_names.is_empty()
             && a.kernel_names.iter().all(|k| is_library_kernel(k));
 
-        // SOL-ceiling detector (strict runtime bounds check)
-        if time < self.ceiling_slack * t_sol_fp16_ms {
+        // SOL-ceiling detector (strict runtime bounds check); the bound is
+        // dtype-aware when the attempt's plan states full precision
+        let sol_bound = match a.dsl_plan.as_deref() {
+            Some(plan) if !plan.primary().reduced_precision() => t_sol_ms.max(t_sol_fp16_ms),
+            _ => t_sol_fp16_ms,
+        };
+        if time < self.ceiling_slack * sol_bound {
             // physically implausible — flag regardless of LGD
             if pytorch_only {
                 return ReviewLabel::PyTorchOnly; // categories stay exclusive
@@ -132,7 +150,7 @@ impl IntegrityPipeline {
         let mut rng = Pcg32::new(seed ^ 0x1234_5678, run.problem_idx as u64 | 1);
         run.attempts
             .iter()
-            .map(|a| self.label(a, run.t_sol_fp16_ms, &mut rng))
+            .map(|a| self.label(a, run.t_sol_ms, run.t_sol_fp16_ms, &mut rng))
             .collect()
     }
 
@@ -166,7 +184,7 @@ impl IntegrityPipeline {
         run.attempts
             .iter()
             .take(prefix)
-            .map(|a| (a, self.label(a, run.t_sol_fp16_ms, &mut rng)))
+            .map(|a| (a, self.label(a, run.t_sol_ms, run.t_sol_fp16_ms, &mut rng)))
             .filter(|(_, l)| l.accepted())
             .filter_map(|(a, _)| a.outcome.time_ms())
             .min_by(|a, b| a.partial_cmp(b).unwrap())
@@ -229,6 +247,7 @@ mod tests {
             config: None,
             kernel_names: names.into_iter().map(String::from).collect(),
             dsl_source: None,
+            dsl_plan: None,
         }
     }
 
@@ -241,10 +260,44 @@ mod tests {
         let p = pipeline();
         let mut rng = Pcg32::new(1, 1);
         let a = rec(SolutionKind::Gaming(GamingType::ConstantOutput), 0.01, vec!["k"], false);
-        assert_eq!(p.label(&a, 1.0, &mut rng), ReviewLabel::SolCeiling);
+        assert_eq!(p.label(&a, 1.0, 1.0, &mut rng), ReviewLabel::SolCeiling);
         // within 10% of SOL is fine
         let b = rec(SolutionKind::DslKernel, 0.95, vec!["ucutlass_x"], false);
-        assert_eq!(p.label(&b, 1.0, &mut rng), ReviewLabel::NoIssues);
+        assert_eq!(p.label(&b, 1.0, 1.0, &mut rng), ReviewLabel::NoIssues);
+    }
+
+    #[test]
+    fn sol_ceiling_is_dtype_aware_for_plan_attempts() {
+        let p = pipeline();
+        let mut rng = Pcg32::new(7, 1);
+        let fp32_plan = crate::dsl::compile(
+            "gemm().with_dtype(input=fp32, acc=fp32, output=fp32)\
+             .with_layout(A=RowMajor, B=RowMajor, C=RowMajor).with_arch(sm_90a)",
+        )
+        .unwrap()
+        .plan;
+        let fp16_plan = crate::dsl::compile(
+            "gemm().with_dtype(input=fp16, acc=fp32, output=fp16)\
+             .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor).with_arch(sm_90a)",
+        )
+        .unwrap()
+        .plan;
+        // t = 1.2: above the FP16 bound (1.0) but below 0.9 × TF32 bound (2.0)
+        let (t_sol, t_sol_fp16) = (2.0, 1.0);
+        let mut a = rec(SolutionKind::DslKernel, 1.2, vec!["ucutlass_k"], false);
+        a.dsl_plan = Some(fp32_plan);
+        assert_eq!(
+            p.label(&a, t_sol, t_sol_fp16, &mut rng),
+            ReviewLabel::SolCeiling,
+            "an fp32 plan claiming a sub-TF32-SOL runtime is implausible"
+        );
+        let mut b = rec(SolutionKind::DslKernel, 1.2, vec!["ucutlass_k"], false);
+        b.dsl_plan = Some(fp16_plan);
+        assert_eq!(p.label(&b, t_sol, t_sol_fp16, &mut rng), ReviewLabel::NoIssues,
+            "the same runtime is plausible for a reduced-precision plan");
+        // no plan → conservative FP16 bound, as before
+        let c = rec(SolutionKind::RawCuda, 1.2, vec!["custom_k"], false);
+        assert_eq!(p.label(&c, t_sol, t_sol_fp16, &mut rng), ReviewLabel::NoIssues);
     }
 
     #[test]
@@ -257,10 +310,10 @@ mod tests {
             vec!["void at::native::vectorized_elementwise_kernel", "ampere_sgemm [cublas]"],
             false,
         );
-        assert_eq!(p.label(&a, 1.0, &mut rng), ReviewLabel::PyTorchOnly);
+        assert_eq!(p.label(&a, 1.0, 1.0, &mut rng), ReviewLabel::PyTorchOnly);
         // one custom kernel in the profile → not pytorch-only
         let b = rec(SolutionKind::RawCuda, 5.0, vec!["my_kernel", "cublas_helper"], false);
-        assert_eq!(p.label(&b, 1.0, &mut rng), ReviewLabel::NoIssues);
+        assert_eq!(p.label(&b, 1.0, 1.0, &mut rng), ReviewLabel::NoIssues);
     }
 
     #[test]
@@ -269,8 +322,8 @@ mod tests {
         let mut rng = Pcg32::new(3, 1);
         let orig = rec(SolutionKind::Gaming(GamingType::SkippedComputation), 2.0, vec!["k"], false);
         let inh = rec(SolutionKind::Gaming(GamingType::SkippedComputation), 2.0, vec!["k"], true);
-        assert_eq!(p.label(&orig, 1.0, &mut rng), ReviewLabel::OriginalGaming);
-        assert_eq!(p.label(&inh, 1.0, &mut rng), ReviewLabel::InheritedGaming);
+        assert_eq!(p.label(&orig, 1.0, 1.0, &mut rng), ReviewLabel::OriginalGaming);
+        assert_eq!(p.label(&inh, 1.0, 1.0, &mut rng), ReviewLabel::InheritedGaming);
     }
 
     #[test]
@@ -303,7 +356,7 @@ mod tests {
         let mut rng = Pcg32::new(5, 1);
         let mut a = rec(SolutionKind::DslKernel, 2.0, vec!["ucutlass_k"], false);
         a.minor_issue = Some(crate::agent::MinorIssueType::ContiguityAssumption);
-        let l = p.label(&a, 1.0, &mut rng);
+        let l = p.label(&a, 1.0, 1.0, &mut rng);
         assert_eq!(l, ReviewLabel::MinorIssues);
         assert!(l.accepted());
     }

@@ -7,8 +7,11 @@
 //! Layer 3 (this crate) is the paper's system contribution:
 //!
 //! * [`dsl`] — the µCUTLASS DSL: lexer, parser, typed configuration IR,
-//!   constraint validation (the full SM70–SM100 rule set from the paper's
-//!   Appendix A.1 grammar), and code generation.
+//!   table-driven constraint validation (per-arch `ConstraintTable` rows
+//!   covering the SM70–SM100 rule set from the paper's Appendix A.1
+//!   grammar), the pre-resolved [`dsl::plan::KernelPlan`] lowering
+//!   artifact every consumer layer reads (ADR-001), a config-hash-keyed
+//!   plan cache for the agent hot loop, and code generation.
 //! * [`sol`] — Speed-of-Light analysis: roofline bounds, clock-aware peaks,
 //!   FP16 augmentation, and report generation (paper §4.1, Appendix A.2).
 //! * [`perfmodel`] — the calibrated H100 analytical performance model that

@@ -164,7 +164,12 @@ fn cmd_dsl(pos: &[String], opts: &HashMap<String, String>) -> Result<(), String>
             match compiled {
                 Ok(c) => {
                     println!("// {}\n{}", c.header_name, c.header);
-                    println!("// variant key: {:?}", c.variant_key);
+                    let k = c.plan.primary();
+                    println!(
+                        "// plan: {} on {} tile {}x{}x{} {} stages={} smem={}B hash={}",
+                        k.family, k.arch, k.tile.m, k.tile.n, k.tile.k, k.dtype_input,
+                        k.stages, k.smem_bytes, c.plan.config_hash
+                    );
                     Ok(())
                 }
                 Err(e) => Err(e.to_string()),

@@ -181,6 +181,9 @@ pub fn run_orchestrated(
     };
     let mut attempts = Vec::with_capacity((ITERATIONS * 8) as usize);
     let mut attempt_no = 0u32;
+    // Per-problem plan cache shared across all iterations/hypotheses:
+    // revisited candidate configurations skip re-lowering (ADR-001).
+    let mut plans = crate::dsl::PlanCache::new();
 
     for _iter in 0..ITERATIONS {
         // ---- Measure + Analyze -------------------------------------------
@@ -238,7 +241,8 @@ pub fn run_orchestrated(
                 // first attempt executes the hypothesis; retries refine freely
                 let forced = if k == 0 { Some(h.mv) } else { None };
                 let rec = run_attempt(
-                    env, spec, &mods, pidx, attempt_no, &mut state, steering, forced, &mut rng,
+                    env, spec, &mods, pidx, attempt_no, &mut state, steering, forced,
+                    &mut plans, &mut rng,
                 );
                 attempt_no += 1;
                 attempts.push(rec);

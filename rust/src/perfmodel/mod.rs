@@ -15,7 +15,8 @@ pub mod ncu;
 
 pub use ncu::NcuProfile;
 
-use crate::dsl::{DType, VariantKey};
+use crate::dsl::ir::TileScheduler;
+use crate::dsl::{DType, KernelPlan};
 use crate::kernelbench::{Op, Problem};
 use crate::sol::GpuSpec;
 use crate::util::rng::Pcg32;
@@ -29,10 +30,10 @@ pub enum SchedulerKind {
     StreamK,
 }
 
-/// Abstract kernel-design descriptor the model costs. Derived from a DSL
-/// [`VariantKey`] (high-level, statically valid) or hand-built for raw-CUDA
-/// candidates (where `quality` captures code-level inefficiency the
-/// configuration axes don't).
+/// Abstract kernel-design descriptor the model costs. Derived from a
+/// compiled [`KernelPlan`] (high-level, statically valid) or hand-built for
+/// raw-CUDA candidates (where `quality` captures code-level inefficiency
+/// the configuration axes don't).
 #[derive(Debug, Clone)]
 pub struct CandidateConfig {
     /// Threadblock tile (m, n, k).
@@ -67,18 +68,25 @@ impl CandidateConfig {
         }
     }
 
-    /// Build from a compiled µCUTLASS variant key. DSL-generated code is
-    /// CUTLASS-backed, so `quality` is library-grade by construction — this
-    /// is the mechanism behind the paper's DSL advantage.
-    pub fn from_variant(key: &VariantKey, covers_all_ops: bool) -> Self {
+    /// Build from a compiled [`KernelPlan`]: the cost model reads the same
+    /// resolved tile/dtype/scheduler/stage numbers codegen emitted, instead
+    /// of re-deriving them. DSL-generated code is CUTLASS-backed, so
+    /// `quality` is library-grade by construction — this is the mechanism
+    /// behind the paper's DSL advantage.
+    pub fn from_plan(plan: &KernelPlan, covers_all_ops: bool) -> Self {
+        let k = plan.primary();
         CandidateConfig {
-            tile: (key.tile.m, key.tile.n, key.tile.k),
-            compute_dtype: key.dtype,
+            tile: (k.tile.m, k.tile.n, k.tile.k),
+            compute_dtype: k.dtype_input,
             tensor_cores: true,
-            fused_epilogue: !key.epilogue.is_empty(),
+            fused_epilogue: !k.epilogue.is_empty(),
             fusion_coverage: if covers_all_ops { 1.0 } else { 0.6 },
-            scheduler: SchedulerKind::Default,
-            stages: 3,
+            scheduler: match k.scheduler.tile {
+                TileScheduler::Default => SchedulerKind::Default,
+                TileScheduler::Persistent => SchedulerKind::Persistent,
+                TileScheduler::StreamK => SchedulerKind::StreamK,
+            },
+            stages: k.stages,
             quality: 0.97,
         }
     }
@@ -369,6 +377,22 @@ mod tests {
             let t = m.measure_ms(p, &cfg, &mut rng);
             assert!((t / t0 - 1.0).abs() < 0.06);
         }
+    }
+
+    #[test]
+    fn from_plan_reads_resolved_config() {
+        let src = "gemm().with_dtype(input=fp16, acc=fp32, output=fp32)\
+            .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor).with_arch(sm_90a)\
+            .with_threadblockshape(m=128, n=64, k=64).with_stages(4)\
+            .with_scheduler(tile=stream_k, kernel=tma, epilogue=auto) >> bias() >> relu()";
+        let c = crate::dsl::compile(src).unwrap();
+        let cfg = CandidateConfig::from_plan(&c.plan, true);
+        assert_eq!(cfg.tile, (128, 64, 64));
+        assert_eq!(cfg.compute_dtype, DType::Fp16);
+        assert_eq!(cfg.scheduler, SchedulerKind::StreamK, "scheduler comes from the plan");
+        assert_eq!(cfg.stages, 4, "stage count comes from the plan");
+        assert!(cfg.fused_epilogue);
+        assert!((cfg.quality - 0.97).abs() < 1e-12);
     }
 
     #[test]

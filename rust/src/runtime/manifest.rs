@@ -4,8 +4,8 @@
 use std::collections::BTreeMap;
 use std::path::Path;
 
-use anyhow::{anyhow, Context, Result};
-
+use crate::errmsg;
+use crate::util::errors::{Result, ResultExt};
 use crate::util::json::Json;
 
 /// Input spec for one artifact operand.
@@ -56,24 +56,24 @@ impl Manifest {
     }
 
     pub fn parse(text: &str) -> Result<Manifest> {
-        let doc = Json::parse(text).map_err(|e| anyhow!("manifest: {e}"))?;
+        let doc = Json::parse(text).map_err(|e| errmsg!("manifest: {e}"))?;
         let version = doc.get("version").and_then(|v| v.as_u64()).unwrap_or(1);
         let mut problems = BTreeMap::new();
         let probs = doc
             .get("problems")
             .and_then(|p| p.as_obj())
-            .ok_or_else(|| anyhow!("manifest: missing problems object"))?;
+            .ok_or_else(|| errmsg!("manifest: missing problems object"))?;
         for (name, entry) in probs {
             let inputs = entry
                 .get("inputs")
                 .and_then(|i| i.as_arr())
-                .ok_or_else(|| anyhow!("{name}: missing inputs"))?
+                .ok_or_else(|| errmsg!("{name}: missing inputs"))?
                 .iter()
                 .map(|spec| {
                     let shape = spec
                         .get("shape")
                         .and_then(|s| s.as_arr())
-                        .ok_or_else(|| anyhow!("{name}: input without shape"))?
+                        .ok_or_else(|| errmsg!("{name}: input without shape"))?
                         .iter()
                         .map(|d| d.as_u64().unwrap_or(0) as usize)
                         .collect();
@@ -91,7 +91,7 @@ impl Manifest {
                     let path = v
                         .get("path")
                         .and_then(|p| p.as_str())
-                        .ok_or_else(|| anyhow!("{name}/{vname}: missing path"))?;
+                        .ok_or_else(|| errmsg!("{name}/{vname}: missing path"))?;
                     variants.insert(vname.clone(), path.to_string());
                 }
             }
@@ -107,7 +107,7 @@ impl Manifest {
                     reference: entry
                         .get("reference")
                         .and_then(|r| r.as_str())
-                        .ok_or_else(|| anyhow!("{name}: missing reference"))?
+                        .ok_or_else(|| errmsg!("{name}: missing reference"))?
                         .to_string(),
                     rtol: entry.get("rtol").and_then(|v| v.as_f64()).unwrap_or(1e-4),
                     atol: entry.get("atol").and_then(|v| v.as_f64()).unwrap_or(1e-4),

@@ -6,17 +6,24 @@
 //! `HloModuleProto::from_text_file` → `compile` → `execute`, with HLO
 //! *text* as the interchange format (serialized protos from jax ≥ 0.5 are
 //! rejected by xla_extension 0.5.1 — see gen_hlo.py).
+//!
+//! The executor is gated behind the `pjrt` cargo feature (the `xla` crate
+//! is vendored, not on crates.io). Without the feature `Runtime::open`
+//! returns an explanatory error and every caller — integration tests, the
+//! examples, `repro validate` — skips gracefully. Variant *selection* is
+//! pure logic over the [`KernelPlan`] and works in every build.
 
 pub mod manifest;
 
 pub use manifest::{Manifest, ManifestProblem};
 
+#[cfg(feature = "pjrt")]
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
-
-use crate::dsl::VariantKey;
+use crate::dsl::{DType, KernelPlan};
+use crate::errmsg;
+use crate::util::errors::{Result, ResultExt};
 use crate::util::rng::Pcg32;
 
 /// Result of validating one candidate variant against its reference.
@@ -33,9 +40,12 @@ pub struct ValidationReport {
 /// The PJRT executor with a compiled-executable cache (one compile per
 /// artifact per process — Python never runs here).
 pub struct Runtime {
+    #[cfg(feature = "pjrt")]
     client: xla::PjRtClient,
-    dir: PathBuf,
+    /// Artifact directory (holds `manifest.json` and the HLO text files).
+    pub dir: PathBuf,
     pub manifest: Manifest,
+    #[cfg(feature = "pjrt")]
     cache: HashMap<String, xla::PjRtLoadedExecutable>,
 }
 
@@ -45,31 +55,53 @@ impl Runtime {
         let dir = dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&dir.join("manifest.json"))
             .with_context(|| format!("loading manifest from {}", dir.display()))?;
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e:?}"))?;
+        Self::with_manifest(dir, manifest)
+    }
+
+    #[cfg(feature = "pjrt")]
+    fn with_manifest(dir: PathBuf, manifest: Manifest) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().map_err(|e| errmsg!("pjrt cpu client: {e:?}"))?;
         Ok(Runtime { client, dir, manifest, cache: HashMap::new() })
     }
 
+    #[cfg(not(feature = "pjrt"))]
+    fn with_manifest(_dir: PathBuf, _manifest: Manifest) -> Result<Self> {
+        Err(errmsg!(
+            "PJRT executor unavailable: built without the `pjrt` feature \
+             (needs the vendored xla crate wired in as a path dependency — \
+             see the [features] note in rust/Cargo.toml)"
+        ))
+    }
+
     /// Compile (or fetch from cache) the executable for an artifact path.
+    #[cfg(feature = "pjrt")]
     fn executable(&mut self, rel_path: &str) -> Result<&xla::PjRtLoadedExecutable> {
         if !self.cache.contains_key(rel_path) {
             let full = self.dir.join(rel_path);
             let proto = xla::HloModuleProto::from_text_file(
-                full.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+                full.to_str().ok_or_else(|| errmsg!("non-utf8 path"))?,
             )
-            .map_err(|e| anyhow!("parsing {rel_path}: {e:?}"))?;
+            .map_err(|e| errmsg!("parsing {rel_path}: {e:?}"))?;
             let comp = xla::XlaComputation::from_proto(&proto);
             let exe = self
                 .client
                 .compile(&comp)
-                .map_err(|e| anyhow!("compiling {rel_path}: {e:?}"))?;
+                .map_err(|e| errmsg!("compiling {rel_path}: {e:?}"))?;
             self.cache.insert(rel_path.to_string(), exe);
         }
         Ok(self.cache.get(rel_path).unwrap())
     }
 
     /// Number of compiled executables held in the cache.
+    #[cfg(feature = "pjrt")]
     pub fn cached(&self) -> usize {
         self.cache.len()
+    }
+
+    /// Non-pjrt stub: no executor, nothing cached.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn cached(&self) -> usize {
+        0
     }
 
     /// Deterministic standard-normal inputs for a problem (seeded).
@@ -89,22 +121,34 @@ impl Runtime {
     /// Execute one artifact on the given inputs; returns the flattened f32
     /// output (all artifacts return a 1-tuple — lowered with
     /// return_tuple=True, unwrapped with to_tuple1).
+    #[cfg(feature = "pjrt")]
     pub fn execute(&mut self, rel_path: &str, inputs: &[(Vec<f32>, Vec<i64>)]) -> Result<Vec<f32>> {
         let literals: Vec<xla::Literal> = inputs
             .iter()
             .map(|(data, shape)| {
                 let lit = xla::Literal::vec1(data);
-                lit.reshape(shape).map_err(|e| anyhow!("reshape {shape:?}: {e:?}"))
+                lit.reshape(shape).map_err(|e| errmsg!("reshape {shape:?}: {e:?}"))
             })
             .collect::<Result<_>>()?;
         let exe = self.executable(rel_path)?;
         let result = exe
             .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("executing {rel_path}: {e:?}"))?[0][0]
+            .map_err(|e| errmsg!("executing {rel_path}: {e:?}"))?[0][0]
             .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result: {e:?}"))?;
-        let out = result.to_tuple1().map_err(|e| anyhow!("untuple: {e:?}"))?;
-        out.to_vec::<f32>().map_err(|e| anyhow!("to_vec: {e:?}"))
+            .map_err(|e| errmsg!("fetch result: {e:?}"))?;
+        let out = result.to_tuple1().map_err(|e| errmsg!("untuple: {e:?}"))?;
+        out.to_vec::<f32>().map_err(|e| errmsg!("to_vec: {e:?}"))
+    }
+
+    /// Non-pjrt stub: unreachable in practice (`open` already failed), but
+    /// keeps the call sites compiling in every build.
+    #[cfg(not(feature = "pjrt"))]
+    pub fn execute(
+        &mut self,
+        rel_path: &str,
+        _inputs: &[(Vec<f32>, Vec<i64>)],
+    ) -> Result<Vec<f32>> {
+        Err(errmsg!("cannot execute {rel_path}: built without the `pjrt` feature"))
     }
 
     /// Validate a candidate variant against its problem's reference on
@@ -119,18 +163,18 @@ impl Runtime {
             .manifest
             .problems
             .get(problem)
-            .ok_or_else(|| anyhow!("unknown problem {problem}"))?
+            .ok_or_else(|| errmsg!("unknown problem {problem}"))?
             .clone();
         let vpath = prob
             .variants
             .get(variant)
-            .ok_or_else(|| anyhow!("unknown variant {problem}/{variant}"))?
+            .ok_or_else(|| errmsg!("unknown variant {problem}/{variant}"))?
             .clone();
         let inputs = Self::gen_inputs(&prob, seed);
         let expected = self.execute(&prob.reference, &inputs)?;
         let got = self.execute(&vpath, &inputs)?;
         if expected.len() != got.len() {
-            return Err(anyhow!(
+            return Err(errmsg!(
                 "output shape mismatch: ref {} vs candidate {}",
                 expected.len(),
                 got.len()
@@ -158,13 +202,25 @@ impl Runtime {
         })
     }
 
-    /// Map a compiled DSL configuration onto the nearest AOT variant of an
-    /// artifact problem (the runtime side of Figure 1's backend routing).
-    pub fn select_variant(prob: &ManifestProblem, key: &VariantKey) -> Option<String> {
-        let want_bf16 = matches!(key.dtype, crate::dsl::DType::Bf16 | crate::dsl::DType::Fp16);
+    /// Map a compiled plan onto the nearest AOT variant of an artifact
+    /// problem (the runtime side of Figure 1's backend routing). Reads the
+    /// resolved tile/dtype straight off the plan's primary kernel.
+    pub fn select_variant(prob: &ManifestProblem, plan: &KernelPlan) -> Option<String> {
+        let k = plan.primary();
+        Self::select_variant_for(prob, (k.tile.m, k.tile.n, k.tile.k), k.dtype_input)
+    }
+
+    /// Lower-level selection for callers that only have a tile/dtype pair
+    /// (e.g. raw-CUDA attempt configs without a plan).
+    pub fn select_variant_for(
+        prob: &ManifestProblem,
+        tile: (u64, u64, u64),
+        dtype: DType,
+    ) -> Option<String> {
+        let want_bf16 = matches!(dtype, DType::Bf16 | DType::Fp16);
         let mut best: Option<(f64, String)> = None;
         for name in prob.variants.keys() {
-            let score = variant_distance(name, key, want_bf16);
+            let score = variant_distance(name, tile, want_bf16);
             if best.as_ref().map(|(s, _)| score < *s).unwrap_or(true) {
                 best = Some((score, name.clone()));
             }
@@ -174,8 +230,8 @@ impl Runtime {
 }
 
 /// Distance between a variant name (t64x64x32_fp32 / rows16 / bq32 / …) and
-/// a requested config.
-fn variant_distance(name: &str, key: &VariantKey, want_bf16: bool) -> f64 {
+/// a requested tile/dtype.
+fn variant_distance(name: &str, tile: (u64, u64, u64), want_bf16: bool) -> f64 {
     let mut score = 0.0;
     if let Some(rest) = name.strip_prefix('t') {
         // tile variant: t{m}x{n}x{k}[_dtype]
@@ -183,16 +239,16 @@ fn variant_distance(name: &str, key: &VariantKey, want_bf16: bool) -> f64 {
         let dims: Vec<u64> = core.split('x').filter_map(|d| d.parse().ok()).collect();
         if dims.len() == 3 {
             let lg = |a: u64, b: u64| ((a.max(1) as f64).ln() - (b.max(1) as f64).ln()).abs();
-            score += lg(dims[0], key.tile.m) + lg(dims[1], key.tile.n) + lg(dims[2], key.tile.k);
+            score += lg(dims[0], tile.0) + lg(dims[1], tile.1) + lg(dims[2], tile.2);
         }
         let is_bf16 = name.ends_with("bf16");
         if is_bf16 != want_bf16 {
             score += 10.0;
         }
     } else if let Some(r) = name.strip_prefix("rows").and_then(|s| s.parse::<u64>().ok()) {
-        score += ((r as f64).ln() - (key.tile.m.min(64) as f64).ln()).abs();
+        score += ((r as f64).ln() - (tile.0.min(64) as f64).ln()).abs();
     } else if let Some(q) = name.strip_prefix("bq").and_then(|s| s.parse::<u64>().ok()) {
-        score += ((q as f64).ln() - (key.tile.m.min(64) as f64).ln()).abs();
+        score += ((q as f64).ln() - (tile.0.min(64) as f64).ln()).abs();
     }
     score
 }
@@ -200,37 +256,46 @@ fn variant_distance(name: &str, key: &VariantKey, want_bf16: bool) -> f64 {
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::dsl::{DType, VariantKey};
+    use crate::dsl;
 
-    fn key(tile: (u64, u64, u64), dtype: DType) -> VariantKey {
-        VariantKey {
-            family: "gemm".into(),
-            tile: crate::dsl::ir::Tile { m: tile.0, n: tile.1, k: tile.2 },
-            dtype,
-            acc_dtype: DType::Fp32,
-            epilogue: vec![],
-            pipeline_stages: 1,
-        }
+    fn plan_for(tile: (u64, u64, u64), dtype: &str) -> std::sync::Arc<dsl::KernelPlan> {
+        let src = format!(
+            "gemm().with_dtype(input={dtype}, acc=fp32, output={dtype})\
+             .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor).with_arch(sm_90a)\
+             .with_threadblockshape(m={}, n={}, k={})",
+            tile.0, tile.1, tile.2
+        );
+        dsl::compile(&src).unwrap().plan
     }
 
     #[test]
     fn variant_distance_prefers_matching_tile_and_dtype() {
-        let k = key((64, 64, 64), DType::Fp32);
-        assert!(variant_distance("t64x64x64_fp32", &k, false)
-            < variant_distance("t32x32x32_fp32", &k, false));
-        assert!(variant_distance("t64x64x64_fp32", &k, false)
-            < variant_distance("t64x64x64_bf16", &k, false));
+        let t = (64, 64, 64);
+        assert!(variant_distance("t64x64x64_fp32", t, false)
+            < variant_distance("t32x32x32_fp32", t, false));
+        assert!(variant_distance("t64x64x64_fp32", t, false)
+            < variant_distance("t64x64x64_bf16", t, false));
     }
 
     #[test]
-    fn select_variant_picks_nearest() {
+    fn select_variant_picks_nearest_from_plan() {
         let mut prob = ManifestProblem::empty_for_test();
         for v in ["t32x32x32_fp32", "t64x64x32_fp32", "t64x64x64_fp32", "t64x64x64_bf16"] {
             prob.variants.insert(v.into(), format!("{v}.hlo.txt"));
         }
-        let got = Runtime::select_variant(&prob, &key((64, 64, 64), DType::Fp16)).unwrap();
+        let got = Runtime::select_variant(&prob, &plan_for((64, 64, 64), "fp16")).unwrap();
         assert_eq!(got, "t64x64x64_bf16");
-        let got = Runtime::select_variant(&prob, &key((128, 128, 32), DType::Fp32)).unwrap();
+        let got = Runtime::select_variant(&prob, &plan_for((128, 128, 32), "fp32")).unwrap();
         assert_eq!(got, "t64x64x32_fp32");
+    }
+
+    #[test]
+    fn select_variant_for_raw_configs() {
+        let mut prob = ManifestProblem::empty_for_test();
+        for v in ["t32x32x32_fp32", "t64x64x64_fp32"] {
+            prob.variants.insert(v.into(), format!("{v}.hlo.txt"));
+        }
+        let got = Runtime::select_variant_for(&prob, (64, 64, 64), DType::Fp32).unwrap();
+        assert_eq!(got, "t64x64x64_fp32");
     }
 }

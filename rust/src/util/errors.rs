@@ -1,0 +1,77 @@
+//! Minimal error plumbing for the runtime layer (anyhow is not in the
+//! vendored crate set). A string-backed error type, a `Result` alias, a
+//! formatting constructor macro, and a `with_context` extension that
+//! mirrors the subset of the anyhow API the crate uses.
+
+use std::fmt;
+
+/// A string-backed error with optional context chain (joined with `: `).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg(m: impl Into<String>) -> Self {
+        Error { msg: m.into() }
+    }
+
+    /// Prepend a context layer, anyhow-style.
+    pub fn context(self, ctx: impl Into<String>) -> Self {
+        Error { msg: format!("{}: {}", ctx.into(), self.msg) }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Crate-local `Result` defaulting to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// `errmsg!("parsing {}: {e}", path)` — formatted [`Error`] constructor.
+#[macro_export]
+macro_rules! errmsg {
+    ($($arg:tt)*) => {
+        $crate::util::errors::Error::msg(format!($($arg)*))
+    };
+}
+
+/// `with_context` on any displayable error, mirroring anyhow's combinator.
+pub trait ResultExt<T> {
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: fmt::Display> ResultExt<T> for std::result::Result<T, E> {
+    fn with_context<S: Into<String>, F: FnOnce() -> S>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::msg(format!("{}: {e}", f().into())))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn context_chains() {
+        let e = Error::msg("inner").context("outer");
+        assert_eq!(e.to_string(), "outer: inner");
+    }
+
+    #[test]
+    fn result_ext_adds_context() {
+        let r: std::result::Result<(), std::fmt::Error> = Err(std::fmt::Error);
+        let e = r.with_context(|| "formatting").unwrap_err();
+        assert!(e.to_string().starts_with("formatting: "));
+    }
+
+    #[test]
+    fn errmsg_formats() {
+        let e = errmsg!("bad value {}", 42);
+        assert_eq!(e.to_string(), "bad value 42");
+    }
+}

@@ -1,9 +1,10 @@
 //! In-house substrates for the offline environment: JSON, seeded RNG,
-//! statistics helpers, and a tiny property-testing driver.
+//! statistics helpers, error plumbing, and a tiny property-testing driver.
 //!
-//! serde / rand / proptest are not in the vendored crate set, so these are
-//! implemented from scratch (DESIGN.md §2 substitution table).
+//! serde / rand / proptest / anyhow are not in the vendored crate set, so
+//! these are implemented from scratch (DESIGN.md §2 substitution table).
 
+pub mod errors;
 pub mod json;
 pub mod rng;
 pub mod stats;

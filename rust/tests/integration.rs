@@ -43,7 +43,7 @@ fn dsl_to_perfmodel_roundtrip() {
         .with_threadblockshape(m=128, n=128, k=64).with_alignment(A=8, B=8, C=4)\
         .with_stages(3) >> bias() >> relu()";
     let compiled = dsl::compile(src).unwrap();
-    let cfg = CandidateConfig::from_variant(&compiled.variant_key, true);
+    let cfg = CandidateConfig::from_plan(&compiled.plan, true);
     let p = &fx.problems[find(&fx.problems, "L2-76").unwrap()];
     let t = fx.model.candidate_ms(p, &cfg);
     let sol = analyze(p, &H100_SXM);

@@ -76,14 +76,14 @@ fn mlp_pipeline_validates() {
 }
 
 #[test]
-fn dsl_variant_key_selects_executable_artifact() {
+fn dsl_plan_selects_executable_artifact() {
     let Some(mut rt) = runtime() else { return };
     let src = "gemm().with_dtype(input=fp32, acc=fp32, output=fp32)\
         .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor).with_arch(sm_90a)\
         .with_threadblockshape(m=64, n=64, k=64).with_alignment(A=4, B=4, C=4)";
     let compiled = dsl::compile(src).unwrap();
     let prob = rt.manifest.problems.get("gemm_square").cloned().unwrap();
-    let variant = Runtime::select_variant(&prob, &compiled.variant_key).unwrap();
+    let variant = Runtime::select_variant(&prob, &compiled.plan).unwrap();
     assert_eq!(variant, "t64x64x64_fp32");
     let rep = rt.validate_variant("gemm_square", &variant, 51).unwrap();
     assert!(rep.pass);
