@@ -1,6 +1,8 @@
 //! Quickstart: compile a µCUTLASS program, read its SOL report, run one
-//! SOL-guided agent on one problem, and (when `make artifacts` has run)
-//! numerically validate the selected kernel through the PJRT runtime.
+//! SOL-guided agent on one problem, run the whole suite through the
+//! online SOL-budgeted scheduler (realized attempt/token savings), and
+//! (when `make artifacts` has run) numerically validate the selected
+//! kernel through the PJRT runtime.
 //!
 //! ```bash
 //! cargo run --release --example quickstart
@@ -8,9 +10,11 @@
 
 use ucutlass_repro::agent::controller::{run_problem, ControllerKind, VariantSpec};
 use ucutlass_repro::agent::ModelTier;
+use ucutlass_repro::exec;
 use ucutlass_repro::experiments::Bench;
 use ucutlass_repro::integrity::IntegrityPipeline;
 use ucutlass_repro::runtime::Runtime;
+use ucutlass_repro::scheduler::{self, Policy};
 use ucutlass_repro::{dsl, kernelbench, sol};
 
 fn main() -> Result<(), Box<dyn std::error::Error>> {
@@ -61,7 +65,34 @@ gemm().with_dtype(input=fp16, acc=fp32, output=fp16)
         analysis.gap(best.unwrap_or(run.t_ref_ms)),
     );
 
-    // --- 4. numeric validation via PJRT (needs `make artifacts`) -------------
+    // --- 4. online SOL-budgeted scheduling over the suite --------------------
+    // The paper's ε=100%/w=8 policy applied DURING execution: attempts
+    // stop as soon as a problem is within 2x of its FP16 SOL bound (and
+    // ahead of PyTorch) or has made no progress for 8 attempts. The
+    // savings printed here were genuinely never spent.
+    let jobs = exec::effective_jobs(0);
+    let env = bench.env();
+    let policy = Policy { epsilon: 1.0, window: 8 };
+    let online = scheduler::run_online(&env, &spec, 42, &policy, jobs);
+    let fixed = scheduler::run_online(&env, &spec, 42, &Policy::fixed(), jobs);
+    println!("\n=== online scheduler ({}, {} jobs) ===", policy.label(), jobs);
+    // (orchestrated sessions run with per-problem memory here — the online
+    // rotation has no defined cross-problem memory order, ADR-002)
+    println!(
+        "attempts {} of {} ({:.0}% saved, {} problems stopped early)",
+        online.attempts_total(),
+        fixed.attempts_total(),
+        online.attempt_savings() * 100.0,
+        online.stopped_early()
+    );
+    println!(
+        "tokens   {:.1}M of {:.1}M ({:.0}% saved)",
+        online.tokens_used as f64 / 1e6,
+        fixed.tokens_used as f64 / 1e6,
+        online.token_savings_vs(&fixed.log) * 100.0
+    );
+
+    // --- 5. numeric validation via PJRT (needs `make artifacts`) -------------
     match Runtime::open("artifacts") {
         Ok(mut rt) => {
             let prob = rt.manifest.problems.get("gemm_square").cloned().unwrap();

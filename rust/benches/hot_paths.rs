@@ -11,6 +11,8 @@ use ucutlass_repro::agent::controller::{run_problem, ControllerKind, Env, Varian
 use ucutlass_repro::agent::policy::select_move;
 use ucutlass_repro::agent::ModelTier;
 use ucutlass_repro::dsl;
+use ucutlass_repro::exec;
+use ucutlass_repro::experiments::runner::{main_variants, Bench as SuiteBench};
 use ucutlass_repro::integrity::IntegrityPipeline;
 use ucutlass_repro::kernelbench::suite;
 use ucutlass_repro::perfmodel::{CandidateConfig, PerfModel};
@@ -147,4 +149,47 @@ fn main() {
     bench("integrity::review_run (40 attempts)", 5_000, 9, || {
         black_box(pipeline.review_run(black_box(&log.runs[0]), 7));
     });
+
+    // ---- serial vs parallel multi-variant eval (ADR-002 acceptance:
+    // ≥ 2x wall-clock at 4 jobs, bit-identical output) --------------------
+    {
+        let suite_bench = SuiteBench::new();
+        let work: Vec<_> = main_variants(ModelTier::Mid).into_iter().map(|s| (s, None)).collect();
+        let t0 = Instant::now();
+        let serial = exec::eval_variants(&suite_bench, &work, 7, 1);
+        let t_serial = t0.elapsed();
+        let t1 = Instant::now();
+        let parallel = exec::eval_variants(&suite_bench, &work, 7, 4);
+        let t_parallel = t1.elapsed();
+        let identical = serial == parallel;
+        println!(
+            "{:40} {:>9.0} ms serial  {:>7.0} ms @4 jobs -> {:.1}x (target >= 2x), bit-identical: {}",
+            "exec::eval_variants (4 variants x 59)",
+            t_serial.as_secs_f64() * 1e3,
+            t_parallel.as_secs_f64() * 1e3,
+            t_serial.as_secs_f64() / t_parallel.as_secs_f64().max(1e-9),
+            identical
+        );
+    }
+
+    // ---- fixed vs online budget (realized savings, not replay) ----------
+    {
+        let suite_bench = SuiteBench::new();
+        let env2 = suite_bench.env();
+        let spec2 = VariantSpec::new(ControllerKind::InPromptSol, true, ModelTier::Max);
+        let t0 = Instant::now();
+        let fixed = scheduler::run_online(&env2, &spec2, 7, &Policy::fixed(), 4);
+        let t_fixed = t0.elapsed();
+        let t1 = Instant::now();
+        let online = scheduler::run_online(&env2, &spec2, 7, &Policy { epsilon: 1.0, window: 8 }, 4);
+        let t_online = t1.elapsed();
+        println!(
+            "{:40} {:>9.0} ms fixed   {:>7.0} ms online -> {:.0}% attempts, {:.0}% tokens saved",
+            "scheduler::run_online (e=100%, w=8)",
+            t_fixed.as_secs_f64() * 1e3,
+            t_online.as_secs_f64() * 1e3,
+            online.attempt_savings() * 100.0,
+            online.token_savings_vs(&fixed.log) * 100.0
+        );
+    }
 }

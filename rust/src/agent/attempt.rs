@@ -125,8 +125,10 @@ impl AttemptOutcome {
     }
 }
 
-/// One attempt, as recorded in the run log.
-#[derive(Debug, Clone)]
+/// One attempt, as recorded in the run log. `PartialEq` compares every
+/// field — the determinism tests assert the parallel engine and the online
+/// scheduler reproduce serial logs exactly, not just summary statistics.
+#[derive(Debug, Clone, PartialEq)]
 pub struct AttemptRecord {
     /// Index of the problem in the suite.
     pub problem_idx: usize,

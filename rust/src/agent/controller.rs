@@ -70,6 +70,45 @@ impl VariantSpec {
         self
     }
 
+    /// Nominal per-problem attempt budget: flat controllers spend
+    /// `attempts`; the orchestrated controller's budget is structural
+    /// (Table 2: iterations × hypotheses × attempts) and ignores the
+    /// `attempts` field. Savings accounting must use this, not `attempts`.
+    pub fn total_budget(&self) -> u32 {
+        match self.controller {
+            ControllerKind::OrchestratedSol => {
+                crate::mantis::ITERATIONS
+                    * crate::mantis::HYPOTHESES_PER_ITER as u32
+                    * crate::mantis::ATTEMPTS_PER_HYPOTHESIS
+            }
+            _ => self.attempts,
+        }
+    }
+
+    /// Stable stream identifier for RNG derivation (`Pcg32::derive`).
+    /// Encodes every behaviour-shaping field *except* the attempt budget:
+    /// a budget-truncated variant draws the same stream as its full-budget
+    /// twin, so a 20-attempt run is exactly the 20-attempt prefix of the
+    /// 40-attempt run — the property the online scheduler's early stopping
+    /// and the replay-agreement tests rely on.
+    pub fn stream_id(&self) -> u64 {
+        let c = match self.controller {
+            ControllerKind::Mi => 0u64,
+            ControllerKind::InPromptSol => 1,
+            ControllerKind::OrchestratedSol => 2,
+        };
+        let t = match self.tier {
+            ModelTier::Mini => 0u64,
+            ModelTier::Mid => 1,
+            ModelTier::Max => 2,
+        };
+        (c << 8)
+            | (t << 4)
+            | ((self.dsl as u64) << 3)
+            | ((self.guardrails as u64) << 2)
+            | ((self.online_integrity as u64) << 1)
+    }
+
     pub fn label(&self) -> String {
         let base = match (self.controller, self.dsl) {
             (ControllerKind::Mi, false) => "MI".to_string(),
@@ -81,7 +120,10 @@ impl VariantSpec {
     }
 }
 
-/// Shared evaluation environment.
+/// Shared evaluation environment. `Copy` (it is three shared references):
+/// resumable sessions hold it by value so they can be moved freely across
+/// worker threads.
+#[derive(Clone, Copy)]
 pub struct Env<'a> {
     pub model: &'a PerfModel,
     pub problems: &'a [Problem],
@@ -106,14 +148,19 @@ pub struct AgentState {
     pub tokens: u64,
 }
 
-/// Gaming runtime: what the exploit's kernel actually costs.
+/// Gaming runtime: what the exploit's kernel actually costs. The
+/// write-only estimate is dtype-aware (out elements × the problem's
+/// declared dtype width), matching the integrity pipeline's dtype-aware
+/// SOL ceiling — a hardcoded 4 bytes/element would overestimate FP16
+/// problems' exploit cost by 2×.
 fn gaming_time_ms(
     model: &PerfModel,
     problem: &Problem,
     ty: GamingType,
     honest_best_ms: f64,
 ) -> f64 {
-    let out_bytes = problem.ops.last().map(|o| o.out_elems()).unwrap_or(1) * 4;
+    let out_bytes =
+        problem.ops.last().map(|o| o.out_elems()).unwrap_or(1) * problem.dtype.size();
     let write_only_ms = out_bytes as f64 / model.gpu.effective_bandwidth() * 1e3 + 0.003;
     match ty {
         GamingType::ConstantOutput | GamingType::BenchmarkInputExploitation => write_only_ms,
@@ -501,45 +548,19 @@ pub fn run_attempt(
     rec
 }
 
-/// Run the flat controllers (MI / in-prompt SOL) on one problem.
-/// Orchestrated MANTIS is dispatched to [`crate::mantis::run_orchestrated`].
+/// Run one problem to its full budget. Flat controllers (MI / in-prompt
+/// SOL) drive a [`super::session::FlatSession`] to exhaustion; orchestrated
+/// MANTIS is dispatched to [`crate::mantis::run_orchestrated`]. The online
+/// scheduler uses the same sessions but may stop stepping early — a run
+/// produced here is always the full-budget extension of any truncated
+/// session run (ADR-002).
 pub fn run_problem(env: &Env, spec: &VariantSpec, pidx: usize, seed: u64) -> ProblemRun {
-    match spec.controller {
-        ControllerKind::OrchestratedSol => {
-            return crate::mantis::run_orchestrated(env, spec, pidx, seed, None);
-        }
-        _ => {}
+    if spec.controller == ControllerKind::OrchestratedSol {
+        return crate::mantis::run_orchestrated(env, spec, pidx, seed, None);
     }
-    let mut rng = Pcg32::new(seed, (pidx as u64) << 8 | 1);
-    let mods = modifiers(spec);
-    let problem = &env.problems[pidx];
-    let t_ref = env.model.measure_baseline_ms(problem, &mut rng);
-    let mut state = AgentState {
-        best_time_ms: f64::INFINITY,
-        t_ref_ms: t_ref,
-        best_cfg: None,
-        gamed: None,
-        consecutive_failures: 0,
-        tokens: 0,
-    };
-    let steering = if mods.steered { Some(&env.sols[pidx]) } else { None };
-    // Per-problem plan cache: revisited candidate configurations skip
-    // re-lowering/re-generation (ADR-001).
-    let mut plans = dsl::PlanCache::new();
-    let mut attempts = Vec::with_capacity(spec.attempts as usize);
-    for a in 0..spec.attempts {
-        let rec = run_attempt(
-            env, spec, &mods, pidx, a, &mut state, steering, None, &mut plans, &mut rng,
-        );
-        attempts.push(rec);
-    }
-    ProblemRun {
-        problem_idx: pidx,
-        t_ref_ms: t_ref,
-        t_sol_ms: env.sols[pidx].t_sol_ms,
-        t_sol_fp16_ms: env.sols[pidx].t_sol_fp16_ms,
-        attempts,
-    }
+    let mut session = super::session::FlatSession::new(*env, spec, pidx, seed);
+    while session.step().is_some() {}
+    session.finish()
 }
 
 #[cfg(test)]

@@ -19,9 +19,11 @@ pub mod attempt;
 pub mod controller;
 pub mod policy;
 pub mod runlog;
+pub mod session;
 pub mod tiers;
 
 pub use attempt::{AttemptOutcome, AttemptRecord, GamingType, MinorIssueType, SolutionKind};
 pub use controller::{run_problem, ControllerKind, VariantSpec};
 pub use runlog::{ProblemRun, RunLog};
+pub use session::{FlatSession, ProblemSession, StepResult};
 pub use tiers::{ModelTier, TierParams};

@@ -7,7 +7,7 @@ use crate::util::json::Json;
 use super::attempt::{AttemptOutcome, AttemptRecord};
 
 /// All attempts for one problem under one variant.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct ProblemRun {
     pub problem_idx: usize,
     /// Measured PyTorch baseline (ms).
@@ -93,7 +93,7 @@ impl ProblemRun {
 }
 
 /// A complete run: one variant over the whole suite.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RunLog {
     /// Variant label, e.g. "µCUTLASS + SOL [gpt-5]".
     pub variant: String,

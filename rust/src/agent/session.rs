@@ -1,0 +1,303 @@
+//! Resumable per-problem agent sessions (ADR-002).
+//!
+//! A [`ProblemSession`] is one (variant, problem, seed) task turned into a
+//! state machine: every `step()` executes exactly one Generate–Compile–
+//! Test–Profile attempt and returns its observable outcome. Driving a
+//! session to exhaustion reproduces the classic fixed-budget loops
+//! ([`controller::run_problem`] / [`crate::mantis::run_orchestrated`])
+//! bit-for-bit; stopping earlier yields exactly the corresponding prefix
+//! of that run, because each attempt consumes the session's RNG stream in
+//! the same order regardless of when (or on which thread) the session is
+//! resumed. That prefix property is what lets the online scheduler
+//! (`scheduler::online`) realize SOL-headroom and no-progress savings
+//! *during* execution while offline `replay()` provably agrees.
+//!
+//! Sessions own all mutable state (RNG, agent state, plan cache, attempt
+//! log) and hold the shared environment by value ([`Env`] is `Copy`), so
+//! they are `Send` and can be fanned across the `exec` thread pool.
+
+use crate::dsl;
+use crate::sol::SolAnalysis;
+use crate::util::rng::{stream, Pcg32};
+
+use super::attempt::AttemptRecord;
+use super::controller::{modifiers, run_attempt, AgentState, Env, Modifiers, VariantSpec};
+use super::runlog::ProblemRun;
+
+/// The scheduler-visible outcome of one `step()`: enough to drive stopping
+/// rules and cost accounting without borrowing the session's attempt log.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepResult {
+    /// Attempt ordinal just executed (0-based).
+    pub attempt: u32,
+    /// Measured time when the attempt passed correctness.
+    pub time_ms: Option<f64>,
+    /// LLM tokens the attempt consumed.
+    pub tokens: u64,
+}
+
+/// Resumable flat-controller session (MI / in-prompt SOL): the 40-iteration
+/// loop of `run_problem`, one attempt per `step()`.
+pub struct FlatSession<'a> {
+    env: Env<'a>,
+    spec: VariantSpec,
+    mods: Modifiers,
+    pidx: usize,
+    rng: Pcg32,
+    state: AgentState,
+    plans: dsl::PlanCache,
+    attempts: Vec<AttemptRecord>,
+    t_ref_ms: f64,
+}
+
+impl<'a> FlatSession<'a> {
+    pub fn new(env: Env<'a>, spec: &VariantSpec, pidx: usize, seed: u64) -> Self {
+        let mut rng =
+            Pcg32::derive(seed, &[stream::FLAT_CONTROLLER, spec.stream_id(), pidx as u64]);
+        let mods = modifiers(spec);
+        let t_ref_ms = env.model.measure_baseline_ms(&env.problems[pidx], &mut rng);
+        let state = AgentState {
+            best_time_ms: f64::INFINITY,
+            t_ref_ms,
+            best_cfg: None,
+            gamed: None,
+            consecutive_failures: 0,
+            tokens: 0,
+        };
+        FlatSession {
+            env,
+            spec: *spec,
+            mods,
+            pidx,
+            rng,
+            state,
+            // Per-problem plan cache: revisited candidate configurations
+            // skip re-lowering/re-generation (ADR-001).
+            plans: dsl::PlanCache::new(),
+            attempts: Vec::with_capacity(spec.attempts as usize),
+            t_ref_ms,
+        }
+    }
+
+    /// Execute one attempt; `None` once the per-problem budget is spent.
+    pub fn step(&mut self) -> Option<StepResult> {
+        if self.attempts.len() >= self.spec.attempts as usize {
+            return None;
+        }
+        let attempt_no = self.attempts.len() as u32;
+        let steering: Option<&'a SolAnalysis> =
+            if self.mods.steered { Some(&self.env.sols[self.pidx]) } else { None };
+        let rec = run_attempt(
+            &self.env,
+            &self.spec,
+            &self.mods,
+            self.pidx,
+            attempt_no,
+            &mut self.state,
+            steering,
+            None,
+            &mut self.plans,
+            &mut self.rng,
+        );
+        let result =
+            StepResult { attempt: attempt_no, time_ms: rec.outcome.time_ms(), tokens: rec.tokens };
+        self.attempts.push(rec);
+        Some(result)
+    }
+
+    pub fn attempts_done(&self) -> usize {
+        self.attempts.len()
+    }
+
+    pub fn t_ref_ms(&self) -> f64 {
+        self.t_ref_ms
+    }
+
+    pub fn finish(self) -> ProblemRun {
+        ProblemRun {
+            problem_idx: self.pidx,
+            t_ref_ms: self.t_ref_ms,
+            t_sol_ms: self.env.sols[self.pidx].t_sol_ms,
+            t_sol_fp16_ms: self.env.sols[self.pidx].t_sol_fp16_ms,
+            attempts: self.attempts,
+        }
+    }
+}
+
+/// Controller-agnostic resumable session: the unit the online scheduler
+/// and the parallel engine operate on.
+///
+/// Orchestrated sessions own a per-session [`crate::mantis::CrossMemory`]
+/// (fresh by default, matching `run_problem`'s semantics). The sequential
+/// cross-problem memory chain of `experiments::runner::run_variant` is
+/// inherently order-dependent and therefore not available through this
+/// interface — see ADR-002 for the determinism boundary.
+pub enum ProblemSession<'a> {
+    Flat(FlatSession<'a>),
+    Mantis(crate::mantis::MantisSession<'a>),
+}
+
+impl<'a> ProblemSession<'a> {
+    pub fn new(env: Env<'a>, spec: &VariantSpec, pidx: usize, seed: u64) -> Self {
+        use super::controller::ControllerKind;
+        match spec.controller {
+            ControllerKind::OrchestratedSol => {
+                ProblemSession::Mantis(crate::mantis::MantisSession::new(
+                    env,
+                    spec,
+                    pidx,
+                    seed,
+                    crate::mantis::MantisConfig::default(),
+                    crate::mantis::CrossMemory::default(),
+                ))
+            }
+            _ => ProblemSession::Flat(FlatSession::new(env, spec, pidx, seed)),
+        }
+    }
+
+    /// Execute one attempt; `None` once the session's budget is exhausted.
+    pub fn step(&mut self) -> Option<StepResult> {
+        match self {
+            ProblemSession::Flat(s) => s.step(),
+            ProblemSession::Mantis(s) => s.step(),
+        }
+    }
+
+    pub fn attempts_done(&self) -> usize {
+        match self {
+            ProblemSession::Flat(s) => s.attempts_done(),
+            ProblemSession::Mantis(s) => s.attempts_done(),
+        }
+    }
+
+    pub fn pidx(&self) -> usize {
+        match self {
+            ProblemSession::Flat(s) => s.pidx,
+            ProblemSession::Mantis(s) => s.pidx(),
+        }
+    }
+
+    /// Measured PyTorch baseline for this problem (ms).
+    pub fn t_ref_ms(&self) -> f64 {
+        match self {
+            ProblemSession::Flat(s) => s.t_ref_ms(),
+            ProblemSession::Mantis(s) => s.t_ref_ms(),
+        }
+    }
+
+    /// FP16-augmented SOL bound (ms) — the online stopping ceiling.
+    pub fn t_sol_fp16_ms(&self) -> f64 {
+        let (env, pidx) = match self {
+            ProblemSession::Flat(s) => (&s.env, s.pidx),
+            ProblemSession::Mantis(s) => (s.env(), s.pidx()),
+        };
+        env.sols[pidx].t_sol_fp16_ms
+    }
+
+    pub fn finish(self) -> ProblemRun {
+        match self {
+            ProblemSession::Flat(s) => s.finish(),
+            ProblemSession::Mantis(s) => s.finish().0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::controller::{run_problem, ControllerKind};
+    use crate::agent::ModelTier;
+    use crate::kernelbench::suite;
+    use crate::perfmodel::PerfModel;
+    use crate::sol::{analyze, H100_SXM};
+
+    struct Fixture {
+        model: PerfModel,
+        problems: Vec<crate::kernelbench::Problem>,
+        sols: Vec<crate::sol::SolAnalysis>,
+    }
+
+    impl Fixture {
+        fn new() -> Self {
+            let problems = suite();
+            let sols = problems.iter().map(|p| analyze(p, &H100_SXM)).collect();
+            Fixture { model: PerfModel::new(H100_SXM.clone()), problems, sols }
+        }
+
+        fn env(&self) -> Env<'_> {
+            Env { model: &self.model, problems: &self.problems, sols: &self.sols }
+        }
+    }
+
+    #[test]
+    fn session_determinism_stepping_equals_run_problem() {
+        let fx = Fixture::new();
+        let env = fx.env();
+        for spec in [
+            VariantSpec::new(ControllerKind::Mi, true, ModelTier::Mid),
+            VariantSpec::new(ControllerKind::InPromptSol, false, ModelTier::Max),
+            VariantSpec::new(ControllerKind::OrchestratedSol, true, ModelTier::Mini),
+        ] {
+            let full = run_problem(&env, &spec, 2, 31);
+            let mut s = ProblemSession::new(env, &spec, 2, 31);
+            let mut steps = 0;
+            while s.step().is_some() {
+                steps += 1;
+            }
+            let stepped = s.finish();
+            assert_eq!(steps, full.attempts.len(), "{}", spec.label());
+            assert_eq!(stepped, full, "stepped session must equal the loop: {}", spec.label());
+        }
+    }
+
+    #[test]
+    fn session_truncation_is_a_prefix_of_the_full_run() {
+        let fx = Fixture::new();
+        let env = fx.env();
+        let spec = VariantSpec::new(ControllerKind::InPromptSol, true, ModelTier::Mid);
+        let full = run_problem(&env, &spec, 0, 9);
+        for cut in [1usize, 7, 23] {
+            let mut s = ProblemSession::new(env, &spec, 0, 9);
+            for _ in 0..cut {
+                assert!(s.step().is_some());
+            }
+            let run = s.finish();
+            assert_eq!(run.attempts.len(), cut);
+            assert_eq!(run.attempts[..], full.attempts[..cut], "cut={cut}");
+            assert_eq!(run.t_ref_ms, full.t_ref_ms);
+        }
+    }
+
+    #[test]
+    fn step_result_mirrors_the_recorded_attempt() {
+        let fx = Fixture::new();
+        let env = fx.env();
+        let spec = VariantSpec::new(ControllerKind::Mi, true, ModelTier::Max);
+        let mut s = ProblemSession::new(env, &spec, 1, 5);
+        let mut results = Vec::new();
+        while let Some(r) = s.step() {
+            results.push(r);
+        }
+        let run = s.finish();
+        assert_eq!(results.len(), run.attempts.len());
+        for (r, a) in results.iter().zip(&run.attempts) {
+            assert_eq!(r.attempt, a.attempt);
+            assert_eq!(r.time_ms, a.outcome.time_ms());
+            assert_eq!(r.tokens, a.tokens);
+        }
+    }
+
+    #[test]
+    fn budget_truncated_variant_shares_the_stream() {
+        // spec.attempts is excluded from stream_id(): a 12-attempt variant
+        // must produce exactly the first 12 attempts of the 40-attempt one
+        let fx = Fixture::new();
+        let env = fx.env();
+        let full_spec = VariantSpec::new(ControllerKind::Mi, true, ModelTier::Mid);
+        let mut short_spec = full_spec;
+        short_spec.attempts = 12;
+        let full = run_problem(&env, &full_spec, 4, 77);
+        let short = run_problem(&env, &short_spec, 4, 77);
+        assert_eq!(short.attempts[..], full.attempts[..12]);
+    }
+}

@@ -1,0 +1,201 @@
+//! Deterministic parallel execution engine (ADR-002).
+//!
+//! Fans independent (variant, problem, seed) evaluation tasks across the
+//! std-only work-stealing [`pool`] while producing output **bit-identical
+//! to the serial path**. Determinism comes from three rules:
+//!
+//! 1. every task derives a private RNG stream from its identity
+//!    (`Pcg32::derive(seed, &[root, variant_id, pidx])`) — no task ever
+//!    reads another task's draws;
+//! 2. results are collected by task index, never by completion order;
+//! 3. work with a genuine sequential dependency — the orchestrated
+//!    controller's cross-problem memory chain — is *not* split: it runs as
+//!    one task (parallelism then comes from other variants in the eval).
+//!
+//! `figures.rs`, `examples/full_eval.rs`, and the `repro` CLI all route
+//! their suite evaluations through here; `--jobs N` selects the worker
+//! count (`0` = all cores, `1` = the serial reference path).
+
+pub mod pool;
+
+pub use pool::{effective_jobs, parallel_map};
+
+use crate::agent::controller::{run_problem, ControllerKind, Env, VariantSpec};
+use crate::agent::{ProblemRun, RunLog};
+use crate::experiments::runner::{run_variant, Bench};
+use crate::mantis::{run_orchestrated, CrossMemory, MantisConfig};
+
+/// Can this variant's per-problem tasks run independently? Only the
+/// orchestrated controller with cross-problem memory enabled has a
+/// sequential dependency between problems.
+fn problems_independent(spec: &VariantSpec, cfg: Option<&MantisConfig>) -> bool {
+    spec.controller != ControllerKind::OrchestratedSol
+        || !cfg.map(|c| c.cross_memory).unwrap_or(true)
+}
+
+/// One independent (variant, problem) task — must match what the serial
+/// `run_variant` does per problem so the engine is bit-identical to it.
+fn run_one(
+    env: &Env,
+    spec: &VariantSpec,
+    cfg: Option<&MantisConfig>,
+    pidx: usize,
+    seed: u64,
+) -> ProblemRun {
+    match spec.controller {
+        ControllerKind::OrchestratedSol => {
+            let c = cfg.copied().unwrap_or_default();
+            let mut fresh = CrossMemory::default();
+            run_orchestrated(env, spec, pidx, seed, Some((&c, &mut fresh)))
+        }
+        _ => run_problem(env, spec, pidx, seed),
+    }
+}
+
+fn assemble(spec: &VariantSpec, runs: Vec<ProblemRun>) -> RunLog {
+    RunLog {
+        variant: spec.label(),
+        tier_name: spec.tier.name().to_string(),
+        price_per_mtok: spec.tier.params().price_per_mtok,
+        runs,
+    }
+}
+
+/// Parallel [`run_variant`]: identical output, `jobs` workers. Variants
+/// whose problems are sequentially coupled (orchestrated + cross-memory)
+/// fall back to the serial path — splitting them would change results.
+pub fn run_variant_jobs(
+    bench: &Bench,
+    spec: &VariantSpec,
+    seed: u64,
+    mantis_cfg: Option<&MantisConfig>,
+    jobs: usize,
+) -> RunLog {
+    if jobs == 1 || !problems_independent(spec, mantis_cfg) {
+        return run_variant(bench, spec, seed, mantis_cfg);
+    }
+    let env = bench.env();
+    let runs = parallel_map(jobs, bench.problems.len(), |pidx| {
+        run_one(&env, spec, mantis_cfg, pidx, seed)
+    });
+    assemble(spec, runs)
+}
+
+/// Evaluate several variants over the whole suite, fanning every
+/// independent (variant, problem) pair across the pool. Sequentially
+/// coupled variants contribute one whole-variant task each, so a
+/// multi-variant eval still parallelizes around them. Output is
+/// bit-identical to mapping [`run_variant`] over `work` serially.
+pub fn eval_variants(
+    bench: &Bench,
+    work: &[(VariantSpec, Option<MantisConfig>)],
+    seed: u64,
+    jobs: usize,
+) -> Vec<RunLog> {
+    if jobs == 1 {
+        return work
+            .iter()
+            .map(|(spec, cfg)| run_variant(bench, spec, seed, cfg.as_ref()))
+            .collect();
+    }
+
+    #[derive(Clone, Copy)]
+    enum Task {
+        One { v: usize, p: usize },
+        Whole { v: usize },
+    }
+    let mut tasks = Vec::new();
+    for (v, (spec, cfg)) in work.iter().enumerate() {
+        if problems_independent(spec, cfg.as_ref()) {
+            for p in 0..bench.problems.len() {
+                tasks.push(Task::One { v, p });
+            }
+        } else {
+            tasks.push(Task::Whole { v });
+        }
+    }
+
+    enum Done {
+        One(usize, ProblemRun),
+        Whole(usize, RunLog),
+    }
+    let env = bench.env();
+    let results = parallel_map(jobs, tasks.len(), |i| match tasks[i] {
+        Task::One { v, p } => {
+            let (spec, cfg) = &work[v];
+            Done::One(v, run_one(&env, spec, cfg.as_ref(), p, seed))
+        }
+        Task::Whole { v } => {
+            let (spec, cfg) = &work[v];
+            Done::Whole(v, run_variant(bench, spec, seed, cfg.as_ref()))
+        }
+    });
+
+    // Reassemble in variant order; per-variant tasks were emitted in
+    // problem order and parallel_map preserves task order.
+    let mut per_variant: Vec<Vec<ProblemRun>> = (0..work.len()).map(|_| Vec::new()).collect();
+    let mut whole: Vec<Option<RunLog>> = (0..work.len()).map(|_| None).collect();
+    for r in results {
+        match r {
+            Done::One(v, run) => per_variant[v].push(run),
+            Done::Whole(v, log) => whole[v] = Some(log),
+        }
+    }
+    work.iter()
+        .enumerate()
+        .map(|(v, (spec, _))| match whole[v].take() {
+            Some(log) => log,
+            None => assemble(spec, std::mem::take(&mut per_variant[v])),
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::ModelTier;
+    use crate::experiments::runner::main_variants;
+
+    #[test]
+    fn parallel_engine_determinism_flat_variant() {
+        let bench = Bench::new();
+        let spec = VariantSpec::new(ControllerKind::InPromptSol, true, ModelTier::Mid);
+        let serial = run_variant(&bench, &spec, 7, None);
+        let par = run_variant_jobs(&bench, &spec, 7, None, 4);
+        assert_eq!(par, serial, "jobs=4 must be bit-identical to the serial path");
+        // and the JSON artifact (what experiments persist) is byte-equal
+        assert_eq!(par.to_json().to_string(), serial.to_json().to_string());
+    }
+
+    #[test]
+    fn parallel_engine_determinism_orchestrated_fallback() {
+        // default MANTIS config has cross-problem memory on: the engine
+        // must keep the sequential chain and still match exactly
+        let bench = Bench::new();
+        let spec = VariantSpec::new(ControllerKind::OrchestratedSol, false, ModelTier::Mini);
+        let serial = run_variant(&bench, &spec, 3, None);
+        let par = run_variant_jobs(&bench, &spec, 3, None, 4);
+        assert_eq!(par, serial);
+    }
+
+    #[test]
+    fn parallel_engine_determinism_orchestrated_no_xmem() {
+        let bench = Bench::new();
+        let spec = VariantSpec::new(ControllerKind::OrchestratedSol, true, ModelTier::Mini);
+        let cfg = MantisConfig::ablation("MANTIS-noXmem");
+        let serial = run_variant(&bench, &spec, 11, Some(&cfg));
+        let par = run_variant_jobs(&bench, &spec, 11, Some(&cfg), 3);
+        assert_eq!(par, serial);
+    }
+
+    #[test]
+    fn eval_variants_determinism_mixed_work() {
+        let bench = Bench::new();
+        let work: Vec<(VariantSpec, Option<MantisConfig>)> =
+            main_variants(ModelTier::Mini).into_iter().map(|s| (s, None)).collect();
+        let serial = eval_variants(&bench, &work, 5, 1);
+        let par = eval_variants(&bench, &work, 5, 4);
+        assert_eq!(serial.len(), work.len());
+        assert_eq!(par, serial, "mixed per-problem + whole-variant tasks must reassemble exactly");
+    }
+}

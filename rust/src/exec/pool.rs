@@ -1,0 +1,156 @@
+//! Std-only work-stealing task pool (ADR-002).
+//!
+//! rayon/crossbeam are not in the offline vendor set, so this is built
+//! from `std::thread::scope` plus per-worker `Mutex<VecDeque>` queues:
+//! each worker starts with a contiguous chunk of the task index space,
+//! pops its own queue from the front, and — once empty — steals from the
+//! *back* of a victim's queue (classic Chase–Lev discipline, minus the
+//! lock-free part: tasks here are whole agent sessions, microseconds to
+//! milliseconds each, so a mutex per pop is noise).
+//!
+//! Determinism: tasks are identified by index, results land in their
+//! index's slot, and every task derives its own RNG stream from its
+//! identity (`Pcg32::derive`) rather than sharing a sequential generator —
+//! so the output is a pure function of the task list, independent of
+//! worker count, stealing order, and thread interleaving.
+
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// Resolve a requested job count: `0` means "use all available cores".
+pub fn effective_jobs(requested: usize) -> usize {
+    if requested > 0 {
+        requested
+    } else {
+        std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+    }
+}
+
+/// Apply `f` to every index in `0..n` using up to `jobs` worker threads
+/// and return the results in index order. `jobs <= 1` runs inline with no
+/// threads (the serial reference path). Panics in `f` propagate.
+pub fn parallel_map<R, F>(jobs: usize, n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let jobs = effective_jobs(jobs).min(n.max(1));
+    if jobs <= 1 {
+        return (0..n).map(f).collect();
+    }
+
+    // Contiguous initial chunks: worker w owns [w*n/jobs, (w+1)*n/jobs).
+    let queues: Vec<Mutex<VecDeque<usize>>> = (0..jobs)
+        .map(|w| Mutex::new((w * n / jobs..(w + 1) * n / jobs).collect()))
+        .collect();
+    let queues = &queues;
+    let f = &f;
+
+    let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = (0..jobs)
+            .map(|w| {
+                s.spawn(move || {
+                    let mut done: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        // own queue first (front: cache-friendly order)…
+                        let mut task = queues[w].lock().unwrap().pop_front();
+                        // …then steal from the back of the first non-empty
+                        // victim. No task ever re-enqueues, so a full idle
+                        // scan means this worker is permanently done.
+                        if task.is_none() {
+                            for off in 1..jobs {
+                                let v = (w + off) % jobs;
+                                if let Some(t) = queues[v].lock().unwrap().pop_back() {
+                                    task = Some(t);
+                                    break;
+                                }
+                            }
+                        }
+                        match task {
+                            Some(i) => done.push((i, f(i))),
+                            None => break,
+                        }
+                    }
+                    done
+                })
+            })
+            .collect();
+        for h in handles {
+            for (i, r) in h.join().expect("pool worker panicked") {
+                out[i] = Some(r);
+            }
+        }
+    });
+    out.into_iter().map(|r| r.expect("every task index produces a result")).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn matches_serial_in_order() {
+        let serial: Vec<u64> = (0..257).map(|i| (i as u64) * (i as u64) + 7).collect();
+        for jobs in [1, 2, 4, 9] {
+            let par = parallel_map(jobs, 257, |i| (i as u64) * (i as u64) + 7);
+            assert_eq!(par, serial, "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn runs_every_task_exactly_once() {
+        let n = 500;
+        let count = AtomicUsize::new(0);
+        let out = parallel_map(4, n, |i| {
+            count.fetch_add(1, Ordering::SeqCst);
+            i
+        });
+        assert_eq!(count.load(Ordering::SeqCst), n);
+        assert_eq!(out, (0..n).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn stealing_balances_skewed_tasks() {
+        // all heavy tasks land in worker 0's initial chunk; with stealing
+        // the wall clock must be well under the serial sum
+        let heavy_iters = 3_000_000u64;
+        let work = |iters: u64| {
+            let mut x = 1u64;
+            for i in 0..iters {
+                x = x.wrapping_mul(6364136223846793005).wrapping_add(i);
+            }
+            x
+        };
+        let t0 = std::time::Instant::now();
+        let serial: Vec<u64> =
+            parallel_map(1, 8, |i| work(if i < 4 { heavy_iters } else { 1 }));
+        let t_serial = t0.elapsed();
+        let t1 = std::time::Instant::now();
+        let par: Vec<u64> = parallel_map(4, 8, |i| work(if i < 4 { heavy_iters } else { 1 }));
+        let t_par = t1.elapsed();
+        assert_eq!(par, serial);
+        // generous bound: stealing should reclaim most of the idle time,
+        // but only when the machine actually has spare cores
+        if effective_jobs(0) >= 2 {
+            assert!(
+                t_par < t_serial,
+                "parallel ({t_par:?}) should beat serial ({t_serial:?}) on skewed load"
+            );
+        }
+    }
+
+    #[test]
+    fn zero_and_tiny_inputs() {
+        let empty: Vec<usize> = parallel_map(4, 0, |i| i);
+        assert!(empty.is_empty());
+        assert_eq!(parallel_map(8, 1, |i| i + 1), vec![1]);
+    }
+
+    #[test]
+    fn effective_jobs_resolution() {
+        assert_eq!(effective_jobs(3), 3);
+        assert!(effective_jobs(0) >= 1);
+    }
+}

@@ -12,7 +12,7 @@ use crate::agent::controller::Env;
 use crate::agent::{AttemptOutcome, AttemptRecord, GamingType, SolutionKind};
 use crate::integrity::IntegrityPipeline;
 use crate::perfmodel::CandidateConfig;
-use crate::util::rng::Pcg32;
+use crate::util::rng::{stream, Pcg32};
 
 /// One archived kernel for a problem.
 #[derive(Debug, Clone)]
@@ -60,7 +60,7 @@ pub fn generate_archive(
     params: &EvoParams,
     seed: u64,
 ) -> Vec<ArchivedKernel> {
-    let mut rng = Pcg32::new(seed ^ 0x5a5a, pidx as u64 | 1);
+    let mut rng = Pcg32::derive(seed, &[stream::ARCHIVE_GEN, pidx as u64]);
     let problem = &env.problems[pidx];
     if rng.chance(params.missing_rate) {
         return vec![]; // no correct kernel in the archive for this problem
@@ -159,7 +159,7 @@ pub fn review_archive(
     let t_sol_fp16 = env.sols[pidx].t_sol_fp16_ms;
     let mut sorted: Vec<&ArchivedKernel> = kernels.iter().collect();
     sorted.sort_by(|a, b| a.time_ms.partial_cmp(&b.time_ms).unwrap());
-    let mut rng = Pcg32::new(seed ^ 0xA5C4, pidx as u64 | 1);
+    let mut rng = Pcg32::derive(seed, &[stream::ARCHIVE_REVIEW, pidx as u64]);
     let mut reviewed = 0;
     for k in sorted {
         reviewed += 1;

@@ -15,7 +15,7 @@ use crate::scheduler::{self, Policy};
 use crate::util::stats;
 
 use super::archive::{generate_archive, review_archive, EvoParams};
-use super::runner::{main_variants, run_variant, Bench};
+use super::runner::{main_variants, Bench};
 
 /// Shared experiment context with a run-log cache (several figures reuse
 /// the same variant runs).
@@ -25,6 +25,9 @@ pub struct ExpCtx {
     pub seed: u64,
     pub review_seed: u64,
     pub pipeline: IntegrityPipeline,
+    /// Worker threads for suite evaluation (1 = serial reference path;
+    /// results are bit-identical either way, see `exec`).
+    pub jobs: usize,
     cache: BTreeMap<String, RunLog>,
 }
 
@@ -36,8 +39,15 @@ impl ExpCtx {
             seed,
             review_seed: seed ^ 0xBEEF,
             pipeline: IntegrityPipeline::default(),
+            jobs: 1,
             cache: BTreeMap::new(),
         }
+    }
+
+    /// Select the worker count for suite evaluation (0 = all cores).
+    pub fn with_jobs(mut self, jobs: usize) -> Self {
+        self.jobs = crate::exec::effective_jobs(jobs);
+        self
     }
 
     fn key(spec: &VariantSpec, seed: u64, cfg: Option<&MantisConfig>) -> String {
@@ -52,7 +62,7 @@ impl ExpCtx {
     pub fn log_seeded(&mut self, spec: &VariantSpec, seed: u64, cfg: Option<&MantisConfig>) -> &RunLog {
         let key = Self::key(spec, seed, cfg);
         if !self.cache.contains_key(&key) {
-            let log = run_variant(&self.bench, spec, seed, cfg);
+            let log = crate::exec::run_variant_jobs(&self.bench, spec, seed, cfg, self.jobs);
             self.cache.insert(key.clone(), log);
         }
         self.cache.get(&key).unwrap()

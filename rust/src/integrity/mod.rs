@@ -19,7 +19,7 @@
 
 use crate::agent::{AttemptRecord, ProblemRun, SolutionKind};
 use crate::perfmodel::ncu::is_library_kernel;
-use crate::util::rng::Pcg32;
+use crate::util::rng::{stream, Pcg32};
 
 /// Review outcome (the six bands of Figure 10).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -147,7 +147,8 @@ impl IntegrityPipeline {
 
     /// Label every attempt of a run (deterministic given the seed).
     pub fn review_run(&self, run: &ProblemRun, seed: u64) -> Vec<ReviewLabel> {
-        let mut rng = Pcg32::new(seed ^ 0x1234_5678, run.problem_idx as u64 | 1);
+        let mut rng =
+            Pcg32::derive(seed, &[stream::INTEGRITY_REVIEW, run.problem_idx as u64]);
         run.attempts
             .iter()
             .map(|a| self.label(a, run.t_sol_ms, run.t_sol_fp16_ms, &mut rng))
@@ -170,6 +171,19 @@ impl IntegrityPipeline {
         self.filtered_best_ms(run, seed).map(|t| run.t_ref_ms / t)
     }
 
+    /// Integrity-filtered geomean speedup of a whole run log (1.0 fallback
+    /// per unsolved problem) — the one headline aggregation every
+    /// reporting surface (CLI, examples, figures) must compute the same
+    /// way.
+    pub fn filtered_geomean(&self, log: &crate::agent::RunLog, seed: u64) -> f64 {
+        let speedups: Vec<f64> = log
+            .runs
+            .iter()
+            .map(|r| self.filtered_speedup(r, seed).unwrap_or(1.0))
+            .collect();
+        crate::metrics::geomean_speedup(&speedups)
+    }
+
     /// Filtered speedup over only the first `prefix` attempts, without
     /// cloning the run (the scheduler-replay hot path: one call per policy
     /// per problem). Labels are deterministic per attempt given the seed,
@@ -180,7 +194,10 @@ impl IntegrityPipeline {
         seed: u64,
         prefix: usize,
     ) -> Option<f64> {
-        let mut rng = Pcg32::new(seed ^ 0x1234_5678, run.problem_idx as u64 | 1);
+        // must mirror `review_run`'s derivation: labels are per-attempt
+        // deterministic, so reviewing a prefix equals truncate-then-review
+        let mut rng =
+            Pcg32::derive(seed, &[stream::INTEGRITY_REVIEW, run.problem_idx as u64]);
         run.attempts
             .iter()
             .take(prefix)

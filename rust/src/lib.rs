@@ -22,7 +22,12 @@
 //! * [`mantis`] — the orchestrated Measure–Analyze–Nominate–Triage–
 //!   Implement–Summarize controller with gap-aware ROI triage (paper §4.2).
 //! * [`scheduler`] — SOL-guided budget scheduling: ε/w eligibility rules,
-//!   offline replay, Pareto frontiers, efficiency gain (paper §4.3, §6.2).
+//!   an online breadth-first round-robin engine that applies them *during*
+//!   execution, offline replay that provably agrees with it, Pareto
+//!   frontiers, efficiency gain (paper §4.3, §6.2).
+//! * [`exec`] — deterministic parallel execution: a std-only work-stealing
+//!   pool fanning independent (variant, problem, seed) tasks across cores
+//!   with bit-identical output to the serial path (ADR-002).
 //! * [`integrity`] — SOL-ceiling, LLM-game-detector and PyTorch-only
 //!   detectors with the full label taxonomy (paper §4.4, §6.3).
 //! * [`metrics`] — Fast-p / Attempt-Fast-p curves, signed area, retention.
@@ -41,6 +46,7 @@ pub mod perfmodel;
 pub mod agent;
 pub mod mantis;
 pub mod scheduler;
+pub mod exec;
 pub mod integrity;
 pub mod metrics;
 pub mod runtime;

@@ -19,8 +19,9 @@ use std::process::ExitCode;
 
 use ucutlass_repro::agent::controller::{ControllerKind, VariantSpec};
 use ucutlass_repro::agent::ModelTier;
+use ucutlass_repro::exec;
 use ucutlass_repro::experiments::figures::{self, ExpCtx};
-use ucutlass_repro::experiments::{run_variant, Bench};
+use ucutlass_repro::experiments::Bench;
 use ucutlass_repro::integrity::IntegrityPipeline;
 use ucutlass_repro::kernelbench;
 use ucutlass_repro::metrics;
@@ -74,13 +75,16 @@ fn tier_of(s: &str) -> Result<ModelTier, String> {
 fn run(args: &[String]) -> Result<(), String> {
     let (pos, opts) = parse_opts(args);
     let seed: u64 = opts.get("seed").and_then(|s| s.parse().ok()).unwrap_or(12345);
+    // --jobs N worker threads for suite evaluation (0 = all cores).
+    // Results are bit-identical at any job count (ADR-002).
+    let jobs: usize = opts.get("jobs").and_then(|s| s.parse().ok()).unwrap_or(1);
     match pos.first().map(String::as_str) {
-        Some("exp") => cmd_exp(&pos, &opts, seed),
+        Some("exp") => cmd_exp(&pos, &opts, seed, jobs),
         Some("sol") => cmd_sol(&pos),
         Some("dsl") => cmd_dsl(&pos, &opts),
-        Some("run") => cmd_run(&pos, &opts, seed),
+        Some("run") => cmd_run(&pos, &opts, seed, jobs),
         Some("validate") => cmd_validate(&opts, seed),
-        Some("schedule") => cmd_schedule(&opts, seed),
+        Some("schedule") => cmd_schedule(&opts, seed, jobs),
         Some("list") => cmd_list(),
         _ => {
             println!("{}", HELP);
@@ -93,20 +97,28 @@ const HELP: &str = "\
 repro — µCUTLASS + SOL-guidance reproduction (see README.md)
 
   repro exp <fig3|fig4|fig5|fig6|fig7|fig8|fig9|fig10|fig11|fig12|fig13|fig14|tab4|ext1|ext2|all>
-            [--out results] [--seed N]
+            [--out results] [--seed N] [--jobs N]
   repro sol <problem-id>               e.g. repro sol L1-1
   repro dsl compile <file|->           [--dims MxNxK]
   repro dsl coverage
   repro run --tier <mini|mid|max> [--dsl] [--sol <orch|prompt>]
-            [--problems L1-1,L2-76] [--seed N]
+            [--problems L1-1,L2-76] [--seed N] [--jobs N]
   repro validate [--artifacts artifacts] [--problem NAME] [--seed N]
-  repro schedule --tier <mini|mid|max> [--eps 100] [--window 8] [--seed N]
-  repro list";
+  repro schedule --tier <mini|mid|max> [--eps 100] [--window 8] [--seed N] [--jobs N]
+  repro list
 
-fn cmd_exp(pos: &[String], opts: &HashMap<String, String>, seed: u64) -> Result<(), String> {
+  --jobs N fans (variant, problem, seed) tasks across N worker threads
+  (0 = all cores); output is bit-identical to --jobs 1.";
+
+fn cmd_exp(
+    pos: &[String],
+    opts: &HashMap<String, String>,
+    seed: u64,
+    jobs: usize,
+) -> Result<(), String> {
     let which = pos.get(1).map(String::as_str).unwrap_or("all");
     let out = opts.get("out").cloned().unwrap_or_else(|| "results".into());
-    let mut ctx = ExpCtx::new(&out, seed);
+    let mut ctx = ExpCtx::new(&out, seed).with_jobs(jobs);
     let text = match which {
         "fig3" => figures::fig3(&mut ctx),
         "fig4" => figures::fig4(&mut ctx),
@@ -203,7 +215,12 @@ fn cmd_dsl(pos: &[String], opts: &HashMap<String, String>) -> Result<(), String>
     }
 }
 
-fn cmd_run(_pos: &[String], opts: &HashMap<String, String>, seed: u64) -> Result<(), String> {
+fn cmd_run(
+    _pos: &[String],
+    opts: &HashMap<String, String>,
+    seed: u64,
+    jobs: usize,
+) -> Result<(), String> {
     let tier = tier_of(opts.get("tier").map(String::as_str).unwrap_or("mini"))?;
     let dsl_on = opts.contains_key("dsl");
     let controller = match opts.get("sol").map(String::as_str) {
@@ -223,7 +240,7 @@ fn cmd_run(_pos: &[String], opts: &HashMap<String, String>, seed: u64) -> Result
             .collect::<Result<_, _>>()?,
         None => (0..bench.problems.len()).collect(),
     };
-    let log = run_variant(&bench, &spec, seed, None);
+    let log = exec::run_variant_jobs(&bench, &spec, seed, None, jobs);
     let pipeline = IntegrityPipeline::default();
     let mut rows = Vec::new();
     let mut speedups = Vec::new();
@@ -300,11 +317,11 @@ fn cmd_validate(opts: &HashMap<String, String>, seed: u64) -> Result<(), String>
     Ok(())
 }
 
-fn cmd_schedule(opts: &HashMap<String, String>, seed: u64) -> Result<(), String> {
+fn cmd_schedule(opts: &HashMap<String, String>, seed: u64, jobs: usize) -> Result<(), String> {
     let tier = tier_of(opts.get("tier").map(String::as_str).unwrap_or("max"))?;
     let spec = VariantSpec::new(ControllerKind::OrchestratedSol, true, tier);
     let bench = Bench::new();
-    let log = run_variant(&bench, &spec, seed, None);
+    let env = bench.env();
     let pipeline = IntegrityPipeline::default();
     let policy = Policy {
         epsilon: opts
@@ -314,14 +331,52 @@ fn cmd_schedule(opts: &HashMap<String, String>, seed: u64) -> Result<(), String>
             .unwrap_or(1.0),
         window: opts.get("window").and_then(|s| s.parse().ok()).unwrap_or(0),
     };
-    let r = scheduler::replay(&log, &policy, &pipeline, seed);
+
+    // Online: the policy runs *during* execution (realized savings) …
+    let online = scheduler::run_online(&env, &spec, seed, &policy, jobs);
+    // … measured against a full fixed-budget run of the same (variant, seed).
+    let fixed = scheduler::run_online(&env, &spec, seed, &Policy::fixed(), jobs);
+    // The online engine runs orchestrated sessions with per-problem memory
+    // (round-robin has no defined cross-problem order, ADR-002), so these
+    // numbers are not comparable to `repro exp` figures, which thread
+    // MANTIS memory across problems sequentially.
+    println!("note: orchestrated sessions use per-problem memory (no cross-problem chain)");
+    let geo = |log: &ucutlass_repro::agent::RunLog| pipeline.filtered_geomean(log, seed);
     println!("variant: {}   policy: {}", spec.label(), policy.label());
     println!(
-        "token savings {:.0}%  attempt savings {:.0}%  geomean retention {:.0}%  efficiency gain {:.2}x",
-        r.token_savings() * 100.0,
-        r.attempt_savings(40) * 100.0,
-        r.geomean_retention() * 100.0,
-        r.efficiency_gain()
+        "online:  {} of {} attempts ({:.0}% saved, {} problems stopped early)",
+        online.attempts_total(),
+        fixed.attempts_total(),
+        online.attempt_savings() * 100.0,
+        online.stopped_early()
+    );
+    println!(
+        "tokens:  {} vs fixed {}  -> {:.0}% saved",
+        online.tokens_used,
+        fixed.tokens_used,
+        online.token_savings_vs(&fixed.log) * 100.0
+    );
+    println!(
+        "geomean: online {:.2}x vs fixed {:.2}x ({:.0}% retention)",
+        geo(&online.log),
+        geo(&fixed.log),
+        metrics::retention(geo(&online.log), geo(&fixed.log)) * 100.0
+    );
+
+    // Offline replay over the full log must predict the online stops exactly.
+    let predicted: Vec<usize> = fixed
+        .log
+        .runs
+        .iter()
+        .map(|r| {
+            let times: Vec<Option<f64>> =
+                r.attempts.iter().map(|a| a.outcome.time_ms()).collect();
+            scheduler::stop_index(r.t_ref_ms, r.t_sol_fp16_ms, &times, &policy)
+        })
+        .collect();
+    println!(
+        "offline replay agrees with online stop indices: {}",
+        if predicted == online.attempts_used { "yes" } else { "NO (bug)" }
     );
     Ok(())
 }

@@ -17,11 +17,14 @@
 
 use std::collections::HashMap;
 
-use crate::agent::controller::{modifiers, quality_gain, run_attempt, AgentState, Env, VariantSpec};
+use crate::agent::controller::{
+    modifiers, quality_gain, run_attempt, AgentState, Env, Modifiers, VariantSpec,
+};
 use crate::agent::policy::{self, OptMove};
 use crate::agent::runlog::ProblemRun;
+use crate::agent::session::StepResult;
 use crate::perfmodel::CandidateConfig;
-use crate::util::rng::Pcg32;
+use crate::util::rng::{stream, Pcg32};
 
 /// Which MANTIS phases are active (Table 3 ablations).
 #[derive(Debug, Clone, Copy)]
@@ -148,8 +151,227 @@ fn risks(mv: OptMove) -> (f64, f64) {
     }
 }
 
-/// Orchestrated MANTIS on one problem. `ctx` carries the ablation config
-/// and (when cross-memory is on) the memory shared across problems.
+/// Resumable orchestrated-MANTIS session (ADR-002): the 5 × 2 × 4 nested
+/// loop of the paper's Table 2 unrolled into a state machine that yields
+/// exactly one Implement attempt per `step()`. Phase boundaries are
+/// preserved: Measure/Analyze/Nominate/Triage run lazily when the previous
+/// iteration's hypothesis queue is exhausted, and Summarize fires after a
+/// hypothesis's last attempt — the RNG consumption order is identical to
+/// the original loop, so driving a session to exhaustion reproduces
+/// [`run_orchestrated`] bit-for-bit and early stops yield exact prefixes.
+pub struct MantisSession<'a> {
+    env: Env<'a>,
+    spec: VariantSpec,
+    cfg: MantisConfig,
+    memory: CrossMemory,
+    mods: Modifiers,
+    pidx: usize,
+    rng: Pcg32,
+    state: AgentState,
+    plans: crate::dsl::PlanCache,
+    attempts: Vec<crate::agent::AttemptRecord>,
+    t_ref_ms: f64,
+    /// Iterations whose Nominate/Triage phase has already run.
+    iters_started: u32,
+    /// Current iteration's triaged hypotheses.
+    selected: Vec<Hypothesis>,
+    hyp_idx: usize,
+    /// Attempts already spent on the current hypothesis.
+    hyp_attempt: u32,
+    /// `state.best_time_ms` when the current hypothesis started (Summarize
+    /// records whether the hypothesis improved on it).
+    hyp_before_best: f64,
+}
+
+impl<'a> MantisSession<'a> {
+    pub fn new(
+        env: Env<'a>,
+        spec: &VariantSpec,
+        pidx: usize,
+        seed: u64,
+        cfg: MantisConfig,
+        memory: CrossMemory,
+    ) -> Self {
+        let mut rng = Pcg32::derive(seed, &[stream::MANTIS, spec.stream_id(), pidx as u64]);
+        let mods = modifiers(spec);
+        let t_ref_ms = env.model.measure_baseline_ms(&env.problems[pidx], &mut rng);
+        let state = AgentState {
+            best_time_ms: f64::INFINITY,
+            t_ref_ms,
+            best_cfg: None,
+            gamed: None,
+            consecutive_failures: 0,
+            tokens: 0,
+        };
+        MantisSession {
+            env,
+            spec: *spec,
+            cfg,
+            memory,
+            mods,
+            pidx,
+            rng,
+            state,
+            // Per-problem plan cache shared across all iterations/
+            // hypotheses: revisited configurations skip re-lowering
+            // (ADR-001).
+            plans: crate::dsl::PlanCache::new(),
+            attempts: Vec::with_capacity((ITERATIONS * 8) as usize),
+            t_ref_ms,
+            iters_started: 0,
+            selected: Vec::new(),
+            hyp_idx: 0,
+            hyp_attempt: 0,
+            hyp_before_best: f64::INFINITY,
+        }
+    }
+
+    /// Measure + Analyze + Nominate + Triage for the next iteration.
+    fn nominate(&mut self) {
+        let problem = &self.env.problems[self.pidx];
+        let sol = &self.env.sols[self.pidx];
+        let tier = self.spec.tier.params();
+
+        // ---- Measure + Analyze -------------------------------------------
+        let t_best = if self.state.best_time_ms.is_finite() {
+            self.state.best_time_ms
+        } else {
+            self.t_ref_ms
+        };
+        let gap = if self.cfg.analyze { sol.gap(t_best) } else { 1.0 };
+
+        // ---- Nominate -----------------------------------------------------
+        let base = self
+            .state
+            .best_cfg
+            .clone()
+            .unwrap_or_else(|| CandidateConfig::library((128, 128, 64), crate::dsl::DType::Fp32));
+        let mut pool = policy::moves_from(&base);
+        if self.cfg.analyze {
+            let filtered: Vec<OptMove> = pool
+                .iter()
+                .copied()
+                .filter(|m| policy::targets_bottleneck(*m, sol.bottleneck))
+                .collect();
+            if !filtered.is_empty() {
+                pool = filtered;
+            }
+        }
+        let qgain = quality_gain(self.spec.tier);
+        // orchestration's structured artifacts tighten the model's own
+        // estimates beyond in-prompt steering
+        let sigma = tier.estimate_sigma * if self.cfg.analyze { 0.3 } else { 1.0 };
+        let mut hyps: Vec<Hypothesis> = pool
+            .iter()
+            .map(|&mv| {
+                let cand = policy::apply_move(&base, mv, qgain);
+                let t_new = self.env.model.candidate_ms(problem, &cand);
+                let t_now = self.env.model.candidate_ms(problem, &base);
+                let mem_prior = if self.cfg.summarize { self.memory.prior(mv) } else { 1.0 };
+                let est = (t_now / t_new) * self.rng.lognormal_noise(sigma) * mem_prior;
+                let (ri, rp) = risks(mv);
+                Hypothesis { mv, est_speedup: est, r_impl: ri, r_perf: rp, roi: roi(est, gap, ri, rp) }
+            })
+            .collect();
+
+        // ---- Triage ---------------------------------------------------------
+        if self.cfg.triage {
+            hyps.sort_by(|a, b| b.roi.partial_cmp(&a.roi).unwrap());
+        } else {
+            self.rng.shuffle(&mut hyps);
+        }
+        self.selected = hyps.into_iter().take(HYPOTHESES_PER_ITER).collect();
+        self.hyp_idx = 0;
+        self.hyp_attempt = 0;
+        // phase overhead tokens (structured artifacts between phases)
+        self.state.tokens += (8_000.0 * self.mods.tokens_mult) as u64;
+        self.iters_started += 1;
+    }
+
+    /// Execute one Implement attempt; `None` once all iterations are done.
+    pub fn step(&mut self) -> Option<StepResult> {
+        if self.hyp_idx >= self.selected.len() {
+            if self.iters_started >= ITERATIONS {
+                return None;
+            }
+            self.nominate();
+            if self.selected.is_empty() {
+                // no viable hypothesis nominated: the iteration spends no
+                // Implement attempts; recurse into the next iteration
+                return self.step();
+            }
+        }
+        let steering = if self.cfg.analyze { Some(&self.env.sols[self.pidx]) } else { None };
+        if self.hyp_attempt == 0 {
+            self.hyp_before_best = self.state.best_time_ms;
+        }
+        // first attempt executes the hypothesis; retries refine freely
+        let forced = if self.hyp_attempt == 0 { Some(self.selected[self.hyp_idx].mv) } else { None };
+        let attempt_no = self.attempts.len() as u32;
+        let rec = run_attempt(
+            &self.env,
+            &self.spec,
+            &self.mods,
+            self.pidx,
+            attempt_no,
+            &mut self.state,
+            steering,
+            forced,
+            &mut self.plans,
+            &mut self.rng,
+        );
+        let result =
+            StepResult { attempt: attempt_no, time_ms: rec.outcome.time_ms(), tokens: rec.tokens };
+        self.attempts.push(rec);
+        self.hyp_attempt += 1;
+        if self.hyp_attempt == ATTEMPTS_PER_HYPOTHESIS {
+            // ---- Summarize ------------------------------------------------
+            if self.cfg.summarize {
+                let mv = self.selected[self.hyp_idx].mv;
+                self.memory.record(mv, self.state.best_time_ms < self.hyp_before_best);
+            }
+            self.hyp_idx += 1;
+            self.hyp_attempt = 0;
+        }
+        Some(result)
+    }
+
+    pub fn attempts_done(&self) -> usize {
+        self.attempts.len()
+    }
+
+    pub fn pidx(&self) -> usize {
+        self.pidx
+    }
+
+    pub fn t_ref_ms(&self) -> f64 {
+        self.t_ref_ms
+    }
+
+    pub fn env(&self) -> &Env<'a> {
+        &self.env
+    }
+
+    /// Consume the session, returning the run and the final memory (the
+    /// serial cross-problem chain writes it back; independent sessions
+    /// drop it).
+    pub fn finish(self) -> (ProblemRun, CrossMemory) {
+        let run = ProblemRun {
+            problem_idx: self.pidx,
+            t_ref_ms: self.t_ref_ms,
+            t_sol_ms: self.env.sols[self.pidx].t_sol_ms,
+            t_sol_fp16_ms: self.env.sols[self.pidx].t_sol_fp16_ms,
+            attempts: self.attempts,
+        };
+        (run, self.memory)
+    }
+}
+
+/// Orchestrated MANTIS on one problem, driven to its full budget. `ctx`
+/// carries the ablation config and (when cross-memory is on) the memory
+/// shared across problems; the memory is snapshotted into the session and
+/// written back on completion, which is observably identical to the old
+/// in-place mutation because the serial chain runs one problem at a time.
 pub fn run_orchestrated(
     env: &Env,
     spec: &VariantSpec,
@@ -157,110 +379,15 @@ pub fn run_orchestrated(
     seed: u64,
     ctx: Option<(&MantisConfig, &mut CrossMemory)>,
 ) -> ProblemRun {
-    let default_cfg = MantisConfig::default();
-    let mut local_mem = CrossMemory::default();
-    let (cfg, memory): (&MantisConfig, &mut CrossMemory) = match ctx {
-        Some((c, m)) => (c, m),
-        None => (&default_cfg, &mut local_mem),
-    };
-
-    let mut rng = Pcg32::new(seed, (pidx as u64) << 8 | 3);
-    let mods = modifiers(spec);
-    let tier = spec.tier.params();
-    let problem = &env.problems[pidx];
-    let sol = &env.sols[pidx];
-    let t_ref = env.model.measure_baseline_ms(problem, &mut rng);
-
-    let mut state = AgentState {
-        best_time_ms: f64::INFINITY,
-        t_ref_ms: t_ref,
-        best_cfg: None,
-        gamed: None,
-        consecutive_failures: 0,
-        tokens: 0,
-    };
-    let mut attempts = Vec::with_capacity((ITERATIONS * 8) as usize);
-    let mut attempt_no = 0u32;
-    // Per-problem plan cache shared across all iterations/hypotheses:
-    // revisited candidate configurations skip re-lowering (ADR-001).
-    let mut plans = crate::dsl::PlanCache::new();
-
-    for _iter in 0..ITERATIONS {
-        // ---- Measure + Analyze -------------------------------------------
-        let t_best = if state.best_time_ms.is_finite() { state.best_time_ms } else { t_ref };
-        let gap = if cfg.analyze { sol.gap(t_best) } else { 1.0 };
-        let steering = if cfg.analyze { Some(sol) } else { None };
-
-        // ---- Nominate -----------------------------------------------------
-        let base = state
-            .best_cfg
-            .clone()
-            .unwrap_or_else(|| CandidateConfig::library((128, 128, 64), crate::dsl::DType::Fp32));
-        let mut pool = policy::moves_from(&base);
-        if let Some(s) = steering {
-            let filtered: Vec<OptMove> = pool
-                .iter()
-                .copied()
-                .filter(|m| policy::targets_bottleneck(*m, s.bottleneck))
-                .collect();
-            if !filtered.is_empty() {
-                pool = filtered;
-            }
-        }
-        let qgain = quality_gain(spec.tier);
-        // orchestration's structured artifacts tighten the model's own
-        // estimates beyond in-prompt steering
-        let sigma = tier.estimate_sigma * if cfg.analyze { 0.3 } else { 1.0 };
-        let mut hyps: Vec<Hypothesis> = pool
-            .iter()
-            .map(|&mv| {
-                let cand = policy::apply_move(&base, mv, qgain);
-                let t_new = env.model.candidate_ms(problem, &cand);
-                let t_now = env.model.candidate_ms(problem, &base);
-                let mem_prior = if cfg.summarize { memory.prior(mv) } else { 1.0 };
-                let est = (t_now / t_new) * rng.lognormal_noise(sigma) * mem_prior;
-                let (ri, rp) = risks(mv);
-                Hypothesis { mv, est_speedup: est, r_impl: ri, r_perf: rp, roi: roi(est, gap, ri, rp) }
-            })
-            .collect();
-
-        // ---- Triage ---------------------------------------------------------
-        if cfg.triage {
-            hyps.sort_by(|a, b| b.roi.partial_cmp(&a.roi).unwrap());
-        } else {
-            rng.shuffle(&mut hyps);
-        }
-        let selected: Vec<Hypothesis> = hyps.into_iter().take(HYPOTHESES_PER_ITER).collect();
-        // phase overhead tokens (structured artifacts between phases)
-        state.tokens += (8_000.0 * mods.tokens_mult) as u64;
-
-        // ---- Implement -------------------------------------------------------
-        for h in &selected {
-            let before = state.best_time_ms;
-            for k in 0..ATTEMPTS_PER_HYPOTHESIS {
-                // first attempt executes the hypothesis; retries refine freely
-                let forced = if k == 0 { Some(h.mv) } else { None };
-                let rec = run_attempt(
-                    env, spec, &mods, pidx, attempt_no, &mut state, steering, forced,
-                    &mut plans, &mut rng,
-                );
-                attempt_no += 1;
-                attempts.push(rec);
-            }
-            // ---- Summarize ----------------------------------------------------
-            if cfg.summarize {
-                memory.record(h.mv, state.best_time_ms < before);
-            }
-        }
+    let cfg = ctx.as_ref().map(|(c, _)| **c).unwrap_or_default();
+    let mem_in = ctx.as_ref().map(|(_, m)| (**m).clone()).unwrap_or_default();
+    let mut session = MantisSession::new(*env, spec, pidx, seed, cfg, mem_in);
+    while session.step().is_some() {}
+    let (run, mem_out) = session.finish();
+    if let Some((_, m)) = ctx {
+        *m = mem_out;
     }
-
-    ProblemRun {
-        problem_idx: pidx,
-        t_ref_ms: t_ref,
-        t_sol_ms: sol.t_sol_ms,
-        t_sol_fp16_ms: sol.t_sol_fp16_ms,
-        attempts,
-    }
+    run
 }
 
 #[cfg(test)]

@@ -34,7 +34,7 @@ pub enum SchedulerKind {
 /// compiled [`KernelPlan`] (high-level, statically valid) or hand-built for
 /// raw-CUDA candidates (where `quality` captures code-level inefficiency
 /// the configuration axes don't).
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct CandidateConfig {
     /// Threadblock tile (m, n, k).
     pub tile: (u64, u64, u64),

@@ -24,7 +24,7 @@ use std::path::{Path, PathBuf};
 use crate::dsl::{DType, KernelPlan};
 use crate::errmsg;
 use crate::util::errors::{Result, ResultExt};
-use crate::util::rng::Pcg32;
+use crate::util::rng::{stream, Pcg32};
 
 /// Result of validating one candidate variant against its reference.
 #[derive(Debug, Clone)]
@@ -106,7 +106,7 @@ impl Runtime {
 
     /// Deterministic standard-normal inputs for a problem (seeded).
     pub fn gen_inputs(prob: &ManifestProblem, seed: u64) -> Vec<(Vec<f32>, Vec<i64>)> {
-        let mut rng = Pcg32::new(seed, 0x17);
+        let mut rng = Pcg32::derive(seed, &[stream::RUNTIME_INPUTS]);
         prob.inputs
             .iter()
             .map(|spec| {

@@ -13,9 +13,13 @@
 //! * **no-progress window** — best speedup unimproved for `w` consecutive
 //!   attempts while ahead of PyTorch.
 
+pub mod online;
+
 use crate::agent::RunLog;
 use crate::integrity::IntegrityPipeline;
 use crate::metrics;
+
+pub use online::{run_online, OnlineRun};
 
 /// A scheduling policy: ε (fraction, e.g. 0.25 = 25%) and window w.
 /// `epsilon = f64::INFINITY` disables the SOL rule; `window = 0` disables
@@ -42,6 +46,58 @@ impl Policy {
     }
 }
 
+/// Incremental form of the stopping rules: the state a scheduler carries
+/// per problem while attempts stream in. Both the offline [`stop_index`]
+/// replay and the online engine ([`online::run_online`]) feed attempts
+/// through this one implementation, so "what replay predicts" and "what
+/// the live scheduler did" agree by construction, not by coincidence.
+#[derive(Debug, Clone)]
+pub struct StopRule {
+    best: f64,
+    stale: u32,
+}
+
+impl Default for StopRule {
+    fn default() -> Self {
+        StopRule::new()
+    }
+}
+
+impl StopRule {
+    pub fn new() -> StopRule {
+        StopRule { best: f64::INFINITY, stale: 0 }
+    }
+
+    /// Feed one attempt's measurement; `true` means the problem stops
+    /// *after* this attempt (the attempt itself was still executed).
+    pub fn observe(
+        &mut self,
+        t_ref_ms: f64,
+        t_sol_fp16_ms: f64,
+        time_ms: Option<f64>,
+        policy: &Policy,
+    ) -> bool {
+        // The SOL-ceiling detector runs online as a strict runtime bounds
+        // check (§4.4): measurements >10% below the FP16 SOL bound are
+        // physically implausible and must not drive stopping decisions.
+        let t = time_ms.filter(|&t| t >= 0.9 * t_sol_fp16_ms);
+        match t {
+            Some(t) if t < self.best => {
+                self.best = t;
+                self.stale = 0;
+            }
+            _ => self.stale += 1,
+        }
+        if self.best >= t_ref_ms {
+            return false; // still behind PyTorch: always eligible
+        }
+        if policy.epsilon.is_finite() && self.best <= (1.0 + policy.epsilon) * t_sol_fp16_ms {
+            return true;
+        }
+        policy.window > 0 && self.stale >= policy.window
+    }
+}
+
 /// Attempts a problem receives before the policy stops it (index into the
 /// recorded attempt sequence; == len when never stopped).
 pub fn stop_index(
@@ -50,28 +106,9 @@ pub fn stop_index(
     attempt_times: &[Option<f64>],
     policy: &Policy,
 ) -> usize {
-    let mut best = f64::INFINITY;
-    let mut stale = 0u32;
+    let mut rule = StopRule::new();
     for (i, t) in attempt_times.iter().enumerate() {
-        // The SOL-ceiling detector runs online as a strict runtime bounds
-        // check (§4.4): measurements >10% below the FP16 SOL bound are
-        // physically implausible and must not drive stopping decisions.
-        let t = t.filter(|&t| t >= 0.9 * t_sol_fp16_ms);
-        match t {
-            Some(t) if t < best => {
-                best = t;
-                stale = 0;
-            }
-            _ => stale += 1,
-        }
-        let ahead = best < t_ref_ms;
-        if !ahead {
-            continue; // still behind PyTorch: always eligible
-        }
-        if policy.epsilon.is_finite() && best <= (1.0 + policy.epsilon) * t_sol_fp16_ms {
-            return i + 1;
-        }
-        if policy.window > 0 && stale >= policy.window {
+        if rule.observe(t_ref_ms, t_sol_fp16_ms, *t, policy) {
             return i + 1;
         }
     }

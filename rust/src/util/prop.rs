@@ -12,13 +12,13 @@
 //! });
 //! ```
 
-use super::rng::Pcg32;
+use super::rng::{stream, Pcg32};
 
 /// Run `f` against `cases` seeded RNGs; panic identifies the failing seed.
 pub fn check<F: Fn(&mut Pcg32)>(name: &str, cases: u64, f: F) {
     for case in 0..cases {
         let seed = 0x5EED_0000 + case;
-        let mut rng = Pcg32::new(seed, case | 1);
+        let mut rng = Pcg32::derive(seed, &[stream::PROP_CASE, case]);
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             f(&mut rng);
         }));

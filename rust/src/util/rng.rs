@@ -13,6 +13,28 @@ pub fn splitmix64(state: &mut u64) -> u64 {
     z ^ (z >> 31)
 }
 
+/// Well-known first components for [`Pcg32::derive`] paths. Every
+/// independent consumer of randomness derives its stream under a distinct
+/// root, so streams from different subsystems (and therefore from
+/// different parallel tasks) can never collide even when the remaining
+/// path components (variant, problem index, …) coincide.
+pub mod stream {
+    /// Flat MI / in-prompt controller loops (one stream per variant×problem).
+    pub const FLAT_CONTROLLER: u64 = 0x01;
+    /// Orchestrated MANTIS sessions.
+    pub const MANTIS: u64 = 0x02;
+    /// Integrity-pipeline review labelling.
+    pub const INTEGRITY_REVIEW: u64 = 0x03;
+    /// Evolutionary-archive generation.
+    pub const ARCHIVE_GEN: u64 = 0x04;
+    /// Evolutionary-archive review order.
+    pub const ARCHIVE_REVIEW: u64 = 0x05;
+    /// PJRT runtime validation inputs.
+    pub const RUNTIME_INPUTS: u64 = 0x06;
+    /// Property-test case generation.
+    pub const PROP_CASE: u64 = 0x07;
+}
+
 /// PCG32 (XSH-RR variant) — small, fast, statistically solid.
 #[derive(Debug, Clone)]
 pub struct Pcg32 {
@@ -30,6 +52,29 @@ impl Pcg32 {
         rng.state = rng.state.wrapping_add(s0);
         rng.next_u32();
         rng
+    }
+
+    /// Derive an independent stream from an experiment seed and a
+    /// hierarchical path, e.g. `Pcg32::derive(seed, &[stream::MANTIS,
+    /// variant_id, pidx])`. Each component is mixed through SplitMix64 and
+    /// folded with a rotate-multiply, so distinct paths — including
+    /// permutations, prefixes, and adjacent small integers — yield
+    /// decorrelated streams. This replaces ad-hoc `(pidx << 8) | tag`
+    /// stream arithmetic, which collides as soon as two call sites shift
+    /// by different amounts; parallel (variant, problem, seed) tasks each
+    /// derive their own stream and can never observe another task's draws.
+    pub fn derive(seed: u64, path: &[u64]) -> Pcg32 {
+        let mut acc = seed ^ 0x6A09_E667_F3BC_C908; // √2 frac: decorrelate raw seeds
+        let mut h = splitmix64(&mut acc);
+        for &c in path {
+            let mut t = c;
+            h ^= splitmix64(&mut t);
+            h = h.rotate_left(27).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+        }
+        let mut s = h;
+        let state_seed = splitmix64(&mut s);
+        let inc = splitmix64(&mut s);
+        Pcg32::new(state_seed, inc)
     }
 
     /// Derive a child RNG for a named sub-component (hash of the label).
@@ -135,6 +180,48 @@ mod tests {
     fn seeds_differ() {
         let mut a = Pcg32::new(42, 1);
         let mut b = Pcg32::new(43, 1);
+        assert_ne!(
+            (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn derive_is_deterministic() {
+        let mut a = Pcg32::derive(42, &[stream::MANTIS, 3, 7]);
+        let mut b = Pcg32::derive(42, &[stream::MANTIS, 3, 7]);
+        for _ in 0..50 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn derive_separates_paths() {
+        // permutations, prefixes, neighbouring components, and different
+        // roots must all yield distinct streams
+        let paths: &[&[u64]] = &[
+            &[stream::FLAT_CONTROLLER, 1, 2],
+            &[stream::FLAT_CONTROLLER, 2, 1],
+            &[stream::FLAT_CONTROLLER, 1],
+            &[stream::FLAT_CONTROLLER, 1, 2, 0],
+            &[stream::FLAT_CONTROLLER, 1, 3],
+            &[stream::MANTIS, 1, 2],
+            &[stream::INTEGRITY_REVIEW, 1, 2],
+        ];
+        let mut firsts = std::collections::HashSet::new();
+        for p in paths {
+            let mut r = Pcg32::derive(99, p);
+            assert!(
+                firsts.insert((r.next_u64(), r.next_u64())),
+                "stream collision for path {p:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn derive_separates_seeds() {
+        let mut a = Pcg32::derive(1, &[stream::MANTIS, 0]);
+        let mut b = Pcg32::derive(2, &[stream::MANTIS, 0]);
         assert_ne!(
             (0..8).map(|_| a.next_u64()).collect::<Vec<_>>(),
             (0..8).map(|_| b.next_u64()).collect::<Vec<_>>()

@@ -244,3 +244,41 @@ fn prop_gaming_never_survives_perfect_lgd() {
         }
     });
 }
+
+// ---------------------------------------------------------------------------
+// Online scheduler + parallel engine (ADR-002)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn e2e_parallel_online_determinism() {
+    // the full chain: sessions → online scheduler → parallel engine must
+    // agree with the serial fixed-budget reference across module borders
+    use ucutlass_repro::exec;
+    use ucutlass_repro::experiments::runner::Bench;
+
+    let bench = Bench::new();
+    let env = bench.env();
+    let spec = VariantSpec::new(ControllerKind::InPromptSol, true, ModelTier::Mid);
+
+    // serial fixed-budget reference
+    let reference = ucutlass_repro::experiments::run_variant(&bench, &spec, 99, None);
+    // parallel engine, 4 jobs
+    let par = exec::run_variant_jobs(&bench, &spec, 99, None, 4);
+    assert_eq!(par, reference);
+
+    // online under the fixed policy reproduces the reference…
+    let fixed = scheduler::run_online(&env, &spec, 99, &Policy::fixed(), 4);
+    assert_eq!(fixed.log.runs, reference.runs);
+
+    // …and under a real policy every stop matches the offline prediction
+    let policy = Policy { epsilon: 1.0, window: 8 };
+    let online = scheduler::run_online(&env, &spec, 99, &policy, 4);
+    for (run, full) in online.log.runs.iter().zip(&reference.runs) {
+        let times: Vec<Option<f64>> =
+            full.attempts.iter().map(|a| a.outcome.time_ms()).collect();
+        let predicted = scheduler::stop_index(full.t_ref_ms, full.t_sol_fp16_ms, &times, &policy);
+        assert_eq!(run.attempts.len(), predicted);
+        assert_eq!(run.attempts[..], full.attempts[..predicted]);
+    }
+    assert!(online.attempts_total() <= fixed.attempts_total());
+}
