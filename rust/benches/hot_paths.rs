@@ -8,9 +8,10 @@ use std::hint::black_box;
 use std::time::Instant;
 
 use ucutlass_repro::agent::controller::{run_problem, ControllerKind, Env, VariantSpec};
-use ucutlass_repro::agent::policy::select_move;
+use ucutlass_repro::agent::policy::{select_move, TILES};
 use ucutlass_repro::agent::ModelTier;
 use ucutlass_repro::dsl;
+use ucutlass_repro::eval::{AnalyticEvaluator, EvalRequest, Evaluator, WorkManifest};
 use ucutlass_repro::exec;
 use ucutlass_repro::experiments::runner::{main_variants, Bench as SuiteBench};
 use ucutlass_repro::integrity::IntegrityPipeline;
@@ -105,11 +106,47 @@ fn main() {
         black_box(model.baseline_ms(black_box(&problems[44])));
     });
 
+    // ---- batched vs scalar candidate_ms (ADR-003 acceptance: the batch
+    // path must beat per-config scalar calls by hoisting problem terms) ---
+    {
+        let cfgs: Vec<CandidateConfig> = TILES
+            .iter()
+            .flat_map(|&t| {
+                [
+                    CandidateConfig::library(t, dsl::DType::Fp32),
+                    CandidateConfig::library(t, dsl::DType::Fp16),
+                ]
+            })
+            .collect();
+        let iters = 50_000;
+        let t0 = Instant::now();
+        for _ in 0..iters {
+            for c in &cfgs {
+                black_box(model.candidate_ms(black_box(&problems[0]), black_box(c)));
+            }
+        }
+        let scalar_ns = t0.elapsed().as_nanos() as f64 / iters as f64;
+        let t1 = Instant::now();
+        for _ in 0..iters {
+            black_box(model.candidate_ms_batch(black_box(&problems[0]), black_box(&cfgs)));
+        }
+        let batch_ns = t1.elapsed().as_nanos() as f64 / iters as f64;
+        println!(
+            "{:40} {:>12.0} ns scalar  {:>7.0} ns batch -> {:.1}x (batch of {})",
+            "candidate_ms: batched vs scalar x20",
+            scalar_ns,
+            batch_ns,
+            scalar_ns / batch_ns.max(1.0),
+            cfgs.len()
+        );
+    }
+
+    let ev = AnalyticEvaluator::new(&model, &problems, &sols);
     let mut rng = Pcg32::new(1, 1);
-    bench("policy::select_move (steered)", 10_000, 9, || {
+    bench("policy::select_move (steered, batched)", 10_000, 9, || {
         black_box(select_move(
-            &model,
-            &problems[0],
+            &ev,
+            0,
             &cfg,
             ModelTier::Mid.params(),
             Some(&sols[0]),
@@ -117,6 +154,37 @@ fn main() {
             &mut rng,
         ));
     });
+
+    // ---- eval manifest roundtrip (the shard/merge protocol's serialization
+    // hot path: serialize + parse a realistic request manifest) -----------
+    {
+        use ucutlass_repro::util::rng::{stream, StreamPath};
+        let reqs: Vec<EvalRequest> = (0..problems.len())
+            .flat_map(|p| {
+                TILES.iter().enumerate().map(move |(i, &t)| {
+                    EvalRequest::measured(
+                        p,
+                        CandidateConfig::library(t, dsl::DType::Fp16),
+                        StreamPath::new(7, &[stream::MEASURE, p as u64, i as u64]),
+                    )
+                })
+            })
+            .collect();
+        let manifest = WorkManifest::new(reqs);
+        let text = manifest.to_json().to_string();
+        let n = manifest.requests.len();
+        bench("eval::WorkManifest serialize (590 reqs)", 200, 7, || {
+            black_box(manifest.to_json().to_string());
+        });
+        bench("eval::WorkManifest parse (590 reqs)", 200, 7, || {
+            black_box(WorkManifest::parse(black_box(&text)).unwrap());
+        });
+        let parsed = WorkManifest::parse(&text).unwrap();
+        assert_eq!(parsed, manifest, "manifest roundtrip must be lossless ({n} requests)");
+        bench("eval::eval_batch (59 problems x 10 cfgs)", 500, 7, || {
+            black_box(ev.eval_batch(black_box(&manifest.requests)));
+        });
+    }
 
     let env = Env { model: &model, problems: &problems, sols: &sols };
     let spec = VariantSpec::new(ControllerKind::InPromptSol, true, ModelTier::Mid);

@@ -56,6 +56,10 @@ impl GamingType {
             GamingType::IncompleteComputation => "incomplete_computation",
         }
     }
+
+    pub fn parse(s: &str) -> Option<GamingType> {
+        GamingType::ALL.iter().copied().find(|g| g.name() == s)
+    }
 }
 
 /// Minor-issue subcategories (paper Figure 11, green shades) — accepted by
@@ -87,6 +91,10 @@ impl MinorIssueType {
             MinorIssueType::ContiguityAssumption => "contiguity_assumption",
             MinorIssueType::DefaultStream => "uses_default_stream",
         }
+    }
+
+    pub fn parse(s: &str) -> Option<MinorIssueType> {
+        MinorIssueType::ALL.iter().copied().find(|m| m.name() == s)
     }
 }
 
@@ -121,6 +129,41 @@ impl AttemptOutcome {
             AttemptOutcome::RuntimeError => "runtime_error",
             AttemptOutcome::Incorrect => "incorrect",
             AttemptOutcome::Correct { .. } => "correct",
+        }
+    }
+
+    /// Inverse of `name()` + the serialized `time_ms` field.
+    pub fn parse(name: &str, time_ms: Option<f64>) -> Option<AttemptOutcome> {
+        match name {
+            "dsl_rejected" => Some(AttemptOutcome::DslRejected),
+            "compile_error" => Some(AttemptOutcome::CompileError),
+            "runtime_error" => Some(AttemptOutcome::RuntimeError),
+            "incorrect" => Some(AttemptOutcome::Incorrect),
+            "correct" => time_ms.map(|time_ms| AttemptOutcome::Correct { time_ms }),
+            _ => None,
+        }
+    }
+}
+
+impl SolutionKind {
+    pub fn name(&self) -> String {
+        match self {
+            SolutionKind::DslKernel => "dsl".to_string(),
+            SolutionKind::RawCuda => "raw".to_string(),
+            SolutionKind::PyTorchOnly => "pytorch_only".to_string(),
+            SolutionKind::Gaming(g) => format!("gaming:{}", g.name()),
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SolutionKind> {
+        match s {
+            "dsl" => Some(SolutionKind::DslKernel),
+            "raw" => Some(SolutionKind::RawCuda),
+            "pytorch_only" => Some(SolutionKind::PyTorchOnly),
+            _ => s
+                .strip_prefix("gaming:")
+                .and_then(GamingType::parse)
+                .map(SolutionKind::Gaming),
         }
     }
 }
@@ -160,6 +203,12 @@ pub struct AttemptRecord {
 }
 
 impl AttemptRecord {
+    /// Full-fidelity serialization: together with [`Self::from_json`] this
+    /// round-trips every field (the shard/merge protocol's requirement —
+    /// merged logs must be `PartialEq`-identical to single-process logs).
+    /// The `dsl_plan` itself is not written: `config_hash` + `dsl_source`
+    /// identify it, and `from_json` reconstructs it by recompiling the
+    /// source (the compiler is deterministic; the hash is verified).
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("problem_idx", self.problem_idx)
@@ -169,15 +218,7 @@ impl AttemptRecord {
                 "time_ms",
                 self.outcome.time_ms().map(Json::Num).unwrap_or(Json::Null),
             )
-            .set(
-                "kind",
-                match &self.kind {
-                    SolutionKind::DslKernel => "dsl".to_string(),
-                    SolutionKind::RawCuda => "raw".to_string(),
-                    SolutionKind::PyTorchOnly => "pytorch_only".to_string(),
-                    SolutionKind::Gaming(g) => format!("gaming:{}", g.name()),
-                },
-            )
+            .set("kind", self.kind.name())
             .set(
                 "minor_issue",
                 self.minor_issue.map(|m| Json::Str(m.name().into())).unwrap_or(Json::Null),
@@ -186,6 +227,18 @@ impl AttemptRecord {
             .set("tokens", self.tokens)
             .set("tool_time_s", self.tool_time_s)
             .set(
+                "config",
+                self.config.as_ref().map(|c| c.to_json()).unwrap_or(Json::Null),
+            )
+            .set(
+                "kernel_names",
+                Json::Arr(self.kernel_names.iter().map(|k| Json::Str(k.clone())).collect()),
+            )
+            .set(
+                "dsl_source",
+                self.dsl_source.as_ref().map(|s| Json::Str(s.clone())).unwrap_or(Json::Null),
+            )
+            .set(
                 "config_hash",
                 self.dsl_plan
                     .as_ref()
@@ -193,6 +246,85 @@ impl AttemptRecord {
                     .unwrap_or(Json::Null),
             );
         o
+    }
+
+    /// Inverse of [`Self::to_json`]. `plans` caches plan reconstruction
+    /// across attempts (a revisited configuration costs one map lookup).
+    pub fn from_json(
+        j: &Json,
+        plans: &mut crate::dsl::PlanCache,
+    ) -> Result<AttemptRecord, String> {
+        let field = |k: &str| j.get(k).ok_or_else(|| format!("attempt: missing {k}"));
+        let time_ms = field("time_ms")?.as_f64();
+        let outcome_name =
+            field("outcome")?.as_str().ok_or("attempt: outcome not a string")?;
+        let outcome = AttemptOutcome::parse(outcome_name, time_ms)
+            .ok_or_else(|| format!("attempt: bad outcome `{outcome_name}`"))?;
+        let kind_name = field("kind")?.as_str().ok_or("attempt: kind not a string")?;
+        let kind = SolutionKind::parse(kind_name)
+            .ok_or_else(|| format!("attempt: bad kind `{kind_name}`"))?;
+        let minor_issue = match field("minor_issue")? {
+            Json::Null => None,
+            m => Some(
+                m.as_str()
+                    .and_then(MinorIssueType::parse)
+                    .ok_or_else(|| format!("attempt: bad minor_issue {m}"))?,
+            ),
+        };
+        let config = match field("config")? {
+            Json::Null => None,
+            c => Some(
+                CandidateConfig::from_json(c)
+                    .ok_or_else(|| format!("attempt: bad config {c}"))?,
+            ),
+        };
+        let dsl_source = match field("dsl_source")? {
+            Json::Null => None,
+            s => Some(s.as_str().ok_or("attempt: dsl_source not a string")?.to_string()),
+        };
+        let dsl_plan = match field("config_hash")? {
+            Json::Null => None,
+            h => {
+                let hash = h.as_str().ok_or("attempt: config_hash not a string")?;
+                let src = dsl_source
+                    .as_deref()
+                    .ok_or("attempt: config_hash without dsl_source")?;
+                let compiled = crate::dsl::compile_cached(src, plans)
+                    .map_err(|e| format!("attempt: recompiling dsl_source: {e}"))?;
+                if compiled.plan.config_hash != hash {
+                    return Err(format!(
+                        "attempt: recompiled plan hash {} != recorded {hash}",
+                        compiled.plan.config_hash
+                    ));
+                }
+                Some(compiled.plan.clone())
+            }
+        };
+        Ok(AttemptRecord {
+            problem_idx: field("problem_idx")?
+                .as_u64()
+                .ok_or("attempt: bad problem_idx")? as usize,
+            attempt: field("attempt")?.as_u64().ok_or("attempt: bad attempt")? as u32,
+            outcome,
+            kind,
+            minor_issue,
+            inherited: field("inherited")?.as_bool().ok_or("attempt: bad inherited")?,
+            tokens: field("tokens")?.as_u64().ok_or("attempt: bad tokens")?,
+            tool_time_s: field("tool_time_s")?.as_f64().ok_or("attempt: bad tool_time_s")?,
+            config,
+            kernel_names: field("kernel_names")?
+                .as_arr()
+                .ok_or("attempt: kernel_names not an array")?
+                .iter()
+                .map(|k| {
+                    k.as_str()
+                        .map(String::from)
+                        .ok_or_else(|| "attempt: kernel name not a string".to_string())
+                })
+                .collect::<Result<Vec<_>, String>>()?,
+            dsl_source,
+            dsl_plan,
+        })
     }
 }
 
@@ -225,5 +357,61 @@ mod tests {
         let j = r.to_json();
         assert_eq!(j.get("kind").unwrap().as_str(), Some("gaming:constant_output"));
         assert_eq!(j.get("inherited").unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
+    fn record_json_roundtrips_every_field() {
+        let src = "gemm().with_dtype(input=fp16, acc=fp32, output=fp32)\
+            .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor).with_arch(sm_90a)\
+            .with_threadblockshape(m=128, n=64, k=64).with_stages(3) >> bias() >> relu()";
+        let compiled = crate::dsl::compile(src).unwrap();
+        let r = AttemptRecord {
+            problem_idx: 5,
+            attempt: 12,
+            outcome: AttemptOutcome::Correct { time_ms: 0.123456789012345 },
+            kind: SolutionKind::DslKernel,
+            minor_issue: Some(MinorIssueType::ContiguityAssumption),
+            inherited: false,
+            tokens: 12345,
+            tool_time_s: 87.65432109876,
+            config: Some(CandidateConfig::library((128, 64, 64), crate::dsl::DType::Fp16)),
+            kernel_names: vec!["ucutlass_kernel::gemm".into(), "helper".into()],
+            dsl_source: Some(src.to_string()),
+            dsl_plan: Some(compiled.plan.clone()),
+        };
+        let text = r.to_json().to_string();
+        let mut plans = crate::dsl::PlanCache::new();
+        let parsed = AttemptRecord::from_json(
+            &crate::util::json::Json::parse(&text).unwrap(),
+            &mut plans,
+        )
+        .unwrap();
+        assert_eq!(parsed, r, "round-trip must be field-for-field identical");
+
+        // non-plan record too
+        let r2 = rec(3, AttemptOutcome::CompileError, SolutionKind::RawCuda);
+        let parsed2 = AttemptRecord::from_json(
+            &crate::util::json::Json::parse(&r2.to_json().to_string()).unwrap(),
+            &mut plans,
+        )
+        .unwrap();
+        assert_eq!(parsed2, r2);
+    }
+
+    fn rec(attempt: u32, outcome: AttemptOutcome, kind: SolutionKind) -> AttemptRecord {
+        AttemptRecord {
+            problem_idx: 0,
+            attempt,
+            outcome,
+            kind,
+            minor_issue: None,
+            inherited: false,
+            tokens: 1000,
+            tool_time_s: 60.0,
+            config: None,
+            kernel_names: vec![],
+            dsl_source: None,
+            dsl_plan: None,
+        }
     }
 }

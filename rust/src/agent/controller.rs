@@ -10,10 +10,12 @@
 //! resolved numbers codegen emitted.
 
 use crate::dsl;
+use crate::eval::{AnalyticEvaluator, EvalRequest};
 use crate::kernelbench::Problem;
 use crate::perfmodel::{CandidateConfig, PerfModel};
 use crate::sol::SolAnalysis;
-use crate::util::rng::Pcg32;
+use crate::util::json::Json;
+use crate::util::rng::{MeasureSeq, Pcg32};
 
 use super::attempt::{AttemptOutcome, AttemptRecord, GamingType, MinorIssueType, SolutionKind};
 use super::policy::{self, dsl_applicable, generate_valid_dsl, select_move, TILES};
@@ -37,6 +39,25 @@ impl ControllerKind {
             ControllerKind::Mi => "MI",
             ControllerKind::InPromptSol => "in-prompt SOL",
             ControllerKind::OrchestratedSol => "orchestrated SOL",
+        }
+    }
+
+    /// Stable serialization token (the display `name()` has spaces and is
+    /// subject to wording changes).
+    pub fn token(&self) -> &'static str {
+        match self {
+            ControllerKind::Mi => "mi",
+            ControllerKind::InPromptSol => "in_prompt_sol",
+            ControllerKind::OrchestratedSol => "orchestrated_sol",
+        }
+    }
+
+    pub fn parse_token(s: &str) -> Option<ControllerKind> {
+        match s {
+            "mi" => Some(ControllerKind::Mi),
+            "in_prompt_sol" => Some(ControllerKind::InPromptSol),
+            "orchestrated_sol" => Some(ControllerKind::OrchestratedSol),
+            _ => None,
         }
     }
 }
@@ -118,6 +139,41 @@ impl VariantSpec {
         };
         format!("{} [{}]", base, self.tier.name())
     }
+
+    /// Serialize every behaviour-shaping field (the suite shard/merge
+    /// protocol ships specs between processes).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("controller", self.controller.token())
+            .set("tier", self.tier.token())
+            .set("dsl", self.dsl)
+            .set("attempts", self.attempts as u64)
+            .set("guardrails", self.guardrails)
+            .set("online_integrity", self.online_integrity);
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<VariantSpec, String> {
+        let field = |k: &str| j.get(k).ok_or_else(|| format!("spec: missing {k}"));
+        let controller = field("controller")?
+            .as_str()
+            .and_then(ControllerKind::parse_token)
+            .ok_or("spec: bad controller")?;
+        let tier = field("tier")?
+            .as_str()
+            .and_then(ModelTier::parse_token)
+            .ok_or("spec: bad tier")?;
+        Ok(VariantSpec {
+            controller,
+            tier,
+            dsl: field("dsl")?.as_bool().ok_or("spec: bad dsl")?,
+            attempts: field("attempts")?.as_u64().ok_or("spec: bad attempts")? as u32,
+            guardrails: field("guardrails")?.as_bool().ok_or("spec: bad guardrails")?,
+            online_integrity: field("online_integrity")?
+                .as_bool()
+                .ok_or("spec: bad online_integrity")?,
+        })
+    }
 }
 
 /// Shared evaluation environment. `Copy` (it is three shared references):
@@ -129,6 +185,17 @@ pub struct Env<'a> {
     pub problems: &'a [Problem],
     /// Per-problem SOL analyses (same order as `problems`).
     pub sols: &'a [SolAnalysis],
+}
+
+impl<'a> Env<'a> {
+    /// The analytic measurement oracle over this environment (ADR-003).
+    /// `Copy` over three shared references — construct freely at call
+    /// sites. All agent-loop measurement goes through this evaluator;
+    /// nothing above the `eval` layer calls `PerfModel::candidate_ms` or
+    /// `measure_ms` directly.
+    pub fn evaluator(&self) -> AnalyticEvaluator<'a> {
+        AnalyticEvaluator::new(self.model, self.problems, self.sols)
+    }
 }
 
 /// Mutable per-problem agent state threaded through attempts.
@@ -146,6 +213,11 @@ pub struct AgentState {
     pub consecutive_failures: u32,
     /// Tokens spent on this problem so far.
     pub tokens: u64,
+    /// Measurement-noise streams for this session: the k-th measurement
+    /// draws from a derived stream named by (seed, session path, k), so a
+    /// serialized `EvalRequest` replays the exact value out of process
+    /// (ADR-003).
+    pub measure: MeasureSeq,
 }
 
 /// Gaming runtime: what the exploit's kernel actually costs. The
@@ -329,6 +401,7 @@ pub fn run_attempt(
 ) -> AttemptRecord {
     let tier = spec.tier.params();
     let problem = &env.problems[pidx];
+    let ev = env.evaluator();
     let tokens =
         (tier.tokens_mean * mods.tokens_mult * rng.lognormal_noise(tier.tokens_sigma)) as u64;
     state.tokens += tokens;
@@ -356,7 +429,7 @@ pub fn run_attempt(
             if state.best_time_ms <= t {
                 state.best_time_ms = f64::INFINITY; // rebuild best from honest attempts
                 if let Some(cfg) = &state.best_cfg {
-                    state.best_time_ms = env.model.candidate_ms(&env.problems[pidx], cfg);
+                    state.best_time_ms = ev.value(&EvalRequest::candidate(pidx, cfg.clone()));
                 }
             }
             let _ = ty;
@@ -391,7 +464,10 @@ pub fn run_attempt(
             })
             .collect();
         let ty = GamingType::ALL[rng.weighted_choice(&weights)];
-        let honest = state.best_cfg.as_ref().map(|c| env.model.candidate_ms(problem, c))
+        let honest = state
+            .best_cfg
+            .as_ref()
+            .map(|c| ev.value(&EvalRequest::candidate(pidx, c.clone())))
             .unwrap_or(state.t_ref_ms);
         let t = gaming_time_ms(env.model, problem, ty, honest) * rng.lognormal_noise(0.01);
         if spec.online_integrity && online_review_catches(env, spec, pidx, t, rng) {
@@ -439,7 +515,7 @@ pub fn run_attempt(
     let proposed: CandidateConfig = match (&state.best_cfg, forced_move) {
         (Some(base), Some(mv)) => policy::apply_move(base, mv, qgain),
         (Some(base), None) => {
-            match select_move(env.model, problem, base, tier, steering, qgain, rng) {
+            match select_move(&ev, pidx, base, tier, steering, qgain, rng) {
                 Some((mv, _est)) => policy::apply_move(base, mv, qgain),
                 None => base.clone(),
             }
@@ -494,7 +570,14 @@ pub fn run_attempt(
                 measured.fused_epilogue = proposed.fused_epilogue;
                 measured.fusion_coverage = proposed.fusion_coverage;
                 measured.quality = proposed.quality;
-                let t = env.model.measure_ms(problem, &measured, rng);
+                let t = ev.value(
+                    &EvalRequest::measured(
+                        pidx,
+                        measured.clone(),
+                        state.measure.next_stream(),
+                    )
+                    .with_hash(compiled.plan.config_hash.clone()),
+                );
                 rec.dsl_plan = Some(compiled.plan.clone());
                 rec.outcome = AttemptOutcome::Correct { time_ms: t };
                 rec.kernel_names = vec![format!("ucutlass_kernel::{}", problem.name)];
@@ -531,7 +614,11 @@ pub fn run_attempt(
         state.consecutive_failures += 1;
         return rec;
     }
-    let t = env.model.measure_ms(problem, &proposed, rng);
+    let t = ev.value(&EvalRequest::measured(
+        pidx,
+        proposed.clone(),
+        state.measure.next_stream(),
+    ));
     rec.outcome = AttemptOutcome::Correct { time_ms: t };
     rec.kernel_names = vec![format!("{}_custom_kernel", problem.name)];
     if rng.chance(tier.minor_issue_rate) {
@@ -575,6 +662,23 @@ mod tests {
         let problems = suite();
         let sols: Vec<SolAnalysis> = problems.iter().map(|p| analyze(p, &H100_SXM)).collect();
         (model, problems, sols)
+    }
+
+    #[test]
+    fn variant_spec_json_roundtrips() {
+        let mut spec = VariantSpec::new(ControllerKind::OrchestratedSol, true, ModelTier::Max)
+            .with_online_integrity();
+        spec.guardrails = true;
+        spec.attempts = 12;
+        let parsed = VariantSpec::from_json(
+            &crate::util::json::Json::parse(&spec.to_json().to_string()).unwrap(),
+        )
+        .unwrap();
+        // VariantSpec is not PartialEq (Copy config struct); compare the
+        // serialized identity and the derived stream id
+        assert_eq!(parsed.to_json().to_string(), spec.to_json().to_string());
+        assert_eq!(parsed.stream_id(), spec.stream_id());
+        assert_eq!(parsed.label(), spec.label());
     }
 
     #[test]

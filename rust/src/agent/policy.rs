@@ -8,8 +8,9 @@
 //! to the ones targeting the analyzed bottleneck (paper §4.2).
 
 use crate::dsl;
+use crate::eval::{AnalyticEvaluator, EvalRequest, Evaluator};
 use crate::kernelbench::{Op, Problem};
-use crate::perfmodel::{CandidateConfig, PerfModel, SchedulerKind};
+use crate::perfmodel::{CandidateConfig, SchedulerKind};
 use crate::sol::{Bottleneck, SolAnalysis};
 use crate::util::rng::Pcg32;
 
@@ -130,9 +131,12 @@ pub fn targets_bottleneck(mv: OptMove, b: Bottleneck) -> bool {
 /// Select a move. `steering` carries the SOL analysis when the controller
 /// is SOL-guided; it (a) filters moves to the bottleneck and (b) shrinks
 /// estimate noise, modelling the structured Analyze→Nominate phases.
+/// Candidate estimation goes through the evaluator's batched path: one
+/// `eval_batch` covers the current config plus every move in the pool
+/// (ADR-003), hoisting the per-problem model terms out of the loop.
 pub fn select_move(
-    model: &PerfModel,
-    problem: &Problem,
+    ev: &AnalyticEvaluator,
+    pidx: usize,
     cfg: &CandidateConfig,
     tier: &TierParams,
     steering: Option<&SolAnalysis>,
@@ -153,7 +157,6 @@ pub fn select_move(
             pool = filtered;
         }
     }
-    let t_now = model.candidate_ms(problem, cfg);
     let sigma = tier.estimate_sigma * if steering.is_some() { 0.4 } else { 1.5 };
     // The model sometimes doesn't reason at all and picks randomly.
     let reasoned = rng.chance(tier.move_quality + if steering.is_some() { 0.25 } else { 0.0 });
@@ -162,11 +165,15 @@ pub fn select_move(
         let est = 1.0;
         return Some((mv, est));
     }
+    let reqs: Vec<EvalRequest> = std::iter::once(cfg.clone())
+        .chain(pool.iter().map(|&mv| apply_move(cfg, mv, quality_gain)))
+        .map(|c| EvalRequest::candidate(pidx, c))
+        .collect();
+    let est_ms = ev.eval_batch(&reqs);
+    let t_now = est_ms[0].value;
     let mut best: Option<(OptMove, f64, f64)> = None; // (move, noisy estimate, bias)
-    for &mv in &pool {
-        let cand = apply_move(cfg, mv, quality_gain);
-        let t_new = model.candidate_ms(problem, &cand);
-        let true_speedup = t_now / t_new;
+    for (&mv, t_new) in pool.iter().zip(&est_ms[1..]) {
+        let true_speedup = t_now / t_new.value;
         let bias = match mv {
             OptMove::UseFp16 | OptMove::UseBf16 => tier.fp16_move_bias,
             _ => 1.0,
@@ -394,15 +401,16 @@ mod tests {
     #[test]
     fn steered_selection_finds_fp16_on_compute_bound() {
         let s = suite();
-        let p = &s[find(&s, "L1-1").unwrap()]; // compute-bound GEMM
-        let sol = analyze(p, &H100_SXM);
-        let model = PerfModel::new(H100_SXM.clone());
+        let pidx = find(&s, "L1-1").unwrap(); // compute-bound GEMM
+        let sols: Vec<SolAnalysis> = s.iter().map(|p| analyze(p, &H100_SXM)).collect();
+        let model = crate::perfmodel::PerfModel::new(H100_SXM.clone());
+        let ev = AnalyticEvaluator::new(&model, &s, &sols);
         let cfg = CandidateConfig::library((128, 128, 64), dsl::DType::Fp32);
         let mut hits = 0;
         let mut rng = Pcg32::new(11, 1);
         for _ in 0..50 {
             if let Some((mv, _)) = select_move(
-                &model, p, &cfg, &crate::agent::tiers::MID, Some(&sol), 0.1, &mut rng,
+                &ev, pidx, &cfg, &crate::agent::tiers::MID, Some(&sols[pidx]), 0.1, &mut rng,
             ) {
                 if matches!(mv, OptMove::UseFp16 | OptMove::UseBf16) {
                     hits += 1;
@@ -415,14 +423,16 @@ mod tests {
     #[test]
     fn unsteered_mini_is_noisier() {
         let s = suite();
-        let p = &s[find(&s, "L1-1").unwrap()];
-        let model = PerfModel::new(H100_SXM.clone());
+        let pidx = find(&s, "L1-1").unwrap();
+        let sols: Vec<SolAnalysis> = s.iter().map(|p| analyze(p, &H100_SXM)).collect();
+        let model = crate::perfmodel::PerfModel::new(H100_SXM.clone());
+        let ev = AnalyticEvaluator::new(&model, &s, &sols);
         let cfg = CandidateConfig::library((128, 128, 64), dsl::DType::Fp32);
         let mut hits = 0;
         let mut rng = Pcg32::new(13, 1);
         for _ in 0..60 {
             if let Some((mv, _)) =
-                select_move(&model, p, &cfg, &crate::agent::tiers::MINI, None, 0.1, &mut rng)
+                select_move(&ev, pidx, &cfg, &crate::agent::tiers::MINI, None, 0.1, &mut rng)
             {
                 if matches!(mv, OptMove::UseFp16 | OptMove::UseBf16) {
                     hits += 1;

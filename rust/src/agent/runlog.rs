@@ -90,6 +90,34 @@ impl ProblemRun {
             );
         o
     }
+
+    /// Inverse of [`Self::to_json`] — exact round-trip, including the
+    /// attempts' compiled plans (reconstructed through `plans`). This is
+    /// what lets `repro merge` reassemble shard output field-for-field
+    /// identical to a single-process run (floats survive: the JSON writer
+    /// emits shortest-roundtrip representations).
+    pub fn from_json(
+        j: &Json,
+        plans: &mut crate::dsl::PlanCache,
+    ) -> Result<ProblemRun, String> {
+        let field = |k: &str| j.get(k).ok_or_else(|| format!("run: missing {k}"));
+        Ok(ProblemRun {
+            problem_idx: field("problem_idx")?
+                .as_u64()
+                .ok_or("run: bad problem_idx")? as usize,
+            t_ref_ms: field("t_ref_ms")?.as_f64().ok_or("run: bad t_ref_ms")?,
+            t_sol_ms: field("t_sol_ms")?.as_f64().ok_or("run: bad t_sol_ms")?,
+            t_sol_fp16_ms: field("t_sol_fp16_ms")?
+                .as_f64()
+                .ok_or("run: bad t_sol_fp16_ms")?,
+            attempts: field("attempts")?
+                .as_arr()
+                .ok_or("run: attempts not an array")?
+                .iter()
+                .map(|a| AttemptRecord::from_json(a, plans))
+                .collect::<Result<Vec<_>, String>>()?,
+        })
+    }
 }
 
 /// A complete run: one variant over the whole suite.
@@ -125,6 +153,27 @@ impl RunLog {
             .set("price_per_mtok", self.price_per_mtok)
             .set("runs", Json::Arr(self.runs.iter().map(|r| r.to_json()).collect()));
         o
+    }
+
+    /// Inverse of [`Self::to_json`] (see [`ProblemRun::from_json`]).
+    pub fn from_json(j: &Json, plans: &mut crate::dsl::PlanCache) -> Result<RunLog, String> {
+        let field = |k: &str| j.get(k).ok_or_else(|| format!("log: missing {k}"));
+        Ok(RunLog {
+            variant: field("variant")?
+                .as_str()
+                .ok_or("log: variant not a string")?
+                .to_string(),
+            tier_name: field("tier")?.as_str().ok_or("log: tier not a string")?.to_string(),
+            price_per_mtok: field("price_per_mtok")?
+                .as_f64()
+                .ok_or("log: bad price_per_mtok")?,
+            runs: field("runs")?
+                .as_arr()
+                .ok_or("log: runs not an array")?
+                .iter()
+                .map(|r| ProblemRun::from_json(r, plans))
+                .collect::<Result<Vec<_>, String>>()?,
+        })
     }
 }
 

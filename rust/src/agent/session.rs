@@ -17,8 +17,9 @@
 //! they are `Send` and can be fanned across the `exec` thread pool.
 
 use crate::dsl;
+use crate::eval::{EvalRequest, Evaluator};
 use crate::sol::SolAnalysis;
-use crate::util::rng::{stream, Pcg32};
+use crate::util::rng::{stream, MeasureSeq, Pcg32, StreamPath};
 
 use super::attempt::AttemptRecord;
 use super::controller::{modifiers, run_attempt, AgentState, Env, Modifiers, VariantSpec};
@@ -52,10 +53,21 @@ pub struct FlatSession<'a> {
 
 impl<'a> FlatSession<'a> {
     pub fn new(env: Env<'a>, spec: &VariantSpec, pidx: usize, seed: u64) -> Self {
-        let mut rng =
+        let rng =
             Pcg32::derive(seed, &[stream::FLAT_CONTROLLER, spec.stream_id(), pidx as u64]);
         let mods = modifiers(spec);
-        let t_ref_ms = env.model.measure_baseline_ms(&env.problems[pidx], &mut rng);
+        // Measurement noise lives on its own derived streams, one per
+        // measurement (ADR-003): the baseline takes stream 0, attempt
+        // measurements continue the sequence. Replaying a serialized
+        // request therefore cannot drift from the in-process order.
+        let mut measure = MeasureSeq::new(StreamPath::new(
+            seed,
+            &[stream::MEASURE, stream::FLAT_CONTROLLER, spec.stream_id(), pidx as u64],
+        ));
+        let t_ref_ms = env
+            .evaluator()
+            .eval(&EvalRequest::measured_baseline(pidx, measure.next_stream()))
+            .value;
         let state = AgentState {
             best_time_ms: f64::INFINITY,
             t_ref_ms,
@@ -63,6 +75,7 @@ impl<'a> FlatSession<'a> {
             gamed: None,
             consecutive_failures: 0,
             tokens: 0,
+            measure,
         };
         FlatSession {
             env,

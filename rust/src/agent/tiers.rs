@@ -30,6 +30,24 @@ impl ModelTier {
         }
     }
 
+    /// Stable serialization token (shared with the CLI's `--tier`).
+    pub fn token(&self) -> &'static str {
+        match self {
+            ModelTier::Mini => "mini",
+            ModelTier::Mid => "mid",
+            ModelTier::Max => "max",
+        }
+    }
+
+    pub fn parse_token(s: &str) -> Option<ModelTier> {
+        match s {
+            "mini" => Some(ModelTier::Mini),
+            "mid" => Some(ModelTier::Mid),
+            "max" => Some(ModelTier::Max),
+            _ => None,
+        }
+    }
+
     pub fn params(&self) -> &'static TierParams {
         match self {
             ModelTier::Mini => &MINI,

@@ -261,12 +261,7 @@ fn resolve_kernel(k: &ConfigIr) -> KernelStagePlan {
 pub fn config_hash(ir: &ProgramIr) -> String {
     let mut canon = String::with_capacity(512);
     canon_program(&mut canon, ir);
-    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-    for b in canon.bytes() {
-        h ^= b as u64;
-        h = h.wrapping_mul(0x1000_0000_01b3);
-    }
-    format!("{h:016x}")
+    format!("{:016x}", crate::util::fnv64(canon.as_bytes()))
 }
 
 fn canon_program(out: &mut String, ir: &ProgramIr) {

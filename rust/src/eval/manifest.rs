@@ -1,0 +1,578 @@
+//! Out-of-process evaluation: JSON work manifests, response shards, and
+//! deterministic merge (ADR-003; ROADMAP "shard `eval_variants` across
+//! processes/machines").
+//!
+//! Two layers share one discipline — work is identified by a stable key,
+//! shards are produced independently, and the merge re-emits results in
+//! the single-process order, so `shard × N + merge` is bit-identical to
+//! one process doing everything:
+//!
+//! * **Request level** — [`WorkManifest`] lists [`EvalRequest`]s;
+//!   [`evaluate_shard`] answers the subset a worker owns (stable
+//!   assignment by request-key hash); [`merge`] recombines shards into
+//!   exactly `eval_batch(manifest.requests)`. [`ManifestEvaluator`] is the
+//!   `Evaluator` face of this cycle: it records unanswered requests as
+//!   pending work and serves answered ones from the merged responses.
+//! * **Suite level** — [`SuiteWork`] names an `exec::eval_variants` job
+//!   (variant specs + seed); [`suite_shard`] runs the session tasks whose
+//!   rank falls in the worker's residue class, [`suite_merge`] reassembles
+//!   the full [`RunLog`]s field-for-field identical to the single-process
+//!   result (the CI golden test). Sequentially-coupled variants
+//!   (orchestrated + cross-memory) stay whole-variant tasks, exactly as in
+//!   the parallel engine (ADR-002).
+
+use std::cell::RefCell;
+use std::collections::{BTreeMap, BTreeSet};
+
+use crate::agent::controller::VariantSpec;
+use crate::agent::{ProblemRun, RunLog};
+use crate::exec;
+use crate::experiments::runner::Bench;
+use crate::mantis::MantisConfig;
+use crate::util::json::Json;
+
+use super::{EvalRequest, EvalResponse, Evaluator};
+
+// ===========================================================================
+// Request-level protocol
+// ===========================================================================
+
+/// A JSON-serializable list of pending evaluation requests.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkManifest {
+    pub version: u64,
+    pub requests: Vec<EvalRequest>,
+}
+
+impl WorkManifest {
+    pub fn new(requests: Vec<EvalRequest>) -> WorkManifest {
+        WorkManifest { version: 1, requests }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("version", self.version)
+            .set("requests", Json::Arr(self.requests.iter().map(|r| r.to_json()).collect()));
+        o
+    }
+
+    pub fn parse(text: &str) -> Result<WorkManifest, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        let version = j.get("version").and_then(|v| v.as_u64()).unwrap_or(1);
+        let requests = j
+            .get("requests")
+            .and_then(|r| r.as_arr())
+            .ok_or("manifest: missing requests array")?
+            .iter()
+            .map(|r| EvalRequest::from_json(r).ok_or_else(|| format!("bad request: {r}")))
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(WorkManifest { version, requests })
+    }
+}
+
+/// One worker's completed responses.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResponseShard {
+    pub index: usize,
+    pub of: usize,
+    pub responses: Vec<EvalResponse>,
+}
+
+impl ResponseShard {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("index", self.index)
+            .set("of", self.of)
+            .set("responses", Json::Arr(self.responses.iter().map(|r| r.to_json()).collect()));
+        o
+    }
+
+    pub fn parse(text: &str) -> Result<ResponseShard, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        Ok(ResponseShard {
+            index: j.get("index").and_then(|v| v.as_u64()).ok_or("shard: missing index")?
+                as usize,
+            of: j.get("of").and_then(|v| v.as_u64()).ok_or("shard: missing of")? as usize,
+            responses: j
+                .get("responses")
+                .and_then(|r| r.as_arr())
+                .ok_or("shard: missing responses")?
+                .iter()
+                .map(|r| EvalResponse::from_json(r).ok_or_else(|| format!("bad response: {r}")))
+                .collect::<Result<Vec<_>, String>>()?,
+        })
+    }
+}
+
+/// Stable shard assignment: FNV-64 of the request key, mod `of`. Every
+/// worker computes the same partition from the manifest alone — no
+/// coordinator state.
+pub fn shard_assignment(key: &str, of: usize) -> usize {
+    (crate::util::fnv64(key.as_bytes()) % of.max(1) as u64) as usize
+}
+
+/// Evaluate the manifest subset assigned to shard `index` of `of`.
+pub fn evaluate_shard<E: Evaluator>(
+    inner: &E,
+    manifest: &WorkManifest,
+    index: usize,
+    of: usize,
+) -> ResponseShard {
+    let assigned: Vec<EvalRequest> = manifest
+        .requests
+        .iter()
+        .filter(|r| shard_assignment(&r.key(), of) == index)
+        .cloned()
+        .collect();
+    ResponseShard { index, of, responses: inner.eval_batch(&assigned) }
+}
+
+/// Merge completed shards back into the single-process answer: one
+/// response per manifest request, in manifest order. Responses are
+/// deduplicated by key (sorted — the deterministic merge ordering);
+/// conflicting payloads for one key or missing keys are errors. For any
+/// deterministic backend, `merge(manifest, shards) ==
+/// inner.eval_batch(&manifest.requests)` exactly.
+pub fn merge(
+    manifest: &WorkManifest,
+    shards: &[ResponseShard],
+) -> Result<Vec<EvalResponse>, String> {
+    let mut by_key: BTreeMap<String, EvalResponse> = BTreeMap::new();
+    for s in shards {
+        for r in &s.responses {
+            match by_key.get(&r.key) {
+                Some(prev) if *prev != *r => {
+                    return Err(format!("conflicting responses for key {}", r.key));
+                }
+                _ => {
+                    by_key.insert(r.key.clone(), r.clone());
+                }
+            }
+        }
+    }
+    manifest
+        .requests
+        .iter()
+        .map(|q| {
+            let k = q.key();
+            by_key.get(&k).cloned().ok_or_else(|| format!("missing response for key {k}"))
+        })
+        .collect()
+}
+
+/// The out-of-process [`Evaluator`]: requests it cannot answer from its
+/// merged-response store are recorded as pending work (answered in-band
+/// with `pass == false`, detail `"pending"`), to be written out with
+/// [`ManifestEvaluator::pending_manifest`], farmed to workers, merged, and
+/// loaded back — after which the same call sites get real answers.
+#[derive(Default)]
+pub struct ManifestEvaluator {
+    pending: RefCell<Vec<EvalRequest>>,
+    completed: BTreeMap<String, EvalResponse>,
+}
+
+impl ManifestEvaluator {
+    pub fn new() -> ManifestEvaluator {
+        ManifestEvaluator::default()
+    }
+
+    /// Load merged responses (serving store) from a manifest + shards.
+    pub fn with_responses(
+        manifest: &WorkManifest,
+        shards: &[ResponseShard],
+    ) -> Result<ManifestEvaluator, String> {
+        Ok(ManifestEvaluator {
+            pending: RefCell::new(Vec::new()),
+            completed: merged_by_key(manifest, shards)?,
+        })
+    }
+
+    /// The pending work recorded so far, deduplicated by key in first-seen
+    /// order.
+    pub fn pending_manifest(&self) -> WorkManifest {
+        let mut seen = BTreeSet::new();
+        let reqs = self
+            .pending
+            .borrow()
+            .iter()
+            .filter(|r| seen.insert(r.key()))
+            .cloned()
+            .collect();
+        WorkManifest::new(reqs)
+    }
+
+    pub fn pending_len(&self) -> usize {
+        self.pending.borrow().len()
+    }
+}
+
+impl Evaluator for ManifestEvaluator {
+    fn eval_batch(&self, reqs: &[EvalRequest]) -> Vec<EvalResponse> {
+        reqs.iter()
+            .map(|r| match self.completed.get(&r.key()) {
+                Some(resp) => resp.clone(),
+                None => {
+                    self.pending.borrow_mut().push(r.clone());
+                    EvalResponse::error(r, "pending")
+                }
+            })
+            .collect()
+    }
+}
+
+/// [`merge`] folded into a by-key lookup store — the shared construction
+/// behind both serving evaluators.
+fn merged_by_key(
+    manifest: &WorkManifest,
+    shards: &[ResponseShard],
+) -> Result<BTreeMap<String, EvalResponse>, String> {
+    let mut by_key = BTreeMap::new();
+    for r in merge(manifest, shards)? {
+        by_key.insert(r.key.clone(), r);
+    }
+    Ok(by_key)
+}
+
+/// Read-only evaluator over an already-merged response set (no pending
+/// recording): the pure replay face.
+pub struct MergedEvaluator {
+    by_key: BTreeMap<String, EvalResponse>,
+}
+
+impl MergedEvaluator {
+    pub fn new(
+        manifest: &WorkManifest,
+        shards: &[ResponseShard],
+    ) -> Result<MergedEvaluator, String> {
+        Ok(MergedEvaluator { by_key: merged_by_key(manifest, shards)? })
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_key.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_key.is_empty()
+    }
+}
+
+impl Evaluator for MergedEvaluator {
+    fn eval_batch(&self, reqs: &[EvalRequest]) -> Vec<EvalResponse> {
+        reqs.iter()
+            .map(|r| match self.by_key.get(&r.key()) {
+                Some(resp) => resp.clone(),
+                None => EvalResponse::error(r, "not in merged response set"),
+            })
+            .collect()
+    }
+}
+
+// ===========================================================================
+// Suite-level protocol (`repro shard` / `repro merge`)
+// ===========================================================================
+
+/// A suite evaluation job: what `exec::eval_variants` runs, serialized.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SuiteWork {
+    pub seed: u64,
+    /// Suite size the job was defined against (guards shard/merge skew).
+    pub problems: usize,
+    pub work: Vec<(VariantSpec, Option<MantisConfig>)>,
+}
+
+impl SuiteWork {
+    pub fn single(spec: VariantSpec, cfg: Option<MantisConfig>, seed: u64, problems: usize) -> SuiteWork {
+        SuiteWork { seed, problems, work: vec![(spec, cfg)] }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("seed", format!("{:x}", self.seed)).set("problems", self.problems).set(
+            "work",
+            Json::Arr(
+                self.work
+                    .iter()
+                    .map(|(spec, cfg)| {
+                        let mut w = Json::obj();
+                        w.set("spec", spec.to_json())
+                            .set("mantis", cfg.as_ref().map(|c| c.to_json()).unwrap_or(Json::Null));
+                        w
+                    })
+                    .collect(),
+            ),
+        );
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<SuiteWork, String> {
+        let seed = j
+            .get("seed")
+            .and_then(|s| s.as_str())
+            .and_then(|s| u64::from_str_radix(s, 16).ok())
+            .ok_or("suite work: missing seed")?;
+        let problems = j
+            .get("problems")
+            .and_then(|p| p.as_u64())
+            .ok_or("suite work: missing problems")? as usize;
+        let work = j
+            .get("work")
+            .and_then(|w| w.as_arr())
+            .ok_or("suite work: missing work array")?
+            .iter()
+            .map(|w| {
+                let spec = VariantSpec::from_json(
+                    w.get("spec").ok_or("work item: missing spec")?,
+                )?;
+                let cfg = match w.get("mantis") {
+                    Some(Json::Null) | None => None,
+                    Some(c) => Some(MantisConfig::from_json(c)?),
+                };
+                Ok((spec, cfg))
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(SuiteWork { seed, problems, work })
+    }
+}
+
+/// One completed suite task: its key plus the resulting problem runs (one
+/// for an independent task, the whole suite for a whole-variant task).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SuiteTaskResult {
+    pub key: String,
+    pub runs: Vec<ProblemRun>,
+}
+
+/// One worker's share of a suite job. Self-describing: carries the job so
+/// `repro merge` needs nothing but shard files.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SuiteShard {
+    pub work: SuiteWork,
+    pub index: usize,
+    pub of: usize,
+    pub results: Vec<SuiteTaskResult>,
+}
+
+impl SuiteShard {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("work", self.work.to_json()).set("index", self.index).set("of", self.of).set(
+            "results",
+            Json::Arr(
+                self.results
+                    .iter()
+                    .map(|r| {
+                        let mut t = Json::obj();
+                        t.set("key", r.key.clone()).set(
+                            "runs",
+                            Json::Arr(r.runs.iter().map(|run| run.to_json()).collect()),
+                        );
+                        t
+                    })
+                    .collect(),
+            ),
+        );
+        o
+    }
+
+    pub fn parse(text: &str) -> Result<SuiteShard, String> {
+        let j = Json::parse(text).map_err(|e| e.to_string())?;
+        let work = SuiteWork::from_json(j.get("work").ok_or("shard: missing work")?)?;
+        let index =
+            j.get("index").and_then(|v| v.as_u64()).ok_or("shard: missing index")? as usize;
+        let of = j.get("of").and_then(|v| v.as_u64()).ok_or("shard: missing of")? as usize;
+        // one plan cache across the whole shard: repeated configurations
+        // reconstruct their KernelPlan once
+        let mut plans = crate::dsl::PlanCache::new();
+        let results = j
+            .get("results")
+            .and_then(|r| r.as_arr())
+            .ok_or("shard: missing results")?
+            .iter()
+            .map(|t| {
+                let key = t
+                    .get("key")
+                    .and_then(|k| k.as_str())
+                    .ok_or("task result: missing key")?
+                    .to_string();
+                let runs = t
+                    .get("runs")
+                    .and_then(|r| r.as_arr())
+                    .ok_or("task result: missing runs")?
+                    .iter()
+                    .map(|run| ProblemRun::from_json(run, &mut plans))
+                    .collect::<Result<Vec<_>, String>>()?;
+                Ok(SuiteTaskResult { key, runs })
+            })
+            .collect::<Result<Vec<_>, String>>()?;
+        Ok(SuiteShard { work, index, of, results })
+    }
+}
+
+/// Run shard `index` of `of`: the suite tasks whose rank (in the
+/// deterministic `exec::suite_tasks` enumeration) falls in this worker's
+/// residue class.
+pub fn suite_shard(bench: &Bench, work: &SuiteWork, index: usize, of: usize) -> SuiteShard {
+    assert_eq!(
+        bench.problems.len(),
+        work.problems,
+        "suite size mismatch between job and bench"
+    );
+    let tasks = exec::suite_tasks(&work.work, work.problems);
+    let results = tasks
+        .iter()
+        .enumerate()
+        .filter(|(rank, _)| rank % of.max(1) == index)
+        .map(|(_, t)| SuiteTaskResult {
+            key: t.key(),
+            runs: exec::run_suite_task(bench, &work.work, *t, work.seed),
+        })
+        .collect();
+    SuiteShard { work: work.clone(), index, of, results }
+}
+
+/// Merge suite shards into the full per-variant [`RunLog`]s, in variant
+/// order with runs in problem order — field-for-field identical to
+/// `exec::eval_variants(bench, &work, seed, 1)` (the CI golden test).
+pub fn suite_merge(shards: &[SuiteShard]) -> Result<Vec<RunLog>, String> {
+    let first = shards.first().ok_or("no shards to merge")?;
+    let work_json = first.work.to_json().to_string();
+    let mut by_key: BTreeMap<String, Vec<ProblemRun>> = BTreeMap::new();
+    for s in shards {
+        if s.of != first.of {
+            return Err(format!("shard count mismatch: {} vs {}", s.of, first.of));
+        }
+        if s.work.to_json().to_string() != work_json {
+            return Err(format!("shard {} belongs to a different job", s.index));
+        }
+        for r in &s.results {
+            if by_key.insert(r.key.clone(), r.runs.clone()).is_some() {
+                return Err(format!("duplicate task {}", r.key));
+            }
+        }
+    }
+    let tasks = exec::suite_tasks(&first.work.work, first.work.problems);
+    let mut logs = Vec::with_capacity(first.work.work.len());
+    for (v, (spec, _)) in first.work.work.iter().enumerate() {
+        let mut runs: Vec<ProblemRun> = Vec::new();
+        for t in tasks.iter().filter(|t| t.variant == v) {
+            let got = by_key
+                .remove(&t.key())
+                .ok_or_else(|| format!("missing task {} (incomplete shard set?)", t.key()))?;
+            match t.problem {
+                Some(_) => {
+                    if got.len() != 1 {
+                        return Err(format!("task {}: expected 1 run, got {}", t.key(), got.len()));
+                    }
+                    runs.extend(got);
+                }
+                None => runs = got,
+            }
+        }
+        logs.push(exec::assemble_log(spec, runs));
+    }
+    if let Some(k) = by_key.keys().next() {
+        return Err(format!("unexpected task {k} not in the job's task list"));
+    }
+    Ok(logs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::DType;
+    use crate::eval::AnalyticEvaluator;
+    use crate::perfmodel::CandidateConfig;
+    use crate::util::rng::{stream, StreamPath};
+
+    fn requests() -> Vec<EvalRequest> {
+        let mut reqs = Vec::new();
+        for p in [0usize, 2, 5, 9] {
+            reqs.push(EvalRequest::baseline(p));
+            for (i, &tile) in crate::agent::policy::TILES.iter().take(4).enumerate() {
+                let cfg = CandidateConfig::library(tile, DType::Fp16);
+                reqs.push(EvalRequest::candidate(p, cfg.clone()));
+                reqs.push(EvalRequest::measured(
+                    p,
+                    cfg,
+                    StreamPath::new(11, &[stream::MEASURE, p as u64, i as u64]),
+                ));
+            }
+        }
+        reqs
+    }
+
+    #[test]
+    fn request_shard_merge_equals_single_batch() {
+        let bench = Bench::new();
+        let ev = AnalyticEvaluator::new(&bench.model, &bench.problems, &bench.sols);
+        let manifest = WorkManifest::new(requests());
+        let single = ev.eval_batch(&manifest.requests);
+        for n in [1usize, 2, 3, 5] {
+            // roundtrip the manifest and every shard through JSON text
+            let manifest2 =
+                WorkManifest::parse(&manifest.to_json().to_string()).unwrap();
+            assert_eq!(manifest2, manifest);
+            let shards: Vec<ResponseShard> = (0..n)
+                .map(|i| {
+                    let s = evaluate_shard(&ev, &manifest2, i, n);
+                    ResponseShard::parse(&s.to_json().to_string()).unwrap()
+                })
+                .collect();
+            let merged = merge(&manifest2, &shards).unwrap();
+            assert_eq!(merged, single, "{n} shards must merge to the single-process batch");
+        }
+    }
+
+    #[test]
+    fn merge_rejects_incomplete_and_conflicting_shards() {
+        let bench = Bench::new();
+        let ev = AnalyticEvaluator::new(&bench.model, &bench.problems, &bench.sols);
+        let manifest = WorkManifest::new(requests());
+        let s0 = evaluate_shard(&ev, &manifest, 0, 2);
+        let s1 = evaluate_shard(&ev, &manifest, 1, 2);
+        assert!(merge(&manifest, &[s0.clone()]).is_err(), "missing shard must fail");
+        let mut bad = s1.clone();
+        bad.responses[0].value += 1.0;
+        assert!(
+            merge(&manifest, &[s0.clone(), s1, bad]).is_err(),
+            "conflicting payloads must fail"
+        );
+    }
+
+    #[test]
+    fn manifest_evaluator_records_then_serves() {
+        let bench = Bench::new();
+        let ev = AnalyticEvaluator::new(&bench.model, &bench.problems, &bench.sols);
+        let reqs = requests();
+
+        // phase 1: nothing known, everything pending
+        let collector = ManifestEvaluator::new();
+        let pending_responses = collector.eval_batch(&reqs);
+        assert!(pending_responses.iter().all(|r| !r.pass));
+        let manifest = collector.pending_manifest();
+        assert_eq!(manifest.requests.len(), reqs.len());
+
+        // phase 2: workers answer, merge, reload
+        let shards: Vec<ResponseShard> =
+            (0..3).map(|i| evaluate_shard(&ev, &manifest, i, 3)).collect();
+        let served = ManifestEvaluator::with_responses(&manifest, &shards).unwrap();
+        assert_eq!(served.eval_batch(&reqs), ev.eval_batch(&reqs));
+        assert_eq!(served.pending_len(), 0);
+
+        // the read-only replay face agrees too
+        let merged = MergedEvaluator::new(&manifest, &shards).unwrap();
+        assert_eq!(merged.eval_batch(&reqs), ev.eval_batch(&reqs));
+    }
+
+    #[test]
+    fn shard_assignment_is_stable_and_total() {
+        let reqs = requests();
+        for n in [1usize, 2, 7] {
+            for r in &reqs {
+                let a = shard_assignment(&r.key(), n);
+                assert!(a < n);
+                assert_eq!(a, shard_assignment(&r.key(), n), "stable");
+            }
+        }
+    }
+}

@@ -14,7 +14,11 @@
 //!
 //! `figures.rs`, `examples/full_eval.rs`, and the `repro` CLI all route
 //! their suite evaluations through here; `--jobs N` selects the worker
-//! count (`0` = all cores, `1` = the serial reference path).
+//! count (`0` = all cores, `1` = the serial reference path). The
+//! cross-process shard/merge protocol (`eval::manifest`, `repro shard` /
+//! `repro merge`) partitions the same canonical [`suite_tasks`]
+//! enumeration, so a sharded run merges back bit-identical to both the
+//! serial and the in-process parallel paths.
 
 pub mod pool;
 
@@ -52,12 +56,73 @@ fn run_one(
     }
 }
 
-fn assemble(spec: &VariantSpec, runs: Vec<ProblemRun>) -> RunLog {
+/// Assemble a [`RunLog`] from a spec and its per-problem runs — the one
+/// construction every execution path (serial, parallel, sharded merge)
+/// shares, so their outputs are comparable field-for-field.
+pub fn assemble_log(spec: &VariantSpec, runs: Vec<ProblemRun>) -> RunLog {
     RunLog {
         variant: spec.label(),
         tier_name: spec.tier.name().to_string(),
         price_per_mtok: spec.tier.params().price_per_mtok,
         runs,
+    }
+}
+
+/// One unit of a suite evaluation: an independent (variant, problem)
+/// session, or a whole sequentially-coupled variant (`problem == None`,
+/// the orchestrated + cross-memory case of ADR-002). The deterministic
+/// enumeration ([`suite_tasks`]) is shared by the parallel engine and the
+/// shard/merge protocol (`eval::manifest`), so "what shard i of n runs" is
+/// derived from the job description alone.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SuiteTask {
+    pub variant: usize,
+    pub problem: Option<usize>,
+}
+
+impl SuiteTask {
+    /// Stable task key for shard results ("v0003:p0042" / "v0003:whole").
+    pub fn key(&self) -> String {
+        match self.problem {
+            Some(p) => format!("v{:04}:p{:04}", self.variant, p),
+            None => format!("v{:04}:whole", self.variant),
+        }
+    }
+}
+
+/// Enumerate a suite evaluation's tasks in the canonical order: variants
+/// in `work` order, independent variants fanned per problem in problem
+/// order, coupled variants as one whole task.
+pub fn suite_tasks(
+    work: &[(VariantSpec, Option<MantisConfig>)],
+    n_problems: usize,
+) -> Vec<SuiteTask> {
+    let mut tasks = Vec::new();
+    for (v, (spec, cfg)) in work.iter().enumerate() {
+        if problems_independent(spec, cfg.as_ref()) {
+            for p in 0..n_problems {
+                tasks.push(SuiteTask { variant: v, problem: Some(p) });
+            }
+        } else {
+            tasks.push(SuiteTask { variant: v, problem: None });
+        }
+    }
+    tasks
+}
+
+/// Execute one suite task: one run for an independent task, the whole
+/// suite (in problem order) for a whole-variant task. Matches what the
+/// serial `run_variant` produces for the same positions bit-for-bit.
+pub fn run_suite_task(
+    bench: &Bench,
+    work: &[(VariantSpec, Option<MantisConfig>)],
+    task: SuiteTask,
+    seed: u64,
+) -> Vec<ProblemRun> {
+    let (spec, cfg) = &work[task.variant];
+    match task.problem {
+        Some(p) => vec![run_one(&bench.env(), spec, cfg.as_ref(), p, seed)],
+        None => run_variant(bench, spec, seed, cfg.as_ref()).runs,
     }
 }
 
@@ -78,7 +143,7 @@ pub fn run_variant_jobs(
     let runs = parallel_map(jobs, bench.problems.len(), |pidx| {
         run_one(&env, spec, mantis_cfg, pidx, seed)
     });
-    assemble(spec, runs)
+    assemble_log(spec, runs)
 }
 
 /// Evaluate several variants over the whole suite, fanning every
@@ -99,21 +164,10 @@ pub fn eval_variants(
             .collect();
     }
 
-    #[derive(Clone, Copy)]
-    enum Task {
-        One { v: usize, p: usize },
-        Whole { v: usize },
-    }
-    let mut tasks = Vec::new();
-    for (v, (spec, cfg)) in work.iter().enumerate() {
-        if problems_independent(spec, cfg.as_ref()) {
-            for p in 0..bench.problems.len() {
-                tasks.push(Task::One { v, p });
-            }
-        } else {
-            tasks.push(Task::Whole { v });
-        }
-    }
+    // The same canonical task enumeration the shard/merge protocol uses
+    // (eval::manifest): shard i of n runs ranks i, i+n, i+2n, … of exactly
+    // this list.
+    let tasks = suite_tasks(work, bench.problems.len());
 
     enum Done {
         One(usize, ProblemRun),
@@ -121,11 +175,11 @@ pub fn eval_variants(
     }
     let env = bench.env();
     let results = parallel_map(jobs, tasks.len(), |i| match tasks[i] {
-        Task::One { v, p } => {
+        SuiteTask { variant: v, problem: Some(p) } => {
             let (spec, cfg) = &work[v];
             Done::One(v, run_one(&env, spec, cfg.as_ref(), p, seed))
         }
-        Task::Whole { v } => {
+        SuiteTask { variant: v, problem: None } => {
             let (spec, cfg) = &work[v];
             Done::Whole(v, run_variant(bench, spec, seed, cfg.as_ref()))
         }
@@ -145,7 +199,7 @@ pub fn eval_variants(
         .enumerate()
         .map(|(v, (spec, _))| match whole[v].take() {
             Some(log) => log,
-            None => assemble(spec, std::mem::take(&mut per_variant[v])),
+            None => assemble_log(spec, std::mem::take(&mut per_variant[v])),
         })
         .collect()
 }

@@ -10,9 +10,10 @@
 
 use crate::agent::controller::Env;
 use crate::agent::{AttemptOutcome, AttemptRecord, GamingType, SolutionKind};
+use crate::eval::EvalRequest;
 use crate::integrity::IntegrityPipeline;
 use crate::perfmodel::CandidateConfig;
-use crate::util::rng::{stream, Pcg32};
+use crate::util::rng::{stream, MeasureSeq, Pcg32, StreamPath};
 
 /// One archived kernel for a problem.
 #[derive(Debug, Clone)]
@@ -61,6 +62,12 @@ pub fn generate_archive(
     seed: u64,
 ) -> Vec<ArchivedKernel> {
     let mut rng = Pcg32::derive(seed, &[stream::ARCHIVE_GEN, pidx as u64]);
+    let ev = env.evaluator();
+    // One derived noise stream per evolved measurement (ADR-003).
+    let mut measure = MeasureSeq::new(StreamPath::new(
+        seed,
+        &[stream::MEASURE, stream::ARCHIVE_GEN, pidx as u64],
+    ));
     let problem = &env.problems[pidx];
     if rng.chance(params.missing_rate) {
         return vec![]; // no correct kernel in the archive for this problem
@@ -75,8 +82,8 @@ pub fn generate_archive(
                 let ty = *rng.choice(&GamingType::ALL);
                 let honest = best
                     .as_ref()
-                    .map(|c| env.model.candidate_ms(problem, c))
-                    .unwrap_or_else(|| env.model.baseline_ms(problem));
+                    .map(|c| ev.value(&EvalRequest::candidate(pidx, c.clone())))
+                    .unwrap_or_else(|| ev.value(&EvalRequest::baseline(pidx)));
                 let t = match ty {
                     GamingType::ConstantOutput => 0.01,
                     _ => honest * 0.5,
@@ -90,7 +97,7 @@ pub fn generate_archive(
             }
             if rng.chance(params.pytorch_only_rate) {
                 kernels.push(ArchivedKernel {
-                    time_ms: env.model.baseline_ms(problem) * rng.range_f64(0.6, 0.95),
+                    time_ms: ev.value(&EvalRequest::baseline(pidx)) * rng.range_f64(0.6, 0.95),
                     kind: SolutionKind::PyTorchOnly,
                     kernel_names: vec!["void at::native::elementwise [cublas]".into()],
                 });
@@ -124,10 +131,10 @@ pub fn generate_archive(
                     .clamp(0.03, 0.95),
                 },
             };
-            let t = env.model.measure_ms(problem, &cfg, &mut rng);
+            let t = ev.value(&EvalRequest::measured(pidx, cfg.clone(), measure.next_stream()));
             let better = best
                 .as_ref()
-                .map(|b| t < env.model.candidate_ms(problem, b))
+                .map(|b| t < ev.value(&EvalRequest::candidate(pidx, b.clone())))
                 .unwrap_or(true);
             if better {
                 best = Some(cfg.clone());
@@ -153,8 +160,7 @@ pub fn review_archive(
     pipeline: &IntegrityPipeline,
     seed: u64,
 ) -> (f64, usize) {
-    let problem = &env.problems[pidx];
-    let t_ref = env.model.baseline_ms(problem);
+    let t_ref = env.evaluator().value(&EvalRequest::baseline(pidx));
     let t_sol = env.sols[pidx].t_sol_ms;
     let t_sol_fp16 = env.sols[pidx].t_sol_fp16_ms;
     let mut sorted: Vec<&ArchivedKernel> = kernels.iter().collect();

@@ -630,14 +630,14 @@ pub fn fig14(ctx: &mut ExpCtx) -> String {
     let geo_archive_accepted =
         metrics::geomean_speedup(&archive_sp.iter().copied().filter(|&s| s > 0.0).collect::<Vec<_>>());
 
-    // FP16 SOL curve (theoretical limit)
-    let sol_sp: Vec<f64> = ctx
-        .bench
-        .problems
-        .iter()
-        .enumerate()
-        .map(|(i, p)| ctx.bench.model.baseline_ms(p) / ctx.bench.sols[i].t_sol_fp16_ms)
-        .collect();
+    // FP16 SOL curve (theoretical limit): one batched SOL-gap evaluation
+    // over the whole suite (ADR-003)
+    let gap_reqs: Vec<crate::eval::EvalRequest> =
+        (0..ctx.bench.problems.len()).map(crate::eval::EvalRequest::sol_gap).collect();
+    let sol_sp: Vec<f64> = {
+        use crate::eval::Evaluator as _;
+        ctx.bench.evaluator().eval_batch(&gap_reqs).into_iter().map(|r| r.value).collect()
+    };
     let fp_sol = metrics::fast_p(&sol_sp, &grid);
     let geo_sol = metrics::geomean_speedup(&sol_sp);
 

@@ -29,6 +29,11 @@ impl Bench {
     pub fn env(&self) -> Env<'_> {
         Env { model: &self.model, problems: &self.problems, sols: &self.sols }
     }
+
+    /// The analytic measurement oracle over this bench (ADR-003).
+    pub fn evaluator(&self) -> crate::eval::AnalyticEvaluator<'_> {
+        self.env().evaluator()
+    }
 }
 
 impl Default for Bench {

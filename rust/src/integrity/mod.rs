@@ -70,8 +70,8 @@ pub struct IntegrityPipeline {
     /// P(LGD catches a gaming attempt) — high because the SOL report
     /// augments the spec, but not perfect.
     pub lgd_detect_rate: f64,
-    /// P(LGD labels a genuine kernel Minor) beyond真 minor issues (reviewer
-    /// conservatism).
+    /// P(LGD labels a genuine kernel Minor) beyond true minor issues
+    /// (reviewer conservatism).
     pub lgd_minor_fp_rate: f64,
 }
 

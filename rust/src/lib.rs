@@ -28,6 +28,10 @@
 //! * [`exec`] — deterministic parallel execution: a std-only work-stealing
 //!   pool fanning independent (variant, problem, seed) tasks across cores
 //!   with bit-identical output to the serial path (ADR-002).
+//! * [`eval`] — the unified evaluation backend API (ADR-003): the
+//!   `Evaluator` trait with batched `eval_batch`, serializable
+//!   `EvalRequest`/`EvalResponse`, analytic / PJRT / manifest backends,
+//!   and the shard/merge protocol behind `repro shard` + `repro merge`.
 //! * [`integrity`] — SOL-ceiling, LLM-game-detector and PyTorch-only
 //!   detectors with the full label taxonomy (paper §4.4, §6.3).
 //! * [`metrics`] — Fast-p / Attempt-Fast-p curves, signed area, retention.
@@ -47,6 +51,7 @@ pub mod agent;
 pub mod mantis;
 pub mod scheduler;
 pub mod exec;
+pub mod eval;
 pub mod integrity;
 pub mod metrics;
 pub mod runtime;

@@ -18,7 +18,8 @@ use std::io::Read;
 use std::process::ExitCode;
 
 use ucutlass_repro::agent::controller::{ControllerKind, VariantSpec};
-use ucutlass_repro::agent::ModelTier;
+use ucutlass_repro::agent::{ModelTier, RunLog};
+use ucutlass_repro::eval::manifest::{suite_merge, suite_shard, SuiteShard, SuiteWork};
 use ucutlass_repro::exec;
 use ucutlass_repro::experiments::figures::{self, ExpCtx};
 use ucutlass_repro::experiments::Bench;
@@ -85,6 +86,8 @@ fn run(args: &[String]) -> Result<(), String> {
         Some("run") => cmd_run(&pos, &opts, seed, jobs),
         Some("validate") => cmd_validate(&opts, seed),
         Some("schedule") => cmd_schedule(&opts, seed, jobs),
+        Some("shard") => cmd_shard(&opts, seed),
+        Some("merge") => cmd_merge(&pos, &opts),
         Some("list") => cmd_list(),
         _ => {
             println!("{}", HELP);
@@ -105,10 +108,17 @@ repro — µCUTLASS + SOL-guidance reproduction (see README.md)
             [--problems L1-1,L2-76] [--seed N] [--jobs N]
   repro validate [--artifacts artifacts] [--problem NAME] [--seed N]
   repro schedule --tier <mini|mid|max> [--eps 100] [--window 8] [--seed N] [--jobs N]
+  repro shard --index I --of N --tier <mini|mid|max> [--dsl] [--sol <orch|prompt>]
+            [--seed N] [--out FILE]
+  repro merge <shard.json>... [--out FILE]
   repro list
 
   --jobs N fans (variant, problem, seed) tasks across N worker threads
-  (0 = all cores); output is bit-identical to --jobs 1.";
+  (0 = all cores); output is bit-identical to --jobs 1.
+  shard/merge split the same evaluation across processes/machines: run
+  `repro shard --index I --of N ...` once per I with identical settings,
+  then `repro merge shard_*.json` — the merged log is bit-identical to a
+  single-process `repro run` of the same variant and seed.";
 
 fn cmd_exp(
     pos: &[String],
@@ -215,12 +225,9 @@ fn cmd_dsl(pos: &[String], opts: &HashMap<String, String>) -> Result<(), String>
     }
 }
 
-fn cmd_run(
-    _pos: &[String],
-    opts: &HashMap<String, String>,
-    seed: u64,
-    jobs: usize,
-) -> Result<(), String> {
+/// Build the single-variant spec `repro run` and `repro shard` share from
+/// `--tier` / `--dsl` / `--sol`.
+fn spec_from_opts(opts: &HashMap<String, String>) -> Result<VariantSpec, String> {
     let tier = tier_of(opts.get("tier").map(String::as_str).unwrap_or("mini"))?;
     let dsl_on = opts.contains_key("dsl");
     let controller = match opts.get("sol").map(String::as_str) {
@@ -229,24 +236,17 @@ fn cmd_run(
         None => ControllerKind::Mi,
         Some(other) => return Err(format!("unknown --sol `{other}` (orch|prompt)")),
     };
-    let spec = VariantSpec::new(controller, dsl_on, tier);
-    let bench = Bench::new();
-    let selected: Vec<usize> = match opts.get("problems") {
-        Some(list) => list
-            .split(',')
-            .map(|id| {
-                kernelbench::find(&bench.problems, id).ok_or(format!("unknown problem {id}"))
-            })
-            .collect::<Result<_, _>>()?,
-        None => (0..bench.problems.len()).collect(),
-    };
-    let log = exec::run_variant_jobs(&bench, &spec, seed, None, jobs);
+    Ok(VariantSpec::new(controller, dsl_on, tier))
+}
+
+/// The per-problem summary table `repro run` and `repro merge` share.
+fn print_log(bench: &Bench, log: &RunLog, review_seed: u64, selected: &[usize]) {
     let pipeline = IntegrityPipeline::default();
     let mut rows = Vec::new();
     let mut speedups = Vec::new();
-    for &i in &selected {
+    for &i in selected {
         let run = &log.runs[i];
-        let sp = pipeline.filtered_speedup(run, seed).unwrap_or(1.0);
+        let sp = pipeline.filtered_speedup(run, review_seed).unwrap_or(1.0);
         speedups.push(sp);
         rows.push(vec![
             bench.problems[i].id.to_string(),
@@ -258,7 +258,7 @@ fn cmd_run(
             format!("{}", run.total_tokens()),
         ]);
     }
-    println!("variant: {}", spec.label());
+    println!("variant: {}", log.variant);
     println!(
         "{}",
         table(
@@ -273,6 +273,101 @@ fn cmd_run(
         metrics::median_speedup(&speedups),
         log.dollar_cost()
     );
+}
+
+fn cmd_run(
+    _pos: &[String],
+    opts: &HashMap<String, String>,
+    seed: u64,
+    jobs: usize,
+) -> Result<(), String> {
+    let spec = spec_from_opts(opts)?;
+    let bench = Bench::new();
+    let selected: Vec<usize> = match opts.get("problems") {
+        Some(list) => list
+            .split(',')
+            .map(|id| {
+                kernelbench::find(&bench.problems, id).ok_or(format!("unknown problem {id}"))
+            })
+            .collect::<Result<_, _>>()?,
+        None => (0..bench.problems.len()).collect(),
+    };
+    let log = exec::run_variant_jobs(&bench, &spec, seed, None, jobs);
+    print_log(&bench, &log, seed, &selected);
+    Ok(())
+}
+
+fn cmd_shard(opts: &HashMap<String, String>, seed: u64) -> Result<(), String> {
+    let index: usize = opts
+        .get("index")
+        .and_then(|s| s.parse().ok())
+        .ok_or("shard: --index I required")?;
+    let of: usize =
+        opts.get("of").and_then(|s| s.parse().ok()).ok_or("shard: --of N required")?;
+    if of == 0 || index >= of {
+        return Err(format!("shard: --index must be in 0..{of}"));
+    }
+    let spec = spec_from_opts(opts)?;
+    let bench = Bench::new();
+    // Sequentially-coupled variants (orchestrated cross-memory chain) are
+    // one whole-variant task: the shard that owns it runs everything,
+    // exactly as in the in-process parallel engine (ADR-002).
+    let work = SuiteWork::single(spec, None, seed, bench.problems.len());
+    let shard = suite_shard(&bench, &work, index, of);
+    let out = opts
+        .get("out")
+        .cloned()
+        .unwrap_or_else(|| format!("shard_{index}_of_{of}.json"));
+    std::fs::write(&out, shard.to_json().to_string()).map_err(|e| e.to_string())?;
+    println!(
+        "shard {index}/{of}: {} of {} task(s) of `{}` (seed {seed}) -> {out}",
+        shard.results.len(),
+        exec::suite_tasks(&work.work, work.problems).len(),
+        spec.label(),
+    );
+    println!("merge with: repro merge <all {of} shard files>");
+    Ok(())
+}
+
+fn cmd_merge(pos: &[String], opts: &HashMap<String, String>) -> Result<(), String> {
+    let files = &pos[1..];
+    if files.is_empty() {
+        return Err("usage: repro merge <shard.json>... [--out FILE]".into());
+    }
+    let shards: Vec<SuiteShard> = files
+        .iter()
+        .map(|f| {
+            let text = std::fs::read_to_string(f).map_err(|e| format!("{f}: {e}"))?;
+            SuiteShard::parse(&text).map_err(|e| format!("{f}: {e}"))
+        })
+        .collect::<Result<_, _>>()?;
+    let seed = shards[0].work.seed;
+    let logs = suite_merge(&shards)?;
+    let bench = Bench::new();
+    if shards[0].work.problems != bench.problems.len() {
+        return Err(format!(
+            "suite size mismatch: shards were produced against {} problems, this binary's \
+             suite has {} — merge with a binary from the same build",
+            shards[0].work.problems,
+            bench.problems.len()
+        ));
+    }
+    let all: Vec<usize> = (0..bench.problems.len()).collect();
+    for log in &logs {
+        print_log(&bench, log, seed, &all);
+    }
+    println!(
+        "merged {} shard file(s) into {} run log(s); output is bit-identical to a \
+         single-process run of the same job (seed {seed})",
+        shards.len(),
+        logs.len()
+    );
+    if let Some(out) = opts.get("out") {
+        let json =
+            ucutlass_repro::util::json::Json::Arr(logs.iter().map(|l| l.to_json()).collect());
+        std::fs::write(out, json.to_string()).map_err(|e| e.to_string())?;
+        println!("(merged logs written to {out})");
+    }
     Ok(())
 }
 

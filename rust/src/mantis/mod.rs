@@ -23,8 +23,10 @@ use crate::agent::controller::{
 use crate::agent::policy::{self, OptMove};
 use crate::agent::runlog::ProblemRun;
 use crate::agent::session::StepResult;
+use crate::eval::{EvalRequest, Evaluator};
 use crate::perfmodel::CandidateConfig;
-use crate::util::rng::{stream, Pcg32};
+use crate::util::json::Json;
+use crate::util::rng::{stream, MeasureSeq, Pcg32, StreamPath};
 
 /// Which MANTIS phases are active (Table 3 ablations).
 #[derive(Debug, Clone, Copy)]
@@ -59,6 +61,29 @@ impl MantisConfig {
             _ => {}
         }
         c
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("analyze", self.analyze)
+            .set("triage", self.triage)
+            .set("summarize", self.summarize)
+            .set("cross_memory", self.cross_memory);
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<MantisConfig, String> {
+        let field = |k: &str| {
+            j.get(k)
+                .and_then(|v| v.as_bool())
+                .ok_or_else(|| format!("mantis config: missing {k}"))
+        };
+        Ok(MantisConfig {
+            analyze: field("analyze")?,
+            triage: field("triage")?,
+            summarize: field("summarize")?,
+            cross_memory: field("cross_memory")?,
+        })
     }
 }
 
@@ -192,9 +217,18 @@ impl<'a> MantisSession<'a> {
         cfg: MantisConfig,
         memory: CrossMemory,
     ) -> Self {
-        let mut rng = Pcg32::derive(seed, &[stream::MANTIS, spec.stream_id(), pidx as u64]);
+        let rng = Pcg32::derive(seed, &[stream::MANTIS, spec.stream_id(), pidx as u64]);
         let mods = modifiers(spec);
-        let t_ref_ms = env.model.measure_baseline_ms(&env.problems[pidx], &mut rng);
+        // One derived noise stream per measurement (ADR-003); the baseline
+        // takes stream 0, Implement-phase measurements continue.
+        let mut measure = MeasureSeq::new(StreamPath::new(
+            seed,
+            &[stream::MEASURE, stream::MANTIS, spec.stream_id(), pidx as u64],
+        ));
+        let t_ref_ms = env
+            .evaluator()
+            .eval(&EvalRequest::measured_baseline(pidx, measure.next_stream()))
+            .value;
         let state = AgentState {
             best_time_ms: f64::INFINITY,
             t_ref_ms,
@@ -202,6 +236,7 @@ impl<'a> MantisSession<'a> {
             gamed: None,
             consecutive_failures: 0,
             tokens: 0,
+            measure,
         };
         MantisSession {
             env,
@@ -228,7 +263,6 @@ impl<'a> MantisSession<'a> {
 
     /// Measure + Analyze + Nominate + Triage for the next iteration.
     fn nominate(&mut self) {
-        let problem = &self.env.problems[self.pidx];
         let sol = &self.env.sols[self.pidx];
         let tier = self.spec.tier.params();
 
@@ -261,14 +295,22 @@ impl<'a> MantisSession<'a> {
         // orchestration's structured artifacts tighten the model's own
         // estimates beyond in-prompt steering
         let sigma = tier.estimate_sigma * if self.cfg.analyze { 0.3 } else { 1.0 };
+        // One batched evaluation per Nominate round (ADR-003): request 0 is
+        // the current base, requests 1..=k the candidate of each nominated
+        // move — the per-problem model terms are hoisted once for the whole
+        // hypothesis pool instead of recomputed 2k times.
+        let reqs: Vec<EvalRequest> = std::iter::once(base.clone())
+            .chain(pool.iter().map(|&mv| policy::apply_move(&base, mv, qgain)))
+            .map(|cfg| EvalRequest::candidate(self.pidx, cfg))
+            .collect();
+        let est_ms = self.env.evaluator().eval_batch(&reqs);
+        let t_now = est_ms[0].value;
         let mut hyps: Vec<Hypothesis> = pool
             .iter()
-            .map(|&mv| {
-                let cand = policy::apply_move(&base, mv, qgain);
-                let t_new = self.env.model.candidate_ms(problem, &cand);
-                let t_now = self.env.model.candidate_ms(problem, &base);
+            .zip(&est_ms[1..])
+            .map(|(&mv, t_new)| {
                 let mem_prior = if self.cfg.summarize { self.memory.prior(mv) } else { 1.0 };
-                let est = (t_now / t_new) * self.rng.lognormal_noise(sigma) * mem_prior;
+                let est = (t_now / t_new.value) * self.rng.lognormal_noise(sigma) * mem_prior;
                 let (ri, rp) = risks(mv);
                 Hypothesis { mv, est_speedup: est, r_impl: ri, r_perf: rp, roi: roi(est, gap, ri, rp) }
             })

@@ -19,7 +19,8 @@ use crate::dsl::ir::TileScheduler;
 use crate::dsl::{DType, KernelPlan};
 use crate::kernelbench::{Op, Problem};
 use crate::sol::GpuSpec;
-use crate::util::rng::Pcg32;
+use crate::util::json::Json;
+use crate::util::rng::StreamPath;
 
 /// Scheduler kinds the model distinguishes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -28,6 +29,25 @@ pub enum SchedulerKind {
     Default,
     Persistent,
     StreamK,
+}
+
+impl SchedulerKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            SchedulerKind::Default => "default",
+            SchedulerKind::Persistent => "persistent",
+            SchedulerKind::StreamK => "stream_k",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<SchedulerKind> {
+        match s {
+            "default" => Some(SchedulerKind::Default),
+            "persistent" => Some(SchedulerKind::Persistent),
+            "stream_k" => Some(SchedulerKind::StreamK),
+            _ => None,
+        }
+    }
 }
 
 /// Abstract kernel-design descriptor the model costs. Derived from a
@@ -66,6 +86,59 @@ impl CandidateConfig {
             stages: 3,
             quality: 1.0,
         }
+    }
+
+    /// Canonical field-by-field fingerprint (FNV-64 over the canonical
+    /// serialization, hex) — the request-identity component for candidate
+    /// configs that did not come from a compiled plan (raw-CUDA candidates
+    /// have no [`KernelPlan`] config hash). Mirrors the canonicalization
+    /// discipline of `dsl::plan::config_hash`: fields are serialized by
+    /// name, never through `Debug`.
+    pub fn fingerprint(&self) -> String {
+        let canon = format!(
+            "tile={}x{}x{};dtype={};tc={};epi={};cov={};sched={};stages={};q={}",
+            self.tile.0,
+            self.tile.1,
+            self.tile.2,
+            self.compute_dtype,
+            self.tensor_cores,
+            self.fused_epilogue,
+            self.fusion_coverage,
+            self.scheduler.name(),
+            self.stages,
+            self.quality,
+        );
+        format!("{:016x}", crate::util::fnv64(canon.as_bytes()))
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("tile", vec![self.tile.0, self.tile.1, self.tile.2])
+            .set("compute_dtype", self.compute_dtype.to_string())
+            .set("tensor_cores", self.tensor_cores)
+            .set("fused_epilogue", self.fused_epilogue)
+            .set("fusion_coverage", self.fusion_coverage)
+            .set("scheduler", self.scheduler.name())
+            .set("stages", self.stages)
+            .set("quality", self.quality);
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Option<CandidateConfig> {
+        let tile = j.get("tile")?.as_arr()?;
+        if tile.len() != 3 {
+            return None;
+        }
+        Some(CandidateConfig {
+            tile: (tile[0].as_u64()?, tile[1].as_u64()?, tile[2].as_u64()?),
+            compute_dtype: DType::parse(j.get("compute_dtype")?.as_str()?)?,
+            tensor_cores: j.get("tensor_cores")?.as_bool()?,
+            fused_epilogue: j.get("fused_epilogue")?.as_bool()?,
+            fusion_coverage: j.get("fusion_coverage")?.as_f64()?,
+            scheduler: SchedulerKind::parse(j.get("scheduler")?.as_str()?)?,
+            stages: j.get("stages")?.as_u64()?,
+            quality: j.get("quality")?.as_f64()?,
+        })
     }
 
     /// Build from a compiled [`KernelPlan`]: the cost model reads the same
@@ -164,42 +237,42 @@ impl PerfModel {
             * 1e3
     }
 
-    /// Tile-quantization efficiency for the dominant matmul: fraction of
-    /// computed tiles that is useful work.
-    fn tile_efficiency(&self, problem: &Problem, tile: (u64, u64, u64)) -> f64 {
-        let (bm, bn, _) = tile;
-        match *problem.dominant_op() {
-            Op::Gemm { m, n, .. } | Op::GroupedGemm { m, n, .. } => {
-                quantization_eff(m, bm) * quantization_eff(n, bn)
-            }
-            Op::BatchedGemm { m, n, .. } => quantization_eff(m, bm) * quantization_eff(n, bn),
-            Op::Attention { s, d, .. } => quantization_eff(s, bm) * quantization_eff(d.max(64), bn.min(128)),
-            Op::Conv2d { n, h, w, co, stride, .. } => {
-                quantization_eff(n * (h / stride) * (w / stride), bm) * quantization_eff(co, bn)
-            }
-            Op::Conv1d { n, l, co, stride, .. } => {
-                quantization_eff(n * (l / stride), bm) * quantization_eff(co, bn)
-            }
-            _ => 1.0, // non-matmul: tiles are row blocks, quantization negligible
+    /// Pipeline-depth efficiency: shallow pipelines cannot hide HBM latency.
+    fn stage_efficiency(stages: u64) -> f64 {
+        match stages {
+            0 | 1 => 0.72,
+            2 => 0.90,
+            3 => 0.97,
+            _ => 0.98,
+        }
+    }
+
+    /// Hoist every `candidate_ms` term that does not depend on the
+    /// candidate configuration. A batched evaluation pays this once per
+    /// problem instead of once per config (ADR-003) — the scalar path goes
+    /// through the same helper, so batch and scalar results are
+    /// bit-identical by construction.
+    fn problem_costs(&self, problem: &Problem) -> ProblemCosts {
+        ProblemCosts {
+            flops: problem.flops() as f64,
+            fused_bytes: problem.fused_bytes() as f64,
+            unfused_bytes: problem.ops.iter().map(|o| o.bytes(DType::Fp32) as f64).sum(),
+            n_ops: problem.ops.len() as f64,
+            matmul_like: problem.is_matmul_like(),
+            dom: DominantDims::of(problem),
         }
     }
 
     /// Wave-quantization efficiency: the last wave of threadblocks runs
     /// partially full; persistent / stream-k schedulers recover most of it.
-    fn wave_efficiency(&self, problem: &Problem, cfg: &CandidateConfig) -> f64 {
+    fn wave_efficiency(&self, dom: DominantDims, cfg: &CandidateConfig) -> f64 {
         let (bm, bn, _) = cfg.tile;
-        let blocks = match *problem.dominant_op() {
-            Op::Gemm { m, n, .. } => (m.div_ceil(bm)) * (n.div_ceil(bn)),
-            Op::BatchedGemm { b, m, n, .. } => b * m.div_ceil(bm) * n.div_ceil(bn),
-            Op::GroupedGemm { groups, m, n, .. } => groups * m.div_ceil(bm) * n.div_ceil(bn),
-            Op::Attention { b, h, s, .. } => b * h * s.div_ceil(bm),
-            Op::Conv2d { n, h, w, co, stride, .. } => {
-                (n * (h / stride) * (w / stride)).div_ceil(bm) * co.div_ceil(bn)
+        let blocks = match dom {
+            DominantDims::MatmulMn { m, n, batch } => {
+                batch * m.div_ceil(bm) * n.div_ceil(bn)
             }
-            Op::Conv1d { n, l, co, stride, .. } => {
-                (n * (l / stride)).div_ceil(bm) * co.div_ceil(bn)
-            }
-            _ => return 1.0,
+            DominantDims::Attention { s, bh, .. } => bh * s.div_ceil(bm),
+            DominantDims::Other => return 1.0,
         };
         let sms = self.gpu.sm_count;
         let waves = blocks.div_ceil(sms).max(1);
@@ -211,60 +284,139 @@ impl PerfModel {
         }
     }
 
-    /// Pipeline-depth efficiency: shallow pipelines cannot hide HBM latency.
-    fn stage_efficiency(stages: u64) -> f64 {
-        match stages {
-            0 | 1 => 0.72,
-            2 => 0.90,
-            3 => 0.97,
-            _ => 0.98,
-        }
-    }
-
-    /// Candidate kernel runtime (ms) for a problem under this config,
-    /// without measurement noise.
-    pub fn candidate_ms(&self, problem: &Problem, cfg: &CandidateConfig) -> f64 {
-        let flops = problem.flops() as f64;
+    /// `candidate_ms` body over hoisted per-problem terms.
+    fn candidate_ms_with(&self, costs: &ProblemCosts, cfg: &CandidateConfig) -> f64 {
         // Bytes: interpolate between fully-fused best case and eager
         // per-op traffic with fusion coverage.
-        let fused = problem.fused_bytes() as f64;
-        let unfused: f64 = problem.ops.iter().map(|o| o.bytes(DType::Fp32) as f64).sum();
         let cov = cfg.fusion_coverage.clamp(0.0, 1.0);
         let epi_cov = if cfg.fused_epilogue { 1.0 } else { 0.75 };
-        let bytes = fused + (unfused - fused) * (1.0 - cov * epi_cov);
+        let bytes =
+            costs.fused_bytes + (costs.unfused_bytes - costs.fused_bytes) * (1.0 - cov * epi_cov);
 
         // Compute peak.
-        let peak = if problem.is_matmul_like() && cfg.tensor_cores {
+        let peak = if costs.matmul_like && cfg.tensor_cores {
             self.matmul_peak(cfg.compute_dtype)
         } else {
             self.gpu.effective_fp32_flops()
         };
 
         // Structural efficiency product.
-        let eff = self.tile_efficiency(problem, cfg.tile)
-            * self.wave_efficiency(problem, cfg)
+        let eff = costs.dom.tile_efficiency(cfg.tile)
+            * self.wave_efficiency(costs.dom, cfg)
             * Self::stage_efficiency(cfg.stages)
             * cfg.quality.clamp(0.01, 1.0)
             // even perfect kernels don't hit 100% of peak
             * 0.96;
         let mem_eff = (0.92 * cfg.quality.clamp(0.01, 1.0)).clamp(0.01, 1.0);
 
-        let t_c = flops / (peak * eff);
+        let t_c = costs.flops / (peak * eff);
         let t_m = bytes / (self.gpu.effective_bandwidth() * mem_eff);
         // Kernel launches: one per unfused region (approx).
-        let launches = 1.0 + (problem.ops.len() as f64 - 1.0) * (1.0 - cov);
+        let launches = 1.0 + (costs.n_ops - 1.0) * (1.0 - cov);
         (t_c.max(t_m) + launches * LAUNCH_OVERHEAD_US * 1e-6) * 1e3
     }
 
-    /// Candidate runtime with measurement noise (the paper's NCU timings
-    /// still jitter ~1%).
-    pub fn measure_ms(&self, problem: &Problem, cfg: &CandidateConfig, rng: &mut Pcg32) -> f64 {
-        self.candidate_ms(problem, cfg) * rng.lognormal_noise(0.01)
+    /// Candidate kernel runtime (ms) for a problem under this config,
+    /// without measurement noise.
+    pub fn candidate_ms(&self, problem: &Problem, cfg: &CandidateConfig) -> f64 {
+        self.candidate_ms_with(&self.problem_costs(problem), cfg)
     }
 
-    /// Baseline with measurement noise.
-    pub fn measure_baseline_ms(&self, problem: &Problem, rng: &mut Pcg32) -> f64 {
-        self.baseline_ms(problem) * rng.lognormal_noise(0.01)
+    /// Vectorized [`Self::candidate_ms`] over a config batch: the
+    /// per-problem roofline/fusion/dominant-op terms are hoisted out of the
+    /// per-config loop, so the MANTIS Nominate round and the move-selection
+    /// policy cost one problem analysis per batch instead of one per
+    /// hypothesis. Results are element-wise bit-identical to the scalar
+    /// call (a property test asserts it).
+    pub fn candidate_ms_batch(&self, problem: &Problem, cfgs: &[CandidateConfig]) -> Vec<f64> {
+        let costs = self.problem_costs(problem);
+        cfgs.iter().map(|cfg| self.candidate_ms_with(&costs, cfg)).collect()
+    }
+
+    /// Candidate runtime with measurement noise (the paper's NCU timings
+    /// still jitter ~1%). The noise is drawn from the derived stream `at`
+    /// names — one stream per measurement, handed out by
+    /// [`crate::util::rng::MeasureSeq`] — so a serialized
+    /// `eval::EvalRequest` replayed in another process reproduces the
+    /// in-process value exactly instead of depending on a shared RNG's
+    /// draw order (ADR-003).
+    pub fn measure_ms(&self, problem: &Problem, cfg: &CandidateConfig, at: &StreamPath) -> f64 {
+        self.candidate_ms(problem, cfg) * measurement_noise(at)
+    }
+
+    /// Baseline with measurement noise (same stream discipline).
+    pub fn measure_baseline_ms(&self, problem: &Problem, at: &StreamPath) -> f64 {
+        self.baseline_ms(problem) * measurement_noise(at)
+    }
+}
+
+/// The ~1% lognormal measurement jitter for one stream identity.
+pub fn measurement_noise(at: &StreamPath) -> f64 {
+    at.rng().lognormal_noise(0.01)
+}
+
+/// `candidate_ms` terms that depend only on the problem (see
+/// [`PerfModel::candidate_ms_batch`]).
+#[derive(Debug, Clone)]
+struct ProblemCosts {
+    flops: f64,
+    fused_bytes: f64,
+    unfused_bytes: f64,
+    n_ops: f64,
+    matmul_like: bool,
+    dom: DominantDims,
+}
+
+/// The dominant op's tiling-relevant dimensions, extracted once per
+/// problem. Collapses the per-op-family match of the old
+/// `tile_efficiency`/`wave_efficiency` pair into data, so the per-config
+/// loop runs no op-graph inspection at all.
+#[derive(Debug, Clone, Copy)]
+enum DominantDims {
+    /// GEMM-shaped: tile quantization over (m, n); `batch` independent
+    /// block grids (1 for plain GEMM / convs, b for batched, groups for
+    /// grouped).
+    MatmulMn { m: u64, n: u64, batch: u64 },
+    /// Attention: row blocks over s, head dim d, b·h independent tiles.
+    Attention { s: u64, d: u64, bh: u64 },
+    /// Non-tiled op: quantization and wave effects negligible.
+    Other,
+}
+
+impl DominantDims {
+    fn of(problem: &Problem) -> DominantDims {
+        match *problem.dominant_op() {
+            Op::Gemm { m, n, .. } => DominantDims::MatmulMn { m, n, batch: 1 },
+            Op::BatchedGemm { b, m, n, .. } => DominantDims::MatmulMn { m, n, batch: b },
+            Op::GroupedGemm { groups, m, n, .. } => {
+                DominantDims::MatmulMn { m, n, batch: groups }
+            }
+            Op::Attention { b, h, s, d, .. } => DominantDims::Attention { s, d, bh: b * h },
+            Op::Conv2d { n, h, w, co, stride, .. } => DominantDims::MatmulMn {
+                m: n * (h / stride) * (w / stride),
+                n: co,
+                batch: 1,
+            },
+            Op::Conv1d { n, l, co, stride, .. } => {
+                DominantDims::MatmulMn { m: n * (l / stride), n: co, batch: 1 }
+            }
+            _ => DominantDims::Other,
+        }
+    }
+
+    /// Tile-quantization efficiency: fraction of computed tiles that is
+    /// useful work.
+    fn tile_efficiency(self, tile: (u64, u64, u64)) -> f64 {
+        let (bm, bn, _) = tile;
+        match self {
+            DominantDims::MatmulMn { m, n, .. } => {
+                quantization_eff(m, bm) * quantization_eff(n, bn)
+            }
+            DominantDims::Attention { s, d, .. } => {
+                quantization_eff(s, bm) * quantization_eff(d.max(64), bn.min(128))
+            }
+            DominantDims::Other => 1.0, // tiles are row blocks, quantization negligible
+        }
     }
 }
 
@@ -367,16 +519,70 @@ mod tests {
 
     #[test]
     fn measurement_noise_small() {
+        use crate::util::rng::{stream, MeasureSeq};
         let m = model();
         let s = suite();
         let p = &s[0];
         let cfg = CandidateConfig::library((128, 128, 32), DType::Fp32);
         let t0 = m.candidate_ms(p, &cfg);
-        let mut rng = Pcg32::new(3, 1);
+        let mut seq = MeasureSeq::new(StreamPath::new(3, &[stream::MEASURE, 0]));
         for _ in 0..50 {
-            let t = m.measure_ms(p, &cfg, &mut rng);
+            let at = seq.next_stream();
+            let t = m.measure_ms(p, &cfg, &at);
             assert!((t / t0 - 1.0).abs() < 0.06);
+            // replay: the value depends only on the stream identity
+            assert_eq!(t, m.measure_ms(p, &cfg, &at));
         }
+    }
+
+    #[test]
+    fn candidate_ms_batch_matches_scalar_bitwise() {
+        let m = model();
+        for p in suite() {
+            let cfgs: Vec<CandidateConfig> = crate::agent::policy::TILES
+                .iter()
+                .flat_map(|&t| {
+                    [
+                        CandidateConfig::library(t, DType::Fp32),
+                        CandidateConfig::library(t, DType::Fp16),
+                        CandidateConfig {
+                            scheduler: SchedulerKind::StreamK,
+                            stages: 2,
+                            fused_epilogue: false,
+                            fusion_coverage: 0.3,
+                            quality: 0.4,
+                            ..CandidateConfig::library(t, DType::Bf16)
+                        },
+                    ]
+                })
+                .collect();
+            let batch = m.candidate_ms_batch(&p, &cfgs);
+            for (cfg, &b) in cfgs.iter().zip(&batch) {
+                let s = m.candidate_ms(&p, cfg);
+                assert!(s == b, "{}: batch {b} != scalar {s}", p.id);
+            }
+        }
+    }
+
+    #[test]
+    fn config_fingerprint_is_canonical() {
+        let a = CandidateConfig::library((128, 128, 64), DType::Fp16);
+        let b = a.clone();
+        assert_eq!(a.fingerprint(), b.fingerprint());
+        let mut c = a.clone();
+        c.stages = 2;
+        assert_ne!(a.fingerprint(), c.fingerprint());
+    }
+
+    #[test]
+    fn config_json_roundtrips() {
+        let mut a = CandidateConfig::library((256, 128, 32), DType::Bf16);
+        a.scheduler = SchedulerKind::StreamK;
+        a.quality = 0.3725;
+        a.fusion_coverage = 0.6;
+        let b = CandidateConfig::from_json(&Json::parse(&a.to_json().to_string()).unwrap())
+            .unwrap();
+        assert_eq!(a, b);
     }
 
     #[test]

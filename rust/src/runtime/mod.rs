@@ -121,8 +121,16 @@ impl Runtime {
     /// Execute one artifact on the given inputs; returns the flattened f32
     /// output (all artifacts return a 1-tuple — lowered with
     /// return_tuple=True, unwrapped with to_tuple1).
+    ///
+    /// Crate-visible only (ADR-003): external callers evaluate through
+    /// [`crate::eval::PjrtEvaluator`] / [`Self::validate_variant`], never
+    /// the raw executor.
     #[cfg(feature = "pjrt")]
-    pub fn execute(&mut self, rel_path: &str, inputs: &[(Vec<f32>, Vec<i64>)]) -> Result<Vec<f32>> {
+    pub(crate) fn execute(
+        &mut self,
+        rel_path: &str,
+        inputs: &[(Vec<f32>, Vec<i64>)],
+    ) -> Result<Vec<f32>> {
         let literals: Vec<xla::Literal> = inputs
             .iter()
             .map(|(data, shape)| {
@@ -143,7 +151,7 @@ impl Runtime {
     /// Non-pjrt stub: unreachable in practice (`open` already failed), but
     /// keeps the call sites compiling in every build.
     #[cfg(not(feature = "pjrt"))]
-    pub fn execute(
+    pub(crate) fn execute(
         &mut self,
         rel_path: &str,
         _inputs: &[(Vec<f32>, Vec<i64>)],
@@ -297,5 +305,19 @@ mod tests {
         }
         let got = Runtime::select_variant_for(&prob, (64, 64, 64), DType::Fp32).unwrap();
         assert_eq!(got, "t64x64x64_fp32");
+    }
+
+    #[test]
+    fn corrupted_inputs_fail_execution() {
+        // wrong-shape execution must error out, not silently succeed.
+        // Lives here (not in tests/) because `execute` is crate-visible:
+        // external callers go through validate_variant / PjrtEvaluator.
+        // Skips when artifacts/ is absent, like the integration tests.
+        let Ok(mut rt) = Runtime::open("artifacts") else { return };
+        let prob = rt.manifest.problems.get("gemm_square").cloned().unwrap();
+        let mut inputs = Runtime::gen_inputs(&prob, 7);
+        inputs.pop();
+        let r = rt.execute(&prob.reference, &inputs);
+        assert!(r.is_err(), "executing with a missing operand must fail");
     }
 }

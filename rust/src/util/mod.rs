@@ -30,3 +30,15 @@ pub fn ceil_div(a: u64, b: u64) -> u64 {
     debug_assert!(b > 0);
     a.div_ceil(b)
 }
+
+/// FNV-1a 64-bit — the one content-hash every identity in the crate uses
+/// (DSL config hashes, candidate-config fingerprints, shard assignment,
+/// RNG label forks). One implementation, so the copies can never drift.
+pub fn fnv64(bytes: &[u8]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x1000_0000_01b3);
+    }
+    h
+}

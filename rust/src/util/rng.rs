@@ -33,6 +33,68 @@ pub mod stream {
     pub const RUNTIME_INPUTS: u64 = 0x06;
     /// Property-test case generation.
     pub const PROP_CASE: u64 = 0x07;
+    /// Measurement-noise streams (one derived stream per measurement,
+    /// handed out by [`super::MeasureSeq`] — see ADR-003).
+    pub const MEASURE: u64 = 0x08;
+}
+
+/// Serializable identity of a derived RNG stream: an experiment seed plus
+/// the [`Pcg32::derive`] path. An `eval::EvalRequest` carries one of these
+/// so a measurement replayed in another process draws the exact same noise
+/// as the in-process run — the draw depends only on this identity, never on
+/// where in a session's shared draw order the measurement happened to fall
+/// (ADR-003).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StreamPath {
+    pub seed: u64,
+    pub path: Vec<u64>,
+}
+
+impl StreamPath {
+    pub fn new(seed: u64, path: &[u64]) -> StreamPath {
+        StreamPath { seed, path: path.to_vec() }
+    }
+
+    /// Extend the path by one component (a child stream).
+    pub fn child(&self, component: u64) -> StreamPath {
+        let mut path = self.path.clone();
+        path.push(component);
+        StreamPath { seed: self.seed, path }
+    }
+
+    /// The derived RNG this identity names.
+    pub fn rng(&self) -> Pcg32 {
+        Pcg32::derive(self.seed, &self.path)
+    }
+}
+
+/// Hands out one derived stream per measurement, in execution order: the
+/// k-th measurement of a session draws from `base.child(k)` regardless of
+/// which thread or process executes it. Sessions own one of these next to
+/// their behavioural RNG; truncating a session truncates the sequence, so
+/// the prefix property of ADR-002 is preserved.
+#[derive(Debug, Clone)]
+pub struct MeasureSeq {
+    base: StreamPath,
+    next: u64,
+}
+
+impl MeasureSeq {
+    pub fn new(base: StreamPath) -> MeasureSeq {
+        MeasureSeq { base, next: 0 }
+    }
+
+    /// Stream identity for the next measurement.
+    pub fn next_stream(&mut self) -> StreamPath {
+        let sp = self.base.child(self.next);
+        self.next += 1;
+        sp
+    }
+
+    /// Measurements handed out so far.
+    pub fn issued(&self) -> u64 {
+        self.next
+    }
 }
 
 /// PCG32 (XSH-RR variant) — small, fast, statistically solid.
@@ -79,11 +141,7 @@ impl Pcg32 {
 
     /// Derive a child RNG for a named sub-component (hash of the label).
     pub fn fork(&mut self, label: &str) -> Pcg32 {
-        let mut h: u64 = 0xcbf2_9ce4_8422_2325;
-        for b in label.bytes() {
-            h ^= b as u64;
-            h = h.wrapping_mul(0x1000_0000_01b3);
-        }
+        let h = crate::util::fnv64(label.as_bytes());
         Pcg32::new(self.next_u64() ^ h, h | 1)
     }
 
@@ -263,6 +321,25 @@ mod tests {
             counts[r.weighted_choice(&[1.0, 2.0, 6.0])] += 1;
         }
         assert!(counts[2] > counts[1] && counts[1] > counts[0], "{counts:?}");
+    }
+
+    #[test]
+    fn measure_seq_is_order_and_process_independent() {
+        // the k-th measurement stream depends only on (seed, base, k)
+        let base = StreamPath::new(7, &[stream::MEASURE, stream::FLAT_CONTROLLER, 3]);
+        let mut a = MeasureSeq::new(base.clone());
+        let mut b = MeasureSeq::new(base.clone());
+        let s0 = a.next_stream();
+        let s1 = a.next_stream();
+        assert_eq!(s0, b.next_stream());
+        assert_eq!(s1, b.next_stream());
+        assert_ne!(s0, s1, "consecutive measurements use distinct streams");
+        assert_eq!(s1, base.child(1));
+        assert_eq!(a.issued(), 2);
+        // the named RNG is exactly the derive of the path
+        let mut x = s0.rng();
+        let mut y = Pcg32::derive(7, &[stream::MEASURE, stream::FLAT_CONTROLLER, 3, 0]);
+        assert_eq!(x.next_u64(), y.next_u64());
     }
 
     #[test]

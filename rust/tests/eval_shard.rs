@@ -1,0 +1,149 @@
+//! Shard/merge golden tests (ADR-003 acceptance): splitting a suite
+//! evaluation across N workers and merging their JSON shards must be
+//! field-for-field identical to the single-process `eval_variants` result,
+//! and every evaluator's batched path must agree with its scalar path.
+
+use ucutlass_repro::agent::controller::{ControllerKind, VariantSpec};
+use ucutlass_repro::agent::{ModelTier, RunLog};
+use ucutlass_repro::dsl::DType;
+use ucutlass_repro::eval::manifest::{suite_merge, suite_shard, SuiteShard, SuiteWork};
+use ucutlass_repro::eval::{
+    AnalyticEvaluator, EvalRequest, Evaluator, ManifestEvaluator, PjrtEvaluator, WorkManifest,
+};
+use ucutlass_repro::exec;
+use ucutlass_repro::experiments::Bench;
+use ucutlass_repro::mantis::MantisConfig;
+use ucutlass_repro::perfmodel::CandidateConfig;
+use ucutlass_repro::util::prop;
+use ucutlass_repro::util::rng::{stream, Pcg32, StreamPath};
+
+fn job() -> (Bench, SuiteWork) {
+    let bench = Bench::new();
+    // one flat variant (fans out per problem) + one orchestrated default
+    // (cross-memory on → a single whole-variant task, as in ADR-002)
+    let work = SuiteWork {
+        seed: 2024,
+        problems: bench.problems.len(),
+        work: vec![
+            (VariantSpec::new(ControllerKind::InPromptSol, true, ModelTier::Mid), None),
+            (
+                VariantSpec::new(ControllerKind::OrchestratedSol, true, ModelTier::Mini),
+                Some(MantisConfig::default()),
+            ),
+        ],
+    };
+    (bench, work)
+}
+
+#[test]
+fn shard_merge_golden_matches_single_process_eval_variants() {
+    let (bench, job) = job();
+    let reference: Vec<RunLog> = exec::eval_variants(&bench, &job.work, job.seed, 1);
+
+    for n in [1usize, 3] {
+        // every shard goes through its JSON text form, exactly as the
+        // repro shard / repro merge CLI round-trips it between processes
+        let shards: Vec<SuiteShard> = (0..n)
+            .map(|i| {
+                let s = suite_shard(&bench, &job, i, n);
+                SuiteShard::parse(&s.to_json().to_string()).unwrap_or_else(|e| panic!("{e}"))
+            })
+            .collect();
+        let merged = suite_merge(&shards).unwrap_or_else(|e| panic!("{e}"));
+        assert_eq!(
+            merged, reference,
+            "{n}-way shard + merge must be field-for-field identical to one process"
+        );
+        // and byte-identical as persisted artifacts
+        for (m, r) in merged.iter().zip(&reference) {
+            assert_eq!(m.to_json().to_string(), r.to_json().to_string());
+        }
+    }
+}
+
+#[test]
+fn shard_merge_rejects_incomplete_shard_sets() {
+    let (bench, job) = job();
+    let s0 = suite_shard(&bench, &job, 0, 2);
+    let err = suite_merge(&[s0]).unwrap_err();
+    assert!(err.contains("missing task"), "got: {err}");
+}
+
+#[test]
+fn shard_merge_runlog_json_roundtrip_is_exact() {
+    // the serialization the protocol rests on: a full run log (plans,
+    // configs, floats) survives JSON round-trip PartialEq-identical
+    let bench = Bench::new();
+    let spec = VariantSpec::new(ControllerKind::Mi, true, ModelTier::Mid);
+    let log = exec::run_variant_jobs(&bench, &spec, 7, None, 1);
+    let text = log.to_json().to_string();
+    let mut plans = ucutlass_repro::dsl::PlanCache::new();
+    let parsed = RunLog::from_json(
+        &ucutlass_repro::util::json::Json::parse(&text).unwrap(),
+        &mut plans,
+    )
+    .unwrap_or_else(|e| panic!("{e}"));
+    assert_eq!(parsed, log);
+    assert_eq!(parsed.to_json().to_string(), text, "serialization is a fixed point");
+}
+
+/// Random request generator for the batch≡scalar property.
+fn random_requests(rng: &mut Pcg32, n_problems: usize) -> Vec<EvalRequest> {
+    let tiles = ucutlass_repro::agent::policy::TILES;
+    (0..1 + rng.below(24))
+        .map(|i| {
+            let p = rng.below(n_problems);
+            let cfg = CandidateConfig::library(
+                *rng.choice(tiles),
+                *rng.choice(&[DType::Fp32, DType::Fp16, DType::Bf16]),
+            );
+            let at = StreamPath::new(
+                rng.next_u64(),
+                &[stream::MEASURE, stream::PROP_CASE, p as u64, i as u64],
+            );
+            match rng.below(5) {
+                0 => EvalRequest::baseline(p),
+                1 => EvalRequest::measured_baseline(p, at),
+                2 => EvalRequest::candidate(p, cfg),
+                3 => EvalRequest::measured(p, cfg, at),
+                _ => EvalRequest::sol_gap(p),
+            }
+        })
+        .collect()
+}
+
+#[test]
+fn prop_eval_batch_equals_mapped_scalar_for_all_evaluators() {
+    let bench = Bench::new();
+    let analytic = AnalyticEvaluator::new(&bench.model, &bench.problems, &bench.sols);
+    let pjrt = PjrtEvaluator::open("artifacts", bench.problems.clone());
+    prop::check("eval-batch-vs-scalar", 40, |rng| {
+        let reqs = random_requests(rng, bench.problems.len());
+
+        let batch = analytic.eval_batch(&reqs);
+        for (r, b) in reqs.iter().zip(&batch) {
+            assert_eq!(*b, analytic.eval(r), "analytic: {}", r.key());
+        }
+
+        let batch = pjrt.eval_batch(&reqs);
+        for (r, b) in reqs.iter().zip(&batch) {
+            assert_eq!(*b, pjrt.eval(r), "pjrt: {}", r.key());
+        }
+
+        // manifest evaluator, in both phases: collecting and serving
+        let collector = ManifestEvaluator::new();
+        let pending = collector.eval_batch(&reqs);
+        for (r, b) in reqs.iter().zip(&pending) {
+            assert_eq!(*b, collector.eval(r), "manifest(pending): {}", r.key());
+        }
+        let manifest = WorkManifest::new(reqs.clone());
+        let shard = ucutlass_repro::eval::manifest::evaluate_shard(&analytic, &manifest, 0, 1);
+        let served = ManifestEvaluator::with_responses(&manifest, &[shard]).unwrap();
+        let batch = served.eval_batch(&reqs);
+        for (r, b) in reqs.iter().zip(&batch) {
+            assert_eq!(*b, served.eval(r), "manifest(served): {}", r.key());
+        }
+        // and the served answers are the analytic answers
+        assert_eq!(batch, analytic.eval_batch(&reqs));
+    });
+}

@@ -5,6 +5,7 @@
 use ucutlass_repro::agent::controller::{run_problem, ControllerKind, Env, VariantSpec};
 use ucutlass_repro::agent::{AttemptOutcome, ModelTier, SolutionKind};
 use ucutlass_repro::dsl;
+use ucutlass_repro::eval::{AnalyticEvaluator, EvalRequest};
 use ucutlass_repro::integrity::IntegrityPipeline;
 use ucutlass_repro::kernelbench::{find, suite};
 use ucutlass_repro::metrics;
@@ -12,6 +13,7 @@ use ucutlass_repro::perfmodel::{CandidateConfig, PerfModel};
 use ucutlass_repro::scheduler::{self, Policy};
 use ucutlass_repro::sol::{analyze, SolAnalysis, H100_SXM};
 use ucutlass_repro::util::prop;
+use ucutlass_repro::util::rng::{stream, MeasureSeq, StreamPath};
 
 struct Fixture {
     model: PerfModel,
@@ -29,6 +31,10 @@ impl Fixture {
     fn env(&self) -> Env<'_> {
         Env { model: &self.model, problems: &self.problems, sols: &self.sols }
     }
+
+    fn ev(&self) -> AnalyticEvaluator<'_> {
+        self.env().evaluator()
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -44,11 +50,17 @@ fn dsl_to_perfmodel_roundtrip() {
         .with_stages(3) >> bias() >> relu()";
     let compiled = dsl::compile(src).unwrap();
     let cfg = CandidateConfig::from_plan(&compiled.plan, true);
-    let p = &fx.problems[find(&fx.problems, "L2-76").unwrap()];
-    let t = fx.model.candidate_ms(p, &cfg);
-    let sol = analyze(p, &H100_SXM);
+    let pidx = find(&fx.problems, "L2-76").unwrap();
+    let ev = fx.ev();
+    let t = ev.value(
+        &EvalRequest::candidate(pidx, cfg).with_hash(compiled.plan.config_hash.clone()),
+    );
+    let sol = analyze(&fx.problems[pidx], &H100_SXM);
     assert!(t > sol.t_sol_fp16_ms, "model must respect the FP16 SOL floor");
-    assert!(t < fx.model.baseline_ms(p), "library-grade fused kernel beats eager PyTorch");
+    assert!(
+        t < ev.value(&EvalRequest::baseline(pidx)),
+        "library-grade fused kernel beats eager PyTorch"
+    );
 }
 
 #[test]
@@ -199,11 +211,20 @@ fn prop_fastp_is_complementary_cdf() {
 fn prop_perfmodel_noise_mean_preserving() {
     prop::check("noise-mean", 20, |rng| {
         let fx = Fixture::new();
-        let p = &fx.problems[rng.below(fx.problems.len())];
+        let ev = fx.ev();
+        let pidx = rng.below(fx.problems.len());
         let cfg = CandidateConfig::library((128, 128, 32), ucutlass_repro::dsl::DType::Fp32);
-        let t0 = fx.model.candidate_ms(p, &cfg);
-        let mean: f64 =
-            (0..200).map(|_| fx.model.measure_ms(p, &cfg, rng)).sum::<f64>() / 200.0;
+        let t0 = ev.value(&EvalRequest::candidate(pidx, cfg.clone()));
+        let mut seq = MeasureSeq::new(StreamPath::new(
+            rng.next_u64(),
+            &[stream::MEASURE, stream::PROP_CASE, pidx as u64],
+        ));
+        let mean: f64 = (0..200)
+            .map(|_| {
+                ev.value(&EvalRequest::measured(pidx, cfg.clone(), seq.next_stream()))
+            })
+            .sum::<f64>()
+            / 200.0;
         assert!((mean / t0 - 1.0).abs() < 0.02, "noise must be mean-preserving");
     });
 }

@@ -101,12 +101,32 @@ fn executable_cache_reuses_compilations() {
 }
 
 #[test]
-fn corrupted_inputs_fail_validation() {
-    // wrong-shape execution must error out, not silently succeed
-    let Some(mut rt) = runtime() else { return };
-    let prob = rt.manifest.problems.get("gemm_square").cloned().unwrap();
-    let mut inputs = Runtime::gen_inputs(&prob, 7);
-    inputs.pop();
-    let r = rt.execute(&prob.reference, &inputs);
-    assert!(r.is_err(), "executing with a missing operand must fail");
+fn pjrt_evaluator_validates_artifact_backed_problems() {
+    // the eval-layer face of the runtime (ADR-003): candidate requests map
+    // onto AOT variants and return numeric-validation responses
+    use ucutlass_repro::dsl::DType;
+    use ucutlass_repro::eval::{EvalRequest, Evaluator, PjrtEvaluator};
+    use ucutlass_repro::kernelbench::suite;
+    use ucutlass_repro::perfmodel::CandidateConfig;
+
+    if runtime().is_none() {
+        return;
+    }
+    let problems = suite();
+    let ev = PjrtEvaluator::open("artifacts", problems.clone());
+    assert!(ev.available());
+    let reqs: Vec<EvalRequest> = problems
+        .iter()
+        .enumerate()
+        .filter(|(_, p)| p.artifact.is_some())
+        .map(|(i, _)| {
+            EvalRequest::candidate(i, CandidateConfig::library((64, 64, 64), DType::Fp32))
+        })
+        .collect();
+    assert!(!reqs.is_empty());
+    let responses = ev.eval_batch(&reqs);
+    for (r, resp) in reqs.iter().zip(&responses) {
+        assert!(resp.pass, "{}: {:?}", r.key(), resp.detail);
+        assert_eq!(*resp, ev.eval(r), "batch must equal scalar");
+    }
 }
