@@ -11,7 +11,7 @@ use ucutlass_repro::agent::controller::{run_problem, ControllerKind, Env, Varian
 use ucutlass_repro::agent::policy::{select_move, TILES};
 use ucutlass_repro::agent::ModelTier;
 use ucutlass_repro::dsl;
-use ucutlass_repro::eval::{AnalyticEvaluator, EvalRequest, Evaluator, WorkManifest};
+use ucutlass_repro::eval::{AnalyticEvaluator, EvalRequest, Evaluator, Oracle, WorkManifest};
 use ucutlass_repro::exec;
 use ucutlass_repro::experiments::runner::{main_variants, Bench as SuiteBench};
 use ucutlass_repro::integrity::IntegrityPipeline;
@@ -141,7 +141,7 @@ fn main() {
         );
     }
 
-    let ev = AnalyticEvaluator::new(&model, &problems, &sols);
+    let ev = Oracle::analytic(AnalyticEvaluator::new(&model, &problems, &sols));
     let mut rng = Pcg32::new(1, 1);
     bench("policy::select_move (steered, batched)", 10_000, 9, || {
         black_box(select_move(
@@ -186,7 +186,7 @@ fn main() {
         });
     }
 
-    let env = Env { model: &model, problems: &problems, sols: &sols };
+    let env = Env::new(&model, &problems, &sols);
     let spec = VariantSpec::new(ControllerKind::InPromptSol, true, ModelTier::Mid);
     bench("agent::run_problem (40 attempts)", 50, 7, || {
         black_box(run_problem(&env, &spec, 0, 7));

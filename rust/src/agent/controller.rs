@@ -10,7 +10,7 @@
 //! resolved numbers codegen emitted.
 
 use crate::dsl;
-use crate::eval::{AnalyticEvaluator, EvalRequest};
+use crate::eval::{AnalyticEvaluator, DynEvaluator, EvalRequest, Oracle};
 use crate::kernelbench::Problem;
 use crate::perfmodel::{CandidateConfig, PerfModel};
 use crate::sol::SolAnalysis;
@@ -176,25 +176,47 @@ impl VariantSpec {
     }
 }
 
-/// Shared evaluation environment. `Copy` (it is three shared references):
-/// resumable sessions hold it by value so they can be moved freely across
-/// worker threads.
+/// Shared evaluation environment. `Copy` (it is a handful of shared
+/// references): resumable sessions hold it by value so they can be moved
+/// freely across worker threads.
 #[derive(Clone, Copy)]
 pub struct Env<'a> {
     pub model: &'a PerfModel,
     pub problems: &'a [Problem],
     /// Per-problem SOL analyses (same order as `problems`).
     pub sols: &'a [SolAnalysis],
+    /// Measurement-oracle override (record/replay, ADR-004): when set,
+    /// every evaluation the agent loop makes routes through this backend
+    /// instead of the analytic fast path. `Bench::env` threads it in from
+    /// the bench's installed oracle.
+    pub oracle: Option<&'a DynEvaluator>,
 }
 
 impl<'a> Env<'a> {
-    /// The analytic measurement oracle over this environment (ADR-003).
-    /// `Copy` over three shared references — construct freely at call
-    /// sites. All agent-loop measurement goes through this evaluator;
-    /// nothing above the `eval` layer calls `PerfModel::candidate_ms` or
-    /// `measure_ms` directly.
-    pub fn evaluator(&self) -> AnalyticEvaluator<'a> {
-        AnalyticEvaluator::new(self.model, self.problems, self.sols)
+    pub fn new(
+        model: &'a PerfModel,
+        problems: &'a [Problem],
+        sols: &'a [SolAnalysis],
+    ) -> Env<'a> {
+        Env { model, problems, sols, oracle: None }
+    }
+
+    /// Install (or clear) the measurement-oracle override.
+    pub fn with_oracle(mut self, oracle: Option<&'a DynEvaluator>) -> Env<'a> {
+        self.oracle = oracle;
+        self
+    }
+
+    /// The measurement oracle over this environment (ADR-003/ADR-004).
+    /// `Copy` over shared references — construct freely at call sites. All
+    /// agent-loop measurement goes through this evaluator; nothing above
+    /// the `eval` layer calls `PerfModel::candidate_ms` or `measure_ms`
+    /// directly.
+    pub fn evaluator(&self) -> Oracle<'a> {
+        Oracle::with_backend(
+            AnalyticEvaluator::new(self.model, self.problems, self.sols),
+            self.oracle,
+        )
     }
 }
 
@@ -684,7 +706,7 @@ mod tests {
     #[test]
     fn run_problem_respects_budget() {
         let (model, problems, sols) = env_fixture();
-        let env = Env { model: &model, problems: &problems, sols: &sols };
+        let env = Env::new(&model, &problems, &sols);
         let spec = VariantSpec::new(ControllerKind::Mi, false, ModelTier::Mini);
         let run = run_problem(&env, &spec, 0, 42);
         assert_eq!(run.attempts.len(), 40);
@@ -694,7 +716,7 @@ mod tests {
     #[test]
     fn deterministic_given_seed() {
         let (model, problems, sols) = env_fixture();
-        let env = Env { model: &model, problems: &problems, sols: &sols };
+        let env = Env::new(&model, &problems, &sols);
         let spec = VariantSpec::new(ControllerKind::Mi, true, ModelTier::Mid);
         let a = run_problem(&env, &spec, 3, 7);
         let b = run_problem(&env, &spec, 3, 7);
@@ -705,7 +727,7 @@ mod tests {
     #[test]
     fn dsl_variant_produces_dsl_kernels_on_gemm() {
         let (model, problems, sols) = env_fixture();
-        let env = Env { model: &model, problems: &problems, sols: &sols };
+        let env = Env::new(&model, &problems, &sols);
         let spec = VariantSpec::new(ControllerKind::Mi, true, ModelTier::Mid);
         let run = run_problem(&env, &spec, 0, 11); // L1-1 gemm
         assert!(run
@@ -723,7 +745,7 @@ mod tests {
     #[test]
     fn dsl_attempts_carry_plans_consistent_with_configs() {
         let (model, problems, sols) = env_fixture();
-        let env = Env { model: &model, problems: &problems, sols: &sols };
+        let env = Env::new(&model, &problems, &sols);
         let spec = VariantSpec::new(ControllerKind::Mi, true, ModelTier::Mid);
         let run = run_problem(&env, &spec, 0, 11); // L1-1 gemm
         let mut with_plan = 0;
@@ -746,7 +768,7 @@ mod tests {
     #[test]
     fn mini_dsl_beats_mini_raw_on_gemm() {
         let (model, problems, sols) = env_fixture();
-        let env = Env { model: &model, problems: &problems, sols: &sols };
+        let env = Env::new(&model, &problems, &sols);
         let mut wins = 0;
         for seed in 0..10u64 {
             let raw = run_problem(
@@ -773,7 +795,7 @@ mod tests {
     #[test]
     fn online_integrity_breaks_gaming_chains() {
         let (model, problems, sols) = env_fixture();
-        let env = Env { model: &model, problems: &problems, sols: &sols };
+        let env = Env::new(&model, &problems, &sols);
         let base = VariantSpec::new(ControllerKind::Mi, true, ModelTier::Max);
         let online = base.with_online_integrity();
         let gaming = |spec: VariantSpec| -> (usize, usize) {
@@ -803,7 +825,7 @@ mod tests {
     #[test]
     fn steering_reduces_gaming() {
         let (model, problems, sols) = env_fixture();
-        let env = Env { model: &model, problems: &problems, sols: &sols };
+        let env = Env::new(&model, &problems, &sols);
         let count_gaming = |spec: VariantSpec| -> usize {
             (0..12u64)
                 .flat_map(|seed| run_problem(&env, &spec, 0, seed).attempts)

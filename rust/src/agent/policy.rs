@@ -8,7 +8,7 @@
 //! to the ones targeting the analyzed bottleneck (paper §4.2).
 
 use crate::dsl;
-use crate::eval::{AnalyticEvaluator, EvalRequest, Evaluator};
+use crate::eval::{EvalRequest, Evaluator, Oracle};
 use crate::kernelbench::{Op, Problem};
 use crate::perfmodel::{CandidateConfig, SchedulerKind};
 use crate::sol::{Bottleneck, SolAnalysis};
@@ -135,7 +135,7 @@ pub fn targets_bottleneck(mv: OptMove, b: Bottleneck) -> bool {
 /// `eval_batch` covers the current config plus every move in the pool
 /// (ADR-003), hoisting the per-problem model terms out of the loop.
 pub fn select_move(
-    ev: &AnalyticEvaluator,
+    ev: &Oracle,
     pidx: usize,
     cfg: &CandidateConfig,
     tier: &TierParams,
@@ -404,7 +404,7 @@ mod tests {
         let pidx = find(&s, "L1-1").unwrap(); // compute-bound GEMM
         let sols: Vec<SolAnalysis> = s.iter().map(|p| analyze(p, &H100_SXM)).collect();
         let model = crate::perfmodel::PerfModel::new(H100_SXM.clone());
-        let ev = AnalyticEvaluator::new(&model, &s, &sols);
+        let ev = crate::eval::Oracle::analytic(crate::eval::AnalyticEvaluator::new(&model, &s, &sols));
         let cfg = CandidateConfig::library((128, 128, 64), dsl::DType::Fp32);
         let mut hits = 0;
         let mut rng = Pcg32::new(11, 1);
@@ -426,7 +426,7 @@ mod tests {
         let pidx = find(&s, "L1-1").unwrap();
         let sols: Vec<SolAnalysis> = s.iter().map(|p| analyze(p, &H100_SXM)).collect();
         let model = crate::perfmodel::PerfModel::new(H100_SXM.clone());
-        let ev = AnalyticEvaluator::new(&model, &s, &sols);
+        let ev = crate::eval::Oracle::analytic(crate::eval::AnalyticEvaluator::new(&model, &s, &sols));
         let cfg = CandidateConfig::library((128, 128, 64), dsl::DType::Fp32);
         let mut hits = 0;
         let mut rng = Pcg32::new(13, 1);

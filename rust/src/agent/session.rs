@@ -238,7 +238,7 @@ mod tests {
         }
 
         fn env(&self) -> Env<'_> {
-            Env { model: &self.model, problems: &self.problems, sols: &self.sols }
+            Env::new(&self.model, &self.problems, &self.sols)
         }
     }
 

@@ -21,8 +21,8 @@
 //!   (orchestrated + cross-memory) stay whole-variant tasks, exactly as in
 //!   the parallel engine (ADR-002).
 
-use std::cell::RefCell;
 use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Mutex;
 
 use crate::agent::controller::VariantSpec;
 use crate::agent::{ProblemRun, RunLog};
@@ -165,9 +165,13 @@ pub fn merge(
 /// with `pass == false`, detail `"pending"`), to be written out with
 /// [`ManifestEvaluator::pending_manifest`], farmed to workers, merged, and
 /// loaded back — after which the same call sites get real answers.
+///
+/// The pending list is a `Mutex` (not `RefCell`) so the evaluator is
+/// `Send + Sync` and can be installed as a bench oracle and shared across
+/// the execution pool's worker threads, like every other backend.
 #[derive(Default)]
 pub struct ManifestEvaluator {
-    pending: RefCell<Vec<EvalRequest>>,
+    pending: Mutex<Vec<EvalRequest>>,
     completed: BTreeMap<String, EvalResponse>,
 }
 
@@ -182,7 +186,7 @@ impl ManifestEvaluator {
         shards: &[ResponseShard],
     ) -> Result<ManifestEvaluator, String> {
         Ok(ManifestEvaluator {
-            pending: RefCell::new(Vec::new()),
+            pending: Mutex::new(Vec::new()),
             completed: merged_by_key(manifest, shards)?,
         })
     }
@@ -193,7 +197,8 @@ impl ManifestEvaluator {
         let mut seen = BTreeSet::new();
         let reqs = self
             .pending
-            .borrow()
+            .lock()
+            .expect("pending-work lock")
             .iter()
             .filter(|r| seen.insert(r.key()))
             .cloned()
@@ -202,7 +207,7 @@ impl ManifestEvaluator {
     }
 
     pub fn pending_len(&self) -> usize {
-        self.pending.borrow().len()
+        self.pending.lock().expect("pending-work lock").len()
     }
 }
 
@@ -212,7 +217,7 @@ impl Evaluator for ManifestEvaluator {
             .map(|r| match self.completed.get(&r.key()) {
                 Some(resp) => resp.clone(),
                 None => {
-                    self.pending.borrow_mut().push(r.clone());
+                    self.pending.lock().expect("pending-work lock").push(r.clone());
                     EvalResponse::error(r, "pending")
                 }
             })

@@ -20,17 +20,26 @@
 //!   their AOT artifacts);
 //! * [`manifest::ManifestEvaluator`] — the out-of-process backend: records
 //!   pending requests into a JSON work manifest and serves responses
-//!   merged back from completed shards (`repro shard` / `repro merge`).
+//!   merged back from completed shards (`repro shard` / `repro merge`);
+//! * [`trace::RecordingEvaluator`] / [`trace::TraceEvaluator`] — the
+//!   record/replay backends (ADR-004): persist every `(request, response)`
+//!   pair of a real run to a JSONL trace and replay experiments offline
+//!   from it (`repro record` / `repro replay`).
 //!
 //! Requests are *identities*, not closures: the measurement noise of a
 //! `Measured` request comes from the derived RNG stream its
 //! [`StreamPath`] names, so replaying a serialized request in another
 //! process reproduces the in-process value bit-for-bit — the property the
-//! shard/merge protocol and its golden test rest on.
+//! shard/merge protocol, the recorded-trace backend, and their golden
+//! tests rest on.
 
 pub mod manifest;
+pub mod trace;
 
 pub use manifest::{ManifestEvaluator, MergedEvaluator, ResponseShard, WorkManifest};
+pub use trace::{
+    MissPolicy, OwnedAnalytic, RecordingEvaluator, TraceEvaluator, TraceMode, TraceMonitor,
+};
 
 use std::collections::BTreeMap;
 use std::path::Path;
@@ -291,6 +300,66 @@ pub trait Evaluator {
         self.eval_batch(std::slice::from_ref(req))
             .pop()
             .expect("eval_batch returns one response per request")
+    }
+}
+
+/// The boxable/shareable evaluator type: every backend the execution
+/// engine can carry across its worker threads (a `Bench` oracle is one
+/// `Box<DynEvaluator>`; every `Env` borrows it as `&DynEvaluator`).
+pub type DynEvaluator = dyn Evaluator + Send + Sync;
+
+/// The measurement oracle agent call sites actually hold: the analytic
+/// fast path plus an optional backend override. With no override, scalar
+/// [`Oracle::value`] calls take [`AnalyticEvaluator::value`] — no key
+/// strings, no response vectors (the `run_attempt` hot loop). With an
+/// override (record/replay, ADR-004; a manifest store, ADR-003), *every*
+/// evaluation — scalar and batched — routes through the backend, which is
+/// what lets a strict trace replay prove nothing was computed live.
+#[derive(Clone, Copy)]
+pub struct Oracle<'a> {
+    analytic: AnalyticEvaluator<'a>,
+    backend: Option<&'a DynEvaluator>,
+}
+
+impl<'a> Oracle<'a> {
+    /// Plain analytic oracle (no override).
+    pub fn analytic(analytic: AnalyticEvaluator<'a>) -> Oracle<'a> {
+        Oracle { analytic, backend: None }
+    }
+
+    /// Oracle with an optional backend override.
+    pub fn with_backend(
+        analytic: AnalyticEvaluator<'a>,
+        backend: Option<&'a DynEvaluator>,
+    ) -> Oracle<'a> {
+        Oracle { analytic, backend }
+    }
+
+    /// Is a backend override installed (i.e. are responses *not* computed
+    /// by the in-process analytic model)?
+    pub fn is_overridden(&self) -> bool {
+        self.backend.is_some()
+    }
+
+    /// Scalar value for the agent hot loop. See
+    /// [`AnalyticEvaluator::value`] for the fast path's contract; with a
+    /// backend override this is `backend.eval(req).value`, so a failed
+    /// response contributes its in-band `0.0` (the run-level monitor — not
+    /// this call — reports the failure).
+    pub fn value(&self, req: &EvalRequest) -> f64 {
+        match self.backend {
+            None => self.analytic.value(req),
+            Some(b) => b.eval(req).value,
+        }
+    }
+}
+
+impl Evaluator for Oracle<'_> {
+    fn eval_batch(&self, reqs: &[EvalRequest]) -> Vec<EvalResponse> {
+        match self.backend {
+            None => self.analytic.eval_batch(reqs),
+            Some(b) => b.eval_batch(reqs),
+        }
     }
 }
 
@@ -659,6 +728,50 @@ mod tests {
         let parsed =
             EvalResponse::from_json(&Json::parse(&resp.to_json().to_string()).unwrap()).unwrap();
         assert_eq!(resp, parsed);
+    }
+
+    #[test]
+    fn stream_json_rejects_malformed_hex_in_band() {
+        // seeds/components travel as hex-u64 strings; malformed, negative,
+        // overflowing, and mistyped inputs must fail in-band (None), never
+        // panic and never silently truncate
+        for bad in [
+            r#"{"seed":"zz","path":[]}"#,                  // non-hex digits
+            r#"{"seed":"1ffffffffffffffff","path":[]}"#,   // 17 hex digits: > u64::MAX
+            r#"{"seed":"-1","path":[]}"#,                  // negative
+            r#"{"seed":"","path":[]}"#,                    // empty
+            r#"{"seed":12,"path":[]}"#,                    // JSON number, not hex string
+            r#"{"path":["a"]}"#,                           // missing seed
+            r#"{"seed":"a"}"#,                             // missing path
+            r#"{"seed":"a","path":"10"}"#,                 // path not an array
+            r#"{"seed":"a","path":["10","zz"]}"#,          // bad component
+            r#"{"seed":"a","path":["10",7]}"#,             // non-string component
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(stream_from_json(&j).is_none(), "must reject: {bad}");
+        }
+        // boundary values round-trip exactly
+        for seed in [0u64, u64::MAX, 1 << 63, (1 << 53) + 1] {
+            let at = StreamPath::new(seed, &[u64::MAX, 0]);
+            let parsed = stream_from_json(&Json::parse(&stream_to_json(&at).to_string()).unwrap());
+            assert_eq!(parsed.as_ref(), Some(&at));
+        }
+    }
+
+    #[test]
+    fn request_from_json_rejects_negative_and_fractional_indices() {
+        // a negative problem index must not truncate to 0 (Json::as_u64 is
+        // strict); same for fractional indices
+        for bad in [
+            r#"{"problem":-1,"kind":"baseline","config":null,"config_hash":null,"stream":null}"#,
+            r#"{"problem":1.5,"kind":"baseline","config":null,"config_hash":null,"stream":null}"#,
+            r#"{"problem":"3","kind":"baseline","config":null,"config_hash":null,"stream":null}"#,
+            r#"{"problem":3,"kind":"nonsense","config":null,"config_hash":null,"stream":null}"#,
+            r#"{"kind":"baseline","config":null,"config_hash":null,"stream":null}"#,
+        ] {
+            let j = Json::parse(bad).unwrap();
+            assert!(EvalRequest::from_json(&j).is_none(), "must reject: {bad}");
+        }
     }
 
     #[test]

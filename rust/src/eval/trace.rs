@@ -1,0 +1,779 @@
+//! Recorded-trace evaluation: record every measurement of a real run into
+//! a JSONL artifact, then replay experiments offline from it (ADR-004).
+//!
+//! The paper's efficiency results come from re-running budgeting/steering
+//! policies over the *same* measurements; persisting the responses of one
+//! real run makes every later experiment an offline lookup instead of a
+//! re-evaluation. Two backends implement the cycle on top of the
+//! [`Evaluator`] API (ADR-003):
+//!
+//! * [`RecordingEvaluator`] wraps any inner backend and appends each
+//!   `(EvalRequest, EvalResponse)` pair — deduplicated by the canonical
+//!   [`EvalRequest::key`] — to the trace file as it evaluates;
+//! * [`TraceEvaluator`] loads a trace and serves responses by key, with a
+//!   [`MissPolicy`]: `Strict` answers misses with an in-band error
+//!   response (provable replay — nothing outside the trace is consulted),
+//!   `Fallthrough` delegates misses to a live backend and extends the
+//!   trace (incremental re-runs).
+//!
+//! Trace format: line 1 is the header `{"trace":"ucutlass-eval",
+//! "version":1}`; every further line is `{"req":…,"resp":…}` using the
+//! exact `EvalRequest`/`EvalResponse` JSON of ADR-003 (u64 seeds and
+//! stream components as hex strings, floats in shortest-roundtrip form, so
+//! replayed values are bit-identical to the recorded ones). Keys are
+//! stable across processes and job counts: measurement noise is named by
+//! the request's derived [`crate::util::rng::StreamPath`], never by
+//! in-process draw order, which is what makes a trace recorded at
+//! `--jobs 4` replayable at `--jobs 1` and vice versa.
+//!
+//! Both backends expose a shared [`TraceMonitor`] handle so the caller
+//! that boxed them into a [`Bench`](crate::experiments::Bench) oracle can
+//! still ask, after the run, whether recording hit an I/O error or replay
+//! hit a miss — the `Evaluator` contract itself never panics and never
+//! returns out-of-band errors.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::Path;
+use std::sync::{Arc, Mutex};
+
+use crate::kernelbench::{suite, Problem};
+use crate::perfmodel::PerfModel;
+use crate::sol::{analyze, GpuSpec, SolAnalysis, H100_SXM};
+use crate::util::json::Json;
+
+use super::{AnalyticEvaluator, DynEvaluator, EvalRequest, EvalResponse, Evaluator};
+
+/// Trace format version (the header line's `version` field).
+pub const TRACE_VERSION: u64 = 1;
+
+// ===========================================================================
+// Owned analytic backend
+// ===========================================================================
+
+/// The analytic oracle as one owned value (model + problems + SOL
+/// analyses). [`AnalyticEvaluator`] is three borrows into a
+/// [`Bench`](crate::experiments::Bench); an oracle boxed *into* a `Bench`
+/// cannot borrow the bench that holds it, so the recording/fallthrough
+/// backends own this standalone copy instead.
+///
+/// `new()` mirrors `Bench::new()` exactly (same `H100_SXM`, same
+/// deterministic suite), so its answers are bit-identical to a default
+/// bench's analytic path. A bench built on a different GPU
+/// (`Bench::on`) must install an oracle built with [`OwnedAnalytic::on`]
+/// for the **same** `GpuSpec` — otherwise the recorded responses
+/// silently come from the wrong hardware model.
+pub struct OwnedAnalytic {
+    model: PerfModel,
+    problems: Vec<Problem>,
+    sols: Vec<SolAnalysis>,
+}
+
+impl OwnedAnalytic {
+    pub fn new() -> OwnedAnalytic {
+        Self::on(H100_SXM.clone())
+    }
+
+    pub fn on(gpu: GpuSpec) -> OwnedAnalytic {
+        let problems = suite();
+        let sols = problems.iter().map(|p| analyze(p, &gpu)).collect();
+        OwnedAnalytic { model: PerfModel::new(gpu), problems, sols }
+    }
+}
+
+impl Default for OwnedAnalytic {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Evaluator for OwnedAnalytic {
+    fn eval_batch(&self, reqs: &[EvalRequest]) -> Vec<EvalResponse> {
+        AnalyticEvaluator::new(&self.model, &self.problems, &self.sols).eval_batch(reqs)
+    }
+}
+
+// ===========================================================================
+// Monitor
+// ===========================================================================
+
+#[derive(Debug, Default)]
+struct MonitorState {
+    path: String,
+    /// Responses served from the loaded trace.
+    served: u64,
+    /// Unique pairs appended to the trace (recording or fallthrough).
+    recorded: u64,
+    /// Requests a `Strict` trace could not answer.
+    misses: u64,
+    first_miss: Option<String>,
+    io_error: Option<String>,
+}
+
+/// Shared post-run status of a recording/replaying backend. The backend is
+/// usually boxed into a bench as `Box<DynEvaluator>`, so the caller keeps
+/// this handle to inspect the outcome after the run — the in-band
+/// complement to the `Evaluator` contract's "never panic" rule.
+#[derive(Clone, Default)]
+pub struct TraceMonitor(Arc<Mutex<MonitorState>>);
+
+impl TraceMonitor {
+    fn with_path(path: &Path) -> TraceMonitor {
+        let m = TraceMonitor::default();
+        m.lock().path = path.display().to_string();
+        m
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, MonitorState> {
+        self.0.lock().expect("trace monitor lock")
+    }
+
+    pub fn served(&self) -> u64 {
+        self.lock().served
+    }
+
+    pub fn recorded(&self) -> u64 {
+        self.lock().recorded
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.lock().misses
+    }
+
+    pub fn first_miss(&self) -> Option<String> {
+        self.lock().first_miss.clone()
+    }
+
+    pub fn io_error(&self) -> Option<String> {
+        self.lock().io_error.clone()
+    }
+
+    /// One-line human summary for the CLI.
+    pub fn summary(&self) -> String {
+        let s = self.lock();
+        format!(
+            "trace {}: {} served, {} recorded, {} miss(es)",
+            s.path, s.served, s.recorded, s.misses
+        )
+    }
+
+    /// In-band verdict after a traced run: recording I/O failures and
+    /// strict-replay misses become `Err` (the CLI maps this to a nonzero
+    /// exit code).
+    pub fn check(&self) -> Result<(), String> {
+        let s = self.lock();
+        if let Some(e) = &s.io_error {
+            return Err(format!("trace {}: {e}", s.path));
+        }
+        if s.misses > 0 {
+            return Err(format!(
+                "trace {}: {} request(s) missing (first: {}) — the trace does not cover \
+                 this run; re-record it, or replay with --live to fall through to the \
+                 analytic backend and extend the trace",
+                s.path,
+                s.misses,
+                s.first_miss.as_deref().unwrap_or("?"),
+            ));
+        }
+        Ok(())
+    }
+}
+
+// ===========================================================================
+// Recording
+// ===========================================================================
+
+fn pair_to_line(req: &EvalRequest, resp: &EvalResponse) -> String {
+    let mut o = Json::obj();
+    o.set("req", req.to_json()).set("resp", resp.to_json());
+    o.to_string()
+}
+
+fn header_line() -> String {
+    let mut o = Json::obj();
+    o.set("trace", "ucutlass-eval").set("version", TRACE_VERSION);
+    o.to_string()
+}
+
+/// Write one line per pair; returns (lines written, first I/O error).
+/// Shared by the recording sink and the fallthrough appender so their
+/// write bookkeeping cannot drift apart.
+fn write_pair_lines<W: Write>(
+    out: &mut W,
+    pairs: &[(&EvalRequest, &EvalResponse)],
+) -> (u64, Option<String>) {
+    let mut wrote = 0u64;
+    for &(req, resp) in pairs {
+        if let Err(e) = writeln!(out, "{}", pair_to_line(req, resp)) {
+            return (wrote, Some(e.to_string()));
+        }
+        wrote += 1;
+    }
+    (wrote, None)
+}
+
+/// Fold one append's outcome into the monitor (first error wins).
+fn record_outcome(monitor: &TraceMonitor, wrote: u64, io_error: Option<String>) {
+    let mut s = monitor.lock();
+    s.recorded += wrote;
+    if s.io_error.is_none() {
+        s.io_error = io_error;
+    }
+}
+
+/// Explicit-flush cadence: bounds data loss on a crash without paying a
+/// flush syscall per batch (the agent hot loop records one line per
+/// scalar evaluation). `BufWriter` still flushes itself when its buffer
+/// fills; the final flush happens on [`RecordingEvaluator`]'s `Drop`,
+/// where errors are recorded in the monitor rather than swallowed.
+const FLUSH_EVERY_LINES: u32 = 512;
+
+struct Sink {
+    /// Opened lazily on the first recorded batch, so a traced command
+    /// that fails argument validation before evaluating anything leaves
+    /// an existing trace file untouched.
+    out: Option<BufWriter<File>>,
+    path: std::path::PathBuf,
+    seen: BTreeSet<String>,
+    unflushed: u32,
+}
+
+impl Sink {
+    /// Create-and-truncate the file + write the header on first use.
+    fn ensure_open(&mut self) -> Result<&mut BufWriter<File>, String> {
+        if self.out.is_none() {
+            let file = File::create(&self.path)
+                .map_err(|e| format!("cannot create: {e}"))?;
+            let mut out = BufWriter::new(file);
+            writeln!(out, "{}", header_line())
+                .map_err(|e| format!("cannot write header: {e}"))?;
+            self.out = Some(out);
+        }
+        Ok(self.out.as_mut().expect("just opened"))
+    }
+
+    /// Append the deduplicated pairs; I/O failures land in the monitor
+    /// (responses still flow — a broken disk must not corrupt the run).
+    fn append(&mut self, pairs: &[(&EvalRequest, &EvalResponse)], monitor: &TraceMonitor) {
+        let fresh: Vec<(&EvalRequest, &EvalResponse)> = pairs
+            .iter()
+            .copied()
+            .filter(|(req, _)| self.seen.insert(req.key()))
+            .collect();
+        if fresh.is_empty() {
+            return;
+        }
+        let (wrote, mut io_error) = match self.ensure_open() {
+            Err(e) => (0, Some(e)),
+            Ok(out) => write_pair_lines(out, &fresh),
+        };
+        self.unflushed += wrote as u32;
+        if io_error.is_none() && self.unflushed >= FLUSH_EVERY_LINES {
+            io_error = self.flush().err();
+        }
+        record_outcome(monitor, wrote, io_error);
+    }
+
+    fn flush(&mut self) -> Result<(), String> {
+        self.unflushed = 0;
+        match &mut self.out {
+            None => Ok(()),
+            Some(out) => out.flush().map_err(|e| e.to_string()),
+        }
+    }
+}
+
+/// Wraps any backend and appends every `(request, response)` pair it
+/// answers to a JSONL trace, deduplicated by the canonical request key.
+/// Transparent: responses are returned unmodified, so a recorded run is
+/// field-for-field identical to the same run without the recorder.
+///
+/// The trace file is created (truncating any previous one) on the
+/// **first recorded batch**, and fully flushed when the recorder is
+/// dropped — load a recorded trace only after dropping the recorder (or
+/// after [`RecordingEvaluator::flush`]).
+pub struct RecordingEvaluator<E> {
+    inner: E,
+    sink: Mutex<Sink>,
+    monitor: TraceMonitor,
+}
+
+impl<E: Evaluator> RecordingEvaluator<E> {
+    /// Start recording to `path`. The file itself is created lazily (see
+    /// the type docs); creation failures surface through the monitor.
+    pub fn create(inner: E, path: impl AsRef<Path>) -> Result<RecordingEvaluator<E>, String> {
+        let path = path.as_ref();
+        Ok(RecordingEvaluator {
+            inner,
+            sink: Mutex::new(Sink {
+                out: None,
+                path: path.to_path_buf(),
+                seen: BTreeSet::new(),
+                unflushed: 0,
+            }),
+            monitor: TraceMonitor::with_path(path),
+        })
+    }
+
+    /// Flush buffered trace lines to disk now (also happens on `Drop`).
+    pub fn flush(&self) -> Result<(), String> {
+        self.sink.lock().expect("trace sink lock").flush()
+    }
+
+    /// Shared status handle (keep it before boxing the recorder away).
+    pub fn monitor(&self) -> TraceMonitor {
+        self.monitor.clone()
+    }
+}
+
+impl<E> Drop for RecordingEvaluator<E> {
+    fn drop(&mut self) {
+        // final flush; unlike BufWriter's own Drop, errors are recorded
+        // in-band so the CLI's post-run check still reports them
+        if let Ok(mut sink) = self.sink.lock() {
+            if let Err(e) = sink.flush() {
+                let mut s = self.monitor.lock();
+                if s.io_error.is_none() {
+                    s.io_error = Some(e);
+                }
+            }
+        }
+    }
+}
+
+impl<E: Evaluator> Evaluator for RecordingEvaluator<E> {
+    fn eval_batch(&self, reqs: &[EvalRequest]) -> Vec<EvalResponse> {
+        let resps = self.inner.eval_batch(reqs);
+        let pairs: Vec<(&EvalRequest, &EvalResponse)> = reqs.iter().zip(&resps).collect();
+        self.sink.lock().expect("trace sink lock").append(&pairs, &self.monitor);
+        resps
+    }
+}
+
+// ===========================================================================
+// Replay
+// ===========================================================================
+
+/// What a [`TraceEvaluator`] does with a request its trace cannot answer.
+pub enum MissPolicy {
+    /// Answer in-band with `pass == false` and count the miss: the replay
+    /// provably consulted nothing but the trace.
+    Strict,
+    /// Delegate to a live backend and append its answer to the trace, so
+    /// an incrementally changed run only pays for the new measurements.
+    Fallthrough(Box<DynEvaluator>),
+}
+
+/// Serves responses from a loaded trace by canonical request key.
+pub struct TraceEvaluator {
+    by_key: BTreeMap<String, EvalResponse>,
+    /// Responses added by `Fallthrough` after load (kept apart so `by_key`
+    /// stays lock-free on the hot serving path).
+    extra: Mutex<BTreeMap<String, EvalResponse>>,
+    policy: MissPolicy,
+    /// Open appender when the policy extends the trace.
+    appender: Option<Mutex<BufWriter<File>>>,
+    monitor: TraceMonitor,
+}
+
+impl TraceEvaluator {
+    /// Load a trace for strict replay.
+    pub fn load(path: impl AsRef<Path>) -> Result<TraceEvaluator, String> {
+        Self::load_with(path, MissPolicy::Strict)
+    }
+
+    /// Load a trace with an explicit miss policy.
+    pub fn load_with(
+        path: impl AsRef<Path>,
+        policy: MissPolicy,
+    ) -> Result<TraceEvaluator, String> {
+        let path = path.as_ref();
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| format!("trace {}: {e}", path.display()))?;
+        let by_key = parse_trace(&text, &path.display().to_string())?;
+        let appender = match &policy {
+            MissPolicy::Strict => None,
+            MissPolicy::Fallthrough(_) => {
+                let file = OpenOptions::new()
+                    .append(true)
+                    .open(path)
+                    .map_err(|e| format!("trace {}: cannot append: {e}", path.display()))?;
+                Some(Mutex::new(BufWriter::new(file)))
+            }
+        };
+        Ok(TraceEvaluator {
+            by_key,
+            extra: Mutex::new(BTreeMap::new()),
+            policy,
+            appender,
+            monitor: TraceMonitor::with_path(path),
+        })
+    }
+
+    /// Distinct request keys the loaded trace answers (before extension).
+    pub fn len(&self) -> usize {
+        self.by_key.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_key.is_empty()
+    }
+
+    /// Shared status handle (keep it before boxing the evaluator away).
+    pub fn monitor(&self) -> TraceMonitor {
+        self.monitor.clone()
+    }
+}
+
+/// Parse trace text into the serving map. Every malformed line is an
+/// in-band error naming its 1-based line number.
+fn parse_trace(text: &str, origin: &str) -> Result<BTreeMap<String, EvalResponse>, String> {
+    let mut by_key = BTreeMap::new();
+    for (idx, raw) in text.lines().enumerate() {
+        let n = idx + 1;
+        let line = raw.trim();
+        if line.is_empty() {
+            continue;
+        }
+        let j = Json::parse(line)
+            .map_err(|e| format!("trace {origin}: line {n}: corrupt trace line ({e})"))?;
+        if j.get("trace").is_some() {
+            let version = j.get("version").and_then(|v| v.as_u64());
+            if version != Some(TRACE_VERSION) {
+                return Err(format!(
+                    "trace {origin}: line {n}: unsupported trace version {version:?} \
+                     (this build reads version {TRACE_VERSION})"
+                ));
+            }
+            continue;
+        }
+        let req = j
+            .get("req")
+            .and_then(EvalRequest::from_json)
+            .ok_or_else(|| format!("trace {origin}: line {n}: malformed request"))?;
+        let resp = j
+            .get("resp")
+            .and_then(EvalResponse::from_json)
+            .ok_or_else(|| format!("trace {origin}: line {n}: malformed response"))?;
+        let key = req.key();
+        if resp.key != key {
+            return Err(format!(
+                "trace {origin}: line {n}: response key `{}` does not match its request \
+                 key `{key}`",
+                resp.key
+            ));
+        }
+        if let Some(prev) = by_key.get(&key) {
+            if *prev != resp {
+                return Err(format!(
+                    "trace {origin}: line {n}: conflicting responses for key {key}"
+                ));
+            }
+        }
+        by_key.insert(key, resp);
+    }
+    Ok(by_key)
+}
+
+impl Evaluator for TraceEvaluator {
+    fn eval_batch(&self, reqs: &[EvalRequest]) -> Vec<EvalResponse> {
+        let keys: Vec<String> = reqs.iter().map(|r| r.key()).collect();
+        let mut out: Vec<Option<EvalResponse>> = {
+            let extra = self.extra.lock().expect("trace extra lock");
+            keys.iter()
+                .map(|k| self.by_key.get(k).or_else(|| extra.get(k)).cloned())
+                .collect()
+        };
+        let hits = out.iter().filter(|o| o.is_some()).count() as u64;
+        self.monitor.lock().served += hits;
+
+        let missed: Vec<usize> =
+            (0..reqs.len()).filter(|&i| out[i].is_none()).collect();
+        if missed.is_empty() {
+            return out.into_iter().map(|o| o.expect("all hits")).collect();
+        }
+
+        match &self.policy {
+            MissPolicy::Strict => {
+                let mut s = self.monitor.lock();
+                for &i in &missed {
+                    s.misses += 1;
+                    if s.first_miss.is_none() {
+                        s.first_miss = Some(keys[i].clone());
+                    }
+                }
+                drop(s);
+                for &i in &missed {
+                    out[i] =
+                        Some(EvalResponse::error(&reqs[i], format!("trace miss: {}", keys[i])));
+                }
+            }
+            MissPolicy::Fallthrough(inner) => {
+                let sub: Vec<EvalRequest> = missed.iter().map(|&i| reqs[i].clone()).collect();
+                let answers = inner.eval_batch(&sub);
+                let mut extra = self.extra.lock().expect("trace extra lock");
+                let mut fresh: Vec<(&EvalRequest, &EvalResponse)> = Vec::new();
+                for (&i, resp) in missed.iter().zip(&answers) {
+                    if !extra.contains_key(&keys[i]) && !self.by_key.contains_key(&keys[i]) {
+                        fresh.push((&reqs[i], resp));
+                        extra.insert(keys[i].clone(), resp.clone());
+                    }
+                    out[i] = Some(resp.clone());
+                }
+                drop(extra);
+                if let Some(appender) = &self.appender {
+                    // extension is the exception path (misses are rare on
+                    // an incremental re-run), so flush immediately for
+                    // durability rather than on a cadence
+                    let mut w = appender.lock().expect("trace appender lock");
+                    let (wrote, mut io_error) = write_pair_lines(&mut *w, &fresh);
+                    if io_error.is_none() {
+                        io_error = w.flush().err().map(|e| e.to_string());
+                    }
+                    record_outcome(&self.monitor, wrote, io_error);
+                }
+            }
+        }
+        out.into_iter().map(|o| o.expect("all filled")).collect()
+    }
+}
+
+// ===========================================================================
+// CLI plumbing
+// ===========================================================================
+
+/// How a `repro record` / `repro replay` invocation uses the trace.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TraceMode {
+    /// Evaluate live (analytic backend) and record everything.
+    Record,
+    /// Serve strictly from the trace; misses are in-band errors and fail
+    /// the command after the run.
+    ReplayStrict,
+    /// Serve from the trace, falling through to the analytic backend on
+    /// misses and extending the trace.
+    ReplayExtend,
+}
+
+/// Build the boxed oracle + status handle for one traced CLI run.
+pub fn trace_session(
+    mode: TraceMode,
+    path: impl AsRef<Path>,
+) -> Result<(Box<DynEvaluator>, TraceMonitor), String> {
+    match mode {
+        TraceMode::Record => {
+            let rec = RecordingEvaluator::create(OwnedAnalytic::new(), path)?;
+            let monitor = rec.monitor();
+            Ok((Box::new(rec), monitor))
+        }
+        TraceMode::ReplayStrict => {
+            let trace = TraceEvaluator::load(path)?;
+            let monitor = trace.monitor();
+            Ok((Box::new(trace), monitor))
+        }
+        TraceMode::ReplayExtend => {
+            let trace = TraceEvaluator::load_with(
+                path,
+                MissPolicy::Fallthrough(Box::new(OwnedAnalytic::new())),
+            )?;
+            let monitor = trace.monitor();
+            Ok((Box::new(trace), monitor))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::DType;
+    use crate::perfmodel::CandidateConfig;
+    use crate::util::rng::{stream, StreamPath};
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        std::env::temp_dir().join(format!("ucutlass_{name}_{}.jsonl", std::process::id()))
+    }
+
+    fn requests() -> Vec<EvalRequest> {
+        let mut reqs = Vec::new();
+        for p in [0usize, 2, 7] {
+            reqs.push(EvalRequest::baseline(p));
+            reqs.push(EvalRequest::sol_gap(p));
+            for (i, &tile) in crate::agent::policy::TILES.iter().take(3).enumerate() {
+                let cfg = CandidateConfig::library(tile, DType::Fp16);
+                reqs.push(EvalRequest::candidate(p, cfg.clone()));
+                reqs.push(EvalRequest::measured(
+                    p,
+                    cfg,
+                    StreamPath::new(0xFFEE_DDCC_BBAA_9988, &[stream::MEASURE, p as u64, i as u64]),
+                ));
+            }
+        }
+        reqs
+    }
+
+    #[test]
+    fn record_then_replay_serves_identical_responses() {
+        let path = tmp("roundtrip");
+        let live = OwnedAnalytic::new();
+        let reqs = requests();
+        let reference = live.eval_batch(&reqs);
+
+        let rec = RecordingEvaluator::create(OwnedAnalytic::new(), &path).unwrap();
+        let mon = rec.monitor();
+        // recording is transparent, including across repeated batches
+        assert_eq!(rec.eval_batch(&reqs), reference);
+        assert_eq!(rec.eval_batch(&reqs), reference);
+        assert_eq!(mon.recorded() as usize, reqs.len(), "dedup by key, not by call");
+        drop(rec); // final flush happens on drop
+        assert!(mon.io_error().is_none());
+
+        let trace = TraceEvaluator::load(&path).unwrap();
+        assert_eq!(trace.len(), reqs.len());
+        let replayed = trace.eval_batch(&reqs);
+        assert_eq!(replayed, reference, "replayed responses must be bit-identical");
+        assert_eq!(trace.monitor().misses(), 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn strict_miss_is_an_in_band_error_not_a_panic() {
+        let path = tmp("strict_miss");
+        let rec = RecordingEvaluator::create(OwnedAnalytic::new(), &path).unwrap();
+        rec.eval_batch(&[EvalRequest::baseline(0)]);
+        drop(rec);
+
+        let trace = TraceEvaluator::load(&path).unwrap();
+        let mon = trace.monitor();
+        let unknown = EvalRequest::baseline(33);
+        let resp = trace.eval(&unknown);
+        assert!(!resp.pass);
+        assert!(resp.detail.as_deref().unwrap_or("").contains("trace miss"));
+        assert_eq!(mon.misses(), 1);
+        assert_eq!(mon.first_miss().as_deref(), Some(unknown.key().as_str()));
+        assert!(mon.check().is_err(), "strict replay with misses must fail the run check");
+        // hits still serve
+        assert!(trace.eval(&EvalRequest::baseline(0)).pass);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn fallthrough_answers_live_and_extends_the_trace() {
+        let path = tmp("fallthrough");
+        let rec = RecordingEvaluator::create(OwnedAnalytic::new(), &path).unwrap();
+        let reqs = requests();
+        rec.eval_batch(&reqs[..4]);
+        drop(rec);
+
+        let live = OwnedAnalytic::new();
+        let reference = live.eval_batch(&reqs);
+        let trace = TraceEvaluator::load_with(
+            &path,
+            MissPolicy::Fallthrough(Box::new(OwnedAnalytic::new())),
+        )
+        .unwrap();
+        let mon = trace.monitor();
+        assert_eq!(trace.eval_batch(&reqs), reference);
+        assert_eq!(mon.misses(), 0, "fallthrough answers are not misses");
+        assert_eq!(mon.recorded() as usize, reqs.len() - 4);
+        assert!(mon.check().is_ok());
+        drop(trace);
+
+        // the extended trace now covers everything strictly
+        let strict = TraceEvaluator::load(&path).unwrap();
+        assert_eq!(strict.len(), reqs.len());
+        assert_eq!(strict.eval_batch(&reqs), reference);
+        assert_eq!(strict.monitor().misses(), 0);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn corrupted_and_truncated_lines_report_their_line_number() {
+        let path = tmp("corrupt");
+        let good = {
+            let live = OwnedAnalytic::new();
+            let req = EvalRequest::baseline(1);
+            let resp = live.eval(&req);
+            pair_to_line(&req, &resp)
+        };
+        // line 3 is truncated mid-object (a partially-flushed record)
+        let text = format!("{}\n{good}\n{}\n", header_line(), &good[..good.len() / 2]);
+        std::fs::write(&path, text).unwrap();
+        let err = TraceEvaluator::load(&path).unwrap_err();
+        assert!(err.contains("line 3"), "got: {err}");
+        assert!(err.contains("corrupt"), "got: {err}");
+
+        // valid JSON that is not a (req, resp) pair is named too
+        std::fs::write(&path, format!("{}\n{{\"x\":1}}\n", header_line())).unwrap();
+        let err = TraceEvaluator::load(&path).unwrap_err();
+        assert!(err.contains("line 2") && err.contains("malformed request"), "got: {err}");
+
+        // a response stored under the wrong request key is an error, not a
+        // silently-wrong replay
+        let req = EvalRequest::baseline(1);
+        let mut resp = OwnedAnalytic::new().eval(&req);
+        resp.key = EvalRequest::baseline(2).key();
+        std::fs::write(&path, format!("{}\n{}\n", header_line(), pair_to_line(&req, &resp)))
+            .unwrap();
+        let err = TraceEvaluator::load(&path).unwrap_err();
+        assert!(err.contains("does not match"), "got: {err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn unsupported_version_and_missing_file_error_in_band() {
+        let path = tmp("version");
+        std::fs::write(&path, "{\"trace\":\"ucutlass-eval\",\"version\":99}\n").unwrap();
+        let err = TraceEvaluator::load(&path).unwrap_err();
+        assert!(err.contains("version"), "got: {err}");
+        let _ = std::fs::remove_file(&path);
+
+        assert!(TraceEvaluator::load("definitely-missing-trace.jsonl").is_err());
+    }
+
+    #[test]
+    fn conflicting_duplicate_keys_are_rejected() {
+        let path = tmp("conflict");
+        let live = OwnedAnalytic::new();
+        let req = EvalRequest::baseline(1);
+        let resp = live.eval(&req);
+        let mut other = resp.clone();
+        other.value += 1.0;
+        std::fs::write(
+            &path,
+            format!(
+                "{}\n{}\n{}\n",
+                header_line(),
+                pair_to_line(&req, &resp),
+                pair_to_line(&req, &other)
+            ),
+        )
+        .unwrap();
+        let err = TraceEvaluator::load(&path).unwrap_err();
+        assert!(err.contains("conflicting"), "got: {err}");
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn trace_session_modes_construct() {
+        let path = tmp("session");
+        {
+            let (oracle, mon) = trace_session(TraceMode::Record, &path).unwrap();
+            oracle.eval_batch(&[EvalRequest::baseline(0)]);
+            assert_eq!(mon.recorded(), 1);
+            assert!(mon.check().is_ok());
+        }
+        {
+            let (oracle, mon) = trace_session(TraceMode::ReplayStrict, &path).unwrap();
+            assert!(oracle.eval(&EvalRequest::baseline(0)).pass);
+            assert!(!oracle.eval(&EvalRequest::baseline(1)).pass);
+            assert!(mon.check().is_err());
+        }
+        {
+            let (oracle, mon) = trace_session(TraceMode::ReplayExtend, &path).unwrap();
+            assert!(oracle.eval(&EvalRequest::baseline(1)).pass);
+            assert!(mon.check().is_ok());
+        }
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -19,6 +19,12 @@
 //! `repro merge`) partitions the same canonical [`suite_tasks`]
 //! enumeration, so a sharded run merges back bit-identical to both the
 //! serial and the in-process parallel paths.
+//!
+//! The engine is oracle-agnostic: every task evaluates through the `Env`
+//! its bench hands out, so a record/replay backend installed with
+//! `Bench::set_oracle` (ADR-004) is carried across the worker threads
+//! unchanged — a trace recorded at any job count replays at any other,
+//! because measurement identities never depend on task interleaving.
 
 pub mod pool;
 

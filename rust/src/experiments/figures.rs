@@ -50,6 +50,14 @@ impl ExpCtx {
         self
     }
 
+    /// Install a measurement-oracle override (record/replay, ADR-004):
+    /// every figure's suite runs — and batched evaluations like fig14's
+    /// SOL curve — route through it instead of the analytic backend.
+    pub fn with_oracle(mut self, oracle: Box<crate::eval::DynEvaluator>) -> Self {
+        self.bench.set_oracle(oracle);
+        self
+    }
+
     fn key(spec: &VariantSpec, seed: u64, cfg: Option<&MantisConfig>) -> String {
         format!("{}|{}|{:?}|{}|{}", spec.label(), seed, cfg.map(|c| format!("{c:?}")), spec.guardrails, spec.online_integrity)
     }

@@ -8,11 +8,14 @@ use crate::mantis::{run_orchestrated, CrossMemory, MantisConfig};
 use crate::perfmodel::PerfModel;
 use crate::sol::{analyze, SolAnalysis, GpuSpec, H100_SXM};
 
-/// Owns the evaluation substrate: perf model, problems, SOL analyses.
+/// Owns the evaluation substrate: perf model, problems, SOL analyses, and
+/// (optionally) a measurement-oracle override that every [`Env`] handed
+/// out by [`Bench::env`] carries (record/replay, ADR-004).
 pub struct Bench {
     pub model: PerfModel,
     pub problems: Vec<Problem>,
     pub sols: Vec<SolAnalysis>,
+    oracle: Option<Box<crate::eval::DynEvaluator>>,
 }
 
 impl Bench {
@@ -23,15 +26,26 @@ impl Bench {
     pub fn on(gpu: GpuSpec) -> Self {
         let problems = suite();
         let sols = problems.iter().map(|p| analyze(p, &gpu)).collect();
-        Bench { model: PerfModel::new(gpu), problems, sols }
+        Bench { model: PerfModel::new(gpu), problems, sols, oracle: None }
+    }
+
+    /// Install a measurement-oracle override: every subsequent `env()` /
+    /// `evaluator()` routes all evaluation through it (ADR-004).
+    pub fn set_oracle(&mut self, oracle: Box<crate::eval::DynEvaluator>) {
+        self.oracle = Some(oracle);
+    }
+
+    /// Remove the override, restoring the analytic fast path.
+    pub fn clear_oracle(&mut self) {
+        self.oracle = None;
     }
 
     pub fn env(&self) -> Env<'_> {
-        Env { model: &self.model, problems: &self.problems, sols: &self.sols }
+        Env::new(&self.model, &self.problems, &self.sols).with_oracle(self.oracle.as_deref())
     }
 
-    /// The analytic measurement oracle over this bench (ADR-003).
-    pub fn evaluator(&self) -> crate::eval::AnalyticEvaluator<'_> {
+    /// The measurement oracle over this bench (ADR-003/ADR-004).
+    pub fn evaluator(&self) -> crate::eval::Oracle<'_> {
         self.env().evaluator()
     }
 }

@@ -31,7 +31,10 @@
 //! * [`eval`] — the unified evaluation backend API (ADR-003): the
 //!   `Evaluator` trait with batched `eval_batch`, serializable
 //!   `EvalRequest`/`EvalResponse`, analytic / PJRT / manifest backends,
-//!   and the shard/merge protocol behind `repro shard` + `repro merge`.
+//!   the shard/merge protocol behind `repro shard` + `repro merge`, and
+//!   the recorded-trace backend (ADR-004) behind `repro record` +
+//!   `repro replay` — persist a real run's measurements once, re-run
+//!   every scheduler/policy experiment offline from the trace.
 //! * [`integrity`] — SOL-ceiling, LLM-game-detector and PyTorch-only
 //!   detectors with the full label taxonomy (paper §4.4, §6.3).
 //! * [`metrics`] — Fast-p / Attempt-Fast-p curves, signed area, retention.

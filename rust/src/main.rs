@@ -8,6 +8,8 @@
 //! repro run --tier T [--dsl] [--sol orch|prompt] [--problems IDs] [--seed N]
 //! repro validate [--artifacts DIR] [--problem NAME] [--seed N]
 //! repro schedule --tier T [--eps PCT] [--window W] [--seed N]
+//! repro record <exp|run|schedule> ... --trace PATH           record measurements
+//! repro replay <exp|run|schedule> ... --trace PATH [--live]  replay them offline
 //! repro list                                                 list the 59 problems
 //! ```
 //!
@@ -20,6 +22,8 @@ use std::process::ExitCode;
 use ucutlass_repro::agent::controller::{ControllerKind, VariantSpec};
 use ucutlass_repro::agent::{ModelTier, RunLog};
 use ucutlass_repro::eval::manifest::{suite_merge, suite_shard, SuiteShard, SuiteWork};
+use ucutlass_repro::eval::trace::{trace_session, TraceMode};
+use ucutlass_repro::eval::DynEvaluator;
 use ucutlass_repro::exec;
 use ucutlass_repro::experiments::figures::{self, ExpCtx};
 use ucutlass_repro::experiments::Bench;
@@ -64,6 +68,31 @@ fn parse_opts(args: &[String]) -> (Vec<String>, HashMap<String, String>) {
     (pos, opts)
 }
 
+/// Parse an optional `--name value` flag, with a default when absent.
+/// Unparseable values are in-band errors, not silent defaults.
+fn opt_parse<T: std::str::FromStr>(
+    opts: &HashMap<String, String>,
+    name: &str,
+    default: T,
+) -> Result<T, String> {
+    match opts.get(name) {
+        None => Ok(default),
+        Some(s) => s.parse().map_err(|_| format!("--{name}: invalid value `{s}`")),
+    }
+}
+
+/// Parse a required `--name value` flag.
+fn opt_require<T: std::str::FromStr>(
+    opts: &HashMap<String, String>,
+    name: &str,
+    usage: &str,
+) -> Result<T, String> {
+    match opts.get(name) {
+        None => Err(format!("--{name} required ({usage})")),
+        Some(s) => s.parse().map_err(|_| format!("--{name}: invalid value `{s}`")),
+    }
+}
+
 fn tier_of(s: &str) -> Result<ModelTier, String> {
     match s {
         "mini" | "gpt-5-mini" => Ok(ModelTier::Mini),
@@ -75,17 +104,33 @@ fn tier_of(s: &str) -> Result<ModelTier, String> {
 
 fn run(args: &[String]) -> Result<(), String> {
     let (pos, opts) = parse_opts(args);
-    let seed: u64 = opts.get("seed").and_then(|s| s.parse().ok()).unwrap_or(12345);
+    let seed: u64 = opt_parse(&opts, "seed", 12345)?;
     // --jobs N worker threads for suite evaluation (0 = all cores).
     // Results are bit-identical at any job count (ADR-002).
-    let jobs: usize = opts.get("jobs").and_then(|s| s.parse().ok()).unwrap_or(1);
-    match pos.first().map(String::as_str) {
-        Some("exp") => cmd_exp(&pos, &opts, seed, jobs),
+    let jobs: usize = opt_parse(&opts, "jobs", 1)?;
+    let cmd = pos.first().map(String::as_str);
+    if opts.contains_key("trace") && !matches!(cmd, Some("record") | Some("replay")) {
+        return Err("--trace is only meaningful under `repro record` / `repro replay`".into());
+    }
+    if opts.contains_key("live") && cmd != Some("replay") {
+        return Err("--live is only meaningful under `repro replay`".into());
+    }
+    match cmd {
+        Some("exp") => cmd_exp(&pos, &opts, seed, jobs, None),
         Some("sol") => cmd_sol(&pos),
         Some("dsl") => cmd_dsl(&pos, &opts),
-        Some("run") => cmd_run(&pos, &opts, seed, jobs),
+        Some("run") => cmd_run(&pos, &opts, seed, jobs, None),
         Some("validate") => cmd_validate(&opts, seed),
-        Some("schedule") => cmd_schedule(&opts, seed, jobs),
+        Some("schedule") => cmd_schedule(&opts, seed, jobs, None),
+        Some("record") => cmd_traced(TraceMode::Record, &pos, &opts, seed, jobs),
+        Some("replay") => {
+            let mode = if opts.contains_key("live") {
+                TraceMode::ReplayExtend
+            } else {
+                TraceMode::ReplayStrict
+            };
+            cmd_traced(mode, &pos, &opts, seed, jobs)
+        }
         Some("shard") => cmd_shard(&opts, seed),
         Some("merge") => cmd_merge(&pos, &opts),
         Some("list") => cmd_list(),
@@ -94,6 +139,46 @@ fn run(args: &[String]) -> Result<(), String> {
             Ok(())
         }
     }
+}
+
+/// `repro record <exp|run|schedule> … --trace PATH` /
+/// `repro replay <exp|run|schedule> … --trace PATH [--live]` (ADR-004):
+/// run the wrapped subcommand with a recording or trace-serving oracle
+/// installed, then report the trace outcome — strict-replay misses and
+/// recording I/O failures exit nonzero.
+fn cmd_traced(
+    mode: TraceMode,
+    pos: &[String],
+    opts: &HashMap<String, String>,
+    seed: u64,
+    jobs: usize,
+) -> Result<(), String> {
+    const USAGE: &str = "usage: repro record|replay <exp|run|schedule> [...] --trace PATH";
+    let path = opts.get("trace").ok_or(format!("--trace PATH required ({USAGE})"))?;
+    // `--trace` with no following value parses as the sentinel "true" —
+    // reject it rather than silently recording into a file named `true`
+    if path == "true" {
+        return Err(format!("--trace needs a file path ({USAGE})"));
+    }
+    // validate the wrapped subcommand BEFORE touching the trace file, so
+    // a typo cannot clobber an existing recording (the recorder also
+    // creates its file lazily, on the first recorded measurement)
+    let inner = &pos[1..];
+    let sub = match inner.first().map(String::as_str) {
+        Some(s @ ("exp" | "run" | "schedule")) => s,
+        Some(other) => {
+            return Err(format!("record/replay cannot wrap `{other}` (exp|run|schedule)"))
+        }
+        None => return Err(USAGE.into()),
+    };
+    let (oracle, monitor) = trace_session(mode, path)?;
+    match sub {
+        "exp" => cmd_exp(inner, opts, seed, jobs, Some(oracle))?,
+        "run" => cmd_run(inner, opts, seed, jobs, Some(oracle))?,
+        _ => cmd_schedule(opts, seed, jobs, Some(oracle))?,
+    }
+    println!("{}", monitor.summary());
+    monitor.check()
 }
 
 const HELP: &str = "\
@@ -108,6 +193,8 @@ repro — µCUTLASS + SOL-guidance reproduction (see README.md)
             [--problems L1-1,L2-76] [--seed N] [--jobs N]
   repro validate [--artifacts artifacts] [--problem NAME] [--seed N]
   repro schedule --tier <mini|mid|max> [--eps 100] [--window 8] [--seed N] [--jobs N]
+  repro record <exp|run|schedule> [...] --trace PATH
+  repro replay <exp|run|schedule> [...] --trace PATH [--live]
   repro shard --index I --of N --tier <mini|mid|max> [--dsl] [--sol <orch|prompt>]
             [--seed N] [--out FILE]
   repro merge <shard.json>... [--out FILE]
@@ -118,17 +205,27 @@ repro — µCUTLASS + SOL-guidance reproduction (see README.md)
   shard/merge split the same evaluation across processes/machines: run
   `repro shard --index I --of N ...` once per I with identical settings,
   then `repro merge shard_*.json` — the merged log is bit-identical to a
-  single-process `repro run` of the same variant and seed.";
+  single-process `repro run` of the same variant and seed.
+  record/replay persist every measurement of a run to a JSONL trace and
+  re-run experiments offline from it (ADR-004): `repro record run --tier
+  mini --trace t.jsonl`, then `repro replay run --tier mini --trace
+  t.jsonl` reproduces the run field-for-field without touching the
+  analytic backend (strict; a trace miss fails the command). --live falls
+  through to the live backend on misses and extends the trace.";
 
 fn cmd_exp(
     pos: &[String],
     opts: &HashMap<String, String>,
     seed: u64,
     jobs: usize,
+    oracle: Option<Box<DynEvaluator>>,
 ) -> Result<(), String> {
     let which = pos.get(1).map(String::as_str).unwrap_or("all");
     let out = opts.get("out").cloned().unwrap_or_else(|| "results".into());
     let mut ctx = ExpCtx::new(&out, seed).with_jobs(jobs);
+    if let Some(o) = oracle {
+        ctx = ctx.with_oracle(o);
+    }
     let text = match which {
         "fig3" => figures::fig3(&mut ctx),
         "fig4" => figures::fig4(&mut ctx),
@@ -280,9 +377,13 @@ fn cmd_run(
     opts: &HashMap<String, String>,
     seed: u64,
     jobs: usize,
+    oracle: Option<Box<DynEvaluator>>,
 ) -> Result<(), String> {
     let spec = spec_from_opts(opts)?;
-    let bench = Bench::new();
+    let mut bench = Bench::new();
+    if let Some(o) = oracle {
+        bench.set_oracle(o);
+    }
     let selected: Vec<usize> = match opts.get("problems") {
         Some(list) => list
             .split(',')
@@ -298,12 +399,8 @@ fn cmd_run(
 }
 
 fn cmd_shard(opts: &HashMap<String, String>, seed: u64) -> Result<(), String> {
-    let index: usize = opts
-        .get("index")
-        .and_then(|s| s.parse().ok())
-        .ok_or("shard: --index I required")?;
-    let of: usize =
-        opts.get("of").and_then(|s| s.parse().ok()).ok_or("shard: --of N required")?;
+    let index: usize = opt_require(opts, "index", "repro shard --index I --of N ...")?;
+    let of: usize = opt_require(opts, "of", "repro shard --index I --of N ...")?;
     if of == 0 || index >= of {
         return Err(format!("shard: --index must be in 0..{of}"));
     }
@@ -412,19 +509,23 @@ fn cmd_validate(opts: &HashMap<String, String>, seed: u64) -> Result<(), String>
     Ok(())
 }
 
-fn cmd_schedule(opts: &HashMap<String, String>, seed: u64, jobs: usize) -> Result<(), String> {
+fn cmd_schedule(
+    opts: &HashMap<String, String>,
+    seed: u64,
+    jobs: usize,
+    oracle: Option<Box<DynEvaluator>>,
+) -> Result<(), String> {
     let tier = tier_of(opts.get("tier").map(String::as_str).unwrap_or("max"))?;
     let spec = VariantSpec::new(ControllerKind::OrchestratedSol, true, tier);
-    let bench = Bench::new();
+    let mut bench = Bench::new();
+    if let Some(o) = oracle {
+        bench.set_oracle(o);
+    }
     let env = bench.env();
     let pipeline = IntegrityPipeline::default();
     let policy = Policy {
-        epsilon: opts
-            .get("eps")
-            .and_then(|s| s.parse::<f64>().ok())
-            .map(|p| p / 100.0)
-            .unwrap_or(1.0),
-        window: opts.get("window").and_then(|s| s.parse().ok()).unwrap_or(0),
+        epsilon: opt_parse::<f64>(opts, "eps", 100.0)? / 100.0,
+        window: opt_parse(opts, "window", 0)?,
     };
 
     // Online: the policy runs *during* execution (realized savings) …

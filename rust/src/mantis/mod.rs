@@ -485,7 +485,7 @@ mod tests {
     #[test]
     fn orchestrated_respects_total_budget() {
         let (model, problems, sols) = fixture();
-        let env = Env { model: &model, problems: &problems, sols: &sols };
+        let env = Env::new(&model, &problems, &sols);
         let spec = VariantSpec::new(ControllerKind::OrchestratedSol, true, ModelTier::Mid);
         let run = run_orchestrated(&env, &spec, 0, 9, None);
         assert_eq!(run.attempts.len(), 40, "5 iters × 2 hyps × 4 attempts");
@@ -504,7 +504,7 @@ mod tests {
     #[test]
     fn cross_memory_threads_across_problems() {
         let (model, problems, sols) = fixture();
-        let env = Env { model: &model, problems: &problems, sols: &sols };
+        let env = Env::new(&model, &problems, &sols);
         let spec = VariantSpec::new(ControllerKind::OrchestratedSol, true, ModelTier::Mid);
         let cfg = MantisConfig::default();
         let mut mem = CrossMemory::default();

@@ -51,8 +51,18 @@ impl Json {
         }
     }
 
+    /// Strict unsigned-integer view: negative, fractional, and
+    /// beyond-2^53 numbers yield `None` instead of silently saturating or
+    /// truncating (callers parse indices and counts, where a wrong value
+    /// is worse than an in-band parse failure). u64s needing more than 53
+    /// bits travel as hex strings (see `eval::stream_to_json`).
     pub fn as_u64(&self) -> Option<u64> {
-        self.as_f64().map(|f| f as u64)
+        match self.as_f64() {
+            Some(f) if f >= 0.0 && f.fract() == 0.0 && f <= (1u64 << 53) as f64 => {
+                Some(f as u64)
+            }
+            _ => None,
+        }
     }
 
     pub fn as_bool(&self) -> Option<bool> {
@@ -484,5 +494,18 @@ mod tests {
     fn unicode_escapes() {
         let v = Json::parse(r#""éA""#).unwrap();
         assert_eq!(v.as_str(), Some("éA"));
+    }
+
+    #[test]
+    fn as_u64_is_strict() {
+        assert_eq!(Json::Num(0.0).as_u64(), Some(0));
+        assert_eq!(Json::Num(42.0).as_u64(), Some(42));
+        assert_eq!(Json::Num((1u64 << 53) as f64).as_u64(), Some(1 << 53));
+        // negative, fractional, oversized, and mistyped values fail in-band
+        assert_eq!(Json::Num(-1.0).as_u64(), None);
+        assert_eq!(Json::Num(1.5).as_u64(), None);
+        assert_eq!(Json::Num(1e18).as_u64(), None);
+        assert_eq!(Json::Str("7".into()).as_u64(), None);
+        assert_eq!(Json::Null.as_u64(), None);
     }
 }

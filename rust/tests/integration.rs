@@ -5,7 +5,7 @@
 use ucutlass_repro::agent::controller::{run_problem, ControllerKind, Env, VariantSpec};
 use ucutlass_repro::agent::{AttemptOutcome, ModelTier, SolutionKind};
 use ucutlass_repro::dsl;
-use ucutlass_repro::eval::{AnalyticEvaluator, EvalRequest};
+use ucutlass_repro::eval::{EvalRequest, Oracle};
 use ucutlass_repro::integrity::IntegrityPipeline;
 use ucutlass_repro::kernelbench::{find, suite};
 use ucutlass_repro::metrics;
@@ -29,10 +29,10 @@ impl Fixture {
     }
 
     fn env(&self) -> Env<'_> {
-        Env { model: &self.model, problems: &self.problems, sols: &self.sols }
+        Env::new(&self.model, &self.problems, &self.sols)
     }
 
-    fn ev(&self) -> AnalyticEvaluator<'_> {
+    fn ev(&self) -> Oracle<'_> {
         self.env().evaluator()
     }
 }

@@ -1,0 +1,111 @@
+//! Record/replay golden tests (ADR-004 acceptance): recording a suite run
+//! must be transparent, and strict replay from the trace — with the
+//! analytic backend disabled — must reproduce the `RunLog`s
+//! field-for-field (and byte-for-byte as JSON artifacts) at any job
+//! count. Keys are derived-stream identities, so a trace recorded under
+//! `--jobs 4` serves a `--jobs 1` replay and vice versa.
+
+use ucutlass_repro::agent::controller::{ControllerKind, Env, VariantSpec};
+use ucutlass_repro::agent::{run_problem, ModelTier, RunLog};
+use ucutlass_repro::eval::{OwnedAnalytic, RecordingEvaluator, TraceEvaluator};
+use ucutlass_repro::exec;
+use ucutlass_repro::experiments::Bench;
+use ucutlass_repro::kernelbench::suite;
+use ucutlass_repro::mantis::MantisConfig;
+use ucutlass_repro::perfmodel::PerfModel;
+use ucutlass_repro::sol::{analyze, SolAnalysis, H100_SXM};
+
+fn tmp(name: &str) -> std::path::PathBuf {
+    std::env::temp_dir().join(format!("ucutlass_rr_{name}_{}.jsonl", std::process::id()))
+}
+
+/// One flat variant (fans out per problem) + one orchestrated default
+/// (cross-memory on → a whole-variant task), as in the shard/merge golden
+/// test: together they cover both task shapes of ADR-002.
+fn work() -> Vec<(VariantSpec, Option<MantisConfig>)> {
+    vec![
+        (VariantSpec::new(ControllerKind::InPromptSol, true, ModelTier::Mini), None),
+        (
+            VariantSpec::new(ControllerKind::OrchestratedSol, true, ModelTier::Mini),
+            Some(MantisConfig::default()),
+        ),
+    ]
+}
+
+#[test]
+fn record_replay_golden_runlogs_identical_at_jobs_1_and_4() {
+    let path = tmp("golden");
+    let work = work();
+    let seed = 2025;
+
+    // reference: the plain analytic run
+    let bench = Bench::new();
+    let reference: Vec<RunLog> = exec::eval_variants(&bench, &work, seed, 1);
+
+    // record under --jobs 4: the recorder must be transparent, and the
+    // trace key set must be job-count independent
+    let mut bench_rec = Bench::new();
+    let rec = RecordingEvaluator::create(OwnedAnalytic::new(), &path).unwrap();
+    let rec_monitor = rec.monitor();
+    bench_rec.set_oracle(Box::new(rec));
+    let recorded = exec::eval_variants(&bench_rec, &work, seed, 4);
+    assert_eq!(recorded, reference, "recording must not perturb the run");
+    assert!(rec_monitor.recorded() > 0);
+    drop(bench_rec); // dropping the recorder flushes the trace
+    assert_eq!(rec_monitor.io_error(), None);
+
+    // strict replay (analytic backend disabled): field-for-field and
+    // byte-for-byte identical, serial and parallel
+    for jobs in [1usize, 4] {
+        let mut bench_rep = Bench::new();
+        let trace = TraceEvaluator::load(&path).unwrap();
+        let monitor = trace.monitor();
+        bench_rep.set_oracle(Box::new(trace));
+        let replayed = exec::eval_variants(&bench_rep, &work, seed, jobs);
+        assert_eq!(
+            monitor.misses(),
+            0,
+            "jobs={jobs}: first miss: {:?}",
+            monitor.first_miss()
+        );
+        assert!(monitor.served() > 0);
+        assert_eq!(replayed, reference, "jobs={jobs}: replay must be field-for-field exact");
+        for (r, x) in replayed.iter().zip(&reference) {
+            assert_eq!(
+                r.to_json().to_string(),
+                x.to_json().to_string(),
+                "jobs={jobs}: persisted artifacts must be byte-identical"
+            );
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn record_replay_strict_miss_of_an_uncovered_run_is_in_band() {
+    // replaying a *different* seed against a recorded trace must complete
+    // without panicking and report every miss through the monitor
+    let path = tmp("uncovered");
+    let spec = VariantSpec::new(ControllerKind::Mi, true, ModelTier::Mini);
+
+    let problems = suite();
+    let sols: Vec<SolAnalysis> = problems.iter().map(|p| analyze(p, &H100_SXM)).collect();
+    let model = PerfModel::new(H100_SXM.clone());
+
+    let rec = RecordingEvaluator::create(OwnedAnalytic::new(), &path).unwrap();
+    let env = Env::new(&model, &problems, &sols).with_oracle(Some(&rec));
+    let recorded = run_problem(&env, &spec, 0, 7);
+    drop(rec);
+
+    let trace = TraceEvaluator::load(&path).unwrap();
+    let monitor = trace.monitor();
+    let env = Env::new(&model, &problems, &sols).with_oracle(Some(&trace));
+    // same seed: covered, bit-identical
+    assert_eq!(run_problem(&env, &spec, 0, 7), recorded);
+    assert_eq!(monitor.misses(), 0);
+    // different seed: not covered — completes, and the monitor reports it
+    let _ = run_problem(&env, &spec, 0, 8);
+    assert!(monitor.misses() > 0);
+    assert!(monitor.check().is_err());
+    let _ = std::fs::remove_file(&path);
+}
