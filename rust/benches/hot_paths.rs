@@ -260,4 +260,130 @@ fn main() {
             online.token_savings_vs(&fixed.log) * 100.0
         );
     }
+
+    // ---- interned EvalKey vs string-key lookup (ADR-005 acceptance: the
+    // trace-replay hit path must not build strings per request) ----------
+    {
+        use std::collections::{BTreeMap, HashMap};
+        use ucutlass_repro::eval::{EvalKey, EvalResponse};
+        use ucutlass_repro::util::rng::{stream, StreamPath};
+        let reqs: Vec<EvalRequest> = (0..problems.len())
+            .flat_map(|p| {
+                TILES.iter().enumerate().map(move |(i, &t)| {
+                    EvalRequest::measured(
+                        p,
+                        CandidateConfig::library(t, dsl::DType::Fp16),
+                        StreamPath::new(7, &[stream::MEASURE, p as u64, i as u64]),
+                    )
+                })
+            })
+            .collect();
+        let responses = ev.eval_batch(&reqs);
+        let smap: BTreeMap<String, EvalResponse> =
+            reqs.iter().zip(&responses).map(|(r, v)| (r.key(), v.clone())).collect();
+        let imap: HashMap<EvalKey, EvalResponse> =
+            reqs.iter().zip(&responses).map(|(r, v)| (r.eval_key(), v.clone())).collect();
+        let n = reqs.len();
+        bench("eval lookup: String key() + BTreeMap (x590)", 200, 7, || {
+            for r in &reqs {
+                black_box(smap.get(&r.key()));
+            }
+        });
+        bench("eval lookup: interned EvalKey + HashMap (x590)", 200, 7, || {
+            for r in &reqs {
+                black_box(imap.get(&r.eval_key()));
+            }
+        });
+        assert_eq!(smap.len(), n, "string keys must be collision-free here");
+        assert_eq!(imap.len(), n, "interned keys must be collision-free here");
+    }
+
+    // ---- single-pass sweep vs per-policy replay (ADR-005 headline) ------
+    // One exhausted session pass + 72 offline StopRule grids, against the
+    // pre-sweep cost of re-driving sessions per policy. Evaluator-call
+    // counts come from a strict recorded-trace replay (TraceMonitor), the
+    // exact `repro sweep --trace` scenario. The per-policy side times a
+    // 6-policy sample and extrapolates ×12 (clearly labeled `est`).
+    {
+        use ucutlass_repro::eval::{OwnedAnalytic, RecordingEvaluator, TraceEvaluator};
+        use ucutlass_repro::util::json::Json;
+        let spec = VariantSpec::new(ControllerKind::InPromptSol, true, ModelTier::Mid);
+        let pipeline = IntegrityPipeline::default();
+        let seed = 7u64;
+        let trace_path = std::env::temp_dir()
+            .join(format!("ucutlass_bench_sweep_{}.jsonl", std::process::id()));
+
+        // record the exhausted pass once
+        {
+            let mut b = SuiteBench::new();
+            let rec = RecordingEvaluator::create(OwnedAnalytic::new(), &trace_path).unwrap();
+            b.set_oracle(Box::new(rec));
+            let env = b.env();
+            let _ = scheduler::sweep_sessions(&env, &spec, seed, 1, &pipeline, seed);
+        }
+
+        // timed single-pass sweep, strictly from the trace
+        let mut b = SuiteBench::new();
+        let trace = TraceEvaluator::load(&trace_path).unwrap();
+        let sweep_mon = trace.monitor();
+        b.set_oracle(Box::new(trace));
+        let env = b.env();
+        let t0 = Instant::now();
+        let run = scheduler::sweep_sessions(&env, &spec, seed, 1, &pipeline, seed);
+        let t_sweep = t0.elapsed();
+        assert_eq!(run.sweep.results.len(), 72);
+        assert_eq!(sweep_mon.misses(), 0);
+        let sweep_calls = sweep_mon.served();
+
+        // timed per-policy sample on the same trace (policy run + fixed
+        // reference per policy — what 72 × `repro replay schedule` cost)
+        let sample: Vec<Policy> = scheduler::policy_grid().into_iter().step_by(12).collect();
+        let mut b2 = SuiteBench::new();
+        let trace2 = TraceEvaluator::load(&trace_path).unwrap();
+        let pp_mon = trace2.monitor();
+        b2.set_oracle(Box::new(trace2));
+        let env2 = b2.env();
+        let t1 = Instant::now();
+        for p in &sample {
+            black_box(scheduler::run_online(&env2, &spec, seed, p, 1));
+            black_box(scheduler::run_online(&env2, &spec, seed, &Policy::fixed(), 1));
+        }
+        let t_sample = t1.elapsed();
+        assert_eq!(pp_mon.misses(), 0);
+        let scale = 72.0 / sample.len() as f64;
+        let pp_ms_est = t_sample.as_secs_f64() * 1e3 * scale;
+        let pp_calls_est = (pp_mon.served() as f64 * scale) as u64;
+        println!(
+            "{:40} {:>9.0} ms sweep   {:>7.0} ms est 72x per-policy -> {:.1}x; \
+             eval calls {} vs est {}",
+            "scheduler::sweep_sessions (72 policies)",
+            t_sweep.as_secs_f64() * 1e3,
+            pp_ms_est,
+            pp_ms_est / (t_sweep.as_secs_f64() * 1e3).max(1e-9),
+            sweep_calls,
+            pp_calls_est,
+        );
+
+        // machine-readable perf trajectory (BENCH_sweep.json next to
+        // Cargo.toml; re-run `cargo bench` to refresh)
+        let mut j = Json::obj();
+        j.set("bench", "sweep_vs_per_policy")
+            .set("variant", spec.label())
+            .set("policies", 72u64)
+            .set("sweep_ms", t_sweep.as_secs_f64() * 1e3)
+            .set("per_policy_sample", sample.len() as u64)
+            .set("per_policy_sample_ms", t_sample.as_secs_f64() * 1e3)
+            .set("per_policy_ms_est_72", pp_ms_est)
+            .set("sweep_eval_calls", sweep_calls)
+            .set("per_policy_eval_calls_est_72", pp_calls_est)
+            .set(
+                "speedup_est",
+                pp_ms_est / (t_sweep.as_secs_f64() * 1e3).max(1e-9),
+            );
+        match std::fs::write("BENCH_sweep.json", j.to_string()) {
+            Ok(()) => println!("(wrote BENCH_sweep.json)"),
+            Err(e) => println!("(could not write BENCH_sweep.json: {e})"),
+        }
+        let _ = std::fs::remove_file(&trace_path);
+    }
 }

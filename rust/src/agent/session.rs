@@ -17,7 +17,7 @@
 //! they are `Send` and can be fanned across the `exec` thread pool.
 
 use crate::dsl;
-use crate::eval::{EvalRequest, Evaluator};
+use crate::eval::EvalRequest;
 use crate::sol::SolAnalysis;
 use crate::util::rng::{stream, MeasureSeq, Pcg32, StreamPath};
 
@@ -64,10 +64,11 @@ impl<'a> FlatSession<'a> {
             seed,
             &[stream::MEASURE, stream::FLAT_CONTROLLER, spec.stream_id(), pidx as u64],
         ));
+        // scalar fast path (ADR-005): no response struct, no key strings —
+        // with an oracle override this still routes through the backend
         let t_ref_ms = env
             .evaluator()
-            .eval(&EvalRequest::measured_baseline(pidx, measure.next_stream()))
-            .value;
+            .value(&EvalRequest::measured_baseline(pidx, measure.next_stream()));
         let state = AgentState {
             best_time_ms: f64::INFINITY,
             t_ref_ms,

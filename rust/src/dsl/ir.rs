@@ -82,9 +82,12 @@ impl DType {
     }
 }
 
-impl fmt::Display for DType {
-    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        let s = match self {
+impl DType {
+    /// Canonical allocation-free name — the exact token `Display` prints
+    /// (the interned `EvalKey` hashes these bytes, so key equality matches
+    /// string-key equality field for field).
+    pub fn name(&self) -> &'static str {
+        match self {
             DType::Fp64 => "fp64",
             DType::Fp32 => "fp32",
             DType::Tf32 => "tf32",
@@ -98,8 +101,13 @@ impl fmt::Display for DType {
             DType::Uint8 => "uint8",
             DType::Uint16 => "uint16",
             DType::Uint32 => "uint32",
-        };
-        f.write_str(s)
+        }
+    }
+}
+
+impl fmt::Display for DType {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(self.name())
     }
 }
 

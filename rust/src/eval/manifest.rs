@@ -21,7 +21,7 @@
 //!   (orchestrated + cross-memory) stay whole-variant tasks, exactly as in
 //!   the parallel engine (ADR-002).
 
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::{BTreeMap, HashMap, HashSet};
 use std::sync::Mutex;
 
 use crate::agent::controller::VariantSpec;
@@ -31,11 +31,19 @@ use crate::experiments::runner::Bench;
 use crate::mantis::MantisConfig;
 use crate::util::json::Json;
 
-use super::{EvalRequest, EvalResponse, Evaluator};
+use super::{EvalKey, EvalRequest, EvalResponse, Evaluator};
 
 // ===========================================================================
 // Request-level protocol
 // ===========================================================================
+
+/// Manifest/shard wire-format version. Version 2 switched response keys
+/// from canonical strings to interned 32-hex [`EvalKey`]s and shard
+/// assignment from FNV-64-of-string to the interned key (ADR-005) —
+/// version-1 artifacts (and mixed-version worker fleets, which would
+/// compute a different partition) are rejected with a clear error
+/// instead of a `bad response` parse failure or a silently skewed merge.
+pub const MANIFEST_VERSION: u64 = 2;
 
 /// A JSON-serializable list of pending evaluation requests.
 #[derive(Debug, Clone, PartialEq)]
@@ -46,7 +54,7 @@ pub struct WorkManifest {
 
 impl WorkManifest {
     pub fn new(requests: Vec<EvalRequest>) -> WorkManifest {
-        WorkManifest { version: 1, requests }
+        WorkManifest { version: MANIFEST_VERSION, requests }
     }
 
     pub fn to_json(&self) -> Json {
@@ -59,6 +67,12 @@ impl WorkManifest {
     pub fn parse(text: &str) -> Result<WorkManifest, String> {
         let j = Json::parse(text).map_err(|e| e.to_string())?;
         let version = j.get("version").and_then(|v| v.as_u64()).unwrap_or(1);
+        if version != MANIFEST_VERSION {
+            return Err(format!(
+                "manifest: unsupported version {version} (this build reads version \
+                 {MANIFEST_VERSION}; re-generate the manifest with this build)"
+            ));
+        }
         let requests = j
             .get("requests")
             .and_then(|r| r.as_arr())
@@ -81,7 +95,8 @@ pub struct ResponseShard {
 impl ResponseShard {
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
-        o.set("index", self.index)
+        o.set("version", MANIFEST_VERSION)
+            .set("index", self.index)
             .set("of", self.of)
             .set("responses", Json::Arr(self.responses.iter().map(|r| r.to_json()).collect()));
         o
@@ -89,6 +104,13 @@ impl ResponseShard {
 
     pub fn parse(text: &str) -> Result<ResponseShard, String> {
         let j = Json::parse(text).map_err(|e| e.to_string())?;
+        let version = j.get("version").and_then(|v| v.as_u64()).unwrap_or(1);
+        if version != MANIFEST_VERSION {
+            return Err(format!(
+                "shard: unsupported version {version} (this build reads version \
+                 {MANIFEST_VERSION}; re-evaluate the shard with this build)"
+            ));
+        }
         Ok(ResponseShard {
             index: j.get("index").and_then(|v| v.as_u64()).ok_or("shard: missing index")?
                 as usize,
@@ -104,11 +126,13 @@ impl ResponseShard {
     }
 }
 
-/// Stable shard assignment: FNV-64 of the request key, mod `of`. Every
-/// worker computes the same partition from the manifest alone — no
-/// coordinator state.
-pub fn shard_assignment(key: &str, of: usize) -> usize {
-    (crate::util::fnv64(key.as_bytes()) % of.max(1) as u64) as usize
+/// Stable shard assignment: the interned request key mod `of` (ADR-005;
+/// previously FNV-64 of the key string — the interned form hashes the
+/// same canonical fields without building the string). Every worker
+/// computes the same partition from the manifest alone — no coordinator
+/// state.
+pub fn shard_assignment(key: EvalKey, of: usize) -> usize {
+    key.shard(of)
 }
 
 /// Evaluate the manifest subset assigned to shard `index` of `of`.
@@ -121,15 +145,16 @@ pub fn evaluate_shard<E: Evaluator>(
     let assigned: Vec<EvalRequest> = manifest
         .requests
         .iter()
-        .filter(|r| shard_assignment(&r.key(), of) == index)
+        .filter(|r| shard_assignment(r.eval_key(), of) == index)
         .cloned()
         .collect();
     ResponseShard { index, of, responses: inner.eval_batch(&assigned) }
 }
 
 /// Merge completed shards back into the single-process answer: one
-/// response per manifest request, in manifest order. Responses are
-/// deduplicated by key (sorted — the deterministic merge ordering);
+/// response per manifest request, in manifest order (the output order is
+/// the manifest's, so the interned-key map needs no sorting to stay
+/// deterministic). Responses are deduplicated by interned key;
 /// conflicting payloads for one key or missing keys are errors. For any
 /// deterministic backend, `merge(manifest, shards) ==
 /// inner.eval_batch(&manifest.requests)` exactly.
@@ -137,7 +162,8 @@ pub fn merge(
     manifest: &WorkManifest,
     shards: &[ResponseShard],
 ) -> Result<Vec<EvalResponse>, String> {
-    let mut by_key: BTreeMap<String, EvalResponse> = BTreeMap::new();
+    let mut by_key: HashMap<EvalKey, EvalResponse> =
+        HashMap::with_capacity(shards.iter().map(|s| s.responses.len()).sum());
     for s in shards {
         for r in &s.responses {
             match by_key.get(&r.key) {
@@ -145,7 +171,7 @@ pub fn merge(
                     return Err(format!("conflicting responses for key {}", r.key));
                 }
                 _ => {
-                    by_key.insert(r.key.clone(), r.clone());
+                    by_key.insert(r.key, r.clone());
                 }
             }
         }
@@ -154,8 +180,10 @@ pub fn merge(
         .requests
         .iter()
         .map(|q| {
-            let k = q.key();
-            by_key.get(&k).cloned().ok_or_else(|| format!("missing response for key {k}"))
+            by_key
+                .get(&q.eval_key())
+                .cloned()
+                .ok_or_else(|| format!("missing response for key {}", q.key()))
         })
         .collect()
 }
@@ -172,7 +200,7 @@ pub fn merge(
 #[derive(Default)]
 pub struct ManifestEvaluator {
     pending: Mutex<Vec<EvalRequest>>,
-    completed: BTreeMap<String, EvalResponse>,
+    completed: HashMap<EvalKey, EvalResponse>,
 }
 
 impl ManifestEvaluator {
@@ -191,16 +219,16 @@ impl ManifestEvaluator {
         })
     }
 
-    /// The pending work recorded so far, deduplicated by key in first-seen
-    /// order.
+    /// The pending work recorded so far, deduplicated by interned key in
+    /// first-seen order.
     pub fn pending_manifest(&self) -> WorkManifest {
-        let mut seen = BTreeSet::new();
+        let mut seen = HashSet::new();
         let reqs = self
             .pending
             .lock()
             .expect("pending-work lock")
             .iter()
-            .filter(|r| seen.insert(r.key()))
+            .filter(|r| seen.insert(r.eval_key()))
             .cloned()
             .collect();
         WorkManifest::new(reqs)
@@ -214,11 +242,11 @@ impl ManifestEvaluator {
 impl Evaluator for ManifestEvaluator {
     fn eval_batch(&self, reqs: &[EvalRequest]) -> Vec<EvalResponse> {
         reqs.iter()
-            .map(|r| match self.completed.get(&r.key()) {
+            .map(|r| match self.completed.get(&r.eval_key()) {
                 Some(resp) => resp.clone(),
                 None => {
                     self.pending.lock().expect("pending-work lock").push(r.clone());
-                    EvalResponse::error(r, "pending")
+                    EvalResponse::error(r.eval_key(), "pending")
                 }
             })
             .collect()
@@ -230,10 +258,11 @@ impl Evaluator for ManifestEvaluator {
 fn merged_by_key(
     manifest: &WorkManifest,
     shards: &[ResponseShard],
-) -> Result<BTreeMap<String, EvalResponse>, String> {
-    let mut by_key = BTreeMap::new();
-    for r in merge(manifest, shards)? {
-        by_key.insert(r.key.clone(), r);
+) -> Result<HashMap<EvalKey, EvalResponse>, String> {
+    let merged = merge(manifest, shards)?;
+    let mut by_key = HashMap::with_capacity(merged.len());
+    for r in merged {
+        by_key.insert(r.key, r);
     }
     Ok(by_key)
 }
@@ -241,7 +270,7 @@ fn merged_by_key(
 /// Read-only evaluator over an already-merged response set (no pending
 /// recording): the pure replay face.
 pub struct MergedEvaluator {
-    by_key: BTreeMap<String, EvalResponse>,
+    by_key: HashMap<EvalKey, EvalResponse>,
 }
 
 impl MergedEvaluator {
@@ -264,9 +293,9 @@ impl MergedEvaluator {
 impl Evaluator for MergedEvaluator {
     fn eval_batch(&self, reqs: &[EvalRequest]) -> Vec<EvalResponse> {
         reqs.iter()
-            .map(|r| match self.by_key.get(&r.key()) {
+            .map(|r| match self.by_key.get(&r.eval_key()) {
                 Some(resp) => resp.clone(),
-                None => EvalResponse::error(r, "not in merged response set"),
+                None => EvalResponse::error(r.eval_key(), "not in merged response set"),
             })
             .collect()
     }
@@ -570,13 +599,33 @@ mod tests {
     }
 
     #[test]
+    fn manifest_and_shard_version_gates_reject_v1_artifacts() {
+        // version-1 artifacts keyed by canonical strings (pre-ADR-005)
+        // must be rejected with a version diagnostic, not a confusing
+        // `bad response` error or a silently skewed shard partition
+        let err = WorkManifest::parse(r#"{"version":1,"requests":[]}"#).unwrap_err();
+        assert!(err.contains("version 1"), "got: {err}");
+        let err = WorkManifest::parse(r#"{"requests":[]}"#).unwrap_err();
+        assert!(err.contains("version"), "missing version field is version 1: {err}");
+        let err =
+            ResponseShard::parse(r#"{"index":0,"of":2,"responses":[]}"#).unwrap_err();
+        assert!(err.contains("version"), "got: {err}");
+        // current-version artifacts round-trip
+        let m = WorkManifest::new(Vec::new());
+        assert_eq!(m.version, MANIFEST_VERSION);
+        assert_eq!(WorkManifest::parse(&m.to_json().to_string()).unwrap(), m);
+        let s = ResponseShard { index: 1, of: 3, responses: Vec::new() };
+        assert_eq!(ResponseShard::parse(&s.to_json().to_string()).unwrap(), s);
+    }
+
+    #[test]
     fn shard_assignment_is_stable_and_total() {
         let reqs = requests();
         for n in [1usize, 2, 7] {
             for r in &reqs {
-                let a = shard_assignment(&r.key(), n);
+                let a = shard_assignment(r.eval_key(), n);
                 assert!(a < n);
-                assert_eq!(a, shard_assignment(&r.key(), n), "stable");
+                assert_eq!(a, shard_assignment(r.eval_key(), n), "stable");
             }
         }
     }

@@ -32,6 +32,15 @@
 //! process reproduces the in-process value bit-for-bit — the property the
 //! shard/merge protocol, the recorded-trace backend, and their golden
 //! tests rest on.
+//!
+//! Request identity has two faces (ADR-005): the canonical *string key*
+//! ([`EvalRequest::key`]) for humans and diagnostics, and the interned
+//! [`EvalKey`] — a process-stable 128-bit FNV-1a digest over the same
+//! canonical fields, computed with zero heap allocations — that every
+//! serving store (`TraceEvaluator`, `ManifestEvaluator`, shard
+//! assignment, recorder dedup) actually indexes by. Two requests have
+//! equal `EvalKey`s exactly when their string keys are equal (a
+//! consistency test pins it over the full suite enumeration).
 
 pub mod manifest;
 pub mod trace;
@@ -42,8 +51,9 @@ pub use trace::{
 };
 
 use std::collections::BTreeMap;
+use std::fmt;
 use std::path::Path;
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
 
 use crate::kernelbench::Problem;
 use crate::perfmodel::{measurement_noise, CandidateConfig, PerfModel};
@@ -51,6 +61,7 @@ use crate::runtime::Runtime;
 use crate::sol::SolAnalysis;
 use crate::util::json::Json;
 use crate::util::rng::StreamPath;
+use crate::util::Fnv128;
 
 /// What a request asks the backend to produce.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -87,6 +98,55 @@ impl MeasureKind {
             "sol_gap" => Some(MeasureKind::SolGap),
             _ => None,
         }
+    }
+}
+
+/// Interned request identity (ADR-005): a deterministic, process-stable
+/// FNV-1a 128 digest over the request's canonical fields, computed with
+/// zero heap allocations. This is what the hot serving paths key by —
+/// `HashMap<EvalKey, _>` lookups instead of building 3–5 `String`s per
+/// request and probing a `BTreeMap<String, _>`. The string form
+/// ([`EvalRequest::key`]) remains authoritative for humans: JSON traces
+/// still carry full requests, and diagnostics print string keys.
+///
+/// Stability guarantee: the digest depends only on the canonical field
+/// byte encoding (little-endian integers, length-prefixed names, f64
+/// bits) and the published FNV constants — never on `std::hash`
+/// randomization or build layout — so keys recorded by one process serve
+/// lookups in any other.
+#[derive(Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct EvalKey(pub u128);
+
+impl EvalKey {
+    /// 32-hex-digit form — the JSON wire format of response keys, and the
+    /// only place the interned key is ever turned into a string.
+    pub fn to_hex(self) -> String {
+        format!("{:032x}", self.0)
+    }
+
+    pub fn parse_hex(s: &str) -> Option<EvalKey> {
+        if s.len() != 32 {
+            return None;
+        }
+        u128::from_str_radix(s, 16).ok().map(EvalKey)
+    }
+
+    /// Stable shard assignment (replaces FNV-64 over the string key):
+    /// every worker computes the same partition from the key alone.
+    pub fn shard(self, of: usize) -> usize {
+        (self.0 as u64 % of.max(1) as u64) as usize
+    }
+}
+
+impl fmt::Debug for EvalKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "EvalKey({:032x})", self.0)
+    }
+}
+
+impl fmt::Display for EvalKey {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{:032x}", self.0)
     }
 }
 
@@ -156,13 +216,70 @@ impl EvalRequest {
         self
     }
 
-    /// Stable request key: the identity the shard/merge protocol orders
-    /// and matches responses by. Two requests with equal keys are the same
-    /// measurement and receive byte-identical responses from any
-    /// deterministic backend. The config fingerprint is always part of the
-    /// key when a config is present — a plan's `config_hash` alone would
-    /// under-identify measured configs, which carry integration-level
-    /// fields (fusion coverage, quality) the DSL plan does not express.
+    /// Interned identity (ADR-005): the allocation-free digest every
+    /// serving store indexes by. Hashes exactly the fields the string
+    /// [`EvalRequest::key`] serializes, in the same order, so
+    /// `a.eval_key() == b.eval_key()` iff `a.key() == b.key()` (pinned by
+    /// a consistency test over the full suite enumeration; the one
+    /// theoretical exception is NaN-valued config floats, which share a
+    /// string form but not a bit pattern — no real request carries NaN).
+    pub fn eval_key(&self) -> EvalKey {
+        let mut h = Fnv128::new();
+        h.write_u64(self.problem as u64);
+        h.write_str(self.kind.name());
+        match &self.config {
+            None => {
+                h.write_u8(0);
+            }
+            Some(c) => {
+                // the same canonical fields `CandidateConfig::fingerprint`
+                // serializes, hashed directly (no intermediate string)
+                h.write_u8(1);
+                h.write_u64(c.tile.0).write_u64(c.tile.1).write_u64(c.tile.2);
+                h.write_str(c.compute_dtype.name());
+                h.write_u8(c.tensor_cores as u8);
+                h.write_u8(c.fused_epilogue as u8);
+                h.write_f64(c.fusion_coverage);
+                h.write_str(c.scheduler.name());
+                h.write_u64(c.stages);
+                h.write_f64(c.quality);
+            }
+        }
+        match &self.config_hash {
+            None => {
+                h.write_u8(0);
+            }
+            Some(s) => {
+                h.write_u8(1);
+                h.write_str(s);
+            }
+        }
+        match &self.stream {
+            None => {
+                h.write_u8(0);
+            }
+            Some(s) => {
+                h.write_u8(1);
+                h.write_u64(s.seed);
+                h.write_u64(s.path.len() as u64);
+                for &c in &s.path {
+                    h.write_u64(c);
+                }
+            }
+        }
+        EvalKey(h.finish())
+    }
+
+    /// Stable request key, human-readable string form: the identity the
+    /// shard/merge protocol orders and matches responses by. Two requests
+    /// with equal keys are the same measurement and receive byte-identical
+    /// responses from any deterministic backend. The config fingerprint is
+    /// always part of the key when a config is present — a plan's
+    /// `config_hash` alone would under-identify measured configs, which
+    /// carry integration-level fields (fusion coverage, quality) the DSL
+    /// plan does not express. Hot paths use the interned [`EvalKey`] form
+    /// ([`EvalRequest::eval_key`]); this string survives in diagnostics
+    /// and trace-miss reports only.
     pub fn key(&self) -> String {
         let cfg = match (&self.config_hash, &self.config) {
             (Some(h), Some(c)) => format!("{h}+{}", c.fingerprint()),
@@ -237,10 +354,16 @@ fn stream_from_json(j: &Json) -> Option<StreamPath> {
 }
 
 /// One evaluation result.
+///
+/// Carries the *interned* request key (ADR-005) so the serving stores
+/// never rebuild strings; `detail` is a shared `Arc<str>` so cloning a
+/// stored response on the replay hit path performs zero heap allocations.
+/// In JSON the key travels as its 32-hex-digit string form
+/// ([`EvalKey::to_hex`]).
 #[derive(Debug, Clone, PartialEq)]
 pub struct EvalResponse {
-    /// The request key this answers ([`EvalRequest::key`]).
-    pub key: String,
+    /// The interned request key this answers ([`EvalRequest::eval_key`]).
+    pub key: EvalKey,
     /// The measurement: milliseconds for Baseline/Candidate/Measured, a
     /// dimensionless ratio for SolGap, the max abs error for the PJRT
     /// backend. `0.0` on error.
@@ -249,38 +372,41 @@ pub struct EvalResponse {
     /// validation)?
     pub pass: bool,
     /// Backend annotation: the selected AOT variant, an error message, …
-    pub detail: Option<String>,
+    pub detail: Option<Arc<str>>,
 }
 
 impl EvalResponse {
-    pub fn ok(req: &EvalRequest, value: f64) -> EvalResponse {
-        EvalResponse { key: req.key(), value, pass: true, detail: None }
+    /// Callers pass the key they already computed for the request — no
+    /// request is keyed twice in one batch (and never through the string
+    /// path).
+    pub fn ok(key: EvalKey, value: f64) -> EvalResponse {
+        EvalResponse { key, value, pass: true, detail: None }
     }
 
-    pub fn error(req: &EvalRequest, msg: impl Into<String>) -> EvalResponse {
-        EvalResponse { key: req.key(), value: 0.0, pass: false, detail: Some(msg.into()) }
+    pub fn error(key: EvalKey, msg: impl Into<String>) -> EvalResponse {
+        EvalResponse { key, value: 0.0, pass: false, detail: Some(Arc::from(msg.into())) }
     }
 
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
-        o.set("key", self.key.clone())
+        o.set("key", self.key.to_hex())
             .set("value", self.value)
             .set("pass", self.pass)
             .set(
                 "detail",
-                self.detail.as_ref().map(|d| Json::Str(d.clone())).unwrap_or(Json::Null),
+                self.detail.as_ref().map(|d| Json::Str(d.to_string())).unwrap_or(Json::Null),
             );
         o
     }
 
     pub fn from_json(j: &Json) -> Option<EvalResponse> {
         Some(EvalResponse {
-            key: j.get("key")?.as_str()?.to_string(),
+            key: EvalKey::parse_hex(j.get("key")?.as_str()?)?,
             value: j.get("value")?.as_f64()?,
             pass: j.get("pass")?.as_bool()?,
             detail: match j.get("detail") {
                 Some(Json::Null) | None => None,
-                Some(d) => Some(d.as_str()?.to_string()),
+                Some(d) => Some(Arc::from(d.as_str()?)),
             },
         })
     }
@@ -424,9 +550,11 @@ impl<'a> AnalyticEvaluator<'a> {
         }
     }
 
-    fn respond(&self, req: &EvalRequest, candidate_ms: Option<f64>) -> EvalResponse {
+    /// `key` is the caller's precomputed [`EvalRequest::eval_key`] —
+    /// threaded through so one batch never keys a request twice.
+    fn respond(&self, req: &EvalRequest, key: EvalKey, candidate_ms: Option<f64>) -> EvalResponse {
         if req.problem >= self.problems.len() {
-            return EvalResponse::error(req, format!("unknown problem index {}", req.problem));
+            return EvalResponse::error(key, format!("unknown problem index {}", req.problem));
         }
         let problem = &self.problems[req.problem];
         match req.kind {
@@ -436,18 +564,18 @@ impl<'a> AnalyticEvaluator<'a> {
                     Some(at) => t * measurement_noise(at),
                     None => t,
                 };
-                EvalResponse::ok(req, t)
+                EvalResponse::ok(key, t)
             }
             MeasureKind::Candidate => match candidate_ms {
-                Some(t) => EvalResponse::ok(req, t),
-                None => EvalResponse::error(req, "candidate request without a config"),
+                Some(t) => EvalResponse::ok(key, t),
+                None => EvalResponse::error(key, "candidate request without a config"),
             },
             MeasureKind::Measured => match (candidate_ms, &req.stream) {
-                (Some(t), Some(at)) => EvalResponse::ok(req, t * measurement_noise(at)),
+                (Some(t), Some(at)) => EvalResponse::ok(key, t * measurement_noise(at)),
                 (Some(_), None) => {
-                    EvalResponse::error(req, "measured request without a noise stream")
+                    EvalResponse::error(key, "measured request without a noise stream")
                 }
-                (None, _) => EvalResponse::error(req, "measured request without a config"),
+                (None, _) => EvalResponse::error(key, "measured request without a config"),
             },
             MeasureKind::SolGap => {
                 let sol = self.sols[req.problem].t_sol_fp16_ms;
@@ -455,7 +583,7 @@ impl<'a> AnalyticEvaluator<'a> {
                     Some(cfg) => self.model.candidate_ms(problem, cfg),
                     None => self.model.baseline_ms(problem),
                 };
-                EvalResponse::ok(req, t / sol)
+                EvalResponse::ok(key, t / sol)
             }
         }
     }
@@ -484,7 +612,10 @@ impl Evaluator for AnalyticEvaluator<'_> {
                 candidate_ms[i] = Some(v);
             }
         }
-        reqs.iter().enumerate().map(|(i, r)| self.respond(r, candidate_ms[i])).collect()
+        reqs.iter()
+            .enumerate()
+            .map(|(i, r)| self.respond(r, r.eval_key(), candidate_ms[i]))
+            .collect()
     }
 }
 
@@ -523,39 +654,40 @@ impl PjrtEvaluator {
     }
 
     fn eval_one(&self, rt: &mut Runtime, req: &EvalRequest) -> EvalResponse {
+        let key = req.eval_key();
         if !matches!(req.kind, MeasureKind::Candidate | MeasureKind::Measured) {
             return EvalResponse::error(
-                req,
+                key,
                 format!("kind `{}` unsupported by the PJRT backend", req.kind.name()),
             );
         }
         let Some(cfg) = &req.config else {
-            return EvalResponse::error(req, "candidate request without a config");
+            return EvalResponse::error(key, "candidate request without a config");
         };
         let Some(problem) = self.problems.get(req.problem) else {
-            return EvalResponse::error(req, format!("unknown problem index {}", req.problem));
+            return EvalResponse::error(key, format!("unknown problem index {}", req.problem));
         };
         let Some(artifact) = problem.artifact else {
-            return EvalResponse::error(req, format!("{}: no AOT artifact", problem.id));
+            return EvalResponse::error(key, format!("{}: no AOT artifact", problem.id));
         };
         let Some(prob) = rt.manifest.problems.get(artifact).cloned() else {
-            return EvalResponse::error(req, format!("artifact {artifact} not in manifest"));
+            return EvalResponse::error(key, format!("artifact {artifact} not in manifest"));
         };
         let Some(variant) = Runtime::select_variant_for(&prob, cfg.tile, cfg.compute_dtype)
         else {
-            return EvalResponse::error(req, format!("{artifact}: no variants"));
+            return EvalResponse::error(key, format!("{artifact}: no variants"));
         };
         // validation inputs are seeded from the request's stream seed so a
         // replayed request validates on identical data
         let seed = req.stream.as_ref().map(|s| s.seed).unwrap_or(0);
         match rt.validate_variant(artifact, &variant, seed) {
             Ok(rep) => EvalResponse {
-                key: req.key(),
+                key,
                 value: rep.max_abs_err,
                 pass: rep.pass,
-                detail: Some(format!("{artifact}/{variant}")),
+                detail: Some(Arc::from(format!("{artifact}/{variant}"))),
             },
-            Err(e) => EvalResponse::error(req, e.to_string()),
+            Err(e) => EvalResponse::error(key, e.to_string()),
         }
     }
 }
@@ -565,7 +697,7 @@ impl Evaluator for PjrtEvaluator {
         match &self.rt {
             None => {
                 let msg = self.unavailable.as_deref().unwrap_or("PJRT unavailable");
-                reqs.iter().map(|r| EvalResponse::error(r, msg)).collect()
+                reqs.iter().map(|r| EvalResponse::error(r.eval_key(), msg)).collect()
             }
             Some(rt) => {
                 // one lock per batch: the executable cache amortizes across
@@ -697,8 +829,118 @@ mod tests {
         let keys = [a.key(), b.key(), c.key(), d.key(), e.key()];
         let set: std::collections::HashSet<&String> = keys.iter().collect();
         assert_eq!(set.len(), keys.len(), "all keys distinct: {keys:?}");
-        // same identity → same key
-        assert_eq!(a.key(), EvalRequest::candidate(3, CandidateConfig::library((128, 128, 64), DType::Fp16)).key());
+        let ikeys = [a.eval_key(), b.eval_key(), c.eval_key(), d.eval_key(), e.eval_key()];
+        let iset: std::collections::HashSet<&EvalKey> = ikeys.iter().collect();
+        assert_eq!(iset.len(), ikeys.len(), "all interned keys distinct: {ikeys:?}");
+        // same identity → same key, in both forms
+        let a2 = EvalRequest::candidate(3, CandidateConfig::library((128, 128, 64), DType::Fp16));
+        assert_eq!(a.key(), a2.key());
+        assert_eq!(a.eval_key(), a2.eval_key());
+    }
+
+    /// The full suite enumeration every backend actually serves: baselines
+    /// (measured + noiseless), SOL gaps, and the whole tile × dtype
+    /// candidate/measured grid per problem, with and without plan hashes.
+    fn full_enumeration() -> Vec<EvalRequest> {
+        let problems = suite();
+        let mut reqs = Vec::new();
+        for p in 0..problems.len() {
+            reqs.push(EvalRequest::baseline(p));
+            reqs.push(EvalRequest::measured_baseline(
+                p,
+                StreamPath::new(12345, &[stream::MEASURE, stream::FLAT_CONTROLLER, p as u64, 0]),
+            ));
+            reqs.push(EvalRequest::sol_gap(p));
+            for (i, &tile) in crate::agent::policy::TILES.iter().enumerate() {
+                for dtype in [DType::Fp32, DType::Fp16, DType::Bf16] {
+                    let cfg = CandidateConfig::library(tile, dtype);
+                    reqs.push(EvalRequest::candidate(p, cfg.clone()));
+                    reqs.push(
+                        EvalRequest::candidate(p, cfg.clone()).with_hash(format!("{i:08x}")),
+                    );
+                    reqs.push(EvalRequest::measured(
+                        p,
+                        cfg,
+                        StreamPath::new(12345, &[stream::MEASURE, p as u64, i as u64]),
+                    ));
+                }
+            }
+        }
+        reqs
+    }
+
+    #[test]
+    fn eval_key_is_equivalent_to_string_key_over_the_suite_enumeration() {
+        // ADR-005 consistency contract: over the full suite enumeration,
+        // the interned key partitions requests exactly like the canonical
+        // string key — same string ⇒ same EvalKey, distinct strings ⇒
+        // distinct EvalKeys (collision-freedom)
+        use std::collections::HashMap;
+        let reqs = full_enumeration();
+        assert!(reqs.len() > 5_000, "enumeration must be non-trivial: {}", reqs.len());
+        let mut by_ikey: HashMap<EvalKey, String> = HashMap::with_capacity(reqs.len());
+        for r in &reqs {
+            let s = r.key();
+            match by_ikey.get(&r.eval_key()) {
+                None => {
+                    by_ikey.insert(r.eval_key(), s);
+                }
+                Some(prev) => assert_eq!(
+                    *prev, s,
+                    "EvalKey collision: `{prev}` and `{s}` share {:?}",
+                    r.eval_key()
+                ),
+            }
+        }
+        // distinct strings got distinct interned keys
+        let strings: std::collections::HashSet<&String> = by_ikey.values().collect();
+        assert_eq!(strings.len(), by_ikey.len());
+        // determinism: recomputing any key reproduces it
+        for r in reqs.iter().take(64) {
+            assert_eq!(r.eval_key(), r.eval_key());
+        }
+    }
+
+    #[test]
+    fn eval_key_process_stability_golden_vectors() {
+        // pinned against an independent (Python) FNV-1a 128 reference over
+        // the documented canonical field encoding: these digests must
+        // never change, or recorded traces stop serving across builds
+        assert_eq!(
+            EvalRequest::baseline(3).eval_key(),
+            EvalKey(0x4b7c_e53d_a388_8ea3_d8e4_cb76_db6f_9fc3),
+        );
+        let cfg = CandidateConfig::library((128, 64, 32), DType::Fp16);
+        assert_eq!(
+            EvalRequest::candidate(2, cfg).with_hash("deadbeef").eval_key(),
+            EvalKey(0xd862_1e5b_c593_b477_2f01_4792_0a68_8777),
+        );
+        assert_eq!(
+            EvalRequest::measured_baseline(
+                1,
+                StreamPath::new(0xFFEE_DDCC_BBAA_9988, &[8, 2, 0x1_0000_0001]),
+            )
+            .eval_key(),
+            EvalKey(0x49d6_a5c3_3776_adeb_0524_6be4_3de1_e927),
+        );
+    }
+
+    #[test]
+    fn eval_key_hex_roundtrip() {
+        for k in [EvalKey(0), EvalKey(u128::MAX), EvalRequest::baseline(7).eval_key()] {
+            let hex = k.to_hex();
+            assert_eq!(hex.len(), 32);
+            assert_eq!(EvalKey::parse_hex(&hex), Some(k));
+        }
+        assert_eq!(EvalKey::parse_hex("xyz"), None);
+        assert_eq!(EvalKey::parse_hex(""), None);
+        assert_eq!(EvalKey::parse_hex(&"f".repeat(33)), None);
+        // shard assignment is total and stable
+        let k = EvalRequest::baseline(7).eval_key();
+        for of in [1usize, 2, 7] {
+            assert!(k.shard(of) < of);
+            assert_eq!(k.shard(of), k.shard(of));
+        }
     }
 
     #[test]
@@ -718,9 +960,10 @@ mod tests {
                 EvalRequest::from_json(&Json::parse(&r.to_json().to_string()).unwrap()).unwrap();
             assert_eq!(*r, parsed);
             assert_eq!(r.key(), parsed.key());
+            assert_eq!(r.eval_key(), parsed.eval_key());
         }
         let resp = EvalResponse {
-            key: reqs[0].key(),
+            key: reqs[0].eval_key(),
             value: 1.2345678901234567,
             pass: true,
             detail: Some("x/y".into()),

@@ -17,14 +17,21 @@
 //!   trace (incremental re-runs).
 //!
 //! Trace format: line 1 is the header `{"trace":"ucutlass-eval",
-//! "version":1}`; every further line is `{"req":…,"resp":…}` using the
+//! "version":2}`; every further line is `{"req":…,"resp":…}` using the
 //! exact `EvalRequest`/`EvalResponse` JSON of ADR-003 (u64 seeds and
-//! stream components as hex strings, floats in shortest-roundtrip form, so
-//! replayed values are bit-identical to the recorded ones). Keys are
-//! stable across processes and job counts: measurement noise is named by
-//! the request's derived [`crate::util::rng::StreamPath`], never by
+//! stream components as hex strings, response keys as 32-hex interned
+//! [`EvalKey`]s since version 2 (ADR-005), floats in shortest-roundtrip
+//! form, so replayed values are bit-identical to the recorded ones). Keys
+//! are stable across processes and job counts: measurement noise is named
+//! by the request's derived [`crate::util::rng::StreamPath`], never by
 //! in-process draw order, which is what makes a trace recorded at
 //! `--jobs 4` replayable at `--jobs 1` and vice versa.
+//!
+//! The serving path is allocation-free per request (ADR-005): lookups go
+//! through `HashMap<EvalKey, EvalResponse>` with keys computed by the
+//! zero-allocation [`EvalRequest::eval_key`], and a hit clones a response
+//! whose `detail` is a shared `Arc<str>` — no `String` is built anywhere
+//! on the hit path. String keys appear only in miss diagnostics.
 //!
 //! Both backends expose a shared [`TraceMonitor`] handle so the caller
 //! that boxed them into a [`Bench`](crate::experiments::Bench) oracle can
@@ -32,7 +39,7 @@
 //! hit a miss — the `Evaluator` contract itself never panics and never
 //! returns out-of-band errors.
 
-use std::collections::{BTreeMap, BTreeSet};
+use std::collections::{HashMap, HashSet};
 use std::fs::{File, OpenOptions};
 use std::io::{BufWriter, Write};
 use std::path::Path;
@@ -43,10 +50,12 @@ use crate::perfmodel::PerfModel;
 use crate::sol::{analyze, GpuSpec, SolAnalysis, H100_SXM};
 use crate::util::json::Json;
 
-use super::{AnalyticEvaluator, DynEvaluator, EvalRequest, EvalResponse, Evaluator};
+use super::{AnalyticEvaluator, DynEvaluator, EvalKey, EvalRequest, EvalResponse, Evaluator};
 
-/// Trace format version (the header line's `version` field).
-pub const TRACE_VERSION: u64 = 1;
+/// Trace format version (the header line's `version` field). Version 2
+/// switched response keys from canonical strings to interned 32-hex
+/// [`EvalKey`]s (ADR-005); version-1 traces must be re-recorded.
+pub const TRACE_VERSION: u64 = 2;
 
 // ===========================================================================
 // Owned analytic backend
@@ -235,7 +244,8 @@ struct Sink {
     /// an existing trace file untouched.
     out: Option<BufWriter<File>>,
     path: std::path::PathBuf,
-    seen: BTreeSet<String>,
+    /// Interned-key dedup set: membership costs no string building.
+    seen: HashSet<EvalKey>,
     unflushed: u32,
 }
 
@@ -259,7 +269,7 @@ impl Sink {
         let fresh: Vec<(&EvalRequest, &EvalResponse)> = pairs
             .iter()
             .copied()
-            .filter(|(req, _)| self.seen.insert(req.key()))
+            .filter(|(req, _)| self.seen.insert(req.eval_key()))
             .collect();
         if fresh.is_empty() {
             return;
@@ -309,7 +319,7 @@ impl<E: Evaluator> RecordingEvaluator<E> {
             sink: Mutex::new(Sink {
                 out: None,
                 path: path.to_path_buf(),
-                seen: BTreeSet::new(),
+                seen: HashSet::new(),
                 unflushed: 0,
             }),
             monitor: TraceMonitor::with_path(path),
@@ -365,12 +375,15 @@ pub enum MissPolicy {
     Fallthrough(Box<DynEvaluator>),
 }
 
-/// Serves responses from a loaded trace by canonical request key.
+/// Serves responses from a loaded trace by interned request key
+/// ([`EvalKey`]): the hit path builds no strings and performs no heap
+/// allocations per request (ADR-005).
 pub struct TraceEvaluator {
-    by_key: BTreeMap<String, EvalResponse>,
+    by_key: HashMap<EvalKey, EvalResponse>,
     /// Responses added by `Fallthrough` after load (kept apart so `by_key`
-    /// stays lock-free on the hot serving path).
-    extra: Mutex<BTreeMap<String, EvalResponse>>,
+    /// stays lock-free on the hot serving path; `Strict` replay never
+    /// takes this lock at all).
+    extra: Mutex<HashMap<EvalKey, EvalResponse>>,
     policy: MissPolicy,
     /// Open appender when the policy extends the trace.
     appender: Option<Mutex<BufWriter<File>>>,
@@ -404,7 +417,7 @@ impl TraceEvaluator {
         };
         Ok(TraceEvaluator {
             by_key,
-            extra: Mutex::new(BTreeMap::new()),
+            extra: Mutex::new(HashMap::new()),
             policy,
             appender,
             monitor: TraceMonitor::with_path(path),
@@ -427,9 +440,12 @@ impl TraceEvaluator {
 }
 
 /// Parse trace text into the serving map. Every malformed line is an
-/// in-band error naming its 1-based line number.
-fn parse_trace(text: &str, origin: &str) -> Result<BTreeMap<String, EvalResponse>, String> {
-    let mut by_key = BTreeMap::new();
+/// in-band error naming its 1-based line number. The map is pre-sized
+/// from the line count so a multi-thousand-line trace loads without
+/// rehash churn.
+fn parse_trace(text: &str, origin: &str) -> Result<HashMap<EvalKey, EvalResponse>, String> {
+    let lines = text.as_bytes().iter().filter(|&&b| b == b'\n').count() + 1;
+    let mut by_key = HashMap::with_capacity(lines);
     for (idx, raw) in text.lines().enumerate() {
         let n = idx + 1;
         let line = raw.trim();
@@ -456,18 +472,21 @@ fn parse_trace(text: &str, origin: &str) -> Result<BTreeMap<String, EvalResponse
             .get("resp")
             .and_then(EvalResponse::from_json)
             .ok_or_else(|| format!("trace {origin}: line {n}: malformed response"))?;
-        let key = req.key();
+        let key = req.eval_key();
         if resp.key != key {
             return Err(format!(
                 "trace {origin}: line {n}: response key `{}` does not match its request \
-                 key `{key}`",
-                resp.key
+                 key `{key}` ({})",
+                resp.key,
+                req.key()
             ));
         }
         if let Some(prev) = by_key.get(&key) {
             if *prev != resp {
                 return Err(format!(
-                    "trace {origin}: line {n}: conflicting responses for key {key}"
+                    "trace {origin}: line {n}: conflicting responses for key {} ({})",
+                    key,
+                    req.key()
                 ));
             }
         }
@@ -478,12 +497,20 @@ fn parse_trace(text: &str, origin: &str) -> Result<BTreeMap<String, EvalResponse
 
 impl Evaluator for TraceEvaluator {
     fn eval_batch(&self, reqs: &[EvalRequest]) -> Vec<EvalResponse> {
-        let keys: Vec<String> = reqs.iter().map(|r| r.key()).collect();
-        let mut out: Vec<Option<EvalResponse>> = {
-            let extra = self.extra.lock().expect("trace extra lock");
-            keys.iter()
-                .map(|k| self.by_key.get(k).or_else(|| extra.get(k)).cloned())
-                .collect()
+        // Interned-key lookups only: no string is built for a hit, and the
+        // clone that materializes the owned response at the output
+        // boundary is allocation-free (`detail` is a shared Arc).
+        let keys: Vec<EvalKey> = reqs.iter().map(|r| r.eval_key()).collect();
+        let mut out: Vec<Option<EvalResponse>> = match &self.policy {
+            // strict replay never extends, so `extra` is always empty —
+            // skip its lock entirely on the hot path
+            MissPolicy::Strict => keys.iter().map(|k| self.by_key.get(k).cloned()).collect(),
+            MissPolicy::Fallthrough(_) => {
+                let extra = self.extra.lock().expect("trace extra lock");
+                keys.iter()
+                    .map(|k| self.by_key.get(k).or_else(|| extra.get(k)).cloned())
+                    .collect()
+            }
         };
         let hits = out.iter().filter(|o| o.is_some()).count() as u64;
         self.monitor.lock().served += hits;
@@ -500,13 +527,17 @@ impl Evaluator for TraceEvaluator {
                 for &i in &missed {
                     s.misses += 1;
                     if s.first_miss.is_none() {
-                        s.first_miss = Some(keys[i].clone());
+                        // diagnostics are the one place the string key
+                        // survives (the miss path is cold by definition)
+                        s.first_miss = Some(reqs[i].key());
                     }
                 }
                 drop(s);
                 for &i in &missed {
-                    out[i] =
-                        Some(EvalResponse::error(&reqs[i], format!("trace miss: {}", keys[i])));
+                    out[i] = Some(EvalResponse::error(
+                        keys[i],
+                        format!("trace miss: {}", reqs[i].key()),
+                    ));
                 }
             }
             MissPolicy::Fallthrough(inner) => {
@@ -517,7 +548,7 @@ impl Evaluator for TraceEvaluator {
                 for (&i, resp) in missed.iter().zip(&answers) {
                     if !extra.contains_key(&keys[i]) && !self.by_key.contains_key(&keys[i]) {
                         fresh.push((&reqs[i], resp));
-                        extra.insert(keys[i].clone(), resp.clone());
+                        extra.insert(keys[i], resp.clone());
                     }
                     out[i] = Some(resp.clone());
                 }
@@ -712,7 +743,7 @@ mod tests {
         // silently-wrong replay
         let req = EvalRequest::baseline(1);
         let mut resp = OwnedAnalytic::new().eval(&req);
-        resp.key = EvalRequest::baseline(2).key();
+        resp.key = EvalRequest::baseline(2).eval_key();
         std::fs::write(&path, format!("{}\n{}\n", header_line(), pair_to_line(&req, &resp)))
             .unwrap();
         let err = TraceEvaluator::load(&path).unwrap_err();

@@ -270,11 +270,14 @@ pub fn fig7(ctx: &mut ExpCtx) -> String {
     // GPT-5.2 µCUTLASS + SOL-guided, as in the paper
     let spec = VariantSpec::new(sol_label(ModelTier::Max, true), true, ModelTier::Max);
     let log = ctx.log(&spec, None).clone();
+    // one ReplayCache build shared by every policy of both sub-sweeps
+    // (ADR-005): each attempt is reviewed exactly once
+    let cache = scheduler::ReplayCache::build(&log, &ctx.pipeline, ctx.review_seed);
     let mut out = String::from("== Figure 7: scheduler parameter sweeps (GPT-5.2 µCUTLASS+SOL) ==\n");
     let mut rows = Vec::new();
     out.push_str("--- (a) SOL-headroom threshold ε (w=0) ---\n");
     for &e in &scheduler::epsilon_grid() {
-        let r = scheduler::replay(&log, &Policy { epsilon: e, window: 0 }, &ctx.pipeline, ctx.review_seed);
+        let r = cache.replay(&Policy { epsilon: e, window: 0 });
         rows.push(vec![
             format!("ε={}%", (e * 100.0) as u64),
             format!("{:.0}%", r.token_savings() * 100.0),
@@ -287,7 +290,7 @@ pub fn fig7(ctx: &mut ExpCtx) -> String {
     let mut rows2 = Vec::new();
     out.push_str("--- (b) no-progress window w (ε=100%) ---\n");
     for &w in &scheduler::window_grid()[1..] {
-        let r = scheduler::replay(&log, &Policy { epsilon: 1.0, window: w }, &ctx.pipeline, ctx.review_seed);
+        let r = cache.replay(&Policy { epsilon: 1.0, window: w });
         rows2.push(vec![
             format!("w={w}"),
             format!("{:.0}%", r.token_savings() * 100.0),
@@ -307,8 +310,9 @@ pub fn fig7(ctx: &mut ExpCtx) -> String {
 }
 
 /// The nine variants of the Pareto study (three per tier: µC+SOL, µC+MI,
-/// SOL-only).
-fn pareto_variants() -> Vec<VariantSpec> {
+/// SOL-only) — shared with `repro sweep`, which replays the same fig8/fig9
+/// policy grid from one session pass per variant.
+pub fn pareto_variants() -> Vec<VariantSpec> {
     let mut v = Vec::new();
     for tier in ModelTier::ALL {
         v.push(VariantSpec::new(sol_label(tier, true), true, tier));
@@ -335,12 +339,15 @@ pub fn fig8(ctx: &mut ExpCtx) -> String {
     }
     let mut csv = Vec::new();
     for (spec, log) in &logs {
-        let sweep = scheduler::sweep(log, &ctx.pipeline, ctx.review_seed);
+        // single-pass sweep engine (ADR-005): one ReplayCache per variant
+        // serves the fixed reference and all 72 grid policies
+        let sweep = scheduler::PolicySweep::over(log, &ctx.pipeline, ctx.review_seed);
         let price = log.price_per_mtok;
-        let fixed = scheduler::replay(log, &Policy::fixed(), &ctx.pipeline, ctx.review_seed);
         let fixed_cost = log.dollar_cost() / max_cost;
-        all_points.push((format!("{} [fixed]", spec.label()), fixed_cost, fixed.geomean_fixed));
+        all_points
+            .push((format!("{} [fixed]", spec.label()), fixed_cost, sweep.fixed.geomean_fixed));
         let pts: Vec<(f64, f64)> = sweep
+            .results
             .iter()
             .map(|r| (r.tokens_used as f64 / 1e6 * price / max_cost, r.geomean))
             .collect();
@@ -349,20 +356,20 @@ pub fn fig8(ctx: &mut ExpCtx) -> String {
             "--- {} --- fixed: (cost {:.2}, geo {:.2}x); frontier ({} of {} policies):\n",
             spec.label(),
             fixed_cost,
-            fixed.geomean_fixed,
+            sweep.fixed.geomean_fixed,
             front.len(),
             pts.len()
         ));
         for &i in &front {
             out.push_str(&format!(
                 "    {}  -> (cost {:.2}, geo {:.2}x)\n",
-                sweep[i].policy.label(),
+                sweep.results[i].policy.label(),
                 pts[i].0,
                 pts[i].1
             ));
             csv.push(vec![
                 spec.label(),
-                sweep[i].policy.label(),
+                sweep.results[i].policy.label(),
                 format!("{}", pts[i].0),
                 format!("{}", pts[i].1),
             ]);
@@ -380,8 +387,8 @@ pub fn fig9(ctx: &mut ExpCtx) -> String {
     let mut rows = Vec::new();
     for spec in pareto_variants() {
         let log = ctx.log(&spec, None).clone();
-        let sweep = scheduler::sweep(&log, &ctx.pipeline, ctx.review_seed);
-        match scheduler::best_policy(&sweep, 0.95) {
+        let sweep = scheduler::PolicySweep::over(&log, &ctx.pipeline, ctx.review_seed);
+        match sweep.best(0.95) {
             Some(best) => rows.push(vec![
                 spec.label(),
                 best.policy.label(),

@@ -23,7 +23,9 @@
 //!   Implement–Summarize controller with gap-aware ROI triage (paper §4.2).
 //! * [`scheduler`] — SOL-guided budget scheduling: ε/w eligibility rules,
 //!   an online breadth-first round-robin engine that applies them *during*
-//!   execution, offline replay that provably agrees with it, Pareto
+//!   execution, offline replay that provably agrees with it, the
+//!   single-pass multi-policy sweep engine behind `repro sweep` (all 72
+//!   fig8/fig9 policies from one exhausted session pass, ADR-005), Pareto
 //!   frontiers, efficiency gain (paper §4.3, §6.2).
 //! * [`exec`] — deterministic parallel execution: a std-only work-stealing
 //!   pool fanning independent (variant, problem, seed) tasks across cores
@@ -34,7 +36,9 @@
 //!   the shard/merge protocol behind `repro shard` + `repro merge`, and
 //!   the recorded-trace backend (ADR-004) behind `repro record` +
 //!   `repro replay` — persist a real run's measurements once, re-run
-//!   every scheduler/policy experiment offline from the trace.
+//!   every scheduler/policy experiment offline from the trace. Serving
+//!   stores index by the allocation-free interned `EvalKey` (ADR-005);
+//!   string keys survive only in JSON and diagnostics.
 //! * [`integrity`] — SOL-ceiling, LLM-game-detector and PyTorch-only
 //!   detectors with the full label taxonomy (paper §4.4, §6.3).
 //! * [`metrics`] — Fast-p / Attempt-Fast-p curves, signed area, retention.

@@ -8,8 +8,9 @@
 //! repro run --tier T [--dsl] [--sol orch|prompt] [--problems IDs] [--seed N]
 //! repro validate [--artifacts DIR] [--problem NAME] [--seed N]
 //! repro schedule --tier T [--eps PCT] [--window W] [--seed N]
-//! repro record <exp|run|schedule> ... --trace PATH           record measurements
-//! repro replay <exp|run|schedule> ... --trace PATH [--live]  replay them offline
+//! repro sweep [--tier T] [--trace PATH [--live]] [--jobs N] [--out FILE]
+//! repro record <exp|run|schedule|sweep> ... --trace PATH           record measurements
+//! repro replay <exp|run|schedule|sweep> ... --trace PATH [--live]  replay them offline
 //! repro list                                                 list the 59 problems
 //! ```
 //!
@@ -23,7 +24,7 @@ use ucutlass_repro::agent::controller::{ControllerKind, VariantSpec};
 use ucutlass_repro::agent::{ModelTier, RunLog};
 use ucutlass_repro::eval::manifest::{suite_merge, suite_shard, SuiteShard, SuiteWork};
 use ucutlass_repro::eval::trace::{trace_session, TraceMode};
-use ucutlass_repro::eval::DynEvaluator;
+use ucutlass_repro::eval::{DynEvaluator, TraceMonitor};
 use ucutlass_repro::exec;
 use ucutlass_repro::experiments::figures::{self, ExpCtx};
 use ucutlass_repro::experiments::Bench;
@@ -109,11 +110,16 @@ fn run(args: &[String]) -> Result<(), String> {
     // Results are bit-identical at any job count (ADR-002).
     let jobs: usize = opt_parse(&opts, "jobs", 1)?;
     let cmd = pos.first().map(String::as_str);
-    if opts.contains_key("trace") && !matches!(cmd, Some("record") | Some("replay")) {
-        return Err("--trace is only meaningful under `repro record` / `repro replay`".into());
+    if opts.contains_key("trace")
+        && !matches!(cmd, Some("record") | Some("replay") | Some("sweep"))
+    {
+        return Err(
+            "--trace is only meaningful under `repro record` / `repro replay` / `repro sweep`"
+                .into(),
+        );
     }
-    if opts.contains_key("live") && cmd != Some("replay") {
-        return Err("--live is only meaningful under `repro replay`".into());
+    if opts.contains_key("live") && !matches!(cmd, Some("replay") | Some("sweep")) {
+        return Err("--live is only meaningful under `repro replay` / `repro sweep`".into());
     }
     match cmd {
         Some("exp") => cmd_exp(&pos, &opts, seed, jobs, None),
@@ -122,6 +128,7 @@ fn run(args: &[String]) -> Result<(), String> {
         Some("run") => cmd_run(&pos, &opts, seed, jobs, None),
         Some("validate") => cmd_validate(&opts, seed),
         Some("schedule") => cmd_schedule(&opts, seed, jobs, None),
+        Some("sweep") => cmd_sweep(&opts, seed, jobs, None),
         Some("record") => cmd_traced(TraceMode::Record, &pos, &opts, seed, jobs),
         Some("replay") => {
             let mode = if opts.contains_key("live") {
@@ -141,11 +148,11 @@ fn run(args: &[String]) -> Result<(), String> {
     }
 }
 
-/// `repro record <exp|run|schedule> … --trace PATH` /
-/// `repro replay <exp|run|schedule> … --trace PATH [--live]` (ADR-004):
-/// run the wrapped subcommand with a recording or trace-serving oracle
-/// installed, then report the trace outcome — strict-replay misses and
-/// recording I/O failures exit nonzero.
+/// `repro record <exp|run|schedule|sweep> … --trace PATH` /
+/// `repro replay <exp|run|schedule|sweep> … --trace PATH [--live]`
+/// (ADR-004): run the wrapped subcommand with a recording or
+/// trace-serving oracle installed, then report the trace outcome —
+/// strict-replay misses and recording I/O failures exit nonzero.
 fn cmd_traced(
     mode: TraceMode,
     pos: &[String],
@@ -153,7 +160,7 @@ fn cmd_traced(
     seed: u64,
     jobs: usize,
 ) -> Result<(), String> {
-    const USAGE: &str = "usage: repro record|replay <exp|run|schedule> [...] --trace PATH";
+    const USAGE: &str = "usage: repro record|replay <exp|run|schedule|sweep> [...] --trace PATH";
     let path = opts.get("trace").ok_or(format!("--trace PATH required ({USAGE})"))?;
     // `--trace` with no following value parses as the sentinel "true" —
     // reject it rather than silently recording into a file named `true`
@@ -165,9 +172,9 @@ fn cmd_traced(
     // creates its file lazily, on the first recorded measurement)
     let inner = &pos[1..];
     let sub = match inner.first().map(String::as_str) {
-        Some(s @ ("exp" | "run" | "schedule")) => s,
+        Some(s @ ("exp" | "run" | "schedule" | "sweep")) => s,
         Some(other) => {
-            return Err(format!("record/replay cannot wrap `{other}` (exp|run|schedule)"))
+            return Err(format!("record/replay cannot wrap `{other}` (exp|run|schedule|sweep)"))
         }
         None => return Err(USAGE.into()),
     };
@@ -175,6 +182,9 @@ fn cmd_traced(
     match sub {
         "exp" => cmd_exp(inner, opts, seed, jobs, Some(oracle))?,
         "run" => cmd_run(inner, opts, seed, jobs, Some(oracle))?,
+        // sweep gets the monitor too: it must refuse to persist its --out
+        // grid when the trace had misses or I/O errors
+        "sweep" => cmd_sweep(opts, seed, jobs, Some((oracle, monitor.clone())))?,
         _ => cmd_schedule(opts, seed, jobs, Some(oracle))?,
     }
     println!("{}", monitor.summary());
@@ -193,8 +203,10 @@ repro — µCUTLASS + SOL-guidance reproduction (see README.md)
             [--problems L1-1,L2-76] [--seed N] [--jobs N]
   repro validate [--artifacts artifacts] [--problem NAME] [--seed N]
   repro schedule --tier <mini|mid|max> [--eps 100] [--window 8] [--seed N] [--jobs N]
-  repro record <exp|run|schedule> [...] --trace PATH
-  repro replay <exp|run|schedule> [...] --trace PATH [--live]
+  repro sweep [--tier <mini|mid|max>] [--trace PATH [--live]] [--seed N]
+            [--jobs N] [--out FILE]
+  repro record <exp|run|schedule|sweep> [...] --trace PATH
+  repro replay <exp|run|schedule|sweep> [...] --trace PATH [--live]
   repro shard --index I --of N --tier <mini|mid|max> [--dsl] [--sol <orch|prompt>]
             [--seed N] [--out FILE]
   repro merge <shard.json>... [--out FILE]
@@ -211,7 +223,14 @@ repro — µCUTLASS + SOL-guidance reproduction (see README.md)
   mini --trace t.jsonl`, then `repro replay run --tier mini --trace
   t.jsonl` reproduces the run field-for-field without touching the
   analytic backend (strict; a trace miss fails the command). --live falls
-  through to the live backend on misses and extends the trace.";
+  through to the live backend on misses and extends the trace.
+  sweep replays the full 72-policy fig8/fig9 scheduler grid from ONE
+  exhausted session pass per variant (ADR-005): sessions are driven once
+  to budget exhaustion, every (eps, w) stopping rule is applied offline,
+  and each policy's reported outcome is field-for-field identical to a
+  per-policy `repro schedule` run. With --trace PATH the pass is served
+  from a recorded trace (zero live evaluations; record one with `repro
+  record sweep --trace PATH`); --out FILE writes machine-readable JSON.";
 
 fn cmd_exp(
     pos: &[String],
@@ -528,11 +547,16 @@ fn cmd_schedule(
         window: opt_parse(opts, "window", 0)?,
     };
 
-    // Online: the policy runs *during* execution (realized savings) …
-    let online = scheduler::run_online(&env, &spec, seed, &policy, jobs);
-    // … measured against a full fixed-budget run of the same (variant, seed).
-    let fixed = scheduler::run_online(&env, &spec, seed, &Policy::fixed(), jobs);
-    // The online engine runs orchestrated sessions with per-problem memory
+    // Single-pass sweep engine (ADR-005): sessions are driven ONCE to
+    // exhaustion; the policy's realized outcome (stop indices, tokens,
+    // truncated log) is derived offline through the shared StopRule —
+    // provably equal to running the policy online (scheduler determinism
+    // tests + the sweep golden test), at one session pass instead of two
+    // (and one instead of 72 when sweeping the grid).
+    let run = scheduler::sweep_sessions(&env, &spec, seed, jobs, &pipeline, seed);
+    let online = run.outcome(&policy);
+    let fixed = run.outcome(&Policy::fixed());
+    // The engine runs orchestrated sessions with per-problem memory
     // (round-robin has no defined cross-problem order, ADR-002), so these
     // numbers are not comparable to `repro exp` figures, which thread
     // MANTIS memory across problems sequentially.
@@ -550,30 +574,149 @@ fn cmd_schedule(
         "tokens:  {} vs fixed {}  -> {:.0}% saved",
         online.tokens_used,
         fixed.tokens_used,
-        online.token_savings_vs(&fixed.log) * 100.0
+        online.token_savings() * 100.0
     );
     println!(
         "geomean: online {:.2}x vs fixed {:.2}x ({:.0}% retention)",
         geo(&online.log),
-        geo(&fixed.log),
-        metrics::retention(geo(&online.log), geo(&fixed.log)) * 100.0
+        geo(&run.log),
+        metrics::retention(geo(&online.log), geo(&run.log)) * 100.0
     );
-
-    // Offline replay over the full log must predict the online stops exactly.
-    let predicted: Vec<usize> = fixed
-        .log
-        .runs
-        .iter()
-        .map(|r| {
-            let times: Vec<Option<f64>> =
-                r.attempts.iter().map(|a| a.outcome.time_ms()).collect();
-            scheduler::stop_index(r.t_ref_ms, r.t_sol_fp16_ms, &times, &policy)
-        })
-        .collect();
     println!(
-        "offline replay agrees with online stop indices: {}",
-        if predicted == online.attempts_used { "yes" } else { "NO (bug)" }
+        "single pass: outcomes derived offline from one exhausted session run \
+         (online agreement is test-pinned; `repro sweep` grids 72 policies at the \
+         same cost)"
     );
+    Ok(())
+}
+
+/// `repro sweep` (ADR-005): replay the full 72-policy fig8/fig9 grid for
+/// every Pareto-study variant from ONE exhausted session pass per variant.
+/// With `--trace PATH` the pass is served strictly from a recorded trace
+/// (`--live` falls through and extends); `--out FILE` writes the grid as
+/// machine-readable JSON.
+fn cmd_sweep(
+    opts: &HashMap<String, String>,
+    seed: u64,
+    jobs: usize,
+    oracle: Option<(Box<DynEvaluator>, TraceMonitor)>,
+) -> Result<(), String> {
+    let mut bench = Bench::new();
+    // `repro sweep --trace PATH` is sugar for `repro replay sweep`; when
+    // invoked through record/replay the wrapper hands its monitor in (and
+    // prints the summary itself afterwards).
+    let (monitor, wrapped) = match (oracle, opts.get("trace")) {
+        (Some((o, m)), _) => {
+            bench.set_oracle(o);
+            (Some(m), true)
+        }
+        (None, Some(path)) => {
+            if path == "true" {
+                return Err("--trace needs a file path (repro sweep --trace PATH)".into());
+            }
+            let mode = if opts.contains_key("live") {
+                TraceMode::ReplayExtend
+            } else {
+                TraceMode::ReplayStrict
+            };
+            let (o, m) = trace_session(mode, path)?;
+            bench.set_oracle(o);
+            (Some(m), false)
+        }
+        (None, None) => {
+            if opts.contains_key("live") {
+                return Err("--live needs --trace PATH (repro sweep --trace PATH --live)".into());
+            }
+            (None, false)
+        }
+    };
+    let variants: Vec<VariantSpec> = match opts.get("tier") {
+        Some(t) => {
+            let tier = tier_of(t)?;
+            figures::pareto_variants().into_iter().filter(|s| s.tier == tier).collect()
+        }
+        None => figures::pareto_variants(),
+    };
+    let pipeline = IntegrityPipeline::default();
+    let mut out_json = ucutlass_repro::util::json::Json::Arr(Vec::new());
+    for spec in &variants {
+        let env = bench.env();
+        let run = scheduler::sweep_sessions(&env, spec, seed, jobs, &pipeline, seed);
+        println!(
+            "== sweep: {} == (1 exhausted session pass, {} policies offline)",
+            spec.label(),
+            run.sweep.results.len()
+        );
+        println!(
+            "fixed: geomean {:.2}x, {} tokens",
+            run.sweep.fixed.geomean_fixed, run.sweep.fixed.tokens_fixed
+        );
+        let mut rows = Vec::new();
+        for r in &run.sweep.results {
+            rows.push(vec![
+                r.policy.label(),
+                format!("{}", r.attempts_used.iter().sum::<usize>()),
+                format!("{:.0}%", r.token_savings() * 100.0),
+                format!("{:.2}x", r.geomean),
+                format!("{:.0}%", r.geomean_retention() * 100.0),
+            ]);
+        }
+        println!(
+            "{}",
+            table(&["policy", "attempts", "token savings", "geomean", "geo retention"], &rows)
+        );
+        match run.sweep.best(0.95) {
+            Some(best) => println!(
+                "best (≥95% retention): {} -> {:.0}% token savings, {:.2}x efficiency gain",
+                best.policy.label(),
+                best.token_savings() * 100.0,
+                best.efficiency_gain()
+            ),
+            None => println!("best (≥95% retention): none met the constraint"),
+        }
+        if let ucutlass_repro::util::json::Json::Arr(items) = &mut out_json {
+            let mut v = ucutlass_repro::util::json::Json::obj();
+            let mut fixed = ucutlass_repro::util::json::Json::obj();
+            fixed
+                .set("geomean", run.sweep.fixed.geomean_fixed)
+                .set("tokens", run.sweep.fixed.tokens_fixed);
+            let policies: Vec<ucutlass_repro::util::json::Json> = run
+                .sweep
+                .results
+                .iter()
+                .map(|r| {
+                    let mut p = ucutlass_repro::util::json::Json::obj();
+                    p.set("eps", r.policy.epsilon)
+                        .set("window", r.policy.window as u64)
+                        .set("attempts", r.attempts_used.iter().sum::<usize>())
+                        .set("tokens", r.tokens_used)
+                        .set("geomean", r.geomean)
+                        .set("token_savings", r.token_savings())
+                        .set("geo_retention", r.geomean_retention());
+                    p
+                })
+                .collect();
+            v.set("variant", spec.label())
+                .set("seed", format!("{seed:x}"))
+                .set("fixed", fixed)
+                .set("policies", ucutlass_repro::util::json::Json::Arr(policies));
+            items.push(v);
+        }
+    }
+    // Trace problems must fail BEFORE the machine-readable grid is
+    // persisted: a strict miss answers in-band with 0.0 values, so a
+    // miss-poisoned sweep.json must never reach disk for a consumer to
+    // read.
+    if let Some(m) = &monitor {
+        if !wrapped {
+            println!("{}", m.summary());
+        }
+        m.check()?;
+    }
+    if let Some(out) = opts.get("out") {
+        std::fs::write(out, out_json.to_string()).map_err(|e| e.to_string())?;
+        println!("(sweep grid written to {out})");
+    }
     Ok(())
 }
 

@@ -225,10 +225,10 @@ impl<'a> MantisSession<'a> {
             seed,
             &[stream::MEASURE, stream::MANTIS, spec.stream_id(), pidx as u64],
         ));
+        // scalar fast path (ADR-005): no response struct, no key strings
         let t_ref_ms = env
             .evaluator()
-            .eval(&EvalRequest::measured_baseline(pidx, measure.next_stream()))
-            .value;
+            .value(&EvalRequest::measured_baseline(pidx, measure.next_stream()));
         let state = AgentState {
             best_time_ms: f64::INFINITY,
             t_ref_ms,

@@ -14,12 +14,16 @@
 //!   attempts while ahead of PyTorch.
 
 pub mod online;
+pub mod sweep;
 
 use crate::agent::RunLog;
 use crate::integrity::IntegrityPipeline;
 use crate::metrics;
 
 pub use online::{run_online, OnlineRun};
+pub use sweep::{
+    policy_grid, sweep_sessions, truncate_log, PolicySweep, ScheduleOutcome, SweepRun,
+};
 
 /// A scheduling policy: ε (fraction, e.g. 0.25 = 25%) and window w.
 /// `epsilon = f64::INFINITY` disables the SOL rule; `window = 0` disables
@@ -267,19 +271,15 @@ pub fn window_grid() -> Vec<u32> {
 }
 
 /// Joint sweep of all (ε, w) combinations (one shared [`ReplayCache`]).
+/// Thin wrapper over [`PolicySweep`] — callers that also need the fixed
+/// reference or off-grid replays should hold the `PolicySweep` instead of
+/// rebuilding the cache.
 pub fn sweep(
     log: &RunLog,
     pipeline: &IntegrityPipeline,
     review_seed: u64,
 ) -> Vec<ReplayResult> {
-    let cache = ReplayCache::build(log, pipeline, review_seed);
-    let mut out = Vec::new();
-    for &e in &epsilon_grid() {
-        for &w in &window_grid() {
-            out.push(cache.replay(&Policy { epsilon: e, window: w }));
-        }
-    }
-    out
+    PolicySweep::over(log, pipeline, review_seed).results
 }
 
 /// Indices of the Pareto-optimal points (maximize geomean, minimize cost).

@@ -1,0 +1,275 @@
+//! Single-pass multi-policy sweep engine (ADR-005).
+//!
+//! The paper's efficiency headline (fig8/fig9) compares 72 budgeting
+//! policies — the full ε×w grid — per variant. Driving sessions once *per
+//! policy* pays for the grid 72 times; this module pays for it once:
+//!
+//! 1. drive each (variant, problem, seed) session **once to exhaustion**
+//!    (the fixed-budget pass, fanned across `exec::parallel_map` workers —
+//!    bit-identical at any job count, ADR-002) against whatever oracle the
+//!    `Env` carries (analytic, or a recorded trace, ADR-004);
+//! 2. build one [`ReplayCache`] over the exhausted log (each attempt is
+//!    reviewed exactly once);
+//! 3. apply every [`StopRule`](super::StopRule) policy of the grid
+//!    offline.
+//!
+//! This is sound because online stops provably agree with offline replay
+//! (the shared `StopRule`, pinned by the scheduler determinism tests) and
+//! an early-stopped session's log is the exact per-problem prefix of the
+//! exhausted log (ADR-002 session semantics). The golden test
+//! `sweep_equals_per_policy_replay` closes the loop end-to-end: every
+//! number `repro schedule` would have produced by re-driving sessions per
+//! policy falls out of the one exhausted pass, field for field, while a
+//! [`TraceMonitor`](crate::eval::TraceMonitor)-based test shows the sweep
+//! issues ≤ 1/72 of the per-policy evaluator calls.
+
+use crate::agent::controller::{Env, VariantSpec};
+use crate::agent::{ProblemRun, RunLog};
+use crate::integrity::IntegrityPipeline;
+
+use super::online::run_online;
+use super::{
+    best_policy, epsilon_grid, window_grid, Policy, ReplayCache, ReplayResult,
+};
+
+/// The full fig8/fig9 policy grid: every (ε, w) combination, ε outer and
+/// w inner — exactly the order the per-log `scheduler::sweep()` function
+/// has always produced, so grid index i is comparable across all sweep
+/// surfaces.
+pub fn policy_grid() -> Vec<Policy> {
+    let mut grid = Vec::new();
+    for &e in &epsilon_grid() {
+        for &w in &window_grid() {
+            grid.push(Policy { epsilon: e, window: w });
+        }
+    }
+    grid
+}
+
+/// One variant's offline policy sweep: a single [`ReplayCache`] build
+/// (one review pass over every attempt) shared by the fixed-allocation
+/// reference and all 72 grid policies. fig8, fig9, and the CLI sweep all
+/// consume this one structure instead of rebuilding caches per figure.
+pub struct PolicySweep {
+    /// The shared per-log precomputation — kept public so callers can
+    /// replay off-grid policies (e.g. `repro schedule --eps/--window`)
+    /// against the same single pass.
+    pub cache: ReplayCache,
+    /// Fixed-allocation (never-stop) reference replay.
+    pub fixed: ReplayResult,
+    /// One result per [`policy_grid`] entry, in grid order.
+    pub results: Vec<ReplayResult>,
+}
+
+impl PolicySweep {
+    pub fn over(log: &RunLog, pipeline: &IntegrityPipeline, review_seed: u64) -> PolicySweep {
+        let cache = ReplayCache::build(log, pipeline, review_seed);
+        let fixed = cache.replay(&Policy::fixed());
+        let results = policy_grid().iter().map(|p| cache.replay(p)).collect();
+        PolicySweep { cache, fixed, results }
+    }
+
+    /// Best grid policy by efficiency gain under a retention floor
+    /// (fig9's ≥95% constraint).
+    pub fn best(&self, min_retention: f64) -> Option<&ReplayResult> {
+        best_policy(&self.results, min_retention)
+    }
+}
+
+/// Per-problem prefix of `log` under the given stop indices: the log the
+/// online scheduler would have produced had the policy run live (the
+/// prefix property of ADR-002 sessions; the sweep golden test pins the
+/// equality against real online runs).
+pub fn truncate_log(log: &RunLog, attempts_used: &[usize]) -> RunLog {
+    assert_eq!(log.runs.len(), attempts_used.len(), "one stop index per problem");
+    RunLog {
+        variant: log.variant.clone(),
+        tier_name: log.tier_name.clone(),
+        price_per_mtok: log.price_per_mtok,
+        runs: log
+            .runs
+            .iter()
+            .zip(attempts_used)
+            .map(|(r, &n)| ProblemRun {
+                problem_idx: r.problem_idx,
+                t_ref_ms: r.t_ref_ms,
+                t_sol_ms: r.t_sol_ms,
+                t_sol_fp16_ms: r.t_sol_fp16_ms,
+                attempts: r.attempts[..n.min(r.attempts.len())].to_vec(),
+            })
+            .collect(),
+    }
+}
+
+/// One variant driven once to exhaustion plus its full offline grid —
+/// the unit `repro sweep` and `repro schedule` are built on.
+pub struct SweepRun {
+    pub spec: VariantSpec,
+    /// The exhausted (fixed-budget) session log: the only session pass
+    /// this sweep ever executes.
+    pub log: RunLog,
+    pub sweep: PolicySweep,
+}
+
+impl SweepRun {
+    /// Derive the outcome of one (possibly off-grid) policy offline from
+    /// the exhausted pass: attempts, tokens, and the truncated log equal
+    /// to what a live online run of that policy would have produced.
+    pub fn outcome(&self, policy: &Policy) -> ScheduleOutcome {
+        let replay = self.sweep.cache.replay(policy);
+        let log = truncate_log(&self.log, &replay.attempts_used);
+        ScheduleOutcome {
+            policy: *policy,
+            tokens_used: replay.tokens_used,
+            tokens_fixed: replay.tokens_fixed,
+            attempts_used: replay.attempts_used,
+            attempts_budget: self.spec.total_budget() as usize,
+            log,
+        }
+    }
+}
+
+/// Drive every (problem) session of one variant once to exhaustion
+/// (fanned across the `exec` pool at `jobs > 1`; bit-identical at any job
+/// count) and apply the full policy grid offline. Orchestrated variants
+/// run as per-problem sessions (per-session memory), exactly like the
+/// online scheduler they stand in for (ADR-002 boundary).
+pub fn sweep_sessions(
+    env: &Env,
+    spec: &VariantSpec,
+    seed: u64,
+    jobs: usize,
+    pipeline: &IntegrityPipeline,
+    review_seed: u64,
+) -> SweepRun {
+    // Policy::fixed() never stops: run_online's rotation degenerates into
+    // driving each session to exhaustion, parallelized via
+    // exec::parallel_map with bit-identical output (online tests pin it).
+    let full = run_online(env, spec, seed, &Policy::fixed(), jobs);
+    let sweep = PolicySweep::over(&full.log, pipeline, review_seed);
+    SweepRun { spec: *spec, log: full.log, sweep }
+}
+
+/// What one `repro schedule` invocation reports for one policy, derived
+/// offline from the single exhausted pass. Field-for-field equal to the
+/// realized online run of the same policy (golden-tested), at 1/Nth the
+/// evaluator cost of re-driving sessions per policy.
+pub struct ScheduleOutcome {
+    pub policy: Policy,
+    /// Attempts the policy lets each problem consume.
+    pub attempts_used: Vec<usize>,
+    /// Nominal per-problem budget had no rule fired.
+    pub attempts_budget: usize,
+    /// Tokens under the policy (== `log.total_tokens()`).
+    pub tokens_used: u64,
+    /// Tokens of the full fixed-allocation pass.
+    pub tokens_fixed: u64,
+    /// The truncated log: per problem, exactly the attempts the online
+    /// scheduler would have executed.
+    pub log: RunLog,
+}
+
+impl ScheduleOutcome {
+    pub fn attempts_total(&self) -> usize {
+        self.attempts_used.iter().sum()
+    }
+
+    /// Fraction of the fixed attempt budget the policy does not spend.
+    pub fn attempt_savings(&self) -> f64 {
+        let full = (self.attempts_budget * self.attempts_used.len()).max(1);
+        1.0 - self.attempts_total() as f64 / full as f64
+    }
+
+    /// Problems a stopping rule retires before budget exhaustion.
+    pub fn stopped_early(&self) -> usize {
+        self.attempts_used.iter().filter(|&&u| u < self.attempts_budget).count()
+    }
+
+    pub fn token_savings(&self) -> f64 {
+        1.0 - self.tokens_used as f64 / self.tokens_fixed.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::controller::ControllerKind;
+    use crate::agent::ModelTier;
+    use crate::experiments::runner::{run_variant, Bench};
+    use crate::scheduler;
+
+    #[test]
+    fn policy_grid_is_the_72_point_fig8_grid_in_sweep_order() {
+        let grid = policy_grid();
+        assert_eq!(grid.len(), 72, "12 ε × 6 w");
+        // same order the free sweep() function has always produced
+        let mut i = 0;
+        for &e in &epsilon_grid() {
+            for &w in &window_grid() {
+                assert_eq!(grid[i], Policy { epsilon: e, window: w });
+                i += 1;
+            }
+        }
+    }
+
+    #[test]
+    fn policy_sweep_matches_per_policy_replay_per_log() {
+        // one cache build must be observationally identical to 72 + 1
+        // independent replays (the pre-existing contract of ReplayCache,
+        // restated at the PolicySweep level)
+        let bench = Bench::new();
+        let spec = VariantSpec::new(ControllerKind::InPromptSol, true, ModelTier::Mini);
+        let log = run_variant(&bench, &spec, 9, None);
+        let pipeline = IntegrityPipeline::default();
+        let ps = PolicySweep::over(&log, &pipeline, 9);
+        assert_eq!(ps.results.len(), 72);
+        for (p, r) in policy_grid().iter().zip(&ps.results) {
+            let direct = scheduler::replay(&log, p, &pipeline, 9);
+            assert_eq!(r.attempts_used, direct.attempts_used, "{}", p.label());
+            assert_eq!(r.tokens_used, direct.tokens_used);
+            assert_eq!(r.geomean, direct.geomean);
+            assert_eq!(r.median, direct.median);
+        }
+        let fixed = scheduler::replay(&log, &Policy::fixed(), &pipeline, 9);
+        assert_eq!(ps.fixed.attempts_used, fixed.attempts_used);
+        assert_eq!(ps.fixed.tokens_used, fixed.tokens_used);
+    }
+
+    #[test]
+    fn truncate_log_takes_exact_prefixes_and_clamps() {
+        let bench = Bench::new();
+        let spec = VariantSpec::new(ControllerKind::Mi, true, ModelTier::Mini);
+        let log = run_variant(&bench, &spec, 3, None);
+        let mut stops: Vec<usize> = log.runs.iter().map(|r| r.attempts.len()).collect();
+        stops[0] = 1;
+        stops[1] = 0;
+        stops[2] = usize::MAX; // clamped to the full run
+        let t = truncate_log(&log, &stops);
+        assert_eq!(t.runs[0].attempts[..], log.runs[0].attempts[..1]);
+        assert!(t.runs[1].attempts.is_empty());
+        assert_eq!(t.runs[2], log.runs[2]);
+        assert_eq!(t.runs[3..], log.runs[3..]);
+        assert_eq!(t.variant, log.variant);
+        // metadata (baselines, SOL bounds) survives truncation untouched
+        assert_eq!(t.runs[1].t_ref_ms, log.runs[1].t_ref_ms);
+        assert_eq!(t.runs[1].t_sol_fp16_ms, log.runs[1].t_sol_fp16_ms);
+    }
+
+    #[test]
+    fn schedule_outcome_accounting() {
+        let bench = Bench::new();
+        let env = bench.env();
+        let spec = VariantSpec::new(ControllerKind::InPromptSol, true, ModelTier::Mini);
+        let pipeline = IntegrityPipeline::default();
+        let run = sweep_sessions(&env, &spec, 5, 1, &pipeline, 5);
+        let out = run.outcome(&Policy { epsilon: 1.0, window: 8 });
+        assert_eq!(out.attempts_total(), out.attempts_used.iter().sum::<usize>());
+        assert_eq!(out.tokens_used, out.log.total_tokens());
+        assert_eq!(out.tokens_fixed, run.log.total_tokens());
+        assert_eq!(out.attempts_budget, spec.total_budget() as usize);
+        let fixed_out = run.outcome(&Policy::fixed());
+        assert_eq!(fixed_out.stopped_early(), 0);
+        assert_eq!(fixed_out.log, run.log, "fixed outcome is the exhausted pass itself");
+        assert!(fixed_out.attempt_savings().abs() < 1e-12);
+    }
+}
