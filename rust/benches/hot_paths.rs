@@ -16,7 +16,7 @@ use ucutlass_repro::exec;
 use ucutlass_repro::experiments::runner::{main_variants, Bench as SuiteBench};
 use ucutlass_repro::integrity::IntegrityPipeline;
 use ucutlass_repro::kernelbench::suite;
-use ucutlass_repro::perfmodel::{CandidateConfig, PerfModel};
+use ucutlass_repro::perfmodel::{CandidateConfig, CompiledCostModel, ConfigBatch, PerfModel};
 use ucutlass_repro::scheduler::{self, Policy};
 use ucutlass_repro::sol::{analyze, H100_SXM};
 use ucutlass_repro::util::rng::Pcg32;
@@ -52,6 +52,7 @@ fn main() {
     let problems = suite();
     let model = PerfModel::new(H100_SXM.clone());
     let sols: Vec<_> = problems.iter().map(|p| analyze(p, &H100_SXM)).collect();
+    let compiled = CompiledCostModel::compile(&model, &problems);
 
     bench("dsl::compile (cold: parse→lower→validate→plan→codegen)", 2_000, 9, || {
         black_box(dsl::compile(black_box(GEMM_SRC)).unwrap());
@@ -139,9 +140,62 @@ fn main() {
             scalar_ns / batch_ns.max(1.0),
             cfgs.len()
         );
+
+        // ---- compiled cost model (ADR-006): the pre-lowered evaluator
+        // over a reusable struct-of-arrays batch must beat both the scalar
+        // loop and the per-call-lowering `candidate_ms_batch` ------------
+        use ucutlass_repro::util::json::Json;
+        let costs = compiled.problem(0);
+        let mut cb = ConfigBatch::with_capacity(cfgs.len());
+        let mut out = vec![0.0f64; cfgs.len()];
+        let t2 = Instant::now();
+        for _ in 0..iters {
+            cb.clear();
+            cb.reserve(cfgs.len());
+            for c in &cfgs {
+                cb.push(black_box(c));
+            }
+            costs.eval_into(&cb, &mut out);
+            black_box(&out);
+        }
+        let compiled_ns = t2.elapsed().as_nanos() as f64 / iters as f64;
+        println!(
+            "{:40} {:>12.0} ns scalar  {:>7.0} ns compiled -> {:.1}x (batch of {})",
+            "candidate_ms: compiled vs scalar x20",
+            scalar_ns,
+            compiled_ns,
+            scalar_ns / compiled_ns.max(1.0),
+            cfgs.len()
+        );
+
+        // bitwise contract spot-check before publishing numbers
+        let batch_vals = model.candidate_ms_batch(&problems[0], &cfgs);
+        for (i, c) in cfgs.iter().enumerate() {
+            let scalar = model.candidate_ms(&problems[0], c);
+            assert_eq!(scalar.to_bits(), batch_vals[i].to_bits());
+            assert_eq!(scalar.to_bits(), out[i].to_bits());
+        }
+
+        // machine-readable perf trajectory (BENCH_costmodel.json next to
+        // Cargo.toml; re-run `cargo bench` to refresh)
+        let calls = (iters * cfgs.len()) as u64;
+        let mut j = Json::obj();
+        j.set("bench", "compiled_cost_model")
+            .set("configs", cfgs.len() as u64)
+            .set("iters", iters as u64)
+            .set("evaluator_calls_per_path", calls)
+            .set("scalar_ms", scalar_ns * iters as f64 / 1e6)
+            .set("batch_ms", batch_ns * iters as f64 / 1e6)
+            .set("compiled_ms", compiled_ns * iters as f64 / 1e6)
+            .set("compiled_vs_scalar", scalar_ns / compiled_ns.max(1.0))
+            .set("compiled_vs_batch", batch_ns / compiled_ns.max(1.0));
+        match std::fs::write("BENCH_costmodel.json", j.to_string()) {
+            Ok(()) => println!("(wrote BENCH_costmodel.json)"),
+            Err(e) => println!("(could not write BENCH_costmodel.json: {e})"),
+        }
     }
 
-    let ev = Oracle::analytic(AnalyticEvaluator::new(&model, &problems, &sols));
+    let ev = Oracle::analytic(AnalyticEvaluator::new(&model, &problems, &sols, &compiled));
     let mut rng = Pcg32::new(1, 1);
     bench("policy::select_move (steered, batched)", 10_000, 9, || {
         black_box(select_move(
@@ -186,7 +240,7 @@ fn main() {
         });
     }
 
-    let env = Env::new(&model, &problems, &sols);
+    let env = Env::new(&model, &problems, &sols, &compiled);
     let spec = VariantSpec::new(ControllerKind::InPromptSol, true, ModelTier::Mid);
     bench("agent::run_problem (40 attempts)", 50, 7, || {
         black_box(run_problem(&env, &spec, 0, 7));

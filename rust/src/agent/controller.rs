@@ -12,7 +12,7 @@
 use crate::dsl;
 use crate::eval::{AnalyticEvaluator, DynEvaluator, EvalRequest, Oracle};
 use crate::kernelbench::Problem;
-use crate::perfmodel::{CandidateConfig, PerfModel};
+use crate::perfmodel::{CandidateConfig, CompiledCostModel, PerfModel};
 use crate::sol::SolAnalysis;
 use crate::util::json::Json;
 use crate::util::rng::{MeasureSeq, Pcg32};
@@ -185,6 +185,9 @@ pub struct Env<'a> {
     pub problems: &'a [Problem],
     /// Per-problem SOL analyses (same order as `problems`).
     pub sols: &'a [SolAnalysis],
+    /// Per-problem compiled cost models (same order as `problems`),
+    /// lowered once by whoever owns the model/suite pair (ADR-006).
+    pub compiled: &'a CompiledCostModel,
     /// Measurement-oracle override (record/replay, ADR-004): when set,
     /// every evaluation the agent loop makes routes through this backend
     /// instead of the analytic fast path. `Bench::env` threads it in from
@@ -197,8 +200,9 @@ impl<'a> Env<'a> {
         model: &'a PerfModel,
         problems: &'a [Problem],
         sols: &'a [SolAnalysis],
+        compiled: &'a CompiledCostModel,
     ) -> Env<'a> {
-        Env { model, problems, sols, oracle: None }
+        Env { model, problems, sols, compiled, oracle: None }
     }
 
     /// Install (or clear) the measurement-oracle override.
@@ -214,7 +218,7 @@ impl<'a> Env<'a> {
     /// directly.
     pub fn evaluator(&self) -> Oracle<'a> {
         Oracle::with_backend(
-            AnalyticEvaluator::new(self.model, self.problems, self.sols),
+            AnalyticEvaluator::new(self.model, self.problems, self.sols, self.compiled),
             self.oracle,
         )
     }
@@ -679,11 +683,12 @@ mod tests {
     use crate::perfmodel::PerfModel;
     use crate::sol::{analyze, H100_SXM};
 
-    fn env_fixture() -> (PerfModel, Vec<Problem>, Vec<SolAnalysis>) {
+    fn env_fixture() -> (PerfModel, Vec<Problem>, Vec<SolAnalysis>, CompiledCostModel) {
         let model = PerfModel::new(H100_SXM.clone());
         let problems = suite();
         let sols: Vec<SolAnalysis> = problems.iter().map(|p| analyze(p, &H100_SXM)).collect();
-        (model, problems, sols)
+        let compiled = CompiledCostModel::compile(&model, &problems);
+        (model, problems, sols, compiled)
     }
 
     #[test]
@@ -705,8 +710,8 @@ mod tests {
 
     #[test]
     fn run_problem_respects_budget() {
-        let (model, problems, sols) = env_fixture();
-        let env = Env::new(&model, &problems, &sols);
+        let (model, problems, sols, compiled) = env_fixture();
+        let env = Env::new(&model, &problems, &sols, &compiled);
         let spec = VariantSpec::new(ControllerKind::Mi, false, ModelTier::Mini);
         let run = run_problem(&env, &spec, 0, 42);
         assert_eq!(run.attempts.len(), 40);
@@ -715,8 +720,8 @@ mod tests {
 
     #[test]
     fn deterministic_given_seed() {
-        let (model, problems, sols) = env_fixture();
-        let env = Env::new(&model, &problems, &sols);
+        let (model, problems, sols, compiled) = env_fixture();
+        let env = Env::new(&model, &problems, &sols, &compiled);
         let spec = VariantSpec::new(ControllerKind::Mi, true, ModelTier::Mid);
         let a = run_problem(&env, &spec, 3, 7);
         let b = run_problem(&env, &spec, 3, 7);
@@ -726,8 +731,8 @@ mod tests {
 
     #[test]
     fn dsl_variant_produces_dsl_kernels_on_gemm() {
-        let (model, problems, sols) = env_fixture();
-        let env = Env::new(&model, &problems, &sols);
+        let (model, problems, sols, compiled) = env_fixture();
+        let env = Env::new(&model, &problems, &sols, &compiled);
         let spec = VariantSpec::new(ControllerKind::Mi, true, ModelTier::Mid);
         let run = run_problem(&env, &spec, 0, 11); // L1-1 gemm
         assert!(run
@@ -744,8 +749,8 @@ mod tests {
 
     #[test]
     fn dsl_attempts_carry_plans_consistent_with_configs() {
-        let (model, problems, sols) = env_fixture();
-        let env = Env::new(&model, &problems, &sols);
+        let (model, problems, sols, compiled) = env_fixture();
+        let env = Env::new(&model, &problems, &sols, &compiled);
         let spec = VariantSpec::new(ControllerKind::Mi, true, ModelTier::Mid);
         let run = run_problem(&env, &spec, 0, 11); // L1-1 gemm
         let mut with_plan = 0;
@@ -767,8 +772,8 @@ mod tests {
 
     #[test]
     fn mini_dsl_beats_mini_raw_on_gemm() {
-        let (model, problems, sols) = env_fixture();
-        let env = Env::new(&model, &problems, &sols);
+        let (model, problems, sols, compiled) = env_fixture();
+        let env = Env::new(&model, &problems, &sols, &compiled);
         let mut wins = 0;
         for seed in 0..10u64 {
             let raw = run_problem(
@@ -794,8 +799,8 @@ mod tests {
 
     #[test]
     fn online_integrity_breaks_gaming_chains() {
-        let (model, problems, sols) = env_fixture();
-        let env = Env::new(&model, &problems, &sols);
+        let (model, problems, sols, compiled) = env_fixture();
+        let env = Env::new(&model, &problems, &sols, &compiled);
         let base = VariantSpec::new(ControllerKind::Mi, true, ModelTier::Max);
         let online = base.with_online_integrity();
         let gaming = |spec: VariantSpec| -> (usize, usize) {
@@ -824,8 +829,8 @@ mod tests {
 
     #[test]
     fn steering_reduces_gaming() {
-        let (model, problems, sols) = env_fixture();
-        let env = Env::new(&model, &problems, &sols);
+        let (model, problems, sols, compiled) = env_fixture();
+        let env = Env::new(&model, &problems, &sols, &compiled);
         let count_gaming = |spec: VariantSpec| -> usize {
             (0..12u64)
                 .flat_map(|seed| run_problem(&env, &spec, 0, seed).attempts)

@@ -7,14 +7,25 @@
 //! shrinks the noise on the agent's own impact estimates and filters moves
 //! to the ones targeting the analyzed bottleneck (paper §4.2).
 
+use std::cell::RefCell;
+
 use crate::dsl;
 use crate::eval::{EvalRequest, Evaluator, Oracle};
 use crate::kernelbench::{Op, Problem};
-use crate::perfmodel::{CandidateConfig, SchedulerKind};
+use crate::perfmodel::{CandidateConfig, ConfigBatch, SchedulerKind};
 use crate::sol::{Bottleneck, SolAnalysis};
 use crate::util::rng::Pcg32;
 
 use super::tiers::TierParams;
+
+thread_local! {
+    /// Reusable scratch for the direct (no-override) estimation path of
+    /// [`select_move`]: the move pool is lowered straight into a
+    /// struct-of-arrays batch, so a selection round performs no
+    /// per-candidate allocation once the columns are warm (ADR-006).
+    static SCRATCH: RefCell<(ConfigBatch, Vec<f64>)> =
+        RefCell::new((ConfigBatch::new(), Vec::new()));
+}
 
 /// The tile menu agents choose from (MXU/WGMMA-shaped).
 pub const TILES: &[(u64, u64, u64)] = &[
@@ -131,9 +142,12 @@ pub fn targets_bottleneck(mv: OptMove, b: Bottleneck) -> bool {
 /// Select a move. `steering` carries the SOL analysis when the controller
 /// is SOL-guided; it (a) filters moves to the bottleneck and (b) shrinks
 /// estimate noise, modelling the structured Analyze→Nominate phases.
-/// Candidate estimation goes through the evaluator's batched path: one
-/// `eval_batch` covers the current config plus every move in the pool
-/// (ADR-003), hoisting the per-problem model terms out of the loop.
+/// Candidate estimation is batched: with no backend override the pool is
+/// lowered into a reusable [`ConfigBatch`] and priced by the problem's
+/// pre-compiled evaluator (ADR-006); with an override (record/replay) one
+/// `eval_batch` of requests covers the current config plus every move in
+/// the pool so the backend observes each of them (ADR-004). The two paths
+/// produce bitwise-identical estimates.
 pub fn select_move(
     ev: &Oracle,
     pidx: usize,
@@ -165,25 +179,53 @@ pub fn select_move(
         let est = 1.0;
         return Some((mv, est));
     }
-    let reqs: Vec<EvalRequest> = std::iter::once(cfg.clone())
-        .chain(pool.iter().map(|&mv| apply_move(cfg, mv, quality_gain)))
-        .map(|c| EvalRequest::candidate(pidx, c))
-        .collect();
-    let est_ms = ev.eval_batch(&reqs);
-    let t_now = est_ms[0].value;
-    let mut best: Option<(OptMove, f64, f64)> = None; // (move, noisy estimate, bias)
-    for (&mv, t_new) in pool.iter().zip(&est_ms[1..]) {
-        let true_speedup = t_now / t_new.value;
-        let bias = match mv {
-            OptMove::UseFp16 | OptMove::UseBf16 => tier.fp16_move_bias,
-            _ => 1.0,
-        };
-        let noisy = true_speedup * rng.lognormal_noise(sigma) * bias;
-        if best.as_ref().map(|(_, b, _)| noisy > *b).unwrap_or(true) {
-            best = Some((mv, noisy, bias));
+    // est[0] is the current config, est[1..] the pool in order; the RNG
+    // draw sequence is the same on both estimation paths below.
+    let pick = |est: &[f64], rng: &mut Pcg32| {
+        let t_now = est[0];
+        let mut best: Option<(OptMove, f64)> = None; // (move, noisy estimate)
+        for (&mv, &t_new) in pool.iter().zip(&est[1..]) {
+            let true_speedup = t_now / t_new;
+            let bias = match mv {
+                OptMove::UseFp16 | OptMove::UseBf16 => tier.fp16_move_bias,
+                _ => 1.0,
+            };
+            let noisy = true_speedup * rng.lognormal_noise(sigma) * bias;
+            if best.as_ref().map(|(_, b)| noisy > *b).unwrap_or(true) {
+                best = Some((mv, noisy));
+            }
+        }
+        best
+    };
+    match ev.direct() {
+        // No backend override: lower the pool into the reusable
+        // struct-of-arrays scratch and price it with the problem's
+        // compiled evaluator — no `EvalRequest`s, no allocation (ADR-006).
+        Some(analytic) => SCRATCH.with(|s| {
+            let (batch, out) = &mut *s.borrow_mut();
+            batch.clear();
+            batch.reserve(pool.len() + 1);
+            batch.push(cfg);
+            for &mv in &pool {
+                batch.push(&apply_move(cfg, mv, quality_gain));
+            }
+            out.clear();
+            analytic.candidate_batch_into(pidx, batch, out);
+            pick(out, rng)
+        }),
+        // Override installed (record/replay, ADR-004): the backend must
+        // observe every request, so build the batched request path. The
+        // values are bitwise equal to the direct path, so the RNG draws
+        // and everything downstream are identical.
+        None => {
+            let reqs: Vec<EvalRequest> = std::iter::once(cfg.clone())
+                .chain(pool.iter().map(|&mv| apply_move(cfg, mv, quality_gain)))
+                .map(|c| EvalRequest::candidate(pidx, c))
+                .collect();
+            let est: Vec<f64> = ev.eval_batch(&reqs).iter().map(|r| r.value).collect();
+            pick(&est, rng)
         }
     }
-    best.map(|(mv, est, _)| (mv, est))
 }
 
 // ---------------------------------------------------------------------------
@@ -404,7 +446,10 @@ mod tests {
         let pidx = find(&s, "L1-1").unwrap(); // compute-bound GEMM
         let sols: Vec<SolAnalysis> = s.iter().map(|p| analyze(p, &H100_SXM)).collect();
         let model = crate::perfmodel::PerfModel::new(H100_SXM.clone());
-        let ev = crate::eval::Oracle::analytic(crate::eval::AnalyticEvaluator::new(&model, &s, &sols));
+        let compiled = crate::perfmodel::CompiledCostModel::compile(&model, &s);
+        let ev = crate::eval::Oracle::analytic(crate::eval::AnalyticEvaluator::new(
+            &model, &s, &sols, &compiled,
+        ));
         let cfg = CandidateConfig::library((128, 128, 64), dsl::DType::Fp32);
         let mut hits = 0;
         let mut rng = Pcg32::new(11, 1);
@@ -426,7 +471,10 @@ mod tests {
         let pidx = find(&s, "L1-1").unwrap();
         let sols: Vec<SolAnalysis> = s.iter().map(|p| analyze(p, &H100_SXM)).collect();
         let model = crate::perfmodel::PerfModel::new(H100_SXM.clone());
-        let ev = crate::eval::Oracle::analytic(crate::eval::AnalyticEvaluator::new(&model, &s, &sols));
+        let compiled = crate::perfmodel::CompiledCostModel::compile(&model, &s);
+        let ev = crate::eval::Oracle::analytic(crate::eval::AnalyticEvaluator::new(
+            &model, &s, &sols, &compiled,
+        ));
         let cfg = CandidateConfig::library((128, 128, 64), dsl::DType::Fp32);
         let mut hits = 0;
         let mut rng = Pcg32::new(13, 1);
@@ -440,6 +488,42 @@ mod tests {
             }
         }
         assert!(hits < 45, "unsteered mini should miss the best move often, got {hits}/60");
+    }
+
+    #[test]
+    fn direct_and_overridden_estimation_paths_select_identically() {
+        // the direct compiled-scratch path and the EvalRequest path must
+        // produce the same estimates bit-for-bit, hence — from the same
+        // RNG state — the same selected move and noisy estimate
+        let s = suite();
+        let sols: Vec<SolAnalysis> = s.iter().map(|p| analyze(p, &H100_SXM)).collect();
+        let model = crate::perfmodel::PerfModel::new(H100_SXM.clone());
+        let compiled = crate::perfmodel::CompiledCostModel::compile(&model, &s);
+        let analytic = crate::eval::AnalyticEvaluator::new(&model, &s, &sols, &compiled);
+        let direct = crate::eval::Oracle::analytic(analytic);
+        let owned = crate::eval::OwnedAnalytic::new();
+        let via_backend = crate::eval::Oracle::with_backend(analytic, Some(&owned));
+        assert!(direct.direct().is_some());
+        assert!(via_backend.direct().is_none());
+        let mut cfg = CandidateConfig::library((128, 128, 64), dsl::DType::Fp32);
+        cfg.quality = 0.8;
+        for pidx in [find(&s, "L1-1").unwrap(), find(&s, "L1-23").unwrap()] {
+            for seed in 0..20u64 {
+                let tier = &crate::agent::tiers::MID;
+                let mut r1 = Pcg32::new(seed, 3);
+                let mut r2 = Pcg32::new(seed, 3);
+                let a = select_move(&direct, pidx, &cfg, tier, Some(&sols[pidx]), 0.1, &mut r1);
+                let b =
+                    select_move(&via_backend, pidx, &cfg, tier, Some(&sols[pidx]), 0.1, &mut r2);
+                match (a, b) {
+                    (Some((ma, ea)), Some((mb, eb))) => {
+                        assert_eq!(ma, mb, "seed {seed}");
+                        assert_eq!(ea.to_bits(), eb.to_bits(), "seed {seed}");
+                    }
+                    (a, b) => assert!(a.is_none() && b.is_none(), "seed {seed}"),
+                }
+            }
+        }
     }
 
     #[test]

@@ -222,24 +222,27 @@ mod tests {
     use crate::agent::controller::{run_problem, ControllerKind};
     use crate::agent::ModelTier;
     use crate::kernelbench::suite;
-    use crate::perfmodel::PerfModel;
+    use crate::perfmodel::{CompiledCostModel, PerfModel};
     use crate::sol::{analyze, H100_SXM};
 
     struct Fixture {
         model: PerfModel,
         problems: Vec<crate::kernelbench::Problem>,
         sols: Vec<crate::sol::SolAnalysis>,
+        compiled: CompiledCostModel,
     }
 
     impl Fixture {
         fn new() -> Self {
             let problems = suite();
             let sols = problems.iter().map(|p| analyze(p, &H100_SXM)).collect();
-            Fixture { model: PerfModel::new(H100_SXM.clone()), problems, sols }
+            let model = PerfModel::new(H100_SXM.clone());
+            let compiled = CompiledCostModel::compile(&model, &problems);
+            Fixture { model, problems, sols, compiled }
         }
 
         fn env(&self) -> Env<'_> {
-            Env::new(&self.model, &self.problems, &self.sols)
+            Env::new(&self.model, &self.problems, &self.sols, &self.compiled)
         }
     }
 

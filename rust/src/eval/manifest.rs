@@ -538,7 +538,8 @@ mod tests {
     #[test]
     fn request_shard_merge_equals_single_batch() {
         let bench = Bench::new();
-        let ev = AnalyticEvaluator::new(&bench.model, &bench.problems, &bench.sols);
+        let ev =
+            AnalyticEvaluator::new(&bench.model, &bench.problems, &bench.sols, &bench.compiled);
         let manifest = WorkManifest::new(requests());
         let single = ev.eval_batch(&manifest.requests);
         for n in [1usize, 2, 3, 5] {
@@ -560,7 +561,8 @@ mod tests {
     #[test]
     fn merge_rejects_incomplete_and_conflicting_shards() {
         let bench = Bench::new();
-        let ev = AnalyticEvaluator::new(&bench.model, &bench.problems, &bench.sols);
+        let ev =
+            AnalyticEvaluator::new(&bench.model, &bench.problems, &bench.sols, &bench.compiled);
         let manifest = WorkManifest::new(requests());
         let s0 = evaluate_shard(&ev, &manifest, 0, 2);
         let s1 = evaluate_shard(&ev, &manifest, 1, 2);
@@ -576,7 +578,8 @@ mod tests {
     #[test]
     fn manifest_evaluator_records_then_serves() {
         let bench = Bench::new();
-        let ev = AnalyticEvaluator::new(&bench.model, &bench.problems, &bench.sols);
+        let ev =
+            AnalyticEvaluator::new(&bench.model, &bench.problems, &bench.sols, &bench.compiled);
         let reqs = requests();
 
         // phase 1: nothing known, everything pending

@@ -12,9 +12,10 @@
 //!   problem id, the `KernelPlan` config hash (or a canonical config
 //!   fingerprint for raw candidates), the seed-stream path of the
 //!   measurement noise, and the measurement kind;
-//! * [`AnalyticEvaluator`] — wraps [`PerfModel`] with a genuinely
-//!   vectorized batch path (`candidate_ms_batch` hoists the per-problem
-//!   SOL/baseline terms out of the per-config loop);
+//! * [`AnalyticEvaluator`] — wraps [`PerfModel`] plus a per-problem
+//!   [`CompiledCostModel`] cache (ADR-006): candidate batches run through
+//!   pre-lowered branch-free evaluators over struct-of-arrays
+//!   [`ConfigBatch`]es, bit-identical to the scalar model;
 //! * [`PjrtEvaluator`] — wraps the PJRT [`Runtime`] behind the existing
 //!   `pjrt` feature gate (numeric validation of candidate configs against
 //!   their AOT artifacts);
@@ -56,7 +57,9 @@ use std::path::Path;
 use std::sync::{Arc, Mutex};
 
 use crate::kernelbench::Problem;
-use crate::perfmodel::{measurement_noise, CandidateConfig, PerfModel};
+use crate::perfmodel::{
+    measurement_noise, CandidateConfig, CompiledCostModel, ConfigBatch, PerfModel,
+};
 use crate::runtime::Runtime;
 use crate::sol::SolAnalysis;
 use crate::util::json::Json;
@@ -478,6 +481,21 @@ impl<'a> Oracle<'a> {
             Some(b) => b.eval(req).value,
         }
     }
+
+    /// The borrowed analytic evaluator, but *only* when no backend
+    /// override is installed. Callers with a pre-lowered [`ConfigBatch`]
+    /// (move-pool scoring, Nominate rounds) take this to skip
+    /// `EvalRequest` construction entirely; `None` means a backend must
+    /// see every request (record/replay transparency — ADR-004), so the
+    /// caller falls back to the batched request path. Values are bitwise
+    /// equal either way, so artifacts and RNG draws do not depend on which
+    /// path ran.
+    pub fn direct(&self) -> Option<&AnalyticEvaluator<'a>> {
+        match self.backend {
+            None => Some(&self.analytic),
+            Some(_) => None,
+        }
+    }
 }
 
 impl Evaluator for Oracle<'_> {
@@ -494,14 +512,22 @@ impl Evaluator for Oracle<'_> {
 // ===========================================================================
 
 /// [`PerfModel`]-backed evaluator — the default measurement oracle of the
-/// whole reproduction. `Copy` (three shared references), so sessions
+/// whole reproduction. `Copy` (four shared references), so sessions
 /// construct one per call site at zero cost.
+///
+/// Candidate timings go through the borrowed [`CompiledCostModel`]: every
+/// problem is lowered exactly once by whoever owns the model/suite pair
+/// (`Bench`, `OwnedAnalytic`, a test fixture), and every evaluator built
+/// from that owner reuses the same lowering (ADR-006 cache keying — the
+/// key is the problem's index, position-stable like `sols`).
 #[derive(Clone, Copy)]
 pub struct AnalyticEvaluator<'a> {
     pub model: &'a PerfModel,
     pub problems: &'a [Problem],
     /// Per-problem SOL analyses (same order as `problems`).
     pub sols: &'a [SolAnalysis],
+    /// Per-problem compiled costs (same order as `problems`).
+    pub compiled: &'a CompiledCostModel,
 }
 
 impl<'a> AnalyticEvaluator<'a> {
@@ -509,8 +535,21 @@ impl<'a> AnalyticEvaluator<'a> {
         model: &'a PerfModel,
         problems: &'a [Problem],
         sols: &'a [SolAnalysis],
+        compiled: &'a CompiledCostModel,
     ) -> AnalyticEvaluator<'a> {
-        AnalyticEvaluator { model, problems, sols }
+        debug_assert_eq!(problems.len(), compiled.len(), "compiled cache must cover the suite");
+        AnalyticEvaluator { model, problems, sols, compiled }
+    }
+
+    /// Evaluate a pre-lowered config batch against one problem, appending
+    /// `batch.len()` candidate timings to `out` — the allocation-free lane
+    /// the move-selection policy and MANTIS Nominate use with a reusable
+    /// scratch batch. Bit-identical to `candidate` requests through
+    /// [`Evaluator::eval_batch`].
+    pub fn candidate_batch_into(&self, problem: usize, batch: &ConfigBatch, out: &mut Vec<f64>) {
+        let start = out.len();
+        out.resize(start + batch.len(), 0.0);
+        self.compiled.problem(problem).eval_into(batch, &mut out[start..]);
     }
 
     /// Scalar value for the agent hot loop: computes the same number
@@ -531,18 +570,18 @@ impl<'a> AnalyticEvaluator<'a> {
             }
             MeasureKind::Candidate => {
                 let cfg = req.config.as_ref().expect("candidate request without a config");
-                self.model.candidate_ms(problem, cfg)
+                self.compiled.problem(req.problem).candidate_ms(cfg)
             }
             MeasureKind::Measured => {
                 let cfg = req.config.as_ref().expect("measured request without a config");
                 let at =
                     req.stream.as_ref().expect("measured request without a noise stream");
-                self.model.candidate_ms(problem, cfg) * measurement_noise(at)
+                self.compiled.problem(req.problem).candidate_ms(cfg) * measurement_noise(at)
             }
             MeasureKind::SolGap => {
                 let sol = self.sols[req.problem].t_sol_fp16_ms;
                 let t = match &req.config {
-                    Some(cfg) => self.model.candidate_ms(problem, cfg),
+                    Some(cfg) => self.compiled.problem(req.problem).candidate_ms(cfg),
                     None => self.model.baseline_ms(problem),
                 };
                 t / sol
@@ -580,7 +619,7 @@ impl<'a> AnalyticEvaluator<'a> {
             MeasureKind::SolGap => {
                 let sol = self.sols[req.problem].t_sol_fp16_ms;
                 let t = match &req.config {
-                    Some(cfg) => self.model.candidate_ms(problem, cfg),
+                    Some(cfg) => self.compiled.problem(req.problem).candidate_ms(cfg),
                     None => self.model.baseline_ms(problem),
                 };
                 EvalResponse::ok(key, t / sol)
@@ -592,8 +631,9 @@ impl<'a> AnalyticEvaluator<'a> {
 impl Evaluator for AnalyticEvaluator<'_> {
     fn eval_batch(&self, reqs: &[EvalRequest]) -> Vec<EvalResponse> {
         // Vectorized path: bucket candidate-bearing requests by problem and
-        // run `candidate_ms_batch` once per problem, hoisting the
-        // per-problem roofline/fusion/dominant-op terms out of the loop.
+        // run each bucket through the problem's pre-lowered compiled costs
+        // (ADR-006) — configs are lowered into a reused struct-of-arrays
+        // batch instead of cloned, and the inner loop is branch-free.
         let mut buckets: BTreeMap<usize, Vec<usize>> = BTreeMap::new();
         for (i, r) in reqs.iter().enumerate() {
             if matches!(r.kind, MeasureKind::Candidate | MeasureKind::Measured)
@@ -604,11 +644,18 @@ impl Evaluator for AnalyticEvaluator<'_> {
             }
         }
         let mut candidate_ms: Vec<Option<f64>> = vec![None; reqs.len()];
+        let mut batch = ConfigBatch::new();
+        let mut out = Vec::new();
         for (p, idxs) in &buckets {
-            let cfgs: Vec<CandidateConfig> =
-                idxs.iter().map(|&i| reqs[i].config.clone().expect("bucketed")).collect();
-            let batch = self.model.candidate_ms_batch(&self.problems[*p], &cfgs);
-            for (&i, v) in idxs.iter().zip(batch) {
+            batch.clear();
+            batch.reserve(idxs.len());
+            for &i in idxs {
+                batch.push(reqs[i].config.as_ref().expect("bucketed"));
+            }
+            out.clear();
+            out.resize(idxs.len(), 0.0);
+            self.compiled.problem(*p).eval_into(&batch, &mut out);
+            for (&i, &v) in idxs.iter().zip(&out) {
                 candidate_ms[i] = Some(v);
             }
         }
@@ -721,17 +768,20 @@ mod tests {
         model: PerfModel,
         problems: Vec<Problem>,
         sols: Vec<SolAnalysis>,
+        compiled: CompiledCostModel,
     }
 
     impl Fx {
         fn new() -> Fx {
             let problems = suite();
             let sols = problems.iter().map(|p| analyze(p, &H100_SXM)).collect();
-            Fx { model: PerfModel::new(H100_SXM.clone()), problems, sols }
+            let model = PerfModel::new(H100_SXM.clone());
+            let compiled = CompiledCostModel::compile(&model, &problems);
+            Fx { model, problems, sols, compiled }
         }
 
         fn ev(&self) -> AnalyticEvaluator<'_> {
-            AnalyticEvaluator::new(&self.model, &self.problems, &self.sols)
+            AnalyticEvaluator::new(&self.model, &self.problems, &self.sols, &self.compiled)
         }
     }
 
@@ -867,6 +917,38 @@ mod tests {
             }
         }
         reqs
+    }
+
+    #[test]
+    fn golden_compiled_equals_batch_equals_scalar_over_the_suite_enumeration() {
+        // ADR-006 bitwise-equivalence contract: for every candidate-bearing
+        // request of the full suite enumeration, the compiled evaluator,
+        // the batched entry point, and the scalar generic path produce the
+        // same bit pattern — so RunLogs, sweep grids, and recorded traces
+        // are byte-identical across the three paths.
+        let fx = Fx::new();
+        let reqs = full_enumeration();
+        assert!(reqs.len() > 5_000, "enumeration must be non-trivial: {}", reqs.len());
+        let responses = fx.ev().eval_batch(&reqs);
+        let mut candidates = 0usize;
+        for (r, resp) in reqs.iter().zip(&responses) {
+            let Some(cfg) = &r.config else { continue };
+            candidates += 1;
+            let p = &fx.problems[r.problem];
+            let scalar = fx.model.candidate_ms(p, cfg);
+            let batch = fx.model.candidate_ms_batch(p, std::slice::from_ref(cfg))[0];
+            let compiled = fx.compiled.problem(r.problem).candidate_ms(cfg);
+            assert_eq!(scalar.to_bits(), batch.to_bits(), "{}", r.key());
+            assert_eq!(scalar.to_bits(), compiled.to_bits(), "{}", r.key());
+            // and the value the evaluator actually served is built on the
+            // same bits (Measured scales by the request's noise stream)
+            let served = match (r.kind, &r.stream) {
+                (MeasureKind::Measured, Some(at)) => scalar * measurement_noise(at),
+                _ => scalar,
+            };
+            assert_eq!(served.to_bits(), resp.value.to_bits(), "{}", r.key());
+        }
+        assert!(candidates > 5_000, "candidate coverage must be non-trivial: {candidates}");
     }
 
     #[test]

@@ -46,7 +46,7 @@ use std::path::Path;
 use std::sync::{Arc, Mutex};
 
 use crate::kernelbench::{suite, Problem};
-use crate::perfmodel::PerfModel;
+use crate::perfmodel::{CompiledCostModel, PerfModel};
 use crate::sol::{analyze, GpuSpec, SolAnalysis, H100_SXM};
 use crate::util::json::Json;
 
@@ -62,7 +62,7 @@ pub const TRACE_VERSION: u64 = 2;
 // ===========================================================================
 
 /// The analytic oracle as one owned value (model + problems + SOL
-/// analyses). [`AnalyticEvaluator`] is three borrows into a
+/// analyses, compiled costs). [`AnalyticEvaluator`] is four borrows into a
 /// [`Bench`](crate::experiments::Bench); an oracle boxed *into* a `Bench`
 /// cannot borrow the bench that holds it, so the recording/fallthrough
 /// backends own this standalone copy instead.
@@ -77,6 +77,8 @@ pub struct OwnedAnalytic {
     model: PerfModel,
     problems: Vec<Problem>,
     sols: Vec<SolAnalysis>,
+    /// Per-problem compiled costs, lowered once at construction (ADR-006).
+    compiled: CompiledCostModel,
 }
 
 impl OwnedAnalytic {
@@ -87,7 +89,9 @@ impl OwnedAnalytic {
     pub fn on(gpu: GpuSpec) -> OwnedAnalytic {
         let problems = suite();
         let sols = problems.iter().map(|p| analyze(p, &gpu)).collect();
-        OwnedAnalytic { model: PerfModel::new(gpu), problems, sols }
+        let model = PerfModel::new(gpu);
+        let compiled = CompiledCostModel::compile(&model, &problems);
+        OwnedAnalytic { model, problems, sols, compiled }
     }
 }
 
@@ -99,7 +103,8 @@ impl Default for OwnedAnalytic {
 
 impl Evaluator for OwnedAnalytic {
     fn eval_batch(&self, reqs: &[EvalRequest]) -> Vec<EvalResponse> {
-        AnalyticEvaluator::new(&self.model, &self.problems, &self.sols).eval_batch(reqs)
+        AnalyticEvaluator::new(&self.model, &self.problems, &self.sols, &self.compiled)
+            .eval_batch(reqs)
     }
 }
 

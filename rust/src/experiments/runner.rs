@@ -5,16 +5,19 @@ use crate::agent::controller::{run_problem, ControllerKind, Env, VariantSpec};
 use crate::agent::{ModelTier, RunLog};
 use crate::kernelbench::{suite, Problem};
 use crate::mantis::{run_orchestrated, CrossMemory, MantisConfig};
-use crate::perfmodel::PerfModel;
+use crate::perfmodel::{CompiledCostModel, PerfModel};
 use crate::sol::{analyze, SolAnalysis, GpuSpec, H100_SXM};
 
-/// Owns the evaluation substrate: perf model, problems, SOL analyses, and
+/// Owns the evaluation substrate: perf model, problems, SOL analyses, the
+/// per-problem compiled cost models (lowered once here — ADR-006), and
 /// (optionally) a measurement-oracle override that every [`Env`] handed
 /// out by [`Bench::env`] carries (record/replay, ADR-004).
 pub struct Bench {
     pub model: PerfModel,
     pub problems: Vec<Problem>,
     pub sols: Vec<SolAnalysis>,
+    /// Every (problem, arch) pair of this bench, lowered exactly once.
+    pub compiled: CompiledCostModel,
     oracle: Option<Box<crate::eval::DynEvaluator>>,
 }
 
@@ -26,7 +29,9 @@ impl Bench {
     pub fn on(gpu: GpuSpec) -> Self {
         let problems = suite();
         let sols = problems.iter().map(|p| analyze(p, &gpu)).collect();
-        Bench { model: PerfModel::new(gpu), problems, sols, oracle: None }
+        let model = PerfModel::new(gpu);
+        let compiled = CompiledCostModel::compile(&model, &problems);
+        Bench { model, problems, sols, compiled, oracle: None }
     }
 
     /// Install a measurement-oracle override: every subsequent `env()` /
@@ -41,7 +46,8 @@ impl Bench {
     }
 
     pub fn env(&self) -> Env<'_> {
-        Env::new(&self.model, &self.problems, &self.sols).with_oracle(self.oracle.as_deref())
+        Env::new(&self.model, &self.problems, &self.sols, &self.compiled)
+            .with_oracle(self.oracle.as_deref())
     }
 
     /// The measurement oracle over this bench (ADR-003/ADR-004).

@@ -24,7 +24,7 @@ use crate::agent::policy::{self, OptMove};
 use crate::agent::runlog::ProblemRun;
 use crate::agent::session::StepResult;
 use crate::eval::{EvalRequest, Evaluator};
-use crate::perfmodel::CandidateConfig;
+use crate::perfmodel::{CandidateConfig, ConfigBatch};
 use crate::util::json::Json;
 use crate::util::rng::{stream, MeasureSeq, Pcg32, StreamPath};
 
@@ -295,22 +295,41 @@ impl<'a> MantisSession<'a> {
         // orchestration's structured artifacts tighten the model's own
         // estimates beyond in-prompt steering
         let sigma = tier.estimate_sigma * if self.cfg.analyze { 0.3 } else { 1.0 };
-        // One batched evaluation per Nominate round (ADR-003): request 0 is
-        // the current base, requests 1..=k the candidate of each nominated
-        // move — the per-problem model terms are hoisted once for the whole
-        // hypothesis pool instead of recomputed 2k times.
-        let reqs: Vec<EvalRequest> = std::iter::once(base.clone())
-            .chain(pool.iter().map(|&mv| policy::apply_move(&base, mv, qgain)))
-            .map(|cfg| EvalRequest::candidate(self.pidx, cfg))
-            .collect();
-        let est_ms = self.env.evaluator().eval_batch(&reqs);
-        let t_now = est_ms[0].value;
+        // One batched evaluation per Nominate round (ADR-003): slot 0 is
+        // the current base, slots 1..=k the candidate of each nominated
+        // move. With no backend override the pool rides the problem's
+        // pre-compiled evaluator over a struct-of-arrays batch (ADR-006);
+        // with an override (record/replay) every candidate goes through
+        // the request path so the backend observes it (ADR-004). The two
+        // paths are bitwise identical, so the RNG draws below — and every
+        // downstream artifact — do not depend on which one ran.
+        let oracle = self.env.evaluator();
+        let est_ms: Vec<f64> = match oracle.direct() {
+            Some(analytic) => {
+                let mut batch = ConfigBatch::with_capacity(pool.len() + 1);
+                batch.push(&base);
+                for &mv in &pool {
+                    batch.push(&policy::apply_move(&base, mv, qgain));
+                }
+                let mut out = Vec::new();
+                analytic.candidate_batch_into(self.pidx, &batch, &mut out);
+                out
+            }
+            None => {
+                let reqs: Vec<EvalRequest> = std::iter::once(base.clone())
+                    .chain(pool.iter().map(|&mv| policy::apply_move(&base, mv, qgain)))
+                    .map(|cfg| EvalRequest::candidate(self.pidx, cfg))
+                    .collect();
+                oracle.eval_batch(&reqs).iter().map(|r| r.value).collect()
+            }
+        };
+        let t_now = est_ms[0];
         let mut hyps: Vec<Hypothesis> = pool
             .iter()
             .zip(&est_ms[1..])
-            .map(|(&mv, t_new)| {
+            .map(|(&mv, &t_new)| {
                 let mem_prior = if self.cfg.summarize { self.memory.prior(mv) } else { 1.0 };
-                let est = (t_now / t_new.value) * self.rng.lognormal_noise(sigma) * mem_prior;
+                let est = (t_now / t_new) * self.rng.lognormal_noise(sigma) * mem_prior;
                 let (ri, rp) = risks(mv);
                 Hypothesis { mv, est_speedup: est, r_impl: ri, r_perf: rp, roi: roi(est, gap, ri, rp) }
             })
@@ -437,7 +456,7 @@ mod tests {
     use super::*;
     use crate::agent::{ControllerKind, ModelTier};
     use crate::kernelbench::suite;
-    use crate::perfmodel::PerfModel;
+    use crate::perfmodel::{CompiledCostModel, PerfModel};
     use crate::sol::{analyze, SolAnalysis, H100_SXM};
 
     #[test]
@@ -475,17 +494,19 @@ mod tests {
         assert!((m.prior(OptMove::FuseAll) - 1.0).abs() < 1e-12);
     }
 
-    fn fixture() -> (PerfModel, Vec<crate::kernelbench::Problem>, Vec<SolAnalysis>) {
+    fn fixture(
+    ) -> (PerfModel, Vec<crate::kernelbench::Problem>, Vec<SolAnalysis>, CompiledCostModel) {
         let model = PerfModel::new(H100_SXM.clone());
         let problems = suite();
         let sols = problems.iter().map(|p| analyze(p, &H100_SXM)).collect();
-        (model, problems, sols)
+        let compiled = CompiledCostModel::compile(&model, &problems);
+        (model, problems, sols, compiled)
     }
 
     #[test]
     fn orchestrated_respects_total_budget() {
-        let (model, problems, sols) = fixture();
-        let env = Env::new(&model, &problems, &sols);
+        let (model, problems, sols, compiled) = fixture();
+        let env = Env::new(&model, &problems, &sols, &compiled);
         let spec = VariantSpec::new(ControllerKind::OrchestratedSol, true, ModelTier::Mid);
         let run = run_orchestrated(&env, &spec, 0, 9, None);
         assert_eq!(run.attempts.len(), 40, "5 iters × 2 hyps × 4 attempts");
@@ -503,8 +524,8 @@ mod tests {
 
     #[test]
     fn cross_memory_threads_across_problems() {
-        let (model, problems, sols) = fixture();
-        let env = Env::new(&model, &problems, &sols);
+        let (model, problems, sols, compiled) = fixture();
+        let env = Env::new(&model, &problems, &sols, &compiled);
         let spec = VariantSpec::new(ControllerKind::OrchestratedSol, true, ModelTier::Mid);
         let cfg = MantisConfig::default();
         let mut mem = CrossMemory::default();

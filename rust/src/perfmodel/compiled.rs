@@ -1,0 +1,746 @@
+//! Compiled cost model: each (problem, arch) pair lowered **once** into a
+//! small fixed struct of pre-resolved coefficients, evaluated over
+//! struct-of-arrays config batches with zero dispatch (ROADMAP item 3).
+//!
+//! The generic path ([`PerfModel::candidate_ms`]) re-derives per-problem
+//! terms on every call and matches on [`DominantDims`] per candidate. The
+//! compiled path splits that work along its natural frequency boundary:
+//!
+//! * **Lowering** (once per problem per process): [`CompiledCosts::lower`]
+//!   flattens `ProblemCosts`/`DominantDims` into plain `f64`/`u64` fields,
+//!   resolves every arch-dependent peak (`effective_*_flops`,
+//!   `effective_bandwidth`) into a 5-entry table, and selects one
+//!   monomorphic evaluator `fn(&CompiledCosts, &ConfigBatch, &mut [f64])`
+//!   per dominant-dims shape — the enum is gone before the first candidate
+//!   is costed.
+//! * **Config lowering** (once per candidate, at [`ConfigBatch::push`]):
+//!   every term that depends only on the config — clamps, the fusion
+//!   interpolation factor, the stage/quality/memory efficiencies, the
+//!   scheduler's wave floor, the peak-table index — is folded into a
+//!   [`LoweredCfg`] and appended to parallel contiguous columns.
+//! * **Evaluation** (the hot loop): pure branch-free arithmetic over the
+//!   columns. No enum dispatch, no per-candidate `match`, no allocation.
+//!   (The one residual branch is `quantization_eff`'s `block == 0` guard —
+//!   a trivially-predicted scalar compare, not a dispatch.)
+//!
+//! The contract is **bitwise**: for every config, the compiled value has
+//! the exact bit pattern of [`PerfModel::candidate_ms`]. Lowering only
+//! hoists computations — it never reassociates, never substitutes
+//! algebraically unequal forms. The two non-obvious hoists are argued
+//! inline and pinned by the property test below plus the golden test in
+//! `eval::tests` over the full suite enumeration (ADR-006).
+
+use super::{
+    quantization_eff, CandidateConfig, DominantDims, PerfModel, ProblemCosts, SchedulerKind,
+    LAUNCH_OVERHEAD_US,
+};
+use crate::dsl::DType;
+use crate::kernelbench::Problem;
+
+/// Index into [`CompiledCosts::peaks`]: the compute-peak class of a config,
+/// with the `tensor_cores` flag folded in (no `if` at eval time).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+#[repr(u8)]
+enum PeakClass {
+    /// FP32 inputs on tensor cores ride TF32.
+    Tf32 = 0,
+    Fp16 = 1,
+    Fp8 = 2,
+    Fp64 = 3,
+    /// Scalar CUDA-core FP32 (tensor cores off).
+    Fp32Cuda = 4,
+}
+
+impl PeakClass {
+    /// Mirrors the `costs.matmul_like && cfg.tensor_cores` branch of
+    /// `candidate_ms_with` from the config side: the problem side is folded
+    /// into the peak *table* (a non-matmul problem's table holds the CUDA
+    /// peak in every slot), so `peaks[class]` is the exact peak the scalar
+    /// path would compute.
+    fn of(cfg: &CandidateConfig) -> PeakClass {
+        if !cfg.tensor_cores {
+            return PeakClass::Fp32Cuda;
+        }
+        match cfg.compute_dtype {
+            DType::Fp16 | DType::Bf16 => PeakClass::Fp16,
+            DType::Fp8E4m3 | DType::Fp8E5m2 => PeakClass::Fp8,
+            DType::Fp64 => PeakClass::Fp64,
+            _ => PeakClass::Tf32,
+        }
+    }
+}
+
+/// Per-config terms of `candidate_ms`, pre-resolved at push time. Every
+/// field is the bit-exact value the scalar path computes from the same
+/// config — lowering moves the work, not the math.
+#[derive(Debug, Clone, Copy)]
+pub(crate) struct LoweredCfg {
+    /// Threadblock tile m / n (k never enters the cost).
+    bm: u64,
+    bn: u64,
+    /// `bn.min(128)` — the Attention head-dim block cap, hoisted.
+    bn_cap: u64,
+    /// Index into [`CompiledCosts::peaks`].
+    peak_idx: u8,
+    /// Scheduler recovery floor for wave efficiency: Default → `0.0`
+    /// (`natural.max(0.0) ≡ natural` bitwise — `natural` is a quotient of
+    /// non-negative integers, so it is `+0.0` or positive, never `-0.0`
+    /// and never NaN), Persistent → `0.93`, StreamK → `0.96`.
+    wave_floor: f64,
+    /// `stage_efficiency(stages)`.
+    stage_eff: f64,
+    /// `quality.clamp(0.01, 1.0)`.
+    q_eff: f64,
+    /// `(0.92 * quality.clamp(0.01, 1.0)).clamp(0.01, 1.0)`.
+    mem_eff: f64,
+    /// `1.0 - cov * epi_cov` — the fused↔unfused byte interpolation factor.
+    one_minus_cov_epi: f64,
+    /// `1.0 - cov` — the launch-count interpolation factor.
+    one_minus_cov: f64,
+}
+
+impl LoweredCfg {
+    pub(crate) fn of(cfg: &CandidateConfig) -> LoweredCfg {
+        let cov = cfg.fusion_coverage.clamp(0.0, 1.0);
+        let epi_cov = if cfg.fused_epilogue { 1.0 } else { 0.75 };
+        let q_eff = cfg.quality.clamp(0.01, 1.0);
+        LoweredCfg {
+            bm: cfg.tile.0,
+            bn: cfg.tile.1,
+            bn_cap: cfg.tile.1.min(128),
+            peak_idx: PeakClass::of(cfg) as u8,
+            wave_floor: match cfg.scheduler {
+                SchedulerKind::Default => 0.0,
+                SchedulerKind::Persistent => 0.93,
+                SchedulerKind::StreamK => 0.96,
+            },
+            stage_eff: PerfModel::stage_efficiency(cfg.stages),
+            q_eff,
+            mem_eff: (0.92 * cfg.quality.clamp(0.01, 1.0)).clamp(0.01, 1.0),
+            one_minus_cov_epi: 1.0 - cov * epi_cov,
+            one_minus_cov: 1.0 - cov,
+        }
+    }
+}
+
+/// Struct-of-arrays candidate batch: one contiguous column per
+/// [`LoweredCfg`] field (plus the raw `bk`/`stages` axes for
+/// completeness), so the evaluators stream parallel slices instead of
+/// chasing `CandidateConfig` structs. Reusable: `clear()` + `push()`
+/// refill it with no reallocation once capacity is warm — the move-pool
+/// generators in `policy::select_move` and MANTIS Nominate fill one
+/// thread-local batch in place per round.
+#[derive(Debug, Clone, Default)]
+pub struct ConfigBatch {
+    bm: Vec<u64>,
+    bn: Vec<u64>,
+    bk: Vec<u64>,
+    stages: Vec<u64>,
+    bn_cap: Vec<u64>,
+    peak_idx: Vec<u8>,
+    wave_floor: Vec<f64>,
+    stage_eff: Vec<f64>,
+    q_eff: Vec<f64>,
+    mem_eff: Vec<f64>,
+    one_minus_cov_epi: Vec<f64>,
+    one_minus_cov: Vec<f64>,
+}
+
+impl ConfigBatch {
+    pub fn new() -> ConfigBatch {
+        ConfigBatch::default()
+    }
+
+    pub fn with_capacity(n: usize) -> ConfigBatch {
+        let mut b = ConfigBatch::default();
+        b.reserve(n);
+        b
+    }
+
+    pub fn reserve(&mut self, n: usize) {
+        self.bm.reserve(n);
+        self.bn.reserve(n);
+        self.bk.reserve(n);
+        self.stages.reserve(n);
+        self.bn_cap.reserve(n);
+        self.peak_idx.reserve(n);
+        self.wave_floor.reserve(n);
+        self.stage_eff.reserve(n);
+        self.q_eff.reserve(n);
+        self.mem_eff.reserve(n);
+        self.one_minus_cov_epi.reserve(n);
+        self.one_minus_cov.reserve(n);
+    }
+
+    /// Drop all configs, keeping the column allocations.
+    pub fn clear(&mut self) {
+        self.bm.clear();
+        self.bn.clear();
+        self.bk.clear();
+        self.stages.clear();
+        self.bn_cap.clear();
+        self.peak_idx.clear();
+        self.wave_floor.clear();
+        self.stage_eff.clear();
+        self.q_eff.clear();
+        self.mem_eff.clear();
+        self.one_minus_cov_epi.clear();
+        self.one_minus_cov.clear();
+    }
+
+    /// Lower one config into the columns.
+    pub fn push(&mut self, cfg: &CandidateConfig) {
+        let lc = LoweredCfg::of(cfg);
+        self.bm.push(lc.bm);
+        self.bn.push(lc.bn);
+        self.bk.push(cfg.tile.2);
+        self.stages.push(cfg.stages);
+        self.bn_cap.push(lc.bn_cap);
+        self.peak_idx.push(lc.peak_idx);
+        self.wave_floor.push(lc.wave_floor);
+        self.stage_eff.push(lc.stage_eff);
+        self.q_eff.push(lc.q_eff);
+        self.mem_eff.push(lc.mem_eff);
+        self.one_minus_cov_epi.push(lc.one_minus_cov_epi);
+        self.one_minus_cov.push(lc.one_minus_cov);
+    }
+
+    pub fn extend(&mut self, cfgs: &[CandidateConfig]) {
+        self.reserve(cfgs.len());
+        for c in cfgs {
+            self.push(c);
+        }
+    }
+
+    pub fn from_configs(cfgs: &[CandidateConfig]) -> ConfigBatch {
+        let mut b = ConfigBatch::with_capacity(cfgs.len());
+        b.extend(cfgs);
+        b
+    }
+
+    pub fn len(&self) -> usize {
+        self.bm.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.bm.is_empty()
+    }
+
+    /// Reassemble row `i` from the columns (register-resident; the batch
+    /// evaluators call this in their inner loop).
+    #[inline(always)]
+    fn row(&self, i: usize) -> LoweredCfg {
+        LoweredCfg {
+            bm: self.bm[i],
+            bn: self.bn[i],
+            bn_cap: self.bn_cap[i],
+            peak_idx: self.peak_idx[i],
+            wave_floor: self.wave_floor[i],
+            stage_eff: self.stage_eff[i],
+            q_eff: self.q_eff[i],
+            mem_eff: self.mem_eff[i],
+            one_minus_cov_epi: self.one_minus_cov_epi[i],
+            one_minus_cov: self.one_minus_cov[i],
+        }
+    }
+}
+
+/// The monomorphic batch evaluator selected at lowering time — one per
+/// [`DominantDims`] shape.
+type EvalFn = fn(&CompiledCosts, &ConfigBatch, &mut [f64]);
+/// Scalar twin of [`EvalFn`] (the `Oracle::value` fast path); shares the
+/// per-variant kernel, so one-config and batched evaluation are the same
+/// FP operations by construction.
+type EvalOneFn = fn(&CompiledCosts, &LoweredCfg) -> f64;
+
+/// One (problem, arch) pair lowered into pre-resolved coefficients. All
+/// model inputs — problem op graph, GPU peaks, clock ratios — are resolved
+/// here; evaluation touches only these fields.
+#[derive(Debug, Clone)]
+pub struct CompiledCosts {
+    /// `problem.flops()` as f64.
+    flops: f64,
+    /// Best-case (fully fused) DRAM bytes.
+    fused_bytes: f64,
+    /// `unfused_bytes - fused_bytes` — the fusion interpolation span.
+    bytes_diff: f64,
+    /// `n_ops - 1.0` — the extra-launch span.
+    n_ops_m1: f64,
+    /// Effective compute peaks indexed by [`PeakClass`]. For a non-matmul
+    /// problem every entry is the scalar FP32 peak (the problem-side half
+    /// of the `matmul_like && tensor_cores` branch, folded into data).
+    peaks: [f64; 5],
+    /// `gpu.effective_bandwidth()`.
+    bw: f64,
+    /// SM count (wave-quantization granularity).
+    sms: u64,
+    /// Flattened dominant dims: MatmulMn → (m, n, batch); Attention →
+    /// (s, d.max(64), b·h); Other → unused zeros.
+    dim_i: u64,
+    dim_j: u64,
+    grids: u64,
+    eval: EvalFn,
+    eval_one: EvalOneFn,
+}
+
+impl CompiledCosts {
+    /// Lower one problem against the model's GPU. The only lowering an
+    /// eval-stack component should run more than once per (problem, arch)
+    /// pair is none at all — hold a [`CompiledCostModel`] instead.
+    pub fn lower(model: &PerfModel, problem: &Problem) -> CompiledCosts {
+        Self::from_costs(model, &model.problem_costs(problem))
+    }
+
+    /// Lowering body over already-hoisted [`ProblemCosts`] (the property
+    /// test drives this directly with synthetic edge-dim costs).
+    pub(crate) fn from_costs(model: &PerfModel, pc: &ProblemCosts) -> CompiledCosts {
+        let gpu = &model.gpu;
+        // `effective_*_flops()`/`effective_bandwidth()` are pure functions
+        // of the GpuSpec's f64 fields: evaluating them at lowering time
+        // yields the exact bits the scalar path recomputes per call.
+        let fp32 = gpu.effective_fp32_flops();
+        let peaks = if pc.matmul_like {
+            [
+                gpu.effective_tf32_flops(),
+                gpu.effective_fp16_flops(),
+                gpu.effective_fp8_flops(),
+                gpu.effective_fp64_flops(),
+                fp32,
+            ]
+        } else {
+            [fp32; 5]
+        };
+        let (dim_i, dim_j, grids, eval, eval_one): (u64, u64, u64, EvalFn, EvalOneFn) =
+            match pc.dom {
+                DominantDims::MatmulMn { m, n, batch } => {
+                    (m, n, batch, eval_matmul_mn, one_matmul_mn)
+                }
+                DominantDims::Attention { s, d, bh } => {
+                    // `d.max(64)` is a per-problem constant in the scalar
+                    // path's tile_efficiency; hoist it here.
+                    (s, d.max(64), bh, eval_attention, one_attention)
+                }
+                DominantDims::Other => (0, 0, 0, eval_other, one_other),
+            };
+        CompiledCosts {
+            flops: pc.flops,
+            fused_bytes: pc.fused_bytes,
+            bytes_diff: pc.unfused_bytes - pc.fused_bytes,
+            n_ops_m1: pc.n_ops - 1.0,
+            peaks,
+            bw: gpu.effective_bandwidth(),
+            sms: gpu.sm_count,
+            dim_i,
+            dim_j,
+            grids,
+            eval,
+            eval_one,
+        }
+    }
+
+    /// Evaluate the batch into `out` (`out.len()` must equal
+    /// `batch.len()`): the branch-free hot loop.
+    pub fn eval_into(&self, batch: &ConfigBatch, out: &mut [f64]) {
+        assert_eq!(batch.len(), out.len(), "output slice must match the batch");
+        (self.eval)(self, batch, out);
+    }
+
+    /// Allocating convenience over [`Self::eval_into`].
+    pub fn eval_batch(&self, batch: &ConfigBatch) -> Vec<f64> {
+        let mut out = vec![0.0; batch.len()];
+        self.eval_into(batch, &mut out);
+        out
+    }
+
+    /// One config through the compiled path — bit-identical to
+    /// [`PerfModel::candidate_ms`] on the problem this was lowered from
+    /// (the scalar `Oracle::value` fast path).
+    pub fn candidate_ms(&self, cfg: &CandidateConfig) -> f64 {
+        (self.eval_one)(self, &LoweredCfg::of(cfg))
+    }
+}
+
+/// The shared tail of every variant kernel: `candidate_ms_with` over
+/// pre-resolved coefficients, with the variant-specific tile/wave
+/// efficiencies passed in. Multiplication order matches the scalar path's
+/// left-associative product exactly.
+#[inline(always)]
+fn finish(c: &CompiledCosts, lc: &LoweredCfg, tile_eff: f64, wave_eff: f64) -> f64 {
+    let bytes = c.fused_bytes + c.bytes_diff * lc.one_minus_cov_epi;
+    let peak = c.peaks[lc.peak_idx as usize];
+    let eff = tile_eff * wave_eff * lc.stage_eff * lc.q_eff * 0.96;
+    let t_c = c.flops / (peak * eff);
+    let t_m = bytes / (c.bw * lc.mem_eff);
+    let launches = 1.0 + c.n_ops_m1 * lc.one_minus_cov;
+    (t_c.max(t_m) + launches * LAUNCH_OVERHEAD_US * 1e-6) * 1e3
+}
+
+/// Wave-quantization efficiency over a block count. `floor` is `0.0` for
+/// the Default scheduler: `natural` is `blocks as f64 / (waves*sms) as
+/// f64` with `waves*sms >= 1`, so it is `+0.0` or positive — `max(0.0)`
+/// returns it unchanged, bit for bit.
+#[inline(always)]
+fn wave_eff_of(blocks: u64, sms: u64, floor: f64) -> f64 {
+    let waves = blocks.div_ceil(sms).max(1);
+    let natural = blocks as f64 / (waves * sms) as f64;
+    natural.max(floor)
+}
+
+#[inline(always)]
+fn one_matmul_mn(c: &CompiledCosts, lc: &LoweredCfg) -> f64 {
+    let tile_eff = quantization_eff(c.dim_i, lc.bm) * quantization_eff(c.dim_j, lc.bn);
+    let blocks = c.grids * c.dim_i.div_ceil(lc.bm) * c.dim_j.div_ceil(lc.bn);
+    finish(c, lc, tile_eff, wave_eff_of(blocks, c.sms, lc.wave_floor))
+}
+
+#[inline(always)]
+fn one_attention(c: &CompiledCosts, lc: &LoweredCfg) -> f64 {
+    // dim_i = s, dim_j = d.max(64), grids = b·h
+    let tile_eff = quantization_eff(c.dim_i, lc.bm) * quantization_eff(c.dim_j, lc.bn_cap);
+    let blocks = c.grids * c.dim_i.div_ceil(lc.bm);
+    finish(c, lc, tile_eff, wave_eff_of(blocks, c.sms, lc.wave_floor))
+}
+
+#[inline(always)]
+fn one_other(c: &CompiledCosts, lc: &LoweredCfg) -> f64 {
+    // Non-tiled op: tile and wave efficiencies are exactly 1.0 in the
+    // scalar path; `1.0 * x` is the identity bitwise.
+    finish(c, lc, 1.0, 1.0)
+}
+
+fn eval_matmul_mn(c: &CompiledCosts, b: &ConfigBatch, out: &mut [f64]) {
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = one_matmul_mn(c, &b.row(i));
+    }
+}
+
+fn eval_attention(c: &CompiledCosts, b: &ConfigBatch, out: &mut [f64]) {
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = one_attention(c, &b.row(i));
+    }
+}
+
+fn eval_other(c: &CompiledCosts, b: &ConfigBatch, out: &mut [f64]) {
+    for (i, o) in out.iter_mut().enumerate() {
+        *o = one_other(c, &b.row(i));
+    }
+}
+
+/// Per-problem compiled-costs cache: every problem of a suite lowered
+/// eagerly against one arch, indexed by problem position. This is the
+/// process-wide "lower once" guarantee (ADR-006): `Bench`,
+/// `OwnedAnalytic`, and every `Env`/`AnalyticEvaluator` they hand out
+/// share one of these, so no (problem, arch) pair is lowered twice on the
+/// eval stack.
+#[derive(Debug, Clone)]
+pub struct CompiledCostModel {
+    costs: Vec<CompiledCosts>,
+}
+
+impl CompiledCostModel {
+    /// Lower every problem once. Eager (not lazy) on purpose: 59 lowerings
+    /// cost microseconds, and an immutable `Vec` needs no interior
+    /// mutability or locks on the hot path.
+    pub fn compile(model: &PerfModel, problems: &[Problem]) -> CompiledCostModel {
+        CompiledCostModel {
+            costs: problems.iter().map(|p| CompiledCosts::lower(model, p)).collect(),
+        }
+    }
+
+    /// The compiled costs of problem `idx` (panics out of range, like the
+    /// slice indexing of the scalar path).
+    pub fn problem(&self, idx: usize) -> &CompiledCosts {
+        &self.costs[idx]
+    }
+
+    pub fn get(&self, idx: usize) -> Option<&CompiledCosts> {
+        self.costs.get(idx)
+    }
+
+    pub fn len(&self) -> usize {
+        self.costs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.costs.is_empty()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::dsl::{constraint_table, Arch};
+    use crate::kernelbench::suite;
+    use crate::sol::hw::{GpuSpec, A100_SXM, H100_SXM};
+    use crate::util::prop;
+    use crate::util::rng::Pcg32;
+
+    /// Every ConstraintTable arch row (SM70–SM100), mapped to a concrete
+    /// clock-scaled GPU spec so the compiled peaks table is exercised
+    /// across distinct arithmetic (locked clocks, missing FP8 pipes,
+    /// different SM counts).
+    const ARCH_ROWS: [Arch; 7] = [
+        Arch::Sm70,
+        Arch::Sm80,
+        Arch::Sm86,
+        Arch::Sm89,
+        Arch::Sm90,
+        Arch::Sm90a,
+        Arch::Sm100,
+    ];
+
+    fn gpu_for(arch: Arch) -> GpuSpec {
+        match arch {
+            // Volta-era: no BF16/FP8 pipes, small SM count, down-clocked.
+            Arch::Sm70 => GpuSpec {
+                name: "synthetic V100-class",
+                sm_count: 80,
+                max_sm_clock_mhz: 1530.0,
+                locked_sm_clock_mhz: 1290.0,
+                peak_tf32_tflops: 15.7, // FP16 TC era: reuse as the "TC" peak
+                peak_fp16_tflops: 125.0,
+                peak_fp8_tflops: 0.0,
+                peak_fp32_tflops: 15.7,
+                peak_fp64_tflops: 7.8,
+                peak_bw_gbps: 900.0,
+                mem_clock_ratio: 1.0,
+                smem_per_sm: 96 * 1024,
+                l2_bytes: 6 * 1024 * 1024,
+            },
+            Arch::Sm80 => A100_SXM.clone(),
+            Arch::Sm86 => GpuSpec {
+                name: "synthetic GA102-class",
+                sm_count: 84,
+                locked_sm_clock_mhz: 1695.0,
+                max_sm_clock_mhz: 1860.0,
+                peak_bw_gbps: 936.0,
+                ..A100_SXM.clone()
+            },
+            Arch::Sm89 => GpuSpec {
+                name: "synthetic AD102-class",
+                sm_count: 128,
+                max_sm_clock_mhz: 2520.0,
+                locked_sm_clock_mhz: 2235.0,
+                peak_fp8_tflops: 660.0,
+                ..A100_SXM.clone()
+            },
+            Arch::Sm90 => GpuSpec { locked_sm_clock_mhz: 1980.0, ..H100_SXM.clone() },
+            Arch::Sm90a => H100_SXM.clone(),
+            Arch::Sm100 => GpuSpec {
+                name: "synthetic B200-class",
+                sm_count: 148,
+                peak_tf32_tflops: 1100.0,
+                peak_fp16_tflops: 2250.0,
+                peak_fp8_tflops: 4500.0,
+                peak_bw_gbps: 8000.0,
+                ..H100_SXM.clone()
+            },
+        }
+    }
+
+    /// Tile menu for random configs: the agent TILES plus degenerate and
+    /// asymmetric shapes (never zero — a zero block divides by zero in the
+    /// generic path too; `quantization_eff`'s `block == 0` guard is pinned
+    /// separately below).
+    const TILE_MENU: [(u64, u64, u64); 6] = [
+        (1, 1, 1),
+        (8, 8, 8),
+        (128, 128, 64),
+        (256, 128, 32),
+        (129, 255, 1),
+        (64, 200, 16),
+    ];
+
+    const DTYPES: [DType; 7] = [
+        DType::Fp32,
+        DType::Tf32,
+        DType::Fp16,
+        DType::Bf16,
+        DType::Fp8E4m3,
+        DType::Fp8E5m2,
+        DType::Fp64,
+    ];
+
+    /// Edge-heavy dim menu: 0 (NaN-producing quantization), 1, block
+    /// boundaries, and a 2^45 "huge" value (guard-adjacent without
+    /// overflowing the block-count products both paths share).
+    const DIMS: [u64; 12] = [0, 1, 2, 63, 64, 65, 127, 128, 129, 1000, 4095, 1 << 20];
+    const HUGE_DIM: u64 = 1 << 45;
+
+    fn rand_cfg(r: &mut Pcg32) -> CandidateConfig {
+        CandidateConfig {
+            tile: *r.choice(&TILE_MENU),
+            compute_dtype: *r.choice(&DTYPES),
+            tensor_cores: r.chance(0.7),
+            fused_epilogue: r.chance(0.5),
+            // below 0 and above 1 exercise the clamp
+            fusion_coverage: r.f64() * 1.6 - 0.3,
+            scheduler: *r.choice(&[
+                SchedulerKind::Default,
+                SchedulerKind::Persistent,
+                SchedulerKind::StreamK,
+            ]),
+            stages: (r.f64() * 6.0) as u64,
+            // 0.0 exercises the 0.01 floor
+            quality: if r.chance(0.1) { 0.0 } else { r.f64() },
+        }
+    }
+
+    fn rand_costs(r: &mut Pcg32) -> ProblemCosts {
+        let dim = |r: &mut Pcg32| *r.choice(&DIMS);
+        let dom = match (r.f64() * 3.0) as u64 {
+            0 => {
+                // at most one huge dim keeps both paths' u64 block products
+                // inside u64 (they overflow identically, but a debug-build
+                // panic would abort the property run)
+                let huge = r.chance(0.15);
+                DominantDims::MatmulMn {
+                    m: if huge { HUGE_DIM } else { dim(r) },
+                    n: if huge { 4095.min(dim(r)) } else { dim(r) },
+                    batch: 1 + (r.f64() * 1024.0) as u64,
+                }
+            }
+            1 => DominantDims::Attention {
+                s: if r.chance(0.15) { HUGE_DIM } else { dim(r) },
+                d: dim(r),
+                bh: 1 + (r.f64() * 1024.0) as u64,
+            },
+            _ => DominantDims::Other,
+        };
+        ProblemCosts {
+            flops: (r.f64() * 1e15).max(1.0),
+            fused_bytes: (r.f64() * 1e10).max(1.0),
+            unfused_bytes: (r.f64() * 4e10).max(1.0),
+            n_ops: 1.0 + (r.f64() * 8.0).floor(),
+            matmul_like: r.chance(0.6),
+            dom,
+        }
+    }
+
+    /// Satellite property test: random configs across every DominantDims
+    /// variant and every ConstraintTable arch row agree **bitwise** between
+    /// the compiled and uncompiled paths — including NaN-valued results
+    /// from dim = 0 quantization (compared by bit pattern, since NaN ≠
+    /// NaN).
+    #[test]
+    fn prop_compiled_matches_uncompiled_bitwise_across_arch_rows() {
+        for arch in ARCH_ROWS {
+            // tie the loop to the real constraint rows: each arch must
+            // have one, and it must be the row for this arch
+            assert_eq!(constraint_table(arch).arch, arch);
+            let model = PerfModel::new(gpu_for(arch));
+            prop::check(&format!("compiled-bitwise-{arch:?}"), 300, |r| {
+                let pc = rand_costs(r);
+                let compiled = CompiledCosts::from_costs(&model, &pc);
+                let cfgs: Vec<CandidateConfig> = (0..4).map(|_| rand_cfg(r)).collect();
+                let batch = ConfigBatch::from_configs(&cfgs);
+                let got = compiled.eval_batch(&batch);
+                for (cfg, &b) in cfgs.iter().zip(&got) {
+                    let want = model.candidate_ms_with(&pc, cfg);
+                    assert_eq!(
+                        want.to_bits(),
+                        b.to_bits(),
+                        "batch: {want} vs {b} for {cfg:?} / {pc:?} on {arch:?}"
+                    );
+                    let one = compiled.candidate_ms(cfg);
+                    assert_eq!(
+                        want.to_bits(),
+                        one.to_bits(),
+                        "eval_one: {want} vs {one} for {cfg:?} / {pc:?} on {arch:?}"
+                    );
+                }
+            });
+        }
+    }
+
+    /// dim = 0 with a real block produces NaN (0/0) in *both* paths, with
+    /// the same bit pattern; block-boundary dims stay finite and exact.
+    #[test]
+    fn zero_dim_quantization_is_nan_in_both_paths() {
+        let model = PerfModel::new(H100_SXM.clone());
+        let pc = ProblemCosts {
+            flops: 1e12,
+            fused_bytes: 1e9,
+            unfused_bytes: 2e9,
+            n_ops: 2.0,
+            matmul_like: true,
+            dom: DominantDims::MatmulMn { m: 0, n: 128, batch: 1 },
+        };
+        let cfg = CandidateConfig::library((128, 128, 64), DType::Fp16);
+        let want = model.candidate_ms_with(&pc, &cfg);
+        let got = CompiledCosts::from_costs(&model, &pc).candidate_ms(&cfg);
+        assert!(want.is_nan() && got.is_nan(), "{want} vs {got}");
+        assert_eq!(want.to_bits(), got.to_bits());
+    }
+
+    /// u64::MAX dims survive the guards without overflow when the block
+    /// products stay in range (unit tile, single SM), identically on both
+    /// paths.
+    #[test]
+    fn u64_max_dim_guards_agree() {
+        let mut gpu = H100_SXM.clone();
+        gpu.sm_count = 1;
+        let model = PerfModel::new(gpu);
+        let pc = ProblemCosts {
+            flops: 1e12,
+            fused_bytes: 1e9,
+            unfused_bytes: 2e9,
+            n_ops: 1.0,
+            matmul_like: true,
+            dom: DominantDims::MatmulMn { m: u64::MAX, n: 1, batch: 1 },
+        };
+        let cfg = CandidateConfig::library((1, 1, 1), DType::Fp32);
+        let want = model.candidate_ms_with(&pc, &cfg);
+        let got = CompiledCosts::from_costs(&model, &pc).candidate_ms(&cfg);
+        assert!(want.is_finite());
+        assert_eq!(want.to_bits(), got.to_bits());
+    }
+
+    #[test]
+    fn compiled_cache_covers_suite_and_matches_scalar() {
+        let problems = suite();
+        let model = PerfModel::new(H100_SXM.clone());
+        let compiled = CompiledCostModel::compile(&model, &problems);
+        assert_eq!(compiled.len(), problems.len());
+        let cfg = CandidateConfig::library((128, 64, 32), DType::Bf16);
+        for (i, p) in problems.iter().enumerate() {
+            let want = model.candidate_ms(p, &cfg);
+            let got = compiled.problem(i).candidate_ms(&cfg);
+            assert_eq!(want.to_bits(), got.to_bits(), "{}", p.id);
+        }
+        assert!(compiled.get(problems.len()).is_none());
+    }
+
+    #[test]
+    fn config_batch_reuse_keeps_columns_aligned() {
+        let mut b = ConfigBatch::new();
+        let a = CandidateConfig::library((128, 128, 64), DType::Fp16);
+        let mut c = CandidateConfig::library((256, 128, 32), DType::Fp32);
+        c.scheduler = SchedulerKind::StreamK;
+        c.fused_epilogue = false;
+        c.fusion_coverage = 0.4;
+        b.extend(&[a.clone(), c.clone()]);
+        assert_eq!(b.len(), 2);
+        b.clear();
+        assert!(b.is_empty());
+        b.push(&c);
+        assert_eq!(b.len(), 1);
+        let problems = suite();
+        let model = PerfModel::new(H100_SXM.clone());
+        let cc = CompiledCosts::lower(&model, &problems[0]);
+        let got = cc.eval_batch(&b);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].to_bits(), model.candidate_ms(&problems[0], &c).to_bits());
+    }
+
+    #[test]
+    #[should_panic(expected = "output slice must match")]
+    fn eval_into_rejects_mismatched_output() {
+        let problems = suite();
+        let model = PerfModel::new(H100_SXM.clone());
+        let cc = CompiledCosts::lower(&model, &problems[0]);
+        let b = ConfigBatch::from_configs(&[CandidateConfig::library((64, 64, 32), DType::Fp32)]);
+        let mut out = [0.0; 2];
+        cc.eval_into(&b, &mut out);
+    }
+}

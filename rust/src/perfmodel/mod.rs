@@ -11,8 +11,10 @@
 //! pipelines hide latency. Correctness of accepted kernels is established
 //! separately by really executing the AOT artifacts ([`crate::runtime`]).
 
+pub mod compiled;
 pub mod ncu;
 
+pub use compiled::{CompiledCostModel, CompiledCosts, ConfigBatch};
 pub use ncu::NcuProfile;
 
 use crate::dsl::ir::TileScheduler;
@@ -167,7 +169,7 @@ impl CandidateConfig {
 
 /// Per-kernel launch overhead (µs) — the fixed cost every extra unfused
 /// kernel pays; visible on small problems.
-const LAUNCH_OVERHEAD_US: f64 = 3.0;
+pub(crate) const LAUNCH_OVERHEAD_US: f64 = 3.0;
 
 /// The analytical model.
 #[derive(Debug, Clone)]
@@ -238,7 +240,7 @@ impl PerfModel {
     }
 
     /// Pipeline-depth efficiency: shallow pipelines cannot hide HBM latency.
-    fn stage_efficiency(stages: u64) -> f64 {
+    pub(crate) fn stage_efficiency(stages: u64) -> f64 {
         match stages {
             0 | 1 => 0.72,
             2 => 0.90,
@@ -252,7 +254,7 @@ impl PerfModel {
     /// problem instead of once per config (ADR-003) — the scalar path goes
     /// through the same helper, so batch and scalar results are
     /// bit-identical by construction.
-    fn problem_costs(&self, problem: &Problem) -> ProblemCosts {
+    pub(crate) fn problem_costs(&self, problem: &Problem) -> ProblemCosts {
         ProblemCosts {
             flops: problem.flops() as f64,
             fused_bytes: problem.fused_bytes() as f64,
@@ -284,8 +286,12 @@ impl PerfModel {
         }
     }
 
-    /// `candidate_ms` body over hoisted per-problem terms.
-    fn candidate_ms_with(&self, costs: &ProblemCosts, cfg: &CandidateConfig) -> f64 {
+    /// `candidate_ms` body over hoisted per-problem terms. This is the
+    /// *generic* (uncompiled) evaluator: it re-matches [`DominantDims`] and
+    /// re-reads GPU peaks per call. [`compiled::CompiledCosts`] lowers the
+    /// same arithmetic into a branch-free form and must stay bit-identical
+    /// to it — treat this body as the specification (ADR-006).
+    pub(crate) fn candidate_ms_with(&self, costs: &ProblemCosts, cfg: &CandidateConfig) -> f64 {
         // Bytes: interpolate between fully-fused best case and eager
         // per-op traffic with fusion coverage.
         let cov = cfg.fusion_coverage.clamp(0.0, 1.0);
@@ -322,15 +328,18 @@ impl PerfModel {
         self.candidate_ms_with(&self.problem_costs(problem), cfg)
     }
 
-    /// Vectorized [`Self::candidate_ms`] over a config batch: the
-    /// per-problem roofline/fusion/dominant-op terms are hoisted out of the
-    /// per-config loop, so the MANTIS Nominate round and the move-selection
-    /// policy cost one problem analysis per batch instead of one per
-    /// hypothesis. Results are element-wise bit-identical to the scalar
-    /// call (a property test asserts it).
+    /// Vectorized [`Self::candidate_ms`] over a config batch: lowers the
+    /// problem once ([`compiled::CompiledCosts`]) and evaluates the configs
+    /// through the branch-free compiled path, so the MANTIS Nominate round
+    /// and the move-selection policy cost one problem analysis per batch
+    /// instead of one per hypothesis. Results are element-wise
+    /// bit-identical to the scalar call (a property test asserts it).
+    ///
+    /// This entry point re-lowers per call — fine for one-shot callers.
+    /// Anything evaluating the same problem repeatedly should hold a
+    /// [`CompiledCostModel`] and skip the lowering (ADR-006).
     pub fn candidate_ms_batch(&self, problem: &Problem, cfgs: &[CandidateConfig]) -> Vec<f64> {
-        let costs = self.problem_costs(problem);
-        cfgs.iter().map(|cfg| self.candidate_ms_with(&costs, cfg)).collect()
+        CompiledCosts::lower(self, problem).eval_batch(&ConfigBatch::from_configs(cfgs))
     }
 
     /// Candidate runtime with measurement noise (the paper's NCU timings
@@ -358,13 +367,13 @@ pub fn measurement_noise(at: &StreamPath) -> f64 {
 /// `candidate_ms` terms that depend only on the problem (see
 /// [`PerfModel::candidate_ms_batch`]).
 #[derive(Debug, Clone)]
-struct ProblemCosts {
-    flops: f64,
-    fused_bytes: f64,
-    unfused_bytes: f64,
-    n_ops: f64,
-    matmul_like: bool,
-    dom: DominantDims,
+pub(crate) struct ProblemCosts {
+    pub(crate) flops: f64,
+    pub(crate) fused_bytes: f64,
+    pub(crate) unfused_bytes: f64,
+    pub(crate) n_ops: f64,
+    pub(crate) matmul_like: bool,
+    pub(crate) dom: DominantDims,
 }
 
 /// The dominant op's tiling-relevant dimensions, extracted once per
@@ -372,7 +381,7 @@ struct ProblemCosts {
 /// `tile_efficiency`/`wave_efficiency` pair into data, so the per-config
 /// loop runs no op-graph inspection at all.
 #[derive(Debug, Clone, Copy)]
-enum DominantDims {
+pub(crate) enum DominantDims {
     /// GEMM-shaped: tile quantization over (m, n); `batch` independent
     /// block grids (1 for plain GEMM / convs, b for batched, groups for
     /// grouped).
@@ -421,7 +430,7 @@ impl DominantDims {
 }
 
 /// Fraction of `ceil(dim/block)*block` that is useful.
-fn quantization_eff(dim: u64, block: u64) -> f64 {
+pub(crate) fn quantization_eff(dim: u64, block: u64) -> f64 {
     if block == 0 {
         return 1.0;
     }

@@ -365,7 +365,8 @@ mod tests {
         let problems = suite();
         let sols: Vec<_> = problems.iter().map(|p| analyze(p, &H100_SXM)).collect();
         let model = PerfModel::new(H100_SXM.clone());
-        let env = Env::new(&model, &problems, &sols);
+        let compiled = crate::perfmodel::CompiledCostModel::compile(&model, &problems);
+        let env = Env::new(&model, &problems, &sols, &compiled);
         let spec = VariantSpec::new(ControllerKind::Mi, true, ModelTier::Max);
         let runs: Vec<_> = (0..12).map(|i| run_problem(&env, &spec, i, 5)).collect();
         let log = RunLog {

@@ -115,7 +115,8 @@ fn random_requests(rng: &mut Pcg32, n_problems: usize) -> Vec<EvalRequest> {
 #[test]
 fn prop_eval_batch_equals_mapped_scalar_for_all_evaluators() {
     let bench = Bench::new();
-    let analytic = AnalyticEvaluator::new(&bench.model, &bench.problems, &bench.sols);
+    let analytic =
+        AnalyticEvaluator::new(&bench.model, &bench.problems, &bench.sols, &bench.compiled);
     let pjrt = PjrtEvaluator::open("artifacts", bench.problems.clone());
     prop::check("eval-batch-vs-scalar", 40, |rng| {
         let reqs = random_requests(rng, bench.problems.len());

@@ -9,7 +9,7 @@ use ucutlass_repro::eval::{EvalRequest, Oracle};
 use ucutlass_repro::integrity::IntegrityPipeline;
 use ucutlass_repro::kernelbench::{find, suite};
 use ucutlass_repro::metrics;
-use ucutlass_repro::perfmodel::{CandidateConfig, PerfModel};
+use ucutlass_repro::perfmodel::{CandidateConfig, CompiledCostModel, PerfModel};
 use ucutlass_repro::scheduler::{self, Policy};
 use ucutlass_repro::sol::{analyze, SolAnalysis, H100_SXM};
 use ucutlass_repro::util::prop;
@@ -19,17 +19,20 @@ struct Fixture {
     model: PerfModel,
     problems: Vec<ucutlass_repro::kernelbench::Problem>,
     sols: Vec<SolAnalysis>,
+    compiled: CompiledCostModel,
 }
 
 impl Fixture {
     fn new() -> Self {
         let problems = suite();
         let sols = problems.iter().map(|p| analyze(p, &H100_SXM)).collect();
-        Fixture { model: PerfModel::new(H100_SXM.clone()), problems, sols }
+        let model = PerfModel::new(H100_SXM.clone());
+        let compiled = CompiledCostModel::compile(&model, &problems);
+        Fixture { model, problems, sols, compiled }
     }
 
     fn env(&self) -> Env<'_> {
-        Env::new(&self.model, &self.problems, &self.sols)
+        Env::new(&self.model, &self.problems, &self.sols, &self.compiled)
     }
 
     fn ev(&self) -> Oracle<'_> {

@@ -12,7 +12,7 @@ use ucutlass_repro::exec;
 use ucutlass_repro::experiments::Bench;
 use ucutlass_repro::kernelbench::suite;
 use ucutlass_repro::mantis::MantisConfig;
-use ucutlass_repro::perfmodel::PerfModel;
+use ucutlass_repro::perfmodel::{CompiledCostModel, PerfModel};
 use ucutlass_repro::sol::{analyze, SolAnalysis, H100_SXM};
 
 fn tmp(name: &str) -> std::path::PathBuf {
@@ -91,15 +91,16 @@ fn record_replay_strict_miss_of_an_uncovered_run_is_in_band() {
     let problems = suite();
     let sols: Vec<SolAnalysis> = problems.iter().map(|p| analyze(p, &H100_SXM)).collect();
     let model = PerfModel::new(H100_SXM.clone());
+    let compiled = CompiledCostModel::compile(&model, &problems);
 
     let rec = RecordingEvaluator::create(OwnedAnalytic::new(), &path).unwrap();
-    let env = Env::new(&model, &problems, &sols).with_oracle(Some(&rec));
+    let env = Env::new(&model, &problems, &sols, &compiled).with_oracle(Some(&rec));
     let recorded = run_problem(&env, &spec, 0, 7);
     drop(rec);
 
     let trace = TraceEvaluator::load(&path).unwrap();
     let monitor = trace.monitor();
-    let env = Env::new(&model, &problems, &sols).with_oracle(Some(&trace));
+    let env = Env::new(&model, &problems, &sols, &compiled).with_oracle(Some(&trace));
     // same seed: covered, bit-identical
     assert_eq!(run_problem(&env, &spec, 0, 7), recorded);
     assert_eq!(monitor.misses(), 0);
