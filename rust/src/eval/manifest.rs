@@ -45,6 +45,25 @@ use super::{EvalKey, EvalRequest, EvalResponse, Evaluator};
 /// instead of a `bad response` parse failure or a silently skewed merge.
 pub const MANIFEST_VERSION: u64 = 2;
 
+/// Upper bound on a serialized manifest/shard artifact this build will
+/// parse. A full-suite shard is a few MB; 64 MiB is far above any
+/// legitimate artifact while still rejecting a runaway (or hostile) input
+/// before `Json::parse` materializes it. The fleet protocol derives its
+/// line cap from this same bound (ADR-007), so "too big for the wire" and
+/// "too big for the parser" are one limit.
+pub const MAX_ARTIFACT_BYTES: usize = 64 << 20;
+
+/// Shared guard for every `parse(text)` entry point in this module.
+fn check_artifact_len(text: &str, what: &str) -> Result<(), String> {
+    if text.len() > MAX_ARTIFACT_BYTES {
+        return Err(format!(
+            "{what}: artifact is {} bytes, over the {MAX_ARTIFACT_BYTES}-byte limit",
+            text.len()
+        ));
+    }
+    Ok(())
+}
+
 /// A JSON-serializable list of pending evaluation requests.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkManifest {
@@ -65,6 +84,7 @@ impl WorkManifest {
     }
 
     pub fn parse(text: &str) -> Result<WorkManifest, String> {
+        check_artifact_len(text, "manifest")?;
         let j = Json::parse(text).map_err(|e| e.to_string())?;
         let version = j.get("version").and_then(|v| v.as_u64()).unwrap_or(1);
         if version != MANIFEST_VERSION {
@@ -103,6 +123,7 @@ impl ResponseShard {
     }
 
     pub fn parse(text: &str) -> Result<ResponseShard, String> {
+        check_artifact_len(text, "shard")?;
         let j = Json::parse(text).map_err(|e| e.to_string())?;
         let version = j.get("version").and_then(|v| v.as_u64()).unwrap_or(1);
         if version != MANIFEST_VERSION {
@@ -111,19 +132,38 @@ impl ResponseShard {
                  {MANIFEST_VERSION}; re-evaluate the shard with this build)"
             ));
         }
-        Ok(ResponseShard {
-            index: j.get("index").and_then(|v| v.as_u64()).ok_or("shard: missing index")?
-                as usize,
-            of: j.get("of").and_then(|v| v.as_u64()).ok_or("shard: missing of")? as usize,
-            responses: j
-                .get("responses")
-                .and_then(|r| r.as_arr())
-                .ok_or("shard: missing responses")?
-                .iter()
-                .map(|r| EvalResponse::from_json(r).ok_or_else(|| format!("bad response: {r}")))
-                .collect::<Result<Vec<_>, String>>()?,
-        })
+        let index =
+            j.get("index").and_then(|v| v.as_u64()).ok_or("shard: missing index")? as usize;
+        let of = j.get("of").and_then(|v| v.as_u64()).ok_or("shard: missing of")? as usize;
+        check_shard_shape(index, of)?;
+        let responses = j
+            .get("responses")
+            .and_then(|r| r.as_arr())
+            .ok_or("shard: missing responses")?
+            .iter()
+            .map(|r| EvalResponse::from_json(r).ok_or_else(|| format!("bad response: {r}")))
+            .collect::<Result<Vec<_>, String>>()?;
+        let mut seen = HashSet::with_capacity(responses.len());
+        for r in &responses {
+            if !seen.insert(r.key) {
+                return Err(format!("shard: duplicate response key {}", r.key));
+            }
+        }
+        Ok(ResponseShard { index, of, responses })
     }
+}
+
+/// Shape validation every shard parse shares: `index` must name one of
+/// `of >= 1` shards. Out-of-range artifacts are hostile or corrupt — an
+/// in-band error, never a skewed merge.
+fn check_shard_shape(index: usize, of: usize) -> Result<(), String> {
+    if of == 0 {
+        return Err("shard: of must be >= 1".into());
+    }
+    if index >= of {
+        return Err(format!("shard: index {index} out of range for of {of}"));
+    }
+    Ok(())
 }
 
 /// Stable shard assignment: the interned request key mod `of` (ADR-005;
@@ -136,16 +176,23 @@ pub fn shard_assignment(key: EvalKey, of: usize) -> usize {
 }
 
 /// Evaluate the manifest subset assigned to shard `index` of `of`.
+/// Repeated manifest requests are answered once (first occurrence): the
+/// emitted shard carries one response per key, matching the duplicate-key
+/// rejection in [`ResponseShard::parse`] so a round-tripped shard is
+/// always re-readable. [`merge`] serves duplicate requests from the one
+/// stored response, so merged output is unaffected.
 pub fn evaluate_shard<E: Evaluator>(
     inner: &E,
     manifest: &WorkManifest,
     index: usize,
     of: usize,
 ) -> ResponseShard {
+    let mut seen = HashSet::new();
     let assigned: Vec<EvalRequest> = manifest
         .requests
         .iter()
         .filter(|r| shard_assignment(r.eval_key(), of) == index)
+        .filter(|r| seen.insert(r.eval_key()))
         .cloned()
         .collect();
     ResponseShard { index, of, responses: inner.eval_batch(&assigned) }
@@ -389,7 +436,11 @@ pub struct SuiteShard {
 impl SuiteShard {
     pub fn to_json(&self) -> Json {
         let mut o = Json::obj();
-        o.set("work", self.work.to_json()).set("index", self.index).set("of", self.of).set(
+        o.set("version", MANIFEST_VERSION)
+            .set("work", self.work.to_json())
+            .set("index", self.index)
+            .set("of", self.of)
+            .set(
             "results",
             Json::Arr(
                 self.results
@@ -409,14 +460,34 @@ impl SuiteShard {
     }
 
     pub fn parse(text: &str) -> Result<SuiteShard, String> {
+        check_artifact_len(text, "shard")?;
         let j = Json::parse(text).map_err(|e| e.to_string())?;
+        Self::from_json(&j)
+    }
+
+    /// Parse an already-decoded shard object — the form the fleet protocol
+    /// embeds in `result` messages (ADR-007). Same gates as [`parse`]
+    /// minus the text-length cap (the wire layer enforces its own).
+    pub fn from_json(j: &Json) -> Result<SuiteShard, String> {
+        // Suite shards were introduced unversioned; treat a missing field
+        // as version 1 and reject it, same convention as WorkManifest —
+        // a mixed-version fleet must fail loudly, not merge skewed work.
+        let version = j.get("version").and_then(|v| v.as_u64()).unwrap_or(1);
+        if version != MANIFEST_VERSION {
+            return Err(format!(
+                "shard: unsupported version {version} (this build reads version \
+                 {MANIFEST_VERSION}; re-run the shard with this build)"
+            ));
+        }
         let work = SuiteWork::from_json(j.get("work").ok_or("shard: missing work")?)?;
         let index =
             j.get("index").and_then(|v| v.as_u64()).ok_or("shard: missing index")? as usize;
         let of = j.get("of").and_then(|v| v.as_u64()).ok_or("shard: missing of")? as usize;
+        check_shard_shape(index, of)?;
         // one plan cache across the whole shard: repeated configurations
         // reconstruct their KernelPlan once
         let mut plans = crate::dsl::PlanCache::new();
+        let mut seen = HashSet::new();
         let results = j
             .get("results")
             .and_then(|r| r.as_arr())
@@ -428,6 +499,9 @@ impl SuiteShard {
                     .and_then(|k| k.as_str())
                     .ok_or("task result: missing key")?
                     .to_string();
+                if !seen.insert(key.clone()) {
+                    return Err(format!("shard: duplicate task {key}"));
+                }
                 let runs = t
                     .get("runs")
                     .and_then(|r| r.as_arr())
@@ -464,50 +538,117 @@ pub fn suite_shard(bench: &Bench, work: &SuiteWork, index: usize, of: usize) -> 
     SuiteShard { work: work.clone(), index, of, results }
 }
 
-/// Merge suite shards into the full per-variant [`RunLog`]s, in variant
-/// order with runs in problem order — field-for-field identical to
-/// `exec::eval_variants(bench, &work, seed, 1)` (the CI golden test).
-pub fn suite_merge(shards: &[SuiteShard]) -> Result<Vec<RunLog>, String> {
-    let first = shards.first().ok_or("no shards to merge")?;
-    let work_json = first.work.to_json().to_string();
-    let mut by_key: BTreeMap<String, Vec<ProblemRun>> = BTreeMap::new();
-    for s in shards {
-        if s.of != first.of {
-            return Err(format!("shard count mismatch: {} vs {}", s.of, first.of));
+/// Incremental suite merger: shards land one at a time (in any order, from
+/// any worker) and the final logs are assembled once every shard index is
+/// present. This is the state the fleet coordinator carries while workers
+/// stream results in (ADR-007); [`suite_merge`] is the batch face over the
+/// same code, so the fleet inherits the shard/merge golden property — its
+/// output is whatever `suite_merge` of the same shards would produce,
+/// which is field-for-field the single-process `eval_variants` result —
+/// by construction rather than by a parallel implementation.
+pub struct SuiteMerge {
+    work: SuiteWork,
+    work_json: String,
+    of: usize,
+    by_key: BTreeMap<String, Vec<ProblemRun>>,
+    landed: HashSet<usize>,
+}
+
+impl SuiteMerge {
+    /// Start a merge for `of >= 1` shards of `work`.
+    pub fn new(work: &SuiteWork, of: usize) -> SuiteMerge {
+        SuiteMerge {
+            work: work.clone(),
+            work_json: work.to_json().to_string(),
+            of: of.max(1),
+            by_key: BTreeMap::new(),
+            landed: HashSet::new(),
         }
-        if s.work.to_json().to_string() != work_json {
-            return Err(format!("shard {} belongs to a different job", s.index));
+    }
+
+    /// Has shard `index` already been merged? (The coordinator's duplicate
+    /// filter: first completion wins, later copies are discarded.)
+    pub fn landed(&self, index: usize) -> bool {
+        self.landed.contains(&index)
+    }
+
+    /// Every shard index present?
+    pub fn complete(&self) -> bool {
+        self.landed.len() == self.of
+    }
+
+    /// Shard indices still outstanding, ascending.
+    pub fn missing(&self) -> Vec<usize> {
+        (0..self.of).filter(|i| !self.landed.contains(i)).collect()
+    }
+
+    /// Merge one shard; returns the number of task results it landed.
+    /// Rejects shards from a different job, with a different shard count,
+    /// already-merged indices, and duplicate task keys — all in-band.
+    pub fn add(&mut self, shard: &SuiteShard) -> Result<usize, String> {
+        if shard.of != self.of {
+            return Err(format!("shard count mismatch: {} vs {}", shard.of, self.of));
         }
-        for r in &s.results {
-            if by_key.insert(r.key.clone(), r.runs.clone()).is_some() {
+        check_shard_shape(shard.index, shard.of)?;
+        if shard.work.to_json().to_string() != self.work_json {
+            return Err(format!("shard {} belongs to a different job", shard.index));
+        }
+        if !self.landed.insert(shard.index) {
+            return Err(format!("shard {} already merged", shard.index));
+        }
+        for r in &shard.results {
+            if self.by_key.insert(r.key.clone(), r.runs.clone()).is_some() {
                 return Err(format!("duplicate task {}", r.key));
             }
         }
+        Ok(shard.results.len())
     }
-    let tasks = exec::suite_tasks(&first.work.work, first.work.problems);
-    let mut logs = Vec::with_capacity(first.work.work.len());
-    for (v, (spec, _)) in first.work.work.iter().enumerate() {
-        let mut runs: Vec<ProblemRun> = Vec::new();
-        for t in tasks.iter().filter(|t| t.variant == v) {
-            let got = by_key
-                .remove(&t.key())
-                .ok_or_else(|| format!("missing task {} (incomplete shard set?)", t.key()))?;
-            match t.problem {
-                Some(_) => {
-                    if got.len() != 1 {
-                        return Err(format!("task {}: expected 1 run, got {}", t.key(), got.len()));
+
+    /// Assemble the full per-variant [`RunLog`]s, in variant order with
+    /// runs in problem order. Missing or unexpected tasks are errors.
+    pub fn finish(mut self) -> Result<Vec<RunLog>, String> {
+        let tasks = exec::suite_tasks(&self.work.work, self.work.problems);
+        let mut logs = Vec::with_capacity(self.work.work.len());
+        for (v, (spec, _)) in self.work.work.iter().enumerate() {
+            let mut runs: Vec<ProblemRun> = Vec::new();
+            for t in tasks.iter().filter(|t| t.variant == v) {
+                let got = self.by_key.remove(&t.key()).ok_or_else(|| {
+                    format!("missing task {} (incomplete shard set?)", t.key())
+                })?;
+                match t.problem {
+                    Some(_) => {
+                        if got.len() != 1 {
+                            return Err(format!(
+                                "task {}: expected 1 run, got {}",
+                                t.key(),
+                                got.len()
+                            ));
+                        }
+                        runs.extend(got);
                     }
-                    runs.extend(got);
+                    None => runs = got,
                 }
-                None => runs = got,
             }
+            logs.push(exec::assemble_log(spec, runs));
         }
-        logs.push(exec::assemble_log(spec, runs));
+        if let Some(k) = self.by_key.keys().next() {
+            return Err(format!("unexpected task {k} not in the job's task list"));
+        }
+        Ok(logs)
     }
-    if let Some(k) = by_key.keys().next() {
-        return Err(format!("unexpected task {k} not in the job's task list"));
+}
+
+/// Merge suite shards into the full per-variant [`RunLog`]s, in variant
+/// order with runs in problem order — field-for-field identical to
+/// `exec::eval_variants(bench, &work, seed, 1)` (the CI golden test).
+/// Batch face of [`SuiteMerge`].
+pub fn suite_merge(shards: &[SuiteShard]) -> Result<Vec<RunLog>, String> {
+    let first = shards.first().ok_or("no shards to merge")?;
+    let mut m = SuiteMerge::new(&first.work, first.of);
+    for s in shards {
+        m.add(s)?;
     }
-    Ok(logs)
+    m.finish()
 }
 
 #[cfg(test)]
@@ -619,6 +760,104 @@ mod tests {
         assert_eq!(WorkManifest::parse(&m.to_json().to_string()).unwrap(), m);
         let s = ResponseShard { index: 1, of: 3, responses: Vec::new() };
         assert_eq!(ResponseShard::parse(&s.to_json().to_string()).unwrap(), s);
+    }
+
+    #[test]
+    fn evaluate_shard_answers_duplicate_requests_once() {
+        let bench = Bench::new();
+        let ev =
+            AnalyticEvaluator::new(&bench.model, &bench.problems, &bench.sols, &bench.compiled);
+        let mut reqs = requests();
+        reqs.push(reqs[0].clone());
+        reqs.push(reqs[3].clone());
+        let manifest = WorkManifest::new(reqs.clone());
+        let shards: Vec<ResponseShard> = (0..2)
+            .map(|i| {
+                let s = evaluate_shard(&ev, &manifest, i, 2);
+                // one response per key → the shard re-parses cleanly
+                ResponseShard::parse(&s.to_json().to_string()).unwrap()
+            })
+            .collect();
+        // and the merge still answers every request, duplicates included
+        let merged = merge(&manifest, &shards).unwrap();
+        assert_eq!(merged, ev.eval_batch(&reqs));
+    }
+
+    #[test]
+    fn response_shard_parse_rejects_bad_shape_and_duplicates() {
+        let err = ResponseShard::parse(
+            r#"{"version":2,"index":3,"of":2,"responses":[]}"#,
+        )
+        .unwrap_err();
+        assert!(err.contains("out of range"), "got: {err}");
+        let err =
+            ResponseShard::parse(r#"{"version":2,"index":0,"of":0,"responses":[]}"#).unwrap_err();
+        assert!(err.contains("of must be"), "got: {err}");
+        // duplicate response keys are hostile/corrupt, not mergeable
+        let bench = Bench::new();
+        let ev =
+            AnalyticEvaluator::new(&bench.model, &bench.problems, &bench.sols, &bench.compiled);
+        let manifest = WorkManifest::new(requests());
+        let mut s = evaluate_shard(&ev, &manifest, 0, 1);
+        s.responses.push(s.responses[0].clone());
+        let err = ResponseShard::parse(&s.to_json().to_string()).unwrap_err();
+        assert!(err.contains("duplicate response key"), "got: {err}");
+    }
+
+    #[test]
+    fn incremental_suite_merge_is_order_independent() {
+        use crate::agent::controller::{ControllerKind, VariantSpec};
+        use crate::agent::ModelTier;
+        let bench = Bench::new();
+        let work = SuiteWork::single(
+            VariantSpec::new(ControllerKind::Mi, true, ModelTier::Mini),
+            None,
+            7,
+            bench.problems.len(),
+        );
+        let n = 3;
+        let shards: Vec<SuiteShard> = (0..n).map(|i| suite_shard(&bench, &work, i, n)).collect();
+        let batch = suite_merge(&shards).unwrap();
+        // land the shards out of order, checking progress as they arrive
+        let mut m = SuiteMerge::new(&work, n);
+        assert_eq!(m.missing(), vec![0, 1, 2]);
+        for &i in &[2usize, 0, 1] {
+            assert!(!m.landed(i));
+            m.add(&shards[i]).unwrap();
+            assert!(m.landed(i));
+        }
+        assert!(m.complete());
+        assert_eq!(m.finish().unwrap(), batch);
+        // duplicate shard indices are rejected in-band
+        let mut m = SuiteMerge::new(&work, n);
+        m.add(&shards[0]).unwrap();
+        let err = m.add(&shards[0]).unwrap_err();
+        assert!(err.contains("already merged"), "got: {err}");
+    }
+
+    #[test]
+    fn suite_shard_version_gate_rejects_unversioned_artifacts() {
+        let bench = Bench::new();
+        let work = SuiteWork::single(
+            crate::agent::controller::VariantSpec::new(
+                crate::agent::controller::ControllerKind::Mi,
+                false,
+                crate::agent::ModelTier::Mini,
+            ),
+            None,
+            1,
+            bench.problems.len(),
+        );
+        let shard = suite_shard(&bench, &work, 0, bench.problems.len());
+        let mut j = shard.to_json();
+        // current artifact round-trips …
+        assert_eq!(SuiteShard::parse(&j.to_string()).unwrap(), shard);
+        // … an unversioned (pre-fleet) artifact is version 1 and rejected
+        if let Json::Obj(m) = &mut j {
+            m.remove("version");
+        }
+        let err = SuiteShard::parse(&j.to_string()).unwrap_err();
+        assert!(err.contains("version 1"), "got: {err}");
     }
 
     #[test]

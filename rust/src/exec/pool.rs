@@ -15,6 +15,8 @@
 //! worker count, stealing order, and thread interleaving.
 
 use std::collections::VecDeque;
+use std::panic::{catch_unwind, resume_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Mutex;
 
 /// Resolve a requested job count: `0` means "use all available cores".
@@ -28,7 +30,15 @@ pub fn effective_jobs(requested: usize) -> usize {
 
 /// Apply `f` to every index in `0..n` using up to `jobs` worker threads
 /// and return the results in index order. `jobs <= 1` runs inline with no
-/// threads (the serial reference path). Panics in `f` propagate.
+/// threads (the serial reference path).
+///
+/// Panic safety: a panicking task cannot deadlock or abort the pool.
+/// Each task runs under `catch_unwind`; the first caught panic raises an
+/// abort flag so workers stop pulling new tasks, every thread is still
+/// joined (no detached worker outlives the scope), and the panic of the
+/// *lowest* panicked task index is re-raised on the calling thread with
+/// its original payload — so when one bad task is the cause, the caller
+/// always sees that task's panic, not a per-interleaving coin flip.
 pub fn parallel_map<R, F>(jobs: usize, n: usize, f: F) -> Vec<R>
 where
     R: Send,
@@ -45,14 +55,18 @@ where
         .collect();
     let queues = &queues;
     let f = &f;
+    let abort = &AtomicBool::new(false);
 
+    type Panic = Box<dyn std::any::Any + Send + 'static>;
     let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
+    let mut first_panic: Option<(usize, Panic)> = None;
     std::thread::scope(|s| {
         let handles: Vec<_> = (0..jobs)
             .map(|w| {
                 s.spawn(move || {
                     let mut done: Vec<(usize, R)> = Vec::new();
-                    loop {
+                    let mut panicked: Option<(usize, Panic)> = None;
+                    while !abort.load(Ordering::Relaxed) {
                         // own queue first (front: cache-friendly order)…
                         let mut task = queues[w].lock().unwrap().pop_front();
                         // …then steal from the back of the first non-empty
@@ -68,20 +82,41 @@ where
                             }
                         }
                         match task {
-                            Some(i) => done.push((i, f(i))),
+                            // `f` is shared by reference across tasks, so it
+                            // is not statically unwind-safe; we never call it
+                            // again after a panic (abort flag + re-raise), so
+                            // a torn invariant cannot be observed.
+                            Some(i) => match catch_unwind(AssertUnwindSafe(|| f(i))) {
+                                Ok(r) => done.push((i, r)),
+                                Err(p) => {
+                                    abort.store(true, Ordering::Relaxed);
+                                    panicked = Some((i, p));
+                                    break;
+                                }
+                            },
                             None => break,
                         }
                     }
-                    done
+                    (done, panicked)
                 })
             })
             .collect();
         for h in handles {
-            for (i, r) in h.join().expect("pool worker panicked") {
+            let (done, panicked) = h.join().expect("pool worker died outside a task");
+            for (i, r) in done {
                 out[i] = Some(r);
+            }
+            if let Some((i, p)) = panicked {
+                match &first_panic {
+                    Some((j, _)) if *j <= i => {}
+                    _ => first_panic = Some((i, p)),
+                }
             }
         }
     });
+    if let Some((_, payload)) = first_panic {
+        resume_unwind(payload);
+    }
     out.into_iter().map(|r| r.expect("every task index produces a result")).collect()
 }
 
@@ -152,5 +187,72 @@ mod tests {
     fn effective_jobs_resolution() {
         assert_eq!(effective_jobs(3), 3);
         assert!(effective_jobs(0) >= 1);
+    }
+
+    /// Silence the default panic-hook stderr spam while a test
+    /// deliberately panics inside pool tasks; restores the hook on drop.
+    struct QuietPanics;
+    impl QuietPanics {
+        fn new() -> QuietPanics {
+            std::panic::set_hook(Box::new(|_| {}));
+            QuietPanics
+        }
+    }
+    impl Drop for QuietPanics {
+        fn drop(&mut self) {
+            let _ = std::panic::take_hook();
+        }
+    }
+
+    #[test]
+    fn panicking_task_propagates_original_payload() {
+        let _quiet = QuietPanics::new();
+        for jobs in [2, 4, 9] {
+            let r = std::panic::catch_unwind(|| {
+                parallel_map(jobs, 200, |i| {
+                    if i == 137 {
+                        panic!("task {i} exploded");
+                    }
+                    i
+                })
+            });
+            let payload = r.expect_err("the task panic must propagate to the caller");
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .expect("panic! with args carries a String payload");
+            assert_eq!(msg, "task 137 exploded", "jobs={jobs}");
+        }
+    }
+
+    #[test]
+    fn concurrent_panics_surface_a_genuine_task_panic() {
+        // several tasks panic concurrently; whichever panics are caught
+        // before the abort flag stops the pool, the caller must see the
+        // original payload of a task that actually panicked
+        let _quiet = QuietPanics::new();
+        for _ in 0..10 {
+            let r = std::panic::catch_unwind(|| {
+                parallel_map(4, 64, |i| {
+                    if i % 13 == 5 {
+                        panic!("boom {i}");
+                    }
+                    i
+                })
+            });
+            let payload = r.expect_err("must propagate");
+            let msg = payload.downcast_ref::<String>().cloned().unwrap();
+            let idx: usize = msg.strip_prefix("boom ").unwrap().parse().unwrap();
+            assert_eq!(idx % 13, 5, "payload must come from a panicking task: {msg}");
+        }
+    }
+
+    #[test]
+    fn all_tasks_panicking_still_terminates() {
+        let _quiet = QuietPanics::new();
+        let r = std::panic::catch_unwind(|| {
+            parallel_map(4, 32, |i| -> usize { panic!("{i}") })
+        });
+        assert!(r.is_err(), "must propagate one of the panics, not hang");
     }
 }

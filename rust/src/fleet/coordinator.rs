@@ -1,0 +1,1088 @@
+//! The fleet coordinator (ADR-007): drives N workers over the line
+//! protocol, assigns shards with SOL-aware admission ordering, enforces
+//! per-shard deadlines with bounded exponential backoff, re-issues
+//! stragglers to idle workers (first completion wins, duplicates
+//! discarded by shard identity), quarantines workers after K consecutive
+//! failures, and merges shards incrementally as they land.
+//!
+//! The merged output is field-for-field identical to single-process
+//! [`crate::exec::eval_variants`]: shards are partitions of the same
+//! canonical task enumeration, and [`SuiteMerge`] *is* the `repro merge`
+//! assembly — the golden shard/merge property of ADR-003 carries over by
+//! construction, no matter which worker computed which shard in what
+//! order, how many times a shard was retried, or which duplicate landed
+//! first.
+//!
+//! Workers are reached through the [`WorkerLink`] trait with two
+//! implementations: real subprocesses (`repro worker`, see
+//! [`subprocess_worker_factory`]) and in-process threads over the
+//! [`super::pipe`] harness ([`thread_worker_factory`]) running the same
+//! [`worker_loop`] byte-for-byte — fault-injection tests exercise the
+//! coordinator against genuine protocol traffic without paying a process
+//! spawn per lifecycle.
+
+use crate::eval::manifest::{SuiteMerge, SuiteWork};
+use crate::eval::{EvalRequest, Evaluator};
+use crate::exec::{suite_tasks, SuiteTask};
+use crate::experiments::runner::Bench;
+use crate::fleet::events::EventLog;
+use crate::fleet::faults::FaultPlan;
+use crate::fleet::pipe::{pipe, PipeWriter};
+use crate::fleet::protocol::{
+    read_line_capped, LineRead, Message, ParseError, MAX_LINE_BYTES,
+};
+use crate::fleet::worker::{worker_loop, WorkerOpts};
+use crate::scheduler::{Policy, StopRule};
+use crate::agent::RunLog;
+use crate::util::fnv64;
+use crate::util::json::Json;
+use std::io::{BufReader, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+/// What a link's reader delivered, tagged with the link's spawn token so
+/// traffic from a killed predecessor can never be charged to its
+/// replacement.
+#[derive(Debug)]
+pub enum WireEvent {
+    Line(String),
+    /// A reply exceeded [`MAX_LINE_BYTES`]; the reader resynced.
+    Overlong(usize),
+    Eof,
+    Io(String),
+}
+
+/// A live connection to one worker. `send_line` delivers one protocol
+/// line; `kill` terminates the worker (SIGKILL / kill-flag + EOF) — after
+/// `kill`, remaining traffic from this link is stale by token.
+pub trait WorkerLink: Send {
+    fn send_line(&mut self, line: &str) -> Result<(), String>;
+    fn kill(&mut self);
+}
+
+/// Spawns a worker for `slot`, resuming its fault plan at
+/// `start_ordinal`, delivering reader events as `(token, event)` on `tx`.
+pub type SpawnResult = Result<Box<dyn WorkerLink>, String>;
+
+/// Fleet tuning. Defaults are meant for tests and the mini tier; the CLI
+/// maps `--workers/--deadline-ms/--retries` onto this.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    pub workers: usize,
+    /// Per-shard deadline: past it the shard is re-issued (straggler) and
+    /// charged a failure; the original worker gets one more deadline of
+    /// grace to deliver late before being killed.
+    pub deadline: Duration,
+    /// Failures a shard may accumulate beyond its first attempt.
+    pub retries: usize,
+    /// Consecutive failures that quarantine a worker slot.
+    pub quarantine_after: usize,
+    pub backoff_base: Duration,
+    pub backoff_cap: Duration,
+    /// Shard count; `0` (the default) means one shard per task — the
+    /// finest partition, which is what makes admission ordering and
+    /// straggler re-issue meaningful.
+    pub shards: usize,
+    /// Admission policy: shards whose baselines sit inside this SOL band
+    /// (little headroom left) are deprioritized ([`StopRule::sol_band`]).
+    pub admission: Policy,
+}
+
+impl Default for FleetConfig {
+    fn default() -> Self {
+        FleetConfig {
+            workers: 2,
+            deadline: Duration::from_secs(30),
+            retries: 3,
+            quarantine_after: 3,
+            backoff_base: Duration::from_millis(50),
+            backoff_cap: Duration::from_secs(2),
+            shards: 0,
+            admission: Policy { epsilon: 1.0, window: 0 },
+        }
+    }
+}
+
+/// Why a fleet run failed. Always in-band: the coordinator never panics
+/// on worker misbehavior and never hangs past its retry budget.
+#[derive(Debug)]
+pub enum FleetError {
+    Spawn(String),
+    RetriesExhausted { shard: usize, failures: usize, last: String },
+    AllWorkersDead { completed: usize, total: usize },
+    Merge(String),
+    Internal(String),
+}
+
+impl std::fmt::Display for FleetError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            FleetError::Spawn(e) => write!(f, "spawning worker: {e}"),
+            FleetError::RetriesExhausted { shard, failures, last } => {
+                write!(f, "shard {shard} exhausted its retries ({failures} failures; last: {last})")
+            }
+            FleetError::AllWorkersDead { completed, total } => {
+                write!(f, "all workers dead or quarantined with {completed}/{total} shards merged")
+            }
+            FleetError::Merge(e) => write!(f, "merging shards: {e}"),
+            FleetError::Internal(e) => write!(f, "coordinator: {e}"),
+        }
+    }
+}
+
+/// Counters summarizing one fleet run (also derivable from the event log;
+/// kept as plain numbers for `repro serve` output).
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct FleetStats {
+    pub shards: usize,
+    pub assigns: usize,
+    pub retries: usize,
+    pub timeouts: usize,
+    pub duplicates: usize,
+    pub respawns: usize,
+    pub quarantines: usize,
+}
+
+impl FleetStats {
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("shards", self.shards)
+            .set("assigns", self.assigns)
+            .set("retries", self.retries)
+            .set("timeouts", self.timeouts)
+            .set("duplicates", self.duplicates)
+            .set("respawns", self.respawns)
+            .set("quarantines", self.quarantines);
+        o
+    }
+}
+
+pub struct FleetOutcome {
+    pub logs: Vec<RunLog>,
+    pub stats: FleetStats,
+}
+
+/// SOL-budget-aware admission order (ADR-007): shards are issued ordered
+/// by how many of their problems still have SOL headroom — a problem
+/// whose *baseline* already sits inside the `(1+ε)` band above FP16 SOL
+/// ([`StopRule::sol_band`]) has little left to win, so its work goes to
+/// the back of the queue. Whole-variant tasks count headroom across every
+/// problem. Ties break by shard index, so the order is deterministic and
+/// a permutation of `0..of`.
+pub fn admission_order(bench: &Bench, work: &SuiteWork, of: usize, policy: &Policy) -> Vec<usize> {
+    let tasks = suite_tasks(&work.work, work.problems);
+    let ev = bench.evaluator();
+    let headroom: Vec<u64> = (0..bench.problems.len())
+        .map(|p| {
+            let t_ref = ev.eval(&EvalRequest::baseline(p)).value;
+            u64::from(!StopRule::sol_band(policy, t_ref, bench.sols[p].t_sol_fp16_ms))
+        })
+        .collect();
+    let task_headroom = |t: &SuiteTask| -> u64 {
+        match t.problem {
+            Some(p) => headroom[p],
+            None => headroom.iter().sum(),
+        }
+    };
+    // shard s of N owns task ranks r with r % N == s (ADR-003 partition)
+    let mut order: Vec<(u64, usize)> = (0..of)
+        .map(|s| {
+            let h: u64 =
+                tasks.iter().skip(s).step_by(of.max(1)).map(task_headroom).sum();
+            (h, s)
+        })
+        .collect();
+    order.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)));
+    order.into_iter().map(|(_, s)| s).collect()
+}
+
+struct Busy {
+    shard: usize,
+    deadline: Instant,
+    /// Set once the deadline passed and the shard was re-issued: the
+    /// straggler may still deliver (first completion wins) until this.
+    grace: Option<Instant>,
+}
+
+struct Slot {
+    link: Option<Box<dyn WorkerLink>>,
+    token: u64,
+    ready: bool,
+    busy: Option<Busy>,
+    /// Assignments issued to this slot across respawns — the replacement
+    /// worker's `start_ordinal`, so a fault plan advances past faults
+    /// already injected instead of replaying them forever.
+    issued: u64,
+    consecutive: usize,
+    quarantined: bool,
+}
+
+impl Slot {
+    fn live(&self) -> bool {
+        self.link.is_some() && !self.quarantined
+    }
+}
+
+struct ShardState {
+    queued: bool,
+    done: bool,
+    failures: usize,
+    not_before: Instant,
+}
+
+/// Run a suite evaluation across a fleet of workers. `factory` spawns one
+/// worker: `(slot, start_ordinal, token, tx)` — deliver reader events as
+/// `(token, event)` on `tx`. The merged logs are field-for-field what
+/// `eval_variants(bench, &work.work, work.seed, 1)` produces.
+pub fn run_fleet<F>(
+    bench: &Bench,
+    work: &SuiteWork,
+    cfg: &FleetConfig,
+    mut factory: F,
+    events: &EventLog,
+) -> Result<FleetOutcome, FleetError>
+where
+    F: FnMut(usize, u64, u64, Sender<(u64, WireEvent)>) -> SpawnResult,
+{
+    let n_tasks = suite_tasks(&work.work, work.problems).len();
+    if n_tasks == 0 {
+        return Ok(FleetOutcome { logs: Vec::new(), stats: FleetStats::default() });
+    }
+    let of = if cfg.shards == 0 { n_tasks } else { cfg.shards.min(n_tasks) };
+    let workers = cfg.workers.max(1);
+    let job = format!("{:016x}", fnv64(work.to_json().to_string().as_bytes()));
+
+    let (tx, rx): (Sender<(u64, WireEvent)>, Receiver<(u64, WireEvent)>) =
+        std::sync::mpsc::channel();
+
+    let now = Instant::now();
+    let mut merge = SuiteMerge::new(work, of);
+    let mut stats = FleetStats { shards: of, ..FleetStats::default() };
+    let mut shards: Vec<ShardState> = (0..of)
+        .map(|_| ShardState { queued: true, done: false, failures: 0, not_before: now })
+        .collect();
+    let mut queue: Vec<usize> = admission_order(bench, work, of, &cfg.admission);
+    let mut next_token: u64 = 0;
+
+    let mut spawn = |slot_id: usize,
+                     start: u64,
+                     next_token: &mut u64,
+                     events: &EventLog|
+     -> Result<(Box<dyn WorkerLink>, u64), FleetError> {
+        let token = *next_token;
+        *next_token += 1;
+        let link = factory(slot_id, start, token, tx.clone()).map_err(FleetError::Spawn)?;
+        events.emit("spawn", |e| {
+            e.set("slot", slot_id).set("token", token).set("start_ordinal", start);
+        });
+        Ok((link, token))
+    };
+
+    let mut slots: Vec<Slot> = Vec::with_capacity(workers);
+    for s in 0..workers {
+        let (link, token) = spawn(s, 0, &mut next_token, events)?;
+        slots.push(Slot {
+            link: Some(link),
+            token,
+            ready: false,
+            busy: None,
+            issued: 0,
+            consecutive: 0,
+            quarantined: false,
+        });
+    }
+
+    // Charge one failure to a shard; past the retry budget the run aborts.
+    let charge =
+        |shards: &mut Vec<ShardState>,
+         queue: &mut Vec<usize>,
+         stats: &mut FleetStats,
+         cfg: &FleetConfig,
+         index: usize,
+         why: &str,
+         events: &EventLog|
+         -> Result<(), FleetError> {
+            let st = &mut shards[index];
+            if st.done {
+                return Ok(()); // stale: landed elsewhere already
+            }
+            st.failures += 1;
+            if st.failures > cfg.retries {
+                return Err(FleetError::RetriesExhausted {
+                    shard: index,
+                    failures: st.failures,
+                    last: why.to_string(),
+                });
+            }
+            let backoff = cfg
+                .backoff_base
+                .saturating_mul(1u32 << (st.failures - 1).min(6))
+                .min(cfg.backoff_cap);
+            st.not_before = Instant::now() + backoff;
+            stats.retries += 1;
+            events.emit("retry", |e| {
+                e.set("shard", index)
+                    .set("failures", st.failures)
+                    .set("backoff_ms", backoff.as_millis() as u64)
+                    .set("why", why);
+            });
+            if !st.queued {
+                st.queued = true;
+                queue.push(index);
+            }
+            Ok(())
+        };
+
+    // Worker failure accounting: one more consecutive failure; at the
+    // quarantine threshold the slot is retired, otherwise (if `respawn`)
+    // it gets a replacement worker resuming its fault plan.
+    enum WorkerFate {
+        Quarantined,
+        Kept,
+    }
+    let account = |slot: &mut Slot,
+                   slot_id: usize,
+                   stats: &mut FleetStats,
+                   cfg: &FleetConfig,
+                   why: &str,
+                   events: &EventLog|
+     -> WorkerFate {
+        slot.consecutive += 1;
+        if slot.consecutive >= cfg.quarantine_after {
+            slot.quarantined = true;
+            if let Some(mut link) = slot.link.take() {
+                link.kill();
+            }
+            slot.busy = None;
+            slot.ready = false;
+            stats.quarantines += 1;
+            events.emit("quarantine", |e| {
+                e.set("slot", slot_id).set("consecutive", slot.consecutive).set("why", why);
+            });
+            WorkerFate::Quarantined
+        } else {
+            WorkerFate::Kept
+        }
+    };
+
+    let finish = |slots: &mut Vec<Slot>| {
+        for slot in slots.iter_mut() {
+            if let Some(mut link) = slot.link.take() {
+                let _ = link.send_line(&Message::Shutdown.to_line());
+                link.kill();
+            }
+        }
+    };
+
+    loop {
+        let now = Instant::now();
+
+        // 1. deadlines and straggler grace
+        for s in 0..slots.len() {
+            let (index, deadline, grace) = match &slots[s].busy {
+                Some(b) => (b.shard, b.deadline, b.grace),
+                None => continue,
+            };
+            if grace.is_none() && now >= deadline {
+                if let Some(b) = slots[s].busy.as_mut() {
+                    b.grace = Some(now + cfg.deadline);
+                }
+                stats.timeouts += 1;
+                events.emit("timeout", |e| {
+                    e.set("slot", s).set("shard", index);
+                });
+                if let Err(e) =
+                    charge(&mut shards, &mut queue, &mut stats, cfg, index, "deadline", events)
+                {
+                    finish(&mut slots);
+                    return Err(e);
+                }
+            } else if grace.is_some_and(|g| now >= g) {
+                // the straggler never delivered: kill and respawn
+                events.emit("straggler-kill", |e| {
+                    e.set("slot", s).set("shard", index);
+                });
+                slots[s].busy = None;
+                if let Some(mut link) = slots[s].link.take() {
+                    link.kill();
+                }
+                slots[s].ready = false;
+                if let WorkerFate::Kept =
+                    account(&mut slots[s], s, &mut stats, cfg, "straggler", events)
+                {
+                    let issued = slots[s].issued;
+                    let (link, token) = spawn(s, issued, &mut next_token, events)?;
+                    slots[s].link = Some(link);
+                    slots[s].token = token;
+                    stats.respawns += 1;
+                    events.emit("respawn", |e| {
+                        e.set("slot", s).set("start_ordinal", issued);
+                    });
+                }
+            }
+        }
+
+        // 2. done?
+        if merge.complete() {
+            finish(&mut slots);
+            events.emit("done", |e| {
+                e.set("shards", of);
+            });
+            let logs = merge.finish().map_err(FleetError::Merge)?;
+            return Ok(FleetOutcome { logs, stats });
+        }
+
+        // 3. assign idle ready workers, in admission order
+        let now = Instant::now();
+        for s in 0..slots.len() {
+            if !slots[s].live() || !slots[s].ready || slots[s].busy.is_some() {
+                continue;
+            }
+            // first eligible shard in admission order (skip backoffs)
+            let Some(qpos) = queue
+                .iter()
+                .position(|&i| !shards[i].done && now >= shards[i].not_before)
+            else {
+                break;
+            };
+            let index = queue.remove(qpos);
+            shards[index].queued = false;
+            let msg = Message::Assign {
+                job: job.clone(),
+                index,
+                of,
+                work: work.clone(),
+            };
+            slots[s].busy = Some(Busy { shard: index, deadline: now + cfg.deadline, grace: None });
+            slots[s].issued += 1;
+            stats.assigns += 1;
+            events.emit("assign", |e| {
+                e.set("slot", s).set("shard", index).set("of", of);
+            });
+            // A failed send means the worker died between events; its
+            // reader's Eof is already in flight and will do the crash
+            // accounting (shard failure + respawn/quarantine) exactly once.
+            if let Some(link) = slots[s].link.as_mut() {
+                let _ = link.send_line(&msg.to_line());
+            }
+        }
+
+        // 4. graceful degradation floor: anything left to do but nobody
+        // alive to do it is an in-band error, not a hang
+        if !slots.iter().any(|s| s.live()) {
+            let completed = (0..of).filter(|&i| shards[i].done).count();
+            finish(&mut slots);
+            return Err(FleetError::AllWorkersDead { completed, total: of });
+        }
+
+        // 5. wait for traffic, bounded by the nearest timer
+        let now = Instant::now();
+        let mut wait = Duration::from_millis(100);
+        for slot in &slots {
+            if let Some(b) = &slot.busy {
+                let t = b.grace.unwrap_or(b.deadline);
+                wait = wait.min(t.saturating_duration_since(now));
+            }
+        }
+        for st in shards.iter().filter(|st| st.queued && !st.done) {
+            wait = wait.min(st.not_before.saturating_duration_since(now));
+        }
+        let (token, event) = match rx.recv_timeout(wait.max(Duration::from_millis(1))) {
+            Ok(ev) => ev,
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => {
+                return Err(FleetError::Internal("event channel closed".into()))
+            }
+        };
+        let Some(s) = slots.iter().position(|sl| sl.token == token && sl.link.is_some()) else {
+            continue; // stale traffic from a killed predecessor
+        };
+
+        // a failure of whatever the slot was working on: charge the shard,
+        // account the worker, optionally respawn (crash) or not (protocol
+        // noise from a live worker)
+        macro_rules! failed_assignment {
+            ($why:expr, $respawn:expr, $quarantine_now:expr) => {{
+                let why: &str = $why;
+                if let Some(b) = slots[s].busy.take() {
+                    if let Err(e) =
+                        charge(&mut shards, &mut queue, &mut stats, cfg, b.shard, why, events)
+                    {
+                        finish(&mut slots);
+                        return Err(e);
+                    }
+                }
+                if $quarantine_now {
+                    // wrong-build worker: force the next failure over the
+                    // quarantine threshold
+                    slots[s].consecutive = cfg.quarantine_after.max(1) - 1;
+                }
+                let fate = account(&mut slots[s], s, &mut stats, cfg, why, events);
+                if $respawn {
+                    if let WorkerFate::Kept = fate {
+                        slots[s].link = None;
+                        slots[s].ready = false;
+                        let issued = slots[s].issued;
+                        let (link, token) = spawn(s, issued, &mut next_token, events)?;
+                        slots[s].link = Some(link);
+                        slots[s].token = token;
+                        stats.respawns += 1;
+                        events.emit("respawn", |e| {
+                            e.set("slot", s).set("start_ordinal", issued);
+                        });
+                    }
+                }
+            }};
+        }
+
+        match event {
+            WireEvent::Line(line) => match Message::from_line(&line) {
+                Ok(Message::Ready) => {
+                    slots[s].ready = true;
+                    events.emit("ready", |e| {
+                        e.set("slot", s);
+                    });
+                }
+                Ok(Message::Result { job: rjob, index, of: rof, shard }) => {
+                    // the envelope must agree with the embedded shard:
+                    // `merge.add` bounds-checks shard.index, and this pins
+                    // `index` to it, so `shards[index]` below cannot be
+                    // out of range even for a hostile reply
+                    if rjob != job || rof != of || index != shard.index {
+                        events.emit("stale-result", |e| {
+                            e.set("slot", s).set("job", rjob.as_str());
+                        });
+                        continue;
+                    }
+                    if merge.landed(index) {
+                        // first completion won already (straggler re-issue
+                        // or a scripted duplicate reply): discard by
+                        // shard identity, no failure charged
+                        stats.duplicates += 1;
+                        events.emit("duplicate", |e| {
+                            e.set("slot", s).set("shard", index);
+                        });
+                        if slots[s].busy.as_ref().map(|b| b.shard) == Some(index) {
+                            slots[s].busy = None;
+                            slots[s].consecutive = 0;
+                        }
+                        continue;
+                    }
+                    match merge.add(&shard) {
+                        Ok(_) => {
+                            shards[index].done = true;
+                            events.emit("merge", |e| {
+                                e.set("slot", s)
+                                    .set("shard", index)
+                                    .set("landed", (0..of).filter(|&i| shards[i].done).count());
+                            });
+                            if slots[s].busy.as_ref().map(|b| b.shard) == Some(index) {
+                                slots[s].busy = None;
+                            }
+                            slots[s].consecutive = 0;
+                        }
+                        Err(e) => {
+                            failed_assignment!(&format!("bad shard: {e}"), false, false)
+                        }
+                    }
+                }
+                Ok(Message::Error { detail, .. }) => {
+                    events.emit("worker-error", |e| {
+                        e.set("slot", s).set("detail", detail.as_str());
+                    });
+                    failed_assignment!(&format!("worker error: {detail}"), false, false)
+                }
+                Ok(other) => {
+                    failed_assignment!(&format!("unexpected {} from worker", other_kind(&other)), false, false)
+                }
+                Err(ParseError::Version { got }) => {
+                    // a wrong-build worker: retrying it is hopeless, so it
+                    // goes straight to quarantine
+                    events.emit("parse-error", |e| {
+                        e.set("slot", s).set("detail", format!("protocol version {got}"));
+                    });
+                    failed_assignment!(&format!("protocol version {got}"), false, true)
+                }
+                Err(ParseError::Malformed(e)) => {
+                    events.emit("parse-error", |e2| {
+                        e2.set("slot", s).set("detail", e.as_str());
+                    });
+                    failed_assignment!(&format!("malformed reply: {e}"), false, false)
+                }
+            },
+            WireEvent::Overlong(n) => {
+                events.emit("parse-error", |e| {
+                    e.set("slot", s).set("detail", format!("overlong reply ({n} bytes)"));
+                });
+                failed_assignment!("overlong reply", false, false)
+            }
+            WireEvent::Eof | WireEvent::Io(_) => {
+                let why = match &event {
+                    WireEvent::Io(e) => format!("worker i/o: {e}"),
+                    _ => "worker exited".to_string(),
+                };
+                events.emit("crash", |e| {
+                    e.set("slot", s).set("why", why.as_str());
+                });
+                if let Some(mut link) = slots[s].link.take() {
+                    link.kill();
+                }
+                slots[s].ready = false;
+                failed_assignment!(&why, true, false)
+            }
+        }
+    }
+}
+
+fn other_kind(m: &Message) -> &'static str {
+    match m {
+        Message::Ready => "ready",
+        Message::Assign { .. } => "assign",
+        Message::Result { .. } => "result",
+        Message::Error { .. } => "error",
+        Message::Shutdown => "shutdown",
+    }
+}
+
+// ---------------------------------------------------------------------------
+// subprocess workers (`repro worker`)
+// ---------------------------------------------------------------------------
+
+struct ProcessLink {
+    child: std::process::Child,
+    stdin: Option<std::process::ChildStdin>,
+    reader: Option<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerLink for ProcessLink {
+    fn send_line(&mut self, line: &str) -> Result<(), String> {
+        let stdin = self.stdin.as_mut().ok_or("worker stdin closed")?;
+        stdin
+            .write_all(line.as_bytes())
+            .and_then(|_| stdin.flush())
+            .map_err(|e| format!("worker stdin: {e}"))
+    }
+
+    fn kill(&mut self) {
+        self.stdin = None; // EOF first, for a clean exit
+        let _ = self.child.kill();
+        let _ = self.child.wait();
+        if let Some(r) = self.reader.take() {
+            let _ = r.join();
+        }
+    }
+}
+
+impl Drop for ProcessLink {
+    fn drop(&mut self) {
+        self.kill();
+    }
+}
+
+/// Spawn `repro worker` subprocesses from `exe` (normally
+/// `std::env::current_exe()`), one per slot, forwarding each slot's fault
+/// spec (empty string = well-behaved) and the respawn `--fault-offset`.
+pub fn subprocess_worker_factory(
+    exe: std::path::PathBuf,
+    fault_specs: Vec<String>,
+) -> impl FnMut(usize, u64, u64, Sender<(u64, WireEvent)>) -> SpawnResult {
+    move |slot, start_ordinal, token, tx| {
+        let mut cmd = std::process::Command::new(&exe);
+        cmd.arg("worker");
+        if let Some(spec) = fault_specs.get(slot).filter(|s| !s.is_empty()) {
+            cmd.arg("--faults").arg(spec);
+        }
+        if start_ordinal > 0 {
+            cmd.arg("--fault-offset").arg(start_ordinal.to_string());
+        }
+        cmd.stdin(std::process::Stdio::piped())
+            .stdout(std::process::Stdio::piped())
+            .stderr(std::process::Stdio::inherit());
+        let mut child = cmd.spawn().map_err(|e| format!("spawn {}: {e}", exe.display()))?;
+        let stdin = child.stdin.take().ok_or("no worker stdin")?;
+        let stdout = child.stdout.take().ok_or("no worker stdout")?;
+        let reader = std::thread::spawn(move || {
+            let mut r = BufReader::new(stdout);
+            loop {
+                match read_line_capped(&mut r, MAX_LINE_BYTES) {
+                    Ok(LineRead::Eof) => {
+                        let _ = tx.send((token, WireEvent::Eof));
+                        break;
+                    }
+                    Ok(LineRead::Line(l)) => {
+                        if tx.send((token, WireEvent::Line(l))).is_err() {
+                            break;
+                        }
+                    }
+                    Ok(LineRead::Overlong { discarded }) => {
+                        if tx.send((token, WireEvent::Overlong(discarded))).is_err() {
+                            break;
+                        }
+                    }
+                    Err(e) => {
+                        let _ = tx.send((token, WireEvent::Io(e.to_string())));
+                        break;
+                    }
+                }
+            }
+        });
+        Ok(Box::new(ProcessLink { child, stdin: Some(stdin), reader: Some(reader) }))
+    }
+}
+
+// ---------------------------------------------------------------------------
+// in-process workers (threads over the pipe harness)
+// ---------------------------------------------------------------------------
+
+struct ThreadLink {
+    writer: Option<PipeWriter>,
+    kill_flag: Arc<AtomicBool>,
+    worker: Option<std::thread::JoinHandle<()>>,
+    reader: Option<std::thread::JoinHandle<()>>,
+}
+
+impl WorkerLink for ThreadLink {
+    fn send_line(&mut self, line: &str) -> Result<(), String> {
+        let w = self.writer.as_mut().ok_or("worker input closed")?;
+        w.write_all(line.as_bytes()).map_err(|e| format!("worker input: {e}"))
+    }
+
+    fn kill(&mut self) {
+        // flag first (a hung worker polls it), then EOF its input
+        self.kill_flag.store(true, Ordering::Relaxed);
+        self.writer = None;
+    }
+}
+
+impl Drop for ThreadLink {
+    fn drop(&mut self) {
+        self.kill();
+        // joins are bounded: killed workers exit at their next kill-flag
+        // poll / EOF read, and the reader ends at the worker's EOF
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+        if let Some(r) = self.reader.take() {
+            let _ = r.join();
+        }
+    }
+}
+
+/// In-process worker fleet: each slot runs [`worker_loop`] on a thread
+/// over a pair of in-memory pipes — the same bytes, framing, faults, and
+/// crash semantics as subprocess workers, minus the process spawn.
+pub fn thread_worker_factory(
+    bench: Arc<Bench>,
+    plans: Vec<FaultPlan>,
+) -> impl FnMut(usize, u64, u64, Sender<(u64, WireEvent)>) -> SpawnResult {
+    move |slot, start_ordinal, token, tx| {
+        let (coord_w, worker_r) = pipe();
+        let (worker_w, coord_r) = pipe();
+        let kill_flag = Arc::new(AtomicBool::new(false));
+        let opts = WorkerOpts {
+            faults: plans.get(slot).cloned().unwrap_or_default(),
+            start_ordinal,
+        };
+        let bench = Arc::clone(&bench);
+        let kf = Arc::clone(&kill_flag);
+        let worker = std::thread::spawn(move || {
+            let _ = worker_loop(&bench, BufReader::new(worker_r), worker_w, &opts, &kf);
+        });
+        let reader = std::thread::spawn(move || {
+            let mut r = BufReader::new(coord_r);
+            loop {
+                match read_line_capped(&mut r, MAX_LINE_BYTES) {
+                    Ok(LineRead::Eof) => {
+                        let _ = tx.send((token, WireEvent::Eof));
+                        break;
+                    }
+                    Ok(LineRead::Line(l)) => {
+                        if tx.send((token, WireEvent::Line(l))).is_err() {
+                            break;
+                        }
+                    }
+                    Ok(LineRead::Overlong { discarded }) => {
+                        if tx.send((token, WireEvent::Overlong(discarded))).is_err() {
+                            break;
+                        }
+                    }
+                    Err(e) => {
+                        let _ = tx.send((token, WireEvent::Io(e.to_string())));
+                        break;
+                    }
+                }
+            }
+        });
+        Ok(Box::new(ThreadLink {
+            writer: Some(coord_w),
+            kill_flag,
+            worker: Some(worker),
+            reader: Some(reader),
+        }))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::controller::{ControllerKind, VariantSpec};
+    use crate::agent::ModelTier;
+    use crate::exec::eval_variants;
+    use crate::mantis::MantisConfig;
+
+    fn fast_cfg(workers: usize) -> FleetConfig {
+        FleetConfig {
+            workers,
+            deadline: Duration::from_secs(20),
+            backoff_base: Duration::from_millis(1),
+            backoff_cap: Duration::from_millis(20),
+            ..FleetConfig::default()
+        }
+    }
+
+    fn mini_work() -> SuiteWork {
+        let bench_problems = crate::kernelbench::suite().len();
+        SuiteWork::single(
+            VariantSpec::new(ControllerKind::Mi, false, ModelTier::Mini),
+            None,
+            11,
+            bench_problems,
+        )
+    }
+
+    /// Work with both independent per-problem tasks and one
+    /// sequentially-coupled whole-variant task (orchestrated + xmem).
+    fn mixed_work() -> SuiteWork {
+        let problems = crate::kernelbench::suite().len();
+        SuiteWork {
+            seed: 11,
+            problems,
+            work: vec![
+                (VariantSpec::new(ControllerKind::Mi, false, ModelTier::Mini), None),
+                (
+                    VariantSpec::new(ControllerKind::OrchestratedSol, false, ModelTier::Mini),
+                    Some(MantisConfig::default()),
+                ),
+            ],
+        }
+    }
+
+    fn golden(bench: &Bench, work: &SuiteWork) -> String {
+        let logs = eval_variants(bench, &work.work, work.seed, 1);
+        Json::from(logs.iter().map(|l| l.to_json()).collect::<Vec<_>>()).to_string()
+    }
+
+    fn fleet_json(out: &FleetOutcome) -> String {
+        Json::from(out.logs.iter().map(|l| l.to_json()).collect::<Vec<_>>()).to_string()
+    }
+
+    fn run_threads(
+        work: &SuiteWork,
+        cfg: &FleetConfig,
+        plans: Vec<FaultPlan>,
+    ) -> (Result<FleetOutcome, FleetError>, EventLog) {
+        let bench = Arc::new(Bench::new());
+        let events = EventLog::new();
+        let out = run_fleet(
+            &bench,
+            work,
+            cfg,
+            thread_worker_factory(Arc::clone(&bench), plans),
+            &events,
+        );
+        (out, events)
+    }
+
+    #[test]
+    fn faultless_fleet_matches_eval_variants_byte_for_byte() {
+        let work = mini_work();
+        let cfg = fast_cfg(3);
+        let (out, events) = run_threads(&work, &cfg, vec![FaultPlan::none(); 3]);
+        let out = out.expect("faultless fleet converges");
+        let bench = Bench::new();
+        assert_eq!(fleet_json(&out), golden(&bench, &work));
+        assert_eq!(out.stats.retries, 0);
+        assert_eq!(out.stats.quarantines, 0);
+        assert_eq!(events.count("merge"), out.stats.shards);
+    }
+
+    #[test]
+    fn mixed_work_with_whole_variant_task_is_golden() {
+        let work = mixed_work();
+        let cfg = fast_cfg(2);
+        let (out, _) = run_threads(&work, &cfg, vec![FaultPlan::none(); 2]);
+        let out = out.expect("fleet converges");
+        let bench = Bench::new();
+        assert_eq!(
+            fleet_json(&out),
+            golden(&bench, &work),
+            "sequentially-coupled variants must survive the fleet unchanged"
+        );
+    }
+
+    #[test]
+    fn every_scripted_fault_kind_converges_to_golden_output() {
+        use crate::fleet::faults::Fault;
+        let work = mini_work();
+        let bench = Bench::new();
+        let want = golden(&bench, &work);
+        for fault in [
+            Fault::CrashBeforeReply,
+            Fault::TruncatedLine,
+            Fault::GarbageLine,
+            Fault::WrongVersion,
+            Fault::DuplicateReply,
+        ] {
+            let plans =
+                vec![FaultPlan::none().with(0, fault).with(2, fault), FaultPlan::none()];
+            let cfg = fast_cfg(2);
+            let (out, events) = run_threads(&work, &cfg, plans);
+            let out =
+                out.unwrap_or_else(|e| panic!("fleet must converge under {fault:?}: {e}"));
+            assert_eq!(fleet_json(&out), want, "golden output under {fault:?}");
+            if fault == Fault::CrashBeforeReply {
+                assert!(events.count("respawn") >= 1, "crashes must respawn");
+            }
+            if fault == Fault::DuplicateReply {
+                assert!(out.stats.duplicates >= 2, "duplicates must be discarded, not merged");
+            }
+        }
+    }
+
+    #[test]
+    fn scripted_mixed_fault_storm_converges() {
+        // a deterministic multi-kind schedule across both workers, plus a
+        // seeded random plan on top (rate kept under the retry budget)
+        let work = mini_work();
+        let bench = Bench::new();
+        let want = golden(&bench, &work);
+        let plans = vec![
+            FaultPlan::parse("0:crash,3:garbage,5:truncate,9:duplicate").unwrap(),
+            FaultPlan::parse("1:wrong-version,4:crash,8:duplicate").unwrap(),
+        ];
+        let cfg = fast_cfg(2);
+        let (out, _) = run_threads(&work, &cfg, plans);
+        assert_eq!(fleet_json(&out.expect("storm converges")), want);
+    }
+
+    #[test]
+    fn hanging_worker_is_reissued_and_killed() {
+        let work = mini_work();
+        let bench = Bench::new();
+        let want = golden(&bench, &work);
+        let plans = vec![FaultPlan::none().with(0, crate::fleet::faults::Fault::HangPastDeadline), FaultPlan::none()];
+        let cfg = FleetConfig {
+            deadline: Duration::from_millis(300),
+            ..fast_cfg(2)
+        };
+        let (out, events) = run_threads(&work, &cfg, plans);
+        let out = out.expect("hang must not wedge the fleet");
+        assert_eq!(fleet_json(&out), want);
+        assert!(out.stats.timeouts >= 1, "the hang must time out");
+        assert!(
+            events.count("straggler-kill") >= 1,
+            "a never-delivering straggler must be killed"
+        );
+    }
+
+    #[test]
+    fn all_workers_dead_is_an_in_band_error() {
+        let work = mini_work();
+        // one worker whose replacement crashes too, forever — with
+        // quarantine_after=2 the slot dies after two crashes
+        let horizon = 64;
+        let mut plan = FaultPlan::none();
+        for i in 0..horizon {
+            plan = plan.with(i, crate::fleet::faults::Fault::CrashBeforeReply);
+        }
+        let cfg = FleetConfig { quarantine_after: 2, ..fast_cfg(1) };
+        let (out, events) = run_threads(&work, &cfg, vec![plan]);
+        match out {
+            Err(FleetError::AllWorkersDead { completed, total }) => {
+                assert_eq!(completed, 0);
+                assert!(total > 0);
+            }
+            other => panic!("expected AllWorkersDead, got {:?}", other.map(|o| o.stats)),
+        }
+        assert_eq!(events.count("quarantine"), 1);
+    }
+
+    #[test]
+    fn retries_exhausted_is_an_in_band_error() {
+        let work = mini_work();
+        // worker 0 garbages every single assignment; retries=0 means the
+        // first failure of any shard aborts the run
+        let mut plan = FaultPlan::none();
+        for i in 0..64 {
+            plan = plan.with(i, crate::fleet::faults::Fault::GarbageLine);
+        }
+        let cfg = FleetConfig { retries: 0, quarantine_after: 100, ..fast_cfg(1) };
+        let (out, _) = run_threads(&work, &cfg, vec![plan]);
+        match out {
+            Err(FleetError::RetriesExhausted { failures, .. }) => assert_eq!(failures, 1),
+            other => panic!("expected RetriesExhausted, got {:?}", other.map(|o| o.stats)),
+        }
+    }
+
+    #[test]
+    fn quarantine_degrades_gracefully_to_the_healthy_worker() {
+        let work = mini_work();
+        let bench = Bench::new();
+        let want = golden(&bench, &work);
+        // slot 0 garbage-replies its first 3 assignments (with respawn not
+        // triggered — garbage is protocol noise from a live worker), so it
+        // hits quarantine_after=3 and the healthy slot 1 finishes the job
+        let plan0 = FaultPlan::parse("0:garbage,1:garbage,2:garbage").unwrap();
+        let cfg = FleetConfig { quarantine_after: 3, retries: 5, ..fast_cfg(2) };
+        let (out, events) = run_threads(&work, &cfg, vec![plan0, FaultPlan::none()]);
+        let out = out.expect("healthy worker carries the fleet");
+        assert_eq!(fleet_json(&out), want);
+        assert_eq!(out.stats.quarantines, 1);
+        assert_eq!(events.count("quarantine"), 1);
+    }
+
+    #[test]
+    fn admission_order_is_a_sol_sorted_permutation() {
+        let bench = Bench::new();
+        let work = mini_work();
+        let of = suite_tasks(&work.work, work.problems).len();
+        let policy = Policy { epsilon: 1.0, window: 0 };
+        let order = admission_order(&bench, &work, of, &policy);
+        let mut sorted = order.clone();
+        sorted.sort_unstable();
+        assert_eq!(sorted, (0..of).collect::<Vec<_>>(), "a permutation of all shards");
+
+        // headroom must be non-increasing along the order
+        let ev = bench.evaluator();
+        let head: Vec<u64> = (0..bench.problems.len())
+            .map(|p| {
+                let t_ref = ev.eval(&EvalRequest::baseline(p)).value;
+                u64::from(!StopRule::sol_band(&policy, t_ref, bench.sols[p].t_sol_fp16_ms))
+            })
+            .collect();
+        let hs: Vec<u64> = order.iter().map(|&s| head[s]).collect();
+        assert!(hs.windows(2).all(|w| w[0] >= w[1]), "headroom-descending: {hs:?}");
+        // ε=off deprioritizes nothing: pure index order
+        let fixed = admission_order(&bench, &work, of, &Policy::fixed());
+        assert_eq!(fixed, (0..of).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_work_short_circuits() {
+        let bench = Arc::new(Bench::new());
+        let work = SuiteWork { seed: 1, problems: bench.problems.len(), work: Vec::new() };
+        let events = EventLog::new();
+        let out = run_fleet(
+            &bench,
+            &work,
+            &fast_cfg(2),
+            thread_worker_factory(Arc::clone(&bench), Vec::new()),
+            &events,
+        )
+        .expect("empty work is trivially complete");
+        assert!(out.logs.is_empty());
+        assert_eq!(out.stats.shards, 0);
+    }
+}

@@ -1,0 +1,142 @@
+//! Machine-readable coordinator event log (ADR-007).
+//!
+//! Every coordinator decision — spawn, assign, result, duplicate-discard,
+//! timeout, retry, quarantine, merge — is recorded as one JSON object
+//! with a monotonic `t_ms` timestamp. The log is always kept in memory
+//! (tests assert on it: "the crash schedule must produce exactly one
+//! respawn event") and optionally streamed as JSONL to a sink
+//! (`repro serve --events PATH`) for later observability work.
+
+use crate::util::json::Json;
+use std::io::Write;
+use std::sync::Mutex;
+use std::time::Instant;
+
+pub struct EventLog {
+    t0: Instant,
+    inner: Mutex<Inner>,
+}
+
+struct Inner {
+    events: Vec<Json>,
+    sink: Option<Box<dyn Write + Send>>,
+}
+
+impl Default for EventLog {
+    fn default() -> Self {
+        EventLog::new()
+    }
+}
+
+impl EventLog {
+    /// In-memory only.
+    pub fn new() -> EventLog {
+        EventLog {
+            t0: Instant::now(),
+            inner: Mutex::new(Inner { events: Vec::new(), sink: None }),
+        }
+    }
+
+    /// Also stream each event as one JSON line to `sink`.
+    pub fn with_sink(sink: Box<dyn Write + Send>) -> EventLog {
+        EventLog {
+            t0: Instant::now(),
+            inner: Mutex::new(Inner { events: Vec::new(), sink: Some(sink) }),
+        }
+    }
+
+    /// Record one event. `fill` adds the kind-specific fields; `event`
+    /// and `t_ms` are stamped here so every record has them.
+    pub fn emit(&self, kind: &str, fill: impl FnOnce(&mut Json)) {
+        let mut o = Json::obj();
+        o.set("event", kind).set("t_ms", self.t0.elapsed().as_millis() as u64);
+        fill(&mut o);
+        let mut inner = self.inner.lock().expect("event log lock");
+        if let Some(sink) = inner.sink.as_mut() {
+            // sink failures must not take the fleet down mid-run; the
+            // in-memory log stays authoritative
+            let _ = writeln!(sink, "{o}");
+        }
+        inner.events.push(o);
+    }
+
+    /// Snapshot of all events so far.
+    pub fn events(&self) -> Vec<Json> {
+        self.inner.lock().expect("event log lock").events.clone()
+    }
+
+    /// How many events of `kind` have been recorded.
+    pub fn count(&self, kind: &str) -> usize {
+        self.inner
+            .lock()
+            .expect("event log lock")
+            .events
+            .iter()
+            .filter(|e| e.get("event").and_then(|k| k.as_str()) == Some(kind))
+            .count()
+    }
+
+    /// Flush the sink, if any.
+    pub fn flush(&self) {
+        if let Some(sink) = self.inner.lock().expect("event log lock").sink.as_mut() {
+            let _ = sink.flush();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    /// A Write sink backed by shared memory, for asserting on JSONL out.
+    struct MemSink(Arc<Mutex<Vec<u8>>>);
+    impl Write for MemSink {
+        fn write(&mut self, b: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(b);
+            Ok(b.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn events_carry_kind_time_and_fields() {
+        let log = EventLog::new();
+        log.emit("assign", |e| {
+            e.set("slot", 2usize).set("shard", 7usize);
+        });
+        log.emit("retry", |e| {
+            e.set("shard", 7usize);
+        });
+        log.emit("assign", |e| {
+            e.set("slot", 0usize).set("shard", 8usize);
+        });
+        assert_eq!(log.count("assign"), 2);
+        assert_eq!(log.count("retry"), 1);
+        assert_eq!(log.count("quarantine"), 0);
+        let ev = log.events();
+        assert_eq!(ev.len(), 3);
+        assert_eq!(ev[0].get("slot").and_then(|s| s.as_u64()), Some(2));
+        assert!(ev[0].get("t_ms").and_then(|t| t.as_u64()).is_some());
+    }
+
+    #[test]
+    fn sink_receives_one_json_line_per_event() {
+        let buf = Arc::new(Mutex::new(Vec::new()));
+        let log = EventLog::with_sink(Box::new(MemSink(Arc::clone(&buf))));
+        log.emit("spawn", |e| {
+            e.set("slot", 0usize);
+        });
+        log.emit("done", |_| {});
+        log.flush();
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 2);
+        for line in lines {
+            let j = Json::parse(line).unwrap();
+            assert!(j.get("event").is_some() && j.get("t_ms").is_some());
+        }
+    }
+}

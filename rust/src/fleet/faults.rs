@@ -1,0 +1,214 @@
+//! Deterministic fault injection for the fleet (ADR-007).
+//!
+//! A [`FaultPlan`] scripts, per worker *slot*, which of its assignment
+//! ordinals misbehave and how. Plans are data: written by hand in tests,
+//! parsed from a `--faults` spec on the CLI, or derived from the seeded
+//! RNG streams of ADR-002 (`Pcg32::derive(seed, &[stream::FAULT, slot])`),
+//! so a fault schedule is exactly reproducible across runs and across the
+//! in-process and subprocess worker harnesses.
+//!
+//! Ordinals count assignments **per slot across respawns**: when the
+//! coordinator respawns a crashed worker it passes the number of
+//! assignments already issued to that slot (`--fault-offset`), so the
+//! replacement resumes the plan where its predecessor died instead of
+//! replaying the same fault forever. A plan with F faults therefore
+//! injects exactly F faults, which is what makes convergence under a
+//! scripted plan a provable property rather than a probabilistic one.
+
+use crate::util::rng::{stream, Pcg32};
+use std::collections::BTreeMap;
+
+/// One scripted misbehavior, applied to a single assignment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Fault {
+    /// Exit before replying (subprocess: process exits; in-process: the
+    /// worker loop returns). The coordinator sees EOF.
+    CrashBeforeReply,
+    /// Never reply, ignoring the deadline; the coordinator must re-issue
+    /// the shard and eventually kill this worker.
+    HangPastDeadline,
+    /// Reply with the real result line cut off mid-JSON.
+    TruncatedLine,
+    /// Reply with non-UTF-8 line noise.
+    GarbageLine,
+    /// Reply with a correct result wrapped in the wrong protocol version.
+    WrongVersion,
+    /// Reply correctly, twice (first-completion-wins must discard one).
+    DuplicateReply,
+}
+
+pub const ALL_FAULTS: [Fault; 6] = [
+    Fault::CrashBeforeReply,
+    Fault::HangPastDeadline,
+    Fault::TruncatedLine,
+    Fault::GarbageLine,
+    Fault::WrongVersion,
+    Fault::DuplicateReply,
+];
+
+impl Fault {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Fault::CrashBeforeReply => "crash",
+            Fault::HangPastDeadline => "hang",
+            Fault::TruncatedLine => "truncate",
+            Fault::GarbageLine => "garbage",
+            Fault::WrongVersion => "wrong-version",
+            Fault::DuplicateReply => "duplicate",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Fault, String> {
+        ALL_FAULTS
+            .iter()
+            .find(|f| f.name() == s)
+            .copied()
+            .ok_or_else(|| format!("unknown fault `{s}` (crash|hang|truncate|garbage|wrong-version|duplicate)"))
+    }
+}
+
+/// Which assignment ordinals of one worker slot misbehave, and how.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultPlan {
+    faults: BTreeMap<u64, Fault>,
+}
+
+impl FaultPlan {
+    /// The well-behaved plan.
+    pub fn none() -> FaultPlan {
+        FaultPlan::default()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.faults.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.faults.len()
+    }
+
+    /// Builder: fault the assignment with this ordinal.
+    pub fn with(mut self, ordinal: u64, fault: Fault) -> FaultPlan {
+        self.faults.insert(ordinal, fault);
+        self
+    }
+
+    /// The scripted fault for one assignment ordinal, if any.
+    pub fn fault_at(&self, ordinal: u64) -> Option<Fault> {
+        self.faults.get(&ordinal).copied()
+    }
+
+    /// Parse a spec like `"0:crash,3:garbage"` (ordinal:fault pairs).
+    /// The empty string is the well-behaved plan.
+    pub fn parse(spec: &str) -> Result<FaultPlan, String> {
+        let mut plan = FaultPlan::none();
+        for part in spec.split(',').filter(|p| !p.trim().is_empty()) {
+            let (ord, name) = part
+                .trim()
+                .split_once(':')
+                .ok_or_else(|| format!("fault spec `{part}`: expected ORDINAL:FAULT"))?;
+            let ordinal: u64 =
+                ord.parse().map_err(|_| format!("fault spec `{part}`: bad ordinal `{ord}`"))?;
+            if plan.faults.insert(ordinal, Fault::parse(name)?).is_some() {
+                return Err(format!("fault spec: duplicate ordinal {ordinal}"));
+            }
+        }
+        Ok(plan)
+    }
+
+    /// Inverse of [`parse`]: `"0:crash,3:garbage"`.
+    pub fn spec(&self) -> String {
+        self.faults
+            .iter()
+            .map(|(o, f)| format!("{o}:{}", f.name()))
+            .collect::<Vec<_>>()
+            .join(",")
+    }
+
+    /// Script a plan from the fleet's dedicated RNG stream: each of the
+    /// first `horizon` ordinals faults with probability `rate`, the fault
+    /// kind drawn uniformly. Same `(seed, slot)` → same plan, different
+    /// slots → independent streams (ADR-002 derivation discipline).
+    pub fn scripted(seed: u64, slot: u64, horizon: u64, rate: f64) -> FaultPlan {
+        let mut rng = Pcg32::derive(seed, &[stream::FAULT, slot]);
+        let mut plan = FaultPlan::none();
+        for ordinal in 0..horizon {
+            if rng.f64() < rate {
+                plan.faults.insert(ordinal, *rng.choice(&ALL_FAULTS));
+            }
+        }
+        plan
+    }
+
+    /// Parse a per-slot fleet spec: `"0=0:crash;1=2:garbage"` assigns a
+    /// plan to slots 0 and 1; unnamed slots get the well-behaved plan.
+    pub fn parse_fleet(spec: &str, workers: usize) -> Result<Vec<FaultPlan>, String> {
+        let mut plans = vec![FaultPlan::none(); workers];
+        for part in spec.split(';').filter(|p| !p.trim().is_empty()) {
+            let (slot, plan) = part
+                .trim()
+                .split_once('=')
+                .ok_or_else(|| format!("fleet fault spec `{part}`: expected SLOT=PLAN"))?;
+            let slot: usize =
+                slot.parse().map_err(|_| format!("fleet fault spec: bad slot `{slot}`"))?;
+            if slot >= workers {
+                return Err(format!("fleet fault spec: slot {slot} >= --workers {workers}"));
+            }
+            if !plans[slot].is_empty() {
+                return Err(format!("fleet fault spec: duplicate slot {slot}"));
+            }
+            plans[slot] = FaultPlan::parse(plan)?;
+        }
+        Ok(plans)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spec_roundtrip() {
+        let plan = FaultPlan::none()
+            .with(0, Fault::CrashBeforeReply)
+            .with(3, Fault::GarbageLine)
+            .with(7, Fault::WrongVersion);
+        assert_eq!(plan.spec(), "0:crash,3:garbage,7:wrong-version");
+        assert_eq!(FaultPlan::parse(&plan.spec()).unwrap(), plan);
+        assert_eq!(FaultPlan::parse("").unwrap(), FaultPlan::none());
+        assert_eq!(FaultPlan::none().spec(), "");
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        assert!(FaultPlan::parse("0").is_err());
+        assert!(FaultPlan::parse("x:crash").is_err());
+        assert!(FaultPlan::parse("0:explode").is_err());
+        assert!(FaultPlan::parse("0:crash,0:hang").is_err(), "duplicate ordinal");
+    }
+
+    #[test]
+    fn fleet_spec_assigns_per_slot() {
+        let plans = FaultPlan::parse_fleet("0=0:crash;2=1:hang,2:duplicate", 3).unwrap();
+        assert_eq!(plans[0].fault_at(0), Some(Fault::CrashBeforeReply));
+        assert!(plans[1].is_empty());
+        assert_eq!(plans[2].fault_at(1), Some(Fault::HangPastDeadline));
+        assert_eq!(plans[2].fault_at(2), Some(Fault::DuplicateReply));
+        assert!(FaultPlan::parse_fleet("5=0:crash", 2).is_err(), "slot out of range");
+        assert!(FaultPlan::parse_fleet("0=0:crash;0=1:hang", 2).is_err(), "duplicate slot");
+        assert_eq!(FaultPlan::parse_fleet("", 2).unwrap(), vec![FaultPlan::none(); 2]);
+    }
+
+    #[test]
+    fn scripted_plans_are_deterministic_and_slot_independent() {
+        let a = FaultPlan::scripted(42, 0, 64, 0.3);
+        let b = FaultPlan::scripted(42, 0, 64, 0.3);
+        assert_eq!(a, b, "same (seed, slot) must script the same plan");
+        let c = FaultPlan::scripted(42, 1, 64, 0.3);
+        assert_ne!(a, c, "slots draw from independent streams");
+        assert!(!a.is_empty(), "rate 0.3 over 64 ordinals faults some");
+        assert!(a.len() < 40, "…but nowhere near all");
+        // and plans survive the CLI spec round-trip
+        assert_eq!(FaultPlan::parse(&a.spec()).unwrap(), a);
+    }
+}

@@ -1,0 +1,38 @@
+//! Fault-tolerant fleet coordination (ADR-007): a long-running
+//! coordinator drives N `repro worker` subprocesses over a length-checked,
+//! version-gated, line-delimited JSON protocol, assigning
+//! [`crate::eval::manifest::SuiteShard`]s with per-shard deadlines,
+//! bounded exponential-backoff retries, straggler re-issue
+//! (first completion wins), and per-worker quarantine — merging
+//! incrementally as shards land. The merged output is field-for-field
+//! identical to single-process `exec::eval_variants`, inherited from the
+//! ADR-003 shard/merge golden property by construction.
+//!
+//! Layers, bottom up:
+//! - [`pipe`] — std-only in-memory byte pipe, so in-process test workers
+//!   speak the same byte streams as subprocesses;
+//! - [`protocol`] — the wire messages, version gate, and capped line
+//!   reader;
+//! - [`faults`] — deterministic fault-injection plans (scripted by hand,
+//!   by CLI spec, or from the ADR-002 seeded RNG streams);
+//! - [`worker`] — the worker loop both `repro worker` and the in-process
+//!   harness run;
+//! - [`events`] — the machine-readable coordinator event log;
+//! - [`coordinator`] — assignment, deadlines/retries/quarantine,
+//!   SOL-aware admission ordering, and incremental merge.
+
+pub mod coordinator;
+pub mod events;
+pub mod faults;
+pub mod pipe;
+pub mod protocol;
+pub mod worker;
+
+pub use coordinator::{
+    admission_order, run_fleet, subprocess_worker_factory, thread_worker_factory, FleetConfig,
+    FleetError, FleetOutcome, FleetStats, WireEvent, WorkerLink,
+};
+pub use events::EventLog;
+pub use faults::{Fault, FaultPlan};
+pub use protocol::{Message, ParseError, FLEET_PROTOCOL_VERSION, MAX_LINE_BYTES};
+pub use worker::{worker_loop, WorkerOpts};

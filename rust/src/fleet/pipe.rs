@@ -1,0 +1,139 @@
+//! A std-only in-memory byte pipe (`Read`/`Write` halves over a shared
+//! buffer) so the coordinator can drive *in-process* workers through the
+//! exact same byte-stream protocol as subprocess workers (ADR-007).
+//!
+//! Fault-injection tests need to run hundreds of worker lifecycles —
+//! spawning a real subprocess per lifecycle would dominate the suite, and
+//! `std::io::pipe` landed too recently to rely on. Semantics mirror an OS
+//! pipe where the protocol depends on it: dropping the writer delivers
+//! EOF (`read` → 0) to the reader, dropping the reader makes writes fail
+//! with `BrokenPipe` — so "worker crashed" and "coordinator killed us"
+//! look identical in both harnesses.
+
+use std::collections::VecDeque;
+use std::io::{self, Read, Write};
+use std::sync::{Arc, Condvar, Mutex};
+
+struct Shared {
+    buf: Mutex<State>,
+    readable: Condvar,
+}
+
+struct State {
+    data: VecDeque<u8>,
+    writer_gone: bool,
+    reader_gone: bool,
+}
+
+/// Create a unidirectional pipe. A duplex link is two of these.
+pub fn pipe() -> (PipeWriter, PipeReader) {
+    let shared = Arc::new(Shared {
+        buf: Mutex::new(State {
+            data: VecDeque::new(),
+            writer_gone: false,
+            reader_gone: false,
+        }),
+        readable: Condvar::new(),
+    });
+    (PipeWriter(Arc::clone(&shared)), PipeReader(shared))
+}
+
+pub struct PipeWriter(Arc<Shared>);
+pub struct PipeReader(Arc<Shared>);
+
+impl Write for PipeWriter {
+    fn write(&mut self, bytes: &[u8]) -> io::Result<usize> {
+        let mut st = self.0.buf.lock().expect("pipe lock");
+        if st.reader_gone {
+            return Err(io::Error::new(io::ErrorKind::BrokenPipe, "pipe reader dropped"));
+        }
+        st.data.extend(bytes);
+        self.0.readable.notify_all();
+        Ok(bytes.len())
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        Ok(())
+    }
+}
+
+impl Drop for PipeWriter {
+    fn drop(&mut self) {
+        let mut st = self.0.buf.lock().expect("pipe lock");
+        st.writer_gone = true;
+        self.0.readable.notify_all();
+    }
+}
+
+impl Read for PipeReader {
+    fn read(&mut self, out: &mut [u8]) -> io::Result<usize> {
+        if out.is_empty() {
+            return Ok(0);
+        }
+        let mut st = self.0.buf.lock().expect("pipe lock");
+        while st.data.is_empty() {
+            if st.writer_gone {
+                return Ok(0); // EOF
+            }
+            st = self.0.readable.wait(st).expect("pipe lock");
+        }
+        let n = st.data.len().min(out.len());
+        for slot in out.iter_mut().take(n) {
+            *slot = st.data.pop_front().expect("n bytes available");
+        }
+        Ok(n)
+    }
+}
+
+impl Drop for PipeReader {
+    fn drop(&mut self) {
+        let mut st = self.0.buf.lock().expect("pipe lock");
+        st.reader_gone = true;
+        st.data.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::{BufRead, BufReader};
+
+    #[test]
+    fn bytes_cross_threads_and_eof_on_writer_drop() {
+        let (mut w, r) = pipe();
+        let t = std::thread::spawn(move || {
+            let mut lines = Vec::new();
+            let mut br = BufReader::new(r);
+            let mut line = String::new();
+            while br.read_line(&mut line).unwrap() > 0 {
+                lines.push(line.trim_end().to_string());
+                line.clear();
+            }
+            lines // read_line returning 0 is EOF from the dropped writer
+        });
+        w.write_all(b"hello\nworld\n").unwrap();
+        drop(w);
+        assert_eq!(t.join().unwrap(), vec!["hello", "world"]);
+    }
+
+    #[test]
+    fn write_after_reader_drop_is_broken_pipe() {
+        let (mut w, r) = pipe();
+        drop(r);
+        let err = w.write_all(b"x").unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::BrokenPipe);
+    }
+
+    #[test]
+    fn blocked_reader_wakes_on_writer_drop() {
+        // the crash path: a reader mid-wait must see EOF, not hang
+        let (w, mut r) = pipe();
+        let t = std::thread::spawn(move || {
+            let mut buf = [0u8; 8];
+            r.read(&mut buf).unwrap()
+        });
+        std::thread::sleep(std::time::Duration::from_millis(20));
+        drop(w);
+        assert_eq!(t.join().unwrap(), 0, "EOF, not a hang");
+    }
+}

@@ -1,0 +1,311 @@
+//! The fleet wire protocol (ADR-007): length-checked, version-gated,
+//! line-delimited JSON over a worker's stdin/stdout.
+//!
+//! One message per line. Every message carries a `"fleet"` protocol
+//! version; a mismatched or missing version is a distinct parse outcome
+//! ([`ParseError::Version`]) so the coordinator can quarantine a
+//! wrong-build worker instead of retrying it forever. Lines are read
+//! through [`read_line_capped`], which enforces [`MAX_LINE_BYTES`]
+//! *while reading* — an overlong line is reported without ever being
+//! materialized, and the reader resynchronizes at the next newline so one
+//! oversized reply cannot wedge the connection.
+//!
+//! The JSON writer escapes every control character (`\n` included), so a
+//! serialized message is always exactly one line; arbitrary `detail`
+//! strings cannot break the framing.
+
+use crate::eval::manifest::{SuiteShard, SuiteWork, MAX_ARTIFACT_BYTES};
+use crate::util::json::Json;
+use std::io::BufRead;
+
+/// Fleet protocol version. Independent of `MANIFEST_VERSION`: the
+/// envelope (framing, message kinds) and the payload (shard artifact
+/// schema) evolve separately, and each is gated on its own field.
+pub const FLEET_PROTOCOL_VERSION: u64 = 1;
+
+/// Line cap: the largest payload is a serialized [`SuiteShard`] (bounded
+/// by the artifact cap shared with `repro merge`), plus slack for the
+/// message envelope.
+pub const MAX_LINE_BYTES: usize = MAX_ARTIFACT_BYTES + 4096;
+
+/// A protocol message. `Assign`/`Shutdown` travel coordinator → worker;
+/// `Ready`/`Result`/`Error` travel worker → coordinator.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    /// Worker greeting, sent once on startup. Carries nothing beyond the
+    /// version envelope: a `Ready` that parses IS the handshake.
+    Ready,
+    /// Run `suite_shard(bench, work, index, of)` and reply.
+    Assign { job: String, index: usize, of: usize, work: SuiteWork },
+    /// A completed shard.
+    Result { job: String, index: usize, of: usize, shard: SuiteShard },
+    /// In-band worker failure for one assignment (bad work, suite-size
+    /// mismatch, …). The coordinator retries the shard elsewhere.
+    Error { job: String, index: usize, detail: String },
+    /// Coordinator is done with this worker; exit cleanly.
+    Shutdown,
+}
+
+/// How a received line failed to parse.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ParseError {
+    /// The line is valid JSON with a `fleet` version this build does not
+    /// speak — a mixed-version fleet, not line noise.
+    Version { got: u64 },
+    /// Garbage, truncation, or a structurally invalid message.
+    Malformed(String),
+}
+
+impl std::fmt::Display for ParseError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ParseError::Version { got } => write!(
+                f,
+                "protocol version {got} (this build speaks {FLEET_PROTOCOL_VERSION})"
+            ),
+            ParseError::Malformed(e) => write!(f, "malformed message: {e}"),
+        }
+    }
+}
+
+impl Message {
+    fn kind(&self) -> &'static str {
+        match self {
+            Message::Ready => "ready",
+            Message::Assign { .. } => "assign",
+            Message::Result { .. } => "result",
+            Message::Error { .. } => "error",
+            Message::Shutdown => "shutdown",
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        self.to_json_v(FLEET_PROTOCOL_VERSION)
+    }
+
+    /// Serialize under an explicit protocol version — the fault injector
+    /// uses this to script a wrong-version reply (ADR-007).
+    pub fn to_json_v(&self, version: u64) -> Json {
+        let mut o = Json::obj();
+        o.set("fleet", version).set("type", self.kind());
+        match self {
+            Message::Ready | Message::Shutdown => {}
+            Message::Assign { job, index, of, work } => {
+                o.set("job", job.as_str())
+                    .set("index", *index)
+                    .set("of", *of)
+                    .set("work", work.to_json());
+            }
+            Message::Result { job, index, of, shard } => {
+                o.set("job", job.as_str())
+                    .set("index", *index)
+                    .set("of", *of)
+                    .set("shard", shard.to_json());
+            }
+            Message::Error { job, index, detail } => {
+                o.set("job", job.as_str()).set("index", *index).set("detail", detail.as_str());
+            }
+        }
+        o
+    }
+
+    /// One wire line, newline included.
+    pub fn to_line(&self) -> String {
+        let mut s = self.to_json().to_string();
+        s.push('\n');
+        s
+    }
+
+    pub fn from_line(line: &str) -> Result<Message, ParseError> {
+        let j = Json::parse(line.trim_end_matches(['\n', '\r']))
+            .map_err(|e| ParseError::Malformed(e.to_string()))?;
+        let version = j.get("fleet").and_then(|v| v.as_u64()).unwrap_or(0);
+        if version != FLEET_PROTOCOL_VERSION {
+            return Err(ParseError::Version { got: version });
+        }
+        let kind = j
+            .get("type")
+            .and_then(|t| t.as_str())
+            .ok_or_else(|| ParseError::Malformed("missing type".into()))?;
+        let field = |name: &str| -> Result<&Json, ParseError> {
+            j.get(name).ok_or_else(|| ParseError::Malformed(format!("{kind}: missing {name}")))
+        };
+        let str_field = |name: &str| -> Result<String, ParseError> {
+            Ok(field(name)?
+                .as_str()
+                .ok_or_else(|| ParseError::Malformed(format!("{kind}: bad {name}")))?
+                .to_string())
+        };
+        let num_field = |name: &str| -> Result<usize, ParseError> {
+            Ok(field(name)?
+                .as_u64()
+                .ok_or_else(|| ParseError::Malformed(format!("{kind}: bad {name}")))?
+                as usize)
+        };
+        match kind {
+            "ready" => Ok(Message::Ready),
+            "shutdown" => Ok(Message::Shutdown),
+            "assign" => Ok(Message::Assign {
+                job: str_field("job")?,
+                index: num_field("index")?,
+                of: num_field("of")?,
+                work: SuiteWork::from_json(field("work")?).map_err(ParseError::Malformed)?,
+            }),
+            "result" => Ok(Message::Result {
+                job: str_field("job")?,
+                index: num_field("index")?,
+                of: num_field("of")?,
+                shard: SuiteShard::from_json(field("shard")?).map_err(ParseError::Malformed)?,
+            }),
+            "error" => Ok(Message::Error {
+                job: str_field("job")?,
+                index: num_field("index")?,
+                detail: str_field("detail")?,
+            }),
+            other => Err(ParseError::Malformed(format!("unknown message type `{other}`"))),
+        }
+    }
+}
+
+/// One read outcome from [`read_line_capped`].
+#[derive(Debug)]
+pub enum LineRead {
+    /// A complete line (newline stripped). Invalid UTF-8 is replaced, not
+    /// fatal — the resulting string then fails `Json::parse` in-band.
+    Line(String),
+    /// The stream ended cleanly.
+    Eof,
+    /// A line exceeded `cap` bytes. The overlong tail has been drained up
+    /// to the next newline (or EOF), so the next read starts on a fresh
+    /// line; `discarded` is the total size seen before resync.
+    Overlong { discarded: usize },
+}
+
+/// Read one newline-terminated line of at most `cap` bytes. The cap is
+/// enforced during the read — an attacker (or fault injector) writing an
+/// unbounded line costs bounded memory here.
+pub fn read_line_capped<R: BufRead>(r: &mut R, cap: usize) -> std::io::Result<LineRead> {
+    let mut buf: Vec<u8> = Vec::new();
+    let n = r.by_ref().take(cap as u64 + 1).read_until(b'\n', &mut buf)?;
+    if n == 0 {
+        return Ok(LineRead::Eof);
+    }
+    if buf.last() == Some(&b'\n') {
+        buf.pop();
+        if buf.last() == Some(&b'\r') {
+            buf.pop();
+        }
+    } else if buf.len() > cap {
+        // over the cap with no newline yet: drain to the next line
+        // boundary in bounded chunks, counting but not keeping the tail
+        let mut discarded = buf.len();
+        buf.clear();
+        loop {
+            let mut tail = Vec::new();
+            let m = r.by_ref().take(1 << 16).read_until(b'\n', &mut tail)?;
+            discarded += m;
+            if m == 0 || tail.last() == Some(&b'\n') {
+                return Ok(LineRead::Overlong { discarded });
+            }
+        }
+    }
+    // a final unterminated line (writer died mid-write) is delivered
+    // as-is; if truncation broke the JSON it fails to parse, in-band
+    Ok(LineRead::Line(String::from_utf8_lossy(&buf).into_owned()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::controller::{ControllerKind, VariantSpec};
+    use crate::agent::ModelTier;
+    use std::io::BufReader;
+
+    fn work() -> SuiteWork {
+        SuiteWork::single(
+            VariantSpec::new(ControllerKind::Mi, true, ModelTier::Mini),
+            None,
+            7,
+            59,
+        )
+    }
+
+    #[test]
+    fn messages_roundtrip_one_line_each() {
+        let msgs = vec![
+            Message::Ready,
+            Message::Shutdown,
+            Message::Assign { job: "j1".into(), index: 3, of: 8, work: work() },
+            Message::Result {
+                job: "j1".into(),
+                index: 3,
+                of: 8,
+                shard: SuiteShard { work: work(), index: 3, of: 8, results: Vec::new() },
+            },
+            Message::Error {
+                job: "j1".into(),
+                index: 3,
+                detail: "multi\nline\tdetail \"quoted\"".into(),
+            },
+        ];
+        for m in msgs {
+            let line = m.to_line();
+            assert_eq!(line.matches('\n').count(), 1, "exactly one newline: {line:?}");
+            assert!(line.ends_with('\n'));
+            assert_eq!(Message::from_line(&line).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn version_gate_is_a_distinct_outcome() {
+        let wrong = Message::Ready.to_json_v(99).to_string();
+        assert_eq!(Message::from_line(&wrong), Err(ParseError::Version { got: 99 }));
+        // missing version field → version 0, still the version outcome
+        assert_eq!(
+            Message::from_line(r#"{"type":"ready"}"#),
+            Err(ParseError::Version { got: 0 })
+        );
+        // garbage is Malformed, not Version
+        assert!(matches!(
+            Message::from_line("\u{0}\u{7}{]garbage"),
+            Err(ParseError::Malformed(_))
+        ));
+    }
+
+    #[test]
+    fn capped_reader_delivers_skips_and_resyncs() {
+        let long = "x".repeat(100);
+        let input = format!("short\n{long}\nafter\nlast-no-newline");
+        let mut r = BufReader::new(input.as_bytes());
+        assert!(matches!(read_line_capped(&mut r, 32).unwrap(), LineRead::Line(l) if l == "short"));
+        // the 100-byte line exceeds the 32-byte cap: skipped, resynced
+        match read_line_capped(&mut r, 32).unwrap() {
+            LineRead::Overlong { discarded } => assert!(discarded >= 100, "{discarded}"),
+            other => panic!("expected Overlong, got {other:?}"),
+        }
+        assert!(matches!(read_line_capped(&mut r, 32).unwrap(), LineRead::Line(l) if l == "after"));
+        // unterminated final line is still delivered (truncated writes
+        // surface as parse errors, not lost bytes)
+        assert!(
+            matches!(read_line_capped(&mut r, 32).unwrap(), LineRead::Line(l) if l == "last-no-newline")
+        );
+        assert!(matches!(read_line_capped(&mut r, 32).unwrap(), LineRead::Eof));
+    }
+
+    #[test]
+    fn capped_reader_handles_overlong_tail_at_eof() {
+        let input = "y".repeat(80); // no newline at all, over cap
+        let mut r = BufReader::new(input.as_bytes());
+        match read_line_capped(&mut r, 16).unwrap() {
+            LineRead::Overlong { discarded } => assert_eq!(discarded, 80),
+            other => panic!("expected Overlong, got {other:?}"),
+        }
+        assert!(matches!(read_line_capped(&mut r, 16).unwrap(), LineRead::Eof));
+    }
+
+    #[test]
+    fn crlf_lines_parse_too() {
+        let mut r = BufReader::new("ready\r\n".as_bytes());
+        assert!(matches!(read_line_capped(&mut r, 64).unwrap(), LineRead::Line(l) if l == "ready"));
+    }
+}

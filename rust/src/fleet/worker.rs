@@ -1,0 +1,322 @@
+//! The fleet worker loop (ADR-007): read `assign` lines, run
+//! `suite_shard`, reply `result` — plus the scripted misbehaviors of the
+//! fault-injection harness.
+//!
+//! [`worker_loop`] is generic over its byte streams, so the `repro
+//! worker` subprocess (stdin/stdout) and the in-process test harness
+//! ([`super::pipe`]) execute the *same* code — fault-injection tests
+//! exercising the in-process harness are testing the very loop a real
+//! fleet runs, not a simulation of it.
+
+use crate::eval::manifest::suite_shard;
+use crate::experiments::runner::Bench;
+use crate::fleet::faults::{Fault, FaultPlan};
+use crate::fleet::protocol::{
+    read_line_capped, LineRead, Message, ParseError, FLEET_PROTOCOL_VERSION, MAX_LINE_BYTES,
+};
+use std::io::{BufRead, Write};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+/// Worker configuration: its fault plan and where in the plan it starts
+/// (`--fault-offset`: assignments already issued to this slot before a
+/// respawn — see `faults` module docs).
+#[derive(Debug, Clone, Default)]
+pub struct WorkerOpts {
+    pub faults: FaultPlan,
+    pub start_ordinal: u64,
+}
+
+/// Upper bound on a scripted hang: a hung worker whose coordinator died
+/// before killing it must still exit on its own, not orphan in CI.
+const HANG_CAP: Duration = Duration::from_secs(120);
+
+/// Drive one worker over a pair of byte streams until EOF, `shutdown`, or
+/// an I/O error. The `kill` flag is the in-process stand-in for SIGKILL:
+/// the coordinator's link sets it (and closes the input) to terminate a
+/// hung worker, mirroring `Child::kill` on the subprocess path.
+pub fn worker_loop<R: BufRead, W: Write>(
+    bench: &Bench,
+    mut input: R,
+    mut output: W,
+    opts: &WorkerOpts,
+    kill: &AtomicBool,
+) -> Result<(), String> {
+    let send = |out: &mut W, msg: &Message| -> Result<(), String> {
+        out.write_all(msg.to_line().as_bytes())
+            .and_then(|_| out.flush())
+            .map_err(|e| format!("worker write: {e}"))
+    };
+    send(&mut output, &Message::Ready)?;
+    let mut received: u64 = 0;
+    loop {
+        if kill.load(Ordering::Relaxed) {
+            return Ok(());
+        }
+        let line = match read_line_capped(&mut input, MAX_LINE_BYTES)
+            .map_err(|e| format!("worker read: {e}"))?
+        {
+            LineRead::Eof => return Ok(()), // coordinator gone
+            LineRead::Overlong { discarded } => {
+                send(
+                    &mut output,
+                    &Message::Error {
+                        job: String::new(),
+                        index: 0,
+                        detail: format!("overlong line ({discarded} bytes)"),
+                    },
+                )?;
+                continue;
+            }
+            LineRead::Line(l) => l,
+        };
+        let (job, index, of, work) = match Message::from_line(&line) {
+            Ok(Message::Assign { job, index, of, work }) => (job, index, of, work),
+            Ok(Message::Shutdown) => return Ok(()),
+            Ok(other) => {
+                send(
+                    &mut output,
+                    &Message::Error {
+                        job: String::new(),
+                        index: 0,
+                        detail: format!("unexpected {:?} from coordinator", other),
+                    },
+                )?;
+                continue;
+            }
+            Err(e) => {
+                send(
+                    &mut output,
+                    &Message::Error { job: String::new(), index: 0, detail: e.to_string() },
+                )?;
+                continue;
+            }
+        };
+        let ordinal = opts.start_ordinal + received;
+        received += 1;
+        let fault = opts.faults.fault_at(ordinal);
+
+        // pre-reply faults
+        match fault {
+            Some(Fault::CrashBeforeReply) => return Ok(()), // EOF at the coordinator
+            Some(Fault::HangPastDeadline) => {
+                let start = std::time::Instant::now();
+                while start.elapsed() < HANG_CAP {
+                    if kill.load(Ordering::Relaxed) {
+                        return Ok(());
+                    }
+                    std::thread::sleep(Duration::from_millis(5));
+                }
+                return Ok(());
+            }
+            Some(Fault::GarbageLine) => {
+                // non-UTF-8 line noise instead of a result
+                output
+                    .write_all(b"\x00\xff\x07{]garbage\xfe\n")
+                    .and_then(|_| output.flush())
+                    .map_err(|e| format!("worker write: {e}"))?;
+                continue;
+            }
+            _ => {}
+        }
+
+        // in-band validation: a bad assignment is the coordinator's bug
+        // (or a hostile peer), never a worker panic
+        if of == 0 || index >= of {
+            send(
+                &mut output,
+                &Message::Error {
+                    job,
+                    index,
+                    detail: format!("assign: index {index} out of range for of {of}"),
+                },
+            )?;
+            continue;
+        }
+        if work.problems != bench.problems.len() {
+            send(
+                &mut output,
+                &Message::Error {
+                    job,
+                    index,
+                    detail: format!(
+                        "suite size mismatch: job has {} problems, this build {}",
+                        work.problems,
+                        bench.problems.len()
+                    ),
+                },
+            )?;
+            continue;
+        }
+
+        let shard = suite_shard(bench, &work, index, of);
+        let reply = Message::Result { job, index, of, shard };
+
+        // reply-shape faults
+        match fault {
+            Some(Fault::TruncatedLine) => {
+                let line = reply.to_line();
+                let mut cut = line.len() / 2;
+                while !line.is_char_boundary(cut) {
+                    cut -= 1;
+                }
+                output
+                    .write_all(line[..cut].as_bytes())
+                    .and_then(|_| output.write_all(b"\n"))
+                    .and_then(|_| output.flush())
+                    .map_err(|e| format!("worker write: {e}"))?;
+            }
+            Some(Fault::WrongVersion) => {
+                let mut line = reply.to_json_v(FLEET_PROTOCOL_VERSION + 1).to_string();
+                line.push('\n');
+                output
+                    .write_all(line.as_bytes())
+                    .and_then(|_| output.flush())
+                    .map_err(|e| format!("worker write: {e}"))?;
+            }
+            Some(Fault::DuplicateReply) => {
+                send(&mut output, &reply)?;
+                send(&mut output, &reply)?;
+            }
+            _ => send(&mut output, &reply)?,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agent::controller::{ControllerKind, VariantSpec};
+    use crate::agent::ModelTier;
+    use crate::eval::manifest::SuiteWork;
+    use crate::fleet::pipe::pipe;
+    use std::io::BufReader;
+
+    /// Drive a worker thread over in-memory pipes with the given inbound
+    /// script; returns the parsed outcome of each reply line.
+    fn drive(bench: &Bench, opts: WorkerOpts, inbound: Vec<Message>) -> Vec<Result<Message, ParseError>> {
+        let (mut to_worker, worker_in) = pipe();
+        let (worker_out, coord_in) = pipe();
+        let kill = AtomicBool::new(false);
+        std::thread::scope(|s| {
+            s.spawn(|| {
+                let _ = worker_loop(bench, BufReader::new(worker_in), worker_out, &opts, &kill);
+            });
+            for m in &inbound {
+                to_worker.write_all(m.to_line().as_bytes()).unwrap();
+            }
+            drop(to_worker); // EOF ends the worker after the script
+            let mut replies = Vec::new();
+            let mut r = BufReader::new(coord_in);
+            loop {
+                match read_line_capped(&mut r, MAX_LINE_BYTES).unwrap() {
+                    LineRead::Eof => break,
+                    LineRead::Overlong { discarded } => {
+                        replies.push(Err(ParseError::Malformed(format!("overlong {discarded}"))))
+                    }
+                    LineRead::Line(l) => replies.push(Message::from_line(&l)),
+                }
+            }
+            replies
+        })
+    }
+
+    fn tiny_job(bench: &Bench) -> SuiteWork {
+        SuiteWork::single(
+            VariantSpec::new(ControllerKind::Mi, false, ModelTier::Mini),
+            None,
+            9,
+            bench.problems.len(),
+        )
+    }
+
+    #[test]
+    fn worker_greets_computes_and_shuts_down() {
+        let bench = Bench::new();
+        let work = tiny_job(&bench);
+        let of = crate::exec::suite_tasks(&work.work, work.problems).len();
+        let replies = drive(
+            &bench,
+            WorkerOpts::default(),
+            vec![
+                Message::Assign { job: "j".into(), index: 4, of, work: work.clone() },
+                Message::Shutdown,
+            ],
+        );
+        assert_eq!(replies.len(), 2);
+        assert_eq!(replies[0], Ok(Message::Ready));
+        match replies[1].as_ref().unwrap() {
+            Message::Result { job, index, of: got_of, shard } => {
+                assert_eq!((job.as_str(), *index, *got_of), ("j", 4, of));
+                assert_eq!(*shard, suite_shard(&bench, &work, 4, of), "must equal the direct call");
+            }
+            other => panic!("expected result, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn worker_rejects_bad_assignments_in_band() {
+        let bench = Bench::new();
+        let mut work = tiny_job(&bench);
+        let of = crate::exec::suite_tasks(&work.work, work.problems).len();
+        work.problems += 1; // suite-size skew
+        let replies = drive(
+            &bench,
+            WorkerOpts::default(),
+            vec![
+                Message::Assign { job: "j".into(), index: 0, of, work: work.clone() },
+                Message::Assign { job: "j".into(), index: of + 9, of, work: tiny_job(&bench) },
+            ],
+        );
+        assert_eq!(replies.len(), 3, "ready + two in-band errors");
+        for r in &replies[1..] {
+            assert!(
+                matches!(r, Ok(Message::Error { .. })),
+                "bad assigns must answer in-band, got {r:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn scripted_faults_shape_the_reply_stream() {
+        let bench = Bench::new();
+        let work = tiny_job(&bench);
+        let of = crate::exec::suite_tasks(&work.work, work.problems).len();
+        let assign = |i: usize| Message::Assign { job: "j".into(), index: i, of, work: work.clone() };
+
+        // ordinal 0 garbage, 1 truncated, 2 wrong-version, 3 duplicate, 4 clean
+        let opts = WorkerOpts {
+            faults: FaultPlan::none()
+                .with(0, Fault::GarbageLine)
+                .with(1, Fault::TruncatedLine)
+                .with(2, Fault::WrongVersion)
+                .with(3, Fault::DuplicateReply),
+            start_ordinal: 0,
+        };
+        let replies = drive(&bench, opts, (0..5).map(assign).collect());
+        assert_eq!(replies.len(), 1 + 6, "ready + garbage + truncated + wrong-v + 2 dup + clean");
+        assert_eq!(replies[0], Ok(Message::Ready));
+        assert!(matches!(replies[1], Err(ParseError::Malformed(_))), "garbage: {:?}", replies[1]);
+        assert!(matches!(replies[2], Err(ParseError::Malformed(_))), "truncated: {:?}", replies[2]);
+        assert!(
+            matches!(replies[3], Err(ParseError::Version { got }) if got == FLEET_PROTOCOL_VERSION + 1),
+            "wrong-version: {:?}",
+            replies[3]
+        );
+        assert_eq!(replies[4], replies[5], "duplicate replies are byte-identical");
+        assert!(matches!(replies[4], Ok(Message::Result { index: 3, .. })));
+        assert!(matches!(replies[6], Ok(Message::Result { index: 4, .. })));
+
+        // crash: EOF right after ready, no reply for the assignment
+        let opts =
+            WorkerOpts { faults: FaultPlan::none().with(0, Fault::CrashBeforeReply), start_ordinal: 0 };
+        let replies = drive(&bench, opts, vec![assign(0)]);
+        assert_eq!(replies, vec![Ok(Message::Ready)]);
+
+        // a start offset shifts which assignment the plan hits
+        let opts =
+            WorkerOpts { faults: FaultPlan::none().with(3, Fault::CrashBeforeReply), start_ordinal: 3 };
+        let replies = drive(&bench, opts, vec![assign(0), assign(1)]);
+        assert_eq!(replies, vec![Ok(Message::Ready)], "offset 3 makes the first assign ordinal 3");
+    }
+}

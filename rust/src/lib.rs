@@ -39,6 +39,12 @@
 //!   every scheduler/policy experiment offline from the trace. Serving
 //!   stores index by the allocation-free interned `EvalKey` (ADR-005);
 //!   string keys survive only in JSON and diagnostics.
+//! * [`fleet`] — the fault-tolerant fleet coordinator behind `repro serve`
+//!   (ADR-007): N `repro worker` subprocesses driven over a version-gated
+//!   line protocol with deadlines, bounded retries, straggler re-issue,
+//!   quarantine, SOL-aware admission ordering, a deterministic
+//!   fault-injection harness, and incremental merge whose output is
+//!   field-for-field identical to single-process `exec::eval_variants`.
 //! * [`integrity`] — SOL-ceiling, LLM-game-detector and PyTorch-only
 //!   detectors with the full label taxonomy (paper §4.4, §6.3).
 //! * [`metrics`] — Fast-p / Attempt-Fast-p curves, signed area, retention.
@@ -59,6 +65,7 @@ pub mod mantis;
 pub mod scheduler;
 pub mod exec;
 pub mod eval;
+pub mod fleet;
 pub mod integrity;
 pub mod metrics;
 pub mod runtime;

@@ -11,6 +11,8 @@
 //! repro sweep [--tier T] [--trace PATH [--live]] [--jobs N] [--out FILE]
 //! repro record <exp|run|schedule|sweep> ... --trace PATH           record measurements
 //! repro replay <exp|run|schedule|sweep> ... --trace PATH [--live]  replay them offline
+//! repro serve --workers N [--deadline-ms D] [--retries R] ...      fleet coordinator (ADR-007)
+//! repro worker [--faults SPEC] [--fault-offset N]                  one fleet worker (internal)
 //! repro list                                                 list the 59 problems
 //! ```
 //!
@@ -27,6 +29,10 @@ use ucutlass_repro::eval::trace::{trace_session, TraceMode};
 use ucutlass_repro::eval::{DynEvaluator, TraceMonitor};
 use ucutlass_repro::exec;
 use ucutlass_repro::experiments::figures::{self, ExpCtx};
+use ucutlass_repro::fleet::{
+    run_fleet, subprocess_worker_factory, worker_loop, EventLog, FaultPlan, FleetConfig,
+    WorkerOpts,
+};
 use ucutlass_repro::experiments::Bench;
 use ucutlass_repro::integrity::IntegrityPipeline;
 use ucutlass_repro::kernelbench;
@@ -140,6 +146,8 @@ fn run(args: &[String]) -> Result<(), String> {
         }
         Some("shard") => cmd_shard(&opts, seed),
         Some("merge") => cmd_merge(&pos, &opts),
+        Some("serve") => cmd_serve(&opts, seed),
+        Some("worker") => cmd_worker(&opts),
         Some("list") => cmd_list(),
         _ => {
             println!("{}", HELP);
@@ -210,6 +218,10 @@ repro — µCUTLASS + SOL-guidance reproduction (see README.md)
   repro shard --index I --of N --tier <mini|mid|max> [--dsl] [--sol <orch|prompt>]
             [--seed N] [--out FILE]
   repro merge <shard.json>... [--out FILE]
+  repro serve --workers N [--deadline-ms 30000] [--retries 3] [--quarantine-after 3]
+            [--shards S] [--eps 100] --tier <mini|mid|max> [--dsl] [--sol <orch|prompt>]
+            [--seed N] [--faults \"0=0:crash;1=2:garbage\"] [--events FILE] [--out FILE]
+  repro worker [--faults ORD:FAULT,..] [--fault-offset N]   (spawned by serve)
   repro list
 
   --jobs N fans (variant, problem, seed) tasks across N worker threads
@@ -224,6 +236,15 @@ repro — µCUTLASS + SOL-guidance reproduction (see README.md)
   t.jsonl` reproduces the run field-for-field without touching the
   analytic backend (strict; a trace miss fails the command). --live falls
   through to the live backend on misses and extends the trace.
+  serve runs the same evaluation across a fault-tolerant fleet of `repro
+  worker` subprocesses (ADR-007): per-shard deadlines with exponential
+  backoff retries, straggler re-issue (first completion wins), worker
+  quarantine after consecutive failures, SOL-aware admission ordering,
+  and an incremental merge whose output is field-for-field identical to a
+  single-process run. --faults scripts deterministic worker misbehavior
+  per slot (crash|hang|truncate|garbage|wrong-version|duplicate) for the
+  fault-injection harness; --events streams the coordinator's decision
+  log (assign/retry/quarantine/merge...) as JSONL.
   sweep replays the full 72-policy fig8/fig9 scheduler grid from ONE
   exhausted session pass per variant (ADR-005): sessions are driven once
   to budget exhaustion, every (eps, w) stopping rule is applied offline,
@@ -485,6 +506,93 @@ fn cmd_merge(pos: &[String], opts: &HashMap<String, String>) -> Result<(), Strin
         println!("(merged logs written to {out})");
     }
     Ok(())
+}
+
+/// `repro serve` (ADR-007): run a suite evaluation across a fleet of
+/// `repro worker` subprocesses with deadlines, bounded retries, straggler
+/// re-issue, and quarantine. The merged output is field-for-field what a
+/// single-process `repro run` of the same spec and seed produces.
+fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<(), String> {
+    const USAGE: &str = "repro serve --workers N [--deadline-ms D] [--retries R] \
+                         [--quarantine-after K] [--shards S] [--eps PCT] [--tier T] [--dsl] \
+                         [--sol orch|prompt] [--faults SLOT=ORD:FAULT,..;..] [--events FILE] \
+                         [--out FILE]";
+    let workers: usize = opt_parse(opts, "workers", 2)?;
+    if workers == 0 {
+        return Err(format!("--workers must be >= 1 ({USAGE})"));
+    }
+    let cfg = FleetConfig {
+        workers,
+        deadline: std::time::Duration::from_millis(opt_parse(opts, "deadline-ms", 30_000u64)?),
+        retries: opt_parse(opts, "retries", 3)?,
+        quarantine_after: opt_parse(opts, "quarantine-after", 3)?,
+        shards: opt_parse(opts, "shards", 0)?,
+        admission: Policy { epsilon: opt_parse::<f64>(opts, "eps", 100.0)? / 100.0, window: 0 },
+        ..FleetConfig::default()
+    };
+    // validate the fault spec up front (slot range, fault names), then
+    // hand workers the normalized per-slot form
+    let fault_specs: Vec<String> =
+        FaultPlan::parse_fleet(opts.get("faults").map(String::as_str).unwrap_or(""), workers)?
+            .iter()
+            .map(|p| p.spec())
+            .collect();
+    let events = match opts.get("events") {
+        None => EventLog::new(),
+        Some(p) if p == "true" => return Err(format!("--events needs a file path ({USAGE})")),
+        Some(p) => {
+            let f = std::fs::File::create(p).map_err(|e| format!("--events {p}: {e}"))?;
+            EventLog::with_sink(Box::new(f))
+        }
+    };
+    let spec = spec_from_opts(opts)?;
+    let bench = Bench::new();
+    let work = SuiteWork::single(spec, None, seed, bench.problems.len());
+    let exe = std::env::current_exe().map_err(|e| format!("current_exe: {e}"))?;
+    let outcome = run_fleet(
+        &bench,
+        &work,
+        &cfg,
+        subprocess_worker_factory(exe, fault_specs),
+        &events,
+    )
+    .map_err(|e| e.to_string())?;
+    events.flush();
+    let all: Vec<usize> = (0..bench.problems.len()).collect();
+    for log in &outcome.logs {
+        print_log(&bench, log, seed, &all);
+    }
+    let st = outcome.stats;
+    println!(
+        "fleet: {} workers, {} shards merged ({} assigns, {} retries, {} timeouts, \
+         {} duplicates discarded, {} respawns, {} quarantined); output is field-for-field \
+         a single-process run of the same job (seed {seed})",
+        workers, st.shards, st.assigns, st.retries, st.timeouts, st.duplicates, st.respawns,
+        st.quarantines
+    );
+    if let Some(out) = opts.get("out") {
+        let json = ucutlass_repro::util::json::Json::Arr(
+            outcome.logs.iter().map(|l| l.to_json()).collect(),
+        );
+        std::fs::write(out, json.to_string()).map_err(|e| e.to_string())?;
+        println!("(merged logs written to {out})");
+    }
+    Ok(())
+}
+
+/// `repro worker`: one fleet worker speaking the ADR-007 line protocol on
+/// stdin/stdout. Spawned by `repro serve`; not meant to be run by hand.
+/// `--faults` scripts this worker's misbehavior for the fault-injection
+/// harness; `--fault-offset` is where a respawned worker resumes the plan.
+fn cmd_worker(opts: &HashMap<String, String>) -> Result<(), String> {
+    let faults = FaultPlan::parse(opts.get("faults").map(String::as_str).unwrap_or(""))?;
+    let start_ordinal: u64 = opt_parse(opts, "fault-offset", 0)?;
+    let bench = Bench::new();
+    let wopts = WorkerOpts { faults, start_ordinal };
+    let kill = std::sync::atomic::AtomicBool::new(false);
+    let stdin = std::io::stdin();
+    let stdout = std::io::stdout();
+    worker_loop(&bench, stdin.lock(), stdout.lock(), &wopts, &kill)
 }
 
 fn cmd_validate(opts: &HashMap<String, String>, seed: u64) -> Result<(), String> {

@@ -72,6 +72,18 @@ impl StopRule {
         StopRule { best: f64::INFINITY, stale: 0 }
     }
 
+    /// The SOL-headroom band: is `t_ms` within the policy's `(1+ε)` band
+    /// above the FP16 SOL bound? This one predicate is shared by the
+    /// stopping rule (`observe` applies it to the best measurement once a
+    /// problem is ahead of its reference) and the fleet's admission
+    /// ordering (ADR-007 applies it to the *baseline*: a reference already
+    /// inside the band has little headroom left to win, so its work is
+    /// deprioritized fleet-wide) — the paper's SOL guidance applied at the
+    /// cluster level through the same arithmetic as the per-session rule.
+    pub fn sol_band(policy: &Policy, t_ms: f64, t_sol_fp16_ms: f64) -> bool {
+        policy.epsilon.is_finite() && t_ms <= (1.0 + policy.epsilon) * t_sol_fp16_ms
+    }
+
     /// Feed one attempt's measurement; `true` means the problem stops
     /// *after* this attempt (the attempt itself was still executed).
     pub fn observe(
@@ -95,7 +107,7 @@ impl StopRule {
         if self.best >= t_ref_ms {
             return false; // still behind PyTorch: always eligible
         }
-        if policy.epsilon.is_finite() && self.best <= (1.0 + policy.epsilon) * t_sol_fp16_ms {
+        if Self::sol_band(policy, self.best, t_sol_fp16_ms) {
             return true;
         }
         policy.window > 0 && self.stale >= policy.window
@@ -338,6 +350,25 @@ mod tests {
         let p = Policy::fixed();
         let times = vec![Some(1.0); 40];
         assert_eq!(stop_index(10.0, 1.0, &times, &p), 40);
+    }
+
+    #[test]
+    fn sol_band_agrees_with_the_stop_rule() {
+        // the band predicate is the SOL branch of `observe`: with the
+        // no-progress rule off and a measurement ahead of the reference,
+        // observe() stops exactly when sol_band() holds for that time
+        for &(eps, t) in &[(0.25, 1.2), (0.25, 2.0), (1.0, 1.9), (1.0, 2.1), (3.0, 3.9)] {
+            let p = Policy { epsilon: eps, window: 0 };
+            let mut rule = StopRule::new();
+            let stopped = rule.observe(10.0, 1.0, Some(t), &p);
+            assert_eq!(
+                stopped,
+                StopRule::sol_band(&p, t, 1.0),
+                "ε={eps} t={t}: observe and sol_band must agree"
+            );
+        }
+        // ε=off disables the band entirely
+        assert!(!StopRule::sol_band(&Policy::fixed(), 0.5, 1.0));
     }
 
     #[test]

@@ -36,6 +36,9 @@ pub mod stream {
     /// Measurement-noise streams (one derived stream per measurement,
     /// handed out by [`super::MeasureSeq`] — see ADR-003).
     pub const MEASURE: u64 = 0x08;
+    /// Fleet fault-injection schedules (one derived stream per worker
+    /// slot, `derive(seed, &[FAULT, slot])` — see ADR-007).
+    pub const FAULT: u64 = 0x09;
 }
 
 /// Serializable identity of a derived RNG stream: an experiment seed plus

@@ -6,7 +6,10 @@
 use ucutlass_repro::agent::controller::{ControllerKind, VariantSpec};
 use ucutlass_repro::agent::{ModelTier, RunLog};
 use ucutlass_repro::dsl::DType;
-use ucutlass_repro::eval::manifest::{suite_merge, suite_shard, SuiteShard, SuiteWork};
+use ucutlass_repro::eval::manifest::{
+    evaluate_shard, suite_merge, suite_shard, ResponseShard, SuiteShard, SuiteWork,
+    MANIFEST_VERSION, MAX_ARTIFACT_BYTES,
+};
 use ucutlass_repro::eval::{
     AnalyticEvaluator, EvalRequest, Evaluator, ManifestEvaluator, PjrtEvaluator, WorkManifest,
 };
@@ -14,6 +17,7 @@ use ucutlass_repro::exec;
 use ucutlass_repro::experiments::Bench;
 use ucutlass_repro::mantis::MantisConfig;
 use ucutlass_repro::perfmodel::CandidateConfig;
+use ucutlass_repro::util::json::Json;
 use ucutlass_repro::util::prop;
 use ucutlass_repro::util::rng::{stream, Pcg32, StreamPath};
 
@@ -85,6 +89,164 @@ fn shard_merge_runlog_json_roundtrip_is_exact() {
     .unwrap_or_else(|e| panic!("{e}"));
     assert_eq!(parsed, log);
     assert_eq!(parsed.to_json().to_string(), text, "serialization is a fixed point");
+}
+
+// ---------------------------------------------------------------------------
+// Hostile-input hardening (ADR-007 satellite): the shard parsers sit on the
+// fleet wire and on operator-supplied artifact files, so truncated,
+// corrupted, overlong, wrong-version, and duplicate-key inputs must come
+// back as in-band errors — never a panic, never a silently skewed merge.
+
+/// A cheap valid suite-shard artifact: with `of` = task count, shard 0
+/// evaluates exactly one problem.
+fn small_shard_text() -> String {
+    let bench = Bench::new();
+    let work = SuiteWork::single(
+        VariantSpec::new(ControllerKind::Mi, false, ModelTier::Mini),
+        None,
+        5,
+        bench.problems.len(),
+    );
+    let of = exec::suite_tasks(&work.work, work.problems).len();
+    suite_shard(&bench, &work, 0, of).to_json().to_string()
+}
+
+/// A small valid response-shard artifact.
+fn small_response_text(bench: &Bench) -> String {
+    let analytic =
+        AnalyticEvaluator::new(&bench.model, &bench.problems, &bench.sols, &bench.compiled);
+    let manifest = WorkManifest::new(vec![EvalRequest::baseline(0), EvalRequest::sol_gap(1)]);
+    evaluate_shard(&analytic, &manifest, 0, 1).to_json().to_string()
+}
+
+/// Re-serialize an artifact with its top-level object fields altered.
+fn mutated(text: &str, f: impl FnOnce(&mut std::collections::BTreeMap<String, Json>)) -> String {
+    let mut j = Json::parse(text).unwrap();
+    match &mut j {
+        Json::Obj(m) => f(m),
+        _ => panic!("artifact must be a JSON object"),
+    }
+    j.to_string()
+}
+
+#[test]
+fn suite_shard_parse_rejects_corrupt_artifacts_in_band() {
+    let text = small_shard_text();
+    assert!(SuiteShard::parse(&text).is_ok(), "baseline artifact is valid");
+
+    // every truncated prefix is a parse error, never a panic (compact
+    // output has no trailing whitespace, so no strict prefix is valid)
+    for cut in (0..text.len()).step_by(13).chain(text.len().saturating_sub(40)..text.len()) {
+        if !text.is_char_boundary(cut) {
+            continue;
+        }
+        assert!(
+            SuiteShard::parse(&text[..cut]).is_err(),
+            "a {cut}-byte prefix must fail in-band"
+        );
+    }
+
+    // shape gates
+    let bad = mutated(&text, |m| {
+        m.insert("of".into(), Json::Num(0.0));
+    });
+    assert!(SuiteShard::parse(&bad).unwrap_err().contains("of must be >= 1"));
+    let bad = mutated(&text, |m| {
+        m.insert("index".into(), Json::Num(9.0));
+        m.insert("of".into(), Json::Num(9.0));
+    });
+    assert!(SuiteShard::parse(&bad).unwrap_err().contains("out of range"));
+
+    // version gates: a future build and a pre-version artifact (= v1)
+    // are both rejected loudly — a mixed-version fleet must not merge
+    let bad = mutated(&text, |m| {
+        m.insert("version".into(), Json::Num((MANIFEST_VERSION + 1) as f64));
+    });
+    assert!(SuiteShard::parse(&bad).unwrap_err().contains("unsupported version"));
+    let bad = mutated(&text, |m| {
+        m.remove("version");
+    });
+    assert!(SuiteShard::parse(&bad).unwrap_err().contains("unsupported version 1"));
+
+    // a duplicated task result must not get the chance to merge twice
+    let bad = mutated(&text, |m| {
+        if let Some(Json::Arr(rs)) = m.get_mut("results") {
+            let first = rs[0].clone();
+            rs.push(first);
+        }
+    });
+    assert!(SuiteShard::parse(&bad).unwrap_err().contains("duplicate task"));
+}
+
+#[test]
+fn response_shard_parse_rejects_corrupt_artifacts_in_band() {
+    let bench = Bench::new();
+    let text = small_response_text(&bench);
+    assert!(ResponseShard::parse(&text).is_ok(), "baseline artifact is valid");
+
+    for cut in 0..text.len() {
+        assert!(ResponseShard::parse(&text[..cut]).is_err(), "{cut}-byte prefix");
+    }
+
+    let bad = mutated(&text, |m| {
+        m.insert("of".into(), Json::Num(0.0));
+    });
+    assert!(ResponseShard::parse(&bad).unwrap_err().contains("of must be >= 1"));
+    let bad = mutated(&text, |m| {
+        m.insert("index".into(), Json::Num(4.0));
+    });
+    assert!(ResponseShard::parse(&bad).unwrap_err().contains("out of range"));
+    let bad = mutated(&text, |m| {
+        m.insert("version".into(), Json::Num((MANIFEST_VERSION + 1) as f64));
+    });
+    assert!(ResponseShard::parse(&bad).unwrap_err().contains("unsupported version"));
+    let bad = mutated(&text, |m| {
+        m.remove("version");
+    });
+    assert!(ResponseShard::parse(&bad).unwrap_err().contains("unsupported version 1"));
+    let bad = mutated(&text, |m| {
+        if let Some(Json::Arr(rs)) = m.get_mut("responses") {
+            let first = rs[0].clone();
+            rs.push(first);
+        }
+    });
+    assert!(ResponseShard::parse(&bad).unwrap_err().contains("duplicate response key"));
+}
+
+#[test]
+fn prop_shard_parsers_never_panic_on_byte_flips() {
+    let bench = Bench::new();
+    let suite_text = small_shard_text();
+    let resp_text = small_response_text(&bench);
+    prop::check("shard-parse-byte-flips", 120, |rng| {
+        for base in [&suite_text, &resp_text] {
+            let mut bytes = base.clone().into_bytes();
+            for _ in 0..1 + rng.below(3) {
+                let pos = rng.below(bytes.len());
+                bytes[pos] = b' ' + rng.below(95) as u8; // printable ASCII
+            }
+            if let Ok(s) = String::from_utf8(bytes) {
+                // the outcome may be Ok (flip landed inside string
+                // content) or an in-band Err; the property is "no panic"
+                let _ = SuiteShard::parse(&s);
+                let _ = ResponseShard::parse(&s);
+            }
+        }
+    });
+}
+
+#[test]
+fn overlong_artifacts_are_rejected_before_parsing() {
+    // one byte over the cap: every parse entry point refuses in-band
+    // without attempting a 64 MiB JSON parse
+    let big = "x".repeat(MAX_ARTIFACT_BYTES + 1);
+    for err in [
+        SuiteShard::parse(&big).unwrap_err(),
+        ResponseShard::parse(&big).unwrap_err(),
+        WorkManifest::parse(&big).unwrap_err(),
+    ] {
+        assert!(err.contains("over the"), "got: {err}");
+    }
 }
 
 /// Random request generator for the batch≡scalar property.

@@ -1,0 +1,197 @@
+//! Fleet end-to-end tests (ADR-007 acceptance): real `repro worker`
+//! subprocesses driven by the coordinator — and the `repro serve` CLI —
+//! must converge to output field-for-field identical to a single-process
+//! `eval_variants`, under scripted faults included, and must fail in-band
+//! (nonzero exit, `error:` on stderr) when every worker dies.
+
+use std::path::PathBuf;
+use std::process::Command;
+use std::time::Duration;
+
+use ucutlass_repro::agent::controller::{ControllerKind, VariantSpec};
+use ucutlass_repro::agent::ModelTier;
+use ucutlass_repro::eval::manifest::SuiteWork;
+use ucutlass_repro::exec::eval_variants;
+use ucutlass_repro::experiments::Bench;
+use ucutlass_repro::fleet::{
+    run_fleet, subprocess_worker_factory, EventLog, FleetConfig, FleetError,
+};
+use ucutlass_repro::mantis::MantisConfig;
+use ucutlass_repro::util::json::Json;
+
+fn exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_repro"))
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("repro_fleet_{}_{name}", std::process::id()))
+}
+
+fn golden_json(bench: &Bench, work: &SuiteWork) -> String {
+    let logs = eval_variants(bench, &work.work, work.seed, 1);
+    Json::Arr(logs.iter().map(|l| l.to_json()).collect()).to_string()
+}
+
+/// Generous deadlines: debug builds compute shards slowly, and a spurious
+/// timeout would make these tests racy. Fault-timing behavior is pinned by
+/// the in-process unit tests; here the subject is the subprocess path.
+fn cfg(workers: usize) -> FleetConfig {
+    FleetConfig {
+        workers,
+        deadline: Duration::from_secs(180),
+        backoff_base: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(50),
+        ..FleetConfig::default()
+    }
+}
+
+/// One flat variant (fans per problem) + one sequentially-coupled
+/// orchestrated variant (cross-memory on → a single whole-variant task),
+/// mirroring the shard/merge golden job shape.
+fn mixed_work(bench: &Bench) -> SuiteWork {
+    SuiteWork {
+        seed: 77,
+        problems: bench.problems.len(),
+        work: vec![
+            (VariantSpec::new(ControllerKind::Mi, false, ModelTier::Mini), None),
+            (
+                VariantSpec::new(ControllerKind::OrchestratedSol, false, ModelTier::Mini),
+                Some(MantisConfig::default()),
+            ),
+        ],
+    }
+}
+
+#[test]
+fn subprocess_fleet_matches_single_process_run() {
+    let bench = Bench::new();
+    let work = mixed_work(&bench);
+    let events = EventLog::new();
+    let out = run_fleet(
+        &bench,
+        &work,
+        &cfg(2),
+        subprocess_worker_factory(exe(), vec![String::new(); 2]),
+        &events,
+    )
+    .unwrap_or_else(|e| panic!("faultless subprocess fleet must converge: {e}"));
+    let got = Json::Arr(out.logs.iter().map(|l| l.to_json()).collect()).to_string();
+    assert_eq!(got, golden_json(&bench, &work), "byte-identical to one process");
+    assert_eq!(out.stats.retries, 0);
+    assert_eq!(events.count("merge"), out.stats.shards);
+}
+
+#[test]
+fn subprocess_fleet_converges_through_worker_crashes() {
+    let bench = Bench::new();
+    let work = SuiteWork::single(
+        VariantSpec::new(ControllerKind::Mi, false, ModelTier::Mini),
+        None,
+        41,
+        bench.problems.len(),
+    );
+    let events = EventLog::new();
+    // slot 0 crashes on its first and third assignments; the respawned
+    // processes resume the plan via --fault-offset
+    let out = run_fleet(
+        &bench,
+        &work,
+        &cfg(2),
+        subprocess_worker_factory(exe(), vec!["0:crash,2:crash".into(), String::new()]),
+        &events,
+    )
+    .unwrap_or_else(|e| panic!("fleet must converge through crashes: {e}"));
+    let got = Json::Arr(out.logs.iter().map(|l| l.to_json()).collect()).to_string();
+    assert_eq!(got, golden_json(&bench, &work));
+    assert!(out.stats.respawns >= 2, "each crash respawns: {:?}", out.stats);
+    assert!(events.count("respawn") >= 2);
+}
+
+#[test]
+fn serve_cli_end_to_end_with_crash_recovery() {
+    let out_path = tmp("serve_out.json");
+    let events_path = tmp("serve_events.jsonl");
+    let output = Command::new(exe())
+        .args([
+            "serve", "--workers", "2", "--tier", "mini", "--seed", "9",
+            "--deadline-ms", "180000", "--faults", "0=0:crash",
+        ])
+        .arg("--out")
+        .arg(&out_path)
+        .arg("--events")
+        .arg(&events_path)
+        .output()
+        .expect("run repro serve");
+    assert!(
+        output.status.success(),
+        "serve must exit 0; stderr: {}",
+        String::from_utf8_lossy(&output.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&output.stdout);
+    assert!(stdout.contains("shards merged"), "summary line present: {stdout}");
+
+    // merged logs are byte-identical to the single-process evaluation of
+    // the same spec and seed
+    let bench = Bench::new();
+    let work = SuiteWork::single(
+        VariantSpec::new(ControllerKind::Mi, false, ModelTier::Mini),
+        None,
+        9,
+        bench.problems.len(),
+    );
+    let got = std::fs::read_to_string(&out_path).expect("serve wrote --out");
+    assert_eq!(got, golden_json(&bench, &work), "CLI output matches single-process run");
+
+    // the event log is JSONL with assign/merge/respawn records
+    let ev = std::fs::read_to_string(&events_path).expect("serve wrote --events");
+    let mut kinds = std::collections::HashSet::new();
+    for line in ev.lines() {
+        let j = Json::parse(line).unwrap_or_else(|e| panic!("event not JSON: {e}: {line}"));
+        assert!(j.get("t_ms").is_some());
+        kinds.insert(j.get("event").and_then(|k| k.as_str()).expect("event kind").to_string());
+    }
+    for want in ["spawn", "ready", "assign", "merge", "crash", "respawn", "done"] {
+        assert!(kinds.contains(want), "event log must record `{want}`; got {kinds:?}");
+    }
+    let _ = std::fs::remove_file(&out_path);
+    let _ = std::fs::remove_file(&events_path);
+}
+
+#[test]
+fn serve_cli_all_workers_dead_exits_nonzero_in_band() {
+    // one worker, quarantined on its first crash: nobody left to run the
+    // job — must exit nonzero with an in-band error, not panic or hang
+    let output = Command::new(exe())
+        .args([
+            "serve", "--workers", "1", "--tier", "mini", "--quarantine-after", "1",
+            "--deadline-ms", "180000", "--faults", "0=0:crash",
+        ])
+        .output()
+        .expect("run repro serve");
+    assert!(!output.status.success(), "all-dead must exit nonzero");
+    let stderr = String::from_utf8_lossy(&output.stderr);
+    assert!(stderr.contains("error:"), "in-band error on stderr: {stderr}");
+    assert!(
+        stderr.contains("workers dead or quarantined"),
+        "names the failure mode: {stderr}"
+    );
+}
+
+#[test]
+fn fleet_error_display_names_every_failure_mode() {
+    // in-band error surface the CLI prints; pinned so messages stay useful
+    let cases = [
+        (FleetError::Spawn("no exe".into()), "spawning worker"),
+        (
+            FleetError::RetriesExhausted { shard: 3, failures: 4, last: "deadline".into() },
+            "shard 3 exhausted",
+        ),
+        (FleetError::AllWorkersDead { completed: 2, total: 9 }, "2/9 shards merged"),
+        (FleetError::Merge("duplicate task".into()), "merging shards"),
+        (FleetError::Internal("oops".into()), "coordinator"),
+    ];
+    for (err, needle) in cases {
+        let msg = err.to_string();
+        assert!(msg.contains(needle), "`{msg}` should contain `{needle}`");
+    }
+}
