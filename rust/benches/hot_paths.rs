@@ -440,4 +440,131 @@ fn main() {
         }
         let _ = std::fs::remove_file(&trace_path);
     }
+
+    // ---- binary eval store vs JSONL trace replay (ADR-008 headline) -----
+    // Cold-open cost — the JSONL evaluator parses every line before the
+    // first lookup, the store reads header + index + trailer only — and
+    // the hit path serving the full suite enumeration from each artifact.
+    {
+        use ucutlass_repro::eval::{OwnedAnalytic, RecordingEvaluator, TraceEvaluator};
+        use ucutlass_repro::store::{CacheMode, CachedEvaluator, EvalStore, StoreWriter};
+        use ucutlass_repro::util::json::Json;
+        use ucutlass_repro::util::rng::{stream, StreamPath};
+
+        let dtypes = [dsl::DType::Fp32, dsl::DType::Fp16, dsl::DType::Bf16];
+        let mut reqs: Vec<EvalRequest> = Vec::new();
+        for p in 0..problems.len() {
+            reqs.push(EvalRequest::baseline(p));
+            reqs.push(EvalRequest::measured_baseline(
+                p,
+                StreamPath::new(12345, &[stream::MEASURE, stream::FLAT_CONTROLLER, p as u64, 0]),
+            ));
+            reqs.push(EvalRequest::sol_gap(p));
+            for (i, &tile) in TILES.iter().enumerate() {
+                for dt in dtypes {
+                    let cfg = CandidateConfig::library(tile, dt);
+                    reqs.push(EvalRequest::candidate(p, cfg.clone()));
+                    reqs.push(
+                        EvalRequest::candidate(p, cfg.clone()).with_hash(format!("{i:08x}")),
+                    );
+                    reqs.push(EvalRequest::measured(
+                        p,
+                        cfg,
+                        StreamPath::new(12345, &[stream::MEASURE, p as u64, i as u64]),
+                    ));
+                }
+            }
+        }
+        let n = reqs.len();
+
+        let trace_path = std::env::temp_dir()
+            .join(format!("ucutlass_bench_store_{}.jsonl", std::process::id()));
+        let store_path = std::env::temp_dir()
+            .join(format!("ucutlass_bench_store_{}.store", std::process::id()));
+
+        // record both artifacts from one live pass
+        let responses = {
+            let rec = RecordingEvaluator::create(OwnedAnalytic::new(), &trace_path).unwrap();
+            let responses = rec.eval_batch(&reqs);
+            drop(rec);
+            let mut w = StoreWriter::create(&store_path).unwrap();
+            for (r, v) in reqs.iter().zip(&responses) {
+                w.append(r, v).unwrap();
+            }
+            w.finish().unwrap();
+            responses
+        };
+
+        let t0 = Instant::now();
+        let trace = TraceEvaluator::load(&trace_path).unwrap();
+        let t_trace_open = t0.elapsed();
+        let t1 = Instant::now();
+        let store = EvalStore::open(&store_path).unwrap();
+        let t_store_open = t1.elapsed();
+        assert_eq!(store.len(), n, "enumeration keys must be distinct");
+        let trace_bytes = std::fs::metadata(&trace_path).unwrap().len();
+        let store_open_bytes = store.open_bytes();
+        drop(store);
+
+        // hit path: serve the whole enumeration from each artifact (the
+        // store side is a cold CachedEvaluator — preads + decode, no
+        // memory layer warm yet)
+        let t2 = Instant::now();
+        let from_trace = trace.eval_batch(&reqs);
+        let t_trace_serve = t2.elapsed();
+        assert_eq!(trace.monitor().misses(), 0);
+        let cached = CachedEvaluator::open(&store_path, CacheMode::Offline).unwrap();
+        let t3 = Instant::now();
+        let from_store = cached.eval_batch(&reqs);
+        let t_store_serve = t3.elapsed();
+        assert_eq!(cached.monitor().misses(), 0);
+
+        // bitwise contract spot-check before publishing numbers
+        for ((want, a), b) in responses.iter().zip(&from_trace).zip(&from_store) {
+            assert_eq!(a, want);
+            assert_eq!(b, want);
+            assert_eq!(a.value.to_bits(), b.value.to_bits());
+        }
+
+        let open_ratio = t_trace_open.as_secs_f64() / t_store_open.as_secs_f64().max(1e-9);
+        println!(
+            "{:40} {:>9.2} ms jsonl   {:>7.2} ms store -> {:.0}x; bytes before first \
+             lookup {} vs {}",
+            format!("eval store cold open ({n} records)"),
+            t_trace_open.as_secs_f64() * 1e3,
+            t_store_open.as_secs_f64() * 1e3,
+            open_ratio,
+            trace_bytes,
+            store_open_bytes,
+        );
+        println!(
+            "{:40} {:>9.2} ms jsonl   {:>7.2} ms store (lookup + decode + checksum)",
+            format!("eval store hit path (x{n})"),
+            t_trace_serve.as_secs_f64() * 1e3,
+            t_store_serve.as_secs_f64() * 1e3,
+        );
+
+        // machine-readable perf trajectory (BENCH_trace.json next to
+        // Cargo.toml; re-run `cargo bench` to refresh)
+        let mut j = Json::obj();
+        j.set("bench", "eval_store_vs_jsonl_trace")
+            .set("records", n as u64)
+            .set("jsonl_bytes", trace_bytes)
+            .set("jsonl_open_ms", t_trace_open.as_secs_f64() * 1e3)
+            .set("jsonl_serve_ms", t_trace_serve.as_secs_f64() * 1e3)
+            .set("store_bytes_read_at_open", store_open_bytes)
+            .set("store_open_ms", t_store_open.as_secs_f64() * 1e3)
+            .set("store_serve_ms", t_store_serve.as_secs_f64() * 1e3)
+            .set("open_speedup", open_ratio)
+            .set(
+                "open_bytes_ratio",
+                trace_bytes as f64 / store_open_bytes.max(1) as f64,
+            );
+        match std::fs::write("BENCH_trace.json", j.to_string()) {
+            Ok(()) => println!("(wrote BENCH_trace.json)"),
+            Err(e) => println!("(could not write BENCH_trace.json: {e})"),
+        }
+        let _ = std::fs::remove_file(&trace_path);
+        let _ = std::fs::remove_file(&store_path);
+    }
 }

@@ -25,7 +25,12 @@
 //! * [`trace::RecordingEvaluator`] / [`trace::TraceEvaluator`] — the
 //!   record/replay backends (ADR-004): persist every `(request, response)`
 //!   pair of a real run to a JSONL trace and replay experiments offline
-//!   from it (`repro record` / `repro replay`).
+//!   from it (`repro record` / `repro replay`);
+//! * `store::CachedEvaluator` (ADR-008, in the sibling [`crate::store`]
+//!   module) — the persistent cross-run face: a binary content-addressed
+//!   store layered memory → disk → live backend with write-through
+//!   (`repro … --cache PATH`), bridging losslessly to the JSONL trace
+//!   via `repro cache export`/`import`.
 //!
 //! Requests are *identities*, not closures: the measurement noise of a
 //! `Measured` request comes from the derived RNG stream its

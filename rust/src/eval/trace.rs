@@ -198,13 +198,16 @@ impl TraceMonitor {
 // Recording
 // ===========================================================================
 
-fn pair_to_line(req: &EvalRequest, resp: &EvalResponse) -> String {
+/// One canonical trace line. `pub(crate)` so the binary store's
+/// `repro cache export` bridge (`store::export_jsonl`) emits bytes a
+/// recorder would have — the two writers cannot drift apart.
+pub(crate) fn pair_to_line(req: &EvalRequest, resp: &EvalResponse) -> String {
     let mut o = Json::obj();
     o.set("req", req.to_json()).set("resp", resp.to_json());
     o.to_string()
 }
 
-fn header_line() -> String {
+pub(crate) fn header_line() -> String {
     let mut o = Json::obj();
     o.set("trace", "ucutlass-eval").set("version", TRACE_VERSION);
     o.to_string()
@@ -377,6 +380,14 @@ pub enum MissPolicy {
     Strict,
     /// Delegate to a live backend and append its answer to the trace, so
     /// an incrementally changed run only pays for the new measurements.
+    ///
+    /// Extending a JSONL trace re-parses the whole file on open (the
+    /// serving map and the appender's dedup set are both rebuilt from a
+    /// full `parse_trace` pass). That is inherent to the line format;
+    /// when extension cost matters, use the binary store instead
+    /// (`store::CachedEvaluator` in write-through mode), whose
+    /// `StoreWriter::extend` seeds dedup and offsets from the store's
+    /// index footer without re-reading a single record payload.
     Fallthrough(Box<DynEvaluator>),
 }
 
@@ -444,13 +455,20 @@ impl TraceEvaluator {
     }
 }
 
-/// Parse trace text into the serving map. Every malformed line is an
-/// in-band error naming its 1-based line number. The map is pre-sized
-/// from the line count so a multi-thousand-line trace loads without
-/// rehash churn.
-fn parse_trace(text: &str, origin: &str) -> Result<HashMap<EvalKey, EvalResponse>, String> {
+/// Parse trace text into deduplicated `(request, response)` pairs in
+/// file order, with full validation (version gate, per-line JSON, key
+/// match, conflicting-duplicate rejection). Every malformed line is an
+/// in-band error naming its 1-based line number. An identical duplicate
+/// line is skipped (first occurrence wins), so the pair list holds each
+/// key exactly once — which is what `store::import_jsonl` relies on to
+/// rebuild a binary store deterministically.
+pub(crate) fn parse_trace_pairs(
+    text: &str,
+    origin: &str,
+) -> Result<Vec<(EvalRequest, EvalResponse)>, String> {
     let lines = text.as_bytes().iter().filter(|&&b| b == b'\n').count() + 1;
-    let mut by_key = HashMap::with_capacity(lines);
+    let mut by_key: HashMap<EvalKey, EvalResponse> = HashMap::with_capacity(lines);
+    let mut pairs = Vec::with_capacity(lines);
     for (idx, raw) in text.lines().enumerate() {
         let n = idx + 1;
         let line = raw.trim();
@@ -494,8 +512,22 @@ fn parse_trace(text: &str, origin: &str) -> Result<HashMap<EvalKey, EvalResponse
                     req.key()
                 ));
             }
+            continue; // identical duplicate: first occurrence wins
         }
-        by_key.insert(key, resp);
+        by_key.insert(key, resp.clone());
+        pairs.push((req, resp));
+    }
+    Ok(pairs)
+}
+
+/// Parse trace text into the serving map (the replay path keeps only
+/// responses; the pair form above preserves requests and order for the
+/// binary-store bridge).
+fn parse_trace(text: &str, origin: &str) -> Result<HashMap<EvalKey, EvalResponse>, String> {
+    let pairs = parse_trace_pairs(text, origin)?;
+    let mut by_key = HashMap::with_capacity(pairs.len());
+    for (req, resp) in pairs {
+        by_key.insert(req.eval_key(), resp);
     }
     Ok(by_key)
 }

@@ -684,9 +684,14 @@ impl Drop for ProcessLink {
 /// Spawn `repro worker` subprocesses from `exe` (normally
 /// `std::env::current_exe()`), one per slot, forwarding each slot's fault
 /// spec (empty string = well-behaved) and the respawn `--fault-offset`.
+/// `extra_args` are appended to every worker's command line verbatim —
+/// `repro serve` uses this to hand workers the shared eval cache
+/// (`--cache PATH [--offline]`, ADR-008) so no fleet node re-measures a
+/// landed key.
 pub fn subprocess_worker_factory(
     exe: std::path::PathBuf,
     fault_specs: Vec<String>,
+    extra_args: Vec<String>,
 ) -> impl FnMut(usize, u64, u64, Sender<(u64, WireEvent)>) -> SpawnResult {
     move |slot, start_ordinal, token, tx| {
         let mut cmd = std::process::Command::new(&exe);
@@ -696,6 +701,9 @@ pub fn subprocess_worker_factory(
         }
         if start_ordinal > 0 {
             cmd.arg("--fault-offset").arg(start_ordinal.to_string());
+        }
+        for a in &extra_args {
+            cmd.arg(a);
         }
         cmd.stdin(std::process::Stdio::piped())
             .stdout(std::process::Stdio::piped())

@@ -39,6 +39,14 @@
 //!   every scheduler/policy experiment offline from the trace. Serving
 //!   stores index by the allocation-free interned `EvalKey` (ADR-005);
 //!   string keys survive only in JSON and diagnostics.
+//! * [`store`] — the persistent content-addressed eval store (ADR-008):
+//!   binary trace format v1 (append-only length-prefixed records, magic +
+//!   version header, key→offset index footer — a million-measurement
+//!   store opens and serves without parsing JSON) and the write-through
+//!   `CachedEvaluator` behind `repro … --cache PATH`, layering memory →
+//!   store → live backend so no measurement is ever paid for twice
+//!   across runs, users, or fleet nodes; `repro cache
+//!   stats|export|import|compact` bridges losslessly to JSONL v2.
 //! * [`fleet`] — the fault-tolerant fleet coordinator behind `repro serve`
 //!   (ADR-007): N `repro worker` subprocesses driven over a version-gated
 //!   line protocol with deadlines, bounded retries, straggler re-issue,
@@ -65,6 +73,7 @@ pub mod mantis;
 pub mod scheduler;
 pub mod exec;
 pub mod eval;
+pub mod store;
 pub mod fleet;
 pub mod integrity;
 pub mod metrics;

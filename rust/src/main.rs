@@ -13,6 +13,8 @@
 //! repro replay <exp|run|schedule|sweep> ... --trace PATH [--live]  replay them offline
 //! repro serve --workers N [--deadline-ms D] [--retries R] ...      fleet coordinator (ADR-007)
 //! repro worker [--faults SPEC] [--fault-offset N]                  one fleet worker (internal)
+//! repro <exp|run|schedule|sweep> ... --cache PATH [--offline]      persistent eval cache (ADR-008)
+//! repro cache <stats|export|import|compact> ...                    inspect / bridge a cache store
 //! repro list                                                 list the 59 problems
 //! ```
 //!
@@ -40,6 +42,9 @@ use ucutlass_repro::metrics;
 use ucutlass_repro::report::table;
 use ucutlass_repro::scheduler::{self, Policy};
 use ucutlass_repro::sol;
+use ucutlass_repro::store::{
+    self, cache_session, CacheSessionMode, EvalStore, StoreMonitor,
+};
 use ucutlass_repro::{dsl, runtime};
 
 fn main() -> ExitCode {
@@ -127,6 +132,36 @@ fn run(args: &[String]) -> Result<(), String> {
     if opts.contains_key("live") && !matches!(cmd, Some("replay") | Some("sweep")) {
         return Err("--live is only meaningful under `repro replay` / `repro sweep`".into());
     }
+    if opts.contains_key("cache")
+        && !matches!(
+            cmd,
+            Some("exp") | Some("run") | Some("schedule") | Some("sweep") | Some("serve")
+                | Some("worker")
+        )
+    {
+        return Err(
+            "--cache is only meaningful under `repro exp|run|schedule|sweep|serve|worker` \
+             (inspect a store with `repro cache stats PATH`)"
+                .into(),
+        );
+    }
+    if opts.contains_key("offline") && !opts.contains_key("cache") {
+        return Err("--offline needs --cache PATH (serve this run entirely from the store)".into());
+    }
+    if opts.contains_key("cache") && opts.contains_key("trace") {
+        return Err(
+            "--cache and --trace are mutually exclusive oracles (bridge between them with \
+             `repro cache export|import`)"
+                .into(),
+        );
+    }
+    // `--cache` on exp/run/schedule/sweep wraps the subcommand in a cache
+    // session the way `repro record`/`replay` wrap it in a trace session
+    if opts.contains_key("cache")
+        && matches!(cmd, Some("exp") | Some("run") | Some("schedule") | Some("sweep"))
+    {
+        return cmd_cached(&pos, &opts, seed, jobs);
+    }
     match cmd {
         Some("exp") => cmd_exp(&pos, &opts, seed, jobs, None),
         Some("sol") => cmd_sol(&pos),
@@ -148,6 +183,7 @@ fn run(args: &[String]) -> Result<(), String> {
         Some("merge") => cmd_merge(&pos, &opts),
         Some("serve") => cmd_serve(&opts, seed),
         Some("worker") => cmd_worker(&opts),
+        Some("cache") => cmd_cache(&pos, &opts),
         Some("list") => cmd_list(),
         _ => {
             println!("{}", HELP);
@@ -192,11 +228,158 @@ fn cmd_traced(
         "run" => cmd_run(inner, opts, seed, jobs, Some(oracle))?,
         // sweep gets the monitor too: it must refuse to persist its --out
         // grid when the trace had misses or I/O errors
-        "sweep" => cmd_sweep(opts, seed, jobs, Some((oracle, monitor.clone())))?,
+        "sweep" => {
+            cmd_sweep(opts, seed, jobs, Some((oracle, OracleMonitor::Trace(monitor.clone()))))?
+        }
         _ => cmd_schedule(opts, seed, jobs, Some(oracle))?,
     }
     println!("{}", monitor.summary());
     monitor.check()
+}
+
+/// The session monitor of whichever oracle wraps a subcommand — a traced
+/// run's `TraceMonitor` or a cached run's `StoreMonitor`. `cmd_sweep`
+/// only needs the shared verdict surface (summary + in-band check before
+/// persisting `--out`), so it takes this instead of a concrete monitor.
+enum OracleMonitor {
+    Trace(TraceMonitor),
+    Store(StoreMonitor),
+}
+
+impl OracleMonitor {
+    fn summary(&self) -> String {
+        match self {
+            OracleMonitor::Trace(m) => m.summary(),
+            OracleMonitor::Store(m) => m.summary(),
+        }
+    }
+
+    fn check(&self) -> Result<(), String> {
+        match self {
+            OracleMonitor::Trace(m) => m.check(),
+            OracleMonitor::Store(m) => m.check(),
+        }
+    }
+}
+
+/// `repro <exp|run|schedule|sweep> … --cache PATH [--offline]`
+/// (ADR-008): run the subcommand with the persistent eval store layered
+/// over the live backend. Without `--offline` the session is
+/// write-through — hits are served from the store, misses are measured
+/// live and appended, so the next run (any process, any fleet node)
+/// never pays for them again. With `--offline` there is no live backend
+/// at all: a store miss answers in-band and fails the session check,
+/// proving the run was reproduced entirely from the cache.
+fn cmd_cached(
+    pos: &[String],
+    opts: &HashMap<String, String>,
+    seed: u64,
+    jobs: usize,
+) -> Result<(), String> {
+    const USAGE: &str = "usage: repro <exp|run|schedule|sweep> [...] --cache PATH [--offline]";
+    let path = opts.get("cache").expect("dispatcher checked --cache");
+    if path == "true" {
+        return Err(format!("--cache needs a file path ({USAGE})"));
+    }
+    let mode = if opts.contains_key("offline") {
+        CacheSessionMode::Offline
+    } else {
+        CacheSessionMode::WriteThrough
+    };
+    let (oracle, monitor) = cache_session(mode, path.into())?;
+    match pos.first().map(String::as_str) {
+        Some("exp") => cmd_exp(pos, opts, seed, jobs, Some(oracle))?,
+        Some("run") => cmd_run(pos, opts, seed, jobs, Some(oracle))?,
+        // sweep gets the monitor: a miss-poisoned grid must fail before
+        // --out is persisted, exactly as in the traced path
+        Some("sweep") => {
+            cmd_sweep(opts, seed, jobs, Some((oracle, OracleMonitor::Store(monitor.clone()))))?
+        }
+        _ => cmd_schedule(opts, seed, jobs, Some(oracle))?,
+    }
+    // the oracle was dropped inside the subcommand (Bench owns it), so
+    // the store's index + trailer are on disk before we report
+    println!("{}", monitor.summary());
+    monitor.check()
+}
+
+/// `repro cache <stats|export|import|compact>`: inspect and maintain
+/// binary eval stores. `export`/`import` bridge losslessly to the JSONL
+/// v2 trace, which stays the diagnostic/interchange format (floats
+/// travel as shortest-roundtrip decimals that reparse bit-identically).
+fn cmd_cache(pos: &[String], opts: &HashMap<String, String>) -> Result<(), String> {
+    const USAGE: &str = "usage: repro cache stats STORE | cache export STORE TRACE | \
+                         cache import TRACE STORE | cache compact STORE --out STORE2";
+    match pos.get(1).map(String::as_str) {
+        Some("stats") => {
+            let path = pos.get(2).ok_or(format!("cache stats STORE ({USAGE})"))?;
+            let store = EvalStore::open(path)?;
+            let mut pass = 0u64;
+            let mut fail = 0u64;
+            let mut by_kind: std::collections::BTreeMap<String, u64> = Default::default();
+            let mut problems: std::collections::BTreeSet<usize> = Default::default();
+            for key in store.keys() {
+                let (req, resp) = store.get_pair(key)?.expect("indexed key has a record");
+                if resp.pass {
+                    pass += 1;
+                } else {
+                    fail += 1;
+                }
+                *by_kind.entry(format!("{:?}", req.kind)).or_insert(0) += 1;
+                problems.insert(req.problem);
+            }
+            println!("store {path}: format v{}", store::STORE_VERSION);
+            println!(
+                "  {} record(s) ({pass} pass, {fail} fail) across {} problem(s)",
+                store.len(),
+                problems.len()
+            );
+            for (kind, n) in &by_kind {
+                println!("  {kind}: {n}");
+            }
+            println!(
+                "  {} bytes on disk; open reads {} bytes (header + index + trailer), \
+                 no JSON parsed",
+                store.file_bytes(),
+                store.open_bytes()
+            );
+            println!("  all record checksums verified");
+            Ok(())
+        }
+        Some("export") => {
+            let src = pos.get(2).ok_or(format!("cache export STORE TRACE ({USAGE})"))?;
+            let dst = pos.get(3).ok_or(format!("cache export STORE TRACE ({USAGE})"))?;
+            let store = EvalStore::open(src)?;
+            let n = store::export_jsonl(&store, dst)?;
+            println!(
+                "exported {n} record(s) from {src} to JSONL v2 trace {dst} (replayable with \
+                 `repro replay … --trace {dst}`)"
+            );
+            Ok(())
+        }
+        Some("import") => {
+            let src = pos.get(2).ok_or(format!("cache import TRACE STORE ({USAGE})"))?;
+            let dst = pos.get(3).ok_or(format!("cache import TRACE STORE ({USAGE})"))?;
+            let n = store::import_jsonl(src, dst)?;
+            println!("imported {n} record(s) from JSONL trace {src} into store {dst}");
+            Ok(())
+        }
+        Some("compact") => {
+            let src = pos.get(2).ok_or(format!("cache compact STORE --out STORE2 ({USAGE})"))?;
+            let dst = match opts.get("out") {
+                Some(p) if p != "true" => p,
+                _ => return Err(format!("cache compact needs --out STORE2 ({USAGE})")),
+            };
+            let store = EvalStore::open(src)?;
+            let (n, bytes_in, bytes_out) = store::compact_store(&store, dst)?;
+            println!(
+                "compacted {src} ({bytes_in} bytes) into {dst} ({bytes_out} bytes): \
+                 {n} record(s), every checksum verified"
+            );
+            Ok(())
+        }
+        _ => Err(USAGE.into()),
+    }
 }
 
 const HELP: &str = "\
@@ -222,6 +405,11 @@ repro — µCUTLASS + SOL-guidance reproduction (see README.md)
             [--shards S] [--eps 100] --tier <mini|mid|max> [--dsl] [--sol <orch|prompt>]
             [--seed N] [--faults \"0=0:crash;1=2:garbage\"] [--events FILE] [--out FILE]
   repro worker [--faults ORD:FAULT,..] [--fault-offset N]   (spawned by serve)
+  repro <exp|run|schedule|sweep|serve> [...] --cache PATH [--offline]
+  repro cache stats STORE
+  repro cache export STORE TRACE.jsonl
+  repro cache import TRACE.jsonl STORE
+  repro cache compact STORE --out STORE2
   repro list
 
   --jobs N fans (variant, problem, seed) tasks across N worker threads
@@ -245,6 +433,19 @@ repro — µCUTLASS + SOL-guidance reproduction (see README.md)
   per slot (crash|hang|truncate|garbage|wrong-version|duplicate) for the
   fault-injection harness; --events streams the coordinator's decision
   log (assign/retry/quarantine/merge...) as JSONL.
+  --cache PATH layers the persistent content-addressed eval store over
+  the live backend (ADR-008): hits are served from the store (binary
+  format v1 — the store opens by reading its key->offset index, no JSON
+  parsed), misses are measured live and written through, so no (problem,
+  config, seed) measurement is ever paid for twice across runs, users,
+  or fleet nodes. --offline removes the live backend entirely: a miss
+  answers in-band and fails the command, proving the run was reproduced
+  from the cache alone. Under serve, the coordinator opens the store
+  read-only and forwards --cache to every worker (fleets consume stores;
+  recording runs produce them). `repro cache` inspects a store (stats),
+  bridges it losslessly to/from the JSONL v2 diagnostic format
+  (export/import; floats survive bit-identically), and rewrites it
+  densely with full verification (compact).
   sweep replays the full 72-policy fig8/fig9 scheduler grid from ONE
   exhausted session pass per variant (ADR-005): sessions are driven once
   to budget exhaustion, every (eps, w) stopping rule is applied offline,
@@ -516,7 +717,7 @@ fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<(), String> {
     const USAGE: &str = "repro serve --workers N [--deadline-ms D] [--retries R] \
                          [--quarantine-after K] [--shards S] [--eps PCT] [--tier T] [--dsl] \
                          [--sol orch|prompt] [--faults SLOT=ORD:FAULT,..;..] [--events FILE] \
-                         [--out FILE]";
+                         [--cache PATH [--offline]] [--out FILE]";
     let workers: usize = opt_parse(opts, "workers", 2)?;
     if workers == 0 {
         return Err(format!("--workers must be >= 1 ({USAGE})"));
@@ -546,14 +747,41 @@ fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<(), String> {
         }
     };
     let spec = spec_from_opts(opts)?;
-    let bench = Bench::new();
+    let mut bench = Bench::new();
+    // `--cache PATH [--offline]` (ADR-008): install the store on the
+    // coordinator's bench (admission-order evals and any in-process
+    // fallback go through it) and forward the same flags to every worker
+    // so no fleet node re-measures a landed key. Fleets never write the
+    // store — single-writer discipline: recording runs produce stores
+    // (`repro run --cache`), fleets consume them read-through/offline.
+    let mut worker_args: Vec<String> = Vec::new();
+    let cache_monitor = match opts.get("cache") {
+        None => None,
+        Some(p) if p == "true" => return Err(format!("--cache needs a file path ({USAGE})")),
+        Some(path) => {
+            let offline = opts.contains_key("offline");
+            let mode = if offline {
+                CacheSessionMode::Offline
+            } else {
+                CacheSessionMode::ReadThrough
+            };
+            // fail fast, coordinator-side, before any worker spawns
+            let (oracle, monitor) = cache_session(mode, path.into())?;
+            bench.set_oracle(oracle);
+            worker_args.extend(["--cache".to_string(), path.clone()]);
+            if offline {
+                worker_args.push("--offline".to_string());
+            }
+            Some(monitor)
+        }
+    };
     let work = SuiteWork::single(spec, None, seed, bench.problems.len());
     let exe = std::env::current_exe().map_err(|e| format!("current_exe: {e}"))?;
     let outcome = run_fleet(
         &bench,
         &work,
         &cfg,
-        subprocess_worker_factory(exe, fault_specs),
+        subprocess_worker_factory(exe, fault_specs, worker_args),
         &events,
     )
     .map_err(|e| e.to_string())?;
@@ -570,6 +798,13 @@ fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<(), String> {
         workers, st.shards, st.assigns, st.retries, st.timeouts, st.duplicates, st.respawns,
         st.quarantines
     );
+    // coordinator-side cache verdict before --out is persisted (worker
+    // processes keep their own counters; an offline worker that misses
+    // exits nonzero on its own)
+    if let Some(m) = &cache_monitor {
+        println!("{}", m.summary());
+        m.check()?;
+    }
     if let Some(out) = opts.get("out") {
         let json = ucutlass_repro::util::json::Json::Arr(
             outcome.logs.iter().map(|l| l.to_json()).collect(),
@@ -587,12 +822,36 @@ fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<(), String> {
 fn cmd_worker(opts: &HashMap<String, String>) -> Result<(), String> {
     let faults = FaultPlan::parse(opts.get("faults").map(String::as_str).unwrap_or(""))?;
     let start_ordinal: u64 = opt_parse(opts, "fault-offset", 0)?;
-    let bench = Bench::new();
+    let mut bench = Bench::new();
+    // `--cache PATH [--offline]` forwarded by `repro serve` (ADR-008):
+    // serve landed keys from the shared store instead of re-measuring.
+    // Workers never write the store (single-writer discipline); stdout is
+    // the wire protocol, so the verdict goes to stderr via the Err path.
+    let cache_monitor = match opts.get("cache") {
+        None => None,
+        Some(p) if p == "true" => return Err("worker --cache needs a file path".into()),
+        Some(path) => {
+            let mode = if opts.contains_key("offline") {
+                CacheSessionMode::Offline
+            } else {
+                CacheSessionMode::ReadThrough
+            };
+            let (oracle, monitor) = cache_session(mode, path.into())?;
+            bench.set_oracle(oracle);
+            Some(monitor)
+        }
+    };
     let wopts = WorkerOpts { faults, start_ordinal };
     let kill = std::sync::atomic::AtomicBool::new(false);
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
-    worker_loop(&bench, stdin.lock(), stdout.lock(), &wopts, &kill)
+    worker_loop(&bench, stdin.lock(), stdout.lock(), &wopts, &kill)?;
+    // an offline worker that had to answer misses in-band must not exit
+    // clean — the cache did not cover its shards
+    match &cache_monitor {
+        Some(m) => m.check(),
+        None => Ok(()),
+    }
 }
 
 fn cmd_validate(opts: &HashMap<String, String>, seed: u64) -> Result<(), String> {
@@ -707,7 +966,7 @@ fn cmd_sweep(
     opts: &HashMap<String, String>,
     seed: u64,
     jobs: usize,
-    oracle: Option<(Box<DynEvaluator>, TraceMonitor)>,
+    oracle: Option<(Box<DynEvaluator>, OracleMonitor)>,
 ) -> Result<(), String> {
     let mut bench = Bench::new();
     // `repro sweep --trace PATH` is sugar for `repro replay sweep`; when
@@ -729,7 +988,7 @@ fn cmd_sweep(
             };
             let (o, m) = trace_session(mode, path)?;
             bench.set_oracle(o);
-            (Some(m), false)
+            (Some(OracleMonitor::Trace(m)), false)
         }
         (None, None) => {
             if opts.contains_key("live") {

@@ -1,0 +1,383 @@
+//! `CachedEvaluator`: the ADR-003 `Evaluator` face of the binary store.
+//!
+//! Three layers, consulted in order for every request:
+//!
+//! 1. **memory** — a per-process map memoizing everything this process
+//!    has seen (store hits and fresh live answers alike);
+//! 2. **store** — the persistent binary store ([`EvalStore`]), one
+//!    `pread` + checksum per first touch of a landed key;
+//! 3. **live** — the real backend, consulted only for keys neither
+//!    layer holds; in [`CacheMode::WriteThrough`] its answers are
+//!    appended to the store so no one ever pays for them again.
+//!
+//! Like the JSONL `RecordingEvaluator`/`TraceEvaluator` pair it is
+//! *transparent*: the response a caller sees is exactly what the live
+//! backend produced (or what the store replays bit-for-bit, floats as
+//! `f64::to_bits`), so a cached run's RunLogs are byte-identical to an
+//! uncached run's — the golden property `tests/cache.rs` pins down at
+//! `--jobs 1`, `--jobs 4`, and through `repro serve`.
+//!
+//! Counter semantics mirror `TraceMonitor`: a request answered live in
+//! the fall-through modes is counted as `live`, not a *miss* — `misses`
+//! is reserved for [`CacheMode::Offline`], where there is no backend and
+//! a missing key is answered with an in-band error response and fails
+//! [`StoreMonitor::check`] after the run. Error responses are cached and
+//! written through too (`pass == false` is a real, deterministic answer
+//! under ADR-003, and skipping them would break byte-identity).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use crate::eval::{DynEvaluator, EvalKey, EvalRequest, EvalResponse, Evaluator, OwnedAnalytic};
+
+use super::format::{EvalStore, StoreWriter};
+
+// ===========================================================================
+// Monitor
+// ===========================================================================
+
+#[derive(Default)]
+struct MonitorState {
+    path: String,
+    offline: bool,
+    hits_mem: u64,
+    hits_store: u64,
+    live: u64,
+    misses: u64,
+    writes: u64,
+    first_miss: Option<String>,
+    io_error: Option<String>,
+}
+
+/// Shared counters for one cache session — the store-layer analogue of
+/// `TraceMonitor`. Clone it before boxing the evaluator; every clone
+/// sees the same state.
+#[derive(Clone, Default)]
+pub struct StoreMonitor(Arc<Mutex<MonitorState>>);
+
+impl StoreMonitor {
+    fn new(path: &Path, offline: bool) -> StoreMonitor {
+        StoreMonitor(Arc::new(Mutex::new(MonitorState {
+            path: path.display().to_string(),
+            offline,
+            ..MonitorState::default()
+        })))
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, MonitorState> {
+        self.0.lock().expect("store monitor lock")
+    }
+
+    fn record_io_error(&self, e: String) {
+        let mut s = self.lock();
+        if s.io_error.is_none() {
+            s.io_error = Some(e);
+        }
+    }
+
+    /// Requests served from the memory or store layer.
+    pub fn hits(&self) -> u64 {
+        let s = self.lock();
+        s.hits_mem + s.hits_store
+    }
+
+    /// Hits served by the per-process memory layer.
+    pub fn hits_mem(&self) -> u64 {
+        self.lock().hits_mem
+    }
+
+    /// Hits that cost a store `pread` (first touch of a landed key).
+    pub fn hits_store(&self) -> u64 {
+        self.lock().hits_store
+    }
+
+    /// Requests answered by the live backend (fall-through modes only).
+    pub fn live(&self) -> u64 {
+        self.lock().live
+    }
+
+    /// Requests the cache could not answer at all (offline mode only);
+    /// each produced an in-band error response.
+    pub fn misses(&self) -> u64 {
+        self.lock().misses
+    }
+
+    /// Records appended to the store this session.
+    pub fn writes(&self) -> u64 {
+        self.lock().writes
+    }
+
+    /// Human key of the first unanswerable request, if any.
+    pub fn first_miss(&self) -> Option<String> {
+        self.lock().first_miss.clone()
+    }
+
+    /// First cache I/O failure, if any (a failed `pread`, checksum
+    /// mismatch, or write-through append).
+    pub fn io_error(&self) -> Option<String> {
+        self.lock().io_error.clone()
+    }
+
+    /// One-line session summary for the CLI.
+    pub fn summary(&self) -> String {
+        let s = self.lock();
+        format!(
+            "cache {}: {} served ({} memory, {} store), {} live, {} written, {} miss(es)",
+            s.path,
+            s.hits_mem + s.hits_store,
+            s.hits_mem,
+            s.hits_store,
+            s.live,
+            s.writes,
+            s.misses
+        )
+    }
+
+    /// In-band session verdict: `Err` on any cache I/O failure, and on
+    /// offline misses (an offline run that was not fully served is not a
+    /// reproduction — same discipline as strict trace replay).
+    pub fn check(&self) -> Result<(), String> {
+        let s = self.lock();
+        if let Some(e) = &s.io_error {
+            return Err(format!("cache {}: io error: {e}", s.path));
+        }
+        if s.offline && s.misses > 0 {
+            let first = s.first_miss.as_deref().unwrap_or("?");
+            return Err(format!(
+                "cache {}: {} request(s) not in the store (first: {first}); the store \
+                 does not cover this run — re-record it with --cache (write-through) \
+                 or drop --offline to fall through to the live backend",
+                s.path, s.misses
+            ));
+        }
+        Ok(())
+    }
+}
+
+// ===========================================================================
+// CachedEvaluator
+// ===========================================================================
+
+/// What sits below the store layer.
+pub enum CacheMode {
+    /// No live backend: a key the store does not hold is answered with an
+    /// in-band error response and counted as a miss.
+    Offline,
+    /// Fall through to a live backend but never write the store — the
+    /// fleet-worker mode (many processes may read one store; only the
+    /// recording run writes it).
+    ReadThrough(Box<DynEvaluator>),
+    /// Fall through and append every fresh answer to the store
+    /// (create-or-extend) — the recording mode.
+    WriteThrough(Box<DynEvaluator>),
+}
+
+/// The layered evaluator. Construct with [`CachedEvaluator::open`] or
+/// the CLI-shaped [`cache_session`].
+pub struct CachedEvaluator {
+    memory: Mutex<HashMap<EvalKey, EvalResponse>>,
+    store: EvalStore,
+    writer: Option<Mutex<StoreWriter>>,
+    live: Option<Box<DynEvaluator>>,
+    monitor: StoreMonitor,
+}
+
+impl CachedEvaluator {
+    pub fn open(path: impl AsRef<Path>, mode: CacheMode) -> Result<CachedEvaluator, String> {
+        let path = path.as_ref();
+        let (store, writer, live, offline) = match mode {
+            CacheMode::Offline => (EvalStore::open(path)?, None, None, true),
+            CacheMode::ReadThrough(b) => (EvalStore::open(path)?, None, Some(b), false),
+            CacheMode::WriteThrough(b) => {
+                if path.exists() {
+                    let (store, writer) = StoreWriter::extend(path)?;
+                    (store, Some(Mutex::new(writer)), Some(b), false)
+                } else {
+                    let writer = StoreWriter::create(path)?;
+                    let store = EvalStore::attach_empty(path)?;
+                    (store, Some(Mutex::new(writer)), Some(b), false)
+                }
+            }
+        };
+        let monitor = StoreMonitor::new(path, offline);
+        Ok(CachedEvaluator { memory: Mutex::new(HashMap::new()), store, writer, live, monitor })
+    }
+
+    /// A handle onto this session's counters.
+    pub fn monitor(&self) -> StoreMonitor {
+        self.monitor.clone()
+    }
+
+    /// Keys the persistent layer held at open (fresh answers live in the
+    /// memory layer until the writer finishes).
+    pub fn store_len(&self) -> usize {
+        self.store.len()
+    }
+
+    /// Write the index + trailer now instead of at drop, surfacing the
+    /// error to the caller.
+    pub fn finish(&self) -> Result<(), String> {
+        match &self.writer {
+            None => Ok(()),
+            Some(w) => w.lock().expect("store writer lock").finish(),
+        }
+    }
+}
+
+impl Evaluator for CachedEvaluator {
+    fn eval_batch(&self, reqs: &[EvalRequest]) -> Vec<EvalResponse> {
+        let keys: Vec<EvalKey> = reqs.iter().map(|r| r.eval_key()).collect();
+        let mut out: Vec<Option<EvalResponse>> = vec![None; reqs.len()];
+        let mut hits_mem = 0u64;
+        let mut hits_store = 0u64;
+
+        // layer 1: memory
+        {
+            let mem = self.memory.lock().expect("cache memory lock");
+            for (i, key) in keys.iter().enumerate() {
+                if let Some(r) = mem.get(key) {
+                    out[i] = Some(r.clone());
+                    hits_mem += 1;
+                }
+            }
+        }
+
+        // layer 2: store (memoize hits so later touches are layer-1)
+        let mut landed: Vec<(EvalKey, EvalResponse)> = Vec::new();
+        for (i, key) in keys.iter().enumerate() {
+            if out[i].is_some() {
+                continue;
+            }
+            match self.store.get(*key) {
+                Ok(Some(r)) => {
+                    hits_store += 1;
+                    landed.push((*key, r.clone()));
+                    out[i] = Some(r);
+                }
+                Ok(None) => {}
+                // corruption on the hit path: record it once, then treat
+                // the key as absent — offline turns it into an in-band
+                // error response, fall-through re-measures it live
+                Err(e) => self.monitor.record_io_error(e),
+            }
+        }
+        if !landed.is_empty() {
+            let mut mem = self.memory.lock().expect("cache memory lock");
+            mem.extend(landed);
+        }
+        {
+            let mut s = self.monitor.lock();
+            s.hits_mem += hits_mem;
+            s.hits_store += hits_store;
+        }
+
+        let missing: Vec<usize> = (0..reqs.len()).filter(|&i| out[i].is_none()).collect();
+        if !missing.is_empty() {
+            match &self.live {
+                None => {
+                    let mut s = self.monitor.lock();
+                    s.misses += missing.len() as u64;
+                    if s.first_miss.is_none() {
+                        s.first_miss = Some(reqs[missing[0]].key());
+                    }
+                    drop(s);
+                    for &i in &missing {
+                        out[i] = Some(EvalResponse::error(
+                            keys[i],
+                            format!("cache miss: {}", reqs[i].key()),
+                        ));
+                    }
+                }
+                Some(live) => {
+                    let sub: Vec<EvalRequest> =
+                        missing.iter().map(|&i| reqs[i].clone()).collect();
+                    let answers = live.eval_batch(&sub);
+                    debug_assert_eq!(answers.len(), sub.len());
+                    self.monitor.lock().live += missing.len() as u64;
+                    let mut fresh: Vec<usize> = Vec::new();
+                    {
+                        let mut mem = self.memory.lock().expect("cache memory lock");
+                        for (&i, resp) in missing.iter().zip(&answers) {
+                            // first insert wins; a key repeated within
+                            // this batch is only written through once
+                            if mem.insert(keys[i], resp.clone()).is_none() {
+                                fresh.push(i);
+                            }
+                            out[i] = Some(resp.clone());
+                        }
+                    }
+                    if let Some(w) = &self.writer {
+                        let mut w = w.lock().expect("store writer lock");
+                        let mut wrote = 0u64;
+                        for (&i, resp) in missing.iter().zip(&answers) {
+                            if !fresh.contains(&i) {
+                                continue;
+                            }
+                            match w.append(&reqs[i], resp) {
+                                Ok(true) => wrote += 1,
+                                Ok(false) => {}
+                                Err(e) => self.monitor.record_io_error(e),
+                            }
+                        }
+                        drop(w);
+                        self.monitor.lock().writes += wrote;
+                    }
+                }
+            }
+        }
+
+        out.into_iter()
+            .map(|r| r.expect("every request answered by some layer"))
+            .collect()
+    }
+}
+
+impl Drop for CachedEvaluator {
+    fn drop(&mut self) {
+        if let Some(w) = &self.writer {
+            if let Ok(mut w) = w.lock() {
+                if let Err(e) = w.finish() {
+                    self.monitor.record_io_error(e);
+                }
+            }
+        }
+    }
+}
+
+// ===========================================================================
+// CLI-shaped constructor
+// ===========================================================================
+
+/// How the CLI wants the cache layered — the live backend (the owned
+/// analytic model, same construction as `Bench::new()`) is supplied
+/// here so `main.rs` never builds one.
+#[derive(Clone, Copy, PartialEq, Eq, Debug)]
+pub enum CacheSessionMode {
+    /// `--cache PATH`: record — serve hits, measure misses live, append
+    /// them to the store (create-or-extend).
+    WriteThrough,
+    /// serve/worker `--cache PATH`: serve hits, measure misses live,
+    /// never write (single-writer discipline: fleets read, runs record).
+    ReadThrough,
+    /// `--cache PATH --offline`: no live backend; a miss is an in-band
+    /// error and fails the session check.
+    Offline,
+}
+
+/// Build the boxed oracle + monitor for one CLI cache session,
+/// mirroring `trace_session`. `PathBuf` keeps call sites uniform with
+/// the trace plumbing in `main.rs`.
+pub fn cache_session(
+    mode: CacheSessionMode,
+    path: PathBuf,
+) -> Result<(Box<DynEvaluator>, StoreMonitor), String> {
+    let mode = match mode {
+        CacheSessionMode::Offline => CacheMode::Offline,
+        CacheSessionMode::ReadThrough => CacheMode::ReadThrough(Box::new(OwnedAnalytic::new())),
+        CacheSessionMode::WriteThrough => CacheMode::WriteThrough(Box::new(OwnedAnalytic::new())),
+    };
+    let cached = CachedEvaluator::open(&path, mode)?;
+    let monitor = cached.monitor();
+    Ok((Box::new(cached), monitor))
+}

@@ -1,0 +1,633 @@
+//! Binary eval-store format v1 (ADR-008): the persistent,
+//! content-addressed measurement store behind `repro … --cache PATH`.
+//!
+//! A store is one append-only file:
+//!
+//! ```text
+//! header   16 B   magic "UCEVSTOR" · u32 version (=1) · u32 flags (=0)
+//! records  n ×    u32 payload_len · u64 fnv64(payload) · payload
+//!   payload:      u128 EvalKey · u64 f64-bits value · u8 pass ·
+//!                 u8 detail_tag [· u32 len · detail bytes] ·
+//!                 u32 len · canonical EvalRequest JSON bytes
+//! index    n ×    u128 EvalKey · u64 record offset · u32 payload_len
+//! trailer  40 B   magic "UCEVIDX1" · u32 version · u32 reserved ·
+//!                 u64 count · u64 index_offset · u64 fnv64(index)
+//! ```
+//!
+//! All integers are little-endian; floats travel as `f64::to_bits`, so a
+//! served value is bit-identical to the recorded one. Each record carries
+//! the full request's canonical JSON after the response fields: lookups
+//! never parse it (the hit path decodes key + response and stops), but it
+//! makes every record self-describing — `repro cache export` bridges to
+//! the JSONL v2 diagnostic/interchange format losslessly, and `repro
+//! cache stats` can aggregate by kind/problem without a side table.
+//!
+//! Opening a million-measurement store costs one index read (28 B per
+//! record) and zero JSON parses; every hit is then one `pread` of its
+//! record. The layout is mmap-friendly by construction: fixed header,
+//! densely tiled length-prefixed records, and a fixed-size trailer that
+//! locates the index from the end of the file.
+//!
+//! Integrity is checked where it is cheap enough to always do: the index
+//! checksum and the record-tiling invariant (records must exactly tile
+//! `[header, index)`, every offset reachable from the index) at open, the
+//! per-record checksum on each record read. Every failure is an in-band
+//! `Err(String)` naming the file — never a panic — mirroring the JSONL
+//! trace parser's discipline (ADR-004) and the shard-artifact negative
+//! suite (ADR-003).
+//!
+//! Crash story: records are flushed on a cadence, the index + trailer
+//! only on [`StoreWriter::finish`] (or drop). A store torn by a crash
+//! fails `open` in-band; re-record it, or rebuild from a JSONL export
+//! with `repro cache import`.
+
+use std::collections::{HashMap, HashSet};
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use crate::eval::manifest::MAX_ARTIFACT_BYTES;
+use crate::eval::{EvalKey, EvalRequest, EvalResponse};
+use crate::util::fnv64;
+use crate::util::json::Json;
+
+/// File magic: the first 8 bytes of every eval store.
+pub const STORE_MAGIC: [u8; 8] = *b"UCEVSTOR";
+/// Trailer magic: the 8 bytes starting 40 from the end of the file.
+pub const INDEX_MAGIC: [u8; 8] = *b"UCEVIDX1";
+/// Binary store format version. Bump on any layout change; readers
+/// reject other versions in-band (the v1→v2 gate of the JSONL trace).
+pub const STORE_VERSION: u32 = 1;
+
+pub const HEADER_BYTES: u64 = 16;
+pub const TRAILER_BYTES: u64 = 40;
+pub const INDEX_ENTRY_BYTES: u64 = 28;
+/// Per-record header: u32 payload length + u64 payload checksum.
+pub const RECORD_HEADER_BYTES: u64 = 12;
+
+/// Per-record payload cap — the shard-artifact limit (ADR-003), shared so
+/// "too big for the parser" and "too big for the store" are one bound.
+pub const MAX_RECORD_BYTES: usize = MAX_ARTIFACT_BYTES;
+
+/// Flush cadence for the record stream, matching the JSONL recorder's
+/// crash-loss bound (`trace::FLUSH_EVERY_LINES`).
+const FLUSH_EVERY_RECORDS: u32 = 512;
+
+// ===========================================================================
+// Record encoding
+// ===========================================================================
+
+/// Encode one `(request, response)` pair as a record payload. In-band
+/// errors on oversized payloads and on a response that does not answer
+/// the request (a mismatched pair must never become unreachable-but-
+/// served state on disk).
+pub(crate) fn encode_payload(req: &EvalRequest, resp: &EvalResponse) -> Result<Vec<u8>, String> {
+    if resp.key != req.eval_key() {
+        return Err(format!(
+            "response key `{}` does not match its request key `{}` ({})",
+            resp.key,
+            req.eval_key(),
+            req.key()
+        ));
+    }
+    let mut buf = Vec::with_capacity(96);
+    buf.extend_from_slice(&resp.key.0.to_le_bytes());
+    buf.extend_from_slice(&resp.value.to_bits().to_le_bytes());
+    buf.push(resp.pass as u8);
+    match &resp.detail {
+        None => buf.push(0),
+        Some(d) => {
+            buf.push(1);
+            buf.extend_from_slice(&(d.len() as u32).to_le_bytes());
+            buf.extend_from_slice(d.as_bytes());
+        }
+    }
+    let rj = req.to_json().to_string();
+    buf.extend_from_slice(&(rj.len() as u32).to_le_bytes());
+    buf.extend_from_slice(rj.as_bytes());
+    if buf.len() > MAX_RECORD_BYTES {
+        return Err(format!(
+            "record for key {} is {} bytes, over the {MAX_RECORD_BYTES}-byte limit",
+            resp.key,
+            buf.len()
+        ));
+    }
+    Ok(buf)
+}
+
+/// Bounds-checked little-endian cursor over a record payload.
+struct Cur<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Cur<'a> {
+    fn take(&mut self, n: usize) -> Option<&'a [u8]> {
+        let s = self.b.get(self.i..self.i.checked_add(n)?)?;
+        self.i += n;
+        Some(s)
+    }
+
+    fn u32(&mut self) -> Option<u32> {
+        self.take(4).map(|s| u32::from_le_bytes(s.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Option<u64> {
+        self.take(8).map(|s| u64::from_le_bytes(s.try_into().expect("8 bytes")))
+    }
+
+    fn u128(&mut self) -> Option<u128> {
+        self.take(16).map(|s| u128::from_le_bytes(s.try_into().expect("16 bytes")))
+    }
+
+    fn remaining(&self) -> usize {
+        self.b.len() - self.i
+    }
+}
+
+/// Decode the response half of a payload — the hit path. Validates the
+/// full structural frame (every length in bounds, nothing left over after
+/// the request JSON) but never parses the request JSON itself.
+fn decode_response(payload: &[u8]) -> Result<EvalResponse, String> {
+    let bad = || "malformed record payload".to_string();
+    let mut c = Cur { b: payload, i: 0 };
+    let key = EvalKey(c.u128().ok_or_else(bad)?);
+    let value = f64::from_bits(c.u64().ok_or_else(bad)?);
+    let pass = match c.take(1).ok_or_else(bad)?[0] {
+        0 => false,
+        1 => true,
+        _ => return Err(bad()),
+    };
+    let detail = match c.take(1).ok_or_else(bad)?[0] {
+        0 => None,
+        1 => {
+            let n = c.u32().ok_or_else(bad)? as usize;
+            let bytes = c.take(n).ok_or_else(bad)?;
+            Some(std::str::from_utf8(bytes).map_err(|_| bad())?.into())
+        }
+        _ => return Err(bad()),
+    };
+    let rlen = c.u32().ok_or_else(bad)? as usize;
+    if c.remaining() != rlen {
+        return Err(bad());
+    }
+    Ok(EvalResponse { key, value, pass, detail })
+}
+
+/// Decode the full `(request, response)` pair — export/stats/merge. Also
+/// re-derives the request's key and checks it against the stored one, so
+/// a record can never serve under an identity its request does not have.
+fn decode_pair(payload: &[u8]) -> Result<(EvalRequest, EvalResponse), String> {
+    let resp = decode_response(payload)?;
+    // re-walk the fixed fields (already validated above) to reach the
+    // request JSON: key(16) + value(8) + pass(1), then the detail frame
+    let bad = || "malformed record payload".to_string();
+    let mut c = Cur { b: payload, i: 16 + 8 + 1 };
+    if c.take(1).ok_or_else(bad)?[0] == 1 {
+        let n = c.u32().ok_or_else(bad)? as usize;
+        c.take(n).ok_or_else(bad)?;
+    }
+    let rlen = c.u32().ok_or_else(bad)? as usize;
+    let rj = c.take(rlen).ok_or_else(bad)?;
+    let text = std::str::from_utf8(rj).map_err(|_| "request JSON is not UTF-8".to_string())?;
+    let j = Json::parse(text).map_err(|e| format!("corrupt request JSON ({e})"))?;
+    let req = EvalRequest::from_json(&j).ok_or("malformed request JSON")?;
+    if req.eval_key() != resp.key {
+        return Err(format!(
+            "stored request `{}` does not hash to the record key {}",
+            req.key(),
+            resp.key
+        ));
+    }
+    Ok((req, resp))
+}
+
+// ===========================================================================
+// Read face
+// ===========================================================================
+
+/// Positioned read shared by every store reader. Unix uses `pread` (no
+/// seek, safe under concurrent readers of one handle); elsewhere we fall
+/// back to seek + read on the mutex-guarded handle.
+fn read_exact_at(file: &mut File, buf: &mut [u8], off: u64) -> Result<(), String> {
+    #[cfg(unix)]
+    {
+        use std::os::unix::fs::FileExt;
+        return file.read_exact_at(buf, off).map_err(|e| e.to_string());
+    }
+    #[cfg(not(unix))]
+    {
+        use std::io::{Read, Seek, SeekFrom};
+        file.seek(SeekFrom::Start(off)).map_err(|e| e.to_string())?;
+        file.read_exact(buf).map_err(|e| e.to_string())
+    }
+}
+
+#[derive(Clone, Copy)]
+struct Entry {
+    offset: u64,
+    len: u32,
+}
+
+/// The read face of a binary store: open validates the header, trailer,
+/// index checksum, and record-tiling invariant; lookups are one `pread`
+/// plus a checksum, with no JSON in sight.
+pub struct EvalStore {
+    file: Mutex<File>,
+    path: PathBuf,
+    index: HashMap<EvalKey, Entry>,
+    /// Keys in record (append) order — export, compact, and merge walk
+    /// this so rewritten stores are deterministic byte-for-byte.
+    order: Vec<EvalKey>,
+    data_end: u64,
+    file_bytes: u64,
+}
+
+impl EvalStore {
+    pub fn open(path: impl AsRef<Path>) -> Result<EvalStore, String> {
+        let path = path.as_ref();
+        let ctx = |e: String| format!("store {}: {e}", path.display());
+        let mut file = File::open(path).map_err(|e| ctx(e.to_string()))?;
+        let file_bytes = file.metadata().map_err(|e| ctx(e.to_string()))?.len();
+        if file_bytes < HEADER_BYTES + TRAILER_BYTES {
+            return Err(ctx(format!(
+                "truncated: {file_bytes} bytes is smaller than an empty store \
+                 ({} header + {} trailer)",
+                HEADER_BYTES, TRAILER_BYTES
+            )));
+        }
+
+        let mut hdr = [0u8; HEADER_BYTES as usize];
+        read_exact_at(&mut file, &mut hdr, 0).map_err(&ctx)?;
+        if hdr[..8] != STORE_MAGIC {
+            return Err(ctx("bad magic (not an eval store)".into()));
+        }
+        let version = u32::from_le_bytes(hdr[8..12].try_into().expect("4 bytes"));
+        if version != STORE_VERSION {
+            return Err(ctx(format!(
+                "unsupported store version {version} (this build reads version {STORE_VERSION})"
+            )));
+        }
+        // flags are reserved-zero in v1; rejecting nonzero keeps every
+        // header byte load-bearing (the byte-flip suite relies on it) and
+        // the bits free for a compatible future use
+        let flags = u32::from_le_bytes(hdr[12..16].try_into().expect("4 bytes"));
+        if flags != 0 {
+            return Err(ctx(format!("unsupported store flags {flags:#x} (v1 defines none)")));
+        }
+
+        let mut tr = [0u8; TRAILER_BYTES as usize];
+        read_exact_at(&mut file, &mut tr, file_bytes - TRAILER_BYTES).map_err(&ctx)?;
+        if tr[..8] != INDEX_MAGIC {
+            return Err(ctx(
+                "bad or truncated index trailer (crashed before finish? re-record, or \
+                 rebuild from a JSONL export with `repro cache import`)"
+                    .into(),
+            ));
+        }
+        let tversion = u32::from_le_bytes(tr[8..12].try_into().expect("4 bytes"));
+        if tversion != version {
+            return Err(ctx(format!(
+                "trailer version {tversion} disagrees with header version {version}"
+            )));
+        }
+        let reserved = u32::from_le_bytes(tr[12..16].try_into().expect("4 bytes"));
+        if reserved != 0 {
+            return Err(ctx(format!("corrupt trailer (reserved field is {reserved:#x})")));
+        }
+        let count = u64::from_le_bytes(tr[16..24].try_into().expect("8 bytes"));
+        let index_offset = u64::from_le_bytes(tr[24..32].try_into().expect("8 bytes"));
+        let index_checksum = u64::from_le_bytes(tr[32..40].try_into().expect("8 bytes"));
+        let index_bytes = count
+            .checked_mul(INDEX_ENTRY_BYTES)
+            .ok_or_else(|| ctx(format!("absurd record count {count}")))?;
+        if index_offset < HEADER_BYTES
+            || index_offset.checked_add(index_bytes) != Some(file_bytes - TRAILER_BYTES)
+        {
+            return Err(ctx(format!(
+                "index ({count} records at offset {index_offset}) does not tile the file \
+                 ({file_bytes} bytes)"
+            )));
+        }
+
+        let mut ib = vec![0u8; index_bytes as usize];
+        read_exact_at(&mut file, &mut ib, index_offset).map_err(&ctx)?;
+        if fnv64(&ib) != index_checksum {
+            return Err(ctx("index checksum mismatch (corrupt or partially-written store)".into()));
+        }
+
+        let mut index = HashMap::with_capacity(count as usize);
+        let mut order = Vec::with_capacity(count as usize);
+        let mut extents: Vec<Entry> = Vec::with_capacity(count as usize);
+        for e in ib.chunks_exact(INDEX_ENTRY_BYTES as usize) {
+            let key = EvalKey(u128::from_le_bytes(e[..16].try_into().expect("16 bytes")));
+            let offset = u64::from_le_bytes(e[16..24].try_into().expect("8 bytes"));
+            let len = u32::from_le_bytes(e[24..28].try_into().expect("4 bytes"));
+            if len as usize > MAX_RECORD_BYTES {
+                return Err(ctx(format!(
+                    "record for key {key} is {len} bytes, over the {MAX_RECORD_BYTES}-byte limit"
+                )));
+            }
+            if index.insert(key, Entry { offset, len }).is_some() {
+                return Err(ctx(format!("duplicate key {key} in index")));
+            }
+            order.push(key);
+            extents.push(Entry { offset, len });
+        }
+
+        // Tiling invariant: sorted by offset, the records must cover
+        // [header, index) exactly — every byte of the data region is
+        // reachable from the index, and no two records overlap. This is
+        // what lets the byte-flip negative suite promise that any
+        // corruption is caught by open or by the lookup that reads it.
+        extents.sort_by_key(|e| e.offset);
+        let mut pos = HEADER_BYTES;
+        for e in &extents {
+            if e.offset != pos {
+                return Err(ctx(format!(
+                    "records do not tile the data region (gap or overlap at offset {pos})"
+                )));
+            }
+            pos += RECORD_HEADER_BYTES + e.len as u64;
+        }
+        if pos != index_offset {
+            return Err(ctx(format!(
+                "records end at {pos} but the index starts at {index_offset}"
+            )));
+        }
+
+        Ok(EvalStore {
+            file: Mutex::new(file),
+            path: path.to_path_buf(),
+            index,
+            order,
+            data_end: index_offset,
+            file_bytes,
+        })
+    }
+
+    /// Read face over a file the caller just created (header written and
+    /// flushed, no records yet) — the fresh write-through case.
+    pub(crate) fn attach_empty(path: &Path) -> Result<EvalStore, String> {
+        let file =
+            File::open(path).map_err(|e| format!("store {}: {e}", path.display()))?;
+        Ok(EvalStore {
+            file: Mutex::new(file),
+            path: path.to_path_buf(),
+            index: HashMap::new(),
+            order: Vec::new(),
+            data_end: HEADER_BYTES,
+            file_bytes: HEADER_BYTES,
+        })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Distinct keys this store serves.
+    pub fn len(&self) -> usize {
+        self.index.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.index.is_empty()
+    }
+
+    pub fn contains(&self, key: EvalKey) -> bool {
+        self.index.contains_key(&key)
+    }
+
+    /// Keys in record (append) order.
+    pub fn keys(&self) -> impl Iterator<Item = EvalKey> + '_ {
+        self.order.iter().copied()
+    }
+
+    /// Total file size at open.
+    pub fn file_bytes(&self) -> u64 {
+        self.file_bytes
+    }
+
+    /// Bytes the open path actually read and validated (header + index +
+    /// trailer) — what "opens without parsing" costs.
+    pub fn open_bytes(&self) -> u64 {
+        HEADER_BYTES + self.order.len() as u64 * INDEX_ENTRY_BYTES + TRAILER_BYTES
+    }
+
+    fn read_record(&self, key: EvalKey, e: Entry) -> Result<Vec<u8>, String> {
+        let ctx = |msg: String| format!("store {}: key {key}: {msg}", self.path.display());
+        let mut f = self.file.lock().expect("store file lock");
+        let mut hdr = [0u8; RECORD_HEADER_BYTES as usize];
+        read_exact_at(&mut f, &mut hdr, e.offset).map_err(&ctx)?;
+        let len = u32::from_le_bytes(hdr[..4].try_into().expect("4 bytes"));
+        let checksum = u64::from_le_bytes(hdr[4..12].try_into().expect("8 bytes"));
+        if len != e.len {
+            return Err(ctx(format!(
+                "record length {len} disagrees with the index ({})",
+                e.len
+            )));
+        }
+        let mut payload = vec![0u8; len as usize];
+        read_exact_at(&mut f, &mut payload, e.offset + RECORD_HEADER_BYTES).map_err(&ctx)?;
+        drop(f);
+        if fnv64(&payload) != checksum {
+            return Err(ctx(format!(
+                "record checksum mismatch at offset {} (corrupt store)",
+                e.offset
+            )));
+        }
+        Ok(payload)
+    }
+
+    /// Serve one key: `Ok(None)` when absent, `Err` on any corruption.
+    pub fn get(&self, key: EvalKey) -> Result<Option<EvalResponse>, String> {
+        let Some(e) = self.index.get(&key).copied() else { return Ok(None) };
+        let payload = self.read_record(key, e)?;
+        let resp = decode_response(&payload)
+            .map_err(|m| format!("store {}: key {key}: {m}", self.path.display()))?;
+        if resp.key != key {
+            return Err(format!(
+                "store {}: index key {key} points at a record for {}",
+                self.path.display(),
+                resp.key
+            ));
+        }
+        Ok(Some(resp))
+    }
+
+    /// Serve the full pair (export / stats / merge — parses the stored
+    /// request JSON, which the hit path never does).
+    pub fn get_pair(&self, key: EvalKey) -> Result<Option<(EvalRequest, EvalResponse)>, String> {
+        let Some(e) = self.index.get(&key).copied() else { return Ok(None) };
+        let payload = self.read_record(key, e)?;
+        let (req, resp) = decode_pair(&payload)
+            .map_err(|m| format!("store {}: key {key}: {m}", self.path.display()))?;
+        if resp.key != key {
+            return Err(format!(
+                "store {}: index key {key} points at a record for {}",
+                self.path.display(),
+                resp.key
+            ));
+        }
+        Ok(Some((req, resp)))
+    }
+
+    /// Payload checksum of a key's record, without decoding it — the
+    /// cheap equality witness `merge_stores` compares duplicates by
+    /// (payload encoding is canonical: equal pairs ⇔ equal payloads).
+    pub(crate) fn record_checksum(&self, key: EvalKey) -> Result<Option<u64>, String> {
+        let Some(e) = self.index.get(&key).copied() else { return Ok(None) };
+        Ok(Some(fnv64(&self.read_record(key, e)?)))
+    }
+}
+
+// ===========================================================================
+// Write face
+// ===========================================================================
+
+/// Append-only writer. `create` starts a fresh store; `extend` reopens an
+/// existing one, seeding its dedup set and entry list **from the offset
+/// index alone** — no record payload is re-read and no JSON is re-parsed
+/// on open, unlike the JSONL `Fallthrough` path, which re-parses the
+/// whole trace (the fix ISSUE 8 satellite 3 asks for).
+///
+/// Records are flushed on a cadence; the index + trailer are written by
+/// [`StoreWriter::finish`] (called by `Drop` as a best effort — callers
+/// that care about the error, like `CachedEvaluator`, call it
+/// explicitly and route failures to their monitor).
+pub struct StoreWriter {
+    out: BufWriter<File>,
+    path: PathBuf,
+    entries: Vec<(EvalKey, Entry)>,
+    seen: HashSet<EvalKey>,
+    pos: u64,
+    unflushed: u32,
+    finished: bool,
+}
+
+impl StoreWriter {
+    /// Create (truncating) a fresh store and write its header.
+    pub fn create(path: impl AsRef<Path>) -> Result<StoreWriter, String> {
+        let path = path.as_ref();
+        let ctx = |e: String| format!("store {}: {e}", path.display());
+        let file = File::create(path).map_err(|e| ctx(format!("cannot create: {e}")))?;
+        let mut out = BufWriter::new(file);
+        let mut hdr = [0u8; HEADER_BYTES as usize];
+        hdr[..8].copy_from_slice(&STORE_MAGIC);
+        hdr[8..12].copy_from_slice(&STORE_VERSION.to_le_bytes());
+        out.write_all(&hdr).map_err(|e| ctx(e.to_string()))?;
+        // flush now so a concurrently attached read face sees a real file
+        out.flush().map_err(|e| ctx(e.to_string()))?;
+        Ok(StoreWriter {
+            out,
+            path: path.to_path_buf(),
+            entries: Vec::new(),
+            seen: HashSet::new(),
+            pos: HEADER_BYTES,
+            unflushed: 0,
+            finished: false,
+        })
+    }
+
+    /// Reopen an existing store for append: validate it, truncate the old
+    /// index + trailer, and seed the writer's state from the index. The
+    /// returned [`EvalStore`] keeps serving every landed record (its
+    /// offsets are untouched by the truncation).
+    pub fn extend(path: impl AsRef<Path>) -> Result<(EvalStore, StoreWriter), String> {
+        let path = path.as_ref();
+        let store = EvalStore::open(path)?;
+        let ctx = |e: String| format!("store {}: {e}", path.display());
+        let file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(path)
+            .map_err(|e| ctx(format!("cannot reopen for append: {e}")))?;
+        file.set_len(store.data_end).map_err(|e| ctx(e.to_string()))?;
+        let mut out = BufWriter::new(file);
+        use std::io::{Seek, SeekFrom};
+        out.seek(SeekFrom::Start(store.data_end)).map_err(|e| ctx(e.to_string()))?;
+        let entries: Vec<(EvalKey, Entry)> =
+            store.order.iter().map(|k| (*k, store.index[k])).collect();
+        let seen = store.order.iter().copied().collect();
+        let writer = StoreWriter {
+            out,
+            path: path.to_path_buf(),
+            entries,
+            seen,
+            pos: store.data_end,
+            unflushed: 0,
+            finished: false,
+        };
+        Ok((store, writer))
+    }
+
+    /// Distinct keys the finished store will serve.
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Append one pair. `Ok(false)` = already present (first write wins,
+    /// like the JSONL recorder's dedup); `Err` on oversized payloads,
+    /// mismatched pairs, I/O failures, or an already-finished writer.
+    pub fn append(&mut self, req: &EvalRequest, resp: &EvalResponse) -> Result<bool, String> {
+        let ctx = |e: String| format!("store {}: {e}", self.path.display());
+        if self.finished {
+            return Err(ctx("append after finish".into()));
+        }
+        let key = req.eval_key();
+        if self.seen.contains(&key) {
+            return Ok(false);
+        }
+        // mark the key seen only after the record is fully written: a
+        // rejected append (oversized, mismatched pair) must not block a
+        // later valid record for the same key
+        let payload = encode_payload(req, resp).map_err(&ctx)?;
+        let len = payload.len() as u32;
+        self.out.write_all(&len.to_le_bytes()).map_err(|e| ctx(e.to_string()))?;
+        self.out.write_all(&fnv64(&payload).to_le_bytes()).map_err(|e| ctx(e.to_string()))?;
+        self.out.write_all(&payload).map_err(|e| ctx(e.to_string()))?;
+        self.seen.insert(key);
+        self.entries.push((key, Entry { offset: self.pos, len }));
+        self.pos += RECORD_HEADER_BYTES + payload.len() as u64;
+        self.unflushed += 1;
+        if self.unflushed >= FLUSH_EVERY_RECORDS {
+            self.unflushed = 0;
+            self.out.flush().map_err(|e| ctx(e.to_string()))?;
+        }
+        Ok(true)
+    }
+
+    /// Write the index + trailer and flush. Idempotent; after the first
+    /// call (even a failed one) the writer refuses further appends.
+    pub fn finish(&mut self) -> Result<(), String> {
+        if self.finished {
+            return Ok(());
+        }
+        self.finished = true;
+        let ctx = |e: String| format!("store {}: {e}", self.path.display());
+        let mut ib = Vec::with_capacity(self.entries.len() * INDEX_ENTRY_BYTES as usize);
+        for (key, e) in &self.entries {
+            ib.extend_from_slice(&key.0.to_le_bytes());
+            ib.extend_from_slice(&e.offset.to_le_bytes());
+            ib.extend_from_slice(&e.len.to_le_bytes());
+        }
+        let mut tr = [0u8; TRAILER_BYTES as usize];
+        tr[..8].copy_from_slice(&INDEX_MAGIC);
+        tr[8..12].copy_from_slice(&STORE_VERSION.to_le_bytes());
+        tr[16..24].copy_from_slice(&(self.entries.len() as u64).to_le_bytes());
+        tr[24..32].copy_from_slice(&self.pos.to_le_bytes());
+        tr[32..40].copy_from_slice(&fnv64(&ib).to_le_bytes());
+        self.out.write_all(&ib).map_err(|e| ctx(e.to_string()))?;
+        self.out.write_all(&tr).map_err(|e| ctx(e.to_string()))?;
+        self.out.flush().map_err(|e| ctx(e.to_string()))
+    }
+}
+
+impl Drop for StoreWriter {
+    fn drop(&mut self) {
+        // best effort: an unfinished store is unopenable, so always try;
+        // callers that must see the error call finish() themselves first
+        let _ = self.finish();
+    }
+}

@@ -1,0 +1,184 @@
+//! Persistent content-addressed eval store (ADR-008).
+//!
+//! At production scale no `(arch, problem, config, seed)` measurement
+//! should ever be paid for twice — across runs, users, or fleet nodes.
+//! `EvalKey` (ADR-005) is already a process-stable 128-bit content hash
+//! and the JSONL trace (ADR-004) already keys every measurement; this
+//! module adds the missing storage layer:
+//!
+//! - [`format`] — binary trace format v1: append-only length-prefixed
+//!   records under a magic + version header, with a key→offset index
+//!   footer. A million-measurement store opens by reading its index
+//!   (28 bytes/record, no JSON) and serves each hit with one `pread`.
+//! - [`cached`] — [`CachedEvaluator`], the ADR-003 `Evaluator` that
+//!   layers in-memory map → binary store → live backend with
+//!   write-through, plus [`StoreMonitor`] counters and the
+//!   [`cache_session`] CLI constructor.
+//! - this file — bridges and maintenance: lossless export/import to the
+//!   JSONL v2 trace (which stays the diagnostic/interchange format),
+//!   `EvalKey::shard`-based partitioning, conflict-checked merge, and
+//!   compaction.
+//!
+//! Single-writer discipline: exactly one process may hold a store's
+//! [`StoreWriter`] (recording runs); any number may read. `repro serve`
+//! therefore opens caches read-through/offline on the coordinator and
+//! its workers — fleets consume stores, recording runs produce them.
+
+pub mod cached;
+pub mod format;
+
+pub use cached::{cache_session, CacheMode, CacheSessionMode, CachedEvaluator, StoreMonitor};
+pub use format::{EvalStore, StoreWriter, MAX_RECORD_BYTES, STORE_VERSION};
+
+use std::io::Write;
+use std::path::Path;
+
+use crate::eval::trace::{header_line, pair_to_line, parse_trace_pairs};
+use crate::eval::EvalKey;
+
+/// Export a binary store to a JSONL v2 trace, in record order, emitting
+/// exactly the bytes a `RecordingEvaluator` would have written for the
+/// same pairs — so the export replays under `TraceEvaluator` and
+/// re-imports losslessly (floats travel as shortest-roundtrip decimals
+/// that reparse bit-identically). Returns the number of records.
+pub fn export_jsonl(store: &EvalStore, dst: impl AsRef<Path>) -> Result<u64, String> {
+    let dst = dst.as_ref();
+    let ctx = |e: String| format!("trace {}: {e}", dst.display());
+    let file = std::fs::File::create(dst).map_err(|e| ctx(format!("cannot create: {e}")))?;
+    let mut out = std::io::BufWriter::new(file);
+    writeln!(out, "{}", header_line()).map_err(|e| ctx(e.to_string()))?;
+    let mut wrote = 0u64;
+    for key in store.keys() {
+        let (req, resp) = store
+            .get_pair(key)?
+            .expect("indexed key has a record");
+        writeln!(out, "{}", pair_to_line(&req, &resp)).map_err(|e| ctx(e.to_string()))?;
+        wrote += 1;
+    }
+    out.flush().map_err(|e| ctx(e.to_string()))?;
+    Ok(wrote)
+}
+
+/// Import a JSONL v2 trace into a fresh binary store at `dst`
+/// (truncating), with the trace parser's full validation (version gate,
+/// key match, conflicting-duplicate rejection). Line order becomes
+/// record order. Returns the number of records.
+pub fn import_jsonl(src: impl AsRef<Path>, dst: impl AsRef<Path>) -> Result<u64, String> {
+    let src = src.as_ref();
+    let text = std::fs::read_to_string(src)
+        .map_err(|e| format!("trace {}: {e}", src.display()))?;
+    let pairs = parse_trace_pairs(&text, &src.display().to_string())?;
+    let mut w = StoreWriter::create(dst)?;
+    let mut wrote = 0u64;
+    for (req, resp) in &pairs {
+        if w.append(req, resp)? {
+            wrote += 1;
+        }
+    }
+    w.finish()?;
+    Ok(wrote)
+}
+
+/// Copy the records whose [`EvalKey::shard`] lands on `index` (of `of`)
+/// into a fresh store at `dst`, preserving record order — the store-level
+/// analogue of `repro shard --index I --of N` (ADR-003). Returns the
+/// number of records copied.
+pub fn shard_store(
+    store: &EvalStore,
+    index: usize,
+    of: usize,
+    dst: impl AsRef<Path>,
+) -> Result<u64, String> {
+    if of == 0 || index >= of {
+        return Err(format!("bad shard spec: index {index} of {of}"));
+    }
+    let mut w = StoreWriter::create(dst)?;
+    let mut wrote = 0u64;
+    for key in store.keys() {
+        if key.shard(of) != index {
+            continue;
+        }
+        let (req, resp) = store.get_pair(key)?.expect("indexed key has a record");
+        if w.append(&req, &resp)? {
+            wrote += 1;
+        }
+    }
+    w.finish()?;
+    Ok(wrote)
+}
+
+/// Merge stores into a fresh store at `dst`: first occurrence of a key
+/// wins its record order; a key present in several sources must carry an
+/// identical record everywhere (compared by canonical payload checksum),
+/// otherwise the merge fails in-band — the same conflicting-duplicate
+/// discipline as the trace parser and the PR 3 shard merge. Returns the
+/// number of records written.
+pub fn merge_stores(stores: &[&EvalStore], dst: impl AsRef<Path>) -> Result<u64, String> {
+    let mut first_sum: std::collections::HashMap<EvalKey, u64> = std::collections::HashMap::new();
+    let mut w = StoreWriter::create(dst)?;
+    let mut wrote = 0u64;
+    for store in stores {
+        for key in store.keys() {
+            let sum = store
+                .record_checksum(key)?
+                .expect("indexed key has a record");
+            match first_sum.get(&key) {
+                Some(prev) if *prev != sum => {
+                    return Err(format!(
+                        "merge: conflicting records for key {key} \
+                         (sources disagree; refusing to pick one)"
+                    ));
+                }
+                Some(_) => continue,
+                None => {
+                    first_sum.insert(key, sum);
+                }
+            }
+            let (req, resp) = store.get_pair(key)?.expect("indexed key has a record");
+            if w.append(&req, &resp)? {
+                wrote += 1;
+            }
+        }
+    }
+    w.finish()?;
+    Ok(wrote)
+}
+
+/// Rewrite a store densely at `dst` (record order preserved), verifying
+/// every record on the way through. Returns `(records, bytes_in,
+/// bytes_out)`. Today's writers already produce dense stores, so this is
+/// mainly a verify-and-rewrite pass; it exists so a store recovered from
+/// forensic tooling or a future in-place format can be normalized.
+pub fn compact_store(
+    store: &EvalStore,
+    dst: impl AsRef<Path>,
+) -> Result<(u64, u64, u64), String> {
+    let dst = dst.as_ref();
+    let mut w = StoreWriter::create(dst)?;
+    let mut wrote = 0u64;
+    for key in store.keys() {
+        let (req, resp) = store.get_pair(key)?.expect("indexed key has a record");
+        if w.append(&req, &resp)? {
+            wrote += 1;
+        }
+    }
+    w.finish()?;
+    let bytes_out = std::fs::metadata(dst)
+        .map_err(|e| format!("store {}: {e}", dst.display()))?
+        .len();
+    Ok((wrote, store.file_bytes(), bytes_out))
+}
+
+/// Full structural self-check used by `repro cache stats` and the
+/// byte-flip negative suite: read and decode every record (per-record
+/// checksum, key match, request JSON). The open-time checks already
+/// guarantee the index tiles the data region exactly, so open +
+/// `verify_store` together validate every byte of the file — which is
+/// what lets the fuzz suite assert that *any* single-byte corruption is
+/// caught in-band.
+pub fn verify_store(store: &EvalStore) -> Result<(), String> {
+    for key in store.keys() {
+        let _ = store.get_pair(key)?;
+    }
+    Ok(())
+}

@@ -1,0 +1,800 @@
+//! Persistent eval-store tests (ADR-008 acceptance): a warm-cache re-run
+//! must produce byte-identical RunLogs with zero live evaluator calls —
+//! at `--jobs 1`, `--jobs 4`, and through `repro serve` with a
+//! coordinator-side cache — the binary store must round-trip losslessly
+//! through the JSONL v2 bridge, `EvalKey::shard` partitioning must
+//! reconstruct the full key set, and every corrupt input must come back
+//! as an in-band error, never a panic.
+
+use std::collections::HashSet;
+use std::path::PathBuf;
+use std::process::Command;
+use std::sync::Arc;
+use std::time::Duration;
+
+use ucutlass_repro::agent::controller::{ControllerKind, VariantSpec};
+use ucutlass_repro::agent::policy::TILES;
+use ucutlass_repro::agent::{ModelTier, RunLog};
+use ucutlass_repro::dsl::DType;
+use ucutlass_repro::eval::manifest::SuiteWork;
+use ucutlass_repro::eval::{
+    EvalKey, EvalRequest, EvalResponse, Evaluator, OwnedAnalytic, TraceEvaluator,
+};
+use ucutlass_repro::exec::eval_variants;
+use ucutlass_repro::experiments::Bench;
+use ucutlass_repro::fleet::{run_fleet, thread_worker_factory, EventLog, FaultPlan, FleetConfig};
+use ucutlass_repro::kernelbench::suite;
+use ucutlass_repro::mantis::MantisConfig;
+use ucutlass_repro::perfmodel::CandidateConfig;
+use ucutlass_repro::store::{
+    cache_session, compact_store, export_jsonl, import_jsonl, merge_stores, shard_store,
+    verify_store, CacheMode, CacheSessionMode, CachedEvaluator, EvalStore, StoreWriter,
+    MAX_RECORD_BYTES, STORE_VERSION,
+};
+use ucutlass_repro::util::json::Json;
+use ucutlass_repro::util::rng::{stream, StreamPath};
+use ucutlass_repro::util::{fnv64, prop};
+
+fn exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_repro"))
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ucutlass_cache_{}_{name}", std::process::id()))
+}
+
+/// One flat variant + one orchestrated default, as in the record/replay
+/// golden test: together they cover both task shapes of ADR-002.
+fn rr_work() -> Vec<(VariantSpec, Option<MantisConfig>)> {
+    vec![
+        (VariantSpec::new(ControllerKind::InPromptSol, true, ModelTier::Mini), None),
+        (
+            VariantSpec::new(ControllerKind::OrchestratedSol, true, ModelTier::Mini),
+            Some(MantisConfig::default()),
+        ),
+    ]
+}
+
+/// Deterministic request set covering every `MeasureKind`. 34 requests
+/// keeps all content-hash keys distinct: the (kind, problem) cycles only
+/// re-align at index 35, and the measured kinds carry the index in their
+/// stream path.
+fn sample_requests() -> Vec<EvalRequest> {
+    let dtypes = [DType::Fp32, DType::Fp16, DType::Bf16];
+    (0..34)
+        .map(|i| {
+            let p = i % 7;
+            let cfg = CandidateConfig::library(TILES[i % TILES.len()], dtypes[i % 3]);
+            let at = StreamPath::new(
+                42,
+                &[stream::MEASURE, stream::PROP_CASE, p as u64, i as u64],
+            );
+            match i % 5 {
+                0 => EvalRequest::baseline(p),
+                1 => EvalRequest::measured_baseline(p, at),
+                2 => EvalRequest::candidate(p, cfg),
+                3 => EvalRequest::measured(p, cfg, at),
+                _ => EvalRequest::sol_gap(p),
+            }
+        })
+        .collect()
+}
+
+/// The sample requests answered by the live analytic backend, plus two
+/// synthetic records it never produces: an error with a multi-line
+/// unicode detail, and a pass with a float that exposes sloppy decimal
+/// round-trips.
+fn sample_pairs() -> Vec<(EvalRequest, EvalResponse)> {
+    let reqs = sample_requests();
+    let live = OwnedAnalytic::new();
+    let resps = live.eval_batch(&reqs);
+    let mut pairs: Vec<(EvalRequest, EvalResponse)> = reqs.into_iter().zip(resps).collect();
+    let cfg = CandidateConfig::library(TILES[0], DType::Bf16);
+    let e = EvalRequest::candidate(1, cfg.clone()).with_hash("feedface00000001");
+    let e_resp =
+        EvalResponse::error(e.eval_key(), "compile failed:\n  line 2 \"quoted\" \u{2713}");
+    pairs.push((e, e_resp));
+    let o = EvalRequest::candidate(2, cfg).with_hash("feedface00000002");
+    let o_resp = EvalResponse::ok(o.eval_key(), 0.1 + 0.2);
+    pairs.push((o, o_resp));
+    pairs
+}
+
+fn build_store(path: &PathBuf, pairs: &[(EvalRequest, EvalResponse)]) {
+    let mut w = StoreWriter::create(path).unwrap_or_else(|e| panic!("{e}"));
+    for (req, resp) in pairs {
+        assert!(w.append(req, resp).unwrap_or_else(|e| panic!("{e}")));
+    }
+    w.finish().unwrap_or_else(|e| panic!("{e}"));
+}
+
+// ---------------------------------------------------------------------------
+// The golden property: warm re-runs are byte-identical with zero live calls
+
+#[test]
+fn cached_run_warm_rerun_is_byte_identical_with_zero_live_evals() {
+    let path = tmp("golden.store");
+    let _ = std::fs::remove_file(&path);
+    let work = rr_work();
+    let seed = 2025;
+
+    // reference: the plain analytic run
+    let bench = Bench::new();
+    let reference: Vec<RunLog> = eval_variants(&bench, &work, seed, 1);
+
+    // cold run under --jobs 4: write-through must be transparent
+    {
+        let mut bench_rec = Bench::new();
+        let (oracle, mon) = cache_session(CacheSessionMode::WriteThrough, path.clone()).unwrap_or_else(|e| panic!("{e}"));
+        bench_rec.set_oracle(oracle);
+        let recorded = eval_variants(&bench_rec, &work, seed, 4);
+        assert_eq!(recorded, reference, "write-through must not perturb the run");
+        assert!(mon.live() > 0, "cold store: everything is measured live");
+        assert!(mon.writes() > 0);
+        assert_eq!(mon.misses(), 0, "live fall-through is not a miss");
+        drop(bench_rec); // dropping the evaluator writes the index + trailer
+        assert_eq!(mon.io_error(), None);
+    }
+
+    let store = EvalStore::open(&path).unwrap_or_else(|e| panic!("{e}"));
+    assert!(store.len() > 0);
+    verify_store(&store).unwrap_or_else(|e| panic!("{e}"));
+    drop(store);
+
+    // warm re-runs, fully offline: zero live evaluator calls, zero
+    // misses, byte-identical RunLogs — serial and parallel
+    for jobs in [1usize, 4] {
+        let mut bench_rep = Bench::new();
+        let (oracle, mon) = cache_session(CacheSessionMode::Offline, path.clone()).unwrap_or_else(|e| panic!("{e}"));
+        bench_rep.set_oracle(oracle);
+        let replayed = eval_variants(&bench_rep, &work, seed, jobs);
+        assert_eq!(mon.live(), 0, "jobs={jobs}: offline has no live backend");
+        assert_eq!(mon.misses(), 0, "jobs={jobs}: first miss: {:?}", mon.first_miss());
+        assert!(mon.hits() > 0);
+        mon.check().unwrap_or_else(|e| panic!("jobs={jobs}: {e}"));
+        assert_eq!(replayed, reference, "jobs={jobs}: field-for-field exact");
+        for (r, x) in replayed.iter().zip(&reference) {
+            assert_eq!(
+                r.to_json().to_string(),
+                x.to_json().to_string(),
+                "jobs={jobs}: persisted artifacts must be byte-identical"
+            );
+        }
+    }
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn write_through_extend_serves_landed_records_and_appends_only_fresh_keys() {
+    let path = tmp("extend.store");
+    let _ = std::fs::remove_file(&path);
+    let seed = 2025;
+    let subset: Vec<(VariantSpec, Option<MantisConfig>)> =
+        vec![(VariantSpec::new(ControllerKind::InPromptSol, true, ModelTier::Mini), None)];
+
+    // session 1: record the subset
+    {
+        let mut b = Bench::new();
+        let (oracle, mon) = cache_session(CacheSessionMode::WriteThrough, path.clone()).unwrap_or_else(|e| panic!("{e}"));
+        b.set_oracle(oracle);
+        let _ = eval_variants(&b, &subset, seed, 1);
+        drop(b);
+        assert!(mon.writes() > 0);
+        assert_eq!(mon.io_error(), None);
+    }
+    let bytes1 = std::fs::read(&path).unwrap();
+    let store1 = EvalStore::open(&path).unwrap_or_else(|e| panic!("{e}"));
+    let keys1: Vec<EvalKey> = store1.keys().collect();
+    drop(store1);
+
+    // session 2: the same subset again — extend seeds its dedup state
+    // from the offset index (no payload re-read, no JSON re-parse), the
+    // run is served entirely from the store, nothing is appended, and
+    // finish() rewrites the identical index: the file is byte-stable
+    {
+        let mut b = Bench::new();
+        let (oracle, mon) = cache_session(CacheSessionMode::WriteThrough, path.clone()).unwrap_or_else(|e| panic!("{e}"));
+        b.set_oracle(oracle);
+        let rerun = eval_variants(&b, &subset, seed, 1);
+        drop(b);
+        assert!(!rerun.is_empty());
+        assert_eq!(mon.writes(), 0, "every key already landed");
+        assert_eq!(mon.live(), 0);
+        assert!(mon.hits() > 0);
+        assert_eq!(mon.io_error(), None);
+    }
+    assert_eq!(
+        std::fs::read(&path).unwrap(),
+        bytes1,
+        "a no-new-keys extension must leave the store byte-identical"
+    );
+
+    // session 3: a superset — only the new variant's keys go live and
+    // get appended; every previously landed record keeps serving
+    {
+        let mut b = Bench::new();
+        let (oracle, mon) = cache_session(CacheSessionMode::WriteThrough, path.clone()).unwrap_or_else(|e| panic!("{e}"));
+        b.set_oracle(oracle);
+        let _ = eval_variants(&b, &rr_work(), seed, 1);
+        drop(b);
+        assert!(mon.writes() > 0, "the second variant brings fresh keys");
+        assert!(mon.hits() > 0, "the subset's keys come from the store");
+        assert_eq!(mon.io_error(), None);
+    }
+    let store = EvalStore::open(&path).unwrap_or_else(|e| panic!("{e}"));
+    assert!(store.len() > keys1.len());
+    for k in &keys1 {
+        assert!(store.contains(*k), "extension must not orphan key {k}");
+    }
+    verify_store(&store).unwrap_or_else(|e| panic!("{e}"));
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn thread_fleet_with_shared_offline_cache_matches_single_process_run() {
+    let path = tmp("fleet.store");
+    let _ = std::fs::remove_file(&path);
+    let bench = Bench::new();
+    let work = SuiteWork {
+        seed: 77,
+        problems: bench.problems.len(),
+        work: vec![
+            (VariantSpec::new(ControllerKind::Mi, false, ModelTier::Mini), None),
+            (
+                VariantSpec::new(ControllerKind::OrchestratedSol, false, ModelTier::Mini),
+                Some(MantisConfig::default()),
+            ),
+        ],
+    };
+    let reference = Json::Arr(
+        eval_variants(&bench, &work.work, work.seed, 1).iter().map(|l| l.to_json()).collect(),
+    )
+    .to_string();
+
+    // record the whole job once, plus the coordinator's admission
+    // baselines, so the store covers every fleet-side request
+    {
+        let mut b = Bench::new();
+        let (oracle, mon) = cache_session(CacheSessionMode::WriteThrough, path.clone()).unwrap_or_else(|e| panic!("{e}"));
+        b.set_oracle(oracle);
+        let _ = eval_variants(&b, &work.work, work.seed, 1);
+        let baselines: Vec<EvalRequest> =
+            (0..b.problems.len()).map(EvalRequest::baseline).collect();
+        let _ = b.evaluator().eval_batch(&baselines);
+        drop(b);
+        assert_eq!(mon.io_error(), None);
+    }
+    let store_bytes = std::fs::read(&path).unwrap();
+
+    // coordinator + both in-process workers share one offline session
+    let mut shared = Bench::new();
+    let (oracle, mon) = cache_session(CacheSessionMode::Offline, path.clone()).unwrap_or_else(|e| panic!("{e}"));
+    shared.set_oracle(oracle);
+    let shared = Arc::new(shared);
+    let cfg = FleetConfig {
+        workers: 2,
+        deadline: Duration::from_secs(180),
+        backoff_base: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(50),
+        ..FleetConfig::default()
+    };
+    let events = EventLog::new();
+    let out = run_fleet(
+        &shared,
+        &work,
+        &cfg,
+        thread_worker_factory(Arc::clone(&shared), vec![FaultPlan::none(); 2]),
+        &events,
+    )
+    .unwrap_or_else(|e| panic!("offline-cached fleet must converge: {e}"));
+    let got = Json::Arr(out.logs.iter().map(|l| l.to_json()).collect()).to_string();
+    assert_eq!(got, reference, "byte-identical to one process, zero re-measurement");
+    assert_eq!(mon.live(), 0);
+    assert_eq!(mon.misses(), 0, "first miss: {:?}", mon.first_miss());
+    assert!(mon.hits() > 0);
+    mon.check().unwrap_or_else(|e| panic!("{e}"));
+    // single-writer discipline: fleets never write the store
+    assert_eq!(std::fs::read(&path).unwrap(), store_bytes);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn serve_cli_offline_cache_end_to_end_zero_live_zero_misses() {
+    let store = tmp("serve.store");
+    let out_path = tmp("serve_out.json");
+    let _ = std::fs::remove_file(&store);
+
+    // 1. record: one single-process cached run of the same spec + seed
+    let output = Command::new(exe())
+        .args(["run", "--tier", "mini", "--seed", "9", "--cache"])
+        .arg(&store)
+        .output()
+        .expect("run repro run --cache");
+    assert!(
+        output.status.success(),
+        "recording run must exit 0; stderr: {}",
+        String::from_utf8_lossy(&output.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&output.stdout);
+    assert!(stdout.contains("cache "), "prints the session summary: {stdout}");
+
+    // 1b. top up the coordinator's admission baselines via a
+    // write-through extension (already-covered keys dedup to no-ops)
+    {
+        let (oracle, mon) = cache_session(CacheSessionMode::WriteThrough, store.clone()).unwrap_or_else(|e| panic!("{e}"));
+        let baselines: Vec<EvalRequest> =
+            (0..suite().len()).map(EvalRequest::baseline).collect();
+        let _ = oracle.eval_batch(&baselines);
+        drop(oracle);
+        assert_eq!(mon.io_error(), None);
+    }
+    let store_bytes = std::fs::read(&store).unwrap();
+
+    // 2. serve the fleet entirely from the store: coordinator and both
+    // workers open it offline — zero live evals, zero misses
+    let output = Command::new(exe())
+        .args([
+            "serve", "--workers", "2", "--tier", "mini", "--seed", "9",
+            "--deadline-ms", "180000", "--offline", "--cache",
+        ])
+        .arg(&store)
+        .arg("--out")
+        .arg(&out_path)
+        .output()
+        .expect("run repro serve --cache --offline");
+    assert!(
+        output.status.success(),
+        "serve must exit 0; stderr: {}",
+        String::from_utf8_lossy(&output.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&output.stdout);
+    assert!(stdout.contains("shards merged"), "summary line present: {stdout}");
+    assert!(
+        stdout.contains("0 live, 0 written, 0 miss(es)"),
+        "the offline fleet must be fully served by the store: {stdout}"
+    );
+
+    // the merged output is byte-identical to the plain single-process
+    // evaluation of the same spec and seed
+    let bench = Bench::new();
+    let work = SuiteWork::single(
+        VariantSpec::new(ControllerKind::Mi, false, ModelTier::Mini),
+        None,
+        9,
+        bench.problems.len(),
+    );
+    let golden = Json::Arr(
+        eval_variants(&bench, &work.work, work.seed, 1).iter().map(|l| l.to_json()).collect(),
+    )
+    .to_string();
+    assert_eq!(std::fs::read_to_string(&out_path).unwrap(), golden);
+
+    // single-writer discipline: serving never modified the store
+    assert_eq!(std::fs::read(&store).unwrap(), store_bytes);
+    let _ = std::fs::remove_file(&store);
+    let _ = std::fs::remove_file(&out_path);
+}
+
+// ---------------------------------------------------------------------------
+// JSONL bridge and maintenance
+
+#[test]
+fn export_import_roundtrip_is_lossless_and_byte_identical() {
+    let s1 = tmp("rt1.store");
+    let trace = tmp("rt.jsonl");
+    let s2 = tmp("rt2.store");
+    let pairs = sample_pairs();
+    build_store(&s1, &pairs);
+
+    let store1 = EvalStore::open(&s1).unwrap_or_else(|e| panic!("{e}"));
+    assert_eq!(store1.len(), pairs.len(), "sample keys must be distinct");
+    let n = export_jsonl(&store1, &trace).unwrap_or_else(|e| panic!("{e}"));
+    assert_eq!(n as usize, pairs.len());
+
+    // the export replays under the JSONL trace evaluator, bit-identically
+    let te = TraceEvaluator::load(&trace).unwrap_or_else(|e| panic!("{e}"));
+    let reqs: Vec<EvalRequest> = pairs.iter().map(|(r, _)| r.clone()).collect();
+    let served = te.eval_batch(&reqs);
+    for ((req, want), got) in pairs.iter().zip(&served) {
+        assert_eq!(got, want, "{}", req.key());
+        assert_eq!(got.value.to_bits(), want.value.to_bits(), "floats travel bit-identically");
+    }
+
+    // and re-imports to a byte-identical store file
+    let m = import_jsonl(&trace, &s2).unwrap_or_else(|e| panic!("{e}"));
+    assert_eq!(m, n);
+    assert_eq!(
+        std::fs::read(&s2).unwrap(),
+        std::fs::read(&s1).unwrap(),
+        "store -> JSONL -> store must be the identity on bytes"
+    );
+    for p in [&s1, &trace, &s2] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn shard_partition_and_merge_reconstruct_the_full_key_set() {
+    let full = tmp("part.store");
+    let pairs = sample_pairs();
+    build_store(&full, &pairs);
+    let store = EvalStore::open(&full).unwrap_or_else(|e| panic!("{e}"));
+
+    let of = 3;
+    let mut shard_paths = Vec::new();
+    let mut union: HashSet<EvalKey> = HashSet::new();
+    let mut total = 0u64;
+    let mut nonempty = 0;
+    for i in 0..of {
+        let p = tmp(&format!("part{i}.store"));
+        let n = shard_store(&store, i, of, &p).unwrap_or_else(|e| panic!("{e}"));
+        total += n;
+        let s = EvalStore::open(&p).unwrap_or_else(|e| panic!("{e}"));
+        assert_eq!(s.len() as u64, n);
+        for k in s.keys() {
+            assert_eq!(k.shard(of), i, "key {k} must land on its shard");
+            assert!(union.insert(k), "shards must be disjoint");
+        }
+        if !s.is_empty() {
+            nonempty += 1;
+        }
+        shard_paths.push(p);
+    }
+    assert_eq!(total as usize, store.len());
+    assert_eq!(union, store.keys().collect::<HashSet<_>>());
+    // 36 content-hash keys over 3 shards: a degenerate split means the
+    // partition function is broken, not that we got unlucky
+    assert!(nonempty >= 2, "partition must actually split: {nonempty} shard(s) used");
+    let err = shard_store(&store, 3, 3, tmp("part_bad.store")).unwrap_err();
+    assert!(err.contains("bad shard spec"), "got: {err}");
+
+    // re-merge: same key set, bit-identical responses
+    let merged_path = tmp("part_merged.store");
+    let opened: Vec<EvalStore> =
+        shard_paths.iter().map(|p| EvalStore::open(p).unwrap_or_else(|e| panic!("{e}"))).collect();
+    let refs: Vec<&EvalStore> = opened.iter().collect();
+    let m = merge_stores(&refs, &merged_path).unwrap_or_else(|e| panic!("{e}"));
+    assert_eq!(m as usize, store.len());
+    let merged = EvalStore::open(&merged_path).unwrap_or_else(|e| panic!("{e}"));
+    for (req, want) in &pairs {
+        let got = merged
+            .get(req.eval_key())
+            .unwrap_or_else(|e| panic!("{e}"))
+            .expect("merged store serves every key");
+        assert_eq!(&got, want);
+        assert_eq!(got.value.to_bits(), want.value.to_bits());
+    }
+    // overlapping identical records dedup rather than duplicate or err
+    let again = tmp("part_again.store");
+    let re = merge_stores(&[&store, &merged], &again).unwrap_or_else(|e| panic!("{e}"));
+    assert_eq!(re as usize, store.len());
+
+    // a merged store is already dense: compaction is the identity
+    let compacted = tmp("part_compacted.store");
+    let (cn, bytes_in, bytes_out) =
+        compact_store(&merged, &compacted).unwrap_or_else(|e| panic!("{e}"));
+    assert_eq!(cn as usize, merged.len());
+    assert_eq!(bytes_in, bytes_out);
+    assert_eq!(std::fs::read(&compacted).unwrap(), std::fs::read(&merged_path).unwrap());
+
+    for p in shard_paths.iter().chain([&full, &merged_path, &again, &compacted]) {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn merge_refuses_conflicting_records_for_one_key() {
+    let a = tmp("conflict_a.store");
+    let b = tmp("conflict_b.store");
+    let out = tmp("conflict_out.store");
+    let req = EvalRequest::baseline(3);
+    build_store(&a, &[(req.clone(), EvalResponse::ok(req.eval_key(), 1.0))]);
+    build_store(&b, &[(req.clone(), EvalResponse::ok(req.eval_key(), 2.0))]);
+    let sa = EvalStore::open(&a).unwrap_or_else(|e| panic!("{e}"));
+    let sb = EvalStore::open(&b).unwrap_or_else(|e| panic!("{e}"));
+    let err = merge_stores(&[&sa, &sb], &out).unwrap_err();
+    assert!(err.contains("conflicting records"), "got: {err}");
+    for p in [&a, &b, &out] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Hostile-input hardening: the store sits on operator-supplied files, so
+// truncated, corrupted, wrong-magic, wrong-version, and duplicate-key
+// inputs must come back as in-band errors — never a panic.
+
+#[test]
+fn store_open_rejects_corrupt_files_in_band() {
+    let path = tmp("neg.store");
+    let pairs = sample_pairs();
+    build_store(&path, &pairs[..3]);
+    let base = std::fs::read(&path).unwrap();
+    assert!(EvalStore::open(&path).is_ok(), "baseline store is valid");
+
+    let mangled = tmp("neg_m.store");
+    let open_with = |bytes: &[u8]| {
+        std::fs::write(&mangled, bytes).unwrap();
+        EvalStore::open(&mangled)
+    };
+
+    // every truncated prefix fails in-band, never panics
+    for cut in (0..base.len()).step_by(13).chain(base.len() - 40..base.len()) {
+        assert!(open_with(&base[..cut]).is_err(), "a {cut}-byte prefix must fail in-band");
+    }
+
+    // wrong magic: not an eval store
+    let mut b = base.clone();
+    b[0] ^= 0xff;
+    assert!(open_with(&b).err().expect("open must fail").contains("bad magic"));
+
+    // a future format version is rejected, not misread
+    let mut b = base.clone();
+    b[8..12].copy_from_slice(&(STORE_VERSION + 1).to_le_bytes());
+    assert!(open_with(&b).err().expect("open must fail").contains("unsupported store version"));
+
+    // v1 defines no header flags
+    let mut b = base.clone();
+    b[12] = 1;
+    assert!(open_with(&b).err().expect("open must fail").contains("unsupported store flags"));
+
+    let trailer = base.len() - 40;
+    // trailer version must agree with the header's
+    let mut b = base.clone();
+    b[trailer + 8..trailer + 12].copy_from_slice(&(STORE_VERSION + 1).to_le_bytes());
+    assert!(open_with(&b).err().expect("open must fail").contains("disagrees"));
+
+    // the trailer's reserved field must be zero
+    let mut b = base.clone();
+    b[trailer + 12] = 7;
+    assert!(open_with(&b).err().expect("open must fail").contains("reserved field"));
+
+    // an index whose checksum does not match is rejected at open
+    let index_off =
+        u64::from_le_bytes(base[trailer + 24..trailer + 32].try_into().unwrap()) as usize;
+    let mut b = base.clone();
+    b[index_off + 20] ^= 0x01; // an offset byte inside entry 0
+    assert!(open_with(&b).err().expect("open must fail").contains("index checksum mismatch"));
+
+    // a crafted duplicate-key index (checksum recomputed so only the
+    // duplicate itself is wrong) is rejected at open
+    let mut b = base.clone();
+    let key0 = b[index_off..index_off + 16].to_vec();
+    b[index_off + 28..index_off + 44].copy_from_slice(&key0);
+    let sum = fnv64(&b[index_off..trailer]);
+    b[trailer + 32..trailer + 40].copy_from_slice(&sum.to_le_bytes());
+    let err = open_with(&b).err().expect("open must fail");
+    assert!(err.contains("duplicate key"), "got: {err}");
+
+    // record corruption that open cannot see (payload bytes) is caught
+    // by the checksum on the read path
+    let mut b = base.clone();
+    b[16 + 12] ^= 0x01; // first byte of record 0's payload
+    let s = open_with(&b).unwrap_or_else(|e| panic!("structurally intact: {e}"));
+    let err = verify_store(&s).unwrap_err();
+    assert!(err.contains("checksum mismatch"), "got: {err}");
+
+    for p in [&path, &mangled] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn prop_any_single_byte_flip_is_caught_by_open_or_verify() {
+    let path = tmp("flip.store");
+    let pairs = sample_pairs();
+    build_store(&path, &pairs[..4]);
+    let base = std::fs::read(&path).unwrap();
+    let mangled = tmp("flip_m.store");
+    // every byte of a store is load-bearing: header and trailer fields
+    // are all checked at open, the index is checksummed, records must
+    // tile the data region exactly, and each record read re-checksums
+    // its payload — so any flip fails open() or verify_store()
+    prop::check("store-byte-flips", 120, |rng| {
+        let mut bytes = base.clone();
+        let pos = rng.below(bytes.len());
+        bytes[pos] ^= (1 + rng.below(255)) as u8;
+        std::fs::write(&mangled, &bytes).unwrap();
+        match EvalStore::open(&mangled) {
+            Err(_) => {} // caught at open
+            Ok(s) => assert!(
+                verify_store(&s).is_err(),
+                "a flip at byte {pos} of {} must be caught in-band",
+                bytes.len()
+            ),
+        }
+    });
+    for p in [&path, &mangled] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn writer_discipline_empty_store_dup_keys_and_rejected_appends() {
+    // an empty store (header + trailer only) opens and serves nothing
+    let empty = tmp("empty.store");
+    let mut w = StoreWriter::create(&empty).unwrap_or_else(|e| panic!("{e}"));
+    assert_eq!(w.len(), 0);
+    w.finish().unwrap_or_else(|e| panic!("{e}"));
+    w.finish().unwrap_or_else(|e| panic!("finish is idempotent: {e}"));
+    let s = EvalStore::open(&empty).unwrap_or_else(|e| panic!("{e}"));
+    assert!(s.is_empty());
+    assert_eq!(s.file_bytes(), 56);
+    assert_eq!(s.open_bytes(), 56);
+    assert_eq!(s.get(EvalRequest::baseline(0).eval_key()).unwrap(), None);
+    drop(s);
+
+    let path = tmp("writer.store");
+    let req = EvalRequest::baseline(5);
+    let first = EvalResponse::ok(req.eval_key(), 1.5);
+    let mut w = StoreWriter::create(&path).unwrap_or_else(|e| panic!("{e}"));
+
+    // a mismatched (request, response) pair must never land
+    let other = EvalRequest::baseline(6);
+    let err = w.append(&req, &EvalResponse::ok(other.eval_key(), 1.0)).unwrap_err();
+    assert!(err.contains("does not match"), "got: {err}");
+
+    // an oversized record is refused in-band...
+    let err = w
+        .append(&req, &EvalResponse::error(req.eval_key(), "x".repeat(MAX_RECORD_BYTES)))
+        .unwrap_err();
+    assert!(err.contains("over the"), "got: {err}");
+
+    // ...and neither rejection poisons the key: the valid record lands
+    assert!(w.append(&req, &first).unwrap_or_else(|e| panic!("{e}")));
+    // duplicate appends are first-wins, like the JSONL recorder's dedup
+    assert!(!w.append(&req, &EvalResponse::ok(req.eval_key(), 9.0)).unwrap());
+    drop(w); // no explicit finish: Drop writes the index
+
+    let s = EvalStore::open(&path).unwrap_or_else(|e| panic!("{e}"));
+    assert_eq!(s.len(), 1);
+    assert_eq!(s.get(req.eval_key()).unwrap().unwrap(), first, "first write wins");
+    drop(s);
+
+    // append-after-finish is refused
+    let (_s2, mut w2) = StoreWriter::extend(&path).unwrap_or_else(|e| panic!("{e}"));
+    w2.finish().unwrap_or_else(|e| panic!("{e}"));
+    let err = w2.append(&other, &EvalResponse::ok(other.eval_key(), 2.0)).unwrap_err();
+    assert!(err.contains("append after finish"), "got: {err}");
+    for p in [&empty, &path] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn offline_miss_is_an_in_band_error_and_read_through_falls_back_live() {
+    let path = tmp("miss.store");
+    let covered = EvalRequest::baseline(0);
+    let live = OwnedAnalytic::new();
+    let resp = live.eval(&covered);
+    build_store(&path, &[(covered.clone(), resp.clone())]);
+    let missing = EvalRequest::sol_gap(1);
+
+    // offline: the covered key serves, the missing one answers in-band
+    let cached = CachedEvaluator::open(&path, CacheMode::Offline).unwrap_or_else(|e| panic!("{e}"));
+    let mon = cached.monitor();
+    let got = cached.eval_batch(&[covered.clone(), missing.clone()]);
+    assert_eq!(got[0], resp);
+    assert!(!got[1].pass, "a miss is an error response, not a panic");
+    assert!(
+        got[1].detail.as_deref().unwrap_or("").contains("cache miss:"),
+        "names the miss: {:?}",
+        got[1].detail
+    );
+    assert_eq!(mon.hits(), 1);
+    assert_eq!(mon.misses(), 1);
+    assert_eq!(mon.first_miss(), Some(missing.key()));
+    let err = mon.check().unwrap_err();
+    assert!(err.contains("not in the store"), "got: {err}");
+    assert!(mon.summary().contains("1 miss(es)"), "{}", mon.summary());
+    drop(cached);
+
+    // a second touch of a served key is a memory hit, not another pread
+    let cached = CachedEvaluator::open(&path, CacheMode::Offline).unwrap_or_else(|e| panic!("{e}"));
+    let mon = cached.monitor();
+    let _ = cached.eval_batch(&[covered.clone()]);
+    let _ = cached.eval_batch(&[covered.clone()]);
+    assert_eq!(mon.hits_store(), 1);
+    assert_eq!(mon.hits_mem(), 1);
+    drop(cached);
+
+    // read-through: the missing key is measured live (a fall-through,
+    // not a miss), and the store file is never written
+    let before = std::fs::read(&path).unwrap();
+    let cached =
+        CachedEvaluator::open(&path, CacheMode::ReadThrough(Box::new(OwnedAnalytic::new())))
+            .unwrap_or_else(|e| panic!("{e}"));
+    let mon = cached.monitor();
+    let got = cached.eval_batch(&[covered.clone(), missing.clone()]);
+    assert_eq!(got[0], resp);
+    assert_eq!(got[1], live.eval(&missing));
+    assert_eq!(mon.live(), 1);
+    assert_eq!(mon.misses(), 0, "live fall-through is not a miss");
+    mon.check().unwrap_or_else(|e| panic!("{e}"));
+    drop(cached);
+    assert_eq!(std::fs::read(&path).unwrap(), before, "read-through never writes");
+    let _ = std::fs::remove_file(&path);
+}
+
+// ---------------------------------------------------------------------------
+// CLI surface
+
+#[test]
+fn cache_cli_stats_export_import_compact_roundtrip() {
+    let s1 = tmp("cli1.store");
+    let trace = tmp("cli.jsonl");
+    let s2 = tmp("cli2.store");
+    let s3 = tmp("cli3.store");
+    build_store(&s1, &sample_pairs());
+
+    let out = Command::new(exe()).arg("cache").arg("stats").arg(&s1).output().unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("format v1"), "{stdout}");
+    assert!(stdout.contains("record(s)"), "{stdout}");
+    assert!(stdout.contains("all record checksums verified"), "{stdout}");
+
+    let out = Command::new(exe()).arg("cache").arg("export").arg(&s1).arg(&trace).output().unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let out = Command::new(exe()).arg("cache").arg("import").arg(&trace).arg(&s2).output().unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert_eq!(
+        std::fs::read(&s2).unwrap(),
+        std::fs::read(&s1).unwrap(),
+        "CLI export | import must reproduce the store byte-for-byte"
+    );
+
+    let out = Command::new(exe())
+        .args(["cache", "compact"])
+        .arg(&s1)
+        .arg("--out")
+        .arg(&s3)
+        .output()
+        .unwrap();
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    assert_eq!(
+        std::fs::read(&s3).unwrap(),
+        std::fs::read(&s1).unwrap(),
+        "a dense store compacts to itself"
+    );
+
+    // error paths: missing file, missing --out, unknown subcommand
+    let out = Command::new(exe()).args(["cache", "stats", "no_such.store"]).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("error:"));
+    let out = Command::new(exe()).args(["cache", "compact"]).arg(&s1).output().unwrap();
+    assert!(!out.status.success());
+    assert!(String::from_utf8_lossy(&out.stderr).contains("--out"));
+    let out = Command::new(exe()).args(["cache", "bogus"]).output().unwrap();
+    assert!(!out.status.success());
+
+    for p in [&s1, &trace, &s2, &s3] {
+        let _ = std::fs::remove_file(p);
+    }
+}
+
+#[test]
+fn cache_flag_validation_rejects_misuse_before_running_anything() {
+    let check = |args: &[&str], needle: &str| {
+        let out = Command::new(exe()).args(args).output().expect("run repro");
+        assert!(!out.status.success(), "{args:?} must exit nonzero");
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(stderr.contains(needle), "{args:?}: expected `{needle}` in: {stderr}");
+    };
+    // --cache is scoped to the subcommands that evaluate
+    check(&["sol", "--cache", "x.store"], "--cache is only meaningful");
+    // a bare --cache parses as the flag sentinel, not a file named `true`
+    check(&["run", "--tier", "mini", "--cache"], "needs a file path");
+    // one oracle at a time (`sweep` is the one subcommand where both
+    // flags are in scope); the bridge is `repro cache export|import`
+    check(
+        &["sweep", "--cache", "a.store", "--trace", "b.jsonl"],
+        "mutually exclusive",
+    );
+    check(&["run", "--tier", "mini", "--offline"], "--offline needs --cache");
+    // serve fails fast, coordinator-side, before any worker spawns
+    check(
+        &["serve", "--workers", "2", "--offline", "--cache", "no_such_dir/no_such.store"],
+        "error: store",
+    );
+}

@@ -71,7 +71,7 @@ fn subprocess_fleet_matches_single_process_run() {
         &bench,
         &work,
         &cfg(2),
-        subprocess_worker_factory(exe(), vec![String::new(); 2]),
+        subprocess_worker_factory(exe(), vec![String::new(); 2], Vec::new()),
         &events,
     )
     .unwrap_or_else(|e| panic!("faultless subprocess fleet must converge: {e}"));
@@ -97,7 +97,7 @@ fn subprocess_fleet_converges_through_worker_crashes() {
         &bench,
         &work,
         &cfg(2),
-        subprocess_worker_factory(exe(), vec!["0:crash,2:crash".into(), String::new()]),
+        subprocess_worker_factory(exe(), vec!["0:crash,2:crash".into(), String::new()], Vec::new()),
         &events,
     )
     .unwrap_or_else(|e| panic!("fleet must converge through crashes: {e}"));
