@@ -1,0 +1,9 @@
+# Adversarial corpus: accumulator-dropping epilogue (ADR-009).
+# Expected: A202 (deny) — scale(0) multiplies the accumulator by zero, so
+# every FLOP the main loop computes is discarded; any measured speedup is
+# benchmark gaming, not optimization.
+gemm().with_dtype(input=fp16, acc=fp32, output=fp16)
+    .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor)
+    .with_arch(sm_90a)
+    .with_threadblockshape(m=128, n=64, k=64).with_stages(3)
+    >> scale(0.0)

@@ -1,0 +1,6 @@
+# Corpus: a clean program (ADR-009). Expected: zero diagnostics, exit 0.
+gemm().with_dtype(input=fp16, acc=fp32, output=fp16)
+    .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor)
+    .with_arch(sm_90a)
+    .with_threadblockshape(m=128, n=64, k=64).with_stages(3)
+    >> bias() >> relu()

@@ -1,0 +1,11 @@
+# Corpus: constraint-cliff notes (ADR-009). Valid program, exit code 0.
+# Expected: C402 (note) — with_stages(12) is the sm_90a maximum; any
+#           upward mutation is a hard reject.
+#           C403 (note) — alignment 8 × fp16 = 16 bytes, exactly the TMA
+#           vector minimum; halving any alignment rejects.
+gemm().with_dtype(input=fp16, acc=fp32, output=fp16)
+    .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor)
+    .with_arch(sm_90a)
+    .with_threadblockshape(m=64, n=64, k=16)
+    .with_stages(12)
+    .with_alignment(A=8, B=8, C=8)

@@ -1,0 +1,9 @@
+# Adversarial corpus: dead epilogue store (ADR-009).
+# Expected: A201 (warn) — aux_store(t0) is never aux_load-ed, so the
+# stored tensor is unobservable downstream; the store is dead weight and a
+# chain built around it can hide skipped computation.
+gemm().with_dtype(input=fp16, acc=fp32, output=fp16)
+    .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor)
+    .with_arch(sm_90a)
+    .with_threadblockshape(m=128, n=64, k=64).with_stages(3)
+    >> aux_store(t0) >> relu()

@@ -1,0 +1,9 @@
+# Adversarial corpus: identity epilogue chain (ADR-009).
+# Expected: A203 (warn) × 2 — scale(1) and leaky_relu(alpha=1) are both
+# identities: each consumes an EVT fusion slot and trial variance without
+# changing the output.
+gemm().with_dtype(input=fp16, acc=fp32, output=fp16)
+    .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor)
+    .with_arch(sm_90a)
+    .with_threadblockshape(m=128, n=64, k=64).with_stages(3)
+    >> scale(1.0) >> leaky_relu(alpha=1.0)

@@ -1,0 +1,10 @@
+# Adversarial corpus: constant-output epilogue (ADR-009).
+# Expected: A103 (deny) — clip(5, 5) clamps every element to the same
+# value regardless of the computed product, so a measurement of this
+# kernel can undercut the SOL bound only because the declared computation
+# is no longer performed (constant-output gaming).
+gemm().with_dtype(input=fp16, acc=fp32, output=fp16)
+    .with_layout(A=RowMajor, B=ColumnMajor, C=RowMajor)
+    .with_arch(sm_90a)
+    .with_threadblockshape(m=128, n=64, k=64).with_stages(3)
+    >> clip(5.0, 5.0)

@@ -567,4 +567,115 @@ fn main() {
         let _ = std::fs::remove_file(&trace_path);
         let _ = std::fs::remove_file(&store_path);
     }
+
+    // ---- static-analyzer pruning (ADR-009 headline) ---------------------
+    // Twin full-suite sweeps at the same seed, prune-off vs prune-on: the
+    // prune-on side must issue strictly fewer evaluator calls (each pruned
+    // candidate is one measured trial that never reached the oracle), and
+    // the integrity-filtered geomean speedup must be bitwise unchanged.
+    {
+        use std::sync::atomic::{AtomicU64, Ordering};
+        use ucutlass_repro::agent::AttemptOutcome;
+        use ucutlass_repro::eval::{EvalResponse, MeasureKind, OwnedAnalytic};
+        use ucutlass_repro::util::json::Json;
+
+        struct CountingOracle {
+            inner: OwnedAnalytic,
+            measured: AtomicU64,
+            total: AtomicU64,
+        }
+        impl Evaluator for CountingOracle {
+            fn eval_batch(&self, reqs: &[EvalRequest]) -> Vec<EvalResponse> {
+                self.total.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+                let m = reqs
+                    .iter()
+                    .filter(|r| matches!(r.kind, MeasureKind::Measured))
+                    .count();
+                self.measured.fetch_add(m as u64, Ordering::Relaxed);
+                self.inner.eval_batch(reqs)
+            }
+        }
+
+        let seed = 7u64;
+        let spec = VariantSpec::new(ControllerKind::InPromptSol, true, ModelTier::Mid);
+        let pipeline = IntegrityPipeline::default();
+        let sweep = |spec: &VariantSpec| {
+            let oracle = CountingOracle {
+                inner: OwnedAnalytic::new(),
+                measured: AtomicU64::new(0),
+                total: AtomicU64::new(0),
+            };
+            let env =
+                Env::new(&model, &problems, &sols, &compiled).with_oracle(Some(&oracle));
+            let t0 = Instant::now();
+            let runs: Vec<_> =
+                (0..problems.len()).map(|i| run_problem(&env, spec, i, seed)).collect();
+            let elapsed = t0.elapsed();
+            let log = ucutlass_repro::agent::RunLog {
+                variant: spec.label(),
+                tier_name: spec.tier.name().into(),
+                price_per_mtok: 1.25,
+                runs,
+            };
+            (
+                log,
+                oracle.measured.load(Ordering::Relaxed),
+                oracle.total.load(Ordering::Relaxed),
+                elapsed,
+            )
+        };
+        let (log_off, measured_off, total_off, t_off) = sweep(&spec);
+        let (log_on, measured_on, total_on, t_on) = sweep(&spec.with_prune());
+        let pruned: u64 = log_on
+            .runs
+            .iter()
+            .flat_map(|r| &r.attempts)
+            .filter(|a| matches!(a.outcome, AttemptOutcome::Pruned { .. }))
+            .count() as u64;
+        let g_off = pipeline.filtered_geomean(&log_off, seed);
+        let g_on = pipeline.filtered_geomean(&log_on, seed);
+        assert!(pruned > 0, "the suite sweep must exercise the prune gate");
+        assert_eq!(
+            measured_off - measured_on,
+            pruned,
+            "each pruned attempt must save exactly one measured trial"
+        );
+        assert!(total_on < total_off, "prune-on must issue strictly fewer evaluator calls");
+        assert_eq!(
+            g_off.to_bits(),
+            g_on.to_bits(),
+            "accepted-speedup geomean must be bitwise unchanged under pruning"
+        );
+        println!(
+            "{:40} {:>9} calls off {:>7} calls on -> {} pruned ({:.1}% of measured), \
+             geomean {:.4} bitwise-equal",
+            "analyze::prune suite sweep (59 problems)",
+            total_off,
+            total_on,
+            pruned,
+            pruned as f64 / measured_off.max(1) as f64 * 100.0,
+            g_on,
+        );
+
+        // machine-readable perf trajectory (BENCH_lint.json next to
+        // Cargo.toml; re-run `cargo bench` to refresh)
+        let mut j = Json::obj();
+        j.set("bench", "analyzer_prune_sweep")
+            .set("variant", spec.label())
+            .set("problems", problems.len() as u64)
+            .set("seed", seed)
+            .set("evaluator_calls_off", total_off)
+            .set("evaluator_calls_on", total_on)
+            .set("measured_trials_off", measured_off)
+            .set("measured_trials_on", measured_on)
+            .set("pruned_attempts", pruned)
+            .set("sweep_ms_off", t_off.as_secs_f64() * 1e3)
+            .set("sweep_ms_on", t_on.as_secs_f64() * 1e3)
+            .set("filtered_geomean", g_on)
+            .set("geomean_bitwise_equal", g_off.to_bits() == g_on.to_bits());
+        match std::fs::write("BENCH_lint.json", j.to_string()) {
+            Ok(()) => println!("(wrote BENCH_lint.json)"),
+            Err(e) => println!("(could not write BENCH_lint.json: {e})"),
+        }
+    }
 }

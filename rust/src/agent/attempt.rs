@@ -5,6 +5,7 @@
 
 use std::sync::Arc;
 
+use crate::analyze::RuleId;
 use crate::dsl::KernelPlan;
 use crate::perfmodel::CandidateConfig;
 use crate::util::json::Json;
@@ -112,6 +113,10 @@ pub enum AttemptOutcome {
     Incorrect,
     /// Passed correctness; measured at `time_ms` by NCU.
     Correct { time_ms: f64 },
+    /// The static analyzer proved the trial pointless before measurement
+    /// (ADR-009): SOL-infeasible (A101) or duplicate config (A301). The
+    /// candidate compiled but was never evaluated — no measurement exists.
+    Pruned { rule: RuleId },
 }
 
 impl AttemptOutcome {
@@ -129,17 +134,33 @@ impl AttemptOutcome {
             AttemptOutcome::RuntimeError => "runtime_error",
             AttemptOutcome::Incorrect => "incorrect",
             AttemptOutcome::Correct { .. } => "correct",
+            AttemptOutcome::Pruned { .. } => "pruned",
         }
     }
 
-    /// Inverse of `name()` + the serialized `time_ms` field.
-    pub fn parse(name: &str, time_ms: Option<f64>) -> Option<AttemptOutcome> {
+    /// The analyzer rule that pruned the attempt, if any.
+    pub fn prune_rule(&self) -> Option<RuleId> {
+        match self {
+            AttemptOutcome::Pruned { rule } => Some(*rule),
+            _ => None,
+        }
+    }
+
+    /// Inverse of `name()` + the serialized `time_ms` / `prune_rule`
+    /// fields (`prune_rule` is absent in pre-ADR-009 logs, which also
+    /// never contain `"pruned"` outcomes).
+    pub fn parse(
+        name: &str,
+        time_ms: Option<f64>,
+        prune_rule: Option<RuleId>,
+    ) -> Option<AttemptOutcome> {
         match name {
             "dsl_rejected" => Some(AttemptOutcome::DslRejected),
             "compile_error" => Some(AttemptOutcome::CompileError),
             "runtime_error" => Some(AttemptOutcome::RuntimeError),
             "incorrect" => Some(AttemptOutcome::Incorrect),
             "correct" => time_ms.map(|time_ms| AttemptOutcome::Correct { time_ms }),
+            "pruned" => prune_rule.map(|rule| AttemptOutcome::Pruned { rule }),
             _ => None,
         }
     }
@@ -244,6 +265,13 @@ impl AttemptRecord {
                     .as_ref()
                     .map(|p| Json::Str(p.config_hash.clone()))
                     .unwrap_or(Json::Null),
+            )
+            .set(
+                "prune_rule",
+                self.outcome
+                    .prune_rule()
+                    .map(|r| Json::Str(r.code().into()))
+                    .unwrap_or(Json::Null),
             );
         o
     }
@@ -258,7 +286,10 @@ impl AttemptRecord {
         let time_ms = field("time_ms")?.as_f64();
         let outcome_name =
             field("outcome")?.as_str().ok_or("attempt: outcome not a string")?;
-        let outcome = AttemptOutcome::parse(outcome_name, time_ms)
+        // Absent in pre-ADR-009 logs (which also never say "pruned").
+        let prune_rule =
+            j.get("prune_rule").and_then(|v| v.as_str()).and_then(RuleId::parse_code);
+        let outcome = AttemptOutcome::parse(outcome_name, time_ms, prune_rule)
             .ok_or_else(|| format!("attempt: bad outcome `{outcome_name}`"))?;
         let kind_name = field("kind")?.as_str().ok_or("attempt: kind not a string")?;
         let kind = SolutionKind::parse(kind_name)
@@ -336,6 +367,28 @@ mod tests {
     fn outcome_time() {
         assert_eq!(AttemptOutcome::Correct { time_ms: 2.0 }.time_ms(), Some(2.0));
         assert_eq!(AttemptOutcome::Incorrect.time_ms(), None);
+        // Pruned attempts were never measured: no time, ever.
+        assert_eq!(AttemptOutcome::Pruned { rule: RuleId::SolInfeasible }.time_ms(), None);
+    }
+
+    #[test]
+    fn pruned_record_roundtrips() {
+        let mut r = rec(
+            2,
+            AttemptOutcome::Pruned { rule: RuleId::DuplicateConfig },
+            SolutionKind::DslKernel,
+        );
+        r.tool_time_s = 1.0;
+        let j = r.to_json();
+        assert_eq!(j.get("outcome").unwrap().as_str(), Some("pruned"));
+        assert_eq!(j.get("prune_rule").unwrap().as_str(), Some("A301"));
+        assert!(matches!(j.get("time_ms").unwrap(), Json::Null));
+        let mut plans = crate::dsl::PlanCache::new();
+        let parsed =
+            AttemptRecord::from_json(&Json::parse(&j.to_string()).unwrap(), &mut plans).unwrap();
+        assert_eq!(parsed, r);
+        // "pruned" without a rule code is malformed
+        assert_eq!(AttemptOutcome::parse("pruned", None, None), None);
     }
 
     #[test]

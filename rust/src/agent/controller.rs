@@ -9,10 +9,11 @@
 //! model, SOL gap attribution and the integrity review all read the same
 //! resolved numbers codegen emitted.
 
+use crate::analyze::PruneGate;
 use crate::dsl;
 use crate::eval::{AnalyticEvaluator, DynEvaluator, EvalRequest, Oracle};
 use crate::kernelbench::Problem;
-use crate::perfmodel::{CandidateConfig, CompiledCostModel, PerfModel};
+use crate::perfmodel::{CandidateConfig, CompiledCostModel, ConfigBatch, PerfModel};
 use crate::sol::SolAnalysis;
 use crate::util::json::Json;
 use crate::util::rng::{MeasureSeq, Pcg32};
@@ -78,16 +79,37 @@ pub struct VariantSpec {
     /// rejected immediately and the agent corrects instead of inheriting
     /// the exploit.
     pub online_integrity: bool,
+    /// Static analyzer pruning (ADR-009): DSL candidates whose analytic
+    /// lower bound provably cannot beat the session best are recorded as
+    /// `Pruned` and never reach the evaluator. Deterministic and
+    /// stream-aligned: a pruned run's RNG state matches its unpruned twin
+    /// attempt-for-attempt, so accepted results are field-for-field
+    /// identical (pinned by `tests/lint.rs`).
+    pub prune: bool,
 }
 
 impl VariantSpec {
     pub fn new(controller: ControllerKind, dsl: bool, tier: ModelTier) -> Self {
-        VariantSpec { controller, dsl, tier, attempts: 40, guardrails: false, online_integrity: false }
+        VariantSpec {
+            controller,
+            dsl,
+            tier,
+            attempts: 40,
+            guardrails: false,
+            online_integrity: false,
+            prune: false,
+        }
     }
 
     /// Enable online integrity feedback (§7 future work, `ext1`).
     pub fn with_online_integrity(mut self) -> Self {
         self.online_integrity = true;
+        self
+    }
+
+    /// Enable static analyzer pruning (ADR-009).
+    pub fn with_prune(mut self) -> Self {
+        self.prune = true;
         self
     }
 
@@ -123,6 +145,9 @@ impl VariantSpec {
             ModelTier::Mid => 1,
             ModelTier::Max => 2,
         };
+        // `prune` is deliberately EXCLUDED: a pruned variant draws the
+        // same stream as its unpruned twin, which is what makes the
+        // accepted subsets field-for-field identical (ADR-009).
         (c << 8)
             | (t << 4)
             | ((self.dsl as u64) << 3)
@@ -137,7 +162,8 @@ impl VariantSpec {
             (c, false) => format!("{}", c.name()),
             (c, true) => format!("µCUTLASS + {}", c.name()),
         };
-        format!("{} [{}]", base, self.tier.name())
+        let prune = if self.prune { " +prune" } else { "" };
+        format!("{} [{}]{}", base, self.tier.name(), prune)
     }
 
     /// Serialize every behaviour-shaping field (the suite shard/merge
@@ -149,7 +175,8 @@ impl VariantSpec {
             .set("dsl", self.dsl)
             .set("attempts", self.attempts as u64)
             .set("guardrails", self.guardrails)
-            .set("online_integrity", self.online_integrity);
+            .set("online_integrity", self.online_integrity)
+            .set("prune", self.prune);
         o
     }
 
@@ -172,6 +199,8 @@ impl VariantSpec {
             online_integrity: field("online_integrity")?
                 .as_bool()
                 .ok_or("spec: bad online_integrity")?,
+            // absent in pre-ADR-009 logs: default off
+            prune: j.get("prune").and_then(|v| v.as_bool()).unwrap_or(false),
         })
     }
 }
@@ -244,6 +273,9 @@ pub struct AgentState {
     /// serialized `EvalRequest` replays the exact value out of process
     /// (ADR-003).
     pub measure: MeasureSeq,
+    /// Analyzer pruning state (ADR-009): seen config hashes + the SOL
+    /// margin. Only consulted when the variant's `prune` flag is on.
+    pub prune: PruneGate,
 }
 
 /// Gaming runtime: what the exploit's kernel actually costs. The
@@ -596,6 +628,58 @@ pub fn run_attempt(
                 measured.fused_epilogue = proposed.fused_epilogue;
                 measured.fusion_coverage = proposed.fusion_coverage;
                 measured.quality = proposed.quality;
+                // -- static analyzer pruning (ADR-009) ---------------------
+                if spec.prune {
+                    // Analytic lower bound straight from the compiled cost
+                    // model (ADR-006) — bitwise the noise-free base of what
+                    // the evaluator would measure, at zero evaluator calls.
+                    let mut batch = ConfigBatch::with_capacity(1);
+                    batch.push(&measured);
+                    let mut est = [0.0f64];
+                    env.compiled.problem(pidx).eval_into(&batch, &mut est);
+                    // Soundness gates beyond the margin (see analyze::prune
+                    // docs): pruning must leave the unpruned twin's StopRule,
+                    // move-selection, and integrity-review state unchanged.
+                    // `best_cfg` present rules out the "first correct attempt
+                    // seeds best_cfg" branch below; best ≥ 0.9×SOL rules out
+                    // a rule-best / session-best split from a filtered
+                    // sub-SOL gaming time; est×margin above the twin's
+                    // dtype-aware integrity ceiling guarantees (to the same
+                    // 6σ as the margin itself) that the twin's review never
+                    // takes the SolCeiling early return, whose skipped RNG
+                    // draw would desync every later label in the run.
+                    let sols = &env.sols[pidx];
+                    let ceiling = if compiled.plan.primary().reduced_precision() {
+                        0.9 * sols.t_sol_fp16_ms
+                    } else {
+                        0.9 * sols.t_sol_ms.max(sols.t_sol_fp16_ms)
+                    };
+                    let hash = &compiled.plan.config_hash;
+                    let rule = if state.best_cfg.is_some()
+                        && state.best_time_ms >= 0.9 * sols.t_sol_fp16_ms
+                        && est[0] * crate::analyze::PRUNE_MARGIN >= ceiling
+                    {
+                        state.prune.check(est[0], state.best_time_ms, hash)
+                    } else {
+                        None
+                    };
+                    state.prune.record(hash);
+                    if let Some(rule) = rule {
+                        // Consume exactly the draws the measured path would
+                        // have, keeping the RNG streams of the pruned and
+                        // unpruned twins bit-for-bit aligned.
+                        let _ = state.measure.next_stream();
+                        rec.dsl_plan = Some(compiled.plan.clone());
+                        rec.outcome = AttemptOutcome::Pruned { rule };
+                        if rng.chance(tier.minor_issue_rate) {
+                            rec.minor_issue = Some(*rng.choice(&MinorIssueType::ALL));
+                        }
+                        rec.config = Some(measured);
+                        rec.tool_time_s = 1.0; // static verdict: no trial
+                        state.consecutive_failures = 0;
+                        return rec;
+                    }
+                }
                 let t = ev.value(
                     &EvalRequest::measured(
                         pidx,

@@ -70,11 +70,17 @@ impl ProblemRun {
         self.attempts.iter().map(|a| a.tool_time_s).sum()
     }
 
-    /// Number of attempts that reached the toolchain (non-DslRejected).
+    /// Number of attempts that reached the toolchain (non-DslRejected and
+    /// non-Pruned — the two static short-circuits that save a trial).
     pub fn tool_actions(&self) -> usize {
         self.attempts
             .iter()
-            .filter(|a| !matches!(a.outcome, AttemptOutcome::DslRejected))
+            .filter(|a| {
+                !matches!(
+                    a.outcome,
+                    AttemptOutcome::DslRejected | AttemptOutcome::Pruned { .. }
+                )
+            })
             .count()
     }
 

@@ -77,6 +77,7 @@ impl<'a> FlatSession<'a> {
             consecutive_failures: 0,
             tokens: 0,
             measure,
+            prune: crate::analyze::PruneGate::new(),
         };
         FlatSession {
             env,

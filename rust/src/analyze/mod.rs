@@ -1,0 +1,377 @@
+//! Static analysis over lowered µCUTLASS programs (ADR-009).
+//!
+//! `dsl::validate` is accept/reject-only: the first violated constraint
+//! aborts compilation. This module is the other half of the paper's
+//! "explanatory compiler feedback" claim (§3, §4.4): a *valid* program can
+//! still be a wasted trial (duplicate config, SOL-infeasible candidate), a
+//! benchmark-gaming vehicle (dead stages, accumulator drops, constant
+//! outputs), or one step from a constraint cliff. The analyzer walks the
+//! parsed AST and the lowered [`ProgramIr`] together and emits structured
+//! [`Diagnostic`]s — stable rule ID, severity, source span, *why* text,
+//! and an optional machine-applicable [`Fix`] — instead of a single error.
+//!
+//! Rule namespaces (shared with [`crate::dsl::DslErrorKind::code`]):
+//!
+//! | codes       | family                                        |
+//! |-------------|-----------------------------------------------|
+//! | `E001–E005` | compiler rejections (lex/parse/lower/validate/bind) |
+//! | `A1xx`      | SOL-infeasibility / implausibility            |
+//! | `A2xx`      | static gaming detection (dataflow walk)       |
+//! | `A3xx`      | canonical-equivalence (duplicate-trial waste)  |
+//! | `C4xx`      | constraint-cliff warnings (one step from reject) |
+//!
+//! The hot-loop half (A101/A102/A301 need a *session context*: current
+//! best, seen hashes, stop policy) lives in [`prune::PruneGate`]; the
+//! purely static rules run through [`analyze_source`] and back the
+//! `repro lint` CLI.
+
+use crate::dsl::ir::lower;
+use crate::dsl::parser::parse;
+use crate::dsl::validate::validate;
+use crate::dsl::{Arch, DslError, Program, ProgramIr};
+use crate::util::json::Json;
+
+pub mod prune;
+pub mod rules;
+
+pub use prune::{PruneGate, PRUNE_MARGIN};
+
+/// Diagnostic severity. `Deny` marks programs whose *measurement* cannot be
+/// trusted (gaming vehicles); `Warn` marks wasted work; `Note` marks
+/// fragile-but-valid configurations.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    Deny,
+    Warn,
+    Note,
+}
+
+impl Severity {
+    pub fn name(&self) -> &'static str {
+        match self {
+            Severity::Deny => "deny",
+            Severity::Warn => "warn",
+            Severity::Note => "note",
+        }
+    }
+}
+
+/// A half-open byte range `[offset, offset + len)` into the source text.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    pub offset: usize,
+    pub len: usize,
+}
+
+impl Span {
+    pub fn new(offset: usize, len: usize) -> Span {
+        Span { offset, len }
+    }
+
+    pub fn end(&self) -> usize {
+        self.offset + self.len
+    }
+
+    /// The source text the span covers (empty if out of bounds).
+    pub fn slice<'a>(&self, src: &'a str) -> &'a str {
+        src.get(self.offset..self.end()).unwrap_or("")
+    }
+}
+
+/// A machine-applicable rewrite: replace `span` with `replacement`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Fix {
+    pub span: Span,
+    pub replacement: String,
+    /// Short imperative description, e.g. "remove the dead stage".
+    pub title: String,
+}
+
+impl Fix {
+    /// Apply the rewrite to `src` (pure; panics never — out-of-bounds
+    /// spans return the source unchanged).
+    pub fn apply(&self, src: &str) -> String {
+        if self.span.end() > src.len() {
+            return src.to_string();
+        }
+        let mut out = String::with_capacity(src.len() + self.replacement.len());
+        out.push_str(&src[..self.span.offset]);
+        out.push_str(&self.replacement);
+        out.push_str(&src[self.span.end()..]);
+        out
+    }
+}
+
+/// Stable analyzer rule identifiers. Codes are append-only: a published
+/// code never changes meaning or severity class (pinned by the golden and
+/// uniqueness tests in `tests/lint.rs`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RuleId {
+    /// A101 — the candidate's analytic lower bound cannot beat the current
+    /// best measurement (hot-loop rule; see [`prune::PruneGate`]).
+    SolInfeasible,
+    /// A102 — the session's best already sits inside the scheduler's
+    /// `StopRule::sol_band`: further trials cannot change the stop decision.
+    SolBandStop,
+    /// A103 — the epilogue forces a constant output: any measured speedup
+    /// is benchmark gaming, and a sub-SOL runtime is physically meaningless
+    /// for the declared computation.
+    SolImplausible,
+    /// A201 — a stage/op whose result is provably unobservable (dead
+    /// transpose, cancelling transpose pair, aux_store never loaded).
+    DeadStage,
+    /// A202 — an epilogue that multiplies the accumulator by zero, dropping
+    /// every FLOP the main loop computed.
+    AccumulatorDrop,
+    /// A203 — an identity epilogue op (scale(1), leaky_relu(alpha=1)):
+    /// wasted EVT slot, wasted trial variance.
+    IdentityChain,
+    /// A301 — the program lowers to an already-seen canonical config hash:
+    /// measuring it again is duplicate-trial waste (hot-loop rule).
+    DuplicateConfig,
+    /// C401 — SMEM use within one pipeline stage of the budget reject.
+    SmemCliff,
+    /// C402 — stage count exactly at the architecture maximum.
+    StagesAtMax,
+    /// C403 — operand alignment exactly at the TMA vector minimum.
+    AlignmentAtTmaMin,
+    /// C404 — a tile dimension exactly at the architecture maximum.
+    TileAtMax,
+}
+
+impl RuleId {
+    pub const ALL: [RuleId; 11] = [
+        RuleId::SolInfeasible,
+        RuleId::SolBandStop,
+        RuleId::SolImplausible,
+        RuleId::DeadStage,
+        RuleId::AccumulatorDrop,
+        RuleId::IdentityChain,
+        RuleId::DuplicateConfig,
+        RuleId::SmemCliff,
+        RuleId::StagesAtMax,
+        RuleId::AlignmentAtTmaMin,
+        RuleId::TileAtMax,
+    ];
+
+    pub fn code(&self) -> &'static str {
+        match self {
+            RuleId::SolInfeasible => "A101",
+            RuleId::SolBandStop => "A102",
+            RuleId::SolImplausible => "A103",
+            RuleId::DeadStage => "A201",
+            RuleId::AccumulatorDrop => "A202",
+            RuleId::IdentityChain => "A203",
+            RuleId::DuplicateConfig => "A301",
+            RuleId::SmemCliff => "C401",
+            RuleId::StagesAtMax => "C402",
+            RuleId::AlignmentAtTmaMin => "C403",
+            RuleId::TileAtMax => "C404",
+        }
+    }
+
+    pub fn parse_code(code: &str) -> Option<RuleId> {
+        RuleId::ALL.iter().copied().find(|r| r.code() == code)
+    }
+
+    /// One-line rule summary (the registry entry in ADR-009).
+    pub fn summary(&self) -> &'static str {
+        match self {
+            RuleId::SolInfeasible => "candidate cannot beat the current best measurement",
+            RuleId::SolBandStop => "best already inside the scheduler's SOL band",
+            RuleId::SolImplausible => "epilogue forces a constant output",
+            RuleId::DeadStage => "stage result is provably unobservable",
+            RuleId::AccumulatorDrop => "epilogue multiplies the accumulator by zero",
+            RuleId::IdentityChain => "identity epilogue op has no effect",
+            RuleId::DuplicateConfig => "lowers to an already-measured config hash",
+            RuleId::SmemCliff => "within one pipeline stage of the SMEM budget",
+            RuleId::StagesAtMax => "stage count at the architecture maximum",
+            RuleId::AlignmentAtTmaMin => "alignment at the TMA vector minimum",
+            RuleId::TileAtMax => "tile dimension at the architecture maximum",
+        }
+    }
+
+    /// The rule's fixed severity class.
+    pub fn severity(&self) -> Severity {
+        match self {
+            RuleId::SolImplausible | RuleId::AccumulatorDrop => Severity::Deny,
+            RuleId::SolInfeasible
+            | RuleId::SolBandStop
+            | RuleId::DeadStage
+            | RuleId::IdentityChain
+            | RuleId::DuplicateConfig => Severity::Warn,
+            RuleId::SmemCliff
+            | RuleId::StagesAtMax
+            | RuleId::AlignmentAtTmaMin
+            | RuleId::TileAtMax => Severity::Note,
+        }
+    }
+}
+
+/// One structured finding.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diagnostic {
+    pub rule: RuleId,
+    pub severity: Severity,
+    /// Byte span of the offending construct (None when the finding has no
+    /// single anchor, e.g. a whole-program property).
+    pub span: Option<Span>,
+    /// What is wrong.
+    pub message: String,
+    /// Why it matters — the explanatory half the paper calls out.
+    pub why: String,
+    pub fix: Option<Fix>,
+}
+
+impl Diagnostic {
+    pub fn new(rule: RuleId, message: impl Into<String>, why: impl Into<String>) -> Diagnostic {
+        Diagnostic {
+            rule,
+            severity: rule.severity(),
+            span: None,
+            message: message.into(),
+            why: why.into(),
+            fix: None,
+        }
+    }
+
+    pub fn with_span(mut self, span: Span) -> Diagnostic {
+        self.span = Some(span);
+        self
+    }
+
+    pub fn with_fix(mut self, fix: Fix) -> Diagnostic {
+        self.fix = Some(fix);
+        self
+    }
+
+    /// The `repro lint --json` wire shape (one schema with
+    /// [`DslError::to_json`]: code/severity/message + span/why/fix).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("code", self.rule.code())
+            .set("severity", self.severity.name())
+            .set("message", self.message.as_str())
+            .set("why", self.why.as_str());
+        match self.span {
+            Some(s) => {
+                let mut sp = Json::obj();
+                sp.set("offset", s.offset as f64).set("len", s.len as f64);
+                j.set("span", sp)
+            }
+            None => j.set("span", Json::Null),
+        };
+        match &self.fix {
+            Some(f) => {
+                let mut fj = Json::obj();
+                let mut sp = Json::obj();
+                sp.set("offset", f.span.offset as f64).set("len", f.span.len as f64);
+                fj.set("span", sp)
+                    .set("replacement", f.replacement.as_str())
+                    .set("title", f.title.as_str());
+                j.set("fix", fj)
+            }
+            None => j.set("fix", Json::Null),
+        };
+        j
+    }
+
+    /// Human-readable rendering, mirroring `DslError`'s style.
+    pub fn render(&self, src: &str) -> String {
+        let mut out = format!("{} [{}]", self.severity.name(), self.rule.code());
+        if let Some(s) = self.span {
+            out.push_str(&format!(" at offset {}", s.offset));
+            let text = s.slice(src);
+            if !text.is_empty() && text.len() <= 60 {
+                out.push_str(&format!(" `{text}`"));
+            }
+        }
+        out.push_str(&format!(": {}", self.message));
+        if !self.why.is_empty() {
+            out.push_str(&format!("\n  why: {}", self.why));
+        }
+        if let Some(f) = &self.fix {
+            out.push_str(&format!("\n  fix: {} -> `{}`", f.title, f.replacement));
+        }
+        out
+    }
+}
+
+/// Analyze a source program: parse → lower → validate → rule walk.
+///
+/// A compiler rejection (any stage) is returned as `Err` — it is already a
+/// structured, coded error ([`DslError::to_json`]); the analyzer's job
+/// starts where validate stops. On success the diagnostics are sorted by
+/// (span offset, code) so output is stable across rule-evaluation order.
+pub fn analyze_source(
+    src: &str,
+    arch_override: Option<Arch>,
+) -> Result<Vec<Diagnostic>, DslError> {
+    let ast = parse(src)?;
+    let ir = lower(&ast)?;
+    validate(&ir)?;
+    Ok(analyze_program(src, &ast, &ir, arch_override))
+}
+
+/// The rule walk over an already-compiled program (no validation retry —
+/// callers on the agent hot path hand in the IR they already have).
+pub fn analyze_program(
+    src: &str,
+    ast: &Program,
+    ir: &ProgramIr,
+    arch_override: Option<Arch>,
+) -> Vec<Diagnostic> {
+    let mut diags = rules::run_static_rules(src, ast, ir, arch_override);
+    diags.sort_by_key(|d| (d.span.map(|s| s.offset).unwrap_or(usize::MAX), d.rule.code()));
+    diags
+}
+
+/// Count diagnostics at `Deny` after optional warning escalation — the
+/// `repro lint` exit-code input.
+pub fn deny_count(diags: &[Diagnostic], deny_warnings: bool) -> usize {
+    diags
+        .iter()
+        .filter(|d| {
+            d.severity == Severity::Deny || (deny_warnings && d.severity == Severity::Warn)
+        })
+        .count()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn rule_codes_unique_and_frozen() {
+        let codes: Vec<&str> = RuleId::ALL.iter().map(|r| r.code()).collect();
+        for (i, c) in codes.iter().enumerate() {
+            assert!(!codes[i + 1..].contains(c), "duplicate rule code {c}");
+            assert_eq!(RuleId::parse_code(c), Some(RuleId::ALL[i]));
+        }
+        assert_eq!(RuleId::SolImplausible.code(), "A103");
+        assert_eq!(RuleId::DuplicateConfig.code(), "A301");
+        assert_eq!(RuleId::SmemCliff.code(), "C401");
+    }
+
+    #[test]
+    fn fix_apply_is_pure_and_bounded() {
+        let fix = Fix {
+            span: Span::new(4, 3),
+            replacement: "XY".into(),
+            title: "t".into(),
+        };
+        assert_eq!(fix.apply("abcdDEFgh"), "abcdXYgh");
+        let oob = Fix { span: Span::new(100, 5), replacement: "x".into(), title: "t".into() };
+        assert_eq!(oob.apply("short"), "short");
+    }
+
+    #[test]
+    fn deny_count_escalation() {
+        let d1 = Diagnostic::new(RuleId::AccumulatorDrop, "m", "w");
+        let d2 = Diagnostic::new(RuleId::IdentityChain, "m", "w");
+        let d3 = Diagnostic::new(RuleId::TileAtMax, "m", "w");
+        let all = vec![d1, d2, d3];
+        assert_eq!(deny_count(&all, false), 1);
+        assert_eq!(deny_count(&all, true), 2, "notes never escalate");
+    }
+}

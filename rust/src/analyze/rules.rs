@@ -1,0 +1,516 @@
+//! The static rule walk: gaming detection (A1xx/A2xx) and constraint-cliff
+//! warnings (C4xx) over the paired AST + lowered IR.
+//!
+//! The AST carries source offsets (spans, fix-its); the IR carries resolved
+//! facts (epilogue op values, tiles, stages, alignments). Lowering maps
+//! epilogue calls 1:1 in order, so `spec.epilogue[i]` is the source form of
+//! `cfg.epilogue[i]` — the walk zips them instead of re-parsing arguments.
+
+use crate::dsl::ast::{Program, Stage, TransposeSpec};
+use crate::dsl::ir::{Arch, ConfigIr, EpilogueOp, ProgramIr, StageIr};
+use crate::dsl::plan::{epilogue_smem_bytes, stage_smem_bytes};
+use crate::dsl::validate::constraint_table;
+use crate::dsl::KernelSpec;
+
+use super::{Diagnostic, Fix, RuleId, Span};
+
+/// All purely-static rules over one program.
+pub fn run_static_rules(
+    src: &str,
+    ast: &Program,
+    ir: &ProgramIr,
+    arch_override: Option<Arch>,
+) -> Vec<Diagnostic> {
+    let mut out = Vec::new();
+    let kernels = paired_kernels(ast, ir);
+    // Flattened (position, op) list across all kernel chains in program
+    // order — aux_store/aux_load dataflow may cross pipeline stages.
+    let all_ops: Vec<&EpilogueOp> =
+        kernels.iter().flat_map(|(_, cfg)| cfg.epilogue.iter()).collect();
+    let mut flat_pos = 0usize;
+    for (spec, cfg) in &kernels {
+        epilogue_rules(src, spec, cfg, flat_pos, &all_ops, &mut out);
+        cliff_rules(src, spec, cfg, arch_override, &mut out);
+        flat_pos += cfg.epilogue.len();
+    }
+    if let Program::Pipeline(stages) = ast {
+        transpose_rules(src, stages, &mut out);
+    }
+    out
+}
+
+/// AST kernel specs zipped with their lowered configs (stage-aligned:
+/// lowering preserves order and arity).
+fn paired_kernels<'a>(
+    ast: &'a Program,
+    ir: &'a ProgramIr,
+) -> Vec<(&'a KernelSpec, &'a ConfigIr)> {
+    match (ast, ir) {
+        (Program::Kernel(s), ProgramIr::Kernel(k)) => vec![(s, k)],
+        (Program::Pipeline(stages), ProgramIr::Pipeline(p)) => {
+            let specs = stages.iter().filter_map(|s| match s {
+                Stage::Kernel(k) => Some(k),
+                _ => None,
+            });
+            let cfgs = p.stages.iter().filter_map(|s| match s {
+                StageIr::Kernel(k) => Some(k),
+                _ => None,
+            });
+            specs.zip(cfgs).collect()
+        }
+        _ => vec![],
+    }
+}
+
+// ---------------------------------------------------------------------------
+// A1xx/A2xx: static gaming detection (dataflow walk over epilogue chains)
+// ---------------------------------------------------------------------------
+
+fn epilogue_rules(
+    src: &str,
+    spec: &KernelSpec,
+    cfg: &ConfigIr,
+    flat_base: usize,
+    all_ops: &[&EpilogueOp],
+    out: &mut Vec<Diagnostic>,
+) {
+    for (i, (call, op)) in spec.epilogue.iter().zip(&cfg.epilogue).enumerate() {
+        let span = call_span(src, call.offset);
+        let removal = epilogue_removal_fix(src, span, &format!("remove `{}`", call.name));
+        match op {
+            EpilogueOp::Scale { value } if *value == 0.0 => {
+                out.push(
+                    Diagnostic::new(
+                        RuleId::AccumulatorDrop,
+                        "scale(0) multiplies the accumulator by zero",
+                        "every FLOP the main loop computes is discarded; the kernel \
+                         degenerates to a constant write, so any measured speedup is \
+                         benchmark gaming, not optimization (§4.4)",
+                    )
+                    .with_span(span)
+                    .with_fix(removal),
+                );
+            }
+            EpilogueOp::Scale { value } if *value == 1.0 => {
+                out.push(
+                    Diagnostic::new(
+                        RuleId::IdentityChain,
+                        "scale(1) is the identity",
+                        "the op consumes an EVT fusion slot and trial variance \
+                         without changing the output",
+                    )
+                    .with_span(span)
+                    .with_fix(removal),
+                );
+            }
+            EpilogueOp::LeakyRelu { alpha } if *alpha == 1.0 => {
+                out.push(
+                    Diagnostic::new(
+                        RuleId::IdentityChain,
+                        "leaky_relu(alpha=1) is the identity",
+                        "with alpha = 1 the negative branch equals the positive one; \
+                         the op consumes an EVT fusion slot without changing the output",
+                    )
+                    .with_span(span)
+                    .with_fix(removal),
+                );
+            }
+            EpilogueOp::Clip { lo, hi } if lo == hi => {
+                out.push(
+                    Diagnostic::new(
+                        RuleId::SolImplausible,
+                        format!("clip({lo}, {hi}) forces a constant output"),
+                        "every element clamps to the same value regardless of the \
+                         computed product; a measurement of this kernel can undercut \
+                         the SOL bound only because the declared computation is no \
+                         longer performed (constant-output gaming, §4.4)",
+                    )
+                    .with_span(span)
+                    .with_fix(removal),
+                );
+            }
+            EpilogueOp::AuxStore { name } => {
+                let loaded_later = all_ops[flat_base + i + 1..].iter().any(
+                    |o| matches!(o, EpilogueOp::AuxLoad { name: n } if n == name),
+                );
+                if !loaded_later {
+                    out.push(
+                        Diagnostic::new(
+                            RuleId::DeadStage,
+                            format!("aux_store('{name}') is never aux_load-ed"),
+                            "the stored tensor is unobservable downstream: the store \
+                             is dead weight in the epilogue, and a chain built around \
+                             it can hide skipped computation",
+                        )
+                        .with_span(span)
+                        .with_fix(epilogue_removal_fix(
+                            src,
+                            span,
+                            &format!("remove the dead aux_store('{name}')"),
+                        )),
+                    );
+                }
+            }
+            _ => {}
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// A201: dead transform stages in pipelines
+// ---------------------------------------------------------------------------
+
+fn transpose_rules(src: &str, stages: &[Stage], out: &mut Vec<Diagnostic>) {
+    let mut skip_next = false;
+    for (i, st) in stages.iter().enumerate() {
+        let Stage::Transpose(tr) = st else { continue };
+        if skip_next {
+            skip_next = false;
+            continue;
+        }
+        // self-inverse: transpose(x, L, L) with no dtype change
+        if tr.from_layout == tr.to_layout && tr.from_dtype == tr.to_dtype {
+            let span = call_span(src, tr.offset);
+            out.push(
+                Diagnostic::new(
+                    RuleId::DeadStage,
+                    format!(
+                        "transpose({}, {}, {}) is a no-op",
+                        tr.target, tr.from_layout, tr.to_layout
+                    ),
+                    "source and destination layout (and dtype) are identical; the \
+                     stage moves bytes without observable effect — the shape of a \
+                     fake-transpose exploit (§6.3)",
+                )
+                .with_span(span)
+                .with_fix(stage_removal_fix(src, span, "remove the no-op transpose")),
+            );
+            continue;
+        }
+        // adjacent cancelling pair on the same target
+        if let Some(Stage::Transpose(next)) = stages.get(i + 1) {
+            if cancels(tr, next) {
+                let a = call_span(src, tr.offset);
+                let b = call_span(src, next.offset);
+                let span = Span::new(a.offset, b.end().saturating_sub(a.offset));
+                out.push(
+                    Diagnostic::new(
+                        RuleId::DeadStage,
+                        format!(
+                            "transpose pair on `{}` cancels: {}->{} then {}->{}",
+                            tr.target,
+                            tr.from_layout,
+                            tr.to_layout,
+                            next.from_layout,
+                            next.to_layout
+                        ),
+                        "the second transform exactly inverts the first; both stages \
+                         are dead weight that inflates apparent work",
+                    )
+                    .with_span(span)
+                    .with_fix(stage_removal_fix(src, span, "remove the cancelling pair")),
+                );
+                skip_next = true;
+            }
+        }
+    }
+}
+
+fn cancels(a: &TransposeSpec, b: &TransposeSpec) -> bool {
+    a.target == b.target
+        && b.from_layout == a.to_layout
+        && b.to_layout == a.from_layout
+        && b.from_dtype == a.to_dtype
+        && b.to_dtype == a.from_dtype
+}
+
+// ---------------------------------------------------------------------------
+// C4xx: constraint-cliff warnings — valid, but one step from a reject
+// ---------------------------------------------------------------------------
+
+fn cliff_rules(
+    src: &str,
+    spec: &KernelSpec,
+    cfg: &ConfigIr,
+    arch_override: Option<Arch>,
+    out: &mut Vec<Diagnostic>,
+) {
+    let Some(arch) = arch_override.or(cfg.arch) else { return };
+    let (Some(din), dout_opt) = (cfg.dtype_input, cfg.dtype_output) else { return };
+    let dout = dout_opt.unwrap_or(din);
+    let t = constraint_table(arch);
+
+    // C401: SMEM within one pipeline stage of the budget
+    if t.enforce_smem_budget {
+        if let (Some(stages), Some(tl)) = (cfg.stages, cfg.tile) {
+            let per_stage = stage_smem_bytes(tl, din);
+            let epi = epilogue_smem_bytes(cfg.scheduler.unwrap_or_default().epilogue, tl, dout);
+            let budget = t.smem_bytes - t.smem_reserved;
+            let need = stages * per_stage + epi;
+            if per_stage > 0 && need <= budget && need + per_stage > budget {
+                let mut d = Diagnostic::new(
+                    RuleId::SmemCliff,
+                    format!(
+                        "SMEM use {need} B is within one stage ({per_stage} B) of the \
+                         {budget} B budget"
+                    ),
+                    "one more stage — or any tile/dtype growth — crosses the SM90 \
+                     SMEM budget and turns this config into a hard reject (E004); \
+                     nearby mutations of this candidate will be wasted trials",
+                );
+                if let Some(call) = spec.config("with_stages") {
+                    let span = call_span(src, call.offset);
+                    d = d.with_span(span);
+                    if stages > 1 {
+                        d = d.with_fix(Fix {
+                            span,
+                            replacement: format!("with_stages({})", stages - 1),
+                            title: "step back from the SMEM cliff".into(),
+                        });
+                    }
+                }
+                out.push(d);
+            }
+        }
+    }
+
+    // C402: stage count exactly at the architecture maximum
+    if let Some(stages) = cfg.stages {
+        if stages == t.max_stages {
+            let mut d = Diagnostic::new(
+                RuleId::StagesAtMax,
+                format!("with_stages({stages}) is the {arch} maximum"),
+                format!(
+                    "any upward mutation rejects (stages are between 1 and {}); \
+                     deeper pipelining is not available on this architecture",
+                    t.max_stages
+                ),
+            );
+            if let Some(call) = spec.config("with_stages") {
+                let span = call_span(src, call.offset);
+                d = d.with_span(span).with_fix(Fix {
+                    span,
+                    replacement: format!("with_stages({})", t.max_stages - 1),
+                    title: "step inside the stage limit".into(),
+                });
+            }
+            out.push(d);
+        }
+    }
+
+    // C403: alignment exactly at the TMA vector minimum
+    if let Some(al) = cfg.alignment {
+        if t.tma_vector_bytes > 0 {
+            let ops = [("A", al.a, din), ("B", al.b, din), ("C", al.c, dout)];
+            let at_min: Vec<&str> = ops
+                .iter()
+                .filter(|(_, v, d)| v * d.size() == t.tma_vector_bytes)
+                .map(|(n, _, _)| *n)
+                .collect();
+            if !at_min.is_empty() {
+                let mut d = Diagnostic::new(
+                    RuleId::AlignmentAtTmaMin,
+                    format!(
+                        "operand alignment at the TMA minimum ({} bytes) for {}",
+                        t.tma_vector_bytes,
+                        at_min.join(", ")
+                    ),
+                    "halving any of these alignments violates the 16-byte TMA \
+                     vector rule (E004); alignment-reducing mutations of this \
+                     candidate are dead ends",
+                );
+                if let Some(call) = spec.config("with_alignment") {
+                    let span = call_span(src, call.offset);
+                    d = d.with_span(span);
+                    let doubled = [al.a * 2, al.b * 2, al.c * 2];
+                    if doubled.iter().all(|v| *v <= t.max_alignment_elems) {
+                        d = d.with_fix(Fix {
+                            span,
+                            replacement: format!(
+                                "with_alignment(A={}, B={}, C={})",
+                                doubled[0], doubled[1], doubled[2]
+                            ),
+                            title: "double the alignments away from the TMA minimum".into(),
+                        });
+                    }
+                }
+                out.push(d);
+            }
+        }
+    }
+
+    // C404: tile dimension exactly at the architecture maximum
+    if let Some(tl) = cfg.tile {
+        let (mm, mn, mk) = t.max_tile;
+        let at_max: Vec<&str> = [("m", tl.m, mm), ("n", tl.n, mn), ("k", tl.k, mk)]
+            .iter()
+            .filter(|(_, v, max)| v == max)
+            .map(|(n, _, _)| *n)
+            .collect();
+        if !at_max.is_empty() {
+            let spelling = if spec.config("with_threadblockshape").is_some() {
+                "with_threadblockshape"
+            } else {
+                "with_tile"
+            };
+            let mut d = Diagnostic::new(
+                RuleId::TileAtMax,
+                format!(
+                    "tile {}x{}x{} is at the {arch} maximum in {}",
+                    tl.m,
+                    tl.n,
+                    tl.k,
+                    at_max.join(", ")
+                ),
+                format!(
+                    "any growth along {} rejects as implausibly large (E004); \
+                     tile-growing mutations of this candidate are dead ends",
+                    at_max.join("/")
+                ),
+            );
+            if let Some(call) = spec.config(spelling) {
+                let span = call_span(src, call.offset);
+                let halved = (
+                    if tl.m == mm { tl.m / 2 } else { tl.m },
+                    if tl.n == mn { tl.n / 2 } else { tl.n },
+                    if tl.k == mk { tl.k / 2 } else { tl.k },
+                );
+                d = d.with_span(span).with_fix(Fix {
+                    span,
+                    replacement: format!(
+                        "{spelling}(m={}, n={}, k={})",
+                        halved.0, halved.1, halved.2
+                    ),
+                    title: "halve the at-max tile dimension(s)".into(),
+                });
+            }
+            out.push(d);
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Span helpers
+// ---------------------------------------------------------------------------
+
+/// Span of a call starting at the name ident at `offset`, through its
+/// matching close paren. Quoted strings are skipped so `custom('f(x)')`
+/// matches correctly. Falls back to a zero-length span when the source has
+/// no paren at the site (cannot happen for parser-produced offsets).
+fn call_span(src: &str, offset: usize) -> Span {
+    let bytes = src.as_bytes();
+    let mut i = offset;
+    while i < bytes.len() && bytes[i] != b'(' {
+        i += 1;
+    }
+    if i == bytes.len() {
+        return Span::new(offset, 0);
+    }
+    let mut depth = 0usize;
+    let mut in_str = false;
+    while i < bytes.len() {
+        match bytes[i] {
+            b'\'' => in_str = !in_str,
+            b'(' if !in_str => depth += 1,
+            b')' if !in_str => {
+                depth -= 1;
+                if depth == 0 {
+                    return Span::new(offset, i + 1 - offset);
+                }
+            }
+            _ => {}
+        }
+        i += 1;
+    }
+    Span::new(offset, src.len() - offset)
+}
+
+/// Removal fix for an epilogue call: extend the span backwards over the
+/// `>>` chain operator (and surrounding whitespace) so applying the fix
+/// leaves a well-formed chain.
+fn epilogue_removal_fix(src: &str, call: Span, title: &str) -> Fix {
+    let bytes = src.as_bytes();
+    let mut start = call.offset;
+    while start > 0 && bytes[start - 1].is_ascii_whitespace() {
+        start -= 1;
+    }
+    if start >= 2 && &src[start - 2..start] == ">>" {
+        start -= 2;
+        while start > 0 && bytes[start - 1].is_ascii_whitespace() {
+            start -= 1;
+        }
+    }
+    Fix {
+        span: Span::new(start, call.end() - start),
+        replacement: String::new(),
+        title: title.to_string(),
+    }
+}
+
+/// Removal fix for a pipeline stage: extend over the following comma if
+/// present, else the preceding one, so the remaining stage list stays
+/// comma-separated.
+fn stage_removal_fix(src: &str, stage: Span, title: &str) -> Fix {
+    let bytes = src.as_bytes();
+    let mut end = stage.end();
+    let mut fwd = end;
+    while fwd < bytes.len() && bytes[fwd].is_ascii_whitespace() {
+        fwd += 1;
+    }
+    let mut start = stage.offset;
+    if fwd < bytes.len() && bytes[fwd] == b',' {
+        end = fwd + 1;
+        while end < bytes.len() && bytes[end] == b' ' {
+            end += 1;
+        }
+    } else {
+        let mut back = start;
+        while back > 0 && bytes[back - 1].is_ascii_whitespace() {
+            back -= 1;
+        }
+        if back > 0 && bytes[back - 1] == b',' {
+            start = back - 1;
+        }
+    }
+    Fix {
+        span: Span::new(start, end - start),
+        replacement: String::new(),
+        title: title.to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn call_span_matches_parens_and_skips_strings() {
+        let src = "gemm() >> custom('f(x))', inputs={'y': 'z'}) >> relu()";
+        let s = call_span(src, 10); // at `custom`
+        assert_eq!(s.slice(src), "custom('f(x))', inputs={'y': 'z'})");
+        let r = call_span(src, 48); // at `relu`
+        assert_eq!(r.slice(src), "relu()");
+    }
+
+    #[test]
+    fn epilogue_removal_extends_over_chain_operator() {
+        let src = "gemm() >> bias() >> scale(1.0)";
+        let call = call_span(src, 20);
+        assert_eq!(call.slice(src), "scale(1.0)");
+        let fix = epilogue_removal_fix(src, call, "remove");
+        assert_eq!(fix.apply(src), "gemm() >> bias()");
+    }
+
+    #[test]
+    fn stage_removal_keeps_commas_balanced() {
+        let src = "pipeline(transpose(input, NCL, NCL), gemm())";
+        let stage = call_span(src, 9);
+        let fix = stage_removal_fix(src, stage, "remove");
+        assert_eq!(fix.apply(src), "pipeline(gemm())");
+        // last-stage form: eat the preceding comma instead
+        let src2 = "pipeline(gemm(), transpose(output, NLC, NLC))";
+        let stage2 = call_span(src2, 17);
+        let fix2 = stage_removal_fix(src2, stage2, "remove");
+        assert_eq!(fix2.apply(src2), "pipeline(gemm())");
+    }
+}

@@ -3,6 +3,7 @@
 //! why*, so the model can fix the specification before triggering an
 //! expensive compile/run/profile attempt. Every error carries a hint.
 
+use crate::util::json::Json;
 use std::fmt;
 
 /// Which compiler stage rejected the program.
@@ -21,6 +22,15 @@ pub enum DslErrorKind {
 }
 
 impl DslErrorKind {
+    /// Every kind, for exhaustive registry tests.
+    pub const ALL: [DslErrorKind; 5] = [
+        DslErrorKind::Lex,
+        DslErrorKind::Parse,
+        DslErrorKind::Lower,
+        DslErrorKind::Constraint,
+        DslErrorKind::Bind,
+    ];
+
     pub fn stage(&self) -> &'static str {
         match self {
             DslErrorKind::Lex => "lex",
@@ -28,6 +38,21 @@ impl DslErrorKind {
             DslErrorKind::Lower => "lower",
             DslErrorKind::Constraint => "validate",
             DslErrorKind::Bind => "bind",
+        }
+    }
+
+    /// Stable machine-readable code. Shares one namespace with the
+    /// analyzer's rule IDs (`analyze::RuleId`): `E0xx` = compiler
+    /// rejections, `A1xx/A2xx/A3xx/C4xx` = analyzer diagnostics. Codes are
+    /// append-only — a published code never changes meaning (pinned by the
+    /// code-uniqueness test in `tests/lint.rs`).
+    pub fn code(&self) -> &'static str {
+        match self {
+            DslErrorKind::Lex => "E001",
+            DslErrorKind::Parse => "E002",
+            DslErrorKind::Lower => "E003",
+            DslErrorKind::Constraint => "E004",
+            DslErrorKind::Bind => "E005",
         }
     }
 }
@@ -62,11 +87,28 @@ impl DslError {
     pub fn is_static(&self) -> bool {
         !matches!(self.kind, DslErrorKind::Bind)
     }
+
+    /// Machine-readable form, shaped like an analyzer diagnostic so
+    /// `repro lint --json` consumers see one schema for compiler errors
+    /// and lint findings alike.
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::obj();
+        j.set("code", self.kind.code())
+            .set("stage", self.kind.stage())
+            .set("severity", "deny")
+            .set("message", self.message.as_str())
+            .set("hint", self.hint.as_str());
+        match self.offset {
+            Some(off) => j.set("offset", off as f64),
+            None => j.set("offset", Json::Null),
+        };
+        j
+    }
 }
 
 impl fmt::Display for DslError {
     fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
-        write!(f, "µcutlass {} error", self.kind.stage())?;
+        write!(f, "µcutlass {} error [{}]", self.kind.stage(), self.kind.code())?;
         if let Some(off) = self.offset {
             write!(f, " at offset {off}")?;
         }
@@ -89,8 +131,29 @@ mod tests {
         let e = DslError::at(DslErrorKind::Constraint, 10, "bad tile", "use with_threadblockshape");
         let s = e.to_string();
         assert!(s.contains("validate"));
+        assert!(s.contains("[E004]"));
         assert!(s.contains("offset 10"));
         assert!(s.contains("hint: use with_threadblockshape"));
+    }
+
+    #[test]
+    fn codes_unique_and_stable() {
+        let codes: Vec<&str> = DslErrorKind::ALL.iter().map(|k| k.code()).collect();
+        for (i, c) in codes.iter().enumerate() {
+            assert!(c.starts_with('E') && c.len() == 4, "bad code shape {c}");
+            assert!(!codes[i + 1..].contains(c), "duplicate code {c}");
+        }
+        // Published codes are frozen: renumbering breaks downstream parsers.
+        assert_eq!(DslErrorKind::Constraint.code(), "E004");
+    }
+
+    #[test]
+    fn json_shape() {
+        let e = DslError::at(DslErrorKind::Parse, 3, "unexpected token", "check syntax");
+        let j = e.to_json();
+        assert_eq!(j.get("code").and_then(|v| v.as_str()), Some("E002"));
+        assert_eq!(j.get("severity").and_then(|v| v.as_str()), Some("deny"));
+        assert_eq!(j.get("offset").and_then(|v| v.as_u64()), Some(3));
     }
 
     #[test]

@@ -17,7 +17,7 @@
 //! excluded from reported speedups. When both LGD-gaming and PyTorch-only
 //! fire, PyTorch-only wins so the categories stay mutually exclusive.
 
-use crate::agent::{AttemptRecord, ProblemRun, SolutionKind};
+use crate::agent::{AttemptOutcome, AttemptRecord, ProblemRun, SolutionKind};
 use crate::perfmodel::ncu::is_library_kernel;
 use crate::util::rng::{stream, Pcg32};
 
@@ -98,6 +98,19 @@ impl IntegrityPipeline {
         t_sol_fp16_ms: f64,
         rng: &mut Pcg32,
     ) -> ReviewLabel {
+        // Pruned attempts (ADR-009) were never measured, so there is
+        // nothing to review — but their unpruned twin is a correct DSL
+        // attempt above the SOL ceiling (the prune gate guarantees the
+        // ceiling branch is not taken, to ~6σ), whose review consumes one
+        // minor-issues draw unless a recorded minor issue short-circuits
+        // it. Consume the same draw here so every later label in the run
+        // matches the unpruned twin bit-for-bit.
+        if matches!(a.outcome, AttemptOutcome::Pruned { .. }) {
+            if a.minor_issue.is_none() {
+                let _ = rng.chance(self.lgd_minor_fp_rate);
+            }
+            return ReviewLabel::NoIssues;
+        }
         let time = match a.outcome.time_ms() {
             Some(t) => t,
             None => return ReviewLabel::NoIssues, // not applicable

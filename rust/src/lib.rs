@@ -53,6 +53,13 @@
 //!   quarantine, SOL-aware admission ordering, a deterministic
 //!   fault-injection harness, and incremental merge whose output is
 //!   field-for-field identical to single-process `exec::eval_variants`.
+//! * [`analyze`] — the static analysis engine over lowered µCUTLASS
+//!   programs (ADR-009): a multi-rule lint pass emitting structured
+//!   diagnostics (stable `A1xx/A2xx/A3xx/C4xx` codes, severity, span,
+//!   *why* text, machine-applicable fix-its) behind `repro lint`, plus
+//!   the hot-loop `PruneGate` that skips SOL-infeasible and duplicate
+//!   candidates before they reach the evaluator — deterministically,
+//!   recorded in RunLogs so ADR-004 replay agrees bit-for-bit.
 //! * [`integrity`] — SOL-ceiling, LLM-game-detector and PyTorch-only
 //!   detectors with the full label taxonomy (paper §4.4, §6.3).
 //! * [`metrics`] — Fast-p / Attempt-Fast-p curves, signed area, retention.
@@ -65,6 +72,7 @@
 
 pub mod util;
 pub mod dsl;
+pub mod analyze;
 pub mod sol;
 pub mod kernelbench;
 pub mod perfmodel;

@@ -5,7 +5,8 @@
 //! repro sol <problem-id>                                     SOL report (Appendix A.2)
 //! repro dsl compile <file|->  [--dims MxNxK]                 compile µCUTLASS source
 //! repro dsl coverage                                         Table 1 coverage matrix
-//! repro run --tier T [--dsl] [--sol orch|prompt] [--problems IDs] [--seed N]
+//! repro lint <file|-> [--json] [--arch A] [--deny-warnings]  static analysis (ADR-009)
+//! repro run --tier T [--dsl] [--sol orch|prompt] [--prune] [--problems IDs] [--seed N]
 //! repro validate [--artifacts DIR] [--problem NAME] [--seed N]
 //! repro schedule --tier T [--eps PCT] [--window W] [--seed N]
 //! repro sweep [--tier T] [--trace PATH [--live]] [--jobs N] [--out FILE]
@@ -45,7 +46,8 @@ use ucutlass_repro::sol;
 use ucutlass_repro::store::{
     self, cache_session, CacheSessionMode, EvalStore, StoreMonitor,
 };
-use ucutlass_repro::{dsl, runtime};
+use ucutlass_repro::util::json::Json;
+use ucutlass_repro::{analyze, dsl, runtime};
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -166,6 +168,7 @@ fn run(args: &[String]) -> Result<(), String> {
         Some("exp") => cmd_exp(&pos, &opts, seed, jobs, None),
         Some("sol") => cmd_sol(&pos),
         Some("dsl") => cmd_dsl(&pos, &opts),
+        Some("lint") => cmd_lint(&pos, &opts),
         Some("run") => cmd_run(&pos, &opts, seed, jobs, None),
         Some("validate") => cmd_validate(&opts, seed),
         Some("schedule") => cmd_schedule(&opts, seed, jobs, None),
@@ -390,7 +393,8 @@ repro — µCUTLASS + SOL-guidance reproduction (see README.md)
   repro sol <problem-id>               e.g. repro sol L1-1
   repro dsl compile <file|->           [--dims MxNxK]
   repro dsl coverage
-  repro run --tier <mini|mid|max> [--dsl] [--sol <orch|prompt>]
+  repro lint <file|->                  [--json] [--arch A] [--deny-warnings]
+  repro run --tier <mini|mid|max> [--dsl] [--sol <orch|prompt>] [--prune]
             [--problems L1-1,L2-76] [--seed N] [--jobs N]
   repro validate [--artifacts artifacts] [--problem NAME] [--seed N]
   repro schedule --tier <mini|mid|max> [--eps 100] [--window 8] [--seed N] [--jobs N]
@@ -501,6 +505,75 @@ fn cmd_sol(pos: &[String]) -> Result<(), String> {
     Ok(())
 }
 
+/// `repro lint <file|-> [--json] [--arch A] [--deny-warnings]` (ADR-009).
+///
+/// Exit codes: 0 = clean (or warnings/notes only), 1–100 = number of Deny
+/// diagnostics (clamped; `--deny-warnings` escalates Warn to Deny, Notes
+/// never escalate), 101 = the program does not compile at all.
+fn cmd_lint(pos: &[String], opts: &HashMap<String, String>) -> Result<(), String> {
+    let src = match pos.get(1).map(String::as_str) {
+        Some("-") | None => {
+            let mut s = String::new();
+            std::io::stdin().read_to_string(&mut s).map_err(|e| e.to_string())?;
+            s
+        }
+        Some(path) => std::fs::read_to_string(path).map_err(|e| e.to_string())?,
+    };
+    let arch = match opts.get("arch") {
+        None => None,
+        Some(a) => Some(
+            dsl::Arch::parse(a).ok_or_else(|| format!("--arch: unknown architecture `{a}`"))?,
+        ),
+    };
+    let json = opts.contains_key("json");
+    let deny_warnings = opts.contains_key("deny-warnings");
+    match analyze::analyze_source(&src, arch) {
+        Err(e) => {
+            // Compiler rejection: one coded error, same JSON schema as the
+            // analyzer's diagnostics (E-codes and A/C-codes share a
+            // namespace), distinct exit code so CI can tell "does not
+            // compile" from "lints dirty".
+            if json {
+                let mut o = Json::obj();
+                o.set("ok", false)
+                    .set("deny_count", 1u64)
+                    .set("diagnostics", Json::Arr(vec![e.to_json()]));
+                println!("{}", o.to_pretty());
+            } else {
+                eprintln!("{e}");
+            }
+            std::process::exit(101);
+        }
+        Ok(diags) => {
+            let denies = analyze::deny_count(&diags, deny_warnings);
+            if json {
+                let mut o = Json::obj();
+                o.set("ok", denies == 0)
+                    .set("deny_count", denies as u64)
+                    .set(
+                        "diagnostics",
+                        Json::Arr(diags.iter().map(|d| d.to_json()).collect()),
+                    );
+                println!("{}", o.to_pretty());
+            } else {
+                for d in &diags {
+                    println!("{}", d.render(&src));
+                }
+                println!(
+                    "{} diagnostic(s), {} deny{}",
+                    diags.len(),
+                    denies,
+                    if deny_warnings { " (warnings denied)" } else { "" }
+                );
+            }
+            if denies > 0 {
+                std::process::exit(denies.min(100) as i32);
+            }
+            Ok(())
+        }
+    }
+}
+
 fn cmd_dsl(pos: &[String], opts: &HashMap<String, String>) -> Result<(), String> {
     match pos.get(1).map(String::as_str) {
         Some("compile") => {
@@ -574,7 +647,9 @@ fn spec_from_opts(opts: &HashMap<String, String>) -> Result<VariantSpec, String>
         None => ControllerKind::Mi,
         Some(other) => return Err(format!("unknown --sol `{other}` (orch|prompt)")),
     };
-    Ok(VariantSpec::new(controller, dsl_on, tier))
+    let spec = VariantSpec::new(controller, dsl_on, tier);
+    // static-analyzer pruning (ADR-009): skip provably non-improving trials
+    Ok(if opts.contains_key("prune") { spec.with_prune() } else { spec })
 }
 
 /// The per-problem summary table `repro run` and `repro merge` share.

@@ -237,6 +237,7 @@ impl<'a> MantisSession<'a> {
             consecutive_failures: 0,
             tokens: 0,
             measure,
+            prune: crate::analyze::PruneGate::new(),
         };
         MantisSession {
             env,

@@ -1,0 +1,432 @@
+//! ADR-009 acceptance tests: golden diagnostics over the adversarial
+//! corpus (stable rule IDs, spans, machine-applicable fixes), cross-
+//! namespace code uniqueness, the prune twin-run property (pruned configs
+//! are never evaluated, yet the run's best trajectory, integrity labels
+//! and filtered speedups are bitwise identical to the unpruned twin), and
+//! fuzz-ish hostile inputs that must never panic.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use ucutlass_repro::agent::controller::{ControllerKind, Env, VariantSpec};
+use ucutlass_repro::agent::{run_problem, AttemptOutcome, ModelTier};
+use ucutlass_repro::analyze::{analyze_source, deny_count, Diagnostic, RuleId, Severity};
+use ucutlass_repro::dsl::DslErrorKind;
+use ucutlass_repro::eval::{
+    EvalRequest, EvalResponse, Evaluator, MeasureKind, OwnedAnalytic,
+};
+use ucutlass_repro::integrity::{IntegrityPipeline, ReviewLabel};
+use ucutlass_repro::kernelbench::suite;
+use ucutlass_repro::perfmodel::{CompiledCostModel, PerfModel};
+use ucutlass_repro::sol::{analyze as sol_analyze, SolAnalysis, H100_SXM};
+
+fn corpus(name: &str) -> String {
+    let path = format!("../examples/lint/{name}");
+    std::fs::read_to_string(&path).unwrap_or_else(|e| panic!("read {path}: {e}"))
+}
+
+fn diags(name: &str) -> (String, Vec<Diagnostic>) {
+    let src = corpus(name);
+    let diags = analyze_source(&src, None)
+        .unwrap_or_else(|e| panic!("{name} must compile: {e}"));
+    (src, diags)
+}
+
+// -- golden diagnostics over the corpus --------------------------------------
+
+#[test]
+fn golden_clean_program_is_quiet() {
+    let (_, d) = diags("clean.dsl");
+    assert!(d.is_empty(), "clean.dsl must produce no diagnostics: {d:?}");
+}
+
+#[test]
+fn golden_accumulator_drop() {
+    let (src, d) = diags("accumulator_drop.dsl");
+    assert_eq!(d.len(), 1, "{d:?}");
+    assert_eq!(d[0].rule.code(), "A202");
+    assert_eq!(d[0].severity, Severity::Deny);
+    assert_eq!(d[0].span.expect("span").slice(&src), "scale(0.0)");
+    assert_eq!(deny_count(&d, false), 1);
+    // the fix removes the op (and its `>>`) and the result is clean
+    let fixed = d[0].fix.as_ref().expect("fix").apply(&src);
+    assert!(!fixed.contains("scale"));
+    assert!(analyze_source(&fixed, None).unwrap().is_empty(), "{fixed}");
+}
+
+#[test]
+fn golden_constant_output_is_denied() {
+    let (src, d) = diags("near_sol_implausible.dsl");
+    assert_eq!(d.len(), 1, "{d:?}");
+    assert_eq!(d[0].rule.code(), "A103");
+    assert_eq!(d[0].severity, Severity::Deny);
+    assert_eq!(d[0].span.expect("span").slice(&src), "clip(5.0, 5.0)");
+    assert_eq!(deny_count(&d, false), 1);
+}
+
+#[test]
+fn golden_dead_epilogue_store() {
+    let (src, d) = diags("dead_epilogue.dsl");
+    assert_eq!(d.len(), 1, "{d:?}");
+    assert_eq!(d[0].rule.code(), "A201");
+    assert_eq!(d[0].severity, Severity::Warn);
+    assert_eq!(d[0].span.expect("span").slice(&src), "aux_store(t0)");
+    // warnings deny only under escalation
+    assert_eq!(deny_count(&d, false), 0);
+    assert_eq!(deny_count(&d, true), 1);
+    let fixed = d[0].fix.as_ref().expect("fix").apply(&src);
+    assert!(!fixed.contains("aux_store") && fixed.contains("relu"));
+    assert!(analyze_source(&fixed, None).unwrap().is_empty(), "{fixed}");
+}
+
+#[test]
+fn golden_identity_chain_fixes_to_fixpoint() {
+    let (src, d) = diags("identity_chain.dsl");
+    assert_eq!(d.len(), 2, "{d:?}");
+    // sorted by span offset: scale(1.0) precedes leaky_relu(alpha=1.0)
+    assert_eq!(d[0].rule.code(), "A203");
+    assert_eq!(d[1].rule.code(), "A203");
+    assert_eq!(d[0].span.expect("span").slice(&src), "scale(1.0)");
+    assert_eq!(d[1].span.expect("span").slice(&src), "leaky_relu(alpha=1.0)");
+    // applying the first fix and re-analyzing converges to a clean program
+    let mut cur = src;
+    for _ in 0..3 {
+        let ds = analyze_source(&cur, None).unwrap();
+        match ds.first() {
+            None => break,
+            Some(first) => cur = first.fix.as_ref().expect("fix").apply(&cur),
+        }
+    }
+    assert!(analyze_source(&cur, None).unwrap().is_empty(), "{cur}");
+}
+
+#[test]
+fn golden_constraint_cliff_notes() {
+    let (src, d) = diags("constraint_cliff.dsl");
+    let codes: Vec<&str> = d.iter().map(|x| x.rule.code()).collect();
+    assert_eq!(codes, ["C402", "C403"], "{d:?}");
+    assert!(d.iter().all(|x| x.severity == Severity::Note));
+    // notes never reach deny, even under --deny-warnings
+    assert_eq!(deny_count(&d, true), 0);
+    // fix-its step away from the cliff
+    assert_eq!(d[0].fix.as_ref().expect("fix").replacement, "with_stages(11)");
+    assert_eq!(
+        d[1].fix.as_ref().expect("fix").replacement,
+        "with_alignment(A=16, B=16, C=16)"
+    );
+    let fixed = d[0].fix.as_ref().unwrap().apply(&src);
+    let codes: Vec<&str> = analyze_source(&fixed, None)
+        .unwrap()
+        .iter()
+        .map(|x| x.rule.code())
+        .collect();
+    assert_eq!(codes, ["C403"], "stage fix clears C402 only");
+}
+
+#[test]
+fn corpus_diagnostics_are_stable_json() {
+    // every corpus diagnostic serializes with the shared code/severity/
+    // message/why/span/fix schema
+    for name in [
+        "accumulator_drop.dsl",
+        "near_sol_implausible.dsl",
+        "dead_epilogue.dsl",
+        "identity_chain.dsl",
+        "constraint_cliff.dsl",
+    ] {
+        let (_, d) = diags(name);
+        assert!(!d.is_empty(), "{name} must diagnose");
+        for x in &d {
+            let j = x.to_json();
+            assert_eq!(j.get("code").and_then(|v| v.as_str()), Some(x.rule.code()));
+            assert_eq!(
+                j.get("severity").and_then(|v| v.as_str()),
+                Some(x.severity.name())
+            );
+            assert!(j.get("why").and_then(|v| v.as_str()).is_some_and(|w| !w.is_empty()));
+            assert!(j.get("span").is_some() && j.get("fix").is_some());
+        }
+    }
+}
+
+// -- code registry: one namespace across compiler errors and analyzer rules --
+
+#[test]
+fn error_and_rule_codes_share_one_namespace() {
+    let mut seen = std::collections::HashSet::new();
+    for k in DslErrorKind::ALL {
+        assert!(seen.insert(k.code()), "duplicate code {}", k.code());
+    }
+    for r in RuleId::ALL {
+        assert!(seen.insert(r.code()), "duplicate code {}", r.code());
+        assert_eq!(RuleId::parse_code(r.code()), Some(r));
+        assert!(!r.summary().is_empty());
+    }
+    assert_eq!(seen.len(), DslErrorKind::ALL.len() + RuleId::ALL.len());
+}
+
+// -- prune twin-run property (tentpole acceptance) ---------------------------
+
+/// Counts evaluator traffic by request kind while answering analytically —
+/// what "pruned configs are never evaluated" is measured against.
+struct CountingOracle {
+    inner: OwnedAnalytic,
+    measured: AtomicU64,
+    total: AtomicU64,
+}
+
+impl CountingOracle {
+    fn new() -> CountingOracle {
+        CountingOracle {
+            inner: OwnedAnalytic::new(),
+            measured: AtomicU64::new(0),
+            total: AtomicU64::new(0),
+        }
+    }
+
+    fn measured(&self) -> u64 {
+        self.measured.load(Ordering::Relaxed)
+    }
+
+    fn total(&self) -> u64 {
+        self.total.load(Ordering::Relaxed)
+    }
+}
+
+impl Evaluator for CountingOracle {
+    fn eval_batch(&self, reqs: &[EvalRequest]) -> Vec<EvalResponse> {
+        self.total.fetch_add(reqs.len() as u64, Ordering::Relaxed);
+        let m = reqs
+            .iter()
+            .filter(|r| matches!(r.kind, MeasureKind::Measured))
+            .count();
+        self.measured.fetch_add(m as u64, Ordering::Relaxed);
+        self.inner.eval_batch(reqs)
+    }
+}
+
+#[test]
+fn prune_twins_agree_bitwise_and_save_trials() {
+    let problems = suite();
+    let sols: Vec<SolAnalysis> = problems.iter().map(|p| sol_analyze(p, &H100_SXM)).collect();
+    let model = PerfModel::new(H100_SXM.clone());
+    let compiled = CompiledCostModel::compile(&model, &problems);
+    let pipe = IntegrityPipeline::default();
+    let seed = 7u64;
+
+    let mut total_pruned = 0usize;
+    for tier in [ModelTier::Mini, ModelTier::Max] {
+        let spec = VariantSpec::new(ControllerKind::InPromptSol, true, tier);
+        let spec_prune = spec.with_prune();
+        for pidx in 0..problems.len() {
+            let off_oracle = CountingOracle::new();
+            let env =
+                Env::new(&model, &problems, &sols, &compiled).with_oracle(Some(&off_oracle));
+            let off = run_problem(&env, &spec, pidx, seed);
+
+            let on_oracle = CountingOracle::new();
+            let env =
+                Env::new(&model, &problems, &sols, &compiled).with_oracle(Some(&on_oracle));
+            let on = run_problem(&env, &spec_prune, pidx, seed);
+
+            assert_eq!(off.attempts.len(), on.attempts.len());
+            let mut pruned_here = 0usize;
+            for (a_off, a_on) in off.attempts.iter().zip(&on.attempts) {
+                if let AttemptOutcome::Pruned { .. } = a_on.outcome {
+                    pruned_here += 1;
+                    // the twin measured the same config — and it did not win
+                    assert!(
+                        matches!(a_off.outcome, AttemptOutcome::Correct { .. }),
+                        "pruned twin must be a measured Correct attempt"
+                    );
+                    assert_eq!(a_off.dsl_source, a_on.dsl_source);
+                    assert_eq!(a_off.config, a_on.config);
+                    assert_eq!(a_off.dsl_plan, a_on.dsl_plan);
+                    assert_eq!(a_off.minor_issue, a_on.minor_issue, "rng draw alignment");
+                    assert_eq!(a_on.outcome.time_ms(), None);
+                } else {
+                    // everything the pruner let through is field-for-field
+                    // identical — pruning perturbs nothing downstream
+                    assert_eq!(a_off, a_on);
+                }
+            }
+            total_pruned += pruned_here;
+
+            // best-so-far trajectory is identical at every step: pruned
+            // attempts were provably non-improving
+            for n in 0..=off.attempts.len() {
+                assert_eq!(off.best_time_after(n), on.best_time_after(n), "n={n}");
+            }
+
+            // integrity review: labels at surviving indices are bitwise
+            // equal (the pruned branch consumes the twin's RNG draws), and
+            // pruned attempts label NoIssues
+            let labels_off = pipe.review_run(&off, seed);
+            let labels_on = pipe.review_run(&on, seed);
+            for (i, (lo, ln)) in labels_off.iter().zip(&labels_on).enumerate() {
+                if matches!(on.attempts[i].outcome, AttemptOutcome::Pruned { .. }) {
+                    assert_eq!(*ln, ReviewLabel::NoIssues);
+                } else {
+                    assert_eq!(lo, ln, "label desync at attempt {i}");
+                }
+            }
+
+            // the headline aggregation is bitwise unchanged
+            assert_eq!(
+                pipe.filtered_speedup(&off, seed).map(f64::to_bits),
+                pipe.filtered_speedup(&on, seed).map(f64::to_bits),
+                "filtered speedup must be bitwise identical (pidx={pidx})"
+            );
+
+            // pruned configs never reached the evaluator
+            assert_eq!(
+                off_oracle.measured() - on_oracle.measured(),
+                pruned_here as u64,
+                "each pruned attempt saves exactly one measured trial"
+            );
+            if pruned_here > 0 {
+                assert!(on_oracle.total() < off_oracle.total());
+            }
+        }
+    }
+    assert!(total_pruned > 0, "the suite must exercise the prune gate");
+}
+
+// -- hostile inputs must never panic -----------------------------------------
+
+#[test]
+fn hostile_inputs_never_panic() {
+    let hostile = [
+        "",
+        " ",
+        "(",
+        ")))",
+        "gemm(",
+        "gemm() >>",
+        ">> relu()",
+        "pipeline(",
+        "pipeline()",
+        "pipeline(gemm(),)",
+        "gemm() >> custom('unterminated",
+        "gemm() >> custom('f(x))', inputs={'y':)",
+        "gemm().with_stages(999999999999999999999999)",
+        "gemm().with_threadblockshape(m=-1, n=0, k=0)",
+        "gemm().with_dtype(input=fp999)",
+        "gemm() # comment only\n",
+        "gemm()\u{0}\u{1}\u{7f}",
+        "gemm() >> scale(\u{3c0})",
+        "transpose(input, NCL, NLC)",
+        "gemm().with_arch(sm_90a).with_arch(sm_90a)",
+    ];
+    for src in hostile {
+        // Err is fine; panicking is not
+        let _ = analyze_source(src, None);
+    }
+    // sliding truncations of every corpus file
+    for name in [
+        "clean.dsl",
+        "accumulator_drop.dsl",
+        "near_sol_implausible.dsl",
+        "dead_epilogue.dsl",
+        "identity_chain.dsl",
+        "constraint_cliff.dsl",
+    ] {
+        let src = corpus(name);
+        for i in 0..=src.len() {
+            if src.is_char_boundary(i) {
+                let _ = analyze_source(&src[..i], None);
+            }
+        }
+    }
+}
+
+// -- compile errors carry stable E-codes through the lint surface ------------
+
+#[test]
+fn compile_errors_surface_stable_codes() {
+    let err = analyze_source("gemm() >> nonsense()", None).unwrap_err();
+    let j = err.to_json();
+    let code = j.get("code").and_then(|v| v.as_str()).expect("code");
+    assert!(code.starts_with('E'), "compiler errors use the E-namespace: {code}");
+    assert!(DslErrorKind::ALL.iter().any(|k| k.code() == code));
+}
+
+// -- the repro lint CLI: exit codes over the corpus --------------------------
+
+mod cli {
+    use std::process::Command;
+
+    fn lint(args: &[&str]) -> std::process::Output {
+        Command::new(env!("CARGO_BIN_EXE_repro"))
+            .arg("lint")
+            .args(args)
+            .output()
+            .expect("spawn repro lint")
+    }
+
+    #[test]
+    fn exit_codes_match_deny_counts() {
+        // clean + notes-only: 0; single-deny corpus: 1; warn escalation: 1;
+        // compile error: 101
+        assert_eq!(lint(&["../examples/lint/clean.dsl"]).status.code(), Some(0));
+        assert_eq!(
+            lint(&["../examples/lint/constraint_cliff.dsl", "--deny-warnings"])
+                .status
+                .code(),
+            Some(0)
+        );
+        assert_eq!(
+            lint(&["../examples/lint/accumulator_drop.dsl"]).status.code(),
+            Some(1)
+        );
+        assert_eq!(
+            lint(&["../examples/lint/near_sol_implausible.dsl", "--json"])
+                .status
+                .code(),
+            Some(1)
+        );
+        assert_eq!(
+            lint(&["../examples/lint/dead_epilogue.dsl"]).status.code(),
+            Some(0),
+            "warnings alone do not fail the lint"
+        );
+        assert_eq!(
+            lint(&["../examples/lint/dead_epilogue.dsl", "--deny-warnings"])
+                .status
+                .code(),
+            Some(1)
+        );
+    }
+
+    #[test]
+    fn json_mode_reports_codes() {
+        let out = lint(&["../examples/lint/accumulator_drop.dsl", "--json"]);
+        let text = String::from_utf8_lossy(&out.stdout);
+        assert!(text.contains("\"A202\""), "{text}");
+        assert!(text.contains("\"deny_count\""), "{text}");
+    }
+
+    #[test]
+    fn compile_error_exits_101() {
+        let out = lint(&["../examples/lint/missing_file.dsl"]);
+        assert_ne!(out.status.code(), Some(0));
+        // a syntactically broken program (via stdin) exits 101 with an E-code
+        use std::io::Write;
+        let mut child = Command::new(env!("CARGO_BIN_EXE_repro"))
+            .args(["lint", "-", "--json"])
+            .stdin(std::process::Stdio::piped())
+            .stdout(std::process::Stdio::piped())
+            .stderr(std::process::Stdio::piped())
+            .spawn()
+            .expect("spawn repro lint -");
+        child
+            .stdin
+            .take()
+            .expect("stdin")
+            .write_all(b"gemm( >> relu()")
+            .expect("write stdin");
+        let out = child.wait_with_output().expect("wait");
+        assert_eq!(out.status.code(), Some(101));
+        let text = String::from_utf8_lossy(&out.stdout);
+        assert!(text.contains("\"code\""), "{text}");
+    }
+}
