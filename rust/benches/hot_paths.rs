@@ -678,4 +678,62 @@ fn main() {
             Err(e) => println!("(could not write BENCH_lint.json: {e})"),
         }
     }
+
+    // ---- run-journal WAL (ADR-010) --------------------------------------
+    // The durability tax a journaled run pays per landed shard: one framed
+    // append with write + flush + sync_data, against the same append with
+    // no journal at all (free). Plus the recovery side: scanning and
+    // checksum-verifying the whole journal at resume.
+    {
+        use ucutlass_repro::journal::{scan_journal, JournalWriter};
+        use ucutlass_repro::util::json::Json;
+
+        let path = std::env::temp_dir()
+            .join(format!("ucutlass_bench_journal_{}.journal", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        // a shard-record-shaped payload: ~2 KB of JSON, the realistic
+        // per-landed-shard frame a fleet coordinator writes
+        let payload = {
+            let mut o = Json::obj();
+            o.set("kind", "shard").set("token", 0u64).set("index", 7u64).set(
+                "shard",
+                Json::Str("x".repeat(2000)),
+            );
+            o.to_string()
+        };
+        let appends = 400usize;
+        let mut w = JournalWriter::create(&path).unwrap();
+        let t0 = Instant::now();
+        for _ in 0..appends {
+            w.append(payload.as_bytes()).unwrap();
+        }
+        let t_append = t0.elapsed();
+        drop(w);
+        let t1 = Instant::now();
+        let scan = scan_journal(&path).unwrap();
+        let t_scan = t1.elapsed();
+        assert_eq!(scan.records.len(), appends, "every appended frame must scan back");
+        let append_us = t_append.as_secs_f64() * 1e6 / appends as f64;
+        let scan_us = t_scan.as_secs_f64() * 1e6 / appends as f64;
+        println!(
+            "{:40} {:>9.0} us/append (fsync)  {:>7.1} us/record scan ({} x {} B)",
+            "journal WAL append + recovery scan", append_us, scan_us, appends,
+            payload.len(),
+        );
+
+        // machine-readable perf trajectory (BENCH_journal.json next to
+        // Cargo.toml; re-run `cargo bench` to refresh)
+        let mut j = Json::obj();
+        j.set("bench", "run_journal_wal")
+            .set("appends", appends as u64)
+            .set("payload_bytes", payload.len() as u64)
+            .set("append_us_fsync", append_us)
+            .set("scan_us_per_record", scan_us)
+            .set("journal_bytes", std::fs::metadata(&path).map(|m| m.len()).unwrap_or(0));
+        match std::fs::write("BENCH_journal.json", j.to_string()) {
+            Ok(()) => println!("(wrote BENCH_journal.json)"),
+            Err(e) => println!("(could not write BENCH_journal.json: {e})"),
+        }
+        let _ = std::fs::remove_file(&path);
+    }
 }

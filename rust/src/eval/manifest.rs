@@ -582,10 +582,12 @@ impl SuiteMerge {
         (0..self.of).filter(|i| !self.landed.contains(i)).collect()
     }
 
-    /// Merge one shard; returns the number of task results it landed.
-    /// Rejects shards from a different job, with a different shard count,
-    /// already-merged indices, and duplicate task keys — all in-band.
-    pub fn add(&mut self, shard: &SuiteShard) -> Result<usize, String> {
+    /// Would [`SuiteMerge::add`] accept this shard? Same checks, same
+    /// error strings, no mutation. This is the write-ahead seam the
+    /// journaled coordinator needs (ADR-010): validate first, journal
+    /// the shard durably, *then* merge — so a journal only ever holds
+    /// shards its own replay will accept.
+    pub fn check(&self, shard: &SuiteShard) -> Result<(), String> {
         if shard.of != self.of {
             return Err(format!("shard count mismatch: {} vs {}", shard.of, self.of));
         }
@@ -593,13 +595,26 @@ impl SuiteMerge {
         if shard.work.to_json().to_string() != self.work_json {
             return Err(format!("shard {} belongs to a different job", shard.index));
         }
-        if !self.landed.insert(shard.index) {
+        if self.landed.contains(&shard.index) {
             return Err(format!("shard {} already merged", shard.index));
         }
+        let mut in_shard: HashSet<&str> = HashSet::new();
         for r in &shard.results {
-            if self.by_key.insert(r.key.clone(), r.runs.clone()).is_some() {
+            if self.by_key.contains_key(&r.key) || !in_shard.insert(&r.key) {
                 return Err(format!("duplicate task {}", r.key));
             }
+        }
+        Ok(())
+    }
+
+    /// Merge one shard; returns the number of task results it landed.
+    /// Rejects shards from a different job, with a different shard count,
+    /// already-merged indices, and duplicate task keys — all in-band.
+    pub fn add(&mut self, shard: &SuiteShard) -> Result<usize, String> {
+        self.check(shard)?;
+        self.landed.insert(shard.index);
+        for r in &shard.results {
+            self.by_key.insert(r.key.clone(), r.runs.clone());
         }
         Ok(shard.results.len())
     }

@@ -32,6 +32,7 @@ use crate::fleet::protocol::{
     read_line_capped, LineRead, Message, ParseError, MAX_LINE_BYTES,
 };
 use crate::fleet::worker::{worker_loop, WorkerOpts};
+use crate::journal::RunJournal;
 use crate::scheduler::{Policy, StopRule};
 use crate::agent::RunLog;
 use crate::util::fnv64;
@@ -143,6 +144,9 @@ pub struct FleetStats {
     pub duplicates: usize,
     pub respawns: usize,
     pub quarantines: usize,
+    /// Shards replayed from a journal at resume (ADR-010) — landed by a
+    /// predecessor coordinator, never re-assigned or re-measured.
+    pub recovered: usize,
 }
 
 impl FleetStats {
@@ -154,7 +158,8 @@ impl FleetStats {
             .set("timeouts", self.timeouts)
             .set("duplicates", self.duplicates)
             .set("respawns", self.respawns)
-            .set("quarantines", self.quarantines);
+            .set("quarantines", self.quarantines)
+            .set("recovered", self.recovered);
         o
     }
 }
@@ -240,8 +245,31 @@ pub fn run_fleet<F>(
     bench: &Bench,
     work: &SuiteWork,
     cfg: &FleetConfig,
+    factory: F,
+    events: &EventLog,
+) -> Result<FleetOutcome, FleetError>
+where
+    F: FnMut(usize, u64, u64, Sender<(u64, WireEvent)>) -> SpawnResult,
+{
+    run_fleet_journaled(bench, work, cfg, factory, events, None)
+}
+
+/// [`run_fleet`] with an optional write-ahead run journal (ADR-010).
+///
+/// With a journal, the coordinator binds the run identity (writing a
+/// fencing `coordinator` token), replays every journaled shard into the
+/// merge *before spawning any worker* — recovered shards are never
+/// re-assigned, so none of their measurements are re-paid — and then
+/// journals each newly landed shard durably before merging it. `kill
+/// -9` at any event-loop iteration therefore leaves a journal whose
+/// resume produces output byte-identical to the uninterrupted run.
+pub fn run_fleet_journaled<F>(
+    bench: &Bench,
+    work: &SuiteWork,
+    cfg: &FleetConfig,
     mut factory: F,
     events: &EventLog,
+    journal: Option<&RunJournal>,
 ) -> Result<FleetOutcome, FleetError>
 where
     F: FnMut(usize, u64, u64, Sender<(u64, WireEvent)>) -> SpawnResult,
@@ -265,6 +293,50 @@ where
         .collect();
     let mut queue: Vec<usize> = admission_order(bench, work, of, &cfg.admission);
     let mut next_token: u64 = 0;
+
+    // Journal recovery happens before any worker exists: bind the run
+    // identity (in-band refusal if the journal belongs to a different
+    // run), replay landed shards into the merge, and drop them from the
+    // queue — a recovered shard is never re-assigned, so no landed key
+    // is ever re-measured. A journal of an already-complete run
+    // reassembles its output without spawning a single worker.
+    if let Some(j) = journal {
+        let landed = j.bind("serve", &job, of).map_err(FleetError::Internal)?;
+        for shard in &landed {
+            // check() bounds-checks shard.index before we use it
+            if let Err(e) = merge.check(shard) {
+                return Err(FleetError::Internal(format!(
+                    "replaying journaled shard {}: {e}",
+                    shard.index
+                )));
+            }
+            if let Err(e) = merge.add(shard) {
+                return Err(FleetError::Internal(format!(
+                    "replaying journaled shard {}: {e}",
+                    shard.index
+                )));
+            }
+            shards[shard.index].done = true;
+            shards[shard.index].queued = false;
+            stats.recovered += 1;
+            events.emit("recovered", |e| {
+                e.set("shard", shard.index);
+            });
+        }
+        queue.retain(|&i| !shards[i].done);
+        events.emit("journal", |e| {
+            e.set("token", j.token()).set("recovered", stats.recovered);
+        });
+        if merge.complete() {
+            j.record_done()
+                .map_err(|e| FleetError::Internal(format!("journal done: {e}")))?;
+            events.emit("done", |e| {
+                e.set("shards", of);
+            });
+            let logs = merge.finish().map_err(FleetError::Merge)?;
+            return Ok(FleetOutcome { logs, stats });
+        }
+    }
 
     let mut spawn = |slot_id: usize,
                      start: u64,
@@ -427,6 +499,10 @@ where
         // 2. done?
         if merge.complete() {
             finish(&mut slots);
+            if let Some(j) = journal {
+                j.record_done()
+                    .map_err(|e| FleetError::Internal(format!("journal done: {e}")))?;
+            }
             events.emit("done", |e| {
                 e.set("shards", of);
             });
@@ -570,8 +646,27 @@ where
                         }
                         continue;
                     }
-                    match merge.add(&shard) {
-                        Ok(_) => {
+                    // write-ahead discipline (ADR-010): validate first
+                    // (a hostile shard must never reach the journal),
+                    // journal durably, only then merge. A journal append
+                    // failure aborts the run in-band — continuing
+                    // un-journaled would break the resume guarantee.
+                    match merge.check(&shard) {
+                        Ok(()) => {
+                            if let Some(j) = journal {
+                                if let Err(e) = j.record_shard(&shard) {
+                                    finish(&mut slots);
+                                    return Err(FleetError::Internal(format!(
+                                        "journal append: {e}"
+                                    )));
+                                }
+                            }
+                            if let Err(e) = merge.add(&shard) {
+                                finish(&mut slots);
+                                return Err(FleetError::Internal(format!(
+                                    "merge after successful check: {e}"
+                                )));
+                            }
                             shards[index].done = true;
                             events.emit("merge", |e| {
                                 e.set("slot", s)
@@ -792,6 +887,7 @@ pub fn thread_worker_factory(
         let opts = WorkerOpts {
             faults: plans.get(slot).cloned().unwrap_or_default(),
             start_ordinal,
+            lease: None,
         };
         let bench = Arc::clone(&bench);
         let kf = Arc::clone(&kill_flag);
@@ -1075,6 +1171,100 @@ mod tests {
         // ε=off deprioritizes nothing: pure index order
         let fixed = admission_order(&bench, &work, of, &Policy::fixed());
         assert_eq!(fixed, (0..of).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn journaled_run_is_golden_and_a_done_resume_spawns_no_workers() {
+        use crate::journal::RunJournal;
+        let p = std::env::temp_dir()
+            .join(format!("ucutlass_coord_{}_done.journal", std::process::id()));
+        let _ = std::fs::remove_file(&p);
+        let work = mini_work();
+        let cfg = fast_cfg(2);
+        let bench = Arc::new(Bench::new());
+        let want = golden(&bench, &work);
+
+        let journal = RunJournal::create(&p).unwrap();
+        let events = EventLog::new();
+        let out = run_fleet_journaled(
+            &bench,
+            &work,
+            &cfg,
+            thread_worker_factory(Arc::clone(&bench), vec![FaultPlan::none(); 2]),
+            &events,
+            Some(&journal),
+        )
+        .expect("journaled fleet converges");
+        assert_eq!(fleet_json(&out), want, "journaling must not change the output");
+        assert_eq!(out.stats.recovered, 0);
+        drop(journal);
+
+        // resuming a *done* journal must reassemble the output without
+        // spawning a single worker or assigning a single shard
+        let journal = RunJournal::resume(&p).unwrap();
+        assert!(journal.done());
+        let events = EventLog::new();
+        let out = run_fleet_journaled(
+            &bench,
+            &work,
+            &cfg,
+            |_, _, _, _| -> SpawnResult {
+                panic!("a done journal must not spawn workers")
+            },
+            &events,
+            Some(&journal),
+        )
+        .expect("done resume reassembles");
+        assert_eq!(fleet_json(&out), want);
+        assert_eq!(out.stats.recovered, out.stats.shards);
+        assert_eq!(out.stats.assigns, 0);
+        assert_eq!(events.count("assign"), 0);
+        assert_eq!(events.count("recovered"), out.stats.shards);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn journal_bound_to_a_different_work_spec_is_refused_in_band() {
+        use crate::journal::RunJournal;
+        let p = std::env::temp_dir()
+            .join(format!("ucutlass_coord_{}_ident.journal", std::process::id()));
+        let _ = std::fs::remove_file(&p);
+        let bench = Arc::new(Bench::new());
+        let cfg = fast_cfg(2);
+        {
+            let journal = RunJournal::create(&p).unwrap();
+            let events = EventLog::new();
+            run_fleet_journaled(
+                &bench,
+                &mini_work(),
+                &cfg,
+                thread_worker_factory(Arc::clone(&bench), vec![FaultPlan::none(); 2]),
+                &events,
+                Some(&journal),
+            )
+            .expect("fleet converges");
+        }
+        // same journal, different work: the seed differs, so the job
+        // hash differs, and bind must refuse before spawning anything
+        let journal = RunJournal::resume(&p).unwrap();
+        let mut other = mini_work();
+        other.seed = 12;
+        let events = EventLog::new();
+        let err = run_fleet_journaled(
+            &bench,
+            &other,
+            &cfg,
+            |_, _, _, _| -> SpawnResult { panic!("must refuse before spawning") },
+            &events,
+            Some(&journal),
+        );
+        match err {
+            Err(FleetError::Internal(e)) => {
+                assert!(e.contains("different run"), "got: {e}")
+            }
+            other => panic!("expected Internal, got {:?}", other.map(|o| o.stats)),
+        }
+        let _ = std::fs::remove_file(&p);
     }
 
     #[test]

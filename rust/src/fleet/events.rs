@@ -54,8 +54,12 @@ impl EventLog {
         let mut inner = self.inner.lock().expect("event log lock");
         if let Some(sink) = inner.sink.as_mut() {
             // sink failures must not take the fleet down mid-run; the
-            // in-memory log stays authoritative
+            // in-memory log stays authoritative. Flushed per line
+            // (ADR-010): a `kill -9`'d coordinator must leave at worst
+            // one torn *final* line, never a buffer of silently lost
+            // events.
             let _ = writeln!(sink, "{o}");
+            let _ = sink.flush();
         }
         inner.events.push(o);
     }
@@ -82,6 +86,39 @@ impl EventLog {
             let _ = sink.flush();
         }
     }
+}
+
+/// Parse an `--events` JSONL file back into events, tolerating exactly
+/// the damage a crash can inflict: a torn **final** line (no trailing
+/// newline, or one that fails to parse) is dropped and reported via the
+/// returned flag. A malformed *interior* line cannot come from a crash
+/// — per-line flushing means every interior line was written whole — so
+/// it is an in-band error, not something to skip silently.
+pub fn parse_events_jsonl(text: &str) -> Result<(Vec<Json>, bool), String> {
+    let ends_clean = text.is_empty() || text.ends_with('\n');
+    let lines: Vec<&str> = text.lines().collect();
+    let mut events = Vec::with_capacity(lines.len());
+    let mut torn = false;
+    for (n, line) in lines.iter().enumerate() {
+        let last = n + 1 == lines.len();
+        match Json::parse(line) {
+            Ok(j) => {
+                if last && !ends_clean {
+                    // parses, but the newline never landed: treat it as
+                    // torn anyway — a longer intended line could have
+                    // been cut at a point that still parses
+                    torn = true;
+                } else {
+                    events.push(j);
+                }
+            }
+            Err(_) if last => torn = true,
+            Err(e) => {
+                return Err(format!("events line {}: {e}", n + 1));
+            }
+        }
+    }
+    Ok((events, torn))
 }
 
 #[cfg(test)]
@@ -120,6 +157,36 @@ mod tests {
         assert_eq!(ev.len(), 3);
         assert_eq!(ev[0].get("slot").and_then(|s| s.as_u64()), Some(2));
         assert!(ev[0].get("t_ms").and_then(|t| t.as_u64()).is_some());
+    }
+
+    #[test]
+    fn events_jsonl_tolerates_only_a_torn_tail() {
+        let whole = "{\"event\":\"spawn\",\"t_ms\":0}\n{\"event\":\"done\",\"t_ms\":9}\n";
+        let (ev, torn) = parse_events_jsonl(whole).unwrap();
+        assert_eq!(ev.len(), 2);
+        assert!(!torn);
+
+        // crash mid-final-line: dropped, flagged, prefix intact
+        for cut in 1..whole.len() {
+            let text = &whole[..cut];
+            let (ev, torn) = parse_events_jsonl(text).unwrap();
+            if text.ends_with('\n') {
+                assert!(!torn, "cut at a line boundary is clean");
+            } else {
+                assert!(torn, "cut at byte {cut} must flag a torn tail");
+            }
+            for e in &ev {
+                assert!(e.get("event").is_some());
+            }
+        }
+
+        // a malformed interior line is corruption, not a crash artifact
+        let bad = "{\"event\":\"spawn\"}\nnot json\n{\"event\":\"done\"}\n";
+        let err = parse_events_jsonl(bad).unwrap_err();
+        assert!(err.contains("line 2"), "got: {err}");
+
+        let (ev, torn) = parse_events_jsonl("").unwrap();
+        assert!(ev.is_empty() && !torn);
     }
 
     #[test]

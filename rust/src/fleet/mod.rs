@@ -29,10 +29,11 @@ pub mod protocol;
 pub mod worker;
 
 pub use coordinator::{
-    admission_order, run_fleet, subprocess_worker_factory, thread_worker_factory, FleetConfig,
-    FleetError, FleetOutcome, FleetStats, WireEvent, WorkerLink,
+    admission_order, run_fleet, run_fleet_journaled, subprocess_worker_factory,
+    thread_worker_factory, FleetConfig, FleetError, FleetOutcome, FleetStats, WireEvent,
+    WorkerLink,
 };
-pub use events::EventLog;
+pub use events::{parse_events_jsonl, EventLog};
 pub use faults::{Fault, FaultPlan};
 pub use protocol::{Message, ParseError, FLEET_PROTOCOL_VERSION, MAX_LINE_BYTES};
 pub use worker::{worker_loop, WorkerOpts};

@@ -14,17 +14,22 @@ use crate::fleet::faults::{Fault, FaultPlan};
 use crate::fleet::protocol::{
     read_line_capped, LineRead, Message, ParseError, FLEET_PROTOCOL_VERSION, MAX_LINE_BYTES,
 };
+use crate::journal::LeaseMonitor;
 use std::io::{BufRead, Write};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::time::Duration;
 
-/// Worker configuration: its fault plan and where in the plan it starts
+/// Worker configuration: its fault plan, where in the plan it starts
 /// (`--fault-offset`: assignments already issued to this slot before a
-/// respawn — see `faults` module docs).
+/// respawn — see `faults` module docs), and an optional coordinator
+/// lease to watch (ADR-010): once the lease goes stale the worker exits
+/// on its own instead of orphaning — bounded by the lease timeout, not
+/// by [`HANG_CAP`].
 #[derive(Debug, Clone, Default)]
 pub struct WorkerOpts {
     pub faults: FaultPlan,
     pub start_ordinal: u64,
+    pub lease: Option<LeaseMonitor>,
 }
 
 /// Upper bound on a scripted hang: a hung worker whose coordinator died
@@ -48,10 +53,14 @@ pub fn worker_loop<R: BufRead, W: Write>(
             .map_err(|e| format!("worker write: {e}"))
     };
     send(&mut output, &Message::Ready)?;
+    let mut lease = opts.lease.clone();
     let mut received: u64 = 0;
     loop {
         if kill.load(Ordering::Relaxed) {
             return Ok(());
+        }
+        if lease.as_mut().is_some_and(|m| m.stale()) {
+            return Ok(()); // coordinator gone: orphan hygiene
         }
         let line = match read_line_capped(&mut input, MAX_LINE_BYTES)
             .map_err(|e| format!("worker read: {e}"))?
@@ -104,6 +113,9 @@ pub fn worker_loop<R: BufRead, W: Write>(
                 while start.elapsed() < HANG_CAP {
                     if kill.load(Ordering::Relaxed) {
                         return Ok(());
+                    }
+                    if lease.as_mut().is_some_and(|m| m.stale()) {
+                        return Ok(()); // even a hung worker honors the lease
                     }
                     std::thread::sleep(Duration::from_millis(5));
                 }
@@ -291,7 +303,7 @@ mod tests {
                 .with(1, Fault::TruncatedLine)
                 .with(2, Fault::WrongVersion)
                 .with(3, Fault::DuplicateReply),
-            start_ordinal: 0,
+            ..WorkerOpts::default()
         };
         let replies = drive(&bench, opts, (0..5).map(assign).collect());
         assert_eq!(replies.len(), 1 + 6, "ready + garbage + truncated + wrong-v + 2 dup + clean");
@@ -308,15 +320,51 @@ mod tests {
         assert!(matches!(replies[6], Ok(Message::Result { index: 4, .. })));
 
         // crash: EOF right after ready, no reply for the assignment
-        let opts =
-            WorkerOpts { faults: FaultPlan::none().with(0, Fault::CrashBeforeReply), start_ordinal: 0 };
+        let opts = WorkerOpts {
+            faults: FaultPlan::none().with(0, Fault::CrashBeforeReply),
+            ..WorkerOpts::default()
+        };
         let replies = drive(&bench, opts, vec![assign(0)]);
         assert_eq!(replies, vec![Ok(Message::Ready)]);
 
         // a start offset shifts which assignment the plan hits
-        let opts =
-            WorkerOpts { faults: FaultPlan::none().with(3, Fault::CrashBeforeReply), start_ordinal: 3 };
+        let opts = WorkerOpts {
+            faults: FaultPlan::none().with(3, Fault::CrashBeforeReply),
+            start_ordinal: 3,
+            ..WorkerOpts::default()
+        };
         let replies = drive(&bench, opts, vec![assign(0), assign(1)]);
         assert_eq!(replies, vec![Ok(Message::Ready)], "offset 3 makes the first assign ordinal 3");
+    }
+
+    #[test]
+    fn hung_worker_exits_on_a_stale_lease_long_before_the_hang_cap() {
+        let bench = Bench::new();
+        let work = tiny_job(&bench);
+        let of = crate::exec::suite_tasks(&work.work, work.problems).len();
+        // a lease path that never exists: stale after the short timeout,
+        // so the hung worker must exit within ~one lease deadline
+        let lease_path = std::env::temp_dir().join(format!(
+            "ucutlass_worker_{}_never_beats.lease",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_file(&lease_path);
+        let opts = WorkerOpts {
+            faults: FaultPlan::none().with(0, Fault::HangPastDeadline),
+            start_ordinal: 0,
+            lease: Some(LeaseMonitor::new(&lease_path, Duration::from_millis(100))),
+        };
+        let t0 = std::time::Instant::now();
+        let replies = drive(
+            &bench,
+            opts,
+            vec![Message::Assign { job: "j".into(), index: 0, of, work: work.clone() }],
+        );
+        assert_eq!(replies, vec![Ok(Message::Ready)], "the hang swallows the assignment");
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "a stale lease must end the hang well before HANG_CAP (took {:?})",
+            t0.elapsed()
+        );
     }
 }

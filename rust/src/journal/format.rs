@@ -1,0 +1,393 @@
+//! WAL framing for the run journal (ADR-010) — the ADR-008 format
+//! family applied to an append-only log with **no** index footer: a
+//! journal must be readable after a crash at *any* byte, so all of its
+//! structure lives in the records themselves.
+//!
+//! Layout (all integers little-endian, as in the eval store):
+//!
+//! ```text
+//! [ header: 8B magic "UCEVJRNL" | u32 version | u32 flags(=0) ]
+//! [ frame:  u32 len | u32 len_check | u64 payload_check | payload ]*
+//! ```
+//!
+//! `len_check` is the low 32 bits of `fnv64` over the four `len` bytes;
+//! `payload_check` is `fnv64` over the payload. The double checksum is
+//! what makes every byte of the *committed* prefix load-bearing: a flip
+//! in `len` can no longer masquerade as a torn tail (the frame header
+//! itself fails verification before the bogus length is believed), so
+//! on a fully-committed journal **any** single-byte flip fails the scan
+//! in-band — the same property `tests/cache.rs` pins for the store.
+//!
+//! Torn tails are different from corruption. [`JournalWriter::append`]
+//! builds each frame in one buffer, writes it with one `write_all`,
+//! flushes, and `sync_data`s before returning — so a record either
+//! committed (whole frame on disk) or the process died mid-append and
+//! the file ends with an incomplete final frame. [`scan_journal`]
+//! therefore accepts an *incomplete* final frame as a tear (the record
+//! was never acknowledged; dropping it loses nothing that was acted
+//! on), while any *complete* frame that fails a checksum is corruption
+//! and comes back as an in-band error, never a panic.
+
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+use crate::eval::manifest::MAX_ARTIFACT_BYTES;
+use crate::util::fnv64;
+use crate::util::json::Json;
+
+pub const JOURNAL_MAGIC: [u8; 8] = *b"UCEVJRNL";
+pub const JOURNAL_VERSION: u32 = 1;
+/// Header: magic + version + flags.
+pub const JOURNAL_HEADER_BYTES: u64 = 16;
+/// Frame header: len + len_check + payload_check.
+pub const FRAME_HEADER_BYTES: u64 = 16;
+/// A journal record wraps at most one suite-shard artifact plus a small
+/// JSON envelope (same slack as the fleet protocol's `MAX_LINE_BYTES`).
+pub const MAX_JOURNAL_RECORD_BYTES: usize = MAX_ARTIFACT_BYTES + 4096;
+
+fn len_check(len: u32) -> u32 {
+    fnv64(&len.to_le_bytes()) as u32
+}
+
+// ===========================================================================
+// Writer
+// ===========================================================================
+
+/// Append-only journal writer. Every `append` is flushed and
+/// `sync_data`ed before it returns, so a record the caller acted on is
+/// on disk — the write-ahead discipline the recovery path relies on.
+pub struct JournalWriter {
+    file: File,
+    path: PathBuf,
+    pos: u64,
+}
+
+impl JournalWriter {
+    /// Create (truncating) a fresh journal: header only.
+    pub fn create(path: impl AsRef<Path>) -> Result<JournalWriter, String> {
+        let path = path.as_ref().to_path_buf();
+        let mut file = File::create(&path)
+            .map_err(|e| format!("journal {}: create: {e}", path.display()))?;
+        let mut header = Vec::with_capacity(JOURNAL_HEADER_BYTES as usize);
+        header.extend_from_slice(&JOURNAL_MAGIC);
+        header.extend_from_slice(&JOURNAL_VERSION.to_le_bytes());
+        header.extend_from_slice(&0u32.to_le_bytes());
+        file.write_all(&header)
+            .and_then(|_| file.sync_data())
+            .map_err(|e| format!("journal {}: write header: {e}", path.display()))?;
+        Ok(JournalWriter { file, path, pos: JOURNAL_HEADER_BYTES })
+    }
+
+    /// Reopen an existing journal for appending after [`scan_journal`]
+    /// validated it. The file is truncated to `valid_end` first, so a
+    /// torn tail frame is physically discarded rather than left for the
+    /// next append to concatenate garbage onto.
+    pub fn append_to(path: impl AsRef<Path>, valid_end: u64) -> Result<JournalWriter, String> {
+        let path = path.as_ref().to_path_buf();
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .open(&path)
+            .map_err(|e| format!("journal {}: open for append: {e}", path.display()))?;
+        file.set_len(valid_end)
+            .map_err(|e| format!("journal {}: truncate torn tail: {e}", path.display()))?;
+        file.seek(SeekFrom::Start(valid_end))
+            .map_err(|e| format!("journal {}: seek: {e}", path.display()))?;
+        Ok(JournalWriter { file, path, pos: valid_end })
+    }
+
+    /// Append one record and make it durable. On `Ok(())` the record is
+    /// flushed and fsynced — callers may act on it.
+    pub fn append(&mut self, payload: &[u8]) -> Result<(), String> {
+        if payload.len() > MAX_JOURNAL_RECORD_BYTES {
+            return Err(format!(
+                "journal {}: record is {} bytes, over the {MAX_JOURNAL_RECORD_BYTES}-byte limit",
+                self.path.display(),
+                payload.len()
+            ));
+        }
+        let len = payload.len() as u32;
+        let mut frame = Vec::with_capacity(FRAME_HEADER_BYTES as usize + payload.len());
+        frame.extend_from_slice(&len.to_le_bytes());
+        frame.extend_from_slice(&len_check(len).to_le_bytes());
+        frame.extend_from_slice(&fnv64(payload).to_le_bytes());
+        frame.extend_from_slice(payload);
+        self.file
+            .write_all(&frame)
+            .and_then(|_| self.file.sync_data())
+            .map_err(|e| format!("journal {}: append: {e}", self.path.display()))?;
+        self.pos += frame.len() as u64;
+        Ok(())
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    /// Bytes committed so far (header included).
+    pub fn pos(&self) -> u64 {
+        self.pos
+    }
+}
+
+// ===========================================================================
+// Scan / recovery
+// ===========================================================================
+
+/// How the journal ended.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Tail {
+    /// The file ends exactly at a frame boundary.
+    Clean,
+    /// The file ends inside a frame that never finished committing
+    /// (crash mid-append); `dropped` trailing bytes were discarded.
+    Torn { dropped: u64 },
+}
+
+/// The valid prefix of a journal.
+#[derive(Debug)]
+pub struct JournalScan {
+    /// Every committed record, in append order.
+    pub records: Vec<Json>,
+    /// Byte offset one past each record's frame — `ends[k]` is where a
+    /// kill after record `k` leaves the file (used by the
+    /// kill-at-every-boundary tests and by [`JournalWriter::append_to`]).
+    pub ends: Vec<u64>,
+    /// End of the valid prefix (`ends.last()`, or the header size).
+    pub valid_end: u64,
+    pub tail: Tail,
+}
+
+/// Read the valid prefix of a journal. Corruption in the committed
+/// prefix — a checksum mismatch in any *complete* frame, a bad header,
+/// an unparseable payload — is an in-band `Err`; only an incomplete
+/// final frame is tolerated (as [`Tail::Torn`]). Never panics.
+pub fn scan_journal(path: impl AsRef<Path>) -> Result<JournalScan, String> {
+    let path = path.as_ref();
+    let mut bytes = Vec::new();
+    File::open(path)
+        .and_then(|mut f| f.read_to_end(&mut bytes))
+        .map_err(|e| format!("journal {}: read: {e}", path.display()))?;
+    let whole = bytes.len() as u64;
+    if whole < JOURNAL_HEADER_BYTES {
+        return Err(format!(
+            "journal {}: {} bytes is too short for a journal header (torn at creation? \
+             delete it and start a fresh run)",
+            path.display(),
+            whole
+        ));
+    }
+    if bytes[0..8] != JOURNAL_MAGIC {
+        return Err(format!("journal {}: bad magic (not a run journal)", path.display()));
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().unwrap());
+    if version != JOURNAL_VERSION {
+        return Err(format!(
+            "journal {}: unsupported journal version {version} (this build reads v{JOURNAL_VERSION})",
+            path.display()
+        ));
+    }
+    let flags = u32::from_le_bytes(bytes[12..16].try_into().unwrap());
+    if flags != 0 {
+        return Err(format!(
+            "journal {}: unsupported journal flags {flags:#x} (v1 defines none)",
+            path.display()
+        ));
+    }
+
+    let mut records = Vec::new();
+    let mut ends = Vec::new();
+    let mut pos = JOURNAL_HEADER_BYTES;
+    let tail = loop {
+        let remaining = whole - pos;
+        if remaining == 0 {
+            break Tail::Clean;
+        }
+        if remaining < FRAME_HEADER_BYTES {
+            // not even a verifiable frame header: a tear during the
+            // very first bytes of an append
+            break Tail::Torn { dropped: remaining };
+        }
+        let p = pos as usize;
+        let len = u32::from_le_bytes(bytes[p..p + 4].try_into().unwrap());
+        let lc = u32::from_le_bytes(bytes[p + 4..p + 8].try_into().unwrap());
+        if len_check(len) != lc {
+            // the frame header itself is damaged — this is corruption,
+            // not a tear: a torn append leaves a *prefix* of the frame,
+            // and the header bytes were committed together
+            return Err(format!(
+                "journal {}: record {} at offset {pos}: frame header checksum mismatch \
+                 (corrupt journal)",
+                path.display(),
+                records.len()
+            ));
+        }
+        if len as usize > MAX_JOURNAL_RECORD_BYTES {
+            return Err(format!(
+                "journal {}: record {} at offset {pos}: length {len} is over the \
+                 {MAX_JOURNAL_RECORD_BYTES}-byte limit (corrupt journal)",
+                path.display(),
+                records.len()
+            ));
+        }
+        let check = u64::from_le_bytes(bytes[p + 8..p + 16].try_into().unwrap());
+        if FRAME_HEADER_BYTES + len as u64 > remaining {
+            // verified frame header, incomplete payload: a genuine tear
+            break Tail::Torn { dropped: remaining };
+        }
+        let payload = &bytes[p + 16..p + 16 + len as usize];
+        if fnv64(payload) != check {
+            return Err(format!(
+                "journal {}: record {} at offset {pos}: payload checksum mismatch \
+                 (corrupt journal)",
+                path.display(),
+                records.len()
+            ));
+        }
+        let text = std::str::from_utf8(payload).map_err(|e| {
+            format!("journal {}: record {}: payload is not UTF-8: {e}", path.display(), records.len())
+        })?;
+        let json = Json::parse(text).map_err(|e| {
+            format!("journal {}: record {}: bad JSON: {e}", path.display(), records.len())
+        })?;
+        pos += FRAME_HEADER_BYTES + len as u64;
+        records.push(json);
+        ends.push(pos);
+    };
+    Ok(JournalScan { records, ends, valid_end: pos, tail })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("ucutlass_jfmt_{}_{name}", std::process::id()))
+    }
+
+    fn payload(i: u64) -> Vec<u8> {
+        let mut o = Json::obj();
+        o.set("kind", "test").set("i", i);
+        o.to_string().into_bytes()
+    }
+
+    #[test]
+    fn roundtrip_and_clean_tail() {
+        let p = tmp("rt.journal");
+        let mut w = JournalWriter::create(&p).unwrap();
+        for i in 0..5 {
+            w.append(&payload(i)).unwrap();
+        }
+        let scan = scan_journal(&p).unwrap();
+        assert_eq!(scan.tail, Tail::Clean);
+        assert_eq!(scan.records.len(), 5);
+        assert_eq!(scan.valid_end, w.pos());
+        for (i, r) in scan.records.iter().enumerate() {
+            assert_eq!(r.get("i").and_then(|v| v.as_u64()), Some(i as u64));
+        }
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn truncation_at_every_byte_yields_a_prefix_or_an_in_band_error() {
+        let p = tmp("cut.journal");
+        let cut = tmp("cut_m.journal");
+        let mut w = JournalWriter::create(&p).unwrap();
+        for i in 0..4 {
+            w.append(&payload(i)).unwrap();
+        }
+        let base = std::fs::read(&p).unwrap();
+        let full = scan_journal(&p).unwrap();
+        for at in 0..base.len() {
+            std::fs::write(&cut, &base[..at]).unwrap();
+            match scan_journal(&cut) {
+                // short-of-header prefixes fail in-band
+                Err(e) => assert!((at as u64) < JOURNAL_HEADER_BYTES, "cut {at}: {e}"),
+                Ok(scan) => {
+                    let boundary = at as u64 == JOURNAL_HEADER_BYTES
+                        || full.ends.contains(&(at as u64));
+                    assert_eq!(scan.tail == Tail::Clean, boundary, "cut {at}");
+                    // recovered records are exactly the committed prefix
+                    assert_eq!(scan.ends, &full.ends[..scan.records.len()], "cut {at}");
+                    for (a, b) in scan.records.iter().zip(&full.records) {
+                        assert_eq!(a.to_string(), b.to_string(), "cut {at}");
+                    }
+                }
+            }
+        }
+        for q in [&p, &cut] {
+            let _ = std::fs::remove_file(q);
+        }
+    }
+
+    #[test]
+    fn every_single_byte_flip_in_a_committed_journal_fails_in_band() {
+        let p = tmp("flip.journal");
+        let m = tmp("flip_m.journal");
+        let mut w = JournalWriter::create(&p).unwrap();
+        for i in 0..3 {
+            w.append(&payload(i)).unwrap();
+        }
+        let base = std::fs::read(&p).unwrap();
+        for at in 0..base.len() {
+            let mut b = base.clone();
+            b[at] ^= 0x01;
+            std::fs::write(&m, &b).unwrap();
+            // a JSON-payload flip may survive as *different but valid*
+            // JSON only if it also preserved the checksum — impossible
+            // for a single flip under FNV-1a — so every position errs
+            assert!(
+                scan_journal(&m).is_err(),
+                "flip at byte {at} of {} must fail recovery in-band",
+                base.len()
+            );
+        }
+        for q in [&p, &m] {
+            let _ = std::fs::remove_file(q);
+        }
+    }
+
+    #[test]
+    fn append_to_truncates_the_torn_tail_and_continues() {
+        let p = tmp("resume.journal");
+        let mut w = JournalWriter::create(&p).unwrap();
+        for i in 0..3 {
+            w.append(&payload(i)).unwrap();
+        }
+        drop(w);
+        // tear mid-frame: keep the valid prefix plus half a frame
+        let base = std::fs::read(&p).unwrap();
+        let scan = scan_journal(&p).unwrap();
+        let tear = scan.ends[1] + 7;
+        std::fs::write(&p, &base[..tear as usize]).unwrap();
+        let scan = scan_journal(&p).unwrap();
+        assert_eq!(scan.records.len(), 2);
+        assert_eq!(scan.tail, Tail::Torn { dropped: 7 });
+        let mut w = JournalWriter::append_to(&p, scan.valid_end).unwrap();
+        w.append(&payload(9)).unwrap();
+        drop(w);
+        let scan = scan_journal(&p).unwrap();
+        assert_eq!(scan.tail, Tail::Clean);
+        let got: Vec<u64> =
+            scan.records.iter().map(|r| r.get("i").unwrap().as_u64().unwrap()).collect();
+        assert_eq!(got, vec![0, 1, 9]);
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn oversized_records_and_alien_files_are_in_band_errors() {
+        let p = tmp("big.journal");
+        let mut w = JournalWriter::create(&p).unwrap();
+        let err = w.append(&vec![b'x'; MAX_JOURNAL_RECORD_BYTES + 1]).unwrap_err();
+        assert!(err.contains("over the"), "got: {err}");
+        drop(w);
+        std::fs::write(&p, b"definitely not a journal").unwrap();
+        let err = scan_journal(&p).unwrap_err();
+        assert!(err.contains("bad magic"), "got: {err}");
+        std::fs::write(&p, b"short").unwrap();
+        let err = scan_journal(&p).unwrap_err();
+        assert!(err.contains("too short"), "got: {err}");
+        let _ = std::fs::remove_file(&p);
+    }
+}

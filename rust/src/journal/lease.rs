@@ -1,0 +1,193 @@
+//! Coordinator lease / heartbeat (ADR-010 §lease).
+//!
+//! The coordinator beats a small lease file next to the journal
+//! (`<journal>.lease`) while it is alive; workers watch it and
+//! self-terminate within one deadline of it going stale. This is the
+//! orphan-hygiene half of crash safety: subprocess workers already die
+//! on stdin EOF when a coordinator exits *cleanly*, but a `kill -9`'d
+//! coordinator can leave a compute-bound or hung worker spinning
+//! forever — the lease bounds that to one deadline.
+//!
+//! Staleness is judged *locally*: [`LeaseMonitor`] tracks when the file
+//! bytes last **changed** on its own clock, so no cross-process clock
+//! comparison (or mtime trust) is involved. Each beat carries a
+//! monotonically increasing `seq` plus the coordinator's fencing
+//! `token`, so every beat changes the bytes.
+
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
+
+fn beat_bytes(token: u64, seq: u64) -> Vec<u8> {
+    let mut o = Json::obj();
+    o.set("token", token).set("seq", seq).set("pid", std::process::id() as u64);
+    let mut b = o.to_string().into_bytes();
+    b.push(b'\n');
+    b
+}
+
+/// Coordinator side: writes a beat every `interval` on a background
+/// thread until dropped. A clean drop removes the lease file, so
+/// workers orphaned by a *graceful* coordinator exit see staleness
+/// immediately rather than after a timeout.
+pub struct LeaseKeeper {
+    path: PathBuf,
+    stop: Arc<(Mutex<bool>, Condvar)>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl LeaseKeeper {
+    /// Write the first beat synchronously (so workers spawned right
+    /// after `start` returns observe a live lease), then keep beating
+    /// in the background.
+    pub fn start(
+        path: impl AsRef<Path>,
+        token: u64,
+        interval: Duration,
+    ) -> Result<LeaseKeeper, String> {
+        let path = path.as_ref().to_path_buf();
+        std::fs::write(&path, beat_bytes(token, 0))
+            .map_err(|e| format!("lease {}: write: {e}", path.display()))?;
+        let stop: Arc<(Mutex<bool>, Condvar)> = Arc::new((Mutex::new(false), Condvar::new()));
+        let thread_stop = Arc::clone(&stop);
+        let thread_path = path.clone();
+        let handle = std::thread::Builder::new()
+            .name("lease-keeper".into())
+            .spawn(move || {
+                let (lock, cv) = &*thread_stop;
+                let mut seq = 1u64;
+                let mut stopped = lock.lock().expect("lease stop lock");
+                loop {
+                    let (guard, timeout) =
+                        cv.wait_timeout(stopped, interval).expect("lease stop wait");
+                    stopped = guard;
+                    if *stopped {
+                        return;
+                    }
+                    if timeout.timed_out() {
+                        // best-effort: a failed beat surfaces as worker
+                        // staleness, which re-runs work — safe, not silent
+                        let _ = std::fs::write(&thread_path, beat_bytes(token, seq));
+                        seq += 1;
+                    }
+                }
+            })
+            .map_err(|e| format!("lease {}: spawn keeper: {e}", path.display()))?;
+        Ok(LeaseKeeper { path, stop, handle: Some(handle) })
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+impl Drop for LeaseKeeper {
+    fn drop(&mut self) {
+        let (lock, cv) = &*self.stop;
+        if let Ok(mut stopped) = lock.lock() {
+            *stopped = true;
+        }
+        cv.notify_all();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+        let _ = std::fs::remove_file(&self.path);
+    }
+}
+
+/// Worker side: polls the lease file and reports staleness once the
+/// bytes have not changed for `timeout` (one coordinator deadline, by
+/// default). A missing or unreadable file counts as "no beat observed"
+/// — the timer keeps running, so a removed lease (clean coordinator
+/// exit) also reads as stale.
+#[derive(Debug, Clone)]
+pub struct LeaseMonitor {
+    path: PathBuf,
+    timeout: Duration,
+    last: Option<Vec<u8>>,
+    changed_at: Instant,
+}
+
+impl LeaseMonitor {
+    pub fn new(path: impl AsRef<Path>, timeout: Duration) -> LeaseMonitor {
+        LeaseMonitor {
+            path: path.as_ref().to_path_buf(),
+            timeout,
+            last: None,
+            changed_at: Instant::now(),
+        }
+    }
+
+    pub fn timeout(&self) -> Duration {
+        self.timeout
+    }
+
+    /// Re-read the lease; true once it has been unchanged (or absent)
+    /// past the timeout.
+    pub fn stale(&mut self) -> bool {
+        let now = Instant::now();
+        if let Ok(bytes) = std::fs::read(&self.path) {
+            if self.last.as_deref() != Some(&bytes[..]) {
+                self.last = Some(bytes);
+                self.changed_at = now;
+            }
+        }
+        now.duration_since(self.changed_at) > self.timeout
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("ucutlass_lease_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn live_lease_stays_fresh_and_dropped_lease_goes_stale() {
+        let p = tmp("live.lease");
+        let _ = std::fs::remove_file(&p);
+        let keeper = LeaseKeeper::start(&p, 3, Duration::from_millis(10)).unwrap();
+        let mut mon = LeaseMonitor::new(&p, Duration::from_millis(80));
+        let t0 = Instant::now();
+        while t0.elapsed() < Duration::from_millis(200) {
+            assert!(!mon.stale(), "a beating lease must never read stale");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        drop(keeper); // removes the file
+        assert!(!p.exists(), "clean drop removes the lease file");
+        let t1 = Instant::now();
+        while !mon.stale() {
+            assert!(t1.elapsed() < Duration::from_secs(5), "must go stale after drop");
+            std::thread::sleep(Duration::from_millis(5));
+        }
+    }
+
+    #[test]
+    fn frozen_lease_goes_stale_within_the_timeout() {
+        let p = tmp("frozen.lease");
+        std::fs::write(&p, b"{\"token\":0,\"seq\":0}\n").unwrap();
+        let mut mon = LeaseMonitor::new(&p, Duration::from_millis(50));
+        assert!(!mon.stale(), "fresh observation starts the clock");
+        std::thread::sleep(Duration::from_millis(80));
+        assert!(mon.stale(), "unchanged bytes past the timeout are stale");
+        // a new beat revives it
+        std::fs::write(&p, b"{\"token\":1,\"seq\":1}\n").unwrap();
+        assert!(!mon.stale());
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn missing_lease_file_reads_stale_after_the_timeout() {
+        let p = tmp("missing.lease");
+        let _ = std::fs::remove_file(&p);
+        let mut mon = LeaseMonitor::new(&p, Duration::from_millis(30));
+        assert!(!mon.stale(), "the grace window applies even with no file");
+        std::thread::sleep(Duration::from_millis(60));
+        assert!(mon.stale());
+    }
+}

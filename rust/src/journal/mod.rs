@@ -1,0 +1,34 @@
+//! Crash-safe runs (ADR-010): the durable run journal, coordinator
+//! lease, and recovery path behind `repro serve|sweep|schedule
+//! --journal PATH [--resume]`.
+//!
+//! Three layers:
+//!
+//! * [`format`] — WAL framing in the ADR-008 family: append-only,
+//!   length-prefixed, double-checksummed frames with no index footer
+//!   (a journal must be readable after a crash at any byte). Every
+//!   committed byte is load-bearing — a single-byte flip fails the
+//!   scan in-band — while a torn tail (crash mid-append) is truncated
+//!   away, never mistaken for corruption.
+//! * [`run`] — the typed [`RunJournal`]: `start` / `coordinator` /
+//!   `shard` / `variant` / `stop` / `done` records. Everything a run
+//!   acts on is journaled (and fsynced) *first*, so `kill -9` at any
+//!   event-loop iteration leaves a prefix that `--resume` replays into
+//!   `SuiteMerge` / session state — output byte-identical to the
+//!   uninterrupted run, zero landed keys re-measured, and coordinator
+//!   incarnations fenced by token so a successor never double-charges
+//!   a predecessor's in-flight work.
+//! * [`lease`] — the coordinator heartbeat file workers watch so
+//!   orphans self-terminate within one deadline of a coordinator
+//!   `kill -9` instead of spinning forever.
+
+pub mod format;
+pub mod lease;
+pub mod run;
+
+pub use format::{
+    scan_journal, JournalScan, JournalWriter, Tail, FRAME_HEADER_BYTES, JOURNAL_HEADER_BYTES,
+    JOURNAL_VERSION, MAX_JOURNAL_RECORD_BYTES,
+};
+pub use lease::{LeaseKeeper, LeaseMonitor};
+pub use run::{RunJournal, StopRecord};

@@ -1,0 +1,463 @@
+//! The typed run journal: what `repro serve` / `sweep` / `schedule`
+//! write through, and what `--resume` replays (ADR-010).
+//!
+//! Record kinds (one JSON object per WAL frame, discriminated by
+//! `"kind"`):
+//!
+//! * `start` — run identity: `scope` (`serve`/`sweep`/`schedule`), the
+//!   `job` hash, and the shard count `of` (0 for session scopes). A
+//!   resume validates identity before touching anything else, so a
+//!   journal can never be replayed into a different run.
+//! * `coordinator` — one per coordinator incarnation, carrying its
+//!   fencing `token` (0 for the first, predecessor max + 1 after). All
+//!   later records are tagged with the incarnation that wrote them, so
+//!   a resumed coordinator can attribute — and never double-charge —
+//!   work a predecessor left in flight: landed shards are replayed
+//!   into `SuiteMerge` (never re-assigned, never re-measured), while
+//!   in-flight assignments that never landed simply re-run under the
+//!   new token with fresh failure accounting.
+//! * `shard` — a landed suite shard, journaled *before* it is merged.
+//! * `variant` — one exhausted session pass (`RunLog`) for a sweep /
+//!   schedule variant, journaled before any policy is applied to it
+//!   (ADR-005: the whole 72-policy grid is derivable offline from this
+//!   one record, so resume re-runs nothing).
+//! * `stop` — a scheduler stop decision (variant, policy, attempts,
+//!   tokens), journaled before it is printed or written to `--out`; on
+//!   resume it is cross-checked against the re-derived decision.
+//! * `done` — the run completed; a resume of a done journal reassembles
+//!   output without spawning any work at all.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Mutex;
+
+use crate::agent::RunLog;
+use crate::eval::manifest::SuiteShard;
+use crate::util::json::Json;
+
+use super::format::{scan_journal, JournalWriter, Tail};
+
+/// A recovered `stop` record.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StopRecord {
+    pub label: String,
+    pub policy: String,
+    pub attempts: u64,
+    pub tokens: u64,
+}
+
+struct State {
+    writer: JournalWriter,
+    token: u64,
+    bound: bool,
+    done: bool,
+    torn_bytes: u64,
+    // recovered state (empty for a fresh journal)
+    start: Option<(String, String, usize)>, // (scope, job, of)
+    max_token: u64,
+    shards: Vec<SuiteShard>,
+    variants: BTreeMap<String, Json>,
+    stops: Vec<StopRecord>,
+}
+
+/// A durable write-ahead journal for one run. Everything the run acts
+/// on — a landed shard, an exhausted variant pass, a stop decision —
+/// is appended (and fsynced) here first, so `kill -9` at any point
+/// leaves a prefix that [`RunJournal::resume`] continues from with
+/// byte-identical output and zero re-measured landed work.
+pub struct RunJournal {
+    state: Mutex<State>,
+}
+
+fn get_u64(j: &Json, k: &str, what: &str) -> Result<u64, String> {
+    j.get(k).and_then(|v| v.as_u64()).ok_or_else(|| format!("journal: {what}: bad {k}"))
+}
+
+fn get_str<'a>(j: &'a Json, k: &str, what: &str) -> Result<&'a str, String> {
+    j.get(k).and_then(|v| v.as_str()).ok_or_else(|| format!("journal: {what}: bad {k}"))
+}
+
+impl RunJournal {
+    /// Start a fresh journal at `path` (truncating any existing file —
+    /// pass `--resume` to continue one instead).
+    pub fn create(path: impl AsRef<Path>) -> Result<RunJournal, String> {
+        let writer = JournalWriter::create(path)?;
+        Ok(RunJournal {
+            state: Mutex::new(State {
+                writer,
+                token: 0,
+                bound: false,
+                done: false,
+                torn_bytes: 0,
+                start: None,
+                max_token: 0,
+                shards: Vec::new(),
+                variants: BTreeMap::new(),
+                stops: Vec::new(),
+            }),
+        })
+    }
+
+    /// Recover the valid prefix of an existing journal. Corruption in
+    /// the committed prefix is an in-band error; a torn tail (crash
+    /// mid-append) is truncated away. The identity check against the
+    /// resuming run happens at [`RunJournal::bind`].
+    pub fn resume(path: impl AsRef<Path>) -> Result<RunJournal, String> {
+        let path = path.as_ref();
+        let scan = scan_journal(path)?;
+        let torn_bytes = match scan.tail {
+            Tail::Clean => 0,
+            Tail::Torn { dropped } => dropped,
+        };
+        let mut start: Option<(String, String, usize)> = None;
+        let mut max_token = 0u64;
+        let mut done = false;
+        let mut shards: Vec<SuiteShard> = Vec::new();
+        let mut shard_raw: BTreeMap<usize, String> = BTreeMap::new();
+        let mut variants: BTreeMap<String, Json> = BTreeMap::new();
+        let mut stops: Vec<StopRecord> = Vec::new();
+        for (n, r) in scan.records.iter().enumerate() {
+            let what = format!("record {n}");
+            match get_str(r, "kind", &what)? {
+                "start" => {
+                    if start.is_some() {
+                        return Err(format!("journal: {what}: duplicate start record"));
+                    }
+                    start = Some((
+                        get_str(r, "scope", &what)?.to_string(),
+                        get_str(r, "job", &what)?.to_string(),
+                        get_u64(r, "of", &what)? as usize,
+                    ));
+                }
+                "coordinator" => max_token = max_token.max(get_u64(r, "token", &what)?),
+                "shard" => {
+                    let index = get_u64(r, "index", &what)? as usize;
+                    let sj = r.get("shard").ok_or_else(|| format!("journal: {what}: missing shard"))?;
+                    let shard = SuiteShard::from_json(sj)
+                        .map_err(|e| format!("journal: {what}: {e}"))?;
+                    if shard.index != index {
+                        return Err(format!(
+                            "journal: {what}: index {index} does not match shard {}",
+                            shard.index
+                        ));
+                    }
+                    let raw = sj.to_string();
+                    match shard_raw.get(&index) {
+                        // a duplicate identical record is a benign replay
+                        // (e.g. a resumed coordinator raced its own crash);
+                        // a *conflicting* one means two coordinators wrote
+                        // this journal concurrently — refuse the lot
+                        Some(prev) if *prev == raw => {}
+                        Some(_) => {
+                            return Err(format!(
+                                "journal: {what}: conflicting records for shard {index} \
+                                 (two coordinators wrote this journal?)"
+                            ));
+                        }
+                        None => {
+                            shard_raw.insert(index, raw);
+                            shards.push(shard);
+                        }
+                    }
+                }
+                "variant" => {
+                    let label = get_str(r, "label", &what)?.to_string();
+                    let log =
+                        r.get("log").ok_or_else(|| format!("journal: {what}: missing log"))?;
+                    match variants.get(&label) {
+                        Some(prev) if prev.to_string() == log.to_string() => {}
+                        Some(_) => {
+                            return Err(format!(
+                                "journal: {what}: conflicting variant records for {label:?}"
+                            ));
+                        }
+                        None => {
+                            variants.insert(label, log.clone());
+                        }
+                    }
+                }
+                "stop" => stops.push(StopRecord {
+                    label: get_str(r, "label", &what)?.to_string(),
+                    policy: get_str(r, "policy", &what)?.to_string(),
+                    attempts: get_u64(r, "attempts", &what)?,
+                    tokens: get_u64(r, "tokens", &what)?,
+                }),
+                "done" => done = true,
+                other => {
+                    return Err(format!(
+                        "journal: {what}: unknown record kind {other:?} \
+                         (written by a newer build?)"
+                    ));
+                }
+            }
+        }
+        if start.is_none() {
+            return Err(format!(
+                "journal {}: no start record (torn at creation); delete it and start fresh",
+                path.display()
+            ));
+        }
+        let writer = JournalWriter::append_to(path, scan.valid_end)?;
+        Ok(RunJournal {
+            state: Mutex::new(State {
+                writer,
+                token: 0,
+                bound: false,
+                done,
+                torn_bytes,
+                start,
+                max_token,
+                shards,
+                variants,
+                stops,
+            }),
+        })
+    }
+
+    fn lock(&self) -> std::sync::MutexGuard<'_, State> {
+        self.state.lock().expect("run journal lock")
+    }
+
+    fn append(state: &mut State, payload: &Json) -> Result<(), String> {
+        state.writer.append(payload.to_string().as_bytes())
+    }
+
+    /// Bind the journal to this run's identity. A fresh journal writes
+    /// its `start` record here; a resumed one validates that (scope,
+    /// job, of) match what it recorded — refusing, in-band, to replay
+    /// into a different run. Either way a new `coordinator` record is
+    /// appended (token 0, or predecessor max + 1) and the recovered
+    /// landed shards are handed back for replay into `SuiteMerge`.
+    pub fn bind(&self, scope: &str, job: &str, of: usize) -> Result<Vec<SuiteShard>, String> {
+        let mut s = self.lock();
+        if s.bound {
+            return Err("journal: bind called twice".into());
+        }
+        match s.start.clone() {
+            None => {
+                let mut o = Json::obj();
+                o.set("kind", "start").set("scope", scope).set("job", job).set("of", of);
+                Self::append(&mut s, &o)?;
+                s.start = Some((scope.to_string(), job.to_string(), of));
+                s.token = 0;
+            }
+            Some((jscope, jjob, jof)) => {
+                if jscope != scope || jjob != job || jof != of {
+                    return Err(format!(
+                        "journal: belongs to a different run (journal: {jscope} job {jjob} \
+                         of {jof}; this run: {scope} job {job} of {of}) — resume with the \
+                         same spec, seed, and shard count"
+                    ));
+                }
+                s.token = s.max_token + 1;
+            }
+        }
+        let token = s.token;
+        let mut o = Json::obj();
+        o.set("kind", "coordinator").set("token", token);
+        Self::append(&mut s, &o)?;
+        s.max_token = s.max_token.max(token);
+        s.bound = true;
+        Ok(std::mem::take(&mut s.shards))
+    }
+
+    /// This incarnation's fencing token (valid after [`RunJournal::bind`]).
+    pub fn token(&self) -> u64 {
+        self.lock().token
+    }
+
+    /// Whether the journaled run already completed.
+    pub fn done(&self) -> bool {
+        self.lock().done
+    }
+
+    /// Bytes of torn tail discarded at resume (0 for a clean journal).
+    pub fn torn_bytes(&self) -> u64 {
+        self.lock().torn_bytes
+    }
+
+    /// Journal a landed shard. On `Ok(())` the record is durable —
+    /// only then may the shard be merged.
+    pub fn record_shard(&self, shard: &SuiteShard) -> Result<(), String> {
+        let mut s = self.lock();
+        let mut o = Json::obj();
+        o.set("kind", "shard")
+            .set("token", s.token)
+            .set("index", shard.index)
+            .set("shard", shard.to_json());
+        Self::append(&mut s, &o)
+    }
+
+    /// Run-or-recover one exhausted variant pass: if the journal holds
+    /// a `variant` record for `label`, decode and return it (`true` =
+    /// recovered, zero evaluator calls); otherwise run `live` and
+    /// journal its log before returning it.
+    pub fn variant_log(
+        &self,
+        label: &str,
+        live: impl FnOnce() -> RunLog,
+    ) -> Result<(RunLog, bool), String> {
+        let recovered = self.lock().variants.get(label).cloned();
+        if let Some(j) = recovered {
+            let mut plans = crate::dsl::PlanCache::new();
+            let log = RunLog::from_json(&j, &mut plans)
+                .map_err(|e| format!("journal: variant {label:?}: {e}"))?;
+            return Ok((log, true));
+        }
+        let log = live();
+        let mut s = self.lock();
+        let mut o = Json::obj();
+        o.set("kind", "variant")
+            .set("token", s.token)
+            .set("label", label)
+            .set("log", log.to_json());
+        Self::append(&mut s, &o)?;
+        Ok((log, false))
+    }
+
+    /// Journal a scheduler stop decision before acting on it. On
+    /// resume the decision must be *re-derivable*: if the journal
+    /// already holds a stop for this (variant, policy) with different
+    /// numbers, the journal and the build disagree and the mismatch is
+    /// an in-band error rather than silently divergent output.
+    pub fn record_stop(
+        &self,
+        label: &str,
+        policy: &str,
+        attempts: u64,
+        tokens: u64,
+    ) -> Result<(), String> {
+        let mut s = self.lock();
+        if let Some(prev) =
+            s.stops.iter().find(|r| r.label == label && r.policy == policy)
+        {
+            if prev.attempts != attempts || prev.tokens != tokens {
+                return Err(format!(
+                    "journal: stop decision for {label:?} under {policy} diverged on resume \
+                     (journaled {} attempts / {} tokens, re-derived {attempts} / {tokens})",
+                    prev.attempts, prev.tokens
+                ));
+            }
+            return Ok(()); // identical decision already journaled
+        }
+        let mut o = Json::obj();
+        o.set("kind", "stop")
+            .set("token", s.token)
+            .set("label", label)
+            .set("policy", policy)
+            .set("attempts", attempts)
+            .set("tokens", tokens);
+        Self::append(&mut s, &o)?;
+        s.stops.push(StopRecord {
+            label: label.to_string(),
+            policy: policy.to_string(),
+            attempts,
+            tokens,
+        });
+        Ok(())
+    }
+
+    /// Journal run completion. Idempotent across incarnations.
+    pub fn record_done(&self) -> Result<(), String> {
+        let mut s = self.lock();
+        if s.done {
+            return Ok(());
+        }
+        let mut o = Json::obj();
+        o.set("kind", "done").set("token", s.token);
+        Self::append(&mut s, &o)?;
+        s.done = true;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp(name: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("ucutlass_jrun_{}_{name}", std::process::id()))
+    }
+
+    #[test]
+    fn fresh_bind_then_resume_carries_tokens_and_done() {
+        let p = tmp("bind.journal");
+        let _ = std::fs::remove_file(&p);
+        {
+            let j = RunJournal::create(&p).unwrap();
+            let shards = j.bind("serve", "cafe", 4).unwrap();
+            assert!(shards.is_empty());
+            assert_eq!(j.token(), 0);
+            assert!(!j.done());
+        }
+        {
+            let j = RunJournal::resume(&p).unwrap();
+            assert!(!j.done());
+            let shards = j.bind("serve", "cafe", 4).unwrap();
+            assert!(shards.is_empty());
+            assert_eq!(j.token(), 1, "resume fences with predecessor max + 1");
+            j.record_done().unwrap();
+        }
+        {
+            let j = RunJournal::resume(&p).unwrap();
+            assert!(j.done(), "done survives");
+            let _ = j.bind("serve", "cafe", 4).unwrap();
+            assert_eq!(j.token(), 2);
+        }
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn bind_refuses_a_different_run_in_band() {
+        let p = tmp("ident.journal");
+        let _ = std::fs::remove_file(&p);
+        {
+            let j = RunJournal::create(&p).unwrap();
+            j.bind("serve", "cafe", 4).unwrap();
+        }
+        for (scope, job, of) in
+            [("sweep", "cafe", 4), ("serve", "beef", 4), ("serve", "cafe", 2)]
+        {
+            let j = RunJournal::resume(&p).unwrap();
+            let err = j.bind(scope, job, of).unwrap_err();
+            assert!(err.contains("different run"), "got: {err}");
+        }
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn resume_without_a_start_record_is_an_in_band_error() {
+        let p = tmp("nostart.journal");
+        let _ = std::fs::remove_file(&p);
+        {
+            let _ = RunJournal::create(&p).unwrap(); // header only, never bound
+        }
+        let err = RunJournal::resume(&p).unwrap_err();
+        assert!(err.contains("no start record"), "got: {err}");
+        let _ = std::fs::remove_file(&p);
+    }
+
+    #[test]
+    fn stop_decisions_cross_check_on_resume() {
+        let p = tmp("stop.journal");
+        let _ = std::fs::remove_file(&p);
+        {
+            let j = RunJournal::create(&p).unwrap();
+            j.bind("schedule", "cafe", 0).unwrap();
+            j.record_stop("v", "e=1 w=8", 100, 5000).unwrap();
+        }
+        {
+            let j = RunJournal::resume(&p).unwrap();
+            j.bind("schedule", "cafe", 0).unwrap();
+            // same decision re-derived: fine (and not re-journaled)
+            j.record_stop("v", "e=1 w=8", 100, 5000).unwrap();
+            // a different policy is a new decision
+            j.record_stop("v", "e=0.5 w=4", 90, 4500).unwrap();
+            // a diverging re-derivation is an in-band error
+            let err = j.record_stop("v", "e=1 w=8", 99, 5000).unwrap_err();
+            assert!(err.contains("diverged"), "got: {err}");
+        }
+        let _ = std::fs::remove_file(&p);
+    }
+}

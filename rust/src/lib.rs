@@ -47,6 +47,13 @@
 //!   store → live backend so no measurement is ever paid for twice
 //!   across runs, users, or fleet nodes; `repro cache
 //!   stats|export|import|compact` bridges losslessly to JSONL v2.
+//! * [`journal`] — crash-safe runs (ADR-010): the durable WAL-style run
+//!   journal behind `repro serve|sweep|schedule --journal PATH
+//!   [--resume]` (every landed shard / exhausted variant pass / stop
+//!   decision is journaled before it is acted on; `kill -9` at any
+//!   point resumes to byte-identical output with zero re-measured
+//!   work), the coordinator lease that lets orphaned workers
+//!   self-terminate, and the store repair/GC maintenance path.
 //! * [`fleet`] — the fault-tolerant fleet coordinator behind `repro serve`
 //!   (ADR-007): N `repro worker` subprocesses driven over a version-gated
 //!   line protocol with deadlines, bounded retries, straggler re-issue,
@@ -82,6 +89,7 @@ pub mod scheduler;
 pub mod exec;
 pub mod eval;
 pub mod store;
+pub mod journal;
 pub mod fleet;
 pub mod integrity;
 pub mod metrics;

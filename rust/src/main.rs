@@ -15,7 +15,8 @@
 //! repro serve --workers N [--deadline-ms D] [--retries R] ...      fleet coordinator (ADR-007)
 //! repro worker [--faults SPEC] [--fault-offset N]                  one fleet worker (internal)
 //! repro <exp|run|schedule|sweep> ... --cache PATH [--offline]      persistent eval cache (ADR-008)
-//! repro cache <stats|export|import|compact> ...                    inspect / bridge a cache store
+//! repro <serve|sweep|schedule> ... --journal PATH [--resume]       crash-safe runs (ADR-010)
+//! repro cache <stats|export|import|compact|repair|gc> ...          inspect / bridge / maintain a cache store
 //! repro list                                                 list the 59 problems
 //! ```
 //!
@@ -33,10 +34,11 @@ use ucutlass_repro::eval::{DynEvaluator, TraceMonitor};
 use ucutlass_repro::exec;
 use ucutlass_repro::experiments::figures::{self, ExpCtx};
 use ucutlass_repro::fleet::{
-    run_fleet, subprocess_worker_factory, worker_loop, EventLog, FaultPlan, FleetConfig,
-    WorkerOpts,
+    run_fleet_journaled, subprocess_worker_factory, worker_loop, EventLog, FaultPlan,
+    FleetConfig, WorkerOpts,
 };
 use ucutlass_repro::experiments::Bench;
+use ucutlass_repro::journal::{scan_journal, LeaseKeeper, LeaseMonitor, RunJournal};
 use ucutlass_repro::integrity::IntegrityPipeline;
 use ucutlass_repro::kernelbench;
 use ucutlass_repro::metrics;
@@ -46,6 +48,7 @@ use ucutlass_repro::sol;
 use ucutlass_repro::store::{
     self, cache_session, CacheSessionMode, EvalStore, StoreMonitor,
 };
+use ucutlass_repro::util::fnv64;
 use ucutlass_repro::util::json::Json;
 use ucutlass_repro::{analyze, dsl, runtime};
 
@@ -154,6 +157,25 @@ fn run(args: &[String]) -> Result<(), String> {
         return Err(
             "--cache and --trace are mutually exclusive oracles (bridge between them with \
              `repro cache export|import`)"
+                .into(),
+        );
+    }
+    if opts.contains_key("journal")
+        && !matches!(cmd, Some("serve") | Some("sweep") | Some("schedule") | Some("cache"))
+    {
+        return Err(
+            "--journal is only meaningful under `repro serve|sweep|schedule` (crash-safe \
+             runs, ADR-010) and `repro cache gc`"
+                .into(),
+        );
+    }
+    if opts.contains_key("resume")
+        && !(opts.contains_key("journal")
+            && matches!(cmd, Some("serve") | Some("sweep") | Some("schedule")))
+    {
+        return Err(
+            "--resume needs --journal PATH under `repro serve|sweep|schedule` (continue \
+             that journaled run)"
                 .into(),
         );
     }
@@ -312,7 +334,9 @@ fn cmd_cached(
 /// travel as shortest-roundtrip decimals that reparse bit-identically).
 fn cmd_cache(pos: &[String], opts: &HashMap<String, String>) -> Result<(), String> {
     const USAGE: &str = "usage: repro cache stats STORE | cache export STORE TRACE | \
-                         cache import TRACE STORE | cache compact STORE --out STORE2";
+                         cache import TRACE STORE | cache compact STORE --out STORE2 | \
+                         cache repair STORE --out STORE2 | \
+                         cache gc STORE --max-bytes N --out STORE2 [--journal JOURNAL]";
     match pos.get(1).map(String::as_str) {
         Some("stats") => {
             let path = pos.get(2).ok_or(format!("cache stats STORE ({USAGE})"))?;
@@ -381,6 +405,70 @@ fn cmd_cache(pos: &[String], opts: &HashMap<String, String>) -> Result<(), Strin
             );
             Ok(())
         }
+        // `cache repair` (ADR-010): recover the checksummed-valid record
+        // prefix of a store torn mid-append or mid-finish — where open()
+        // correctly refuses in-band — and rebuild index + trailer at dst.
+        // On an intact store this is exactly `cache compact`.
+        Some("repair") => {
+            let src = pos.get(2).ok_or(format!("cache repair STORE --out STORE2 ({USAGE})"))?;
+            let dst = match opts.get("out") {
+                Some(p) if p != "true" => p,
+                _ => return Err(format!("cache repair needs --out STORE2 ({USAGE})")),
+            };
+            let rep = store::repair_store(src, dst)?;
+            println!(
+                "repaired {src} ({} bytes) into {dst} ({} bytes): {} record(s) recovered, \
+                 {} byte(s) past the last intact record dropped (index + trailer rebuilt)",
+                rep.bytes_in, rep.bytes_out, rep.records, rep.dropped_bytes
+            );
+            if let Some(why) = &rep.stopped {
+                println!("  record scan stopped at: {why}");
+            }
+            Ok(())
+        }
+        // `cache gc` (ADR-010): evict least-recently-served records until
+        // the rewrite fits --max-bytes. Recency comes from the advisory
+        // `<store>.lru` sidecar cached sessions append; an under-budget
+        // store rewrites byte-identically. With --journal the GC refuses,
+        // in-band, to run against a journal of a still-active run.
+        Some("gc") => {
+            const GC: &str = "cache gc STORE --max-bytes N --out STORE2 [--journal JOURNAL]";
+            let src = pos.get(2).ok_or(format!("{GC} ({USAGE})"))?;
+            let max_bytes: u64 = opt_require(opts, "max-bytes", GC)?;
+            let dst = match opts.get("out") {
+                Some(p) if p != "true" => p,
+                _ => return Err(format!("cache gc needs --out STORE2 ({USAGE})")),
+            };
+            if let Some(jp) = opts.get("journal") {
+                if jp == "true" {
+                    return Err(format!("--journal needs a file path ({GC})"));
+                }
+                let scan = scan_journal(jp)?;
+                let done = scan
+                    .records
+                    .iter()
+                    .any(|r| r.get("kind").and_then(|k| k.as_str()) == Some("done"));
+                if !done {
+                    return Err(format!(
+                        "cache gc: journal {jp} records an active (not done) run — finish \
+                         or --resume it first, or gc without --journal"
+                    ));
+                }
+            }
+            let store = EvalStore::open(src)?;
+            let recency =
+                store::read_lru_sidecar(store::lru_sidecar_path(std::path::Path::new(src)));
+            let rep = store::gc_store(&store, max_bytes, dst, &recency, &Default::default())?;
+            println!(
+                "gc {src} ({} bytes) into {dst} ({} bytes, budget {max_bytes}): kept \
+                 {} record(s), evicted {} least-recently-served",
+                rep.bytes_in, rep.bytes_out, rep.kept, rep.evicted
+            );
+            if rep.evicted == 0 {
+                println!("  under budget: output is the identity rewrite (same records, same order)");
+            }
+            Ok(())
+        }
         _ => Err(USAGE.into()),
     }
 }
@@ -398,8 +486,9 @@ repro — µCUTLASS + SOL-guidance reproduction (see README.md)
             [--problems L1-1,L2-76] [--seed N] [--jobs N]
   repro validate [--artifacts artifacts] [--problem NAME] [--seed N]
   repro schedule --tier <mini|mid|max> [--eps 100] [--window 8] [--seed N] [--jobs N]
+            [--journal PATH [--resume]]
   repro sweep [--tier <mini|mid|max>] [--trace PATH [--live]] [--seed N]
-            [--jobs N] [--out FILE]
+            [--jobs N] [--journal PATH [--resume]] [--out FILE]
   repro record <exp|run|schedule|sweep> [...] --trace PATH
   repro replay <exp|run|schedule|sweep> [...] --trace PATH [--live]
   repro shard --index I --of N --tier <mini|mid|max> [--dsl] [--sol <orch|prompt>]
@@ -407,13 +496,16 @@ repro — µCUTLASS + SOL-guidance reproduction (see README.md)
   repro merge <shard.json>... [--out FILE]
   repro serve --workers N [--deadline-ms 30000] [--retries 3] [--quarantine-after 3]
             [--shards S] [--eps 100] --tier <mini|mid|max> [--dsl] [--sol <orch|prompt>]
-            [--seed N] [--faults \"0=0:crash;1=2:garbage\"] [--events FILE] [--out FILE]
+            [--seed N] [--faults \"0=0:crash;1=2:garbage\"] [--events FILE]
+            [--journal PATH [--resume]] [--out FILE]
   repro worker [--faults ORD:FAULT,..] [--fault-offset N]   (spawned by serve)
   repro <exp|run|schedule|sweep|serve> [...] --cache PATH [--offline]
   repro cache stats STORE
   repro cache export STORE TRACE.jsonl
   repro cache import TRACE.jsonl STORE
   repro cache compact STORE --out STORE2
+  repro cache repair STORE --out STORE2
+  repro cache gc STORE --max-bytes N --out STORE2 [--journal JOURNAL]
   repro list
 
   --jobs N fans (variant, problem, seed) tasks across N worker threads
@@ -450,6 +542,19 @@ repro — µCUTLASS + SOL-guidance reproduction (see README.md)
   bridges it losslessly to/from the JSONL v2 diagnostic format
   (export/import; floats survive bit-identically), and rewrites it
   densely with full verification (compact).
+  --journal PATH makes serve/sweep/schedule crash-safe (ADR-010): every
+  landed shard, exhausted session pass, and stop decision is appended
+  (checksummed, fsynced) to a write-ahead journal before it is acted on,
+  and a lease file beside the journal is heartbeat so workers orphaned
+  by a coordinator crash self-terminate within one deadline. After kill
+  -9 at ANY point, the same command plus --resume recovers the valid
+  journal prefix (a torn tail is dropped; corruption is an in-band
+  error) and continues to output byte-identical to the uninterrupted
+  run, re-measuring no landed key. `repro cache repair` recovers the
+  checksummed-valid record prefix of a store torn mid-write (rebuilding
+  index + trailer); `repro cache gc` evicts least-recently-served
+  records to fit --max-bytes, is the identity on an under-budget store,
+  and refuses to run against a journal of a still-active run.
   sweep replays the full 72-policy fig8/fig9 scheduler grid from ONE
   exhausted session pass per variant (ADR-005): sessions are driven once
   to budget exhaustion, every (eps, w) stopping rule is applied offline,
@@ -784,6 +889,43 @@ fn cmd_merge(pos: &[String], opts: &HashMap<String, String>) -> Result<(), Strin
     Ok(())
 }
 
+/// Open the ADR-010 run journal named by `--journal PATH [--resume]`.
+/// No flag -> no journal. Without `--resume` a fresh journal is started
+/// (truncating any existing file); with it the valid prefix of the
+/// existing journal is recovered — a torn tail (crash mid-append) is
+/// reported and dropped, while corruption inside the committed prefix
+/// stays an in-band error.
+fn journal_from_opts(opts: &HashMap<String, String>) -> Result<Option<RunJournal>, String> {
+    let path = match opts.get("journal") {
+        None => return Ok(None),
+        Some(p) if p == "true" => {
+            return Err("--journal needs a file path (--journal PATH [--resume])".into())
+        }
+        Some(p) => p,
+    };
+    if opts.contains_key("resume") {
+        let j = RunJournal::resume(path)?;
+        if j.torn_bytes() > 0 {
+            println!(
+                "journal {path}: dropped {} torn tail byte(s) (crash mid-append)",
+                j.torn_bytes()
+            );
+        }
+        Ok(Some(j))
+    } else {
+        Ok(Some(RunJournal::create(path)?))
+    }
+}
+
+/// The job identity a sweep/schedule journal is bound to: seed plus the
+/// exact variant set the command will run. A resume recomputes it and
+/// [`RunJournal::bind`] refuses a mismatch in-band, so a journal can
+/// never replay into a different spec, seed, or variant set. (`repro
+/// serve` hashes its full `SuiteWork` instead, inside the coordinator.)
+fn journal_job(scope: &str, seed: u64, detail: &str) -> String {
+    format!("{:016x}", fnv64(format!("{scope} seed={seed:x} {detail}").as_bytes()))
+}
+
 /// `repro serve` (ADR-007): run a suite evaluation across a fleet of
 /// `repro worker` subprocesses with deadlines, bounded retries, straggler
 /// re-issue, and quarantine. The merged output is field-for-field what a
@@ -792,7 +934,7 @@ fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<(), String> {
     const USAGE: &str = "repro serve --workers N [--deadline-ms D] [--retries R] \
                          [--quarantine-after K] [--shards S] [--eps PCT] [--tier T] [--dsl] \
                          [--sol orch|prompt] [--faults SLOT=ORD:FAULT,..;..] [--events FILE] \
-                         [--cache PATH [--offline]] [--out FILE]";
+                         [--cache PATH [--offline]] [--journal PATH [--resume]] [--out FILE]";
     let workers: usize = opt_parse(opts, "workers", 2)?;
     if workers == 0 {
         return Err(format!("--workers must be >= 1 ({USAGE})"));
@@ -850,14 +992,40 @@ fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<(), String> {
             Some(monitor)
         }
     };
+    // `--journal PATH [--resume]` (ADR-010): every landed shard is
+    // journaled (fsynced) before it is merged, so a killed coordinator
+    // resumes with byte-identical output and zero re-measured landed
+    // keys. While the run is live, a lease file next to the journal is
+    // heartbeat every deadline/4; workers get `--lease`/`--lease-ms` so
+    // any orphaned by a coordinator crash self-terminate within one
+    // deadline instead of spinning forever.
+    let journal = journal_from_opts(opts)?;
+    let _lease = match (&journal, opts.get("journal")) {
+        (Some(_), Some(jpath)) => {
+            let lease_path = format!("{jpath}.lease");
+            let interval = (cfg.deadline / 4).clamp(
+                std::time::Duration::from_millis(10),
+                std::time::Duration::from_secs(1),
+            );
+            worker_args.extend([
+                "--lease".to_string(),
+                lease_path.clone(),
+                "--lease-ms".to_string(),
+                cfg.deadline.as_millis().to_string(),
+            ]);
+            Some(LeaseKeeper::start(&lease_path, 0, interval)?)
+        }
+        _ => None,
+    };
     let work = SuiteWork::single(spec, None, seed, bench.problems.len());
     let exe = std::env::current_exe().map_err(|e| format!("current_exe: {e}"))?;
-    let outcome = run_fleet(
+    let outcome = run_fleet_journaled(
         &bench,
         &work,
         &cfg,
         subprocess_worker_factory(exe, fault_specs, worker_args),
         &events,
+        journal.as_ref(),
     )
     .map_err(|e| e.to_string())?;
     events.flush();
@@ -867,11 +1035,11 @@ fn cmd_serve(opts: &HashMap<String, String>, seed: u64) -> Result<(), String> {
     }
     let st = outcome.stats;
     println!(
-        "fleet: {} workers, {} shards merged ({} assigns, {} retries, {} timeouts, \
-         {} duplicates discarded, {} respawns, {} quarantined); output is field-for-field \
-         a single-process run of the same job (seed {seed})",
-        workers, st.shards, st.assigns, st.retries, st.timeouts, st.duplicates, st.respawns,
-        st.quarantines
+        "fleet: {} workers, {} shards merged ({} recovered from journal, {} assigns, \
+         {} retries, {} timeouts, {} duplicates discarded, {} respawns, {} quarantined); \
+         output is field-for-field a single-process run of the same job (seed {seed})",
+        workers, st.shards, st.recovered, st.assigns, st.retries, st.timeouts, st.duplicates,
+        st.respawns, st.quarantines
     );
     // coordinator-side cache verdict before --out is persisted (worker
     // processes keep their own counters; an offline worker that misses
@@ -916,7 +1084,38 @@ fn cmd_worker(opts: &HashMap<String, String>) -> Result<(), String> {
             Some(monitor)
         }
     };
-    let wopts = WorkerOpts { faults, start_ordinal };
+    // `--lease PATH --lease-ms N` forwarded by a journaled `repro serve`
+    // (ADR-010): watch the coordinator's heartbeat and exit once it goes
+    // stale. The worker loop checks between requests; a detached watchdog
+    // covers the cases that check can't reach (blocked reading stdin from
+    // a dead-but-unreaped coordinator, compute-bound mid-shard, scripted
+    // hang faults) by polling every timeout/4 and exiting the process.
+    let lease = match opts.get("lease") {
+        None => None,
+        Some(p) if p == "true" => return Err("worker --lease needs a file path".into()),
+        Some(p) => {
+            let ms: u64 = opt_parse(opts, "lease-ms", 30_000u64)?;
+            let timeout = std::time::Duration::from_millis(ms.max(1));
+            let mut watchdog = LeaseMonitor::new(p, timeout);
+            let poll = (timeout / 4).clamp(
+                std::time::Duration::from_millis(10),
+                std::time::Duration::from_millis(500),
+            );
+            std::thread::Builder::new()
+                .name("lease-watchdog".into())
+                .spawn(move || loop {
+                    std::thread::sleep(poll);
+                    if watchdog.stale() {
+                        eprintln!("worker: coordinator lease stale; exiting");
+                        // exit 0: orphan hygiene, not a worker fault
+                        std::process::exit(0);
+                    }
+                })
+                .map_err(|e| format!("worker: spawn lease watchdog: {e}"))?;
+            Some(LeaseMonitor::new(p, timeout))
+        }
+    };
+    let wopts = WorkerOpts { faults, start_ordinal, lease };
     let kill = std::sync::atomic::AtomicBool::new(false);
     let stdin = std::io::stdin();
     let stdout = std::io::stdout();
@@ -995,9 +1194,46 @@ fn cmd_schedule(
     // provably equal to running the policy online (scheduler determinism
     // tests + the sweep golden test), at one session pass instead of two
     // (and one instead of 72 when sweeping the grid).
-    let run = scheduler::sweep_sessions(&env, &spec, seed, jobs, &pipeline, seed);
+    //
+    // With `--journal` (ADR-010) that one exhausted pass — the only
+    // evaluator-touching step — is journaled before any policy is
+    // applied, so a killed run resumes from the record with zero
+    // evaluator calls and every outcome below recomputed identically.
+    let journal = journal_from_opts(opts)?;
+    if let Some(j) = &journal {
+        let job = journal_job("schedule", seed, &format!("variant={}", spec.label()));
+        j.bind("schedule", &job, 0)?;
+    }
+    let run = match &journal {
+        None => scheduler::sweep_sessions(&env, &spec, seed, jobs, &pipeline, seed),
+        Some(j) => {
+            let (log, recovered) = j.variant_log(&spec.label(), || {
+                scheduler::sweep_sessions(&env, &spec, seed, jobs, &pipeline, seed).log
+            })?;
+            if recovered {
+                println!(
+                    "journal: recovered exhausted pass for {} (0 evaluator calls)",
+                    spec.label()
+                );
+            }
+            let sweep = scheduler::PolicySweep::over(&log, &pipeline, seed);
+            scheduler::SweepRun { spec, log, sweep }
+        }
+    };
     let online = run.outcome(&policy);
     let fixed = run.outcome(&Policy::fixed());
+    if let Some(j) = &journal {
+        // journal the stop decision before acting on (printing) it; on
+        // resume the re-derived decision is cross-checked against the
+        // record, so journal/build disagreement is an in-band error
+        // rather than silently divergent output
+        j.record_stop(
+            &spec.label(),
+            &policy.label(),
+            online.attempts_total() as u64,
+            online.tokens_used,
+        )?;
+    }
     // The engine runs orchestrated sessions with per-problem memory
     // (round-robin has no defined cross-problem order, ADR-002), so these
     // numbers are not comparable to `repro exp` figures, which thread
@@ -1029,6 +1265,9 @@ fn cmd_schedule(
          (online agreement is test-pinned; `repro sweep` grids 72 policies at the \
          same cost)"
     );
+    if let Some(j) = &journal {
+        j.record_done()?;
+    }
     Ok(())
 }
 
@@ -1080,10 +1319,35 @@ fn cmd_sweep(
         None => figures::pareto_variants(),
     };
     let pipeline = IntegrityPipeline::default();
+    // `--journal PATH [--resume]` (ADR-010): each variant's exhausted
+    // session pass — the only evaluator-touching step — is journaled
+    // before any policy is applied to it, so a killed sweep resumes
+    // paying only for the variants it had not yet finished.
+    let journal = journal_from_opts(opts)?;
+    if let Some(j) = &journal {
+        let labels: Vec<String> = variants.iter().map(|s| s.label()).collect();
+        let job = journal_job("sweep", seed, &format!("variants={}", labels.join("|")));
+        j.bind("sweep", &job, 0)?;
+    }
     let mut out_json = ucutlass_repro::util::json::Json::Arr(Vec::new());
     for spec in &variants {
         let env = bench.env();
-        let run = scheduler::sweep_sessions(&env, spec, seed, jobs, &pipeline, seed);
+        let run = match &journal {
+            None => scheduler::sweep_sessions(&env, spec, seed, jobs, &pipeline, seed),
+            Some(j) => {
+                let (log, recovered) = j.variant_log(&spec.label(), || {
+                    scheduler::sweep_sessions(&env, spec, seed, jobs, &pipeline, seed).log
+                })?;
+                if recovered {
+                    println!(
+                        "journal: recovered exhausted pass for {} (0 evaluator calls)",
+                        spec.label()
+                    );
+                }
+                let sweep = scheduler::PolicySweep::over(&log, &pipeline, seed);
+                scheduler::SweepRun { spec: *spec, log, sweep }
+            }
+        };
         println!(
             "== sweep: {} == (1 exhausted session pass, {} policies offline)",
             spec.label(),
@@ -1107,6 +1371,16 @@ fn cmd_sweep(
             "{}",
             table(&["policy", "attempts", "token savings", "geomean", "geo retention"], &rows)
         );
+        if let (Some(j), Some(best)) = (&journal, run.sweep.best(0.95)) {
+            // the per-variant stop decision (the winning policy under the
+            // fig9 retention floor), journaled before it is reported
+            j.record_stop(
+                &spec.label(),
+                &best.policy.label(),
+                best.attempts_used.iter().sum::<usize>() as u64,
+                best.tokens_used,
+            )?;
+        }
         match run.sweep.best(0.95) {
             Some(best) => println!(
                 "best (≥95% retention): {} -> {:.0}% token savings, {:.2}x efficiency gain",
@@ -1154,6 +1428,11 @@ fn cmd_sweep(
             println!("{}", m.summary());
         }
         m.check()?;
+    }
+    // done only after the oracle verdict: a miss-poisoned sweep must not
+    // be journaled as complete any more than it may persist --out
+    if let Some(j) = &journal {
+        j.record_done()?;
     }
     if let Some(out) = opts.get("out") {
         std::fs::write(out, out_json.to_string()).map_err(|e| e.to_string())?;

@@ -25,7 +25,7 @@
 //! written through too (`pass == false` is a real, deterministic answer
 //! under ADR-003, and skipping them would break byte-identity).
 
-use std::collections::HashMap;
+use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 
@@ -181,6 +181,10 @@ pub struct CachedEvaluator {
     writer: Option<Mutex<StoreWriter>>,
     live: Option<Box<DynEvaluator>>,
     monitor: StoreMonitor,
+    /// Keys served this session, in service order — flushed to the
+    /// `<store>.lru` recency sidecar at finish/drop so `repro cache gc`
+    /// can rank keys least-recently-served (ADR-010).
+    touched: Mutex<Vec<EvalKey>>,
 }
 
 impl CachedEvaluator {
@@ -201,7 +205,14 @@ impl CachedEvaluator {
             }
         };
         let monitor = StoreMonitor::new(path, offline);
-        Ok(CachedEvaluator { memory: Mutex::new(HashMap::new()), store, writer, live, monitor })
+        Ok(CachedEvaluator {
+            memory: Mutex::new(HashMap::new()),
+            store,
+            writer,
+            live,
+            monitor,
+            touched: Mutex::new(Vec::new()),
+        })
     }
 
     /// A handle onto this session's counters.
@@ -216,11 +227,41 @@ impl CachedEvaluator {
     }
 
     /// Write the index + trailer now instead of at drop, surfacing the
-    /// error to the caller.
+    /// error to the caller. Also flushes the recency sidecar.
     pub fn finish(&self) -> Result<(), String> {
+        self.flush_lru();
         match &self.writer {
             None => Ok(()),
             Some(w) => w.lock().expect("store writer lock").finish(),
+        }
+    }
+
+    /// Append this session's served keys to `<store>.lru`, oldest→newest,
+    /// deduped to each key's *last* service. Best-effort and advisory: a
+    /// failed write costs GC eviction quality, never correctness, so it
+    /// does not fail the session (unlike store I/O).
+    fn flush_lru(&self) {
+        use std::io::Write;
+        let keys = std::mem::take(&mut *self.touched.lock().expect("cache lru lock"));
+        if keys.is_empty() {
+            return;
+        }
+        let mut seen: HashSet<EvalKey> = HashSet::new();
+        let mut newest_first: Vec<EvalKey> = Vec::new();
+        for k in keys.iter().rev() {
+            if seen.insert(*k) {
+                newest_first.push(*k);
+            }
+        }
+        let mut text = String::with_capacity(newest_first.len() * 33);
+        for k in newest_first.iter().rev() {
+            text.push_str(&format!("{:032x}\n", k.0));
+        }
+        let path = super::lru_sidecar_path(self.store.path());
+        if let Ok(mut f) =
+            std::fs::OpenOptions::new().append(true).create(true).open(&path)
+        {
+            let _ = f.write_all(text.as_bytes());
         }
     }
 }
@@ -327,6 +368,10 @@ impl Evaluator for CachedEvaluator {
             }
         }
 
+        // every request was answered by some layer, so the whole batch
+        // counts as served for recency purposes
+        self.touched.lock().expect("cache lru lock").extend(keys.iter().copied());
+
         out.into_iter()
             .map(|r| r.expect("every request answered by some layer"))
             .collect()
@@ -335,6 +380,7 @@ impl Evaluator for CachedEvaluator {
 
 impl Drop for CachedEvaluator {
     fn drop(&mut self) {
+        self.flush_lru();
         if let Some(w) = &self.writer {
             if let Ok(mut w) = w.lock() {
                 if let Err(e) = w.finish() {

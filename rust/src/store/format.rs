@@ -38,8 +38,9 @@
 //!
 //! Crash story: records are flushed on a cadence, the index + trailer
 //! only on [`StoreWriter::finish`] (or drop). A store torn by a crash
-//! fails `open` in-band; re-record it, or rebuild from a JSONL export
-//! with `repro cache import`.
+//! fails `open` in-band; `repro cache repair` (ADR-010) recovers the
+//! valid record prefix and rebuilds the index footer — exactly the
+//! records whose payload checksums landed, never a corrupt one.
 
 use std::collections::{HashMap, HashSet};
 use std::fs::{File, OpenOptions};
@@ -175,10 +176,11 @@ fn decode_response(payload: &[u8]) -> Result<EvalResponse, String> {
     Ok(EvalResponse { key, value, pass, detail })
 }
 
-/// Decode the full `(request, response)` pair — export/stats/merge. Also
+/// Decode the full `(request, response)` pair — export/stats/merge, and
+/// the record-by-record scan of `repair_store` (ADR-010). Also
 /// re-derives the request's key and checks it against the stored one, so
 /// a record can never serve under an identity its request does not have.
-fn decode_pair(payload: &[u8]) -> Result<(EvalRequest, EvalResponse), String> {
+pub(crate) fn decode_pair(payload: &[u8]) -> Result<(EvalRequest, EvalResponse), String> {
     let resp = decode_response(payload)?;
     // re-walk the fixed fields (already validated above) to reach the
     // request JSON: key(16) + value(8) + pass(1), then the detail frame
@@ -479,6 +481,12 @@ impl EvalStore {
     pub(crate) fn record_checksum(&self, key: EvalKey) -> Result<Option<u64>, String> {
         let Some(e) = self.index.get(&key).copied() else { return Ok(None) };
         Ok(Some(fnv64(&self.read_record(key, e)?)))
+    }
+
+    /// Payload length of a key's record, from the index alone — the GC
+    /// size model prices each key without reading its record.
+    pub(crate) fn record_len(&self, key: EvalKey) -> Option<u32> {
+        self.index.get(&key).map(|e| e.len)
     }
 }
 

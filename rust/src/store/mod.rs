@@ -16,8 +16,12 @@
 //!   [`cache_session`] CLI constructor.
 //! - this file — bridges and maintenance: lossless export/import to the
 //!   JSONL v2 trace (which stays the diagnostic/interchange format),
-//!   `EvalKey::shard`-based partitioning, conflict-checked merge, and
-//!   compaction.
+//!   `EvalKey::shard`-based partitioning, conflict-checked merge,
+//!   compaction, crash repair ([`repair_store`] recovers the valid
+//!   record prefix of a store torn mid-append/mid-finish and rebuilds
+//!   its index footer), and budgeted eviction ([`gc_store`] drops
+//!   least-recently-served keys, ranked by the `<store>.lru` sidecar)
+//!   — the ADR-010 store-hardening pair behind `repro cache repair|gc`.
 //!
 //! Single-writer discipline: exactly one process may hold a store's
 //! [`StoreWriter`] (recording runs); any number may read. `repro serve`
@@ -167,6 +171,210 @@ pub fn compact_store(
         .map_err(|e| format!("store {}: {e}", dst.display()))?
         .len();
     Ok((wrote, store.file_bytes(), bytes_out))
+}
+
+/// What [`repair_store`] recovered.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct RepairReport {
+    /// Records carried into the rebuilt store.
+    pub records: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+    /// Trailing source bytes not decodable as records. For a store torn
+    /// mid-append this is the torn tail; for a *finished* store it is
+    /// the old index + trailer (rebuilt fresh at `dst`, so nothing is
+    /// actually lost).
+    pub dropped_bytes: u64,
+    /// Why the record scan stopped before the end of the file, if it did.
+    pub stopped: Option<String>,
+}
+
+/// Recover the valid record prefix of a store torn by a crash —
+/// mid-append, mid-index, or mid-trailer — into a fresh, fully indexed
+/// store at `dst` (ADR-010). The scan walks records from the header
+/// forward and keeps exactly those whose payload checksum and decode
+/// land; the first implausible length, checksum mismatch, or undecodable
+/// payload ends the prefix (on a finished store that point is the old
+/// index, so repair degenerates to [`compact_store`] and keeps every
+/// record). The source is never modified.
+pub fn repair_store(src: impl AsRef<Path>, dst: impl AsRef<Path>) -> Result<RepairReport, String> {
+    use format::{HEADER_BYTES, RECORD_HEADER_BYTES, STORE_MAGIC, STORE_VERSION as V};
+    let src = src.as_ref();
+    let dst = dst.as_ref();
+    let ctx = |e: String| format!("store {}: {e}", src.display());
+    let bytes = std::fs::read(src).map_err(|e| ctx(e.to_string()))?;
+    if bytes.len() < HEADER_BYTES as usize {
+        return Err(ctx(format!(
+            "truncated: {} bytes is smaller than a store header ({HEADER_BYTES})",
+            bytes.len()
+        )));
+    }
+    if bytes[..8] != STORE_MAGIC {
+        return Err(ctx("bad magic (not an eval store)".into()));
+    }
+    let version = u32::from_le_bytes(bytes[8..12].try_into().expect("4 bytes"));
+    if version != V {
+        return Err(ctx(format!(
+            "unsupported store version {version} (this build reads version {V})"
+        )));
+    }
+    let flags = u32::from_le_bytes(bytes[12..16].try_into().expect("4 bytes"));
+    if flags != 0 {
+        return Err(ctx(format!("unsupported store flags {flags:#x} (v1 defines none)")));
+    }
+
+    let mut w = StoreWriter::create(dst)?;
+    let mut pos = HEADER_BYTES as usize;
+    let mut records = 0u64;
+    let mut stopped = None;
+    while pos < bytes.len() {
+        let remaining = bytes.len() - pos;
+        if remaining < RECORD_HEADER_BYTES as usize {
+            stopped = Some(format!("incomplete record header at offset {pos}"));
+            break;
+        }
+        let len = u32::from_le_bytes(bytes[pos..pos + 4].try_into().expect("4 bytes")) as usize;
+        if len > MAX_RECORD_BYTES {
+            stopped = Some(format!("implausible record length {len} at offset {pos}"));
+            break;
+        }
+        let body = pos + RECORD_HEADER_BYTES as usize;
+        if remaining < RECORD_HEADER_BYTES as usize + len {
+            stopped = Some(format!("incomplete record at offset {pos}"));
+            break;
+        }
+        let checksum =
+            u64::from_le_bytes(bytes[pos + 4..pos + 12].try_into().expect("8 bytes"));
+        let payload = &bytes[body..body + len];
+        if crate::util::fnv64(payload) != checksum {
+            stopped = Some(format!("record checksum mismatch at offset {pos}"));
+            break;
+        }
+        let (req, resp) = match format::decode_pair(payload) {
+            Ok(pair) => pair,
+            Err(e) => {
+                stopped = Some(format!("undecodable record at offset {pos}: {e}"));
+                break;
+            }
+        };
+        w.append(&req, &resp)?;
+        records = w.len() as u64; // dedup-aware: first write wins
+        pos += RECORD_HEADER_BYTES as usize + len;
+    }
+    w.finish()?;
+    let bytes_out =
+        std::fs::metadata(dst).map_err(|e| format!("store {}: {e}", dst.display()))?.len();
+    Ok(RepairReport {
+        records,
+        bytes_in: bytes.len() as u64,
+        bytes_out,
+        dropped_bytes: (bytes.len() - pos) as u64,
+        stopped,
+    })
+}
+
+/// What [`gc_store`] kept and evicted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GcReport {
+    pub kept: u64,
+    pub evicted: u64,
+    pub bytes_in: u64,
+    pub bytes_out: u64,
+}
+
+/// Evict least-recently-served keys until the rewritten store fits
+/// `max_bytes` (ADR-010). `recency` lists served keys oldest→newest
+/// (the `<store>.lru` sidecar [`cached::CachedEvaluator`] appends);
+/// keys never served rank coldest, ties break by append order. `pinned`
+/// keys are never evicted. A store already under budget is rewritten
+/// identically (same records, same order — byte-for-byte the
+/// [`compact_store`] output). If even the pinned-only store would bust
+/// the budget the call fails in-band rather than evict a pinned key.
+pub fn gc_store(
+    store: &EvalStore,
+    max_bytes: u64,
+    dst: impl AsRef<Path>,
+    recency: &[EvalKey],
+    pinned: &std::collections::HashSet<EvalKey>,
+) -> Result<GcReport, String> {
+    use format::{HEADER_BYTES, INDEX_ENTRY_BYTES, RECORD_HEADER_BYTES, TRAILER_BYTES};
+    let cost = |key: EvalKey| -> u64 {
+        let len = store.record_len(key).expect("key from store.keys()") as u64;
+        RECORD_HEADER_BYTES + len + INDEX_ENTRY_BYTES
+    };
+    let mut total = HEADER_BYTES + TRAILER_BYTES;
+    for key in store.keys() {
+        total += cost(key);
+    }
+
+    // coldness order: never-served keys first (append order), then by
+    // last service, oldest first
+    let mut last_served: std::collections::HashMap<EvalKey, usize> =
+        std::collections::HashMap::new();
+    for (i, k) in recency.iter().enumerate() {
+        last_served.insert(*k, i);
+    }
+    let mut by_cold: Vec<EvalKey> = store.keys().collect();
+    by_cold.sort_by_key(|k| last_served.get(k).copied().map_or(0, |r| r as u64 + 1));
+
+    let mut evict: std::collections::HashSet<EvalKey> = std::collections::HashSet::new();
+    let mut candidates = by_cold.iter().filter(|k| !pinned.contains(k));
+    while total > max_bytes {
+        match candidates.next() {
+            Some(k) => {
+                total -= cost(*k);
+                evict.insert(*k);
+            }
+            None => {
+                return Err(format!(
+                    "gc: cannot fit {} under {max_bytes} bytes without evicting a \
+                     pinned key (pinned floor is {total} bytes)",
+                    store.path().display()
+                ));
+            }
+        }
+    }
+
+    let mut w = StoreWriter::create(dst)?;
+    let mut kept = 0u64;
+    for key in store.keys() {
+        if evict.contains(&key) {
+            continue;
+        }
+        let (req, resp) = store.get_pair(key)?.expect("indexed key has a record");
+        if w.append(&req, &resp)? {
+            kept += 1;
+        }
+    }
+    w.finish()?;
+    let dst = dst.as_ref();
+    let bytes_out =
+        std::fs::metadata(dst).map_err(|e| format!("store {}: {e}", dst.display()))?.len();
+    Ok(GcReport {
+        kept,
+        evicted: evict.len() as u64,
+        bytes_in: store.file_bytes(),
+        bytes_out,
+    })
+}
+
+/// Read a `<store>.lru` recency sidecar: one lowercase-hex [`EvalKey`]
+/// per line, appended oldest→newest by [`cached::CachedEvaluator`] as
+/// keys are served. A torn final line (crash mid-append) is skipped; so
+/// is anything unparseable — the sidecar is advisory (losing it only
+/// costs eviction quality, never correctness).
+pub fn read_lru_sidecar(path: impl AsRef<Path>) -> Vec<EvalKey> {
+    let Ok(text) = std::fs::read_to_string(path) else { return Vec::new() };
+    text.lines()
+        .filter_map(|l| u128::from_str_radix(l.trim(), 16).ok().map(EvalKey))
+        .collect()
+}
+
+/// The conventional recency-sidecar path for a store: `<store>.lru`.
+pub fn lru_sidecar_path(store: &Path) -> std::path::PathBuf {
+    let mut os = store.as_os_str().to_os_string();
+    os.push(".lru");
+    std::path::PathBuf::from(os)
 }
 
 /// Full structural self-check used by `repro cache stats` and the

@@ -1,0 +1,697 @@
+//! Crash-safety end-to-end tests (ADR-010 acceptance): a `kill -9` at
+//! any journal frame boundary — or inside a frame — must resume to
+//! output byte-identical to the uninterrupted run with zero landed keys
+//! re-measured; a store torn mid-append/mid-finish must refuse to open
+//! in-band while `repair` recovers exactly the checksummed-valid record
+//! prefix; GC must be the identity under budget and evict strictly
+//! least-recently-served over it; orphaned workers must exit on a stale
+//! coordinator lease; and the `repro` CLI must wire all of it.
+
+use std::collections::HashSet;
+use std::io::Read;
+use std::path::PathBuf;
+use std::process::{Command, Stdio};
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use ucutlass_repro::agent::controller::{ControllerKind, VariantSpec};
+use ucutlass_repro::agent::policy::TILES;
+use ucutlass_repro::agent::ModelTier;
+use ucutlass_repro::dsl::DType;
+use ucutlass_repro::eval::manifest::SuiteWork;
+use ucutlass_repro::eval::{EvalKey, EvalRequest, EvalResponse, Evaluator, OwnedAnalytic};
+use ucutlass_repro::exec::eval_variants;
+use ucutlass_repro::experiments::Bench;
+use ucutlass_repro::fleet::{
+    parse_events_jsonl, run_fleet_journaled, thread_worker_factory, EventLog, FaultPlan,
+    FleetConfig, FleetOutcome,
+};
+use ucutlass_repro::journal::{scan_journal, RunJournal, Tail, JOURNAL_HEADER_BYTES};
+use ucutlass_repro::perfmodel::CandidateConfig;
+use ucutlass_repro::store::{
+    cache_session, compact_store, gc_store, lru_sidecar_path, read_lru_sidecar, repair_store,
+    verify_store, CacheSessionMode, EvalStore, StoreWriter,
+};
+use ucutlass_repro::util::json::Json;
+use ucutlass_repro::util::rng::{stream, StreamPath};
+
+fn exe() -> PathBuf {
+    PathBuf::from(env!("CARGO_BIN_EXE_repro"))
+}
+
+fn tmp(name: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("ucutlass_journal_{}_{name}", std::process::id()))
+}
+
+/// Generous deadline (debug builds are slow), tight backoff: retries are
+/// instant, spurious timeouts are impossible.
+fn fast_cfg(workers: usize, shards: usize) -> FleetConfig {
+    FleetConfig {
+        workers,
+        shards,
+        deadline: Duration::from_secs(180),
+        backoff_base: Duration::from_millis(1),
+        backoff_cap: Duration::from_millis(20),
+        ..FleetConfig::default()
+    }
+}
+
+fn mini_work(bench: &Bench, seed: u64) -> SuiteWork {
+    SuiteWork::single(
+        VariantSpec::new(ControllerKind::Mi, false, ModelTier::Mini),
+        None,
+        seed,
+        bench.problems.len(),
+    )
+}
+
+fn golden_json(bench: &Bench, work: &SuiteWork) -> String {
+    let logs = eval_variants(bench, &work.work, work.seed, 1);
+    Json::Arr(logs.iter().map(|l| l.to_json()).collect()).to_string()
+}
+
+fn fleet_json(out: &FleetOutcome) -> String {
+    Json::Arr(out.logs.iter().map(|l| l.to_json()).collect()).to_string()
+}
+
+fn kind_count(records: &[Json], kind: &str) -> usize {
+    records
+        .iter()
+        .filter(|r| r.get("kind").and_then(|k| k.as_str()) == Some(kind))
+        .count()
+}
+
+// ---------------------------------------------------------------------------
+// The tentpole property: kill at every journal boundary, resume, compare
+
+#[test]
+fn fleet_resume_is_byte_identical_after_a_kill_at_every_journal_boundary() {
+    let bench = Arc::new(Bench::new());
+    let work = mini_work(&bench, 31);
+    let cfg = fast_cfg(2, 4);
+    let golden = golden_json(&bench, &work);
+
+    // the uninterrupted journaled run: its output is the golden, and its
+    // journal is the file we then "kill" at every boundary of
+    let p = tmp("boundary.journal");
+    let _ = std::fs::remove_file(&p);
+    {
+        let j = RunJournal::create(&p).unwrap();
+        let events = EventLog::new();
+        let out = run_fleet_journaled(
+            &bench,
+            &work,
+            &cfg,
+            thread_worker_factory(Arc::clone(&bench), Vec::new()),
+            &events,
+            Some(&j),
+        )
+        .unwrap_or_else(|e| panic!("journaled run must converge: {e}"));
+        assert_eq!(fleet_json(&out), golden, "journaling must not change the output");
+        assert_eq!(out.stats.recovered, 0, "a fresh journal recovers nothing");
+    }
+    let full = std::fs::read(&p).unwrap();
+    let scan = scan_journal(&p).unwrap();
+    assert_eq!(scan.tail, Tail::Clean);
+    assert_eq!(kind_count(&scan.records, "shard"), 4, "one record per landed shard");
+    assert_eq!(kind_count(&scan.records, "done"), 1);
+
+    // kill points: before the start record committed, after every frame,
+    // and inside a frame (a genuinely torn tail) for the first two frames
+    let mut cuts: Vec<u64> = vec![JOURNAL_HEADER_BYTES];
+    cuts.extend(scan.ends.iter().copied());
+    for k in 0..2usize.min(scan.ends.len()) {
+        cuts.push(scan.ends[k] - 3);
+    }
+
+    for cut in cuts {
+        let pk = tmp(&format!("boundary_cut_{cut}.journal"));
+        std::fs::write(&pk, &full[..cut as usize]).unwrap();
+        let pre = scan_journal(&pk).unwrap_or_else(|e| panic!("cut {cut} prefix scans: {e}"));
+        let landed = kind_count(&pre.records, "shard");
+        let was_done = kind_count(&pre.records, "done") == 1;
+        match RunJournal::resume(&pk) {
+            Err(e) => {
+                // only a journal killed before its start record committed
+                // refuses — and in-band, telling the user what to do
+                assert!(pre.records.is_empty(), "cut {cut}: unexpected refusal: {e}");
+                assert!(e.contains("no start record"), "cut {cut}: {e}");
+            }
+            Ok(j) => {
+                let events = EventLog::new();
+                let out = run_fleet_journaled(
+                    &bench,
+                    &work,
+                    &cfg,
+                    thread_worker_factory(Arc::clone(&bench), Vec::new()),
+                    &events,
+                    Some(&j),
+                )
+                .unwrap_or_else(|e| panic!("resume at cut {cut} must converge: {e}"));
+                assert_eq!(fleet_json(&out), golden, "cut {cut}: byte-identical resume");
+                // zero landed keys re-measured: every journaled shard is
+                // replayed (never assigned), only the rest merge live
+                assert_eq!(out.stats.recovered, landed, "cut {cut}");
+                assert_eq!(events.count("recovered"), landed, "cut {cut}");
+                assert_eq!(events.count("merge"), out.stats.shards - landed, "cut {cut}");
+                if was_done {
+                    assert_eq!(out.stats.assigns, 0, "cut {cut}: done journal spawns no work");
+                }
+            }
+        }
+        let _ = std::fs::remove_file(&pk);
+    }
+    let _ = std::fs::remove_file(&p);
+}
+
+#[test]
+fn fleet_resume_under_scripted_faults_is_byte_identical() {
+    let bench = Arc::new(Bench::new());
+    let work = mini_work(&bench, 47);
+    let cfg = fast_cfg(2, 4);
+    let golden = golden_json(&bench, &work);
+    let plans = || {
+        vec![FaultPlan::parse("0:crash,2:garbage").unwrap(), FaultPlan::default()]
+    };
+
+    // journal a full run whose workers crash and corrupt mid-flight
+    let p = tmp("faulty.journal");
+    let _ = std::fs::remove_file(&p);
+    {
+        let j = RunJournal::create(&p).unwrap();
+        let events = EventLog::new();
+        let out = run_fleet_journaled(
+            &bench,
+            &work,
+            &cfg,
+            thread_worker_factory(Arc::clone(&bench), plans()),
+            &events,
+            Some(&j),
+        )
+        .unwrap_or_else(|e| panic!("faulty journaled run must converge: {e}"));
+        assert_eq!(fleet_json(&out), golden);
+    }
+    // kill the coordinator mid-run (truncate to a boundary with some but
+    // not all shards landed) and resume under the SAME fault script
+    let scan = scan_journal(&p).unwrap();
+    let cut = scan.ends[scan.ends.len() / 2];
+    let full = std::fs::read(&p).unwrap();
+    std::fs::write(&p, &full[..cut as usize]).unwrap();
+    let landed = kind_count(&scan_journal(&p).unwrap().records, "shard");
+    let j = RunJournal::resume(&p).unwrap();
+    let events = EventLog::new();
+    let out = run_fleet_journaled(
+        &bench,
+        &work,
+        &cfg,
+        thread_worker_factory(Arc::clone(&bench), plans()),
+        &events,
+        Some(&j),
+    )
+    .unwrap_or_else(|e| panic!("faulty resume must converge: {e}"));
+    assert_eq!(fleet_json(&out), golden, "faults + mid-run kill still converge");
+    assert_eq!(out.stats.recovered, landed);
+    let _ = std::fs::remove_file(&p);
+}
+
+// ---------------------------------------------------------------------------
+// Store crash window: open refuses in-band, repair recovers the valid prefix
+
+/// Deterministic distinct request/response pairs (subset of the ADR-008
+/// sample set: every key distinct, every MeasureKind covered).
+fn sample_pairs(n: usize) -> Vec<(EvalRequest, EvalResponse)> {
+    let dtypes = [DType::Fp32, DType::Fp16, DType::Bf16];
+    let reqs: Vec<EvalRequest> = (0..n)
+        .map(|i| {
+            let p = i % 7;
+            let cfg = CandidateConfig::library(TILES[i % TILES.len()], dtypes[i % 3]);
+            let at =
+                StreamPath::new(42, &[stream::MEASURE, stream::PROP_CASE, p as u64, i as u64]);
+            match i % 5 {
+                0 => EvalRequest::baseline(p),
+                1 => EvalRequest::measured_baseline(p, at),
+                2 => EvalRequest::candidate(p, cfg),
+                3 => EvalRequest::measured(p, cfg, at),
+                _ => EvalRequest::sol_gap(p),
+            }
+        })
+        .collect();
+    let live = OwnedAnalytic::new();
+    let resps = live.eval_batch(&reqs);
+    reqs.into_iter().zip(resps).collect()
+}
+
+fn build_store(path: &PathBuf, pairs: &[(EvalRequest, EvalResponse)]) {
+    let _ = std::fs::remove_file(path);
+    let mut w = StoreWriter::create(path).unwrap_or_else(|e| panic!("{e}"));
+    for (req, resp) in pairs {
+        assert!(w.append(req, resp).unwrap_or_else(|e| panic!("{e}")));
+    }
+    w.finish().unwrap_or_else(|e| panic!("{e}"));
+}
+
+#[test]
+fn store_truncated_anywhere_fails_open_in_band_and_repair_recovers_the_valid_prefix() {
+    let pairs = sample_pairs(5);
+    let p = tmp("crashwin.store");
+    build_store(&p, &pairs);
+    let full = std::fs::read(&p).unwrap();
+    let keys: Vec<EvalKey> = EvalStore::open(&p).unwrap().keys().collect();
+
+    let rdst = tmp("crashwin_rep.store");
+    let full_rep = repair_store(&p, &rdst).unwrap();
+    assert_eq!(full_rep.records, pairs.len() as u64, "intact store repairs whole");
+    // on a finished store the record scan stops at the index region —
+    // which repair rebuilds fresh, so those dropped bytes lose nothing
+    assert!(full_rep.stopped.is_some());
+    assert!(full_rep.dropped_bytes > 0);
+    let data_end = full.len() as u64 - full_rep.dropped_bytes;
+
+    // enumerate the whole crash window byte by byte: through the record
+    // appends, into the index write, and through the trailer
+    let trunc = tmp("crashwin_cut.store");
+    let mut prev = 0u64;
+    for cut in 0..full.len() {
+        std::fs::write(&trunc, &full[..cut]).unwrap();
+        assert!(
+            EvalStore::open(&trunc).is_err(),
+            "cut {cut}: a torn store must never open (in-band refusal)"
+        );
+        match repair_store(&trunc, &rdst) {
+            Err(e) => {
+                assert!(cut < 16, "cut {cut}: only sub-header prefixes are unrepairable: {e}");
+                assert!(e.contains("truncated") || e.contains("header"), "cut {cut}: {e}");
+            }
+            Ok(rep) => {
+                assert!(cut >= 16);
+                let k = rep.records;
+                assert!(k >= prev, "cut {cut}: recovered count is monotone in prefix length");
+                assert!(k <= pairs.len() as u64);
+                if cut as u64 >= data_end {
+                    assert_eq!(k, pairs.len() as u64, "cut {cut}: all records precede the index");
+                }
+                prev = k;
+                let store = EvalStore::open(&rdst)
+                    .unwrap_or_else(|e| panic!("cut {cut}: repaired store must open: {e}"));
+                // exactly the checksummed-valid prefix, in append order,
+                // every byte re-verified
+                let got: Vec<EvalKey> = store.keys().collect();
+                assert_eq!(got, keys[..k as usize], "cut {cut}");
+                verify_store(&store).unwrap_or_else(|e| panic!("cut {cut}: {e}"));
+            }
+        }
+    }
+    assert_eq!(prev, pairs.len() as u64, "the crash window sweep reached a full recovery");
+    for f in [&p, &rdst, &trunc] {
+        let _ = std::fs::remove_file(f);
+    }
+}
+
+#[test]
+fn repair_of_an_intact_store_is_byte_identical_to_compaction() {
+    let pairs = sample_pairs(6);
+    let p = tmp("repair_eq.store");
+    build_store(&p, &pairs);
+    let c = tmp("repair_eq_c.store");
+    let r = tmp("repair_eq_r.store");
+    compact_store(&EvalStore::open(&p).unwrap(), &c).unwrap();
+    repair_store(&p, &r).unwrap();
+    assert_eq!(
+        std::fs::read(&c).unwrap(),
+        std::fs::read(&r).unwrap(),
+        "repair on an intact store IS compaction"
+    );
+    for f in [&p, &c, &r] {
+        let _ = std::fs::remove_file(f);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GC: identity under budget, least-recently-served eviction over it
+
+#[test]
+fn gc_is_the_identity_under_budget_and_evicts_least_recently_served_over_it() {
+    let pairs = sample_pairs(8);
+    let p = tmp("gc.store");
+    build_store(&p, &pairs);
+    let store = EvalStore::open(&p).unwrap();
+    let keys: Vec<EvalKey> = store.keys().collect();
+
+    // under budget: byte-for-byte the compaction (identity rewrite)
+    let g1 = tmp("gc_id.store");
+    let c1 = tmp("gc_id_c.store");
+    let rep = gc_store(&store, u64::MAX, &g1, &[], &HashSet::new()).unwrap();
+    assert_eq!(rep.evicted, 0);
+    assert_eq!(rep.kept, keys.len() as u64);
+    compact_store(&store, &c1).unwrap();
+    assert_eq!(std::fs::read(&g1).unwrap(), std::fs::read(&c1).unwrap());
+
+    // recency: keys[3] was served, then keys[1] (hottest). Coldness is
+    // never-served first (append order), then by last-served position.
+    let recency = vec![keys[3], keys[1]];
+    let cold: Vec<EvalKey> = keys
+        .iter()
+        .copied()
+        .filter(|k| *k != keys[3] && *k != keys[1])
+        .chain([keys[3], keys[1]])
+        .collect();
+    let bytes_full = std::fs::metadata(&g1).unwrap().len();
+    let g2 = tmp("gc_evict.store");
+    let rep = gc_store(&store, bytes_full - 1, &g2, &recency, &HashSet::new()).unwrap();
+    assert!(rep.evicted >= 1, "one byte over budget evicts at least one record");
+    assert_eq!(rep.kept + rep.evicted, keys.len() as u64);
+    assert!(rep.bytes_out <= bytes_full - 1, "the rewrite fits the budget");
+    // exactly the coldest `evicted` keys go; survivors keep append order
+    let survivors: HashSet<EvalKey> = cold[rep.evicted as usize..].iter().copied().collect();
+    let got = EvalStore::open(&g2).unwrap();
+    let got_keys: Vec<EvalKey> = got.keys().collect();
+    let expect: Vec<EvalKey> =
+        keys.iter().copied().filter(|k| survivors.contains(k)).collect();
+    assert_eq!(got_keys, expect, "evicts least-recently-served, preserves append order");
+    verify_store(&got).unwrap();
+
+    // a budget below the pinned keys' floor is an in-band error
+    let err =
+        gc_store(&store, 100, &g2, &recency, &HashSet::from([keys[0]])).unwrap_err();
+    assert!(err.contains("pinned"), "{err}");
+    for f in [&p, &g1, &c1, &g2] {
+        let _ = std::fs::remove_file(f);
+    }
+}
+
+#[test]
+fn cached_sessions_append_the_lru_sidecar_gc_ranks_by() {
+    let p = tmp("lru.store");
+    let side = lru_sidecar_path(&p);
+    let _ = std::fs::remove_file(&p);
+    let _ = std::fs::remove_file(&side);
+    let pairs = sample_pairs(6);
+    let reqs: Vec<EvalRequest> = pairs.iter().map(|(r, _)| r.clone()).collect();
+    let want: Vec<EvalKey> = reqs.iter().map(|r| r.eval_key()).collect();
+    {
+        let (oracle, _mon) = cache_session(CacheSessionMode::WriteThrough, p.clone()).unwrap();
+        let _ = oracle.eval_batch(&reqs);
+        // drop finishes the store and flushes the sidecar
+    }
+    assert_eq!(read_lru_sidecar(&side), want, "session order, oldest to newest");
+    {
+        // a warm session re-serving one key appends it — making it the
+        // most recently served for GC's last-occurrence ranking
+        let (oracle, _mon) = cache_session(CacheSessionMode::WriteThrough, p.clone()).unwrap();
+        let _ = oracle.eval_batch(&reqs[..1]);
+    }
+    let twice = read_lru_sidecar(&side);
+    assert_eq!(twice.len(), want.len() + 1);
+    assert_eq!(twice.last(), Some(&want[0]));
+    let _ = std::fs::remove_file(&p);
+    let _ = std::fs::remove_file(&side);
+}
+
+// ---------------------------------------------------------------------------
+// Worker orphan hygiene: a stale lease terminates the worker
+
+#[test]
+fn orphaned_worker_exits_cleanly_on_a_stale_lease() {
+    // no coordinator ever beats this lease path -> the worker must exit
+    // on its own within ~one lease timeout, NOT hang on stdin forever
+    let lease = tmp("orphan.lease");
+    let _ = std::fs::remove_file(&lease);
+    let mut child = Command::new(exe())
+        .arg("worker")
+        .arg("--lease")
+        .arg(&lease)
+        .args(["--lease-ms", "300"])
+        .stdin(Stdio::piped())
+        .stdout(Stdio::piped())
+        .stderr(Stdio::piped())
+        .spawn()
+        .expect("spawn repro worker");
+    // hold stdin OPEN: an EOF would let the worker exit for the wrong
+    // reason and mask a broken watchdog
+    let _stdin = child.stdin.take();
+    let t0 = Instant::now();
+    let status = loop {
+        if let Some(st) = child.try_wait().expect("try_wait") {
+            break st;
+        }
+        assert!(
+            t0.elapsed() < Duration::from_secs(30),
+            "worker must exit within one lease timeout (plus slack), not hang"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+    };
+    assert!(status.success(), "orphan exit is hygiene, not a fault: {status:?}");
+    let mut stderr = String::new();
+    child.stderr.take().unwrap().read_to_string(&mut stderr).unwrap();
+    assert!(stderr.contains("lease stale"), "names the reason: {stderr}");
+}
+
+// ---------------------------------------------------------------------------
+// CLI end to end: kill -9 mid-run, resume, byte-identical --out
+
+#[test]
+fn serve_cli_kill_minus_nine_then_resume_writes_byte_identical_output() {
+    let journal = tmp("serve_kill.journal");
+    let events = tmp("serve_kill.events.jsonl");
+    let out_resumed = tmp("serve_kill_resumed.json");
+    let out_ref = tmp("serve_kill_ref.json");
+    for f in [&journal, &events, &out_resumed, &out_ref] {
+        let _ = std::fs::remove_file(f);
+    }
+    let base = || {
+        let mut cmd = Command::new(exe());
+        cmd.args(["serve", "--workers", "2", "--tier", "mini", "--seed", "9"])
+            .args(["--deadline-ms", "180000"]);
+        cmd
+    };
+
+    // the uninterrupted reference
+    let reference =
+        base().arg("--out").arg(&out_ref).output().expect("run reference serve");
+    assert!(
+        reference.status.success(),
+        "reference serve: {}",
+        String::from_utf8_lossy(&reference.stderr)
+    );
+
+    // the journaled run, SIGKILLed once at least one shard has landed
+    let mut child = base()
+        .arg("--journal")
+        .arg(&journal)
+        .arg("--events")
+        .arg(&events)
+        .stdout(Stdio::null())
+        .stderr(Stdio::null())
+        .spawn()
+        .expect("spawn journaled serve");
+    let t0 = Instant::now();
+    loop {
+        let landed_enough =
+            std::fs::metadata(&journal).map(|m| m.len() > 4096).unwrap_or(false);
+        if landed_enough || child.try_wait().expect("try_wait").is_some() {
+            break;
+        }
+        assert!(t0.elapsed() < Duration::from_secs(180), "no shard ever landed");
+        std::thread::sleep(Duration::from_millis(10));
+    }
+    let _ = child.kill(); // SIGKILL — no cleanup, no flush, no goodbye
+    let _ = child.wait();
+
+    // the killed run's event log tolerates a torn final line
+    if let Ok(text) = std::fs::read_to_string(&events) {
+        let (_, _torn) = parse_events_jsonl(&text)
+            .unwrap_or_else(|e| panic!("killed event log must replay: {e}"));
+    }
+
+    // resume: must recover, finish, and write --out byte-identical
+    let resumed = base()
+        .arg("--journal")
+        .arg(&journal)
+        .arg("--resume")
+        .arg("--out")
+        .arg(&out_resumed)
+        .output()
+        .expect("run resumed serve");
+    assert!(
+        resumed.status.success(),
+        "resume must exit 0; stderr: {}",
+        String::from_utf8_lossy(&resumed.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&resumed.stdout);
+    assert!(stdout.contains("recovered from journal"), "stats name recovery: {stdout}");
+    assert_eq!(
+        std::fs::read(&out_resumed).unwrap(),
+        std::fs::read(&out_ref).unwrap(),
+        "resumed output is byte-identical to the uninterrupted run"
+    );
+    for f in [&journal, &events, &out_resumed, &out_ref] {
+        let _ = std::fs::remove_file(f);
+    }
+}
+
+#[test]
+fn serve_cli_resume_refuses_a_corrupted_journal_in_band() {
+    let p = tmp("corrupt.journal");
+    let _ = std::fs::remove_file(&p);
+    {
+        let j = RunJournal::create(&p).unwrap();
+        j.bind("serve", "cafe", 4).unwrap();
+        j.record_done().unwrap();
+    }
+    // flip one payload byte inside the committed prefix
+    let mut bytes = std::fs::read(&p).unwrap();
+    let at = (JOURNAL_HEADER_BYTES + 16) as usize; // first payload byte
+    bytes[at] ^= 0x01;
+    std::fs::write(&p, &bytes).unwrap();
+    let output = Command::new(exe())
+        .args(["serve", "--workers", "1", "--tier", "mini", "--resume", "--journal"])
+        .arg(&p)
+        .output()
+        .expect("run repro serve");
+    assert!(!output.status.success(), "corruption must not resume");
+    let stderr = String::from_utf8_lossy(&output.stderr);
+    assert!(stderr.contains("error:"), "in-band, never a panic: {stderr}");
+    let _ = std::fs::remove_file(&p);
+}
+
+#[test]
+fn schedule_cli_resume_recovers_the_pass_and_reprints_identical_results() {
+    let p = tmp("schedule.journal");
+    let _ = std::fs::remove_file(&p);
+    let run = |resume: bool| {
+        let mut cmd = Command::new(exe());
+        cmd.args(["schedule", "--tier", "mini", "--seed", "5", "--journal"]).arg(&p);
+        if resume {
+            cmd.arg("--resume");
+        }
+        let out = cmd.output().expect("run repro schedule");
+        assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+        String::from_utf8_lossy(&out.stdout).to_string()
+    };
+    let first = run(false);
+    let second = run(true);
+    assert!(second.contains("recovered exhausted pass"), "{second}");
+    let strip = |s: &str| {
+        s.lines().filter(|l| !l.starts_with("journal")).collect::<Vec<_>>().join("\n")
+    };
+    assert_eq!(strip(&first), strip(&second), "resume reprints identical results");
+    let _ = std::fs::remove_file(&p);
+}
+
+#[test]
+fn sweep_cli_resume_writes_an_identical_grid_without_rerunning() {
+    let p = tmp("sweep.journal");
+    let o1 = tmp("sweep_first.json");
+    let o2 = tmp("sweep_resumed.json");
+    for f in [&p, &o1, &o2] {
+        let _ = std::fs::remove_file(f);
+    }
+    let run = |resume: bool, out: &PathBuf| {
+        let mut cmd = Command::new(exe());
+        cmd.args(["sweep", "--tier", "mini", "--seed", "5", "--journal"]).arg(&p);
+        if resume {
+            cmd.arg("--resume");
+        }
+        cmd.arg("--out").arg(out);
+        let r = cmd.output().expect("run repro sweep");
+        assert!(r.status.success(), "stderr: {}", String::from_utf8_lossy(&r.stderr));
+        String::from_utf8_lossy(&r.stdout).to_string()
+    };
+    run(false, &o1);
+    let second = run(true, &o2);
+    assert!(second.contains("recovered exhausted pass"), "{second}");
+    assert_eq!(
+        std::fs::read(&o1).unwrap(),
+        std::fs::read(&o2).unwrap(),
+        "resumed grid is byte-identical"
+    );
+    for f in [&p, &o1, &o2] {
+        let _ = std::fs::remove_file(f);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CLI: cache repair / gc, and the journal guard on gc
+
+#[test]
+fn cache_repair_cli_recovers_a_torn_store_and_gc_honors_the_journal_guard() {
+    let pairs = sample_pairs(6);
+    let p = tmp("cli_repair.store");
+    build_store(&p, &pairs);
+    // tear it mid-record: stats must refuse, repair must recover
+    let full = std::fs::read(&p).unwrap();
+    let torn = tmp("cli_repair_torn.store");
+    std::fs::write(&torn, &full[..full.len() * 2 / 3]).unwrap();
+    let stats = Command::new(exe()).args(["cache", "stats"]).arg(&torn).output().unwrap();
+    assert!(!stats.status.success(), "a torn store must not open");
+    let repaired = tmp("cli_repaired.store");
+    let rep = Command::new(exe())
+        .args(["cache", "repair"])
+        .arg(&torn)
+        .arg("--out")
+        .arg(&repaired)
+        .output()
+        .unwrap();
+    assert!(rep.status.success(), "stderr: {}", String::from_utf8_lossy(&rep.stderr));
+    let stats2 = Command::new(exe()).args(["cache", "stats"]).arg(&repaired).output().unwrap();
+    assert!(stats2.status.success(), "repaired store opens and verifies");
+
+    // gc with an ACTIVE journal refuses in-band; done journal proceeds
+    let journal = tmp("cli_gc.journal");
+    let _ = std::fs::remove_file(&journal);
+    let j = RunJournal::create(&journal).unwrap();
+    j.bind("serve", "cafe", 4).unwrap();
+    let gced = tmp("cli_gced.store");
+    let gc_cmd = || {
+        let mut cmd = Command::new(exe());
+        cmd.args(["cache", "gc"])
+            .arg(&p)
+            .args(["--max-bytes", "100000000"])
+            .arg("--out")
+            .arg(&gced)
+            .arg("--journal")
+            .arg(&journal);
+        cmd
+    };
+    let refused = gc_cmd().output().unwrap();
+    assert!(!refused.status.success());
+    let stderr = String::from_utf8_lossy(&refused.stderr);
+    assert!(stderr.contains("active"), "names the refusal: {stderr}");
+    j.record_done().unwrap();
+    drop(j);
+    let allowed = gc_cmd().output().unwrap();
+    assert!(
+        allowed.status.success(),
+        "stderr: {}",
+        String::from_utf8_lossy(&allowed.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&allowed.stdout);
+    assert!(stdout.contains("identity"), "under budget names the identity: {stdout}");
+    for f in [&p, &torn, &repaired, &journal, &gced] {
+        let _ = std::fs::remove_file(f);
+    }
+}
+
+// ---------------------------------------------------------------------------
+// CLI flag scoping: misuse is an in-band error before any work starts
+
+#[test]
+fn journal_flags_are_scope_checked_in_band() {
+    let check = |args: &[&str], needle: &str| {
+        let out = Command::new(exe()).args(args).output().expect("run repro");
+        assert!(!out.status.success(), "{args:?} must fail");
+        let stderr = String::from_utf8_lossy(&out.stderr);
+        assert!(stderr.contains(needle), "{args:?}: expected `{needle}` in: {stderr}");
+    };
+    check(&["run", "--tier", "mini", "--journal", "x.journal"], "only meaningful");
+    check(&["exp", "fig3", "--journal", "x.journal"], "only meaningful");
+    check(&["serve", "--workers", "1", "--resume"], "--resume needs --journal");
+    check(&["sweep", "--resume"], "--resume needs --journal");
+    check(&["serve", "--workers", "1", "--journal"], "needs a file path");
+    check(&["cache", "gc", "s.store", "--max-bytes", "10"], "--out");
+    check(&["cache", "repair", "s.store"], "--out");
+    check(
+        &["schedule", "--tier", "mini", "--journal", "nope.journal", "--resume"],
+        "journal",
+    );
+}
